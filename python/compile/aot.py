@@ -1,0 +1,118 @@
+"""AOT lowering: JAX coding graphs → HLO *text* artifacts for the rust
+runtime (python runs once at `make artifacts`, never on the request path).
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs into ``artifacts/``:
+
+* ``encode_a{α}z{z}_b{B}.hlo.txt``   — UniLRC encode per Table 2 scheme
+* ``gfdec_m{M}_k{K}_b{B}.hlo.txt``   — generic coefficient-fed decode
+* ``xorfold_s{S}_b{B}.hlo.txt``      — XOR-fold repair, one per source count
+* ``manifest.tsv``                   — `kind name file key=val…` index
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--block 65536]``
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model, unilrc
+
+# Table 2 schemes: label → (α, z).
+SCHEMES = {"42": (1, 6), "136": (2, 8), "210": (2, 10)}
+
+# XOR-fold source counts needed per scheme: UniLRC r; ALRC k/l; OLRC
+# k/l+g; ULRC group sizes −1 (see DESIGN.md §3 scheme table).
+XOR_FOLD_SIZES = {
+    "42": [5, 6, 7, 8, 25],
+    "136": [14, 16, 18, 19, 78],
+    "210": [18, 20, 22, 23, 87],
+}
+
+DEFAULT_BLOCK = 65536
+# XOR-fold artifacts use bigger blocks: the op is streaming (no (M,K,B)
+# intermediate), and larger blocks amortize PJRT per-call overhead (§Perf).
+FOLD_BLOCK_FACTOR = 16
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a jitted fn to HLO text via stablehlo → XlaComputation."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def build_artifacts(block):
+    """Yield (kind, name, params, hlo_text) for every artifact."""
+    for label, (alpha, z) in SCHEMES.items():
+        n, k, r = unilrc.params(alpha, z)
+        m = n - k
+
+        enc, args = model.make_encode(alpha, z, block)
+        yield (
+            "encode",
+            f"encode_a{alpha}z{z}_b{block}",
+            {"scheme": label, "alpha": alpha, "z": z, "k": k, "m": m, "b": block},
+            to_hlo_text(enc, args),
+        )
+
+        dec, args = model.make_gf_decode(m, n, block)
+        yield (
+            "gfdec",
+            f"gfdec_m{m}_k{n}_b{block}",
+            {"scheme": label, "m": m, "k": n, "b": block},
+            to_hlo_text(dec, args),
+        )
+
+    fold_block = block * FOLD_BLOCK_FACTOR
+    sizes = sorted({s for v in XOR_FOLD_SIZES.values() for s in v})
+    for s in sizes:
+        fold, args = model.make_xor_fold(s, fold_block)
+        yield (
+            "xorfold",
+            f"xorfold_s{s}_b{fold_block}",
+            {"s": s, "b": fold_block},
+            to_hlo_text(fold, args),
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--block", type=int, default=DEFAULT_BLOCK)
+    ap.add_argument("--only", help="emit artifacts whose name contains this substring")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for kind, name, params, hlo in build_artifacts(args.block):
+        if args.only and args.only not in name:
+            continue
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(hlo)
+        kv = " ".join(f"{k}={v}" for k, v in params.items())
+        manifest.append(f"{kind}\t{name}\t{fname}\t{kv}")
+        print(f"wrote {fname} ({len(hlo)} chars)", file=sys.stderr)
+
+    if args.only:
+        # debug mode: don't clobber the full manifest with a subset
+        print(f"{len(manifest)} artifacts (manifest NOT rewritten: --only)", file=sys.stderr)
+    else:
+        with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+            f.write("\n".join(manifest) + "\n")
+        print(f"{len(manifest)} artifacts → {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

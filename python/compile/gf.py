@@ -1,0 +1,88 @@
+"""Scalar GF(2^8) arithmetic (polynomial 0x11D) in numpy.
+
+Build-time only. Mirrors rust/src/gf/tables.rs — the two implementations are
+cross-checked through the golden vectors in python/tests/test_golden.py and
+the PJRT round-trip integration test on the rust side.
+"""
+
+import numpy as np
+
+POLY = 0x11D
+
+
+def _build_tables():
+    exp = np.zeros(512, dtype=np.uint8)
+    log = np.zeros(256, dtype=np.uint8)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        exp[i + 255] = x
+        log[x] = i
+        x <<= 1
+        if x & 0x100:
+            x ^= POLY
+    return exp, log
+
+
+EXP, LOG = _build_tables()
+
+
+def gf_mul(a, b):
+    """Element-wise GF(2^8) multiply of arrays (or scalars)."""
+    a = np.asarray(a, dtype=np.uint8)
+    b = np.asarray(b, dtype=np.uint8)
+    out = EXP[LOG[a].astype(np.int32) + LOG[b].astype(np.int32)]
+    return np.where((a == 0) | (b == 0), np.uint8(0), out)
+
+
+def gf_pow(a, e):
+    """a**e over GF(2^8) for scalar a."""
+    if e == 0:
+        return 1
+    if a == 0:
+        return 0
+    return int(EXP[(int(LOG[a]) * e) % 255])
+
+
+def gf_inv(a):
+    assert a != 0
+    return int(EXP[255 - int(LOG[a])])
+
+
+def gf_matmul(coeff, data):
+    """(M,K) x (K,B) GF(2^8) matrix product — the numpy oracle."""
+    coeff = np.asarray(coeff, dtype=np.uint8)
+    data = np.asarray(data, dtype=np.uint8)
+    m, k = coeff.shape
+    assert data.shape[0] == k
+    out = np.zeros((m, data.shape[1]), dtype=np.uint8)
+    for j in range(k):
+        out ^= gf_mul(coeff[:, j : j + 1], data[j : j + 1, :])
+    return out
+
+
+def nibble_tables(coeff):
+    """Split-nibble multiply tables for a coefficient matrix.
+
+    Returns (tlo, thi), each (M, K, 16) uint8 with
+    ``tlo[i,j,x] = coeff[i,j]*x`` and ``thi[i,j,x] = coeff[i,j]*(x<<4)``,
+    so ``coeff[i,j]*v = tlo[i,j,v&15] ^ thi[i,j,v>>4]``.
+    """
+    coeff = np.asarray(coeff, dtype=np.uint8)
+    lo = np.arange(16, dtype=np.uint8)
+    hi = (np.arange(16, dtype=np.uint8) << 4).astype(np.uint8)
+    tlo = gf_mul(coeff[..., None], lo[None, None, :])
+    thi = gf_mul(coeff[..., None], hi[None, None, :])
+    return tlo, thi
+
+
+def bitplanes(coeff):
+    """(M,K) coefficients → (M,K,8) plane constants: bp[i,j,b] = c·2^b."""
+    coeff = np.asarray(coeff, dtype=np.uint8)
+    planes = [coeff]
+    for _ in range(7):
+        x = planes[-1]
+        hi = (x >> 7).astype(np.uint8)
+        planes.append((((x.astype(np.uint16) << 1) & 0xFF).astype(np.uint8)
+                       ^ (hi * np.uint8(0x1D))))
+    return np.stack(planes, axis=-1)

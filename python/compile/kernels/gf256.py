@@ -1,0 +1,163 @@
+"""Pallas GF(2^8) coding kernels (L1) — the coding hot-spot of the paper's
+prototype, re-thought for TPU (DESIGN.md §Hardware-Adaptation).
+
+Two kernels:
+
+* :func:`gf_matmul_bitplanes` — coefficient-matrix × data-blocks over
+  GF(2^8) using *bit-plane decomposition*: GF multiplication by a constant
+  is GF(2)-linear, so ``c·x = ⊕_{b=0..7} bit_b(x) · (c·2^b)``. The kernel
+  widens each data bit-plane to a byte mask and ANDs it with the
+  precomputed plane constants — pure element-wise VPU work with **no
+  gather**. (ISA-L's PSHUFB nibble trick is the x86 shape of the same idea;
+  gathers are slow on the TPU VPU *and* the 16-entry-shuffle HLO gather is
+  exactly what old PJRT runtimes disagree on, so the bit-plane form is both
+  the faithful TPU adaptation and the version-stable interchange.)
+* :func:`xor_fold` — XOR-reduce of S source blocks: the *entire* decode
+  computation for UniLRC thanks to XOR locality (§2.3.3).
+
+Plane constants come from :func:`bitplanes_from_coeffs` (in-graph, for
+runtime coefficient matrices — repeated xtime, still gather-free) or from
+``compile.gf.bitplanes`` (numpy, constant-folded into encode artifacts).
+
+Both kernels tile the byte dimension with a BlockSpec grid so each step's
+working set fits VMEM (see :func:`vmem_estimate_bytes`).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated through the interpret path and the
+same HLO runs from rust.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Byte-dimension tile cap and the VMEM budget the tile must respect
+# (DESIGN.md §Hardware-Adaptation: TPU VMEM ≈ 16 MiB).
+B_TILE = 2048
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def _pick_tile(b, m, k):
+    """Largest tile ≤ B_TILE that divides b *and* keeps the per-step
+    working set (plane constants + data tile + mask intermediates) under
+    the VMEM budget — the BlockSpec schedule a real TPU lowering would use."""
+    t = min(b, B_TILE)
+    while t > 1 and vmem_estimate_bytes(m, k, t) > VMEM_BUDGET:
+        t //= 2
+    while b % t:
+        t -= 1
+    return t
+
+
+def _xtime(x):
+    """Multiply by the field generator 2 (one AES-style xtime step):
+    ``(x << 1) ^ (0x1D if x & 0x80 else 0)`` — element-wise, no tables."""
+    hi = (x >> 7).astype(jnp.uint8)  # 0 or 1
+    return ((x << 1) ^ (hi * jnp.uint8(0x1D))).astype(jnp.uint8)
+
+
+def bitplanes_from_coeffs(coeff):
+    """(M,K) coefficient matrix → (M,K,8) plane constants, in-graph.
+
+    ``bp[i,j,b] = coeff[i,j] · 2^b`` over GF(2^8), built by repeated
+    :func:`_xtime` so the decode artifact needs no lookup tables.
+    """
+    coeff = jnp.asarray(coeff, dtype=jnp.uint8)
+    planes = [coeff]
+    for _ in range(7):
+        planes.append(_xtime(planes[-1]))
+    return jnp.stack(planes, axis=-1)
+
+
+def _gf_matmul_kernel(bp_ref, data_ref, out_ref):
+    """One grid step: out[M,Bt] = ⊕_j ⊕_b bit_b(data[j])·bp[·,j,b]."""
+    data = data_ref[...]  # (K, Bt) uint8
+    bp = bp_ref[...]  # (M, K, 8) uint8
+    m = bp.shape[0]
+    acc = jnp.zeros((m, data.shape[1]), dtype=jnp.uint8)
+    for b in range(8):
+        bit = (data >> b) & jnp.uint8(1)  # (K, Bt)
+        mask = (jnp.uint8(0) - bit).astype(jnp.uint8)  # 0x00 / 0xFF
+        contrib = bp[:, :, b][:, :, None] & mask[None, :, :]  # (M, K, Bt)
+        acc = acc ^ jax.lax.reduce(contrib, jnp.uint8(0), jax.lax.bitwise_xor, (1,))
+    out_ref[...] = acc
+
+
+def gf_matmul_bitplanes(bp, data):
+    """(M,K,8) plane constants × (K,B) data → (M,B) over GF(2^8)."""
+    m, k, _ = bp.shape
+    b = data.shape[1]
+    bt = _pick_tile(b, m, k)
+    return pl.pallas_call(
+        _gf_matmul_kernel,
+        grid=(b // bt,),
+        in_specs=[
+            pl.BlockSpec((m, k, 8), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, bt), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, bt), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, b), jnp.uint8),
+        interpret=True,
+    )(bp, data)
+
+
+def gf_matmul(coeff, data):
+    """Convenience: runtime-coefficient GF matmul (planes built in-graph)."""
+    return gf_matmul_bitplanes(bitplanes_from_coeffs(coeff), data)
+
+
+def _xor_fold_kernel(src_ref, out_ref):
+    src = src_ref[...]  # (S, Bt)
+    # explicit XOR chain instead of lax.reduce: S is small and static, and
+    # the unrolled chain fuses into one elementwise loop on the CPU PJRT
+    # runtime where the u8 reduce does not (§Perf).
+    acc = src[0]
+    for j in range(1, src.shape[0]):
+        acc = acc ^ src[j]
+    out_ref[...] = acc[None, :]
+
+
+def _pick_fold_tile(b, s):
+    """Fold working set is just the (S,Bt) tile + output — allow much
+    larger tiles than the matmul (fewer grid steps ⇒ lower per-call
+    overhead on the CPU PJRT runtime, §Perf)."""
+    t = min(b, VMEM_BUDGET // (2 * s))
+    while b % t:
+        t -= 1
+    return t
+
+
+def xor_fold(blocks):
+    """XOR-fold (S,B) → (1,B): the UniLRC repair fast path."""
+    s, b = blocks.shape
+    bt = _pick_fold_tile(b, s)
+    if bt == b:
+        # single-tile case: skip the grid machinery entirely so the HLO is
+        # one flat fused reduce (§Perf: the grid's dynamic-slice plumbing
+        # costs more than the XOR itself on the CPU PJRT runtime).
+        return pl.pallas_call(
+            _xor_fold_kernel,
+            out_shape=jax.ShapeDtypeStruct((1, b), jnp.uint8),
+            interpret=True,
+        )(blocks)
+    return pl.pallas_call(
+        _xor_fold_kernel,
+        grid=(b // bt,),
+        in_specs=[pl.BlockSpec((s, bt), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, bt), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, b), jnp.uint8),
+        interpret=True,
+    )(blocks)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_estimate_bytes(m, k, bt=B_TILE):
+    """Per-grid-step VMEM working set (DESIGN.md §Perf): plane constants +
+    data tile + one (M,K,Bt) mask intermediate + accumulator/output tile."""
+    planes = m * k * 8
+    data = k * bt
+    inter = m * k * bt  # one plane's contrib before its reduce
+    out = 2 * m * bt  # acc + out
+    return planes + data + inter + out

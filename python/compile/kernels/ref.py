@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the Pallas kernels (the L1 correctness contract).
+
+``ref_gf_matmul`` computes the GF(2^8) coefficient-matrix × data-blocks
+product with plain log/exp-table gathers; ``ref_xor_fold`` is the XOR
+reduce. Every Pallas kernel must match these bit-for-bit (pytest +
+hypothesis sweeps in python/tests/).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..gf import EXP, LOG
+
+_JEXP = jnp.asarray(EXP)
+_JLOG = jnp.asarray(LOG)
+
+
+def ref_gf_matmul(coeff, data):
+    """(M,K) × (K,B) over GF(2^8), elementwise log/exp formulation."""
+    coeff = jnp.asarray(coeff, dtype=jnp.uint8)
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    logc = _JLOG[coeff].astype(jnp.int32)  # (M,K)
+    logd = _JLOG[data].astype(jnp.int32)  # (K,B)
+    prod = _JEXP[logc[:, :, None] + logd[None, :, :]]  # (M,K,B)
+    zero = (coeff == 0)[:, :, None] | (data == 0)[None, :, :]
+    prod = jnp.where(zero, jnp.uint8(0), prod)
+    out = jnp.zeros((coeff.shape[0], data.shape[1]), dtype=jnp.uint8)
+    for j in range(coeff.shape[1]):
+        out = out ^ prod[:, j, :]
+    return out
+
+
+def ref_xor_fold(blocks):
+    """XOR-fold (S,B) → (B,)."""
+    blocks = jnp.asarray(blocks, dtype=jnp.uint8)
+    out = jnp.zeros((blocks.shape[1],), dtype=jnp.uint8)
+    for j in range(blocks.shape[0]):
+        out = out ^ blocks[j]
+    return out
+
+
+def np_gf_matmul(coeff, data):
+    """Numpy variant (no jax tracing) for hypothesis-heavy tests."""
+    from .. import gf
+
+    return gf.gf_matmul(np.asarray(coeff), np.asarray(data))

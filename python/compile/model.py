@@ -1,0 +1,62 @@
+"""L2 — the JAX coding graphs the rust runtime executes via PJRT.
+
+Three graph families, all calling the L1 Pallas kernels:
+
+* :func:`make_encode` — per-scheme UniLRC encode with the generator
+  constant-folded into nibble tables: ``(k,B) data → (n−k,B) parities``.
+* :func:`make_gf_decode` — generic decode: ``((M,K) coeffs, (K,B) sources)
+  → (M,B)``; rust inverts the small repair system and feeds coefficients
+  at runtime, so one artifact per scheme decodes any erasure pattern (and
+  encodes any *other* code family, which is how the baselines run through
+  PJRT too).
+* :func:`make_xor_fold` — ``(S,B) sources → (1,B)``: single-failure repair
+  for every XOR-local plan.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gf, unilrc
+from .kernels import gf256
+
+
+def make_encode(alpha, z, block):
+    """UniLRC(α,z) encode graph and its example input shapes."""
+    a = jnp.asarray(unilrc.parity_matrix(alpha, z))
+    k = a.shape[1]
+
+    def encode(data):  # (k, B) uint8 → (n−k, B) uint8
+        # plane constants expanded in-graph from the 2-D generator constant
+        # (3-D u8 constants mis-parse in the 0.5.1 HLO text reader).
+        return (gf256.gf_matmul_bitplanes(gf256.bitplanes_from_coeffs(a), data),)
+
+    spec = jax.ShapeDtypeStruct((k, block), jnp.uint8)
+    return encode, (spec,)
+
+
+def make_gf_decode(m, k, block):
+    """Generic coefficient-fed GF(2^8) matmul graph (decode/encode-any)."""
+
+    def decode(coeff, data):  # (m,k) u8, (k,B) u8 → (m,B) u8
+        return (gf256.gf_matmul(coeff, data),)
+
+    cspec = jax.ShapeDtypeStruct((m, k), jnp.uint8)
+    dspec = jax.ShapeDtypeStruct((k, block), jnp.uint8)
+    return decode, (cspec, dspec)
+
+
+def make_xor_fold(s, block):
+    """XOR-fold graph of S source blocks."""
+
+    def fold(blocks):  # (S, B) u8 → (1, B) u8
+        return (gf256.xor_fold(blocks),)
+
+    spec = jax.ShapeDtypeStruct((s, block), jnp.uint8)
+    return fold, (spec,)
+
+
+def encode_reference(alpha, z, data):
+    """Numpy reference encode used by tests and golden vectors."""
+    a = unilrc.parity_matrix(alpha, z)
+    return gf.gf_matmul(a, np.asarray(data, dtype=np.uint8))

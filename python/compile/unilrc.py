@@ -1,0 +1,47 @@
+"""UniLRC generator-matrix construction (§3.2) in Python.
+
+An independent reimplementation of rust/src/codes/unilrc.rs used to
+constant-fold the encode artifacts; the two are cross-checked via golden
+vectors and the PJRT round-trip test.
+"""
+
+import numpy as np
+
+from . import gf
+
+
+def vandermonde(rows, points, start):
+    """V[i][j] = points[j]**(start+i) over GF(2^8)."""
+    v = np.zeros((rows, len(points)), dtype=np.uint8)
+    for i in range(rows):
+        for j, p in enumerate(points):
+            v[i, j] = gf.gf_pow(p, start + i)
+    return v
+
+
+def distinct_points(count):
+    assert count <= 255
+    return [gf.gf_pow(2, i) for i in range(count)]
+
+
+def parity_matrix(alpha, z):
+    """The (n−k) × k parity submatrix A = [𝒢; 𝓛] of UniLRC(α, z)."""
+    assert alpha >= 1 and z >= 2
+    k = alpha * z * (z - 1)
+    g = alpha * z
+    assert k <= 255
+    pts = distinct_points(k)
+    gmat = vandermonde(g, pts, 1)  # Step 1: global parity rows
+    seg = k // z
+    lmat = np.zeros((z, k), dtype=np.uint8)
+    for i in range(z):  # Step 3: fold α rows per group
+        for row in range(i * alpha, (i + 1) * alpha):
+            lmat[i] ^= gmat[row]
+        lmat[i, i * seg : (i + 1) * seg] ^= 1  # Steps 2+4: couple segment
+    return np.vstack([gmat, lmat])
+
+
+def params(alpha, z):
+    """(n, k, r) for UniLRC(α, z)."""
+    k = alpha * z * (z - 1)
+    return (alpha * z * z + z, k, alpha * z)

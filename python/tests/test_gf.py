@@ -1,0 +1,79 @@
+"""Field-law tests for the numpy GF(2^8) layer (compile/gf.py)."""
+
+import numpy as np
+import pytest
+
+from compile import gf
+
+
+def test_exp_log_roundtrip():
+    for x in range(1, 256):
+        assert gf.EXP[gf.LOG[x]] == x
+
+
+def test_mul_identity_zero():
+    xs = np.arange(256, dtype=np.uint8)
+    assert np.array_equal(gf.gf_mul(xs, 1), xs)
+    assert np.array_equal(gf.gf_mul(xs, 0), np.zeros(256, dtype=np.uint8))
+
+
+def test_mul_matches_schoolbook_exhaustive():
+    def slow(a, b):
+        acc = 0
+        while b:
+            if b & 1:
+                acc ^= a
+            b >>= 1
+            a <<= 1
+            if a & 0x100:
+                a ^= gf.POLY
+        return acc
+
+    a = np.repeat(np.arange(256, dtype=np.uint8), 256)
+    b = np.tile(np.arange(256, dtype=np.uint8), 256)
+    fast = gf.gf_mul(a, b)
+    for i in range(0, 65536, 257):  # diagonal + spread sample
+        assert fast[i] == slow(int(a[i]), int(b[i]))
+    # full check on a dense subsample
+    idx = np.arange(0, 65536, 7)
+    slow_vals = np.array([slow(int(x), int(y)) for x, y in zip(a[idx], b[idx])], dtype=np.uint8)
+    assert np.array_equal(fast[idx], slow_vals)
+
+
+def test_mul_commutative_distributive():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 256, 1000, dtype=np.uint8)
+    b = rng.integers(0, 256, 1000, dtype=np.uint8)
+    c = rng.integers(0, 256, 1000, dtype=np.uint8)
+    assert np.array_equal(gf.gf_mul(a, b), gf.gf_mul(b, a))
+    assert np.array_equal(gf.gf_mul(a, b ^ c), gf.gf_mul(a, b) ^ gf.gf_mul(a, c))
+
+
+def test_inv_and_pow():
+    for a in range(1, 256):
+        assert gf.gf_mul(a, gf.gf_inv(a)) == 1
+        assert gf.gf_pow(a, 255) == 1
+        assert gf.gf_pow(a, 2) == gf.gf_mul(a, a)
+    assert gf.gf_pow(0, 3) == 0
+    assert gf.gf_pow(7, 0) == 1
+    with pytest.raises(AssertionError):
+        gf.gf_inv(0)
+
+
+def test_gf_matmul_identity():
+    rng = np.random.default_rng(2)
+    data = rng.integers(0, 256, (5, 64), dtype=np.uint8)
+    eye = np.eye(5, dtype=np.uint8)
+    assert np.array_equal(gf.gf_matmul(eye, data), data)
+
+
+def test_nibble_tables_reconstruct_multiply():
+    rng = np.random.default_rng(3)
+    coeff = rng.integers(0, 256, (3, 4), dtype=np.uint8)
+    tlo, thi = gf.nibble_tables(coeff)
+    xs = rng.integers(0, 256, 100, dtype=np.uint8)
+    for i in range(3):
+        for j in range(4):
+            expect = gf.gf_mul(np.full(100, coeff[i, j], dtype=np.uint8), xs)
+            got = tlo[i, j][xs & 0xF] ^ thi[i, j][xs >> 4]
+            assert np.array_equal(got, expect)

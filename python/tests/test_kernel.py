@@ -1,0 +1,108 @@
+"""Pallas kernels vs the pure-jnp/numpy oracle — the CORE L1 correctness
+signal. Hypothesis sweeps shapes and contents; fixed cases pin the paper's
+scheme dimensions."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import gf
+from compile.kernels import gf256, ref
+
+
+def _rand(rng, *shape):
+    return rng.integers(0, 256, shape, dtype=np.uint8)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 12),
+    k=st.integers(1, 24),
+    b=st.sampled_from([1, 2, 16, 100, 256, 1000, 2048, 4096]),
+    seed=st.integers(0, 2**31),
+)
+def test_gf_matmul_matches_oracle(m, k, b, seed):
+    rng = np.random.default_rng(seed)
+    coeff = _rand(rng, m, k)
+    data = _rand(rng, k, b)
+    out = np.asarray(gf256.gf_matmul(jnp.asarray(coeff), jnp.asarray(data)))
+    assert np.array_equal(out, gf.gf_matmul(coeff, data))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    s=st.integers(1, 30),
+    b=st.sampled_from([1, 7, 64, 500, 2048, 8192]),
+    seed=st.integers(0, 2**31),
+)
+def test_xor_fold_matches_reduce(s, b, seed):
+    rng = np.random.default_rng(seed)
+    blocks = _rand(rng, s, b)
+    out = np.asarray(gf256.xor_fold(jnp.asarray(blocks)))
+    assert out.shape == (1, b)
+    assert np.array_equal(out[0], np.bitwise_xor.reduce(blocks, axis=0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_bitplanes_from_coeffs_matches_numpy(m, k, seed):
+    rng = np.random.default_rng(seed)
+    coeff = _rand(rng, m, k)
+    bp_j = np.asarray(gf256.bitplanes_from_coeffs(jnp.asarray(coeff)))
+    bp_n = gf.bitplanes(coeff)
+    assert np.array_equal(bp_j, bp_n)
+    # plane b really is c·2^b
+    for b in range(8):
+        expect = gf.gf_mul(coeff, np.full_like(coeff, gf.gf_pow(2, b)))
+        assert np.array_equal(bp_n[:, :, b], expect), b
+
+
+def test_ref_matches_numpy():
+    rng = np.random.default_rng(7)
+    coeff = _rand(rng, 6, 10)
+    data = _rand(rng, 10, 333)
+    assert np.array_equal(np.asarray(ref.ref_gf_matmul(coeff, data)), gf.gf_matmul(coeff, data))
+    blocks = _rand(rng, 9, 128)
+    assert np.array_equal(
+        np.asarray(ref.ref_xor_fold(blocks)), np.bitwise_xor.reduce(blocks, axis=0)
+    )
+
+
+def test_scheme_shapes_exact():
+    """Paper Table 2 dimensions through the kernel (small block)."""
+    rng = np.random.default_rng(11)
+    for m, k in [(12, 30), (24, 112), (30, 180)]:
+        coeff = _rand(rng, m, k)
+        data = _rand(rng, k, 4096)
+        out = np.asarray(gf256.gf_matmul(jnp.asarray(coeff), jnp.asarray(data)))
+        assert np.array_equal(out, gf.gf_matmul(coeff, data)), (m, k)
+
+
+def test_nonuniform_tile_fallback():
+    """Block sizes that don't divide B_TILE exercise _pick_tile."""
+    rng = np.random.default_rng(13)
+    coeff = _rand(rng, 2, 3)
+    for b in [3000, 2049, 4097]:
+        data = _rand(rng, 3, b)
+        out = np.asarray(gf256.gf_matmul(jnp.asarray(coeff), jnp.asarray(data)))
+        assert np.array_equal(out, gf.gf_matmul(coeff, data)), b
+
+
+def test_zero_coefficients_and_data():
+    coeff = np.zeros((3, 4), dtype=np.uint8)
+    data = np.zeros((4, 64), dtype=np.uint8)
+    out = np.asarray(gf256.gf_matmul(jnp.asarray(coeff), jnp.asarray(data)))
+    assert not out.any()
+
+
+def test_vmem_estimate_under_budget():
+    """DESIGN.md §Hardware-Adaptation: the tile picker keeps every scheme's
+    per-step working set inside a 16 MiB VMEM."""
+    for m, k in [(12, 42), (24, 136), (30, 210), (30, 180)]:
+        bt = gf256._pick_tile(65536, m, k)
+        assert gf256.vmem_estimate_bytes(m, k, bt) < gf256.VMEM_BUDGET, (m, k, bt)
+        assert 65536 % bt == 0

@@ -1,0 +1,36 @@
+//! Ablation (§3.3 Discussion): the "one local group, t clusters"
+//! relaxation — code rate vs cross-cluster repair traffic, z = 6.
+//!
+//! t = 1 is the strict UniLRC; larger t trades local parities (higher
+//! rate) for t−1 aggregated cross-cluster blocks per repair.
+
+use unilrc::analysis::metrics::{evaluate, CrossModel};
+use unilrc::bench_util::section;
+use unilrc::codes::unilrc::UniLrc;
+use unilrc::placement::{PlacementStrategy, Topology, UniLrcPlace, UniLrcSpread};
+
+fn main() {
+    section("Ablation — relaxed UniLRC (α=1, z=6): rate vs cross-cluster repair traffic");
+    println!("{:>2} {:>4} {:>4} {:>8} {:>6} {:>6} {:>6}", "t", "n", "lp", "rate", "r̄", "CARC", "ADRC");
+    for t in [1usize, 2, 3, 6] {
+        let code = UniLrc::new_relaxed(1, 6, t);
+        let topo = Topology::new(6, 16);
+        let p = if t == 1 {
+            UniLrcPlace.place(&code, &topo, 0)
+        } else {
+            UniLrcSpread { t }.place(&code, &topo, 0)
+        };
+        let m = evaluate(&code, &p, CrossModel::Aggregated, 0.1);
+        println!(
+            "{:>2} {:>4} {:>4} {:>8.4} {:>6.2} {:>6.2} {:>6.2}",
+            t,
+            code.n(),
+            code.local_parities().len(),
+            code.rate(),
+            m.arc,
+            m.carc,
+            m.adrc
+        );
+    }
+    println!("(t=1: zero cross traffic; each step of t drops local parities for rate)");
+}

@@ -1,0 +1,50 @@
+//! §Perf micro-benchmarks: the GF(2^8) slice kernels (native backend) and
+//! the PJRT fold path — the prototype's coding hot spots.
+
+use unilrc::bench_util::{black_box, section, Bencher};
+use unilrc::codes::spec::{CodeFamily, Scheme};
+use unilrc::gf::slice::{gf_matmul_blocks, mul_slice, xor_fold};
+use unilrc::prng::Prng;
+use unilrc::runtime::{CodingEngine, Manifest, NativeCoder, PjrtCoder};
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut p = Prng::new(3);
+    const MB: usize = 1 << 20;
+
+    section("GF slice kernels (1 MiB blocks)");
+    let srcs: Vec<Vec<u8>> = (0..6).map(|_| p.bytes(MB)).collect();
+    let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+    let mut out = vec![0u8; MB];
+    b.bench_throughput("xor_fold r=6 (UniLRC repair)", 6 * MB, || {
+        xor_fold(black_box(&mut out), black_box(&refs));
+    });
+    b.bench_throughput("mul_slice c=0x53", MB, || {
+        mul_slice(black_box(0x53), black_box(&srcs[0]), black_box(&mut out));
+    });
+
+    section("Full-stripe encode (native), 64 KiB blocks");
+    for scheme in Scheme::paper_schemes() {
+        let code = scheme.build(CodeFamily::UniLrc);
+        let data: Vec<Vec<u8>> = (0..code.k()).map(|_| p.bytes(65536)).collect();
+        let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let rows: Vec<&[u8]> = (0..code.m()).map(|i| code.parity_matrix().row(i)).collect();
+        let mut outs = vec![vec![0u8; 65536]; code.m()];
+        b.bench_throughput(&format!("encode {} (k·B in)", scheme.label()), code.k() * 65536, || {
+            gf_matmul_blocks(black_box(&rows), black_box(&drefs), black_box(&mut outs));
+        });
+    }
+
+    if Manifest::load(Manifest::default_dir()).is_ok() {
+        section("PJRT backend vs native (xor fold r=6, 1 MiB)");
+        let pjrt = PjrtCoder::new(None).unwrap();
+        b.bench_throughput("pjrt fold", 6 * MB, || {
+            black_box(pjrt.fold(black_box(&refs)).unwrap());
+        });
+        b.bench_throughput("native fold", 6 * MB, || {
+            black_box(NativeCoder.fold(black_box(&refs)).unwrap());
+        });
+    } else {
+        println!("artifacts/ missing — run `make artifacts` for the PJRT section");
+    }
+}

@@ -1,0 +1,15 @@
+//! Experiment 1 / Fig 10(a): normal-read throughput across k-of-n schemes.
+
+use unilrc::bench_util::section;
+use unilrc::codes::spec::Scheme;
+use unilrc::experiments::{exp1_normal_read, ExpConfig};
+
+fn main() {
+    for scheme in Scheme::paper_schemes() {
+        let cfg = ExpConfig { scheme, ..Default::default() };
+        section(&format!("Experiment 1 — normal read throughput [{}]", scheme.label()));
+        for r in exp1_normal_read(&cfg).unwrap() {
+            println!("  {:<8} {:>12.2} {}", r.family.name(), r.value, r.unit);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Experiment 2 / Fig 10(b): degraded-read latency across k-of-n schemes.
+
+use unilrc::bench_util::section;
+use unilrc::codes::spec::Scheme;
+use unilrc::experiments::{exp2_degraded_read, ExpConfig};
+
+fn main() {
+    for scheme in Scheme::paper_schemes() {
+        let cfg = ExpConfig { scheme, ..Default::default() };
+        section(&format!("Experiment 2 — degraded read latency [{}]", scheme.label()));
+        for r in exp2_degraded_read(&cfg).unwrap() {
+            println!("  {:<8} {:>12.3} {}", r.family.name(), r.value, r.unit);
+        }
+    }
+}

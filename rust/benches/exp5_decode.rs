@@ -1,0 +1,16 @@
+//! Experiment 5 / Fig 11(b): decoding (coding-library) throughput across
+//! k-of-n schemes — XOR locality vs wide/MUL repairs in pure compute.
+
+use unilrc::bench_util::section;
+use unilrc::codes::spec::Scheme;
+use unilrc::experiments::{exp5_decode, ExpConfig};
+
+fn main() {
+    for scheme in Scheme::paper_schemes() {
+        let cfg = ExpConfig { scheme, ..Default::default() };
+        section(&format!("Experiment 5 — decode throughput [{}]", scheme.label()));
+        for r in exp5_decode(&cfg).unwrap() {
+            println!("  {:<8} {:>12.2} {}", r.family.name(), r.value, r.unit);
+        }
+    }
+}

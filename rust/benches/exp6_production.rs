@@ -1,0 +1,24 @@
+//! Experiment 6 / Fig 12: production object-store workload — normal and
+//! degraded read latency CDFs under the 180-of-210 scheme.
+
+use unilrc::bench_util::section;
+use unilrc::codes::spec::Scheme;
+use unilrc::experiments::{exp6_production, ExpConfig};
+
+fn main() {
+    let fast = std::env::var("UNILRC_BENCH_FAST").as_deref() == Ok("1");
+    let (stripes, objects, requests) = if fast { (2, 8, 40) } else { (4, 40, 400) };
+    let cfg = ExpConfig { scheme: Scheme::S210, stripes, ..Default::default() };
+    section("Experiment 6 — production workload [180-of-210]");
+    let res = exp6_production(&cfg, objects, requests).unwrap();
+    println!("{:<8} {:>14} {:>14}", "code", "normal (ms)", "degraded (ms)");
+    for r in &res {
+        println!("{:<8} {:>14.3} {:>14.3}", r.family.name(), r.normal_mean_ms, r.degraded_mean_ms);
+    }
+    for r in &res {
+        println!("\nCDF degraded read, {} (ms, fraction):", r.family.name());
+        for (lat, frac) in &r.degraded_cdf {
+            println!("  {lat:>10.3}  {frac:>5.2}");
+        }
+    }
+}

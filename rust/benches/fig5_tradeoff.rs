@@ -1,0 +1,19 @@
+//! Figure 5: UniLRC design-space sweep — cluster count z, scale
+//! coefficient α vs code rate and stripe width, with the §3.3 industry
+//! feasibility window marked.
+
+use unilrc::analysis::tradeoff::{sweep, TARGET_RATE, WIDTH_MAX, WIDTH_MIN};
+use unilrc::bench_util::section;
+
+fn main() {
+    section("Figure 5 — code-rate / stripe-width trade-off");
+    println!("feasible: rate ≥ {TARGET_RATE}, n ∈ [{WIDTH_MIN},{WIDTH_MAX}]");
+    println!("{:>2} {:>3} {:>5} {:>5} {:>4} {:>8} {:>9}", "α", "z", "n", "k", "r", "rate", "feasible");
+    for p in sweep(20, &[1, 2, 3]) {
+        println!(
+            "{:>2} {:>3} {:>5} {:>5} {:>4} {:>8.4} {:>9}",
+            p.alpha, p.z, p.n, p.k, p.r, p.rate,
+            if p.feasible() { "yes" } else { "-" }
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! Figure 8: ADRC / CDRC / ARC / CARC / LBNR for all four families across
+//! the three Table 2 schemes (both cross-traffic models).
+
+use unilrc::analysis::metrics::{evaluate, CrossModel};
+use unilrc::bench_util::section;
+use unilrc::codes::spec::{CodeFamily, Scheme};
+use unilrc::experiments::strategy_and_topo;
+
+fn main() {
+    for model in [CrossModel::Raw, CrossModel::Aggregated] {
+        section(&format!("Figure 8 — recovery/read metrics ({model:?} cross model)"));
+        for scheme in Scheme::paper_schemes() {
+            println!("--- {} ---", scheme.label());
+            println!(
+                "{:<40} {:>7} {:>7} {:>7} {:>7} {:>6} {:>7}",
+                "code", "ADRC", "CDRC", "ARC", "CARC", "LBNR", "maxmin"
+            );
+            for fam in CodeFamily::paper_baselines() {
+                let code = scheme.build(fam);
+                let (strategy, topo) = strategy_and_topo(fam, &code);
+                let p = strategy.place(&code, &topo, 0);
+                let m = evaluate(&code, &p, model, 0.1);
+                println!(
+                    "{:<40} {:>7.2} {:>7.2} {:>7.2} {:>7.2} {:>6.2} {:>7.2}",
+                    m.code_name, m.adrc, m.cdrc, m.arc, m.carc, m.lbnr, m.imbalance
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! The performance metrics of Table 3 — ADRC, CDRC, ARC, CARC, LBNR —
+//! plus the Fig 3(b) decode-op accounting, computed from a (code,
+//! placement) pair.
+//!
+//! `cost(b)` is the number of blocks read to repair block `b` (the repair
+//! plan's source count); `cost^c(b)` is the cross-cluster traffic in blocks.
+//! Cross traffic supports two models (DESIGN.md §4):
+//!
+//! * [`CrossModel::Raw`] — every remote source block crosses a gateway.
+//! * [`CrossModel::Aggregated`] — ECWide-style gateway aggregation: a
+//!   source cluster pre-combines its contribution, so it ships one block
+//!   regardless of how many sources it holds (valid for any linear plan).
+
+use crate::codes::Code;
+use crate::placement::Placement;
+
+/// Cross-cluster traffic accounting model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrossModel {
+    Raw,
+    Aggregated,
+}
+
+/// Cross-cluster blocks moved to repair `block` under `model`.
+pub fn cross_cost(code: &Code, place: &Placement, block: usize, model: CrossModel) -> usize {
+    let plan = code.repair_plan(block);
+    let home = place.cluster_of[block];
+    let mut per_cluster = std::collections::BTreeMap::new();
+    for &s in &plan.sources {
+        let c = place.cluster_of[s];
+        if c != home {
+            *per_cluster.entry(c).or_insert(0usize) += 1;
+        }
+    }
+    match model {
+        CrossModel::Raw => per_cluster.values().sum(),
+        CrossModel::Aggregated => per_cluster.len(),
+    }
+}
+
+/// Inner-cluster blocks read to repair `block`.
+pub fn inner_cost(code: &Code, place: &Placement, block: usize) -> usize {
+    let plan = code.repair_plan(block);
+    let home = place.cluster_of[block];
+    plan.sources.iter().filter(|&&s| place.cluster_of[s] == home).count()
+}
+
+/// All Table 3 metrics for one (code, placement) pair.
+#[derive(Debug, Clone)]
+pub struct MetricSet {
+    pub code_name: String,
+    /// Average degraded read cost: mean `cost(b)` over data blocks.
+    pub adrc: f64,
+    /// Cross-cluster ADRC.
+    pub cdrc: f64,
+    /// Average recovery cost: mean `cost(b)` over all blocks (= r̄).
+    pub arc: f64,
+    /// Cross-cluster ARC.
+    pub carc: f64,
+    /// Load-balance ratio of normal read: max/avg data blocks per
+    /// data-holding cluster (1.0 = perfectly balanced).
+    pub lbnr: f64,
+    /// max/min imbalance across data-holding clusters (the "7×" of Fig 2(b)).
+    pub imbalance: f64,
+    /// Fig 3(b): average XOR slice-ops per single-block decode.
+    pub avg_xor_ops: f64,
+    /// Fig 3(b): average GF-MUL slice-ops per single-block decode.
+    pub avg_mul_ops: f64,
+    /// Average recovery traffic per block in the MTTDL model's units:
+    /// `C = C1 + δ·C2` (cross blocks + δ·inner blocks), aggregated model.
+    pub mttdl_c: f64,
+}
+
+/// Compute every metric for a code under a placement.
+pub fn evaluate(code: &Code, place: &Placement, model: CrossModel, delta: f64) -> MetricSet {
+    let n = code.n();
+    let k = code.k();
+
+    let cost = |b: usize| code.repair_plan(b).sources.len();
+    let adrc = (0..k).map(cost).sum::<usize>() as f64 / k as f64;
+    let arc = (0..n).map(cost).sum::<usize>() as f64 / n as f64;
+    let cdrc =
+        (0..k).map(|b| cross_cost(code, place, b, model)).sum::<usize>() as f64 / k as f64;
+    let carc =
+        (0..n).map(|b| cross_cost(code, place, b, model)).sum::<usize>() as f64 / n as f64;
+
+    // LBNR over clusters that hold ≥1 data block.
+    let clusters = place.cluster_of.iter().copied().max().unwrap_or(0) + 1;
+    let hist = place.data_per_cluster(code, clusters);
+    let nonzero: Vec<usize> = hist.iter().copied().filter(|&h| h > 0).collect();
+    let max = *nonzero.iter().max().unwrap() as f64;
+    let min = *nonzero.iter().min().unwrap() as f64;
+    let avg = nonzero.iter().sum::<usize>() as f64 / nonzero.len() as f64;
+
+    let avg_xor_ops =
+        (0..n).map(|b| code.repair_plan(b).xor_ops()).sum::<usize>() as f64 / n as f64;
+    let avg_mul_ops =
+        (0..n).map(|b| code.repair_plan(b).mul_ops()).sum::<usize>() as f64 / n as f64;
+
+    let mttdl_c = (0..n)
+        .map(|b| {
+            cross_cost(code, place, b, CrossModel::Aggregated) as f64
+                + delta * inner_cost(code, place, b) as f64
+        })
+        .sum::<f64>()
+        / n as f64;
+
+    MetricSet {
+        code_name: code.name().to_string(),
+        adrc,
+        cdrc,
+        arc,
+        carc,
+        lbnr: max / avg,
+        imbalance: max / min,
+        avg_xor_ops,
+        avg_mul_ops,
+        mttdl_c,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::spec::{CodeFamily, Scheme};
+    use crate::placement::{EcWide, PlacementStrategy, Topology, UniLrcPlace};
+
+    fn metrics_for(fam: CodeFamily) -> MetricSet {
+        let code = Scheme::S42.build(fam);
+        if fam == CodeFamily::UniLrc {
+            let topo = Topology::new(6, 8);
+            let p = UniLrcPlace.place(&code, &topo, 0);
+            evaluate(&code, &p, CrossModel::Raw, 0.1)
+        } else {
+            let need = EcWide::clusters_needed(&code);
+            let topo = Topology::new(need, 32);
+            let p = EcWide.place(&code, &topo, 0);
+            evaluate(&code, &p, CrossModel::Raw, 0.1)
+        }
+    }
+
+    #[test]
+    fn unilrc_hits_paper_numbers() {
+        let m = metrics_for(CodeFamily::UniLrc);
+        assert!((m.adrc - 6.0).abs() < 1e-9);
+        assert!((m.arc - 6.0).abs() < 1e-9);
+        assert_eq!(m.cdrc, 0.0, "Property 2: zero cross-cluster traffic");
+        assert_eq!(m.carc, 0.0);
+        assert!((m.lbnr - 1.0).abs() < 1e-9, "Property 1: perfect balance");
+        assert_eq!(m.avg_mul_ops, 0.0, "XOR locality: no MULs ever");
+        // MTTDL C = 0 + 0.1·6 = 0.6 (paper §5 example)
+        assert!((m.mttdl_c - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alrc_matches_paper_figures() {
+        let m = metrics_for(CodeFamily::Alrc);
+        // Fig 1(a): ADRC = 5 (all data repair from 5), ARC = 8.57
+        assert!((m.adrc - 5.0).abs() < 1e-9);
+        assert!((m.arc - 8.5714).abs() < 1e-3);
+        // ECWide keeps data repair in-cluster ⇒ CDRC = 0
+        assert_eq!(m.cdrc, 0.0);
+        // but global repair crosses: CARC > 0
+        assert!(m.carc > 0.0);
+        // data uniformly 5 per cluster ⇒ LBNR = 1
+        assert!((m.lbnr - 1.0).abs() < 1e-9);
+        // globals decode with MULs
+        assert!(m.avg_mul_ops > 0.0);
+    }
+
+    #[test]
+    fn olrc_is_worst_on_locality() {
+        let uni = metrics_for(CodeFamily::UniLrc);
+        let olrc = metrics_for(CodeFamily::Olrc);
+        assert!((olrc.adrc - 25.0).abs() < 1e-9, "uniform r̄ = 25");
+        assert!(olrc.adrc > uni.adrc);
+        assert!(olrc.carc > uni.carc);
+        assert!(olrc.cdrc > 0.0, "large groups must cross clusters");
+    }
+
+    #[test]
+    fn ulrc_between_uni_and_olrc() {
+        let uni = metrics_for(CodeFamily::UniLrc);
+        let ulrc = metrics_for(CodeFamily::Ulrc);
+        let olrc = metrics_for(CodeFamily::Olrc);
+        assert!((ulrc.arc - 7.4286).abs() < 1e-3);
+        assert!(uni.arc < ulrc.arc && ulrc.arc < olrc.arc);
+        assert!(ulrc.carc > 0.0, "split groups cross clusters");
+        assert!(ulrc.lbnr > 1.0, "Fig 2(b): ECWide imbalances ULRC reads");
+    }
+
+    #[test]
+    fn aggregated_model_never_exceeds_raw() {
+        for fam in CodeFamily::paper_baselines() {
+            let code = Scheme::S42.build(fam);
+            let need = EcWide::clusters_needed(&code).max(6);
+            let topo = Topology::new(need, 32);
+            let p = EcWide.place(&code, &topo, 0);
+            for b in 0..code.n() {
+                let raw = cross_cost(&code, &p, b, CrossModel::Raw);
+                let agg = cross_cost(&code, &p, b, CrossModel::Aggregated);
+                assert!(agg <= raw, "{fam:?} block {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn table1_qualitative_ranking() {
+        // Table 1: UniLRC best on recovery/topology/XOR locality
+        let uni = metrics_for(CodeFamily::UniLrc);
+        for fam in [CodeFamily::Alrc, CodeFamily::Olrc, CodeFamily::Ulrc] {
+            let m = metrics_for(fam);
+            assert!(uni.arc <= m.arc + 1e-9, "{fam:?} recovery locality");
+            assert!(uni.carc <= m.carc + 1e-9, "{fam:?} topology locality");
+            assert!(uni.avg_mul_ops <= m.avg_mul_ops + 1e-9, "{fam:?} XOR locality");
+        }
+    }
+}

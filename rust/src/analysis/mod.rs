@@ -1,0 +1,9 @@
+//! Theoretical analysis suite (§5): the six metrics of Table 3, the MTTDL
+//! Markov model of Fig 9 / Table 4, and the Fig 5 design-space trade-off.
+
+pub mod markov;
+pub mod metrics;
+pub mod tradeoff;
+
+pub use markov::{MttdlParams, mttdl_years};
+pub use metrics::{CrossModel, MetricSet, evaluate};

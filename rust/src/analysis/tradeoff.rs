@@ -1,0 +1,109 @@
+//! Fig 5: the UniLRC design space — cluster count `z`, scale coefficient
+//! `α`, code rate `k/n`, stripe width `n` — and the industry feasibility
+//! window (rate ≥ 0.85, width 25–504).
+
+/// One design point of Fig 5.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DesignPoint {
+    pub alpha: usize,
+    pub z: usize,
+    pub n: usize,
+    pub k: usize,
+    pub r: usize,
+    pub rate: f64,
+}
+
+/// Industry targets quoted in §3.3.
+pub const TARGET_RATE: f64 = 0.85;
+pub const WIDTH_MIN: usize = 25;
+pub const WIDTH_MAX: usize = 504;
+
+impl DesignPoint {
+    pub fn new(alpha: usize, z: usize) -> DesignPoint {
+        let n = alpha * z * z + z;
+        let k = alpha * z * z - alpha * z;
+        DesignPoint { alpha, z, n, k, r: alpha * z, rate: k as f64 / n as f64 }
+    }
+
+    /// Theorem 3.1 closed form (must equal `rate`).
+    pub fn rate_closed_form(&self) -> f64 {
+        1.0 - (self.alpha as f64 + 1.0) / (self.alpha as f64 * self.z as f64 + 1.0)
+    }
+
+    /// Inside the practical window of §3.3?
+    pub fn feasible(&self) -> bool {
+        self.rate >= TARGET_RATE && (WIDTH_MIN..=WIDTH_MAX).contains(&self.n)
+    }
+}
+
+/// Enumerate the Fig 5 sweep: `z ≤ z_max`, `α ∈ alphas`.
+pub fn sweep(z_max: usize, alphas: &[usize]) -> Vec<DesignPoint> {
+    let mut pts = Vec::new();
+    for &alpha in alphas {
+        for z in 2..=z_max {
+            pts.push(DesignPoint::new(alpha, z));
+        }
+    }
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_matches_direct() {
+        for p in sweep(20, &[1, 2, 3]) {
+            assert!(
+                (p.rate - p.rate_closed_form()).abs() < 1e-12,
+                "α={} z={}",
+                p.alpha,
+                p.z
+            );
+        }
+    }
+
+    #[test]
+    fn paper_example_z10_alpha2() {
+        // §3.3: UniLRC(210, 180, 20) at z=10, α=2 achieves 85.71%
+        let p = DesignPoint::new(2, 10);
+        assert_eq!((p.n, p.k, p.r), (210, 180, 20));
+        assert!((p.rate - 0.8571).abs() < 1e-4);
+        assert!(p.feasible());
+    }
+
+    #[test]
+    fn rate_monotone_in_z_and_alpha() {
+        for alpha in [1usize, 2, 3] {
+            for z in 3..=19 {
+                assert!(DesignPoint::new(alpha, z + 1).rate > DesignPoint::new(alpha, z).rate);
+                assert!(DesignPoint::new(alpha + 1, z).rate > DesignPoint::new(alpha, z).rate);
+            }
+        }
+    }
+
+    #[test]
+    fn feasibility_kicks_in_near_z10() {
+        // §3.3: "UniLRC easily achieves the target setting when z ≥ 10"
+        assert!(!DesignPoint::new(2, 8).feasible()); // rate 0.8235 < 0.85
+        assert!(DesignPoint::new(2, 10).feasible());
+        assert!(DesignPoint::new(3, 9).feasible());
+        // small clusters can't reach 0.85 with α ≤ 3 (Discussion §3.3)
+        for alpha in [1, 2, 3] {
+            for z in 2..=7 {
+                let p = DesignPoint::new(alpha, z);
+                assert!(
+                    !(p.feasible() && p.rate >= 0.85) || p.n > 504 || z > 7,
+                    "α={alpha} z={z} unexpectedly feasible"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rate_approaches_1_minus_1_over_z() {
+        // §3.3: large r ⇒ rate → 1 − 1/z
+        let p = DesignPoint::new(50, 5);
+        assert!((p.rate - (1.0 - 0.2)).abs() < 0.01);
+    }
+}

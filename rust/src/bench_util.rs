@@ -1,0 +1,182 @@
+//! Minimal benchmarking harness.
+//!
+//! `criterion` is unavailable in this offline build, so `rust/benches/*` use
+//! this instead: warmup, timed iterations, and median/mean/σ reporting with
+//! derived throughput. Output is line-oriented so EXPERIMENTS.md tables can
+//! be pasted straight from `cargo bench` logs.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Sample {
+    /// Throughput given bytes processed per iteration.
+    pub fn gib_per_s(&self, bytes_per_iter: usize) -> f64 {
+        bytes_per_iter as f64 / self.median.as_secs_f64() / (1u64 << 30) as f64
+    }
+
+    pub fn mib_per_s(&self, bytes_per_iter: usize) -> f64 {
+        bytes_per_iter as f64 / self.median.as_secs_f64() / (1u64 << 20) as f64
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(150),
+            budget: Duration::from_millis(800),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_ms: u64, budget_ms: u64) -> Self {
+        Bencher {
+            warmup: Duration::from_millis(warmup_ms),
+            budget: Duration::from_millis(budget_ms),
+            ..Default::default()
+        }
+    }
+
+    /// Honor `UNILRC_BENCH_FAST=1` for CI-style quick runs.
+    pub fn from_env() -> Self {
+        if std::env::var("UNILRC_BENCH_FAST").as_deref() == Ok("1") {
+            Bencher::new(30, 150)
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Run `f` repeatedly; `f` must do one unit of work per call.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> Sample {
+        // Warmup and calibration.
+        let w0 = Instant::now();
+        let mut calib_iters = 0usize;
+        while w0.elapsed() < self.warmup || calib_iters < 2 {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = w0.elapsed() / calib_iters.max(1) as u32;
+        let target = (self.budget.as_secs_f64() / per_iter.as_secs_f64().max(1e-9)) as usize;
+        let iters = target.clamp(self.min_iters, self.max_iters);
+
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            times.push(t.elapsed());
+        }
+        times.sort_unstable();
+        let median = times[times.len() / 2];
+        let total: Duration = times.iter().sum();
+        let mean = total / iters as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = times
+            .iter()
+            .map(|t| {
+                let d = t.as_secs_f64() - mean_s;
+                d * d
+            })
+            .sum::<f64>()
+            / iters as f64;
+        Sample {
+            name: name.to_string(),
+            iters,
+            mean,
+            median,
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: times[0],
+            max: *times.last().unwrap(),
+        }
+    }
+
+    /// Run and immediately report with byte-throughput.
+    pub fn bench_throughput<F: FnMut()>(&self, name: &str, bytes: usize, f: F) -> Sample {
+        let s = self.bench(name, f);
+        println!(
+            "{:<44} {:>10.3} ms/iter   {:>9.2} MiB/s   (n={}, σ={:.3} ms)",
+            s.name,
+            s.median.as_secs_f64() * 1e3,
+            s.mib_per_s(bytes),
+            s.iters,
+            s.stddev.as_secs_f64() * 1e3,
+        );
+        s
+    }
+
+    /// Run and report latency only.
+    pub fn bench_latency<F: FnMut()>(&self, name: &str, f: F) -> Sample {
+        let s = self.bench(name, f);
+        println!(
+            "{:<44} {:>10.3} ms/iter   (n={}, σ={:.3} ms)",
+            s.name,
+            s.median.as_secs_f64() * 1e3,
+            s.iters,
+            s.stddev.as_secs_f64() * 1e3,
+        );
+        s
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher::new(5, 20);
+        let mut acc = 0u64;
+        let s = b.bench("noop-ish", || {
+            acc = acc.wrapping_add(black_box(1));
+        });
+        assert!(s.iters >= 5);
+        assert!(s.median <= s.max);
+        assert!(s.min <= s.median);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Sample {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_secs(1),
+            median: Duration::from_secs(1),
+            stddev: Duration::ZERO,
+            min: Duration::from_secs(1),
+            max: Duration::from_secs(1),
+        };
+        assert!((s.gib_per_s(1 << 30) - 1.0).abs() < 1e-9);
+        assert!((s.mib_per_s(1 << 20) - 1.0).abs() < 1e-9);
+    }
+}

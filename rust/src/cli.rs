@@ -1,0 +1,393 @@
+//! Command-line interface (hand-rolled: `clap` is unavailable offline).
+//!
+//! ```text
+//! unilrc layout  [--scheme 42|136|210]           Fig 1-style layouts
+//! unilrc analyze [--fig5|--fig8|--fig3b|--table2|--table4|--all]
+//! unilrc experiment <1|2|3|4|5|6> [options]      §6 system experiments
+//! unilrc golden  [--out FILE]                    cross-language vectors
+//! unilrc help
+//! ```
+
+use crate::analysis::markov::{mttdl_years, MttdlParams};
+use crate::analysis::metrics::{evaluate, CrossModel};
+use crate::analysis::tradeoff;
+use crate::codes::layout;
+use crate::codes::spec::{CodeFamily, Scheme};
+use crate::experiments::{self, ExpConfig};
+use std::collections::HashMap;
+
+/// Run the CLI; returns the process exit code.
+pub fn run() -> i32 {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn dispatch(args: &[String]) -> anyhow::Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[1..]);
+    match cmd {
+        "layout" => cmd_layout(&flags),
+        "analyze" => cmd_analyze(&flags),
+        "experiment" => cmd_experiment(args.get(1).map(|s| s.as_str()), &flags),
+        "golden" => cmd_golden(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?} (try `unilrc help`)"),
+    }
+}
+
+const HELP: &str = "\
+unilrc — Wide LRCs with Unified Locality (paper reproduction)
+
+USAGE:
+  unilrc layout  [--scheme 42|136|210]
+  unilrc analyze [--fig3b] [--fig5] [--fig8] [--table2] [--table4] [--all]
+  unilrc experiment <1..6> [--config FILE] [--scheme S] [--block-kb N]
+                    [--stripes N] [--cross-gbps X] [--backend native|pjrt] [--raw]
+  unilrc golden  [--out FILE]
+  unilrc help
+
+Experiments (paper §6): 1 normal read · 2 degraded read · 3 recovery
+(single-block + full-node) · 4 bandwidth sweep · 5 decode throughput ·
+6 production workload.
+";
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(),
+            };
+            m.insert(key.to_string(), val);
+        }
+    }
+    m
+}
+
+fn scheme_of(flags: &HashMap<String, String>) -> anyhow::Result<Scheme> {
+    match flags.get("scheme") {
+        None => Ok(Scheme::S42),
+        Some(s) => Scheme::parse(s).ok_or_else(|| anyhow::anyhow!("bad scheme {s:?}")),
+    }
+}
+
+fn exp_config(flags: &HashMap<String, String>) -> anyhow::Result<ExpConfig> {
+    // --config FILE loads a TOML-subset base; explicit flags override it.
+    let mut cfg = match flags.get("config") {
+        Some(path) => {
+            let file = crate::config::Config::load(path)?;
+            crate::config::experiment_config(&file)?
+        }
+        None => ExpConfig::default(),
+    };
+    if flags.contains_key("scheme") {
+        cfg.scheme = scheme_of(flags)?;
+    }
+    if let Some(kb) = flags.get("block-kb") {
+        cfg.block_size = kb.parse::<usize>()? * 1024;
+    }
+    if let Some(s) = flags.get("stripes") {
+        cfg.stripes = s.parse()?;
+    }
+    if let Some(g) = flags.get("cross-gbps") {
+        cfg.cross_gbps = g.parse()?;
+    }
+    if flags.contains_key("raw") {
+        cfg.aggregated = false;
+    }
+    if let Some(s) = flags.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+    if flags.get("backend").map(|s| s.as_str()) == Some("pjrt") {
+        cfg = cfg.with_pjrt()?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_layout(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let scheme = scheme_of(flags)?;
+    println!("=== Figure 1 — wide LRC layouts, {} ===\n", scheme.label());
+    for fam in CodeFamily::paper_baselines() {
+        println!("{}", layout::render(&scheme.build(fam)));
+    }
+    Ok(())
+}
+
+fn cmd_analyze(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let all = flags.contains_key("all") || flags.is_empty();
+    if all || flags.contains_key("table2") {
+        table2();
+    }
+    if all || flags.contains_key("fig5") {
+        fig5();
+    }
+    if all || flags.contains_key("fig8") {
+        fig8();
+    }
+    if all || flags.contains_key("fig3b") {
+        fig3b();
+    }
+    if all || flags.contains_key("table4") {
+        table4();
+    }
+    Ok(())
+}
+
+/// (code, placement) metric sets for a scheme, ECWide for baselines.
+fn metric_rows(scheme: Scheme) -> Vec<(CodeFamily, crate::analysis::metrics::MetricSet)> {
+    CodeFamily::paper_baselines()
+        .iter()
+        .map(|&fam| {
+            let code = scheme.build(fam);
+            let (strategy, topo) = experiments::strategy_and_topo(fam, &code);
+            let p = strategy.place(&code, &topo, 0);
+            (fam, evaluate(&code, &p, CrossModel::Raw, 0.1))
+        })
+        .collect()
+}
+
+fn table2() {
+    println!("=== Table 2 — code parameters ===");
+    println!("{:<12} {:>4} {:>4} {:>3} {:>7}  UniLRC", "scheme", "n", "k", "f", "rate");
+    for s in Scheme::paper_schemes() {
+        println!(
+            "{:<12} {:>4} {:>4} {:>3} {:>7.4}  α={}, z={}",
+            s.label(),
+            s.n,
+            s.k,
+            s.f,
+            s.rate(),
+            s.alpha,
+            s.z
+        );
+    }
+    println!();
+}
+
+fn fig5() {
+    println!(
+        "=== Figure 5 — z/α vs code rate & stripe width (feasible: rate ≥ 0.85, n ∈ [25,504]) ==="
+    );
+    println!("{:>3} {:>3} {:>5} {:>5} {:>4} {:>8} {:>9}", "α", "z", "n", "k", "r", "rate", "feasible");
+    for p in tradeoff::sweep(20, &[1, 2, 3]) {
+        println!(
+            "{:>3} {:>3} {:>5} {:>5} {:>4} {:>8.4} {:>9}",
+            p.alpha,
+            p.z,
+            p.n,
+            p.k,
+            p.r,
+            p.rate,
+            if p.feasible() { "yes" } else { "-" }
+        );
+    }
+    println!();
+}
+
+fn fig8() {
+    println!("=== Figure 8 — ADRC / CDRC / ARC / CARC / LBNR (raw cross model) ===");
+    for scheme in Scheme::paper_schemes() {
+        println!("--- {} ---", scheme.label());
+        println!(
+            "{:<38} {:>7} {:>7} {:>7} {:>7} {:>6}",
+            "code", "ADRC", "CDRC", "ARC", "CARC", "LBNR"
+        );
+        for (_, m) in metric_rows(scheme) {
+            println!(
+                "{:<38} {:>7.2} {:>7.2} {:>7.2} {:>7.2} {:>6.2}",
+                m.code_name, m.adrc, m.cdrc, m.arc, m.carc, m.lbnr
+            );
+        }
+    }
+    println!();
+}
+
+fn fig3b() {
+    println!("=== Figure 3(b) — avg XOR / MUL slice-ops per single-block decode ===");
+    for scheme in Scheme::paper_schemes() {
+        println!("--- {} ---", scheme.label());
+        println!("{:<38} {:>9} {:>9}", "code", "XOR ops", "MUL ops");
+        for (_, m) in metric_rows(scheme) {
+            println!("{:<38} {:>9.2} {:>9.2}", m.code_name, m.avg_xor_ops, m.avg_mul_ops);
+        }
+    }
+    println!();
+}
+
+/// OLRC's failure tolerance (its d is larger than f+1; Theorem 2.3 bound).
+fn olrc_f(scheme: Scheme) -> usize {
+    let code = scheme.build(CodeFamily::Olrc);
+    let r = code.repair_plan(0).sources.len();
+    code.n() - code.k() - code.k().div_ceil(r) + 2 - 1
+}
+
+fn table4() {
+    println!("=== Table 4 — MTTDL (years, exact absorption time; see EXPERIMENTS.md on scale) ===");
+    let params = MttdlParams::default();
+    println!("{:<12} {:>12} {:>12} {:>12} {:>12}", "scheme", "ALRC", "OLRC", "ULRC", "UniLRC");
+    for scheme in Scheme::paper_schemes() {
+        let mut vals = HashMap::new();
+        for (fam, m) in metric_rows(scheme) {
+            let f_tol = match fam {
+                CodeFamily::Olrc => olrc_f(scheme),
+                _ => scheme.f,
+            };
+            let code = scheme.build(fam);
+            vals.insert(fam, mttdl_years(code.n(), f_tol, m.mttdl_c.max(0.05), &params));
+        }
+        println!(
+            "{:<12} {:>12.2e} {:>12.2e} {:>12.2e} {:>12.2e}",
+            scheme.label(),
+            vals[&CodeFamily::Alrc],
+            vals[&CodeFamily::Olrc],
+            vals[&CodeFamily::Ulrc],
+            vals[&CodeFamily::UniLrc],
+        );
+    }
+    println!();
+}
+
+fn cmd_experiment(which: Option<&str>, flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg = exp_config(flags)?;
+    let print_rows = |title: &str, rows: &[experiments::Row]| {
+        println!("=== {title} [{}] ===", cfg.scheme.label());
+        for r in rows {
+            println!("  {:<8} {:>12.2} {}", r.family.name(), r.value, r.unit);
+        }
+    };
+    match which {
+        Some("1") => {
+            print_rows("Experiment 1 — normal read throughput", &experiments::exp1_normal_read(&cfg)?)
+        }
+        Some("2") => {
+            print_rows("Experiment 2 — degraded read latency", &experiments::exp2_degraded_read(&cfg)?)
+        }
+        Some("3") => {
+            print_rows(
+                "Experiment 3 — single-block recovery throughput",
+                &experiments::exp3_reconstruction(&cfg)?,
+            );
+            print_rows(
+                "Experiment 3 — full-node recovery throughput",
+                &experiments::exp3_node_recovery(&cfg)?,
+            );
+        }
+        Some("4") => {
+            let sweep = [0.5, 1.0, 2.5, 5.0, 10.0];
+            for (gbps, rows) in experiments::exp4_bandwidth(&cfg, &sweep)? {
+                print_rows(&format!("Experiment 4 — recovery @ {gbps} Gb/s cross"), &rows);
+            }
+        }
+        Some("5") => {
+            print_rows("Experiment 5 — decode throughput", &experiments::exp5_decode(&cfg)?)
+        }
+        Some("6") => {
+            let res = experiments::exp6_production(&cfg, 24, 200)?;
+            println!("=== Experiment 6 — production workload [{}] ===", cfg.scheme.label());
+            for r in &res {
+                println!(
+                    "  {:<8} normal {:>9.2} ms   degraded {:>9.2} ms",
+                    r.family.name(),
+                    r.normal_mean_ms,
+                    r.degraded_mean_ms
+                );
+            }
+            for r in &res {
+                println!("  CDF degraded {}:", r.family.name());
+                for (lat, frac) in &r.degraded_cdf {
+                    println!("    {lat:>9.3} ms  {frac:>5.2}");
+                }
+            }
+        }
+        _ => anyhow::bail!("experiment must be 1..6"),
+    }
+    Ok(())
+}
+
+/// Emit golden encode vectors shared with the python test-suite:
+/// `alpha z <comma-separated stripe bytes>` per scheme, for the
+/// deterministic message `data[j] = (j*31 + 7) mod 256`.
+fn cmd_golden(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let mut out = String::new();
+    for scheme in Scheme::paper_schemes() {
+        let code = scheme.build(CodeFamily::UniLrc);
+        let data: Vec<u8> = (0..code.k()).map(|j| ((j * 31 + 7) % 256) as u8).collect();
+        let stripe = code.encode_symbols(&data);
+        out.push_str(&format!(
+            "{} {} {}\n",
+            scheme.alpha,
+            scheme.z,
+            stripe.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",")
+        ));
+    }
+    match flags.get("out") {
+        Some(path) => std::fs::write(path, out)?,
+        None => print!("{out}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_parse() {
+        let f = parse_flags(&[
+            "--scheme".into(),
+            "42".into(),
+            "--raw".into(),
+            "--block-kb".into(),
+            "64".into(),
+        ]);
+        assert_eq!(f["scheme"], "42");
+        assert_eq!(f["raw"], "true");
+        assert_eq!(f["block-kb"], "64");
+    }
+
+    #[test]
+    fn analyze_runs() {
+        cmd_analyze(&parse_flags(&["--table2".into()])).unwrap();
+        cmd_analyze(&parse_flags(&["--fig8".into()])).unwrap();
+        cmd_analyze(&parse_flags(&["--table4".into()])).unwrap();
+        cmd_analyze(&parse_flags(&["--fig3b".into()])).unwrap();
+        cmd_analyze(&parse_flags(&["--fig5".into()])).unwrap();
+    }
+
+    #[test]
+    fn layout_runs() {
+        cmd_layout(&HashMap::new()).unwrap();
+    }
+
+    #[test]
+    fn golden_emits_three_lines() {
+        let path = std::env::temp_dir().join(format!("unilrc_golden_{}.txt", std::process::id()));
+        let f = parse_flags(&["--out".into(), path.to_str().unwrap().into()]);
+        cmd_golden(&f).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("1 6 "));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_command_errors() {
+        assert!(dispatch(&["nope".into()]).is_err());
+    }
+
+    #[test]
+    fn bad_scheme_errors() {
+        assert!(scheme_of(&parse_flags(&["--scheme".into(), "99".into()])).is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! Client side: request drivers and the production object-store workload
+//! of Experiment 6 (EC-Cache / Facebook object mix).
+
+pub mod workload;
+
+pub use workload::{ObjectId, Workload, WorkloadSpec};
+
+/// Percentile over a latency sample (`p` in 0..=100).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+/// Mean of a sample.
+pub fn mean(samples: &[f64]) -> f64 {
+    samples.iter().sum::<f64>() / samples.len() as f64
+}
+
+/// Render a CDF as (latency, fraction) points for EXPERIMENTS.md plots.
+pub fn cdf_points(samples: &[f64], points: usize) -> Vec<(f64, f64)> {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (1..=points)
+        .map(|i| {
+            let frac = i as f64 / points as f64;
+            let idx = ((frac * s.len() as f64).ceil() as usize).clamp(1, s.len()) - 1;
+            (s[idx], frac)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 100.0), 100.0);
+        assert!((percentile(&s, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn mean_basics() {
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let s = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        let c = cdf_points(&s, 5);
+        for w in c.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 > w[0].1);
+        }
+        assert_eq!(c.last().unwrap().1, 1.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Production object-store workload (§6 Experiment 6): objects of
+//! medium (1 MB), medium/large (32 MB) and large (64 MB) sizes in
+//! proportions 82.5% / 10% / 7.5% (EC-Cache's Facebook analytics mix),
+//! laid out over stripes block by block.
+//!
+//! Object sizes are expressed in *blocks* (1 block = 1 MB at the paper's
+//! block size); with a smaller configured block size the mix scales down
+//! proportionally, preserving the access pattern.
+
+use crate::coordinator::{Dss, OpResult, StripeId};
+use crate::prng::Prng;
+
+pub type ObjectId = usize;
+
+/// The size mix of Experiment 6.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadSpec {
+    /// (size_in_blocks, probability) triples.
+    pub mix: [(usize, f64); 3],
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec { mix: [(1, 0.825), (32, 0.10), (64, 0.075)] }
+    }
+}
+
+impl WorkloadSpec {
+    /// Draw an object size (in blocks).
+    pub fn draw(&self, prng: &mut Prng) -> usize {
+        let x = prng.gen_f64();
+        let mut acc = 0.0;
+        for &(size, p) in &self.mix {
+            acc += p;
+            if x < acc {
+                return size;
+            }
+        }
+        self.mix[self.mix.len() - 1].0
+    }
+}
+
+/// A placed workload: each object is a list of (stripe, data-block) pairs.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub objects: Vec<Vec<(StripeId, usize)>>,
+}
+
+impl Workload {
+    /// Place `count` objects onto the DSS's existing stripes, packing data
+    /// blocks sequentially and spilling across stripe boundaries
+    /// (round-robin stripe placement, §6 Exp 6). Panics if the system has
+    /// too little capacity.
+    pub fn place(dss: &Dss, spec: WorkloadSpec, count: usize, prng: &mut Prng) -> Workload {
+        let k = dss.code.k();
+        let stripes = dss.metadata().stripe_count();
+        let capacity = stripes * k;
+        let mut cursor = 0usize;
+        let mut objects = Vec::with_capacity(count);
+        for _ in 0..count {
+            let size = spec.draw(prng);
+            assert!(
+                cursor + size <= capacity,
+                "workload needs {} blocks, capacity {capacity}",
+                cursor + size
+            );
+            let blocks: Vec<(StripeId, usize)> =
+                (cursor..cursor + size).map(|i| (i / k, i % k)).collect();
+            cursor += size;
+            objects.push(blocks);
+        }
+        Workload { objects }
+    }
+
+    /// Place as many objects as fit (up to `max_objects`) instead of
+    /// panicking on overflow — used by experiment drivers whose stripe
+    /// budget is a config knob.
+    pub fn place_fit(dss: &Dss, spec: WorkloadSpec, max_objects: usize, prng: &mut Prng) -> Workload {
+        let k = dss.code.k();
+        let capacity = dss.metadata().stripe_count() * k;
+        let mut cursor = 0usize;
+        let mut objects = Vec::new();
+        for _ in 0..max_objects {
+            let size = spec.draw(prng);
+            if cursor + size > capacity {
+                break;
+            }
+            let blocks: Vec<(StripeId, usize)> =
+                (cursor..cursor + size).map(|i| (i / k, i % k)).collect();
+            cursor += size;
+            objects.push(blocks);
+        }
+        assert!(!objects.is_empty(), "no capacity for even one object");
+        Workload { objects }
+    }
+
+    /// Total data blocks across all objects.
+    pub fn total_blocks(&self) -> usize {
+        self.objects.iter().map(|o| o.len()).sum()
+    }
+
+    /// Read an object: all its blocks fan out in parallel at the same
+    /// instant; failed blocks go down the degraded path. Completion is the
+    /// slowest block's arrival — so cluster load imbalance (Fig 2(b))
+    /// directly shows in object latency.
+    pub fn read_object(&self, dss: &mut Dss, obj: ObjectId) -> anyhow::Result<OpResult> {
+        dss.parallel_read(&self.objects[obj])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_draw_distribution() {
+        let spec = WorkloadSpec::default();
+        let mut p = Prng::new(1);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..10_000 {
+            *counts.entry(spec.draw(&mut p)).or_insert(0usize) += 1;
+        }
+        let frac1 = counts[&1] as f64 / 10_000.0;
+        let frac32 = counts[&32] as f64 / 10_000.0;
+        let frac64 = counts[&64] as f64 / 10_000.0;
+        assert!((frac1 - 0.825).abs() < 0.02, "{frac1}");
+        assert!((frac32 - 0.10).abs() < 0.02);
+        assert!((frac64 - 0.075).abs() < 0.02);
+    }
+}

@@ -1,0 +1,148 @@
+//! Azure-LRC (Huang et al., "Erasure Coding in Windows Azure Storage",
+//! USENIX ATC'12) — the first LRC deployed in production (§2.3, Fig 1(a)).
+//!
+//! Structure: the `k` data blocks are split into `l` equal groups; each
+//! group gets one *pure XOR* local parity. `g` global parities are computed
+//! over all `k` data blocks with Cauchy coefficients (so the
+//! data ∪ globals subcode is MDS). Locality is therefore `k/l` for data and
+//! local parities but `k` for global parities — the asymmetry the paper's
+//! Figure 1(a) example shows (r̄ = (36·5 + 6·30)/42 = 8.57).
+
+use super::{BlockRole, Code, CodeFamily, LocalGroup};
+use crate::gf::Matrix;
+
+pub struct Alrc;
+
+impl Alrc {
+    /// Build ALRC(n, k) with `l` local groups and `g` globals
+    /// (`l + g = n − k`, `l | k`, `g + k ≤ 255` for Cauchy points).
+    pub fn new(n: usize, k: usize, l: usize, g: usize) -> Code {
+        assert_eq!(l + g, n - k, "l + g must equal n − k");
+        assert!(l >= 1 && k % l == 0, "l must divide k");
+        assert!(g + k <= 255, "Cauchy point budget exceeded");
+        let seg = k / l;
+
+        // Globals: Cauchy rows (x-set and y-set disjoint by construction).
+        let xs: Vec<u8> = (0..g as u16).map(|i| i as u8).collect();
+        let ys: Vec<u8> = (g as u16..(g + k) as u16).map(|i| i as u8).collect();
+        let gmat = Matrix::cauchy(&xs, &ys);
+
+        // Locals: ones over each data segment.
+        let mut lmat = Matrix::zero(l, k);
+        for i in 0..l {
+            for j in i * seg..(i + 1) * seg {
+                lmat.set(i, j, 1);
+            }
+        }
+
+        // Block order: data, globals, locals.
+        let parity = gmat.vstack(&lmat);
+        let mut roles = vec![BlockRole::Data; k];
+        roles.extend(vec![BlockRole::GlobalParity; g]);
+        roles.extend(vec![BlockRole::LocalParity; l]);
+
+        let groups: Vec<LocalGroup> = (0..l)
+            .map(|i| {
+                let mut members: Vec<usize> = (i * seg..(i + 1) * seg).collect();
+                let lp = k + g + i;
+                members.push(lp);
+                LocalGroup { members, local_parity: lp }
+            })
+            .collect();
+
+        Code::assemble(
+            CodeFamily::Alrc,
+            format!("ALRC({n},{k},{{{seg},{k}}}) [l={l}, g={g}]"),
+            parity,
+            roles,
+            groups,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::tests::roundtrip_battery;
+    use crate::codes::BlockRole;
+    use crate::prng::Prng;
+
+    #[test]
+    fn paper_example_42_30() {
+        // Fig 1(a): ALRC(42, 30, {5, 30}) — 6 groups of 5 data, 6 globals
+        let c = Alrc::new(42, 30, 6, 6);
+        assert_eq!(c.groups().len(), 6);
+        // r̄ = (36·5 + 6·30)/42 = 8.57
+        assert!((c.recovery_locality() - 8.5714).abs() < 1e-3);
+    }
+
+    #[test]
+    fn data_repair_is_xor_global_repair_is_mul() {
+        let c = Alrc::new(42, 30, 6, 6);
+        for b in 0..c.n() {
+            let plan = c.repair_plan(b);
+            match c.role(b) {
+                BlockRole::Data | BlockRole::LocalParity => {
+                    assert!(plan.xor_only(), "block {b}");
+                    assert_eq!(plan.sources.len(), 5);
+                }
+                BlockRole::GlobalParity => {
+                    assert!(!plan.xor_only(), "block {b}");
+                    assert_eq!(plan.sources.len(), 30);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tolerates_g_plus_1_sampled() {
+        // d = g + 2 ⇒ any g+1 = 7 failures decodable
+        let c = Alrc::new(42, 30, 6, 6);
+        let mut p = Prng::new(5);
+        assert_eq!(c.tolerance_failures_sampled(7, 150, &mut p), 0);
+    }
+
+    #[test]
+    fn tolerates_g_plus_1_small_exhaustive() {
+        // ALRC(12, 8): l=2 groups of 4, g=2 ⇒ any 3 erasures decode
+        let c = Alrc::new(12, 8, 2, 2);
+        assert!(c.tolerates_all_exhaustive(3));
+    }
+
+    #[test]
+    fn group_plus_global_failure() {
+        // a whole group (5+1) plus one global = 7 = g+1 failures
+        let c = Alrc::new(42, 30, 6, 6);
+        let mut pattern = c.groups()[0].members.clone();
+        pattern.push(30); // first global
+        assert!(c.can_decode(&pattern));
+    }
+
+    #[test]
+    fn beyond_tolerance_fails_somewhere() {
+        let c = Alrc::new(42, 30, 6, 6);
+        // Gopalan-bound witness (d ≤ g+2 = 8): erase one full local group
+        // (its 5 data + local parity) plus 2 global parities — survivors
+        // have rank < k, so this 8-pattern is unrecoverable.
+        let mut pattern = c.groups()[0].members.clone();
+        pattern.push(30);
+        pattern.push(31);
+        assert_eq!(pattern.len(), 8);
+        assert!(!c.can_decode(&pattern), "d should be exactly g+2");
+    }
+
+    #[test]
+    fn roundtrip() {
+        roundtrip_battery(&Alrc::new(42, 30, 6, 6), 50);
+        roundtrip_battery(&Alrc::new(24, 16, 4, 4), 51);
+    }
+
+    #[test]
+    fn paper_schemes_construct() {
+        // Table 2 parameterizations: g = f − 1
+        let c136 = Alrc::new(136, 112, 8, 16);
+        assert_eq!(c136.groups().len(), 8);
+        let c210 = Alrc::new(210, 180, 10, 20);
+        assert_eq!(c210.groups().len(), 10);
+    }
+}

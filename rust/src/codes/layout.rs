@@ -1,0 +1,86 @@
+//! Figure 1-style textual layout rendering: show each code's local groups,
+//! block roles and localities (used by `unilrc layout` and the docs).
+
+use super::{BlockRole, Code};
+
+/// Short label for a block: d1…, g1…, l1… (1-based like the paper figures).
+pub fn block_label(code: &Code, block: usize) -> String {
+    let k = code.k();
+    let g = code.global_parities().len();
+    match code.role(block) {
+        BlockRole::Data => format!("d{}", block + 1),
+        BlockRole::GlobalParity => format!("g{}", block - k + 1),
+        BlockRole::LocalParity => format!("l{}", block - k - g + 1),
+    }
+}
+
+/// Render the grouped layout of a code as text lines.
+pub fn render(code: &Code) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{}  rate={:.4}  r̄={:.2}\n",
+        code.name(),
+        code.rate(),
+        code.recovery_locality()
+    ));
+    let mut in_group = vec![false; code.n()];
+    for (i, grp) in code.groups().iter().enumerate() {
+        let labels: Vec<String> = grp.members.iter().map(|&m| block_label(code, m)).collect();
+        out.push_str(&format!(
+            "  group {:>2} (|{}| = {:>2}, repair = {} XORs): {}\n",
+            i + 1,
+            block_label(code, grp.local_parity),
+            grp.members.len(),
+            grp.members.len() - 1,
+            labels.join(" ")
+        ));
+        for &m in &grp.members {
+            in_group[m] = true;
+        }
+    }
+    let ungrouped: Vec<String> = (0..code.n())
+        .filter(|&b| !in_group[b])
+        .map(|b| {
+            let plan = code.repair_plan(b);
+            format!("{} (repair = {} blocks, MUL)", block_label(code, b), plan.sources.len())
+        })
+        .collect();
+    if !ungrouped.is_empty() {
+        out.push_str(&format!("  ungrouped: {}\n", ungrouped.join(" ")));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::spec::{CodeFamily, Scheme};
+
+    #[test]
+    fn labels_match_paper_convention() {
+        let c = Scheme::S42.build(CodeFamily::UniLrc);
+        assert_eq!(block_label(&c, 0), "d1");
+        assert_eq!(block_label(&c, 29), "d30");
+        assert_eq!(block_label(&c, 30), "g1");
+        assert_eq!(block_label(&c, 36), "l1");
+        assert_eq!(block_label(&c, 41), "l6");
+    }
+
+    #[test]
+    fn render_all_families() {
+        for fam in CodeFamily::paper_baselines() {
+            let c = Scheme::S42.build(fam);
+            let text = render(&c);
+            assert!(text.contains("group"), "{fam:?}");
+            assert!(text.lines().count() >= 2);
+        }
+    }
+
+    #[test]
+    fn alrc_has_ungrouped_globals() {
+        let c = Scheme::S42.build(CodeFamily::Alrc);
+        let text = render(&c);
+        assert!(text.contains("ungrouped"));
+        assert!(text.contains("MUL"));
+    }
+}

@@ -1,0 +1,393 @@
+//! Erasure-code constructions: UniLRC (§3) and the deployed baselines the
+//! paper compares against (ALRC, OLRC, ULRC, plain Reed–Solomon).
+//!
+//! All codes are *systematic linear codes over GF(2^8)*: a stripe of `n`
+//! blocks is `y = [I_k; A]·x` where `x` is the `k` data blocks. A [`Code`]
+//! bundles the generator with its *locality structure* (the local groups of
+//! Definition 2.2), from which everything else — repair plans, recovery
+//! locality r̄, XOR locality, distance checks — is derived uniformly, so the
+//! four families are compared apples-to-apples.
+
+pub mod alrc;
+pub mod decoder;
+pub mod layout;
+pub mod olrc;
+pub mod rs;
+pub mod spec;
+pub mod ulrc;
+pub mod unilrc;
+
+pub use decoder::DecodePlan;
+pub use spec::{CodeFamily, Scheme};
+
+use crate::gf::slice::{gf_matmul_blocks, xor_fold};
+use crate::gf::Matrix;
+
+/// Role of a block within a stripe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockRole {
+    Data,
+    GlobalParity,
+    LocalParity,
+}
+
+/// A local (recovery) group: `members` includes the local parity block.
+/// Invariant maintained by all constructors: XOR of the generator rows of
+/// all members is the zero row, i.e. any member is the XOR of the others
+/// — *except* for ALRC-style codes whose groups don't cover global parities;
+/// there the group invariant holds too, but some blocks are in no group.
+#[derive(Debug, Clone)]
+pub struct LocalGroup {
+    pub members: Vec<usize>,
+    pub local_parity: usize,
+}
+
+impl LocalGroup {
+    /// Repair sources for a member: every other member.
+    pub fn others(&self, block: usize) -> Vec<usize> {
+        self.members.iter().copied().filter(|&b| b != block).collect()
+    }
+}
+
+/// How a single failed block is repaired.
+#[derive(Debug, Clone)]
+pub struct RepairPlan {
+    pub target: usize,
+    /// Surviving blocks read, parallel to `coeffs`.
+    pub sources: Vec<usize>,
+    /// GF(2^8) combination coefficients (all 1 ⇔ pure XOR repair).
+    pub coeffs: Vec<u8>,
+}
+
+impl RepairPlan {
+    /// True when the repair is computed with XOR only (§2.3.3 XOR locality).
+    pub fn xor_only(&self) -> bool {
+        self.coeffs.iter().all(|&c| c == 1)
+    }
+
+    /// Number of GF multiplications performed per byte (coefficients ∉ {0,1}).
+    pub fn mul_ops(&self) -> usize {
+        self.coeffs.iter().filter(|&&c| c > 1).count()
+    }
+
+    /// Number of XOR slice operations performed.
+    pub fn xor_ops(&self) -> usize {
+        self.sources.len().saturating_sub(1)
+    }
+
+    /// Execute on real blocks (sources given in plan order).
+    pub fn execute(&self, sources: &[&[u8]]) -> Vec<u8> {
+        assert_eq!(sources.len(), self.sources.len());
+        let len = sources[0].len();
+        if self.xor_only() {
+            let mut out = vec![0u8; len];
+            xor_fold(&mut out, sources);
+            out
+        } else {
+            let mut outs = vec![vec![0u8; len]];
+            gf_matmul_blocks(&[&self.coeffs], sources, &mut outs);
+            outs.pop().unwrap()
+        }
+    }
+}
+
+/// A fully constructed code instance.
+#[derive(Clone)]
+pub struct Code {
+    pub family: CodeFamily,
+    name: String,
+    n: usize,
+    k: usize,
+    /// Parity submatrix `A` ((n−k) × k): rows k..n of the generator.
+    parity: Matrix,
+    /// Local groups (possibly not covering every block: ALRC/OLRC globals).
+    groups: Vec<LocalGroup>,
+    roles: Vec<BlockRole>,
+    /// groups index per block (usize::MAX = none).
+    group_of: Vec<usize>,
+}
+
+impl Code {
+    /// Assemble a code from its parity matrix and locality structure.
+    /// Constructors in the family modules call this; it validates the
+    /// group invariant (XOR of member generator rows = 0).
+    pub(crate) fn assemble(
+        family: CodeFamily,
+        name: String,
+        parity: Matrix,
+        roles: Vec<BlockRole>,
+        groups: Vec<LocalGroup>,
+    ) -> Code {
+        let k = parity.cols();
+        let n = k + parity.rows();
+        assert_eq!(roles.len(), n);
+        // Groups may overlap (OLRC's local parities all cover the global
+        // parities); a block repairs via the first group listing it.
+        let mut group_of = vec![usize::MAX; n];
+        for (gi, g) in groups.iter().enumerate() {
+            assert!(g.members.contains(&g.local_parity));
+            for &m in &g.members {
+                assert!(m < n, "group member out of range");
+                if group_of[m] == usize::MAX {
+                    group_of[m] = gi;
+                }
+            }
+        }
+        let code = Code { family, name, n, k, parity, groups, roles, group_of };
+        // Group invariant: XOR of member rows of G = 0 (so intra-group
+        // repair is pure XOR).
+        for g in &code.groups {
+            let mut acc = vec![0u8; k];
+            for &m in &g.members {
+                for (a, v) in acc.iter_mut().zip(code.generator_row(m)) {
+                    *a ^= v;
+                }
+            }
+            assert!(
+                acc.iter().all(|&v| v == 0),
+                "{}: group at lp {} violates the XOR invariant",
+                code.name,
+                g.local_parity
+            );
+        }
+        code
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of parity blocks `n − k`.
+    pub fn m(&self) -> usize {
+        self.n - self.k
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn roles(&self) -> &[BlockRole] {
+        &self.roles
+    }
+
+    pub fn role(&self, block: usize) -> BlockRole {
+        self.roles[block]
+    }
+
+    pub fn groups(&self) -> &[LocalGroup] {
+        &self.groups
+    }
+
+    /// Group containing `block`, if any.
+    pub fn group_of(&self, block: usize) -> Option<&LocalGroup> {
+        self.groups.get(*self.group_of.get(block)?)
+    }
+
+    /// Indices of global parity blocks.
+    pub fn global_parities(&self) -> Vec<usize> {
+        (0..self.n).filter(|&b| self.roles[b] == BlockRole::GlobalParity).collect()
+    }
+
+    /// Indices of local parity blocks.
+    pub fn local_parities(&self) -> Vec<usize> {
+        (0..self.n).filter(|&b| self.roles[b] == BlockRole::LocalParity).collect()
+    }
+
+    /// Parity submatrix `A` ((n−k) × k).
+    pub fn parity_matrix(&self) -> &Matrix {
+        &self.parity
+    }
+
+    /// Generator row of a block: unit vector for data, parity row otherwise.
+    pub fn generator_row(&self, block: usize) -> Vec<u8> {
+        if block < self.k {
+            let mut r = vec![0u8; self.k];
+            r[block] = 1;
+            r
+        } else {
+            self.parity.row(block - self.k).to_vec()
+        }
+    }
+
+    /// Full generator matrix `[I_k; A]` (n × k).
+    pub fn generator(&self) -> Matrix {
+        Matrix::identity(self.k).vstack(&self.parity)
+    }
+
+    /// Parity-check matrix `H = [A | I_{n−k}]` ((n−k) × n), block order
+    /// (data…, parities…). Satisfies `H·y = 0` for every codeword.
+    pub fn parity_check(&self) -> Matrix {
+        self.parity.hstack(&Matrix::identity(self.m()))
+    }
+
+    /// Code rate `k/n`.
+    pub fn rate(&self) -> f64 {
+        self.k as f64 / self.n as f64
+    }
+
+    // ---------------------------------------------------------------- encode
+
+    /// Encode: compute all `n−k` parity blocks from the `k` data blocks.
+    pub fn encode_blocks(&self, data: &[&[u8]]) -> Vec<Vec<u8>> {
+        assert_eq!(data.len(), self.k, "need exactly k data blocks");
+        let len = data[0].len();
+        let rows: Vec<&[u8]> = (0..self.m()).map(|i| self.parity.row(i)).collect();
+        let mut outs = vec![vec![0u8; len]; self.m()];
+        gf_matmul_blocks(&rows, data, &mut outs);
+        outs
+    }
+
+    /// Symbol-level encode (one byte per block) — used by tests and the
+    /// golden vectors shared with the Python oracle.
+    pub fn encode_symbols(&self, data: &[u8]) -> Vec<u8> {
+        assert_eq!(data.len(), self.k);
+        let mut stripe = data.to_vec();
+        stripe.extend(self.parity.mul_vec(data));
+        stripe
+    }
+
+    // ---------------------------------------------------------------- repair
+
+    /// Single-failure repair plan. Blocks inside a local group repair by
+    /// XORing the rest of the group; blocks outside any group (ALRC/OLRC
+    /// global parities, RS blocks) repair through the generic decoder,
+    /// which resolves to their generator-row equation (MUL + XOR over the
+    /// `k` data blocks for a global parity).
+    pub fn repair_plan(&self, block: usize) -> RepairPlan {
+        assert!(block < self.n);
+        if let Some(g) = self.group_of(block) {
+            let sources = g.others(block);
+            let coeffs = vec![1u8; sources.len()];
+            RepairPlan { target: block, sources, coeffs }
+        } else {
+            let plan = self
+                .decode_plan(&[block])
+                .expect("single-block repair must always be possible");
+            RepairPlan {
+                target: block,
+                coeffs: plan.coeffs.row(0).to_vec(),
+                sources: plan.sources,
+            }
+        }
+    }
+
+    /// Average recovery locality r̄ over all n blocks (§2.3.1).
+    pub fn recovery_locality(&self) -> f64 {
+        let total: usize = (0..self.n).map(|b| self.repair_plan(b).sources.len()).sum();
+        total as f64 / self.n as f64
+    }
+
+    // ---------------------------------------------------------------- decode
+
+    /// Plan a multi-erasure decode; `None` if the pattern is unrecoverable.
+    pub fn decode_plan(&self, erased: &[usize]) -> Option<DecodePlan> {
+        decoder::plan(self, erased)
+    }
+
+    /// True if the erasure pattern is recoverable.
+    pub fn can_decode(&self, erased: &[usize]) -> bool {
+        decoder::recoverable(self, erased)
+    }
+
+    /// Verify that *every* erasure pattern of size `t` decodes
+    /// (exhaustive — use only for small `n`).
+    pub fn tolerates_all_exhaustive(&self, t: usize) -> bool {
+        let mut pattern: Vec<usize> = (0..t).collect();
+        loop {
+            if !self.can_decode(&pattern) {
+                return false;
+            }
+            // next combination
+            let mut i = t;
+            loop {
+                if i == 0 {
+                    return true;
+                }
+                i -= 1;
+                if pattern[i] != i + self.n - t {
+                    pattern[i] += 1;
+                    for j in i + 1..t {
+                        pattern[j] = pattern[j - 1] + 1;
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Randomized tolerance check: `samples` random erasure patterns of
+    /// size `t`; returns the number that failed to decode.
+    pub fn tolerance_failures_sampled(
+        &self,
+        t: usize,
+        samples: usize,
+        prng: &mut crate::prng::Prng,
+    ) -> usize {
+        (0..samples)
+            .filter(|_| !self.can_decode(&prng.choose_distinct(self.n, t)))
+            .count()
+    }
+}
+
+impl std::fmt::Debug for Code {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} (n={}, k={}, groups={}, rate={:.4})",
+            self.name,
+            self.n,
+            self.k,
+            self.groups.len(),
+            self.rate()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng;
+
+    /// Shared battery run against every family (see family modules for
+    /// construction-specific tests).
+    pub(crate) fn roundtrip_battery(code: &Code, seed: u64) {
+        let mut p = Prng::new(seed);
+        let block = 64;
+        let data: Vec<Vec<u8>> = (0..code.k()).map(|_| p.bytes(block)).collect();
+        let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let parities = code.encode_blocks(&drefs);
+        let stripe: Vec<&[u8]> = drefs.iter().copied().chain(parities.iter().map(|v| v.as_slice())).collect();
+
+        // symbol-level encode agrees with block-level encode per byte
+        for b in 0..block.min(4) {
+            let dsyms: Vec<u8> = data.iter().map(|d| d[b]).collect();
+            let ssyms = code.encode_symbols(&dsyms);
+            for (i, s) in stripe.iter().enumerate() {
+                assert_eq!(ssyms[i], s[b], "block {i} byte {b}");
+            }
+        }
+
+        // every single-block repair reconstructs the block
+        for target in 0..code.n() {
+            let plan = code.repair_plan(target);
+            let srcs: Vec<&[u8]> = plan.sources.iter().map(|&s| stripe[s]).collect();
+            let rebuilt = plan.execute(&srcs);
+            assert_eq!(rebuilt.as_slice(), stripe[target], "repair of block {target}");
+        }
+    }
+
+    #[test]
+    fn repair_plan_cost_accounting() {
+        let plan = RepairPlan { target: 0, sources: vec![1, 2, 3], coeffs: vec![1, 1, 1] };
+        assert!(plan.xor_only());
+        assert_eq!(plan.mul_ops(), 0);
+        assert_eq!(plan.xor_ops(), 2);
+        let plan2 = RepairPlan { target: 0, sources: vec![1, 2], coeffs: vec![3, 1] };
+        assert!(!plan2.xor_only());
+        assert_eq!(plan2.mul_ops(), 1);
+    }
+}

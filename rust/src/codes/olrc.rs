@@ -1,0 +1,151 @@
+//! Optimal Cauchy LRC (Kadekodi et al., "Practical Design Considerations
+//! for Wide LRCs", FAST'23) — Google's distance-optimal wide LRC
+//! (§2.3, Fig 1(b)).
+//!
+//! Structure (reverse-engineered from the paper's worked example, which it
+//! matches exactly — see DESIGN.md §8): data ∪ global parities form a
+//! Cauchy MDS code; each of the `l` local parities is the XOR of its
+//! segment of `k/l` data blocks **plus all `g` global parities**. Every
+//! block therefore has uniform locality `k/l + g` (all local groups share
+//! the global parities), which for (42, 30) gives the paper's r̄ = 25.
+//!
+//! `l` is the largest integer satisfying the construction condition
+//! `g·l² < k + g·l` (§2.3.1 Limitation #1) with `g = n − k − l`; the small
+//! `l` ⇒ huge local groups is exactly the recovery-locality weakness the
+//! paper criticizes.
+
+use super::{BlockRole, Code, CodeFamily, LocalGroup};
+use crate::gf::Matrix;
+
+pub struct Olrc;
+
+impl Olrc {
+    /// Choose `l` per the construction condition.
+    pub fn pick_l(n: usize, k: usize) -> usize {
+        let m = n - k;
+        let mut best = 1;
+        for l in 1..m {
+            let g = m - l;
+            // gl² < k + gl  ⇔  g·l·(l−1) < k
+            if g * l * l < k + g * l && k % l == 0 {
+                best = l;
+            }
+        }
+        best
+    }
+
+    /// Build OLRC(n, k).
+    pub fn new(n: usize, k: usize) -> Code {
+        let l = Self::pick_l(n, k);
+        let g = n - k - l;
+        assert!(g + k <= 255, "Cauchy point budget exceeded");
+        let seg = k / l;
+
+        let xs: Vec<u8> = (0..g as u16).map(|i| i as u8).collect();
+        let ys: Vec<u8> = (g as u16..(g + k) as u16).map(|i| i as u8).collect();
+        let gmat = Matrix::cauchy(&xs, &ys);
+
+        // Local parity i = XOR(data segment i) ⊕ XOR(all globals): its
+        // generator row is the segment indicator plus the XOR of all global
+        // rows.
+        let mut lmat = Matrix::zero(l, k);
+        for i in 0..l {
+            for j in i * seg..(i + 1) * seg {
+                lmat.set(i, j, 1);
+            }
+            for gr in 0..g {
+                for j in 0..k {
+                    let v = lmat.get(i, j) ^ gmat.get(gr, j);
+                    lmat.set(i, j, v);
+                }
+            }
+        }
+
+        let parity = gmat.vstack(&lmat);
+        let mut roles = vec![BlockRole::Data; k];
+        roles.extend(vec![BlockRole::GlobalParity; g]);
+        roles.extend(vec![BlockRole::LocalParity; l]);
+
+        // Each group: data segment + ALL globals + its local parity.
+        // Groups overlap on the globals by construction.
+        let groups: Vec<LocalGroup> = (0..l)
+            .map(|i| {
+                let mut members: Vec<usize> = (i * seg..(i + 1) * seg).collect();
+                members.extend(k..k + g);
+                let lp = k + g + i;
+                members.push(lp);
+                LocalGroup { members, local_parity: lp }
+            })
+            .collect();
+
+        let r = seg + g;
+        Code::assemble(
+            CodeFamily::Olrc,
+            format!("OLRC({n},{k},{r}) [l={l}, g={g}]"),
+            parity,
+            roles,
+            groups,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::tests::roundtrip_battery;
+    use crate::prng::Prng;
+
+    #[test]
+    fn paper_example_42_30() {
+        // Fig 1(b): OLRC(42, 30, 25) — l=2, g=10, uniform locality 25
+        assert_eq!(Olrc::pick_l(42, 30), 2);
+        let c = Olrc::new(42, 30);
+        assert_eq!(c.global_parities().len(), 10);
+        assert_eq!(c.local_parities().len(), 2);
+        for b in 0..c.n() {
+            assert_eq!(c.repair_plan(b).sources.len(), 25, "block {b}");
+        }
+        assert!((c.recovery_locality() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn construction_condition_other_schemes() {
+        assert_eq!(Olrc::pick_l(136, 112), 2); // g=22: 22·4=88 < 112+44
+        assert_eq!(Olrc::pick_l(210, 180), 3); // g=27: 27·9=243 < 180+81=261
+    }
+
+    #[test]
+    fn no_xor_locality() {
+        // Limitation #3: OLRC local repair mixes globals in ⇒ the group XOR
+        // trick still works (group XORs to zero) but spans 25 blocks; global
+        // rows themselves are MUL-heavy. The *repair* is XOR but huge.
+        let c = Olrc::new(42, 30);
+        let plan = c.repair_plan(0);
+        assert_eq!(plan.sources.len(), 25);
+        assert!(plan.xor_only(), "group-based repair is XOR of 25 blocks");
+    }
+
+    #[test]
+    fn distance_larger_than_others() {
+        // r = 25 ⇒ Singleton: d ≤ n−k−⌈k/r⌉+2 = 12; sample 11-erasure decode
+        let c = Olrc::new(42, 30);
+        let mut p = Prng::new(7);
+        assert_eq!(c.tolerance_failures_sampled(11, 100, &mut p), 0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        roundtrip_battery(&Olrc::new(42, 30), 60);
+    }
+
+    #[test]
+    fn groups_share_globals() {
+        let c = Olrc::new(42, 30);
+        let g0 = &c.groups()[0];
+        let g1 = &c.groups()[1];
+        for gp in c.global_parities() {
+            assert!(g0.members.contains(&gp));
+            assert!(g1.members.contains(&gp));
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Systematic Reed–Solomon (MDS) code — the no-locality reference point
+//! (§2.1) and the foundation the wide-LRC discussion starts from.
+//!
+//! Construction: take an `n × k` Vandermonde matrix `V` on `n` distinct
+//! points and right-multiply by the inverse of its top `k × k` block. The
+//! result is systematic `[I_k; A]` and inherits the MDS property (every
+//! `k × k` submatrix of `V` is invertible because the points are distinct),
+//! so any `n − k` erasures are recoverable.
+
+use super::{BlockRole, Code, CodeFamily};
+use crate::gf::matrix::distinct_nonzero_points;
+use crate::gf::Matrix;
+
+pub struct Rs;
+
+impl Rs {
+    /// Build a systematic `(n, k)` Reed–Solomon code (`k < n ≤ 255`).
+    pub fn new(n: usize, k: usize) -> Code {
+        assert!(k < n, "k must be < n");
+        assert!(n <= 255, "GF(2^8) RS supports n ≤ 255");
+        let pts = distinct_nonzero_points(n);
+        let v = Matrix::vandermonde(k, &pts, 0); // k × n, columns = points
+        // transpose-view: we want rows=blocks; build V' as n × k
+        let mut vt = Matrix::zero(n, k);
+        for i in 0..n {
+            for j in 0..k {
+                vt.set(i, j, v.get(j, i));
+            }
+        }
+        let top = vt.select_rows(&(0..k).collect::<Vec<_>>());
+        let top_inv = top.invert().expect("Vandermonde top block is invertible");
+        let sys = vt.mul(&top_inv); // n × k, top block = I
+        let parity = sys.select_rows(&(k..n).collect::<Vec<_>>());
+
+        let mut roles = vec![BlockRole::Data; k];
+        roles.extend(vec![BlockRole::GlobalParity; n - k]);
+        Code::assemble(CodeFamily::Rs, format!("RS({n},{k})"), parity, roles, vec![])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::tests::roundtrip_battery;
+    use crate::prng::Prng;
+
+    #[test]
+    fn systematic_top_is_identity() {
+        let code = Rs::new(9, 6);
+        // encode_symbols keeps data in place
+        let data: Vec<u8> = (1..=6).collect();
+        let stripe = code.encode_symbols(&data);
+        assert_eq!(&stripe[..6], &data[..]);
+    }
+
+    #[test]
+    fn mds_property_small_exhaustive() {
+        let code = Rs::new(9, 6);
+        assert!(code.tolerates_all_exhaustive(3));
+        // and 4 erasures must fail somewhere (in fact everywhere)
+        assert!(!code.can_decode(&[0, 1, 2, 3]));
+    }
+
+    #[test]
+    fn mds_property_sampled_wide() {
+        let code = Rs::new(60, 50);
+        let mut p = Prng::new(1);
+        assert_eq!(code.tolerance_failures_sampled(10, 200, &mut p), 0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        roundtrip_battery(&Rs::new(12, 8), 7);
+    }
+
+    #[test]
+    fn repair_cost_is_k() {
+        let code = Rs::new(9, 6);
+        for b in 0..9 {
+            assert_eq!(code.repair_plan(b).sources.len(), 6);
+        }
+        assert!((code.recovery_locality() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_locality() {
+        let code = Rs::new(9, 6);
+        assert!(code.groups().is_empty());
+        assert_eq!(code.global_parities().len(), 3);
+        assert!(code.local_parities().is_empty());
+    }
+}

@@ -1,0 +1,155 @@
+//! Scheme presets — the paper's Table 2 parameter sets, plus constructors
+//! that map a (family, scheme) pair to a concrete [`Code`].
+
+use super::{alrc::Alrc, olrc::Olrc, rs::Rs, ulrc::Ulrc, unilrc::UniLrc, Code};
+
+/// The code families compared throughout the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CodeFamily {
+    /// This paper's contribution (§3).
+    UniLrc,
+    /// Azure-LRC (Huang et al., ATC'12).
+    Alrc,
+    /// Optimal Cauchy LRC (Google, FAST'23).
+    Olrc,
+    /// Uniform Cauchy LRC (Google, FAST'23).
+    Ulrc,
+    /// Reed–Solomon (MDS reference, no locality).
+    Rs,
+}
+
+impl CodeFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodeFamily::UniLrc => "UniLRC",
+            CodeFamily::Alrc => "ALRC",
+            CodeFamily::Olrc => "OLRC",
+            CodeFamily::Ulrc => "ULRC",
+            CodeFamily::Rs => "RS",
+        }
+    }
+
+    /// The four LRC families of Table 1/2 (excludes RS).
+    pub fn paper_baselines() -> [CodeFamily; 4] {
+        [CodeFamily::UniLrc, CodeFamily::Alrc, CodeFamily::Olrc, CodeFamily::Ulrc]
+    }
+
+    pub fn parse(s: &str) -> Option<CodeFamily> {
+        match s.to_ascii_lowercase().as_str() {
+            "unilrc" | "uni" => Some(CodeFamily::UniLrc),
+            "alrc" | "azure" => Some(CodeFamily::Alrc),
+            "olrc" | "optimal" => Some(CodeFamily::Olrc),
+            "ulrc" | "uniform" => Some(CodeFamily::Ulrc),
+            "rs" | "reed-solomon" => Some(CodeFamily::Rs),
+            _ => None,
+        }
+    }
+}
+
+/// A `k`-of-`n` evaluation scheme (paper Table 2): fixes (n, k) and the
+/// fault-tolerance requirement `f` (tolerate ≥ f node failures plus one
+/// cluster failure); UniLRC realizes it with the given (α, z).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scheme {
+    pub n: usize,
+    pub k: usize,
+    /// Node-failure tolerance target (d = f + 1 for UniLRC/ALRC/ULRC).
+    pub f: usize,
+    /// UniLRC scale coefficient.
+    pub alpha: usize,
+    /// UniLRC cluster count.
+    pub z: usize,
+}
+
+impl Scheme {
+    pub const fn new(n: usize, k: usize, f: usize, alpha: usize, z: usize) -> Scheme {
+        Scheme { n, k, f, alpha, z }
+    }
+
+    /// Table 2, row 1: (42, 30), f=7, α=1, z=6.
+    pub const S42: Scheme = Scheme::new(42, 30, 7, 1, 6);
+    /// Table 2, row 2: (136, 112), f=17, α=2, z=8.
+    pub const S136: Scheme = Scheme::new(136, 112, 17, 2, 8);
+    /// Table 2, row 3: (210, 180), f=21, α=2, z=10.
+    pub const S210: Scheme = Scheme::new(210, 180, 21, 2, 10);
+
+    /// The paper's three evaluation schemes.
+    pub fn paper_schemes() -> [Scheme; 3] {
+        [Scheme::S42, Scheme::S136, Scheme::S210]
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-of-{}", self.k, self.n)
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.k as f64 / self.n as f64
+    }
+
+    /// Instantiate a family at this scheme's parameters.
+    pub fn build(&self, family: CodeFamily) -> Code {
+        match family {
+            CodeFamily::UniLrc => {
+                let c = UniLrc::new(self.alpha, self.z);
+                assert_eq!(c.n(), self.n, "UniLRC(α={},z={}) n mismatch", self.alpha, self.z);
+                assert_eq!(c.k(), self.k);
+                c
+            }
+            CodeFamily::Alrc => {
+                // g = f − 1 globals (d = g + 2 = f + 1), rest local groups.
+                let g = self.f - 1;
+                let l = self.n - self.k - g;
+                Alrc::new(self.n, self.k, l, g)
+            }
+            CodeFamily::Olrc => Olrc::new(self.n, self.k),
+            CodeFamily::Ulrc => Ulrc::new(self.n, self.k, self.f),
+            CodeFamily::Rs => Rs::new(self.n, self.k),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "42" | "30-of-42" => Some(Scheme::S42),
+            "136" | "112-of-136" => Some(Scheme::S136),
+            "210" | "180-of-210" => Some(Scheme::S210),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_rates() {
+        assert!((Scheme::S42.rate() - 0.7143).abs() < 1e-3);
+        assert!((Scheme::S136.rate() - 0.8235).abs() < 1e-3);
+        assert!((Scheme::S210.rate() - 0.8571).abs() < 1e-3);
+    }
+
+    #[test]
+    fn all_families_build_all_schemes() {
+        for s in Scheme::paper_schemes() {
+            for fam in CodeFamily::paper_baselines() {
+                let c = s.build(fam);
+                assert_eq!(c.n(), s.n, "{fam:?} {}", s.label());
+                assert_eq!(c.k(), s.k, "{fam:?} {}", s.label());
+            }
+        }
+    }
+
+    #[test]
+    fn family_parse() {
+        assert_eq!(CodeFamily::parse("UniLRC"), Some(CodeFamily::UniLrc));
+        assert_eq!(CodeFamily::parse("azure"), Some(CodeFamily::Alrc));
+        assert_eq!(CodeFamily::parse("nope"), None);
+    }
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(Scheme::parse("42"), Some(Scheme::S42));
+        assert_eq!(Scheme::parse("180-of-210"), Some(Scheme::S210));
+        assert_eq!(Scheme::parse("13"), None);
+    }
+}

@@ -1,0 +1,167 @@
+//! Uniform Cauchy LRC (Kadekodi et al., FAST'23) — Google's deployed wide
+//! LRC and the paper's headline baseline (§2.3, Fig 1(c)).
+//!
+//! Structure: data ∪ global parities form a Cauchy MDS code; **all n
+//! blocks** (data, globals and the local parities themselves) are
+//! partitioned into `l` near-uniform local groups (sizes ⌊n/l⌋ and ⌈n/l⌉),
+//! and each group's local parity is the XOR of its other members. Locality
+//! is `size − 1`, i.e. two adjacent values — the paper's (42, 30) example
+//! has sizes {8, 8, 8, 9, 9} and r̄ = (24·7 + 18·8)/42 = 7.43.
+//!
+//! Parameterized by the fault-tolerance target `f`: `g = f` globals,
+//! `l = n − k − g` locals.
+
+use super::{BlockRole, Code, CodeFamily, LocalGroup};
+use crate::gf::Matrix;
+
+pub struct Ulrc;
+
+impl Ulrc {
+    /// Build ULRC(n, k) with `g = f` global parities.
+    pub fn new(n: usize, k: usize, f: usize) -> Code {
+        let g = f;
+        assert!(n - k > g, "need at least one local parity");
+        let l = n - k - g;
+        assert!(g + k <= 255, "Cauchy point budget exceeded");
+
+        let xs: Vec<u8> = (0..g as u16).map(|i| i as u8).collect();
+        let ys: Vec<u8> = (g as u16..(g + k) as u16).map(|i| i as u8).collect();
+        let gmat = Matrix::cauchy(&xs, &ys);
+
+        // Group sizes: n = l·⌊n/l⌋ + (n mod l); small groups first (matches
+        // the paper's {8,8,8,9,9} ordering).
+        let base = n / l;
+        let extra = n % l;
+        let sizes: Vec<usize> =
+            (0..l).map(|i| if i < l - extra { base } else { base + 1 }).collect();
+
+        // The non-lp pool in index order: data 0..k, globals k..k+g. Group i
+        // takes sizes[i]−1 pool blocks plus its own local parity.
+        let mut groups = Vec::with_capacity(l);
+        let mut cursor = 0usize;
+        for (i, &sz) in sizes.iter().enumerate() {
+            let mut members: Vec<usize> = (cursor..cursor + sz - 1).collect();
+            cursor += sz - 1;
+            let lp = k + g + i;
+            members.push(lp);
+            groups.push(LocalGroup { members, local_parity: lp });
+        }
+        assert_eq!(cursor, k + g, "pool must be exactly consumed");
+
+        // Local parity rows: XOR of the member generator rows (unit rows for
+        // data members, Cauchy rows for global members).
+        let mut lmat = Matrix::zero(l, k);
+        for (i, grp) in groups.iter().enumerate() {
+            for &m in &grp.members {
+                if m < k {
+                    let v = lmat.get(i, m) ^ 1;
+                    lmat.set(i, m, v);
+                } else if m < k + g {
+                    for j in 0..k {
+                        let v = lmat.get(i, j) ^ gmat.get(m - k, j);
+                        lmat.set(i, j, v);
+                    }
+                }
+            }
+        }
+
+        let parity = gmat.vstack(&lmat);
+        let mut roles = vec![BlockRole::Data; k];
+        roles.extend(vec![BlockRole::GlobalParity; g]);
+        roles.extend(vec![BlockRole::LocalParity; l]);
+
+        Code::assemble(
+            CodeFamily::Ulrc,
+            format!("ULRC({n},{k}) [l={l}, g={g}, sizes {:?}]", sizes),
+            parity,
+            roles,
+            groups,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::tests::roundtrip_battery;
+    use crate::prng::Prng;
+
+    #[test]
+    fn paper_example_42_30() {
+        // Fig 1(c): ULRC(42, 30, {7, 8}) — g=7, l=5, sizes {8,8,8,9,9}
+        let c = Ulrc::new(42, 30, 7);
+        assert_eq!(c.global_parities().len(), 7);
+        assert_eq!(c.local_parities().len(), 5);
+        let sizes: Vec<usize> = c.groups().iter().map(|g| g.members.len()).collect();
+        assert_eq!(sizes, vec![8, 8, 8, 9, 9]);
+        // r̄ = (24·7 + 18·8)/42 = 7.43
+        assert!((c.recovery_locality() - 7.4286).abs() < 1e-3);
+    }
+
+    #[test]
+    fn every_block_in_exactly_one_group() {
+        let c = Ulrc::new(42, 30, 7);
+        let mut count = vec![0usize; c.n()];
+        for g in c.groups() {
+            for &m in &g.members {
+                count[m] += 1;
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn all_repairs_are_xor() {
+        // unlike ALRC, ULRC's globals sit inside local groups ⇒ XOR repair
+        let c = Ulrc::new(42, 30, 7);
+        for b in 0..c.n() {
+            assert!(c.repair_plan(b).xor_only(), "block {b}");
+        }
+    }
+
+    #[test]
+    fn tolerates_f_sampled() {
+        let c = Ulrc::new(42, 30, 7);
+        let mut p = Prng::new(8);
+        assert_eq!(c.tolerance_failures_sampled(7, 150, &mut p), 0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        roundtrip_battery(&Ulrc::new(42, 30, 7), 70);
+    }
+
+    #[test]
+    fn paper_schemes_shapes() {
+        let c136 = Ulrc::new(136, 112, 17);
+        assert_eq!(c136.local_parities().len(), 7);
+        let sz: Vec<usize> = c136.groups().iter().map(|g| g.members.len()).collect();
+        assert_eq!(sz.iter().sum::<usize>(), 136);
+        assert!(sz.iter().all(|&s| s == 19 || s == 20));
+
+        let c210 = Ulrc::new(210, 180, 21);
+        assert_eq!(c210.local_parities().len(), 9);
+        let sz: Vec<usize> = c210.groups().iter().map(|g| g.members.len()).collect();
+        assert_eq!(sz.iter().sum::<usize>(), 210);
+        assert!(sz.iter().all(|&s| s == 23 || s == 24));
+    }
+
+    #[test]
+    fn mixed_failure_patterns_decode() {
+        let c = Ulrc::new(42, 30, 7);
+        let mut p = Prng::new(9);
+        let data: Vec<Vec<u8>> = (0..30).map(|_| p.bytes(32)).collect();
+        let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let parities = c.encode_blocks(&drefs);
+        let stripe: Vec<Vec<u8>> = data.into_iter().chain(parities).collect();
+        // failure spanning two groups plus a global and a local parity
+        for erased in [vec![0, 7, 30, 37], vec![1, 2, 3, 31, 38], vec![29, 36, 41]] {
+            let plan = c.decode_plan(&erased).unwrap();
+            let srcs: Vec<&[u8]> = plan.sources.iter().map(|&s| stripe[s].as_slice()).collect();
+            let rebuilt = plan.execute(&srcs);
+            for (i, &b) in plan.erased.iter().enumerate() {
+                assert_eq!(rebuilt[i], stripe[b], "pattern {erased:?} block {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Configuration files for experiments and deployments.
+//!
+//! A hand-rolled TOML-subset parser (`serde`/`toml` are unavailable in
+//! this offline build): `[sections]`, `key = value` with string / integer /
+//! float / boolean values, `#` comments. Enough to express every knob of
+//! [`ExpConfig`](crate::experiments::ExpConfig) and the §6 Setup
+//! parameters; see `configs/paper.toml`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed configuration: `section.key → value` (top-level keys live in
+/// the "" section).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<(String, String), Value>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value {val:?}", lineno + 1))?;
+            let prev = cfg
+                .values
+                .insert((section.clone(), key.trim().to_string()), value);
+            if prev.is_some() {
+                bail!("line {}: duplicate key {:?}", lineno + 1, key.trim());
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    /// Get `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key).and_then(Value::as_usize)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(Value::as_f64)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).and_then(Value::as_bool)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(Value::as_str)
+    }
+
+    /// All keys of a section (for validation / error messages).
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.values
+            .keys()
+            .filter(|(s, _)| s == section)
+            .map(|(_, k)| k.as_str())
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse {s:?}")
+}
+
+/// Build an experiment config from a file (CLI `--config`): recognized
+/// keys under `[experiment]`: `scheme`, `block_kb`, `stripes`,
+/// `cross_gbps`, `aggregated`, `backend`, `seed`.
+pub fn experiment_config(cfg: &Config) -> Result<crate::experiments::ExpConfig> {
+    use crate::codes::spec::Scheme;
+    let mut e = crate::experiments::ExpConfig::default();
+    if let Some(s) = cfg.get_str("experiment", "scheme") {
+        e.scheme = Scheme::parse(s).with_context(|| format!("bad scheme {s:?}"))?;
+    }
+    if let Some(kb) = cfg.get_usize("experiment", "block_kb") {
+        e.block_size = kb * 1024;
+    }
+    if let Some(s) = cfg.get_usize("experiment", "stripes") {
+        e.stripes = s;
+    }
+    if let Some(g) = cfg.get_f64("experiment", "cross_gbps") {
+        e.cross_gbps = g;
+    }
+    if let Some(a) = cfg.get_bool("experiment", "aggregated") {
+        e.aggregated = a;
+    }
+    if let Some(s) = cfg.get_usize("experiment", "seed") {
+        e.seed = s as u64;
+    }
+    if cfg.get_str("experiment", "backend") == Some("pjrt") {
+        e = e.with_pjrt()?;
+    }
+    Ok(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# paper §6 setup
+title = "unilrc"         # inline comment
+[experiment]
+scheme = "210"
+block_kb = 1024
+stripes = 4
+cross_gbps = 1.0
+aggregated = true
+seed = 42
+
+[mttdl]
+nodes = 400
+epsilon = 0.1
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_str("", "title"), Some("unilrc"));
+        assert_eq!(c.get_str("experiment", "scheme"), Some("210"));
+        assert_eq!(c.get_usize("experiment", "block_kb"), Some(1024));
+        assert_eq!(c.get_f64("experiment", "cross_gbps"), Some(1.0));
+        assert_eq!(c.get_bool("experiment", "aggregated"), Some(true));
+        assert_eq!(c.get_usize("mttdl", "nodes"), Some(400));
+        assert_eq!(c.get(&"nope".to_string(), "x"), None);
+    }
+
+    #[test]
+    fn experiment_config_roundtrip() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let e = experiment_config(&c).unwrap();
+        assert_eq!(e.scheme.n, 210);
+        assert_eq!(e.block_size, 1024 * 1024);
+        assert_eq!(e.stripes, 4);
+        assert!(e.aggregated);
+        assert_eq!(e.seed, 42);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(Config::parse("a = 1\na = 2").is_err());
+        assert!(Config::parse("[open\n").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let c = Config::parse("s = \"a # b\"").unwrap();
+        assert_eq!(c.get_str("", "s"), Some("a # b"));
+    }
+
+    #[test]
+    fn int_float_bool_edge_cases() {
+        let c = Config::parse("i = -3\nf = 2.5e-3\nb = false").unwrap();
+        assert_eq!(c.get("", "i"), Some(&Value::Int(-3)));
+        assert!((c.get_f64("", "f").unwrap() - 2.5e-3).abs() < 1e-12);
+        assert_eq!(c.get_bool("", "b"), Some(false));
+        assert_eq!(c.get_usize("", "i"), None, "negative ints are not usize");
+    }
+
+    #[test]
+    fn keys_listing() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let mut ks = c.keys("experiment");
+        ks.sort_unstable();
+        assert_eq!(ks, vec!["aggregated", "block_kb", "cross_gbps", "scheme", "seed", "stripes"]);
+    }
+}

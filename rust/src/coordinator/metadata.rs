@@ -1,0 +1,142 @@
+//! Coordinator metadata: stripe placements and the (ground-truth) block
+//! store. In the paper's prototype this is the stripe-to-file and
+//! block-to-node mapping the coordinator manages (§4.2).
+
+use crate::codes::Code;
+use crate::placement::{Placement, PlacementStrategy, Topology};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Stripe identifier.
+pub type StripeId = usize;
+
+/// Stripe placements + block data. Blocks are `Arc`'d so ops can hold
+/// references while the virtual network "moves" them.
+pub struct Metadata {
+    placements: Vec<Placement>,
+    /// (stripe, block) → bytes. Ground truth for verification; a failed
+    /// node's blocks are unreadable through ops but remain here.
+    blocks: HashMap<(StripeId, usize), Arc<Vec<u8>>>,
+    /// node → (stripe, block) reverse index.
+    by_node: HashMap<usize, Vec<(StripeId, usize)>>,
+    strategy_name: &'static str,
+    template: PlacementTemplate,
+}
+
+struct PlacementTemplate {
+    n: usize,
+    placements_fn: Box<dyn Fn(usize) -> Placement>,
+}
+
+impl Metadata {
+    pub fn new(code: &Code, strategy: &dyn PlacementStrategy, topo: Topology) -> Metadata {
+        let code_cl = code.clone();
+        let n = code.n();
+        // Pre-compute a rotation cycle of placements; stripes reuse
+        // placements cyclically (strategies rotate by stripe index).
+        let cycle: Vec<Placement> = (0..topo.clusters.max(1))
+            .map(|i| strategy.place(&code_cl, &topo, i))
+            .collect();
+        let name = strategy.name();
+        Metadata {
+            placements: Vec::new(),
+            blocks: HashMap::new(),
+            by_node: HashMap::new(),
+            strategy_name: name,
+            template: PlacementTemplate {
+                n,
+                placements_fn: Box::new(move |idx| cycle[idx % cycle.len()].clone()),
+            },
+        }
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy_name
+    }
+
+    pub fn stripe_count(&self) -> usize {
+        self.placements.len()
+    }
+
+    /// Register a new stripe with its block data; returns its id.
+    pub fn add_stripe(&mut self, blocks: Vec<Arc<Vec<u8>>>) -> StripeId {
+        assert_eq!(blocks.len(), self.template.n, "stripe must have n blocks");
+        let id = self.placements.len();
+        let placement = (self.template.placements_fn)(id);
+        for (b, data) in blocks.into_iter().enumerate() {
+            let node = placement.node_of[b];
+            self.blocks.insert((id, b), data);
+            self.by_node.entry(node).or_default().push((id, b));
+        }
+        self.placements.push(placement);
+        id
+    }
+
+    pub fn placement(&self, stripe: StripeId) -> &Placement {
+        &self.placements[stripe]
+    }
+
+    /// Node hosting a block.
+    pub fn node_of(&self, stripe: StripeId, block: usize) -> usize {
+        self.placements[stripe].node_of[block]
+    }
+
+    /// Cluster hosting a block.
+    pub fn cluster_of(&self, stripe: StripeId, block: usize) -> usize {
+        self.placements[stripe].cluster_of[block]
+    }
+
+    /// Block bytes (ground truth).
+    pub fn block_data(&self, stripe: StripeId, block: usize) -> Arc<Vec<u8>> {
+        self.blocks[&(stripe, block)].clone()
+    }
+
+    /// All (stripe, block) pairs on a node.
+    pub fn blocks_on_node(&self, node: usize) -> Vec<(StripeId, usize)> {
+        self.by_node.get(&node).cloned().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::spec::{CodeFamily, Scheme};
+    use crate::placement::UniLrcPlace;
+
+    fn meta() -> Metadata {
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        let topo = Topology::new(6, 16);
+        let mut m = Metadata::new(&code, &UniLrcPlace, topo);
+        for s in 0..4 {
+            let blocks: Vec<Arc<Vec<u8>>> =
+                (0..42).map(|b| Arc::new(vec![(s * 42 + b) as u8; 8])).collect();
+            m.add_stripe(blocks);
+        }
+        m
+    }
+
+    #[test]
+    fn stripes_register_and_lookup() {
+        let m = meta();
+        assert_eq!(m.stripe_count(), 4);
+        assert_eq!(m.block_data(2, 5)[0], (2 * 42 + 5) as u8);
+        let node = m.node_of(1, 3);
+        assert!(m.blocks_on_node(node).contains(&(1, 3)));
+    }
+
+    #[test]
+    fn rotation_spreads_stripes() {
+        let m = meta();
+        // stripe 0 and 1 place block 0 in different clusters
+        assert_ne!(m.cluster_of(0, 0), m.cluster_of(1, 0));
+        // rotation cycle wraps: 0 and 6-th would match (we made 4 stripes)
+        assert_eq!(m.cluster_of(0, 0), m.placement(0).cluster_of[0]);
+    }
+
+    #[test]
+    fn reverse_index_complete() {
+        let m = meta();
+        let total: usize = (0..6 * 16).map(|n| m.blocks_on_node(n).len()).sum();
+        assert_eq!(total, 4 * 42);
+    }
+}

@@ -1,0 +1,359 @@
+//! The coordinator — §4.2's prototype brain, and the assembly point of the
+//! whole DSS: metadata (stripe → placement, block → node), failure state,
+//! and the [`Dss`] facade the client drives.
+//!
+//! The data plane is real (blocks are real buffers, coding runs through a
+//! [`CodingEngine`] — PJRT artifacts or native GF); the network is the
+//! virtual-time [`NetSim`] (DESIGN.md §5 substitution).
+//! Operations return latencies on the virtual clock with the measured
+//! coding time folded in.
+
+pub mod metadata;
+
+pub use metadata::{Metadata, StripeId};
+
+use crate::codes::Code;
+use crate::placement::{PlacementStrategy, Topology};
+use crate::proxy::{OpOutcome, ProxyCtx};
+use crate::prng::Prng;
+use crate::runtime::CodingEngine;
+use crate::sim::{Endpoint, NetConfig, NetSim};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// System-level configuration (§6 Setup).
+#[derive(Debug, Clone, Copy)]
+pub struct DssConfig {
+    /// Block size in bytes (paper: 1 MB; benches default smaller).
+    pub block_size: usize,
+    /// ECWide-style gateway aggregation of cross-cluster repair traffic.
+    pub aggregated: bool,
+    /// Fold measured (real) coding time into the virtual clock. On for
+    /// experiments; off for deterministic tests.
+    pub time_compute: bool,
+}
+
+impl Default for DssConfig {
+    fn default() -> Self {
+        DssConfig { block_size: 1 << 20, aggregated: true, time_compute: true }
+    }
+}
+
+/// Result of a timed client operation.
+#[derive(Debug, Clone, Copy)]
+pub struct OpResult {
+    /// Virtual seconds from issue to completion.
+    pub latency: f64,
+    /// Bytes delivered to the requester.
+    pub bytes: usize,
+    /// Cross-cluster bytes moved by this op.
+    pub cross_bytes: u64,
+}
+
+/// Full-node recovery summary.
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryResult {
+    pub blocks: usize,
+    pub bytes: usize,
+    pub seconds: f64,
+    pub cross_bytes: u64,
+}
+
+impl RecoveryResult {
+    pub fn throughput_mib_s(&self) -> f64 {
+        self.bytes as f64 / self.seconds / (1 << 20) as f64
+    }
+}
+
+/// The assembled distributed storage system.
+pub struct Dss {
+    pub code: Code,
+    pub topo: Topology,
+    pub net: NetSim,
+    pub cfg: DssConfig,
+    engine: Arc<dyn CodingEngine>,
+    meta: Metadata,
+    failed: HashSet<usize>,
+    clock: f64,
+}
+
+impl Dss {
+    /// Build a DSS for `code` placed by `strategy` on `topo`.
+    pub fn new(
+        code: Code,
+        strategy: &dyn PlacementStrategy,
+        topo: Topology,
+        net_cfg: NetConfig,
+        engine: Arc<dyn CodingEngine>,
+        cfg: DssConfig,
+    ) -> Dss {
+        let meta = Metadata::new(&code, strategy, topo);
+        Dss {
+            code,
+            topo,
+            net: NetSim::new(topo, net_cfg),
+            cfg,
+            engine,
+            meta,
+            failed: HashSet::new(),
+            clock: 0.0,
+        }
+    }
+
+    pub fn metadata(&self) -> &Metadata {
+        &self.meta
+    }
+
+    pub fn engine(&self) -> &Arc<dyn CodingEngine> {
+        &self.engine
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Reset the virtual clock and network meters (between experiment
+    /// phases); stored data and failure state are preserved.
+    pub fn quiesce(&mut self) {
+        self.clock = 0.0;
+        self.net.reset();
+    }
+
+    // ------------------------------------------------------------- ingest
+
+    /// Create `count` stripes of random data; encode and store (setup path,
+    /// untimed — the experiments of §6 measure reads and recovery).
+    pub fn ingest_random_stripes(&mut self, count: usize, prng: &mut Prng) -> anyhow::Result<()> {
+        for _ in 0..count {
+            let data: Vec<Vec<u8>> =
+                (0..self.code.k()).map(|_| prng.bytes(self.cfg.block_size)).collect();
+            self.ingest_stripe(data)?;
+        }
+        Ok(())
+    }
+
+    /// Encode one stripe of `k` data blocks and store all `n` blocks.
+    pub fn ingest_stripe(&mut self, data: Vec<Vec<u8>>) -> anyhow::Result<StripeId> {
+        anyhow::ensure!(data.len() == self.code.k(), "need k data blocks");
+        anyhow::ensure!(
+            data.iter().all(|b| b.len() == self.cfg.block_size),
+            "blocks must match configured block size"
+        );
+        let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let parities = self.engine.encode(&self.code, &drefs)?;
+        let blocks: Vec<Arc<Vec<u8>>> = data.into_iter().chain(parities).map(Arc::new).collect();
+        Ok(self.meta.add_stripe(blocks))
+    }
+
+    // ------------------------------------------------------------ failures
+
+    /// Mark a node failed. Block buffers stay in the metadata store — they
+    /// are the ground truth every repair is verified against; a failed
+    /// node's blocks are simply unreadable by operations.
+    pub fn fail_node(&mut self, node: usize) {
+        assert!(node < self.topo.total_nodes());
+        self.failed.insert(node);
+    }
+
+    pub fn heal_node(&mut self, node: usize) {
+        self.failed.remove(&node);
+    }
+
+    pub fn failed_nodes(&self) -> &HashSet<usize> {
+        &self.failed
+    }
+
+    fn is_failed(&self, stripe: StripeId, block: usize) -> bool {
+        self.failed.contains(&self.meta.node_of(stripe, block))
+    }
+
+    /// Failed block indices of a stripe.
+    pub fn failed_blocks(&self, stripe: StripeId) -> Vec<usize> {
+        (0..self.code.n()).filter(|&b| self.is_failed(stripe, b)).collect()
+    }
+
+    fn proxy_ctx(&mut self) -> ProxyCtx<'_> {
+        ProxyCtx {
+            code: &self.code,
+            meta: &self.meta,
+            net: &mut self.net,
+            engine: &*self.engine,
+            aggregated: self.cfg.aggregated,
+            block_size: self.cfg.block_size,
+            time_compute: self.cfg.time_compute,
+        }
+    }
+
+    // ------------------------------------------------------------- reads
+
+    /// Normal read (§4.1): fetch all `k` data blocks of a stripe to the
+    /// client, in parallel. Returns completion latency.
+    pub fn normal_read(&mut self, stripe: StripeId) -> anyhow::Result<OpResult> {
+        let t0 = self.clock;
+        let cross0 = self.net.cross_bytes;
+        let bs = self.cfg.block_size;
+        anyhow::ensure!(
+            self.failed_blocks(stripe).iter().all(|&b| b >= self.code.k()),
+            "normal read on a stripe with failed data blocks — use degraded_read"
+        );
+        let mut done = t0;
+        for b in 0..self.code.k() {
+            let node = self.meta.node_of(stripe, b);
+            let t = self.net.transfer(t0, Endpoint::Node(node), Endpoint::Client, bs);
+            done = done.max(t);
+        }
+        self.clock = done;
+        Ok(OpResult {
+            latency: done - t0,
+            bytes: bs * self.code.k(),
+            cross_bytes: self.net.cross_bytes - cross0,
+        })
+    }
+
+    /// Read an arbitrary subset of live blocks to the client in parallel
+    /// (object reads of Experiment 6).
+    pub fn read_blocks(&mut self, stripe: StripeId, blocks: &[usize]) -> anyhow::Result<OpResult> {
+        let t0 = self.clock;
+        let cross0 = self.net.cross_bytes;
+        let bs = self.cfg.block_size;
+        let mut done = t0;
+        for &b in blocks {
+            anyhow::ensure!(!self.is_failed(stripe, b), "block {b} is failed");
+            let node = self.meta.node_of(stripe, b);
+            let t = self.net.transfer(t0, Endpoint::Node(node), Endpoint::Client, bs);
+            done = done.max(t);
+        }
+        self.clock = done;
+        Ok(OpResult {
+            latency: done - t0,
+            bytes: bs * blocks.len(),
+            cross_bytes: self.net.cross_bytes - cross0,
+        })
+    }
+
+    /// Degraded read (§4.1): client requests one *unavailable* data block;
+    /// the home proxy repairs it from surviving blocks and ships it.
+    pub fn degraded_read(&mut self, stripe: StripeId, block: usize) -> anyhow::Result<OpResult> {
+        let t0 = self.clock;
+        let cross0 = self.net.cross_bytes;
+        let done = self.degraded_read_at(t0, stripe, block)?;
+        self.clock = done;
+        Ok(OpResult {
+            latency: done - t0,
+            bytes: self.cfg.block_size,
+            cross_bytes: self.net.cross_bytes - cross0,
+        })
+    }
+
+    /// Degraded-read path starting at a fixed virtual instant; returns the
+    /// completion time (used by [`Self::parallel_read`] fan-outs).
+    fn degraded_read_at(&mut self, t0: f64, stripe: StripeId, block: usize) -> anyhow::Result<f64> {
+        anyhow::ensure!(block < self.code.k(), "degraded read targets a data block");
+        let bs = self.cfg.block_size;
+        let erased = self.failed_blocks(stripe);
+        anyhow::ensure!(erased.contains(&block), "block {block} is not failed");
+
+        let mut ctx = self.proxy_ctx();
+        let OpOutcome { ready_at, rebuilt, home } = ctx.repair_block(t0, stripe, block, &erased)?;
+        // verify against ground truth, then ship to the client
+        anyhow::ensure!(
+            rebuilt.as_slice() == self.meta.block_data(stripe, block).as_slice(),
+            "degraded read returned corrupt bytes"
+        );
+        Ok(self.net.transfer(ready_at, Endpoint::Proxy(home), Endpoint::Client, bs))
+    }
+
+    /// Parallel object read (Experiment 6): fetch every listed block at the
+    /// same instant — healthy blocks straight from their nodes, failed data
+    /// blocks through the degraded path — and complete when the slowest
+    /// arrives. This is where placement load-imbalance shows up.
+    pub fn parallel_read(&mut self, blocks: &[(StripeId, usize)]) -> anyhow::Result<OpResult> {
+        let t0 = self.clock;
+        let cross0 = self.net.cross_bytes;
+        let bs = self.cfg.block_size;
+        let mut done = t0;
+        for &(stripe, block) in blocks {
+            let t = if self.is_failed(stripe, block) {
+                self.degraded_read_at(t0, stripe, block)?
+            } else {
+                let node = self.meta.node_of(stripe, block);
+                self.net.transfer(t0, Endpoint::Node(node), Endpoint::Client, bs)
+            };
+            done = done.max(t);
+        }
+        self.clock = done;
+        Ok(OpResult {
+            latency: done - t0,
+            bytes: bs * blocks.len(),
+            cross_bytes: self.net.cross_bytes - cross0,
+        })
+    }
+
+    /// Reconstruction (§4.1): rebuild one failed block (data or parity)
+    /// onto a live spare node in its home cluster.
+    pub fn reconstruct(&mut self, stripe: StripeId, block: usize) -> anyhow::Result<OpResult> {
+        let t0 = self.clock;
+        let r = self.reconstruct_at(t0, stripe, block)?;
+        self.clock = t0 + r.latency;
+        Ok(r)
+    }
+
+    fn reconstruct_at(
+        &mut self,
+        t0: f64,
+        stripe: StripeId,
+        block: usize,
+    ) -> anyhow::Result<OpResult> {
+        let cross0 = self.net.cross_bytes;
+        let bs = self.cfg.block_size;
+        let erased = self.failed_blocks(stripe);
+        anyhow::ensure!(erased.contains(&block), "block {block} is not failed");
+
+        let mut ctx = self.proxy_ctx();
+        let OpOutcome { ready_at, rebuilt, home } = ctx.repair_block(t0, stripe, block, &erased)?;
+        anyhow::ensure!(
+            rebuilt.as_slice() == self.meta.block_data(stripe, block).as_slice(),
+            "reconstruction produced corrupt bytes"
+        );
+        // write to a live spare node in the home cluster (or any cluster)
+        let spare = self.spare_node(stripe, home)?;
+        let done = self.net.transfer(ready_at, Endpoint::Proxy(home), Endpoint::Node(spare), bs);
+        Ok(OpResult { latency: done - t0, bytes: bs, cross_bytes: self.net.cross_bytes - cross0 })
+    }
+
+    /// Pick a live node in `cluster` not already hosting a block of the
+    /// stripe; falls back to any live node elsewhere.
+    fn spare_node(&self, stripe: StripeId, cluster: usize) -> anyhow::Result<usize> {
+        let used: HashSet<usize> =
+            (0..self.code.n()).map(|b| self.meta.node_of(stripe, b)).collect();
+        let free = |n: &usize| !used.contains(n) && !self.failed.contains(n);
+        self.topo
+            .nodes_of(cluster)
+            .find(free)
+            .or_else(|| (0..self.topo.total_nodes()).find(free))
+            .ok_or_else(|| anyhow::anyhow!("no spare node available"))
+    }
+
+    /// Full-node recovery (§6 Exp 3): reconstruct every block the failed
+    /// node hosted, all repairs issued in parallel at t=0.
+    pub fn recover_node(&mut self, node: usize) -> anyhow::Result<RecoveryResult> {
+        anyhow::ensure!(self.failed.contains(&node), "node {node} is not failed");
+        let lost = self.meta.blocks_on_node(node);
+        let t0 = self.clock;
+        let cross0 = self.net.cross_bytes;
+        let mut done = t0;
+        let mut bytes = 0usize;
+        for (stripe, block) in &lost {
+            let r = self.reconstruct_at(t0, *stripe, *block)?;
+            done = done.max(t0 + r.latency);
+            bytes += r.bytes;
+        }
+        self.clock = done;
+        Ok(RecoveryResult {
+            blocks: lost.len(),
+            bytes,
+            seconds: done - t0,
+            cross_bytes: self.net.cross_bytes - cross0,
+        })
+    }
+}

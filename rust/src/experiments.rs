@@ -1,0 +1,322 @@
+//! The §6 system experiments (Experiments 1–6), shared by the CLI
+//! (`unilrc experiment N`) and the bench harness (`cargo bench`).
+//!
+//! Each driver builds a DSS per code family on the virtual testbed
+//! (DESIGN.md §5) and reports the same quantity the paper's figure plots.
+
+use crate::client::workload::{Workload, WorkloadSpec};
+use crate::client::{cdf_points, mean};
+use crate::codes::spec::{CodeFamily, Scheme};
+use crate::coordinator::{Dss, DssConfig};
+use crate::placement::{EcWide, PlacementStrategy, Topology, UniLrcPlace};
+use crate::prng::Prng;
+use crate::runtime::{CodingEngine, NativeCoder, PjrtCoder};
+use crate::sim::NetConfig;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Experiment configuration (defaults shrink the paper's 1 MB / 40 GB
+/// scale to bench-friendly sizes; all knobs are CLI-exposed).
+#[derive(Clone)]
+pub struct ExpConfig {
+    pub scheme: Scheme,
+    pub block_size: usize,
+    pub stripes: usize,
+    pub cross_gbps: f64,
+    pub aggregated: bool,
+    pub engine: Arc<dyn CodingEngine>,
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            scheme: Scheme::S42,
+            block_size: 256 * 1024,
+            stripes: 4,
+            cross_gbps: 1.0,
+            aggregated: true,
+            engine: Arc::new(NativeCoder),
+            seed: 42,
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Select the PJRT backend (requires `make artifacts`).
+    pub fn with_pjrt(mut self) -> Result<Self> {
+        self.engine = Arc::new(PjrtCoder::new(None)?);
+        Ok(self)
+    }
+}
+
+/// Build the per-family DSS: UniLRC on its native placement, baselines on
+/// ECWide, each with exactly the clusters it needs (§6 Setup).
+pub fn build_dss(fam: CodeFamily, cfg: &ExpConfig) -> Dss {
+    let code = cfg.scheme.build(fam);
+    let (strategy, topo) = strategy_and_topo(fam, &code);
+    Dss::new(
+        code,
+        strategy.as_ref(),
+        topo,
+        NetConfig::default().with_cross_gbps(cfg.cross_gbps),
+        cfg.engine.clone(),
+        DssConfig { block_size: cfg.block_size, aggregated: cfg.aggregated, time_compute: true },
+    )
+}
+
+/// Placement strategy + a topology sized to its largest per-cluster
+/// chunk (plus spare nodes for reconstruction targets).
+pub fn strategy_and_topo(
+    fam: CodeFamily,
+    code: &crate::codes::Code,
+) -> (Box<dyn PlacementStrategy>, Topology) {
+    match fam {
+        CodeFamily::UniLrc => {
+            let clusters = code.groups().len();
+            let biggest = code.groups().iter().map(|g| g.members.len()).max().unwrap();
+            (Box::new(UniLrcPlace), Topology::new(clusters, biggest + 2))
+        }
+        _ => {
+            let chunks = EcWide::chunks(code);
+            let biggest = chunks.iter().map(|c| c.len()).max().unwrap();
+            (Box::new(EcWide), Topology::new(chunks.len(), biggest + 2))
+        }
+    }
+}
+
+/// One (family, value) result row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub family: CodeFamily,
+    pub value: f64,
+    pub unit: &'static str,
+}
+
+fn mib(bytes: usize, secs: f64) -> f64 {
+    bytes as f64 / secs / (1 << 20) as f64
+}
+
+/// Experiment 1 — normal-read throughput (Fig 10(a)), MiB/s.
+pub fn exp1_normal_read(cfg: &ExpConfig) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for fam in CodeFamily::paper_baselines() {
+        let mut prng = Prng::new(cfg.seed);
+        let mut dss = build_dss(fam, cfg);
+        dss.ingest_random_stripes(cfg.stripes, &mut prng)?;
+        let mut tputs = Vec::new();
+        for s in 0..cfg.stripes {
+            let r = dss.normal_read(s)?;
+            tputs.push(mib(r.bytes, r.latency));
+            dss.quiesce();
+        }
+        rows.push(Row { family: fam, value: mean(&tputs), unit: "MiB/s" });
+    }
+    Ok(rows)
+}
+
+/// Experiment 2 — degraded-read latency (Fig 10(b)), milliseconds.
+pub fn exp2_degraded_read(cfg: &ExpConfig) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for fam in CodeFamily::paper_baselines() {
+        let mut prng = Prng::new(cfg.seed);
+        let mut dss = build_dss(fam, cfg);
+        dss.ingest_random_stripes(1, &mut prng)?;
+        let mut lats = Vec::new();
+        for target in 0..dss.code.k() {
+            let node = dss.metadata().node_of(0, target);
+            dss.fail_node(node);
+            let r = dss.degraded_read(0, target)?;
+            lats.push(r.latency * 1e3);
+            dss.heal_node(node);
+            dss.quiesce();
+        }
+        rows.push(Row { family: fam, value: mean(&lats), unit: "ms" });
+    }
+    Ok(rows)
+}
+
+/// Experiment 3a — single-block recovery throughput (Fig 10(c)), MiB/s.
+pub fn exp3_reconstruction(cfg: &ExpConfig) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for fam in CodeFamily::paper_baselines() {
+        let mut prng = Prng::new(cfg.seed);
+        let mut dss = build_dss(fam, cfg);
+        dss.ingest_random_stripes(1, &mut prng)?;
+        let mut tputs = Vec::new();
+        for target in 0..dss.code.n() {
+            let node = dss.metadata().node_of(0, target);
+            dss.fail_node(node);
+            let r = dss.reconstruct(0, target)?;
+            tputs.push(mib(r.bytes, r.latency));
+            dss.heal_node(node);
+            dss.quiesce();
+        }
+        rows.push(Row { family: fam, value: mean(&tputs), unit: "MiB/s" });
+    }
+    Ok(rows)
+}
+
+/// Experiment 3b — full-node recovery throughput (Fig 10(d)), MiB/s.
+pub fn exp3_node_recovery(cfg: &ExpConfig) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for fam in CodeFamily::paper_baselines() {
+        let mut prng = Prng::new(cfg.seed);
+        let mut dss = build_dss(fam, cfg);
+        dss.ingest_random_stripes(cfg.stripes, &mut prng)?;
+        let node = dss.metadata().node_of(0, 0);
+        dss.fail_node(node);
+        let r = dss.recover_node(node)?;
+        rows.push(Row { family: fam, value: r.throughput_mib_s(), unit: "MiB/s" });
+    }
+    Ok(rows)
+}
+
+/// Experiment 4 — reconstruction throughput vs cross-cluster bandwidth
+/// (Fig 11(a)): (gbps, per-family MiB/s).
+pub fn exp4_bandwidth(cfg: &ExpConfig, sweep: &[f64]) -> Result<Vec<(f64, Vec<Row>)>> {
+    let mut out = Vec::new();
+    for &gbps in sweep {
+        let mut c = cfg.clone();
+        c.cross_gbps = gbps;
+        out.push((gbps, exp3_reconstruction(&c)?));
+    }
+    Ok(out)
+}
+
+/// Experiment 5 — decoding (pure compute) throughput (Fig 11(b)), MiB/s:
+/// time the coding-library combine for a single-block repair, no network.
+pub fn exp5_decode(cfg: &ExpConfig) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for fam in CodeFamily::paper_baselines() {
+        let mut prng = Prng::new(cfg.seed);
+        let code = cfg.scheme.build(fam);
+        let data: Vec<Vec<u8>> = (0..code.k()).map(|_| prng.bytes(cfg.block_size)).collect();
+        let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let parities = cfg.engine.encode(&code, &drefs)?;
+        let stripe: Vec<&[u8]> =
+            drefs.iter().copied().chain(parities.iter().map(|v| v.as_slice())).collect();
+        let mut tputs = Vec::new();
+        for target in 0..code.n() {
+            let plan = code.repair_plan(target);
+            let srcs: Vec<&[u8]> = plan.sources.iter().map(|&s| stripe[s]).collect();
+            let t = std::time::Instant::now();
+            let out = if plan.xor_only() {
+                cfg.engine.fold(&srcs)?
+            } else {
+                cfg.engine.matmul(&[plan.coeffs.clone()], &srcs)?.pop().unwrap()
+            };
+            let dt = t.elapsed().as_secs_f64();
+            anyhow::ensure!(out.as_slice() == stripe[target], "decode mismatch");
+            tputs.push(mib(cfg.block_size, dt));
+        }
+        rows.push(Row { family: fam, value: mean(&tputs), unit: "MiB/s" });
+    }
+    Ok(rows)
+}
+
+/// Experiment 6 — production-workload latency CDFs (Fig 12).
+pub struct Exp6Result {
+    pub family: CodeFamily,
+    pub normal_mean_ms: f64,
+    pub degraded_mean_ms: f64,
+    pub normal_cdf: Vec<(f64, f64)>,
+    pub degraded_cdf: Vec<(f64, f64)>,
+}
+
+pub fn exp6_production(cfg: &ExpConfig, objects: usize, requests: usize) -> Result<Vec<Exp6Result>> {
+    let mut out = Vec::new();
+    for fam in CodeFamily::paper_baselines() {
+        let mut prng = Prng::new(cfg.seed);
+        let mut dss = build_dss(fam, cfg);
+        dss.ingest_random_stripes(cfg.stripes, &mut prng)?;
+        let wl = Workload::place_fit(&dss, WorkloadSpec::default(), objects, &mut prng);
+
+        // normal reads
+        let mut normal = Vec::new();
+        for i in 0..requests {
+            let obj = prng.gen_range(wl.objects.len());
+            let _ = i;
+            let r = wl.read_object(&mut dss, obj)?;
+            normal.push(r.latency * 1e3);
+            dss.quiesce();
+        }
+
+        // degrade one node, re-issue
+        let node = dss.metadata().node_of(0, 0);
+        dss.fail_node(node);
+        let mut degraded = Vec::new();
+        for _ in 0..requests {
+            let obj = prng.gen_range(wl.objects.len());
+            let r = wl.read_object(&mut dss, obj)?;
+            degraded.push(r.latency * 1e3);
+            dss.quiesce();
+        }
+
+        out.push(Exp6Result {
+            family: fam,
+            normal_mean_ms: mean(&normal),
+            degraded_mean_ms: mean(&degraded),
+            normal_cdf: cdf_points(&normal, 20),
+            degraded_cdf: cdf_points(&degraded, 20),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExpConfig {
+        ExpConfig { block_size: 16 * 1024, stripes: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn exp1_shape() {
+        let rows = exp1_normal_read(&tiny()).unwrap();
+        assert_eq!(rows.len(), 4);
+        let uni = rows.iter().find(|r| r.family == CodeFamily::UniLrc).unwrap().value;
+        let olrc = rows.iter().find(|r| r.family == CodeFamily::Olrc).unwrap().value;
+        assert!(uni >= olrc * 0.99, "UniLRC {uni} vs OLRC {olrc}");
+    }
+
+    #[test]
+    fn exp2_and_exp3_shapes() {
+        let lat = exp2_degraded_read(&tiny()).unwrap();
+        let uni = lat.iter().find(|r| r.family == CodeFamily::UniLrc).unwrap().value;
+        let olrc = lat.iter().find(|r| r.family == CodeFamily::Olrc).unwrap().value;
+        assert!(uni < olrc, "degraded latency: UniLRC {uni} < OLRC {olrc}");
+
+        let rec = exp3_reconstruction(&tiny()).unwrap();
+        let uni = rec.iter().find(|r| r.family == CodeFamily::UniLrc).unwrap().value;
+        for r in &rec {
+            assert!(uni >= r.value * 0.95, "{:?}", r.family);
+        }
+    }
+
+    #[test]
+    fn exp4_unilrc_flat_baselines_climb() {
+        // larger blocks so bandwidth (not the fixed RTT) dominates
+        let cfg = ExpConfig { block_size: 256 * 1024, stripes: 2, ..Default::default() };
+        let sweep = exp4_bandwidth(&cfg, &[0.5, 10.0]).unwrap();
+        let uni_lo = sweep[0].1.iter().find(|r| r.family == CodeFamily::UniLrc).unwrap().value;
+        let uni_hi = sweep[1].1.iter().find(|r| r.family == CodeFamily::UniLrc).unwrap().value;
+        let olrc_lo = sweep[0].1.iter().find(|r| r.family == CodeFamily::Olrc).unwrap().value;
+        let olrc_hi = sweep[1].1.iter().find(|r| r.family == CodeFamily::Olrc).unwrap().value;
+        assert!((uni_hi - uni_lo).abs() / uni_lo < 0.25, "UniLRC flat-ish");
+        assert!(olrc_hi > olrc_lo * 1.5, "OLRC climbs with bandwidth: {olrc_lo} -> {olrc_hi}");
+    }
+
+    #[test]
+    fn exp6_runs() {
+        let mut cfg = tiny();
+        cfg.stripes = 3;
+        let res = exp6_production(&cfg, 10, 8).unwrap();
+        assert_eq!(res.len(), 4);
+        for r in &res {
+            assert!(r.normal_mean_ms > 0.0);
+            assert!(r.degraded_mean_ms > 0.0);
+        }
+    }
+}

@@ -1,0 +1,451 @@
+//! Dense matrices over GF(2^8).
+//!
+//! Used for generator-matrix construction (§3.2), distance verification
+//! (Theorem 3.2 rank arguments) and multi-failure decoding (parity-check
+//! solves). These matrices are tiny (≤ a few hundred rows), so clarity wins
+//! over blocking; the wide per-byte work lives in [`super::slice`].
+
+use super::tables::{gf_div, gf_inv, gf_mul, gf_pow};
+use std::fmt;
+
+/// Row-major dense matrix over GF(2^8).
+#[derive(Clone, PartialEq, Eq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<u8>,
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zero(n, n);
+        for i in 0..n {
+            m.set(i, i, 1);
+        }
+        m
+    }
+
+    /// Build from nested rows (panics on ragged input).
+    pub fn from_rows(rows: &[Vec<u8>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    /// Vandermonde matrix `V[i][j] = points[j]^(start + i)` with `rows` rows.
+    ///
+    /// With `start = 0` this is the classical Vandermonde; the UniLRC
+    /// construction uses `start = 1` (rows g_j^1 .. g_j^{αz}, §3.2 Step 1).
+    pub fn vandermonde(rows: usize, points: &[u8], start: usize) -> Self {
+        let mut m = Matrix::zero(rows, points.len());
+        for i in 0..rows {
+            for (j, &p) in points.iter().enumerate() {
+                m.set(i, j, gf_pow(p, start + i));
+            }
+        }
+        m
+    }
+
+    /// Cauchy matrix `C[i][j] = 1 / (x_i + y_j)`; all `x_i`, `y_j` must be
+    /// pairwise distinct across both sets (checked).
+    pub fn cauchy(xs: &[u8], ys: &[u8]) -> Self {
+        let mut m = Matrix::zero(xs.len(), ys.len());
+        for (i, &x) in xs.iter().enumerate() {
+            for (j, &y) in ys.iter().enumerate() {
+                assert!(x != y, "cauchy: x and y sets intersect");
+                m.set(i, j, gf_inv(x ^ y));
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> u8 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: u8) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    pub fn row(&self, r: usize) -> &[u8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [u8] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Matrix product over GF(2^8).
+    pub fn mul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "dimension mismatch");
+        let mut out = Matrix::zero(self.rows, other.cols);
+        for i in 0..self.rows {
+            for l in 0..self.cols {
+                let a = self.get(i, l);
+                if a == 0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    let v = out.get(i, j) ^ gf_mul(a, other.get(l, j));
+                    out.set(i, j, v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn mul_vec(&self, v: &[u8]) -> Vec<u8> {
+        assert_eq!(self.cols, v.len(), "dimension mismatch");
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(v)
+                    .fold(0u8, |acc, (&a, &x)| acc ^ gf_mul(a, x))
+            })
+            .collect()
+    }
+
+    /// Vertical stack `[self; other]`.
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "column mismatch");
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Horizontal stack `[self | other]`.
+    pub fn hstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "row mismatch");
+        let mut out = Matrix::zero(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Select a subset of columns (in the given order).
+    pub fn select_cols(&self, cols: &[usize]) -> Matrix {
+        let mut out = Matrix::zero(self.rows, cols.len());
+        for i in 0..self.rows {
+            for (jj, &j) in cols.iter().enumerate() {
+                out.set(i, jj, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Select a subset of rows (in the given order).
+    pub fn select_rows(&self, rows: &[usize]) -> Matrix {
+        let mut out = Matrix::zero(rows.len(), self.cols);
+        for (ii, &i) in rows.iter().enumerate() {
+            out.row_mut(ii).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Rank via Gaussian elimination (on a copy).
+    pub fn rank(&self) -> usize {
+        let mut m = self.clone();
+        let mut rank = 0;
+        for col in 0..m.cols {
+            if rank == m.rows {
+                break;
+            }
+            // find pivot
+            let Some(p) = (rank..m.rows).find(|&r| m.get(r, col) != 0) else {
+                continue;
+            };
+            m.data.swap_chunks(rank, p, m.cols);
+            let inv = gf_inv(m.get(rank, col));
+            for j in col..m.cols {
+                let v = gf_mul(m.get(rank, j), inv);
+                m.set(rank, j, v);
+            }
+            for r in 0..m.rows {
+                if r != rank {
+                    let f = m.get(r, col);
+                    if f != 0 {
+                        for j in col..m.cols {
+                            let v = m.get(r, j) ^ gf_mul(f, m.get(rank, j));
+                            m.set(r, j, v);
+                        }
+                    }
+                }
+            }
+            rank += 1;
+        }
+        rank
+    }
+
+    /// Inverse via Gauss–Jordan. Returns `None` if singular.
+    pub fn invert(&self) -> Option<Matrix> {
+        assert_eq!(self.rows, self.cols, "inverse of non-square matrix");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = Matrix::identity(n);
+        for col in 0..n {
+            let p = (col..n).find(|&r| a.get(r, col) != 0)?;
+            a.data.swap_chunks(col, p, n);
+            inv.data.swap_chunks(col, p, n);
+            let piv = gf_inv(a.get(col, col));
+            for j in 0..n {
+                a.set(col, j, gf_mul(a.get(col, j), piv));
+                inv.set(col, j, gf_mul(inv.get(col, j), piv));
+            }
+            for r in 0..n {
+                if r != col {
+                    let f = a.get(r, col);
+                    if f != 0 {
+                        for j in 0..n {
+                            let va = a.get(r, j) ^ gf_mul(f, a.get(col, j));
+                            a.set(r, j, va);
+                            let vi = inv.get(r, j) ^ gf_mul(f, inv.get(col, j));
+                            inv.set(r, j, vi);
+                        }
+                    }
+                }
+            }
+        }
+        Some(inv)
+    }
+
+    /// Solve `A x = b` for square invertible `A` (convenience for small
+    /// decode systems). Returns `None` if singular.
+    pub fn solve(&self, b: &[u8]) -> Option<Vec<u8>> {
+        assert_eq!(self.rows, b.len());
+        Some(self.invert()?.mul_vec(b))
+    }
+
+    /// True if every entry of row `r` is 0 or 1 — the XOR-locality predicate
+    /// for a parity row (§2.3.3).
+    pub fn row_is_xor_only(&self, r: usize) -> bool {
+        self.row(r).iter().all(|&c| c <= 1)
+    }
+}
+
+/// Swap two equal-length row chunks inside one flat buffer.
+trait SwapChunks {
+    fn swap_chunks(&mut self, a: usize, b: usize, width: usize);
+}
+
+impl SwapChunks for Vec<u8> {
+    fn swap_chunks(&mut self, a: usize, b: usize, width: usize) {
+        if a == b {
+            return;
+        }
+        let (lo, hi) = (a.min(b), a.max(b));
+        let (left, right) = self.split_at_mut(hi * width);
+        left[lo * width..(lo + 1) * width].swap_with_slice(&mut right[..width]);
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows {
+            writeln!(f, "  {:3?}", self.row(i))?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// `count` pairwise-distinct nonzero field elements (powers of the
+/// generator) — the evaluation points for Vandermonde-based constructions.
+pub fn distinct_nonzero_points(count: usize) -> Vec<u8> {
+    assert!(count <= 255, "GF(2^8) has only 255 nonzero elements");
+    (0..count).map(|i| gf_pow(super::tables::GENERATOR, i)).collect()
+}
+
+/// Divide helper exposed for decoder pivoting tests.
+pub fn normalize_row(row: &mut [u8], pivot: u8) {
+    for v in row.iter_mut() {
+        *v = gf_div(*v, pivot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng;
+
+    fn random_matrix(p: &mut Prng, r: usize, c: usize) -> Matrix {
+        let mut m = Matrix::zero(r, c);
+        for i in 0..r {
+            for j in 0..c {
+                m.set(i, j, p.next_u32() as u8);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut p = Prng::new(1);
+        let m = random_matrix(&mut p, 5, 5);
+        assert_eq!(m.mul(&Matrix::identity(5)), m);
+        assert_eq!(Matrix::identity(5).mul(&m), m);
+    }
+
+    #[test]
+    fn vandermonde_full_rank() {
+        let pts = distinct_nonzero_points(20);
+        for rows in [1, 5, 10, 20] {
+            let v = Matrix::vandermonde(rows, &pts, 0);
+            assert_eq!(v.rank(), rows, "rows={rows}");
+            let v1 = Matrix::vandermonde(rows, &pts, 1);
+            assert_eq!(v1.rank(), rows, "start=1 rows={rows}");
+        }
+    }
+
+    #[test]
+    fn vandermonde_square_invertible_any_subset() {
+        let pts = distinct_nonzero_points(12);
+        let v = Matrix::vandermonde(6, &pts, 1);
+        let mut p = Prng::new(2);
+        for _ in 0..20 {
+            let cols = p.choose_distinct(12, 6);
+            let sq = v.select_cols(&cols);
+            assert!(sq.invert().is_some(), "cols={cols:?}");
+        }
+    }
+
+    #[test]
+    fn cauchy_any_square_submatrix_invertible() {
+        let xs: Vec<u8> = (1..=6).collect();
+        let ys: Vec<u8> = (10..=30).collect();
+        let c = Matrix::cauchy(&xs, &ys);
+        let mut p = Prng::new(3);
+        for size in 1..=6 {
+            for _ in 0..10 {
+                let rs = p.choose_distinct(xs.len(), size);
+                let cs = p.choose_distinct(ys.len(), size);
+                let sub = c.select_rows(&rs).select_cols(&cs);
+                assert!(sub.invert().is_some(), "size={size}");
+            }
+        }
+    }
+
+    #[test]
+    fn invert_roundtrip_random() {
+        let mut p = Prng::new(4);
+        let mut found = 0;
+        while found < 10 {
+            let m = random_matrix(&mut p, 8, 8);
+            if let Some(inv) = m.invert() {
+                assert_eq!(m.mul(&inv), Matrix::identity(8));
+                assert_eq!(inv.mul(&m), Matrix::identity(8));
+                found += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn singular_matrix_not_invertible() {
+        let mut m = Matrix::zero(3, 3);
+        m.set(0, 0, 1);
+        m.set(1, 1, 1);
+        // row 2 all-zero ⇒ singular
+        assert!(m.invert().is_none());
+        assert_eq!(m.rank(), 2);
+    }
+
+    #[test]
+    fn rank_of_duplicated_rows() {
+        let pts = distinct_nonzero_points(6);
+        let v = Matrix::vandermonde(3, &pts, 0);
+        let doubled = v.vstack(&v);
+        assert_eq!(doubled.rank(), 3);
+    }
+
+    #[test]
+    fn solve_matches_mul() {
+        let mut p = Prng::new(5);
+        loop {
+            let m = random_matrix(&mut p, 6, 6);
+            if let Some(_) = m.invert() {
+                let x: Vec<u8> = (0..6).map(|_| p.next_u32() as u8).collect();
+                let b = m.mul_vec(&x);
+                let solved = m.solve(&b).unwrap();
+                assert_eq!(solved, x);
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn mul_associative() {
+        let mut p = Prng::new(6);
+        let a = random_matrix(&mut p, 4, 5);
+        let b = random_matrix(&mut p, 5, 3);
+        let c = random_matrix(&mut p, 3, 6);
+        assert_eq!(a.mul(&b).mul(&c), a.mul(&b.mul(&c)));
+    }
+
+    #[test]
+    fn stack_and_select() {
+        let a = Matrix::from_rows(&[vec![1, 2], vec![3, 4]]);
+        let b = Matrix::from_rows(&[vec![5, 6]]);
+        let v = a.vstack(&b);
+        assert_eq!(v.rows(), 3);
+        assert_eq!(v.row(2), &[5, 6]);
+        let h = a.hstack(&Matrix::identity(2));
+        assert_eq!(h.row(0), &[1, 2, 1, 0]);
+        assert_eq!(h.select_cols(&[3, 0]).row(1), &[1, 3]);
+        assert_eq!(h.select_rows(&[1]).row(0), &[3, 4, 0, 1]);
+    }
+
+    #[test]
+    fn xor_only_rows() {
+        let m = Matrix::from_rows(&[vec![1, 0, 1, 1], vec![1, 2, 0, 1]]);
+        assert!(m.row_is_xor_only(0));
+        assert!(!m.row_is_xor_only(1));
+    }
+
+    #[test]
+    fn mul_vec_matches_mul() {
+        let mut p = Prng::new(7);
+        let m = random_matrix(&mut p, 5, 7);
+        let x: Vec<u8> = (0..7).map(|_| p.next_u32() as u8).collect();
+        let as_col = Matrix::from_rows(&x.iter().map(|&v| vec![v]).collect::<Vec<_>>());
+        let prod = m.mul(&as_col);
+        let v = m.mul_vec(&x);
+        for i in 0..5 {
+            assert_eq!(prod.get(i, 0), v[i]);
+        }
+    }
+
+    #[test]
+    fn distinct_points_are_distinct() {
+        let pts = distinct_nonzero_points(255);
+        let mut sorted = pts.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 255);
+        assert!(!pts.contains(&0));
+    }
+}

@@ -1,0 +1,20 @@
+//! GF(2^8) arithmetic substrate — the ISA-L analogue.
+//!
+//! Everything the coding layer needs over the field GF(2^8) with the
+//! standard polynomial `x^8 + x^4 + x^3 + x^2 + 1` (0x11D, the same field
+//! ISA-L and most storage systems use):
+//!
+//! * [`tables`] — scalar field ops backed by compile-time exp/log tables.
+//! * [`slice`] — the hot path: XOR and constant-multiply-accumulate over
+//!   byte slices (word-level SWAR XOR, nibble-table and bit-plane multiply).
+//! * [`matrix`] — dense matrices over GF(2^8): product, rank, inversion,
+//!   and structured constructors (Vandermonde, Cauchy) used by the code
+//!   constructions.
+
+pub mod matrix;
+pub mod slice;
+pub mod tables;
+
+pub use matrix::Matrix;
+pub use slice::{mul_acc_slice, mul_slice, xor_fold, xor_slice};
+pub use tables::{gf_div, gf_exp, gf_inv, gf_log, gf_mul, gf_pow};

@@ -1,0 +1,283 @@
+//! Slice-granularity GF(2^8) kernels — the coding hot path.
+//!
+//! These are the operations a proxy performs on 1 MB blocks, so they are the
+//! CPU analogue of the paper's ISA-L library (§2.3.3) and the subject of
+//! Figure 3(a)'s XOR-vs-MUL comparison:
+//!
+//! * [`xor_slice`] / [`xor_fold`] — pure-XOR coding (what *XOR locality*
+//!   buys): SWAR over `u64` words, memory-bound.
+//! * [`mul_slice`] / [`mul_acc_slice`] — multiply by a field constant:
+//!   split-nibble tables (the portable cousin of ISA-L's PSHUFB kernel).
+//!
+//! All kernels are alignment-agnostic and handle arbitrary lengths.
+
+use super::tables::gf_mul;
+
+/// `dst ^= src`, word-at-a-time.
+pub fn xor_slice(dst: &mut [u8], src: &[u8]) {
+    assert_eq!(dst.len(), src.len(), "xor_slice length mismatch");
+    // Split both into u64-aligned middles. chunks_exact compiles to clean
+    // vectorizable loops without unsafe.
+    let mut d = dst.chunks_exact_mut(8);
+    let mut s = src.chunks_exact(8);
+    for (dc, sc) in (&mut d).zip(&mut s) {
+        let x = u64::from_ne_bytes(dc.try_into().unwrap())
+            ^ u64::from_ne_bytes(sc.try_into().unwrap());
+        dc.copy_from_slice(&x.to_ne_bytes());
+    }
+    for (db, sb) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *db ^= *sb;
+    }
+}
+
+/// XOR-fold many sources into `dst` (which is overwritten):
+/// `dst = srcs[0] ^ srcs[1] ^ ...`. This is the entire decode path for a
+/// UniLRC single-block repair.
+pub fn xor_fold(dst: &mut [u8], srcs: &[&[u8]]) {
+    assert!(!srcs.is_empty(), "xor_fold needs at least one source");
+    dst.copy_from_slice(srcs[0]);
+    for s in &srcs[1..] {
+        xor_slice(dst, s);
+    }
+}
+
+/// Per-constant split-nibble tables: `lo[x & 0xF] ^ hi[x >> 4] = c·x`.
+#[derive(Clone, Copy)]
+pub struct NibbleTables {
+    pub lo: [u8; 16],
+    pub hi: [u8; 16],
+}
+
+impl NibbleTables {
+    pub fn new(c: u8) -> Self {
+        let mut lo = [0u8; 16];
+        let mut hi = [0u8; 16];
+        for i in 0..16u8 {
+            lo[i as usize] = gf_mul(c, i);
+            hi[i as usize] = gf_mul(c, i << 4);
+        }
+        NibbleTables { lo, hi }
+    }
+
+    #[inline]
+    pub fn mul(&self, x: u8) -> u8 {
+        self.lo[(x & 0xF) as usize] ^ self.hi[(x >> 4) as usize]
+    }
+}
+
+/// `dst = c · src` over GF(2^8).
+pub fn mul_slice(c: u8, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(dst.len(), src.len(), "mul_slice length mismatch");
+    match c {
+        0 => dst.fill(0),
+        1 => dst.copy_from_slice(src),
+        _ => {
+            dst.fill(0);
+            mul_acc_swar(c, src, dst);
+        }
+    }
+}
+
+/// `dst ^= c · src` — the multiply-accumulate every matrix-style encode and
+/// decode is built from (one call per nonzero generator coefficient).
+///
+/// Fast path: SWAR bit-plane decomposition over `u64` words (§Perf):
+/// `c·x = ⊕_b bit_b(x)·(c·2^b)`, with each bit-plane widened to a byte mask
+/// by the carry-free `t·0xFF` trick — 4 ALU ops per byte, no table loads,
+/// the scalar-register shape of the same idea the L1 Pallas kernel uses on
+/// the TPU VPU. Tail bytes fall back to nibble tables.
+pub fn mul_acc_slice(c: u8, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(dst.len(), src.len(), "mul_acc_slice length mismatch");
+    match c {
+        0 => {}
+        1 => xor_slice(dst, src),
+        _ => mul_acc_swar(c, src, dst),
+    }
+}
+
+const LSB: u64 = 0x0101_0101_0101_0101;
+
+fn mul_acc_swar(c: u8, src: &[u8], dst: &mut [u8]) {
+    // plane constants: c·2^b broadcast to all 8 lanes
+    let mut cb = [0u64; 8];
+    for (b, w) in cb.iter_mut().enumerate() {
+        *w = (gf_mul(c, 1 << b) as u64).wrapping_mul(LSB);
+    }
+    let mut d = dst.chunks_exact_mut(8);
+    let mut s = src.chunks_exact(8);
+    for (dc, sc) in (&mut d).zip(&mut s) {
+        let w = u64::from_ne_bytes(sc.try_into().unwrap());
+        let mut acc = u64::from_ne_bytes(dc.try_into().unwrap());
+        // unrolled: mask_b = ((w>>b) & LSB)·0xFF stays inside each byte
+        // because each lane value is 0 or 1.
+        acc ^= ((w & LSB).wrapping_mul(0xFF)) & cb[0];
+        acc ^= (((w >> 1) & LSB).wrapping_mul(0xFF)) & cb[1];
+        acc ^= (((w >> 2) & LSB).wrapping_mul(0xFF)) & cb[2];
+        acc ^= (((w >> 3) & LSB).wrapping_mul(0xFF)) & cb[3];
+        acc ^= (((w >> 4) & LSB).wrapping_mul(0xFF)) & cb[4];
+        acc ^= (((w >> 5) & LSB).wrapping_mul(0xFF)) & cb[5];
+        acc ^= (((w >> 6) & LSB).wrapping_mul(0xFF)) & cb[6];
+        acc ^= (((w >> 7) & LSB).wrapping_mul(0xFF)) & cb[7];
+        dc.copy_from_slice(&acc.to_ne_bytes());
+    }
+    let t = NibbleTables::new(c);
+    for (db, &sb) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *db ^= t.mul(sb);
+    }
+}
+
+/// Matrix-style coding primitive: given `rows × cols` coefficients and `cols`
+/// equal-length source slices, compute each output row `i` as
+/// `⊕_j coeff[i][j] · src[j]`. Outputs must be pre-sized to the block length.
+///
+/// This one function implements encode (coefficients = parity submatrix) and
+/// multi-failure decode (coefficients = inverted repair matrix).
+pub fn gf_matmul_blocks(coeff: &[&[u8]], srcs: &[&[u8]], outs: &mut [Vec<u8>]) {
+    assert_eq!(coeff.len(), outs.len(), "row count mismatch");
+    let block = srcs.first().map_or(0, |s| s.len());
+    for (row, out) in coeff.iter().zip(outs.iter_mut()) {
+        assert_eq!(row.len(), srcs.len(), "column count mismatch");
+        assert_eq!(out.len(), block, "output block size mismatch");
+        out.fill(0);
+    }
+    // Source-major order (§Perf): each source block stays cache-hot while
+    // it is scattered into all output rows, instead of being re-streamed
+    // from memory once per row.
+    for (j, src) in srcs.iter().enumerate() {
+        for (row, out) in coeff.iter().zip(outs.iter_mut()) {
+            mul_acc_slice(row[j], src, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng;
+
+    fn ref_mul_slice(c: u8, src: &[u8]) -> Vec<u8> {
+        src.iter().map(|&x| gf_mul(c, x)).collect()
+    }
+
+    #[test]
+    fn xor_slice_matches_bytewise() {
+        let mut p = Prng::new(1);
+        for len in [0, 1, 7, 8, 9, 63, 64, 65, 1000, 4096] {
+            let a = p.bytes(len);
+            let b = p.bytes(len);
+            let mut d = a.clone();
+            xor_slice(&mut d, &b);
+            let expect: Vec<u8> = a.iter().zip(&b).map(|(x, y)| x ^ y).collect();
+            assert_eq!(d, expect, "len={len}");
+        }
+    }
+
+    #[test]
+    fn xor_is_involution() {
+        let mut p = Prng::new(2);
+        let a = p.bytes(513);
+        let b = p.bytes(513);
+        let mut d = a.clone();
+        xor_slice(&mut d, &b);
+        xor_slice(&mut d, &b);
+        assert_eq!(d, a);
+    }
+
+    #[test]
+    fn xor_fold_many() {
+        let mut p = Prng::new(3);
+        let srcs: Vec<Vec<u8>> = (0..7).map(|_| p.bytes(129)).collect();
+        let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0u8; 129];
+        xor_fold(&mut out, &refs);
+        let mut expect = vec![0u8; 129];
+        for s in &srcs {
+            for (e, &x) in expect.iter_mut().zip(s) {
+                *e ^= x;
+            }
+        }
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn nibble_tables_match_gf_mul_exhaustive() {
+        for c in 0..=255u8 {
+            let t = NibbleTables::new(c);
+            for x in 0..=255u8 {
+                assert_eq!(t.mul(x), gf_mul(c, x), "c={c} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_slice_matches_scalar() {
+        let mut p = Prng::new(4);
+        let src = p.bytes(777);
+        for c in [0u8, 1, 2, 3, 0x1D, 0xFF, 142] {
+            let mut dst = vec![0u8; 777];
+            mul_slice(c, &src, &mut dst);
+            assert_eq!(dst, ref_mul_slice(c, &src), "c={c}");
+        }
+    }
+
+    #[test]
+    fn mul_acc_slice_accumulates() {
+        let mut p = Prng::new(5);
+        let src = p.bytes(300);
+        let init = p.bytes(300);
+        for c in [0u8, 1, 97] {
+            let mut dst = init.clone();
+            mul_acc_slice(c, &src, &mut dst);
+            let expect: Vec<u8> = init
+                .iter()
+                .zip(&src)
+                .map(|(&d, &s)| d ^ gf_mul(c, s))
+                .collect();
+            assert_eq!(dst, expect, "c={c}");
+        }
+    }
+
+    #[test]
+    fn mul_slice_is_linear() {
+        // c·(a ⊕ b) = c·a ⊕ c·b on slices
+        let mut p = Prng::new(6);
+        let a = p.bytes(256);
+        let b = p.bytes(256);
+        let c = 0x53;
+        let mut ab = a.clone();
+        xor_slice(&mut ab, &b);
+        let mut left = vec![0u8; 256];
+        mul_slice(c, &ab, &mut left);
+        let mut ra = vec![0u8; 256];
+        let mut rb = vec![0u8; 256];
+        mul_slice(c, &a, &mut ra);
+        mul_slice(c, &b, &mut rb);
+        xor_slice(&mut ra, &rb);
+        assert_eq!(left, ra);
+    }
+
+    #[test]
+    fn gf_matmul_blocks_small() {
+        // 2x3 coefficient matrix against hand-computed scalar result.
+        let mut p = Prng::new(7);
+        let srcs: Vec<Vec<u8>> = (0..3).map(|_| p.bytes(64)).collect();
+        let srefs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+        let c0 = [1u8, 2, 3];
+        let c1 = [0u8, 255, 7];
+        let mut outs = vec![vec![0u8; 64]; 2];
+        gf_matmul_blocks(&[&c0, &c1], &srefs, &mut outs);
+        for b in 0..64 {
+            let e0 = gf_mul(1, srcs[0][b]) ^ gf_mul(2, srcs[1][b]) ^ gf_mul(3, srcs[2][b]);
+            let e1 = gf_mul(255, srcs[1][b]) ^ gf_mul(7, srcs[2][b]);
+            assert_eq!(outs[0][b], e0);
+            assert_eq!(outs[1][b], e1);
+        }
+    }
+
+    #[test]
+    fn gf_matmul_blocks_empty_sources() {
+        let mut outs: Vec<Vec<u8>> = vec![];
+        gf_matmul_blocks(&[], &[], &mut outs);
+        assert!(outs.is_empty());
+    }
+}

@@ -1,0 +1,224 @@
+//! Scalar GF(2^8) arithmetic over the polynomial 0x11D.
+//!
+//! Exp/log tables are built at compile time (`const fn`), so field ops are
+//! branch-light table lookups with zero startup cost.
+
+/// Field polynomial: x^8 + x^4 + x^3 + x^2 + 1.
+pub const POLY: u16 = 0x11D;
+
+/// Multiplicative generator of GF(2^8) under 0x11D.
+pub const GENERATOR: u8 = 2;
+
+const fn build_exp() -> [u8; 512] {
+    // exp[i] = GENERATOR^i; doubled length so mul can skip the mod-255.
+    let mut exp = [0u8; 512];
+    let mut x: u16 = 1;
+    let mut i = 0;
+    while i < 255 {
+        exp[i] = x as u8;
+        exp[i + 255] = x as u8;
+        x <<= 1;
+        if x & 0x100 != 0 {
+            x ^= POLY;
+        }
+        i += 1;
+    }
+    // exp[510..512] never read (max index is 254+254=508).
+    exp[510] = exp[0];
+    exp[511] = exp[1];
+    exp
+}
+
+const fn build_log(exp: &[u8; 512]) -> [u8; 256] {
+    let mut log = [0u8; 256];
+    let mut i = 0;
+    while i < 255 {
+        log[exp[i] as usize] = i as u8;
+        i += 1;
+    }
+    log // log[0] is 0 by convention and must never be used.
+}
+
+/// `EXP[i] = g^i` for `i in 0..510` (doubled to avoid a mod in `gf_mul`).
+pub const EXP: [u8; 512] = build_exp();
+/// `LOG[x] = log_g(x)` for nonzero `x`.
+pub const LOG: [u8; 256] = build_log(&EXP);
+
+/// Field multiplication.
+#[inline]
+pub fn gf_mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        0
+    } else {
+        EXP[LOG[a as usize] as usize + LOG[b as usize] as usize]
+    }
+}
+
+/// Field exponentiation `g^i` of the generator.
+#[inline]
+pub fn gf_exp(i: usize) -> u8 {
+    EXP[i % 255]
+}
+
+/// Discrete log (panics on 0).
+#[inline]
+pub fn gf_log(x: u8) -> u8 {
+    assert!(x != 0, "log of zero");
+    LOG[x as usize]
+}
+
+/// Multiplicative inverse (panics on 0).
+#[inline]
+pub fn gf_inv(a: u8) -> u8 {
+    assert!(a != 0, "inverse of zero");
+    EXP[255 - LOG[a as usize] as usize]
+}
+
+/// Field division `a / b` (panics if `b == 0`).
+#[inline]
+pub fn gf_div(a: u8, b: u8) -> u8 {
+    assert!(b != 0, "division by zero");
+    if a == 0 {
+        0
+    } else {
+        EXP[LOG[a as usize] as usize + 255 - LOG[b as usize] as usize]
+    }
+}
+
+/// `a^e` for arbitrary base `a` and exponent `e`.
+#[inline]
+pub fn gf_pow(a: u8, e: usize) -> u8 {
+    if e == 0 {
+        return 1;
+    }
+    if a == 0 {
+        return 0;
+    }
+    EXP[(LOG[a as usize] as usize * e) % 255]
+}
+
+/// Carry-less "schoolbook" multiply used only to cross-check the tables.
+pub fn gf_mul_slow(a: u8, b: u8) -> u8 {
+    let mut acc: u16 = 0;
+    let mut a16 = a as u16;
+    let mut b16 = b as u16;
+    while b16 != 0 {
+        if b16 & 1 != 0 {
+            acc ^= a16;
+        }
+        b16 >>= 1;
+        a16 <<= 1;
+        if a16 & 0x100 != 0 {
+            a16 ^= POLY;
+        }
+    }
+    acc as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_log_roundtrip() {
+        for x in 1..=255u8 {
+            assert_eq!(gf_exp(gf_log(x) as usize), x);
+        }
+    }
+
+    #[test]
+    fn exp_is_255_periodic_and_surjective() {
+        let mut seen = [false; 256];
+        for i in 0..255 {
+            seen[EXP[i] as usize] = true;
+            assert_eq!(EXP[i], EXP[i + 255]);
+        }
+        assert!(!seen[0]);
+        assert!(seen[1..].iter().all(|&s| s));
+    }
+
+    #[test]
+    fn mul_matches_slow_mul_exhaustive() {
+        for a in 0..=255u8 {
+            for b in 0..=255u8 {
+                assert_eq!(gf_mul(a, b), gf_mul_slow(a, b), "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_identity_and_zero() {
+        for a in 0..=255u8 {
+            assert_eq!(gf_mul(a, 1), a);
+            assert_eq!(gf_mul(1, a), a);
+            assert_eq!(gf_mul(a, 0), 0);
+            assert_eq!(gf_mul(0, a), 0);
+        }
+    }
+
+    #[test]
+    fn mul_commutative_associative_sample() {
+        // associativity on a full sweep is 16M triples; sample a lattice.
+        for a in (0..=255u8).step_by(7) {
+            for b in (0..=255u8).step_by(11) {
+                assert_eq!(gf_mul(a, b), gf_mul(b, a));
+                for c in (0..=255u8).step_by(13) {
+                    assert_eq!(gf_mul(gf_mul(a, b), c), gf_mul(a, gf_mul(b, c)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distributivity_over_xor_sample() {
+        for a in (0..=255u8).step_by(5) {
+            for b in (0..=255u8).step_by(9) {
+                for c in (0..=255u8).step_by(17) {
+                    assert_eq!(gf_mul(a, b ^ c), gf_mul(a, b) ^ gf_mul(a, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_law() {
+        for a in 1..=255u8 {
+            assert_eq!(gf_mul(a, gf_inv(a)), 1);
+            assert_eq!(gf_div(a, a), 1);
+        }
+    }
+
+    #[test]
+    fn div_is_mul_by_inverse() {
+        for a in (0..=255u8).step_by(3) {
+            for b in (1..=255u8).step_by(5) {
+                assert_eq!(gf_div(a, b), gf_mul(a, gf_inv(b)));
+            }
+        }
+    }
+
+    #[test]
+    fn pow_laws() {
+        for a in 1..=255u8 {
+            assert_eq!(gf_pow(a, 0), 1);
+            assert_eq!(gf_pow(a, 1), a);
+            assert_eq!(gf_pow(a, 2), gf_mul(a, a));
+            assert_eq!(gf_pow(a, 255), 1); // Lagrange: |GF(256)^*| = 255
+            assert_eq!(gf_pow(a, 256), a);
+        }
+        assert_eq!(gf_pow(0, 0), 1);
+        assert_eq!(gf_pow(0, 5), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn inv_zero_panics() {
+        gf_inv(0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn div_zero_panics() {
+        gf_div(3, 0);
+    }
+}

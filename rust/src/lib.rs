@@ -1,0 +1,32 @@
+//! # UniLRC — Wide Locally Recoverable Codes with Unified Locality
+//!
+//! A reproduction of *"New Wide Locally Recoverable Codes with Unified
+//! Locality"* (Xu et al., 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-storage-system coordinator:
+//!   code constructions (UniLRC and the ALRC/OLRC/ULRC baselines), cluster
+//!   topology and placement (ECWide, one-group-one-cluster), the theoretical
+//!   analysis suite (recovery-cost metrics, MTTDL Markov model), and a
+//!   virtual-time DSS prototype (coordinator / proxies / client over a
+//!   bandwidth-constrained simulated network).
+//! * **L2/L1 (build-time Python)** — JAX encode/decode graphs calling Pallas
+//!   GF(2^8) kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **runtime** — loads the artifacts through the PJRT C API (`xla` crate)
+//!   so the request path never touches Python.
+//!
+//! Start with [`codes::spec::Scheme`] and the `examples/` directory.
+
+pub mod analysis;
+pub mod bench_util;
+pub mod cli;
+pub mod client;
+pub mod codes;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod gf;
+pub mod placement;
+pub mod prng;
+pub mod proxy;
+pub mod runtime;
+pub mod sim;

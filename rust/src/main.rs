@@ -1,0 +1,5 @@
+//! `unilrc` — CLI entry point. See `unilrc help`.
+
+fn main() {
+    std::process::exit(unilrc::cli::run());
+}

@@ -1,0 +1,159 @@
+//! ECWide placement (Hu et al., FAST'21) — the state-of-the-art
+//! topology-aware baseline the paper evaluates ALRC/OLRC/ULRC under (§2.3.2).
+//!
+//! Core idea (*combined locality*): pack blocks into the minimum number of
+//! clusters while tolerating one cluster failure — a cluster may hold at
+//! most `g+1` blocks of a stripe, all from the same local group (losing
+//! them leaves ≤ g+1 erasures concentrated in one group, which the g
+//! globals + that group's surviving structure can repair). Each local group
+//! of size `s` therefore spans `⌈s/(g+1)⌉` clusters; blocks outside any
+//! group (ALRC/OLRC global parities under exclusive ownership) are packed
+//! `g+1` per cluster as their own chunks.
+//!
+//! The one-cluster-failure invariant is verified code-by-code in
+//! integration tests (erase each cluster, assert decodable).
+
+use super::{PlacementStrategy, Topology};
+use crate::codes::Code;
+
+/// ECWide-style minimum-cluster packing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EcWide;
+
+impl EcWide {
+    /// Split the stripe into cluster-sized chunks (the cluster count is the
+    /// chunk count). Exposed for the analysis module.
+    pub fn chunks(code: &Code) -> Vec<Vec<usize>> {
+        let cap = code.global_parities().len() + 1;
+        let mut owned = vec![false; code.n()];
+        let mut chunks = Vec::new();
+        for grp in code.groups() {
+            // exclusive ownership: skip blocks already owned by an earlier
+            // (overlapping) group — OLRC's shared globals.
+            let members: Vec<usize> =
+                grp.members.iter().copied().filter(|&m| !owned[m]).collect();
+            for &m in &members {
+                owned[m] = true;
+            }
+            for chunk in members.chunks(cap) {
+                chunks.push(chunk.to_vec());
+            }
+        }
+        // ungrouped blocks (ALRC globals): pack together, g+1 per cluster
+        let rest: Vec<usize> = (0..code.n()).filter(|&b| !owned[b]).collect();
+        for chunk in rest.chunks(cap) {
+            chunks.push(chunk.to_vec());
+        }
+        chunks
+    }
+
+    /// Minimum number of clusters ECWide needs for this code.
+    pub fn clusters_needed(code: &Code) -> usize {
+        Self::chunks(code).len()
+    }
+}
+
+impl PlacementStrategy for EcWide {
+    fn name(&self) -> &'static str {
+        "ecwide"
+    }
+
+    fn assign_clusters(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Vec<usize> {
+        let chunks = Self::chunks(code);
+        assert!(
+            topo.clusters >= chunks.len(),
+            "ECWide needs {} clusters for {}, topology has {}",
+            chunks.len(),
+            code.name(),
+            topo.clusters
+        );
+        let mut cluster_of = vec![usize::MAX; code.n()];
+        for (ci, chunk) in chunks.iter().enumerate() {
+            let c = (ci + stripe_idx) % topo.clusters;
+            for &b in chunk {
+                cluster_of[b] = c;
+            }
+        }
+        cluster_of
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::spec::{CodeFamily, Scheme};
+
+    #[test]
+    fn ulrc_42_chunking_matches_fig2() {
+        // Fig 2(a): sizes {8,8,8,9,9}, cap g+1=8 ⇒ three 1-cluster groups,
+        // two groups split 8+1 ⇒ 7 clusters.
+        let code = Scheme::S42.build(CodeFamily::Ulrc);
+        let chunks = EcWide::chunks(&code);
+        let sizes: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+        assert_eq!(sizes, vec![8, 8, 8, 8, 1, 8, 1]);
+        assert_eq!(EcWide::clusters_needed(&code), 7);
+    }
+
+    #[test]
+    fn alrc_42_chunking() {
+        // 6 groups of 6 (≤7 ⇒ one cluster each) + 6 globals in one cluster
+        let code = Scheme::S42.build(CodeFamily::Alrc);
+        let sizes: Vec<usize> = EcWide::chunks(&code).iter().map(|c| c.len()).collect();
+        assert_eq!(sizes, vec![6, 6, 6, 6, 6, 6, 6]);
+        assert_eq!(EcWide::clusters_needed(&code), 7);
+    }
+
+    #[test]
+    fn olrc_42_large_groups_span_clusters() {
+        // Limitation: OLRC's 26-member group must span ≥3 clusters (cap 11)
+        let code = Scheme::S42.build(CodeFamily::Olrc);
+        let chunks = EcWide::chunks(&code);
+        assert!(chunks.iter().any(|c| c.len() == 11));
+        // every block placed exactly once despite overlapping groups
+        let mut all: Vec<usize> = chunks.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..42).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn placement_covers_all_blocks() {
+        for fam in CodeFamily::paper_baselines() {
+            let code = Scheme::S42.build(fam);
+            let need = EcWide::clusters_needed(&code);
+            let topo = Topology::new(need, 16);
+            let p = EcWide.place(&code, &topo, 0);
+            assert_eq!(p.clusters_used(), need, "{fam:?}");
+        }
+    }
+
+    #[test]
+    fn one_cluster_failure_tolerated_all_families_and_schemes() {
+        // the ECWide correctness invariant
+        for scheme in Scheme::paper_schemes() {
+            for fam in CodeFamily::paper_baselines() {
+                let code = scheme.build(fam);
+                let need = EcWide::clusters_needed(&code);
+                let topo = Topology::new(need, 32);
+                let p = EcWide.place(&code, &topo, 0);
+                for c in 0..need {
+                    let lost = p.blocks_in_cluster(c);
+                    assert!(
+                        code.can_decode(&lost),
+                        "{fam:?} {} cluster {c} loss ({} blocks) unrecoverable",
+                        scheme.label(),
+                        lost.len()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_shifts_chunks() {
+        let code = Scheme::S42.build(CodeFamily::Ulrc);
+        let topo = Topology::new(8, 16);
+        let p0 = EcWide.place(&code, &topo, 0);
+        let p1 = EcWide.place(&code, &topo, 5);
+        assert_ne!(p0.cluster_of, p1.cluster_of);
+    }
+}

@@ -1,0 +1,57 @@
+//! Topology-oblivious round-robin placement — the "no topology locality"
+//! strawman used in ablations (what a flat DHT-style DSS would do).
+
+use super::{PlacementStrategy, Topology};
+use crate::codes::Code;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlatPlace;
+
+impl PlacementStrategy for FlatPlace {
+    fn name(&self) -> &'static str {
+        "flat-round-robin"
+    }
+
+    fn assign_clusters(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Vec<usize> {
+        (0..code.n()).map(|b| (b + stripe_idx) % topo.clusters).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::spec::{CodeFamily, Scheme};
+
+    #[test]
+    fn spreads_evenly() {
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        let topo = Topology::new(6, 8);
+        let p = FlatPlace.place(&code, &topo, 0);
+        for c in 0..6 {
+            assert_eq!(p.blocks_in_cluster(c).len(), 7);
+        }
+    }
+
+    #[test]
+    fn repairs_cross_clusters() {
+        // the ablation point: flat placement forces cross-cluster repair
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        let topo = Topology::new(6, 8);
+        let p = FlatPlace.place(&code, &topo, 0);
+        let plan = code.repair_plan(0);
+        let home = p.cluster_of[0];
+        assert!(plan.sources.iter().any(|&s| p.cluster_of[s] != home));
+    }
+
+    #[test]
+    fn may_break_cluster_tolerance() {
+        // documents *why* flat placement is wrong for wide LRCs: some
+        // cluster's loss is unrecoverable.
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        let topo = Topology::new(3, 16);
+        let p = FlatPlace.place(&code, &topo, 0);
+        // 14 blocks per cluster > n − k = 12 parities ⇒ guaranteed data loss
+        let any_bad = (0..3).any(|c| !code.can_decode(&p.blocks_in_cluster(c)));
+        assert!(any_bad);
+    }
+}

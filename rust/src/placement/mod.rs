@@ -1,0 +1,167 @@
+//! Cluster topology and stripe placement (§2.3.2 *topology locality*).
+//!
+//! A [`Topology`] is a two-tier DSS: `z` clusters of `nodes_per_cluster`
+//! nodes each, with fast inner-cluster links and an oversubscribed gateway
+//! per cluster. A [`PlacementStrategy`] maps each block of a stripe to a
+//! (cluster, node) pair:
+//!
+//! * [`unilrc_place::UniLrcPlace`] — the paper's "one local group, one
+//!   cluster" deployment (§3.1/Fig 4).
+//! * [`ecwide::EcWide`] — the FAST'21 baseline placement used for
+//!   ALRC/OLRC/ULRC: pack each local group into the minimum number of
+//!   clusters with at most `g+1` stripe blocks per cluster.
+//! * [`flat::FlatPlace`] — topology-oblivious round-robin (ablation).
+//!
+//! All strategies must keep one-cluster-failure tolerance (verified by
+//! integration tests: erasing any whole cluster's blocks decodes).
+
+pub mod ecwide;
+pub mod flat;
+pub mod unilrc_place;
+
+pub use ecwide::EcWide;
+pub use flat::FlatPlace;
+pub use unilrc_place::{UniLrcPlace, UniLrcSpread};
+
+use crate::codes::Code;
+
+/// Two-tier cluster topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub clusters: usize,
+    pub nodes_per_cluster: usize,
+}
+
+impl Topology {
+    pub fn new(clusters: usize, nodes_per_cluster: usize) -> Topology {
+        assert!(clusters > 0 && nodes_per_cluster > 0);
+        Topology { clusters, nodes_per_cluster }
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.clusters * self.nodes_per_cluster
+    }
+
+    /// Cluster that owns a (global) node id.
+    pub fn cluster_of_node(&self, node: usize) -> usize {
+        assert!(node < self.total_nodes());
+        node / self.nodes_per_cluster
+    }
+
+    /// Global node id from (cluster, slot).
+    pub fn node_id(&self, cluster: usize, slot: usize) -> usize {
+        assert!(cluster < self.clusters && slot < self.nodes_per_cluster);
+        cluster * self.nodes_per_cluster + slot
+    }
+
+    /// Node ids of a cluster.
+    pub fn nodes_of(&self, cluster: usize) -> std::ops::Range<usize> {
+        cluster * self.nodes_per_cluster..(cluster + 1) * self.nodes_per_cluster
+    }
+}
+
+/// Where each block of one stripe lives.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// Per block: cluster index.
+    pub cluster_of: Vec<usize>,
+    /// Per block: global node id.
+    pub node_of: Vec<usize>,
+}
+
+impl Placement {
+    /// Blocks hosted in `cluster`.
+    pub fn blocks_in_cluster(&self, cluster: usize) -> Vec<usize> {
+        (0..self.cluster_of.len()).filter(|&b| self.cluster_of[b] == cluster).collect()
+    }
+
+    /// Number of distinct clusters used.
+    pub fn clusters_used(&self) -> usize {
+        let mut c: Vec<usize> = self.cluster_of.clone();
+        c.sort_unstable();
+        c.dedup();
+        c.len()
+    }
+
+    /// Histogram of *data* blocks per cluster (for LBNR).
+    pub fn data_per_cluster(&self, code: &Code, clusters: usize) -> Vec<usize> {
+        let mut h = vec![0usize; clusters];
+        for b in 0..code.k() {
+            h[self.cluster_of[b]] += 1;
+        }
+        h
+    }
+
+    fn validate(&self, code: &Code, topo: &Topology) {
+        assert_eq!(self.cluster_of.len(), code.n());
+        assert_eq!(self.node_of.len(), code.n());
+        for b in 0..code.n() {
+            assert!(self.cluster_of[b] < topo.clusters, "cluster out of range");
+            assert_eq!(
+                topo.cluster_of_node(self.node_of[b]),
+                self.cluster_of[b],
+                "node/cluster mismatch for block {b}"
+            );
+        }
+        // no two blocks of one stripe on the same node
+        let mut nodes = self.node_of.clone();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes.len(), code.n(), "two blocks share a node");
+    }
+}
+
+/// A stripe-placement policy.
+pub trait PlacementStrategy {
+    /// Name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Assign clusters to every block of `code`'s stripe. `stripe_idx`
+    /// rotates assignments so consecutive stripes spread load.
+    fn assign_clusters(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Vec<usize>;
+
+    /// Full placement: clusters via [`Self::assign_clusters`], then node
+    /// slots within each cluster (rotated by stripe so full-node recovery
+    /// parallelizes across surviving nodes).
+    fn place(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Placement {
+        let cluster_of = self.assign_clusters(code, topo, stripe_idx);
+        let mut next_slot = vec![0usize; topo.clusters];
+        let mut node_of = vec![0usize; code.n()];
+        for b in 0..code.n() {
+            let c = cluster_of[b];
+            let slot = (next_slot[c] + stripe_idx) % topo.nodes_per_cluster;
+            assert!(
+                next_slot[c] < topo.nodes_per_cluster,
+                "{}: cluster {c} overflows its {} nodes",
+                self.name(),
+                topo.nodes_per_cluster
+            );
+            node_of[b] = topo.node_id(c, slot);
+            next_slot[c] += 1;
+        }
+        let p = Placement { cluster_of, node_of };
+        p.validate(code, topo);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_node_math() {
+        let t = Topology::new(6, 8);
+        assert_eq!(t.total_nodes(), 48);
+        assert_eq!(t.cluster_of_node(0), 0);
+        assert_eq!(t.cluster_of_node(47), 5);
+        assert_eq!(t.node_id(2, 3), 19);
+        assert_eq!(t.nodes_of(1), 8..16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn node_out_of_range_panics() {
+        Topology::new(2, 4).cluster_of_node(8);
+    }
+}

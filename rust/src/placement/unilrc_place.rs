@@ -1,0 +1,184 @@
+//! UniLRC's native deployment: one local group → one cluster (§3.1, Fig 4).
+//!
+//! Every block belongs to exactly one group, every group maps to exactly one
+//! cluster, so *all* repairs are cluster-local (zero cross-cluster traffic,
+//! Property 2) and the k data blocks are spread `k/z` per cluster
+//! (maximum normal-read parallelism, Property 1).
+
+use super::{PlacementStrategy, Topology};
+use crate::codes::Code;
+
+/// "One local group, one cluster" placement. Requires the code's groups to
+/// partition the stripe (true for UniLRC and ULRC) and `topo.clusters ≥
+/// number of groups`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UniLrcPlace;
+
+impl PlacementStrategy for UniLrcPlace {
+    fn name(&self) -> &'static str {
+        "one-group-one-cluster"
+    }
+
+    fn assign_clusters(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Vec<usize> {
+        let z = code.groups().len();
+        assert!(z > 0, "{} requires local groups", self.name());
+        assert!(
+            topo.clusters >= z,
+            "need ≥ {z} clusters for {}",
+            code.name()
+        );
+        let mut cluster_of = vec![usize::MAX; code.n()];
+        for (gi, grp) in code.groups().iter().enumerate() {
+            // rotate group→cluster by stripe so stripes spread over clusters
+            let c = (gi + stripe_idx) % topo.clusters;
+            for &m in &grp.members {
+                assert!(
+                    cluster_of[m] == usize::MAX || cluster_of[m] == c,
+                    "{}: overlapping groups cannot map to clusters",
+                    code.name()
+                );
+                cluster_of[m] = c;
+            }
+        }
+        assert!(
+            cluster_of.iter().all(|&c| c != usize::MAX),
+            "{}: some block not covered by any group",
+            code.name()
+        );
+        cluster_of
+    }
+}
+
+/// The §3.3 Discussion deployment for relaxed UniLRC: each local group
+/// spans exactly `t` consecutive clusters (members dealt round-robin), so
+/// a repair touches `t−1` remote clusters — one aggregated block each.
+#[derive(Debug, Clone, Copy)]
+pub struct UniLrcSpread {
+    pub t: usize,
+}
+
+impl PlacementStrategy for UniLrcSpread {
+    fn name(&self) -> &'static str {
+        "one-group-t-clusters"
+    }
+
+    fn assign_clusters(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Vec<usize> {
+        let l = code.groups().len();
+        assert!(l > 0, "{} requires local groups", self.name());
+        assert!(
+            topo.clusters >= l * self.t,
+            "need ≥ {} clusters for {} with t={}",
+            l * self.t,
+            code.name(),
+            self.t
+        );
+        let mut cluster_of = vec![usize::MAX; code.n()];
+        for (gi, grp) in code.groups().iter().enumerate() {
+            for (mi, &m) in grp.members.iter().enumerate() {
+                let c = (gi * self.t + mi % self.t + stripe_idx) % topo.clusters;
+                assert!(cluster_of[m] == usize::MAX, "overlapping groups");
+                cluster_of[m] = c;
+            }
+        }
+        assert!(cluster_of.iter().all(|&c| c != usize::MAX), "uncovered block");
+        cluster_of
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::spec::{CodeFamily, Scheme};
+    use crate::placement::Placement;
+
+    #[test]
+    fn unilrc_42_uses_6_clusters_uniformly() {
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        let topo = Topology::new(6, 8);
+        let p = UniLrcPlace.place(&code, &topo, 0);
+        assert_eq!(p.clusters_used(), 6);
+        // 7 blocks per cluster, 5 data per cluster (Property 1)
+        for c in 0..6 {
+            assert_eq!(p.blocks_in_cluster(c).len(), 7);
+        }
+        assert_eq!(p.data_per_cluster(&code, 6), vec![5; 6]);
+    }
+
+    #[test]
+    fn all_repairs_cluster_local() {
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        let topo = Topology::new(6, 8);
+        let p = UniLrcPlace.place(&code, &topo, 3);
+        for b in 0..code.n() {
+            let plan = code.repair_plan(b);
+            let home = p.cluster_of[b];
+            assert!(
+                plan.sources.iter().all(|&s| p.cluster_of[s] == home),
+                "block {b} repair crosses clusters"
+            );
+        }
+    }
+
+    #[test]
+    fn stripe_rotation_moves_groups() {
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        let topo = Topology::new(6, 8);
+        let p0 = UniLrcPlace.place(&code, &topo, 0);
+        let p1 = UniLrcPlace.place(&code, &topo, 1);
+        assert_ne!(p0.cluster_of, p1.cluster_of);
+        // rotation preserves the one-group-one-cluster structure
+        assert_eq!(p1.clusters_used(), 6);
+    }
+
+    #[test]
+    fn works_for_ulrc_partitioned_groups() {
+        // ULRC's groups also partition the stripe, so the strategy applies
+        // (used in ablations), just with uneven cluster loads.
+        let code = Scheme::S42.build(CodeFamily::Ulrc);
+        let topo = Topology::new(6, 16);
+        let p = UniLrcPlace.place(&code, &topo, 0);
+        assert_eq!(p.clusters_used(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_overlapping_groups() {
+        // OLRC groups overlap on globals ⇒ cannot one-group-one-cluster
+        let code = Scheme::S42.build(CodeFamily::Olrc);
+        let topo = Topology::new(6, 32);
+        UniLrcPlace.place(&code, &topo, 0);
+    }
+
+    #[test]
+    fn spread_placement_cross_traffic_is_t_minus_1() {
+        use crate::analysis::metrics::{cross_cost, CrossModel};
+        use crate::codes::unilrc::UniLrc;
+        let t = 2;
+        let code = UniLrc::new_relaxed(1, 6, t);
+        let topo = Topology::new(6, 16);
+        let p = UniLrcSpread { t }.place(&code, &topo, 0);
+        for b in 0..code.n() {
+            let agg = cross_cost(&code, &p, b, CrossModel::Aggregated);
+            assert_eq!(agg, t - 1, "block {b}: §3.3 claims t−1 cross blocks");
+        }
+    }
+
+    #[test]
+    fn spread_tolerates_one_cluster_failure() {
+        use crate::codes::unilrc::UniLrc;
+        let code = UniLrc::new_relaxed(1, 6, 2);
+        let topo = Topology::new(6, 16);
+        let p = UniLrcSpread { t: 2 }.place(&code, &topo, 0);
+        for c in 0..6 {
+            let lost = p.blocks_in_cluster(c);
+            assert!(code.can_decode(&lost), "cluster {c} ({} blocks)", lost.len());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_too_few_clusters() {
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        UniLrcPlace.place(&code, &Topology::new(5, 8), 0);
+    }
+}

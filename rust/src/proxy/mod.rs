@@ -1,0 +1,178 @@
+//! Proxy-side operation execution (§4.2): each cluster's proxy gathers
+//! surviving blocks, runs the coding library (PJRT artifacts or native GF),
+//! and ships results — with optional ECWide-style *gateway aggregation*
+//! (a remote proxy pre-combines its cluster's contribution so only one
+//! block crosses the oversubscribed link).
+//!
+//! Network time is virtual ([`NetSim`]); coding time is *real*, measured
+//! around the engine call and folded into the virtual clock.
+
+use crate::codes::Code;
+use crate::coordinator::metadata::{Metadata, StripeId};
+use crate::runtime::CodingEngine;
+use crate::sim::{Endpoint, NetSim};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Result of a proxy-coordinated block repair.
+pub struct OpOutcome {
+    /// Virtual time at which the rebuilt block is ready on the home proxy.
+    pub ready_at: f64,
+    /// The rebuilt block bytes.
+    pub rebuilt: Vec<u8>,
+    /// Home cluster id (where the repair ran).
+    pub home: usize,
+}
+
+/// Borrowed view of the system a proxy op needs.
+pub struct ProxyCtx<'a> {
+    pub code: &'a Code,
+    pub meta: &'a Metadata,
+    pub net: &'a mut NetSim,
+    pub engine: &'a dyn CodingEngine,
+    pub aggregated: bool,
+    pub block_size: usize,
+    /// Fold real coding time into the virtual clock.
+    pub time_compute: bool,
+}
+
+/// One repair input: where it lives and its combination coefficient.
+struct SourceRef {
+    coeff: u8,
+    node: usize,
+    cluster: usize,
+    data: Arc<Vec<u8>>,
+}
+
+impl ProxyCtx<'_> {
+    /// Rebuild `block` of `stripe` on its home-cluster proxy, given the
+    /// stripe's full erasure set. Returns the rebuilt bytes and the
+    /// virtual-clock instant they are ready.
+    pub fn repair_block(
+        &mut self,
+        t0: f64,
+        stripe: StripeId,
+        block: usize,
+        erased: &[usize],
+    ) -> Result<OpOutcome> {
+        let home = self.meta.cluster_of(stripe, block);
+        let (source_ids, coeffs) = self.plan_for(block, erased)?;
+        let sources: Vec<SourceRef> = source_ids
+            .iter()
+            .zip(&coeffs)
+            .map(|(&b, &c)| SourceRef {
+                coeff: c,
+                node: self.meta.node_of(stripe, b),
+                cluster: self.meta.cluster_of(stripe, b),
+                data: self.meta.block_data(stripe, b),
+            })
+            .collect();
+
+        // Partition by cluster.
+        let mut local: Vec<&SourceRef> = Vec::new();
+        let mut remote: BTreeMap<usize, Vec<&SourceRef>> = BTreeMap::new();
+        for s in &sources {
+            if s.cluster == home {
+                local.push(s);
+            } else {
+                remote.entry(s.cluster).or_default().push(s);
+            }
+        }
+
+        // Inputs to the final combine at the home proxy: (arrival, coeff, bytes)
+        let mut inputs: Vec<(f64, u8, Arc<Vec<u8>>)> = Vec::new();
+
+        for s in &local {
+            let t = self.net.transfer(t0, Endpoint::Node(s.node), Endpoint::Proxy(home), self.block_size);
+            inputs.push((t, s.coeff, s.data.clone()));
+        }
+
+        for (rc, srcs) in &remote {
+            if self.aggregated && srcs.len() > 1 {
+                // gather within the remote cluster, pre-combine, ship one block
+                let mut arrive = t0;
+                for s in srcs {
+                    let t = self.net.transfer(
+                        t0,
+                        Endpoint::Node(s.node),
+                        Endpoint::Proxy(*rc),
+                        self.block_size,
+                    );
+                    arrive = arrive.max(t);
+                }
+                let refs: Vec<&[u8]> = srcs.iter().map(|s| s.data.as_slice()).collect();
+                let cs: Vec<u8> = srcs.iter().map(|s| s.coeff).collect();
+                let (partial, secs) = self.timed_combine(&cs, &refs)?;
+                let t = self.net.transfer(
+                    arrive + secs,
+                    Endpoint::Proxy(*rc),
+                    Endpoint::Proxy(home),
+                    self.block_size,
+                );
+                inputs.push((t, 1, Arc::new(partial)));
+            } else {
+                // raw: each block crosses the gateway individually
+                for s in srcs {
+                    let t = self.net.transfer(
+                        t0,
+                        Endpoint::Node(s.node),
+                        Endpoint::Proxy(home),
+                        self.block_size,
+                    );
+                    inputs.push((t, s.coeff, s.data.clone()));
+                }
+            }
+        }
+
+        // Final combine once everything arrived.
+        let arrived = inputs.iter().fold(t0, |a, (t, _, _)| a.max(*t));
+        let refs: Vec<&[u8]> = inputs.iter().map(|(_, _, d)| d.as_slice()).collect();
+        let cs: Vec<u8> = inputs.iter().map(|(_, c, _)| *c).collect();
+        let (rebuilt, secs) = self.timed_combine(&cs, &refs)?;
+        Ok(OpOutcome { ready_at: arrived + secs, rebuilt, home })
+    }
+
+    /// (sources, coefficients) reconstructing `block` with every member of
+    /// `erased` unavailable.
+    fn plan_for(&self, block: usize, erased: &[usize]) -> Result<(Vec<usize>, Vec<u8>)> {
+        if erased == [block] {
+            let plan = self.code.repair_plan(block);
+            return Ok((plan.sources, plan.coeffs));
+        }
+        let plan = self
+            .code
+            .decode_plan(erased)
+            .ok_or_else(|| anyhow::anyhow!("erasure pattern {erased:?} unrecoverable"))?;
+        let row = plan
+            .erased
+            .iter()
+            .position(|&b| b == block)
+            .ok_or_else(|| anyhow::anyhow!("block {block} not in erasure set"))?;
+        let coeffs: Vec<u8> = plan.coeffs.row(row).to_vec();
+        // prune zero coefficients (sources other rows need, not this one)
+        let keep: Vec<usize> = (0..coeffs.len()).filter(|&i| coeffs[i] != 0).collect();
+        Ok((
+            keep.iter().map(|&i| plan.sources[i]).collect(),
+            keep.iter().map(|&i| coeffs[i]).collect(),
+        ))
+    }
+
+    /// Run the linear combine on the engine, returning (bytes, virtual
+    /// seconds to charge — the measured real time, or 0 when compute
+    /// timing is disabled for determinism).
+    fn timed_combine(&self, coeffs: &[u8], sources: &[&[u8]]) -> Result<(Vec<u8>, f64)> {
+        let t = Instant::now();
+        let out = if coeffs.iter().all(|&c| c == 1) {
+            self.engine.fold(sources)?
+        } else {
+            self.engine
+                .matmul(&[coeffs.to_vec()], sources)?
+                .pop()
+                .expect("one output row")
+        };
+        let secs = if self.time_compute { t.elapsed().as_secs_f64() } else { 0.0 };
+        Ok((out, secs))
+    }
+}

@@ -1,0 +1,229 @@
+//! Artifact manifest: index of the AOT-compiled HLO text files.
+//!
+//! `make artifacts` writes `artifacts/manifest.tsv` with one line per
+//! artifact: `kind \t name \t file \t key=val key=val …`. This module
+//! parses it and answers "which artifact encodes scheme X / folds S
+//! sources / decodes scheme Y".
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Kind of compiled computation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// UniLRC encode with constant-folded generator: `(k,B) → (m,B)`.
+    Encode,
+    /// Generic coefficient-fed GF matmul: `((m,k),(k,B)) → (m,B)`.
+    GfDecode,
+    /// XOR fold: `(s,B) → (1,B)`.
+    XorFold,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        match s {
+            "encode" => Ok(ArtifactKind::Encode),
+            "gfdec" => Ok(ArtifactKind::GfDecode),
+            "xorfold" => Ok(ArtifactKind::XorFold),
+            other => bail!("unknown artifact kind {other:?}"),
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub kind: ArtifactKind,
+    pub name: String,
+    pub path: PathBuf,
+    pub params: HashMap<String, usize>,
+    pub scheme: Option<String>,
+}
+
+impl Artifact {
+    pub fn param(&self, key: &str) -> Result<usize> {
+        self.params
+            .get(key)
+            .copied()
+            .with_context(|| format!("artifact {} missing param {key}", self.name))
+    }
+}
+
+/// Parsed manifest with lookup helpers.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 4 {
+                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            }
+            let mut params = HashMap::new();
+            let mut scheme = None;
+            for kv in fields[3].split_whitespace() {
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("bad key=val {kv:?} on line {}", lineno + 1))?;
+                if k == "scheme" {
+                    scheme = Some(v.to_string());
+                } else {
+                    params.insert(k.to_string(), v.parse::<usize>()?);
+                }
+            }
+            artifacts.push(Artifact {
+                kind: ArtifactKind::parse(fields[0])?,
+                name: fields[1].to_string(),
+                path: dir.join(fields[2]),
+                params,
+                scheme,
+            });
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    /// Default artifact directory: `$UNILRC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("UNILRC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Encode artifact for a UniLRC (α, z) pair.
+    pub fn encode_for(&self, alpha: usize, z: usize) -> Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.kind == ArtifactKind::Encode
+                    && a.params.get("alpha") == Some(&alpha)
+                    && a.params.get("z") == Some(&z)
+            })
+            .with_context(|| format!("no encode artifact for α={alpha}, z={z}"))
+    }
+
+    /// Smallest XOR-fold artifact with `s ≥ sources` (zero-padding covers
+    /// the gap). Returns (artifact, padded_s).
+    pub fn fold_for(&self, sources: usize) -> Result<(&Artifact, usize)> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::XorFold)
+            .filter_map(|a| a.params.get("s").map(|&s| (a, s)))
+            .filter(|&(_, s)| s >= sources)
+            .min_by_key(|&(_, s)| s)
+            .with_context(|| format!("no xorfold artifact for {sources} sources"))
+    }
+
+    /// Smallest generic decode artifact with `m ≥ outs` and `k ≥ sources`.
+    pub fn gfdec_for(&self, outs: usize, sources: usize) -> Result<(&Artifact, usize, usize)> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::GfDecode)
+            .filter_map(|a| {
+                match (a.params.get("m"), a.params.get("k")) {
+                    (Some(&m), Some(&k)) if m >= outs && k >= sources => Some((a, m, k)),
+                    _ => None,
+                }
+            })
+            .min_by_key(|&(_, m, k)| m * k)
+            .with_context(|| format!("no gfdec artifact for {outs}×{sources}"))
+    }
+
+    /// Block size shared by the data-path (encode/gfdec) artifacts.
+    /// XOR-fold artifacts use larger blocks (see aot.py §Perf note).
+    pub fn block_size(&self) -> Result<usize> {
+        let mut sizes: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind != ArtifactKind::XorFold)
+            .filter_map(|a| a.params.get("b").copied())
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        match sizes.as_slice() {
+            [one] => Ok(*one),
+            other => bail!("expected one data-path block size, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, lines: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.tsv")).unwrap();
+        for l in lines {
+            writeln!(f, "{l}").unwrap();
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("unilrc_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let d = tmpdir("parse");
+        write_manifest(
+            &d,
+            &[
+                "encode\tenc\tenc.hlo.txt\tscheme=42 alpha=1 z=6 k=30 m=12 b=65536",
+                "xorfold\tx5\tx5.hlo.txt\ts=5 b=65536",
+                "xorfold\tx8\tx8.hlo.txt\ts=8 b=65536",
+                "gfdec\tg\tg.hlo.txt\tscheme=42 m=12 k=42 b=65536",
+            ],
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.encode_for(1, 6).unwrap().name, "enc");
+        assert!(m.encode_for(2, 6).is_err());
+        let (a, s) = m.fold_for(6).unwrap();
+        assert_eq!((a.name.as_str(), s), ("x8", 8));
+        let (a, s) = m.fold_for(5).unwrap();
+        assert_eq!((a.name.as_str(), s), ("x5", 5));
+        assert!(m.fold_for(9).is_err());
+        let (a, mm, kk) = m.gfdec_for(3, 40).unwrap();
+        assert_eq!((a.name.as_str(), mm, kk), ("g", 12, 42));
+        assert_eq!(m.block_size().unwrap(), 65536);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let d = tmpdir("bad");
+        write_manifest(&d, &["encode\tonly-three-fields\tx.hlo.txt"]);
+        assert!(Manifest::load(&d).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // when `make artifacts` has run, validate the real thing
+        if let Ok(m) = Manifest::load(Manifest::default_dir()) {
+            assert!(m.artifacts.len() >= 20);
+            assert!(m.encode_for(1, 6).is_ok());
+            assert!(m.encode_for(2, 10).is_ok());
+            assert!(m.fold_for(6).is_ok());
+            assert!(m.gfdec_for(30, 210).is_ok());
+            assert_eq!(m.block_size().unwrap(), 65536);
+        }
+    }
+}

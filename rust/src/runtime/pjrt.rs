@@ -1,0 +1,240 @@
+//! PJRT-backed coding engine: `HloModuleProto::from_text_file` →
+//! `PjRtClient::compile` once per artifact at startup, then `execute` on
+//! raw byte blocks from the L3 hot path.
+//!
+//! Blocks of arbitrary length are processed in artifact-block-sized
+//! sub-blocks (`b=65536` by default); the tail is zero-padded, which is
+//! sound for linear codes (0 encodes/decodes to 0).
+
+use super::artifacts::{Artifact, Manifest};
+use super::CodingEngine;
+use crate::codes::{Code, CodeFamily};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A compiled-artifact cache plus the PJRT client.
+pub struct PjrtCoder {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// artifact name → compiled executable (compiled lazily, cached).
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// reusable packing scratch (§Perf: avoids a fresh zeroed allocation —
+    /// and its page faults — on every request-path call).
+    scratch: Mutex<Vec<u8>>,
+}
+
+// The xla wrapper types are FFI handles that PJRT allows cross-thread use of.
+unsafe impl Send for PjrtCoder {}
+unsafe impl Sync for PjrtCoder {}
+
+impl PjrtCoder {
+    /// Create from an artifact directory (default: `Manifest::default_dir`).
+    pub fn new(dir: Option<std::path::PathBuf>) -> Result<PjrtCoder> {
+        let dir = dir.unwrap_or_else(Manifest::default_dir);
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtCoder {
+            client,
+            manifest,
+            compiled: Mutex::new(HashMap::new()),
+            scratch: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&self, art: &Artifact) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.compiled.lock().unwrap();
+        if let Some(exe) = cache.get(&art.name) {
+            return Ok(exe.clone());
+        }
+        let path = art
+            .path
+            .to_str()
+            .with_context(|| format!("non-utf8 artifact path {:?}", art.path))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", art.name))?;
+        let exe = std::sync::Arc::new(exe);
+        cache.insert(art.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pack `rows` equal-length byte slices into a `[rows, b]` u8 literal,
+    /// taking `rows[i][offset..offset+width]` and zero-padding to `b`.
+    fn pack(&self, b: usize, rows: &[&[u8]], offset: usize, width: usize, pad_rows: usize) -> xla::Literal {
+        let total_rows = rows.len() + pad_rows;
+        let mut flat = self.scratch.lock().unwrap();
+        if flat.len() < total_rows * b {
+            flat.resize(total_rows * b, 0);
+        }
+        for (i, r) in rows.iter().enumerate() {
+            flat[i * b..i * b + width].copy_from_slice(&r[offset..offset + width]);
+            if width < b {
+                flat[i * b + width..(i + 1) * b].fill(0);
+            }
+        }
+        // pad rows must be zero (stale data from a previous, larger call)
+        flat[rows.len() * b..total_rows * b].fill(0);
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[total_rows, b],
+            &flat[..total_rows * b],
+        )
+        .expect("u8 literal creation cannot fail for matching sizes")
+    }
+
+    /// Run one artifact over a whole block length, sub-block by sub-block.
+    /// `make_inputs(offset, width)` builds the literals for one sub-block;
+    /// the single tuple output `[rows_out, b]` is scattered into `outs`.
+    fn run_chunked(
+        &self,
+        art: &Artifact,
+        len: usize,
+        rows_out: usize,
+        mut make_inputs: impl FnMut(usize, usize) -> Vec<xla::Literal>,
+        outs: &mut [Vec<u8>],
+    ) -> Result<()> {
+        let exe = self.executable(art)?;
+        let b = art.param("b")?;
+        let mut offset = 0;
+        while offset < len {
+            let width = b.min(len - offset);
+            let inputs = make_inputs(offset, width);
+            let result = exe.execute::<xla::Literal>(&inputs)?[0][0]
+                .to_literal_sync()
+                .context("fetching PJRT result")?;
+            let out = result.to_tuple1().context("unwrapping result tuple")?;
+            let flat = out.to_vec::<u8>()?;
+            anyhow::ensure!(flat.len() >= rows_out * b, "artifact output too small");
+            for (i, o) in outs.iter_mut().enumerate() {
+                o[offset..offset + width].copy_from_slice(&flat[i * b..i * b + width]);
+            }
+            offset += width;
+        }
+        Ok(())
+    }
+}
+
+impl CodingEngine for PjrtCoder {
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn encode(&self, code: &Code, data: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        anyhow::ensure!(data.len() == code.k(), "need k data blocks");
+        let len = data[0].len();
+        // Scheme-specific constant-folded artifact for UniLRC; other
+        // families go through the generic coefficient-fed graph.
+        match code.family {
+            CodeFamily::UniLrc => {
+                let (alpha, z) = unilrc_params(code)?;
+                let art = self.manifest.encode_for(alpha, z)?.clone();
+                let mut outs = vec![vec![0u8; len]; code.m()];
+                let b = art.param("b")?;
+                self.run_chunked(
+                    &art,
+                    len,
+                    code.m(),
+                    |off, w| vec![self.pack(b, data, off, w, 0)],
+                    &mut outs,
+                )?;
+                Ok(outs)
+            }
+            _ => {
+                let coeffs: Vec<Vec<u8>> =
+                    (0..code.m()).map(|i| code.parity_matrix().row(i).to_vec()).collect();
+                self.matmul(&coeffs, data)
+            }
+        }
+    }
+
+    fn fold(&self, sources: &[&[u8]]) -> Result<Vec<u8>> {
+        anyhow::ensure!(!sources.is_empty(), "fold needs sources");
+        let len = sources[0].len();
+        let (art, s_padded) = self.manifest.fold_for(sources.len())?;
+        let art = art.clone();
+        let b = art.param("b")?;
+        let pad = s_padded - sources.len();
+        let mut outs = vec![vec![0u8; len]];
+        self.run_chunked(
+            &art,
+            len,
+            1,
+            |off, w| vec![self.pack(b, sources, off, w, pad)],
+            &mut outs,
+        )?;
+        Ok(outs.pop().unwrap())
+    }
+
+    fn matmul(&self, coeffs: &[Vec<u8>], sources: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        anyhow::ensure!(!coeffs.is_empty(), "matmul needs coefficient rows");
+        anyhow::ensure!(
+            coeffs.iter().all(|r| r.len() == sources.len()),
+            "coefficient width must match source count"
+        );
+        let len = sources.first().map_or(0, |s| s.len());
+        let (art, m_pad, k_pad) = self.manifest.gfdec_for(coeffs.len(), sources.len())?;
+        let art = art.clone();
+        let b = art.param("b")?;
+        // zero-padded coefficient literal [m_pad, k_pad]
+        let mut cflat = vec![0u8; m_pad * k_pad];
+        for (i, row) in coeffs.iter().enumerate() {
+            cflat[i * k_pad..i * k_pad + row.len()].copy_from_slice(row);
+        }
+        let coeff_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[m_pad, k_pad],
+            &cflat,
+        )
+        .expect("coeff literal");
+        let pad_rows = k_pad - sources.len();
+        let mut outs = vec![vec![0u8; len]; m_pad];
+        self.run_chunked(
+            &art,
+            len,
+            m_pad,
+            |off, w| {
+                // NOTE: Literal isn't Clone in the crate; rebuild per chunk.
+                let mut cf = vec![0u8; m_pad * k_pad];
+                cf.copy_from_slice(&cflat);
+                let c = xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::U8,
+                    &[m_pad, k_pad],
+                    &cf,
+                )
+                .expect("coeff literal");
+                vec![c, self.pack(b, sources, off, w, pad_rows)]
+            },
+            &mut outs,
+        )?;
+        let _ = coeff_lit;
+        outs.truncate(coeffs.len());
+        Ok(outs)
+    }
+}
+
+fn unilrc_params(code: &Code) -> Result<(usize, usize)> {
+    // name format: "UniLRC(n,k,g) [α=…, z=…]"
+    let name = code.name();
+    let alpha = field(name, "α=")?;
+    let z = field(name, "z=")?;
+    Ok((alpha, z))
+}
+
+fn field(s: &str, key: &str) -> Result<usize> {
+    let start = s.find(key).with_context(|| format!("missing {key} in {s}"))? + key.len();
+    let rest = &s[start..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    if end == 0 {
+        bail!("empty number after {key} in {s}");
+    }
+    Ok(rest[..end].parse()?)
+}

@@ -1,0 +1,285 @@
+//! Virtual-time network substrate — the testbed substitution (DESIGN.md §5).
+//!
+//! The paper's CloudLab testbed caps each cluster gateway's *outgoing*
+//! bandwidth with Wondershaper (1 Gb/s, a 1:10 oversubscription against the
+//! 10 Gb/s node NICs). We model exactly that: every node NIC, every cluster
+//! gateway, and the client/coordinator NICs are FIFO rate resources on a
+//! virtual clock; a transfer occupies each resource on its path for
+//! `bytes / that resource's bandwidth`, starting when all of them are free,
+//! and completes after the bottleneck duration plus a per-hop latency.
+//!
+//! Everything is deterministic: latencies and throughputs reported by the
+//! prototype are functions of (code, placement, workload) only — while the
+//! *data plane* still moves real bytes and runs real coding (timed
+//! separately and folded into the clock by the proxy layer).
+
+use crate::placement::Topology;
+
+/// Gb/s → bytes/second.
+pub const GBIT: f64 = 1e9 / 8.0;
+
+/// Network parameters (§6 Setup defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Node NIC bandwidth (bytes/s). Paper: 10 Gb/s.
+    pub node_bw: f64,
+    /// Cluster gateway egress bandwidth (bytes/s). Paper: 1 Gb/s.
+    pub cross_bw: f64,
+    /// Client / coordinator NIC bandwidth (bytes/s). Paper: 10 Gb/s.
+    pub client_bw: f64,
+    /// Fixed per-transfer latency (seconds) — LAN RTT + software overhead.
+    pub base_latency: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            node_bw: 10.0 * GBIT,
+            cross_bw: 1.0 * GBIT,
+            client_bw: 10.0 * GBIT,
+            base_latency: 200e-6,
+        }
+    }
+}
+
+impl NetConfig {
+    /// The paper's Experiment 4 knob: cross-cluster gateway bandwidth.
+    pub fn with_cross_gbps(mut self, gbps: f64) -> Self {
+        self.cross_bw = gbps * GBIT;
+        self
+    }
+}
+
+/// A FIFO rate-limited resource (NIC or gateway).
+#[derive(Debug, Clone, Copy)]
+struct Resource {
+    available_at: f64,
+    bw: f64,
+}
+
+impl Resource {
+    fn new(bw: f64) -> Resource {
+        Resource { available_at: 0.0, bw }
+    }
+
+    /// Occupy for `bytes` starting no earlier than `start`; returns the
+    /// (begin, busy-until) pair.
+    fn occupy(&mut self, start: f64, bytes: usize) -> (f64, f64) {
+        let begin = start.max(self.available_at);
+        let busy = bytes as f64 / self.bw;
+        self.available_at = begin + busy;
+        (begin, self.available_at)
+    }
+}
+
+/// Communication endpoints of the prototype.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Endpoint {
+    /// A storage node (global node id).
+    Node(usize),
+    /// The per-cluster proxy machine.
+    Proxy(usize),
+    /// The client machine.
+    Client,
+    /// The coordinator machine.
+    Coordinator,
+}
+
+/// The virtual network: resource state + topology.
+#[derive(Debug, Clone)]
+pub struct NetSim {
+    topo: Topology,
+    cfg: NetConfig,
+    node_nics: Vec<Resource>,
+    proxy_nics: Vec<Resource>,
+    gateways: Vec<Resource>,
+    client_nic: Resource,
+    coord_nic: Resource,
+    /// total bytes that crossed any gateway (cross-cluster traffic meter)
+    pub cross_bytes: u64,
+    /// total bytes moved at all (traffic meter)
+    pub total_bytes: u64,
+}
+
+impl NetSim {
+    pub fn new(topo: Topology, cfg: NetConfig) -> NetSim {
+        NetSim {
+            topo,
+            cfg,
+            node_nics: vec![Resource::new(cfg.node_bw); topo.total_nodes()],
+            proxy_nics: vec![Resource::new(cfg.node_bw); topo.clusters],
+            gateways: vec![Resource::new(cfg.cross_bw); topo.clusters],
+            client_nic: Resource::new(cfg.client_bw),
+            coord_nic: Resource::new(cfg.client_bw),
+            cross_bytes: 0,
+            total_bytes: 0,
+        }
+    }
+
+    pub fn config(&self) -> NetConfig {
+        self.cfg
+    }
+
+    /// Cluster an endpoint belongs to (None for client/coordinator).
+    fn cluster_of(&self, e: Endpoint) -> Option<usize> {
+        match e {
+            Endpoint::Node(n) => Some(self.topo.cluster_of_node(n)),
+            Endpoint::Proxy(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Schedule a transfer starting no earlier than `start`; returns its
+    /// completion time on the virtual clock.
+    pub fn transfer(&mut self, start: f64, from: Endpoint, to: Endpoint, bytes: usize) -> f64 {
+        if from == to || bytes == 0 {
+            return start;
+        }
+        self.total_bytes += bytes as u64;
+        let (cf, ct) = (self.cluster_of(from), self.cluster_of(to));
+        let crosses = cf != ct; // leaving a cluster (or client↔cluster)
+
+        // Resource path: src NIC → (src gateway if crossing) → dst NIC.
+        // Wondershaper caps *egress*, so only the source gateway throttles.
+        let mut begin = start;
+        let mut bottleneck = f64::INFINITY;
+
+        // reserve in a fixed order, FIFO per resource
+        let mut reserve = |r: &mut Resource| {
+            let (b, _) = r.occupy(begin, bytes);
+            begin = b;
+            bottleneck = bottleneck.min(r.bw);
+        };
+        match from {
+            Endpoint::Node(n) => reserve(&mut self.node_nics[n]),
+            Endpoint::Proxy(c) => reserve(&mut self.proxy_nics[c]),
+            Endpoint::Client => reserve(&mut self.client_nic),
+            Endpoint::Coordinator => reserve(&mut self.coord_nic),
+        }
+        if crosses {
+            if let Some(c) = cf {
+                reserve(&mut self.gateways[c]);
+                self.cross_bytes += bytes as u64;
+            }
+        }
+        match to {
+            Endpoint::Node(n) => reserve(&mut self.node_nics[n]),
+            Endpoint::Proxy(c) => reserve(&mut self.proxy_nics[c]),
+            Endpoint::Client => reserve(&mut self.client_nic),
+            Endpoint::Coordinator => reserve(&mut self.coord_nic),
+        }
+        begin + bytes as f64 / bottleneck + self.cfg.base_latency
+    }
+
+    /// Reset resource clocks and meters (between experiments).
+    pub fn reset(&mut self) {
+        for r in self
+            .node_nics
+            .iter_mut()
+            .chain(self.proxy_nics.iter_mut())
+            .chain(self.gateways.iter_mut())
+        {
+            r.available_at = 0.0;
+        }
+        self.client_nic.available_at = 0.0;
+        self.coord_nic.available_at = 0.0;
+        self.cross_bytes = 0;
+        self.total_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> NetSim {
+        NetSim::new(Topology::new(3, 4), NetConfig::default())
+    }
+
+    const MB: usize = 1 << 20;
+
+    #[test]
+    fn inner_cluster_transfer_at_nic_speed() {
+        let mut s = sim();
+        let t = s.transfer(0.0, Endpoint::Node(0), Endpoint::Node(1), 10 * MB);
+        let expect = 10.0 * MB as f64 / (10.0 * GBIT) + 200e-6;
+        assert!((t - expect).abs() < 1e-9, "{t} vs {expect}");
+        assert_eq!(s.cross_bytes, 0);
+    }
+
+    #[test]
+    fn cross_cluster_throttled_by_gateway() {
+        let mut s = sim();
+        let t = s.transfer(0.0, Endpoint::Node(0), Endpoint::Node(8), 10 * MB);
+        let expect = 10.0 * MB as f64 / (1.0 * GBIT) + 200e-6;
+        assert!((t - expect).abs() < 1e-9);
+        assert_eq!(s.cross_bytes, 10 * MB as u64);
+    }
+
+    #[test]
+    fn node_to_client_crosses_gateway() {
+        let mut s = sim();
+        let t = s.transfer(0.0, Endpoint::Node(0), Endpoint::Client, MB);
+        let expect = MB as f64 / (1.0 * GBIT) + 200e-6;
+        assert!((t - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gateway_serializes_parallel_cross_transfers() {
+        let mut s = sim();
+        // two different nodes in cluster 0 → client, both issued at t=0:
+        // the shared gateway FIFO doubles the second one's completion.
+        let t1 = s.transfer(0.0, Endpoint::Node(0), Endpoint::Client, MB);
+        let t2 = s.transfer(0.0, Endpoint::Node(1), Endpoint::Client, MB);
+        assert!(t2 > t1);
+        let per = MB as f64 / (1.0 * GBIT);
+        assert!((t2 - (2.0 * per + 200e-6)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn different_gateways_run_parallel() {
+        let mut s = sim();
+        let t1 = s.transfer(0.0, Endpoint::Node(0), Endpoint::Client, MB);
+        let t2 = s.transfer(0.0, Endpoint::Node(4), Endpoint::Client, MB);
+        // client NIC is 10× faster than gateways ⇒ near-identical finishes
+        assert!((t1 - t2).abs() < per_gw() * 0.3, "{t1} {t2}");
+        fn per_gw() -> f64 {
+            MB as f64 / (1.0 * GBIT)
+        }
+    }
+
+    #[test]
+    fn proxy_endpoint_inner_vs_cross() {
+        let mut s = sim();
+        let inner = s.transfer(0.0, Endpoint::Node(0), Endpoint::Proxy(0), MB);
+        s.reset();
+        let cross = s.transfer(0.0, Endpoint::Node(0), Endpoint::Proxy(1), MB);
+        assert!(cross > inner * 5.0);
+    }
+
+    #[test]
+    fn zero_bytes_and_self_transfer_free() {
+        let mut s = sim();
+        assert_eq!(s.transfer(3.0, Endpoint::Node(0), Endpoint::Node(0), MB), 3.0);
+        assert_eq!(s.transfer(3.0, Endpoint::Node(0), Endpoint::Node(1), 0), 3.0);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut s = sim();
+        s.transfer(0.0, Endpoint::Node(0), Endpoint::Client, MB);
+        s.reset();
+        assert_eq!(s.cross_bytes, 0);
+        let t = s.transfer(0.0, Endpoint::Node(0), Endpoint::Client, MB);
+        assert!((t - (MB as f64 / GBIT + 200e-6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exp4_bandwidth_knob() {
+        let cfg = NetConfig::default().with_cross_gbps(10.0);
+        let mut s = NetSim::new(Topology::new(2, 2), cfg);
+        let t = s.transfer(0.0, Endpoint::Node(0), Endpoint::Node(2), MB);
+        let expect = MB as f64 / (10.0 * GBIT) + 200e-6;
+        assert!((t - expect).abs() < 1e-9);
+    }
+}

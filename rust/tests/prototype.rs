@@ -1,0 +1,223 @@
+//! End-to-end prototype integration: DSS assembly, reads, degraded reads,
+//! reconstruction and full-node recovery, for every code family — and the
+//! paper's qualitative claims checked on the virtual testbed.
+
+use std::sync::Arc;
+use unilrc::codes::spec::{CodeFamily, Scheme};
+use unilrc::coordinator::{Dss, DssConfig};
+use unilrc::placement::{EcWide, PlacementStrategy, Topology, UniLrcPlace};
+use unilrc::prng::Prng;
+use unilrc::runtime::NativeCoder;
+use unilrc::sim::NetConfig;
+
+const BS: usize = 64 * 1024;
+
+fn build(fam: CodeFamily, scheme: Scheme) -> Dss {
+    let code = scheme.build(fam);
+    let (strategy, clusters): (Box<dyn PlacementStrategy>, usize) = match fam {
+        CodeFamily::UniLrc => (Box::new(UniLrcPlace), code.groups().len()),
+        _ => (Box::new(EcWide), EcWide::clusters_needed(&code)),
+    };
+    let npc = code.n().div_ceil(clusters) + 2; // room for spares
+    let topo = Topology::new(clusters, npc);
+    Dss::new(
+        code,
+        strategy.as_ref(),
+        topo,
+        NetConfig::default(),
+        Arc::new(NativeCoder),
+        DssConfig { block_size: BS, aggregated: true, time_compute: false },
+    )
+}
+
+#[test]
+fn ingest_and_normal_read_all_families() {
+    let mut prng = Prng::new(1);
+    for fam in CodeFamily::paper_baselines() {
+        let mut dss = build(fam, Scheme::S42);
+        dss.ingest_random_stripes(2, &mut prng).unwrap();
+        let r = dss.normal_read(0).unwrap();
+        assert!(r.latency > 0.0, "{fam:?}");
+        assert_eq!(r.bytes, 30 * BS);
+    }
+}
+
+#[test]
+fn degraded_read_correct_and_unilrc_zero_cross() {
+    let mut prng = Prng::new(2);
+    let mut dss = build(CodeFamily::UniLrc, Scheme::S42);
+    dss.ingest_random_stripes(1, &mut prng).unwrap();
+    let node = dss.metadata().node_of(0, 3);
+    dss.fail_node(node);
+    let r = dss.degraded_read(0, 3).unwrap();
+    // Property 2: repair itself moves zero cross-cluster bytes; the only
+    // crossing is the final proxy→client hop.
+    assert_eq!(r.cross_bytes as usize, BS, "only the client hop crosses");
+    assert!(r.latency > 0.0);
+}
+
+#[test]
+fn degraded_read_correct_all_families() {
+    let mut prng = Prng::new(3);
+    for fam in CodeFamily::paper_baselines() {
+        let mut dss = build(fam, Scheme::S42);
+        dss.ingest_random_stripes(1, &mut prng).unwrap();
+        for target in [0usize, 7, 29] {
+            let node = dss.metadata().node_of(0, target);
+            dss.fail_node(node);
+            let r = dss.degraded_read(0, target).unwrap();
+            assert!(r.latency > 0.0, "{fam:?} block {target}");
+            dss.heal_node(node);
+            dss.quiesce();
+        }
+    }
+}
+
+#[test]
+fn reconstruction_all_block_kinds() {
+    let mut prng = Prng::new(4);
+    for fam in CodeFamily::paper_baselines() {
+        let mut dss = build(fam, Scheme::S42);
+        dss.ingest_random_stripes(1, &mut prng).unwrap();
+        // one data, one global parity, one local parity
+        for target in [0usize, 30, 41] {
+            let node = dss.metadata().node_of(0, target);
+            dss.fail_node(node);
+            let r = dss.reconstruct(0, target).unwrap();
+            assert!(r.latency > 0.0, "{fam:?} block {target}");
+            dss.heal_node(node);
+            dss.quiesce();
+        }
+    }
+}
+
+#[test]
+fn multi_failure_degraded_read() {
+    let mut prng = Prng::new(5);
+    let mut dss = build(CodeFamily::UniLrc, Scheme::S42);
+    dss.ingest_random_stripes(1, &mut prng).unwrap();
+    // fail three blocks in the same group: local XOR no longer suffices,
+    // the proxy must fall back to the generic decoder
+    for b in [0usize, 1, 2] {
+        dss.fail_node(dss.metadata().node_of(0, b));
+    }
+    let r = dss.degraded_read(0, 1).unwrap();
+    assert!(r.latency > 0.0);
+    // cross-cluster sources are now unavoidable
+    assert!(r.cross_bytes as usize > BS);
+}
+
+#[test]
+fn full_node_recovery_runs_and_is_parallel() {
+    let mut prng = Prng::new(6);
+    let mut dss = build(CodeFamily::UniLrc, Scheme::S42);
+    dss.ingest_random_stripes(6, &mut prng).unwrap();
+    // pick the node hosting stripe 0 block 0
+    let node = dss.metadata().node_of(0, 0);
+    let lost = dss.metadata().blocks_on_node(node).len();
+    assert!(lost >= 1);
+    dss.fail_node(node);
+    let r = dss.recover_node(node).unwrap();
+    assert_eq!(r.blocks, lost);
+    assert_eq!(r.bytes, lost * BS);
+    assert!(r.cross_bytes == 0, "UniLRC node recovery is cluster-local");
+    // parallel: total time far less than sum of serialized repairs
+    assert!(r.seconds < lost as f64 * 0.05);
+}
+
+#[test]
+fn unilrc_beats_baselines_on_reconstruction_latency() {
+    // the Fig 10(c) shape on the virtual testbed
+    let mut prng = Prng::new(7);
+    let mut lat = std::collections::HashMap::new();
+    for fam in CodeFamily::paper_baselines() {
+        let mut dss = build(fam, Scheme::S42);
+        dss.ingest_random_stripes(1, &mut prng).unwrap();
+        let mut acc = 0.0;
+        let mut cnt = 0;
+        for target in 0..dss.code.n() {
+            let node = dss.metadata().node_of(0, target);
+            dss.fail_node(node);
+            let r = dss.reconstruct(0, target).unwrap();
+            acc += r.latency;
+            cnt += 1;
+            dss.heal_node(node);
+            dss.quiesce();
+        }
+        lat.insert(fam, acc / cnt as f64);
+    }
+    let uni = lat[&CodeFamily::UniLrc];
+    for fam in [CodeFamily::Alrc, CodeFamily::Olrc, CodeFamily::Ulrc] {
+        assert!(
+            uni <= lat[&fam] * 1.05,
+            "UniLRC {uni:.6}s vs {fam:?} {:.6}s",
+            lat[&fam]
+        );
+    }
+    // OLRC's 25-wide groups must be clearly worst
+    assert!(lat[&CodeFamily::Olrc] > uni * 1.5);
+}
+
+#[test]
+fn normal_read_load_balance_shape() {
+    // Fig 10(a)/Fig 2(b): UniLRC ≤ ULRC on normal-read latency
+    let mut prng = Prng::new(8);
+    let mut lat = std::collections::HashMap::new();
+    for fam in [CodeFamily::UniLrc, CodeFamily::Ulrc] {
+        let mut dss = build(fam, Scheme::S42);
+        dss.ingest_random_stripes(2, &mut prng).unwrap();
+        let a = dss.normal_read(0).unwrap().latency;
+        dss.quiesce();
+        let b = dss.normal_read(1).unwrap().latency;
+        lat.insert(fam, (a + b) / 2.0);
+    }
+    assert!(lat[&CodeFamily::UniLrc] < lat[&CodeFamily::Ulrc] * 1.01);
+}
+
+#[test]
+fn exp4_unilrc_flat_under_bandwidth_sweep() {
+    // Fig 11(a): UniLRC reconstruction is insensitive to cross-cluster bw
+    let mut prng = Prng::new(9);
+    let mut lats = Vec::new();
+    for gbps in [0.5, 1.0, 10.0] {
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        let topo = Topology::new(6, 10);
+        let mut dss = Dss::new(
+            code,
+            &UniLrcPlace,
+            topo,
+            NetConfig::default().with_cross_gbps(gbps),
+            Arc::new(NativeCoder),
+            DssConfig { block_size: BS, aggregated: true, time_compute: false },
+        );
+        dss.ingest_random_stripes(1, &mut prng).unwrap();
+        let node = dss.metadata().node_of(0, 0);
+        dss.fail_node(node);
+        lats.push(dss.reconstruct(0, 0).unwrap().latency);
+    }
+    let spread = (lats[2] - lats[0]).abs() / lats[0];
+    assert!(spread < 0.05, "UniLRC should be flat: {lats:?}");
+}
+
+#[test]
+fn workload_reads_correct_mix() {
+    use unilrc::client::workload::{Workload, WorkloadSpec};
+    let mut prng = Prng::new(10);
+    let mut dss = build(CodeFamily::UniLrc, Scheme::S42);
+    dss.ingest_random_stripes(12, &mut prng).unwrap();
+    let wl = Workload::place(&dss, WorkloadSpec::default(), 25, &mut prng);
+    assert_eq!(wl.objects.len(), 25);
+    // read every object, then degrade one node and re-read
+    for o in 0..wl.objects.len() {
+        let r = wl.read_object(&mut dss, o).unwrap();
+        assert!(r.latency > 0.0);
+        dss.quiesce();
+    }
+    let node = dss.metadata().node_of(0, 0);
+    dss.fail_node(node);
+    for o in 0..wl.objects.len() {
+        let r = wl.read_object(&mut dss, o).unwrap();
+        assert!(r.latency > 0.0);
+        dss.quiesce();
+    }
+}
