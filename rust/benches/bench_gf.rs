@@ -1,8 +1,13 @@
-//! §Perf micro-benchmarks: the GF(2^8) slice kernels (native backend) and
-//! the PJRT fold path — the prototype's coding hot spots.
+//! §Perf micro-benchmarks: the GF(2^8) engine tiers (scalar SWAR vs SIMD
+//! vs striped-parallel), the slice kernels on the default engine, and the
+//! PJRT fold path — the prototype's coding hot spots.
+//!
+//! Set `UNILRC_BENCH_JSON=BENCH_gf.json` to also emit a machine-readable
+//! artifact (CI archives it for the perf trajectory).
 
-use unilrc::bench_util::{black_box, section, Bencher};
+use unilrc::bench_util::{black_box, section, Bencher, JsonReport};
 use unilrc::codes::spec::{CodeFamily, Scheme};
+use unilrc::gf::dispatch::{GfEngine, Kernel};
 use unilrc::gf::slice::{gf_matmul_blocks, mul_slice, xor_fold};
 use unilrc::prng::Prng;
 use unilrc::runtime::{CodingEngine, Manifest, NativeCoder, PjrtCoder};
@@ -11,40 +16,108 @@ fn main() {
     let b = Bencher::from_env();
     let mut p = Prng::new(3);
     const MB: usize = 1 << 20;
+    let mut report = JsonReport::new("bench_gf");
+    report.meta("detected_kernel", Kernel::detect().name());
 
-    section("GF slice kernels (1 MiB blocks)");
+    // ------------------------------------------------ engine tier shootout
+    section("GF engine tiers — mul_acc 1 MiB, single thread");
+    let src = p.bytes(MB);
+    let mut dst = p.bytes(MB);
+    let mut scalar_mibs = 0.0;
+    for k in Kernel::all().into_iter().rev() {
+        // rev(): scalar first, so the baseline prints before the SIMD tiers
+        if !k.available() {
+            continue;
+        }
+        let e = GfEngine::new(k);
+        let s = b.bench_throughput(&format!("mul_acc c=0x53 [{k}]"), MB, || {
+            e.mul_acc(black_box(0x53), black_box(&src), black_box(&mut dst));
+        });
+        if k == Kernel::Scalar {
+            scalar_mibs = s.mib_per_s(MB);
+        } else if scalar_mibs > 0.0 {
+            println!("  -> {:.2}x over scalar", s.mib_per_s(MB) / scalar_mibs);
+        }
+        report.add(&s, MB);
+    }
+
+    section("GF engine tiers — xor 1 MiB, single thread");
+    for k in Kernel::all().into_iter().rev() {
+        if !k.available() {
+            continue;
+        }
+        let e = GfEngine::new(k);
+        let s = b.bench_throughput(&format!("xor [{k}]"), MB, || {
+            e.xor(black_box(&mut dst), black_box(&src));
+        });
+        report.add(&s, MB);
+    }
+
+    // ------------------------------------------- striped parallel executor
+    section("Striped executor — UniLRC(42,30) encode, 1 MiB blocks");
+    let code = Scheme::S42.build(CodeFamily::UniLrc);
+    let data: Vec<Vec<u8>> = (0..code.k()).map(|_| p.bytes(MB)).collect();
+    let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+    let rows: Vec<&[u8]> = (0..code.m()).map(|i| code.parity_matrix().row(i)).collect();
+    let mut outs = vec![vec![0u8; MB]; code.m()];
+    let best = Kernel::detect();
+    let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+    for (label, e) in [
+        ("scalar x1".to_string(), GfEngine::scalar()),
+        (format!("{best} x1"), GfEngine::new(best)),
+        (format!("{best} x{threads}"), GfEngine::new(best).with_threads(threads)),
+    ] {
+        let s = b.bench_throughput(&format!("encode 42 [{label}]"), code.k() * MB, || {
+            e.matmul_blocks(black_box(&rows), black_box(&drefs), black_box(&mut outs));
+        });
+        report.add(&s, code.k() * MB);
+    }
+
+    // ---------------------------------------- default-engine slice kernels
+    section("GF slice kernels on the default engine (1 MiB blocks)");
     let srcs: Vec<Vec<u8>> = (0..6).map(|_| p.bytes(MB)).collect();
     let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
     let mut out = vec![0u8; MB];
-    b.bench_throughput("xor_fold r=6 (UniLRC repair)", 6 * MB, || {
+    let s = b.bench_throughput("xor_fold r=6 (UniLRC repair)", 6 * MB, || {
         xor_fold(black_box(&mut out), black_box(&refs));
     });
-    b.bench_throughput("mul_slice c=0x53", MB, || {
+    report.add(&s, 6 * MB);
+    let s = b.bench_throughput("mul_slice c=0x53", MB, || {
         mul_slice(black_box(0x53), black_box(&srcs[0]), black_box(&mut out));
     });
+    report.add(&s, MB);
 
-    section("Full-stripe encode (native), 64 KiB blocks");
+    section("Full-stripe encode (default engine), 64 KiB blocks");
     for scheme in Scheme::paper_schemes() {
         let code = scheme.build(CodeFamily::UniLrc);
         let data: Vec<Vec<u8>> = (0..code.k()).map(|_| p.bytes(65536)).collect();
         let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
         let rows: Vec<&[u8]> = (0..code.m()).map(|i| code.parity_matrix().row(i)).collect();
         let mut outs = vec![vec![0u8; 65536]; code.m()];
-        b.bench_throughput(&format!("encode {} (k·B in)", scheme.label()), code.k() * 65536, || {
+        let s = b.bench_throughput(&format!("encode {} (k·B in)", scheme.label()), code.k() * 65536, || {
             gf_matmul_blocks(black_box(&rows), black_box(&drefs), black_box(&mut outs));
         });
+        report.add(&s, code.k() * 65536);
     }
 
     if Manifest::load(Manifest::default_dir()).is_ok() {
-        section("PJRT backend vs native (xor fold r=6, 1 MiB)");
-        let pjrt = PjrtCoder::new(None).unwrap();
-        b.bench_throughput("pjrt fold", 6 * MB, || {
-            black_box(pjrt.fold(black_box(&refs)).unwrap());
-        });
-        b.bench_throughput("native fold", 6 * MB, || {
-            black_box(NativeCoder.fold(black_box(&refs)).unwrap());
-        });
+        match PjrtCoder::new(None) {
+            Ok(pjrt) => {
+                section("PJRT backend vs native (xor fold r=6, 1 MiB)");
+                let s = b.bench_throughput("pjrt fold", 6 * MB, || {
+                    black_box(pjrt.fold(black_box(&refs)).unwrap());
+                });
+                report.add(&s, 6 * MB);
+                let s = b.bench_throughput("native fold", 6 * MB, || {
+                    black_box(NativeCoder.fold(black_box(&refs)).unwrap());
+                });
+                report.add(&s, 6 * MB);
+            }
+            Err(e) => println!("PJRT section skipped: {e}"),
+        }
     } else {
         println!("artifacts/ missing — run `make artifacts` for the PJRT section");
     }
+
+    report.write_if_requested();
 }

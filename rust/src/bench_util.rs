@@ -144,6 +144,76 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Machine-readable bench artifact (`serde` is unavailable offline, and the
+/// schema is flat): collects samples and writes them as JSON to the path in
+/// `UNILRC_BENCH_JSON`, so CI can archive a throughput trajectory.
+pub struct JsonReport {
+    bench: String,
+    meta: Vec<(String, String)>,
+    rows: Vec<String>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> JsonReport {
+        JsonReport { bench: bench.to_string(), meta: Vec::new(), rows: Vec::new() }
+    }
+
+    /// Attach a free-form context field (engine description, CPU, …).
+    pub fn meta(&mut self, key: &str, value: &str) {
+        self.meta.push((key.to_string(), value.to_string()));
+    }
+
+    /// Record a sample with its per-iteration byte count.
+    pub fn add(&mut self, s: &Sample, bytes_per_iter: usize) {
+        self.rows.push(format!(
+            r#"{{"name":{},"median_ms":{:.6},"mib_per_s":{:.3},"iters":{}}}"#,
+            json_str(&s.name),
+            s.median.as_secs_f64() * 1e3,
+            s.mib_per_s(bytes_per_iter),
+            s.iters
+        ));
+    }
+
+    /// Write to `$UNILRC_BENCH_JSON` if set; returns the path written.
+    pub fn write_if_requested(&self) -> Option<String> {
+        let path = std::env::var("UNILRC_BENCH_JSON").ok()?;
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": {},\n", json_str(&self.bench)));
+        for (k, v) in &self.meta {
+            out.push_str(&format!("  {}: {},\n", json_str(k), json_str(v)));
+        }
+        out.push_str("  \"results\": [\n    ");
+        out.push_str(&self.rows.join(",\n    "));
+        out.push_str("\n  ]\n}\n");
+        match std::fs::write(&path, out) {
+            Ok(()) => {
+                println!("\nwrote {path}");
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("failed to write {path}: {e}");
+                None
+            }
+        }
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 /// Section header for bench output.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
@@ -163,6 +233,27 @@ mod tests {
         assert!(s.iters >= 5);
         assert!(s.median <= s.max);
         assert!(s.min <= s.median);
+    }
+
+    #[test]
+    fn json_report_escapes_and_writes() {
+        assert_eq!(json_str("a\"b\\c"), r#""a\"b\\c""#);
+        let mut r = JsonReport::new("unit");
+        r.meta("engine", "scalar");
+        r.add(
+            &Sample {
+                name: "x".into(),
+                iters: 1,
+                mean: Duration::from_secs(1),
+                median: Duration::from_secs(1),
+                stddev: Duration::ZERO,
+                min: Duration::from_secs(1),
+                max: Duration::from_secs(1),
+            },
+            1 << 20,
+        );
+        // no env var → no write, no panic
+        assert!(r.write_if_requested().is_none() || std::env::var("UNILRC_BENCH_JSON").is_ok());
     }
 
     #[test]

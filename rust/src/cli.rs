@@ -14,6 +14,7 @@ use crate::analysis::tradeoff;
 use crate::codes::layout;
 use crate::codes::spec::{CodeFamily, Scheme};
 use crate::experiments::{self, ExpConfig};
+use crate::gf::dispatch::{self, GfEngine, Kernel};
 use std::collections::HashMap;
 
 /// Run the CLI; returns the process exit code.
@@ -35,6 +36,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         "layout" => cmd_layout(&flags),
         "analyze" => cmd_analyze(&flags),
         "experiment" => cmd_experiment(args.get(1).map(|s| s.as_str()), &flags),
+        "engine" => cmd_engine(),
         "golden" => cmd_golden(&flags),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -52,12 +54,18 @@ USAGE:
   unilrc analyze [--fig3b] [--fig5] [--fig8] [--table2] [--table4] [--all]
   unilrc experiment <1..6> [--config FILE] [--scheme S] [--block-kb N]
                     [--stripes N] [--cross-gbps X] [--backend native|pjrt] [--raw]
+                    [--gf-kernel auto|scalar|ssse3|avx2|neon] [--gf-threads N]
+  unilrc engine                                  show GF engine tiers
   unilrc golden  [--out FILE]
   unilrc help
 
 Experiments (paper §6): 1 normal read · 2 degraded read · 3 recovery
 (single-block + full-node) · 4 bandwidth sweep · 5 decode throughput ·
 6 production workload.
+
+The GF engine tier defaults to the best the CPU supports; override with
+--gf-kernel / --gf-threads or UNILRC_GF_KERNEL / UNILRC_GF_THREADS
+(see PERF.md).
 ";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -83,6 +91,22 @@ fn scheme_of(flags: &HashMap<String, String>) -> anyhow::Result<Scheme> {
 }
 
 fn exp_config(flags: &HashMap<String, String>) -> anyhow::Result<ExpConfig> {
+    // GF engine flags install first so the CLI wins over config-file keys
+    // (the process-wide engine freezes at first install).
+    if flags.contains_key("gf-kernel") || flags.contains_key("gf-threads") {
+        let mut engine = GfEngine::from_env();
+        if let Some(k) = flags.get("gf-kernel") {
+            let k = Kernel::parse(k)
+                .ok_or_else(|| anyhow::anyhow!("bad --gf-kernel {k:?} (try `unilrc engine`)"))?;
+            engine = engine.with_kernel(k);
+        }
+        if let Some(t) = flags.get("gf-threads") {
+            engine = engine.with_threads(t.parse()?);
+        }
+        if !dispatch::install(engine) {
+            eprintln!("note: GF engine already initialized — --gf-kernel/--gf-threads ignored");
+        }
+    }
     // --config FILE loads a TOML-subset base; explicit flags override it.
     let mut cfg = match flags.get("config") {
         Some(path) => {
@@ -113,6 +137,18 @@ fn exp_config(flags: &HashMap<String, String>) -> anyhow::Result<ExpConfig> {
         cfg = cfg.with_pjrt()?;
     }
     Ok(cfg)
+}
+
+/// `unilrc engine` — report detected and available GF kernel tiers.
+fn cmd_engine() -> anyhow::Result<()> {
+    println!("=== GF(2^8) engine ===");
+    println!("detected best tier : {}", Kernel::detect());
+    for k in Kernel::all() {
+        println!("  {:<8} {}", k.name(), if k.available() { "available" } else { "-" });
+    }
+    println!("active engine      : {}", dispatch::engine().describe());
+    println!("override via --gf-kernel/--gf-threads or UNILRC_GF_KERNEL/UNILRC_GF_THREADS");
+    Ok(())
 }
 
 fn cmd_layout(flags: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -368,6 +404,16 @@ mod tests {
     #[test]
     fn layout_runs() {
         cmd_layout(&HashMap::new()).unwrap();
+    }
+
+    #[test]
+    fn engine_runs() {
+        cmd_engine().unwrap();
+    }
+
+    #[test]
+    fn bad_gf_kernel_errors() {
+        assert!(exp_config(&parse_flags(&["--gf-kernel".into(), "mmx".into()])).is_err());
     }
 
     #[test]

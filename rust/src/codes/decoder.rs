@@ -8,12 +8,13 @@
 //! the sources actually referenced, and can be executed on real byte blocks.
 
 use super::Code;
+use crate::gf::pool;
 use crate::gf::slice::gf_matmul_blocks;
 use crate::gf::tables::{gf_inv, gf_mul};
 use crate::gf::Matrix;
 
 /// A planned multi-erasure decode.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DecodePlan {
     /// Erased block ids, in the order rows of `coeffs` reconstruct them.
     pub erased: Vec<usize>,
@@ -42,12 +43,15 @@ impl DecodePlan {
     }
 
     /// Execute on real blocks: `sources[i]` is the block `self.sources[i]`.
-    /// Returns the reconstructed blocks in `self.erased` order.
+    /// Returns the reconstructed blocks in `self.erased` order. Output
+    /// buffers come from the block pool; callers on the repair path may
+    /// return them via [`crate::gf::pool::recycle`].
     pub fn execute(&self, sources: &[&[u8]]) -> Vec<Vec<u8>> {
         assert_eq!(sources.len(), self.sources.len());
         let len = sources.first().map_or(0, |s| s.len());
         let rows: Vec<&[u8]> = (0..self.coeffs.rows()).map(|i| self.coeffs.row(i)).collect();
-        let mut outs = vec![vec![0u8; len]; self.erased.len()];
+        let mut outs: Vec<Vec<u8>> =
+            (0..self.erased.len()).map(|_| pool::take_zeroed(len)).collect();
         gf_matmul_blocks(&rows, sources, &mut outs);
         outs
     }
@@ -77,7 +81,13 @@ pub fn plan(code: &Code, erased: &[usize]) -> Option<DecodePlan> {
         return None;
     }
     let h = code.parity_check();
-    let surviving: Vec<usize> = (0..code.n()).filter(|b| !e.contains(b)).collect();
+    // Boolean erasure mask instead of an O(n·|E|) `e.contains` scan per
+    // block — |E| can be ~n/α for whole-cluster failures on wide codes.
+    let mut erased_mask = vec![false; code.n()];
+    for &b in &e {
+        erased_mask[b] = true;
+    }
+    let surviving: Vec<usize> = (0..code.n()).filter(|&b| !erased_mask[b]).collect();
 
     // Augmented system [H_E | H_S], reduced so H_E → [I; 0]. In GF(2^k),
     // H_E·x_E = H_S·x_S (no sign: char 2).

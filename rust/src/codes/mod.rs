@@ -12,16 +12,20 @@ pub mod alrc;
 pub mod decoder;
 pub mod layout;
 pub mod olrc;
+pub mod plan_cache;
 pub mod rs;
 pub mod spec;
 pub mod ulrc;
 pub mod unilrc;
 
 pub use decoder::DecodePlan;
+pub use plan_cache::{CachedPlan, PlanCache};
 pub use spec::{CodeFamily, Scheme};
 
+use crate::gf::pool;
 use crate::gf::slice::{gf_matmul_blocks, xor_fold};
 use crate::gf::Matrix;
+use std::sync::Arc;
 
 /// Role of a block within a stripe.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -75,16 +79,18 @@ impl RepairPlan {
         self.sources.len().saturating_sub(1)
     }
 
-    /// Execute on real blocks (sources given in plan order).
+    /// Execute on real blocks (sources given in plan order). The output
+    /// buffer comes from the block pool; repair-path callers may return it
+    /// via [`crate::gf::pool::recycle`].
     pub fn execute(&self, sources: &[&[u8]]) -> Vec<u8> {
         assert_eq!(sources.len(), self.sources.len());
         let len = sources[0].len();
         if self.xor_only() {
-            let mut out = vec![0u8; len];
+            let mut out = pool::take_zeroed(len);
             xor_fold(&mut out, sources);
             out
         } else {
-            let mut outs = vec![vec![0u8; len]];
+            let mut outs = vec![pool::take_zeroed(len)];
             gf_matmul_blocks(&[&self.coeffs], sources, &mut outs);
             outs.pop().unwrap()
         }
@@ -264,13 +270,15 @@ impl Code {
             let coeffs = vec![1u8; sources.len()];
             RepairPlan { target: block, sources, coeffs }
         } else {
+            // Outside-group repairs need the generic decoder; the plan is
+            // deterministic per (code, block), so reuse it from the cache.
             let plan = self
-                .decode_plan(&[block])
+                .decode_plan_cached(&[block])
                 .expect("single-block repair must always be possible");
             RepairPlan {
                 target: block,
-                coeffs: plan.coeffs.row(0).to_vec(),
-                sources: plan.sources,
+                coeffs: plan.plan.coeffs.row(0).to_vec(),
+                sources: plan.plan.sources.clone(),
             }
         }
     }
@@ -284,8 +292,17 @@ impl Code {
     // ---------------------------------------------------------------- decode
 
     /// Plan a multi-erasure decode; `None` if the pattern is unrecoverable.
+    /// Always computes from scratch — the repair paths use
+    /// [`Self::decode_plan_cached`] instead.
     pub fn decode_plan(&self, erased: &[usize]) -> Option<DecodePlan> {
         decoder::plan(self, erased)
+    }
+
+    /// [`Self::decode_plan`] through the process-wide [`PlanCache`]:
+    /// repeated erasure patterns skip the rank test and matrix inversion
+    /// and come back with the SIMD nibble tables prebuilt.
+    pub fn decode_plan_cached(&self, erased: &[usize]) -> Option<Arc<CachedPlan>> {
+        plan_cache::global().get_or_compute(self, erased)
     }
 
     /// True if the erasure pattern is recoverable.

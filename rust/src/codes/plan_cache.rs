@@ -1,0 +1,233 @@
+//! LRU cache of decode plans.
+//!
+//! Building a [`DecodePlan`] runs a rank test and a Gauss–Jordan solve over
+//! the parity-check matrix — O((n−k)·n·|E|) field ops. Repairs repeat the
+//! same erasure pattern constantly (every block of a failed node, every
+//! stripe of a reconstruction drill), so the plan is worth caching: keyed
+//! by (code name, sorted erasure pattern), the cache returns the previously
+//! inverted plan — with the per-coefficient split-nibble tables the SIMD
+//! kernels consume already built — and the repair skips matrix work
+//! entirely. Unrecoverable patterns are cached too (as `None`), so repeated
+//! rank-deficient probes are also free.
+//!
+//! Azure-LRC-style deployments do the same plan reuse; `tests/plan_cache.rs`
+//! asserts cached plans are identical to freshly computed ones and that
+//! repeated lookups do not re-invert.
+
+use super::decoder::{self, DecodePlan};
+use super::Code;
+use crate::gf::dispatch;
+use crate::gf::pool;
+use crate::gf::slice::NibbleTables;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A decode plan plus the precomputed per-coefficient nibble tables.
+pub struct CachedPlan {
+    pub plan: DecodePlan,
+    /// `erased × sources` tables, parallel to `plan.coeffs`.
+    tables: Vec<Vec<NibbleTables>>,
+}
+
+impl CachedPlan {
+    fn new(plan: DecodePlan) -> CachedPlan {
+        let tables = (0..plan.coeffs.rows())
+            .map(|i| plan.coeffs.row(i).iter().map(|&c| NibbleTables::new(c)).collect())
+            .collect();
+        CachedPlan { plan, tables }
+    }
+
+    /// Execute on real blocks (`sources[i]` is block `plan.sources[i]`),
+    /// using the prebuilt tables and pooled output buffers. Returns the
+    /// reconstructed blocks in `plan.erased` order; callers may hand the
+    /// buffers back via [`crate::gf::pool::recycle`].
+    pub fn execute(&self, sources: &[&[u8]]) -> Vec<Vec<u8>> {
+        assert_eq!(sources.len(), self.plan.sources.len());
+        let len = sources.first().map_or(0, |s| s.len());
+        let mut outs: Vec<Vec<u8>> =
+            (0..self.plan.erased.len()).map(|_| pool::take_zeroed(len)).collect();
+        dispatch::engine().matmul_blocks_t(&self.tables, sources, &mut outs);
+        outs
+    }
+}
+
+type Key = (String, Vec<usize>);
+
+struct Entry {
+    stamp: u64,
+    /// `None` caches "pattern is unrecoverable".
+    val: Option<Arc<CachedPlan>>,
+}
+
+struct Inner {
+    map: BTreeMap<Key, Entry>,
+    tick: u64,
+}
+
+/// Bounded LRU plan cache (thread-safe; plan construction runs outside the
+/// lock so a slow inversion never blocks concurrent hits).
+pub struct PlanCache {
+    cap: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub const fn new(cap: usize) -> PlanCache {
+        PlanCache {
+            cap,
+            inner: Mutex::new(Inner { map: BTreeMap::new(), tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The cached plan for `erased` on `code`, computing and inserting it
+    /// on first sight. `None` means the pattern is unrecoverable.
+    pub fn get_or_compute(&self, code: &Code, erased: &[usize]) -> Option<Arc<CachedPlan>> {
+        let mut pattern = erased.to_vec();
+        pattern.sort_unstable();
+        pattern.dedup();
+        let key: Key = (code.name().to_string(), pattern);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.stamp = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return e.val.clone();
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let val = decoder::plan(code, erased).map(|p| Arc::new(CachedPlan::new(p)));
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        // A racing compute may have inserted meanwhile; keep the first.
+        let entry = inner.map.entry(key).or_insert(Entry { stamp: tick, val });
+        entry.stamp = tick;
+        let out = entry.val.clone();
+        if inner.map.len() > self.cap {
+            if let Some(oldest) =
+                inner.map.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| k.clone())
+            {
+                inner.map.remove(&oldest);
+            }
+        }
+        out
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached plan (stats are preserved).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().map.clear();
+    }
+}
+
+/// Worst-case working set: one entry per block of the widest paper scheme
+/// per family, plus room for multi-failure patterns.
+const GLOBAL_CAP: usize = 1024;
+
+static GLOBAL: PlanCache = PlanCache::new(GLOBAL_CAP);
+
+/// The process-wide plan cache used by [`Code::decode_plan_cached`] and the
+/// proxy repair path.
+pub fn global() -> &'static PlanCache {
+    &GLOBAL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::rs::Rs;
+    use crate::codes::spec::{CodeFamily, Scheme};
+
+    #[test]
+    fn hit_returns_same_plan_without_reinversion() {
+        let cache = PlanCache::new(16);
+        let code = Rs::new(10, 6);
+        let a = cache.get_or_compute(&code, &[1, 3]).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let b = cache.get_or_compute(&code, &[3, 1, 3]).unwrap(); // same normalized pattern
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the cached Arc, not a recompute");
+    }
+
+    #[test]
+    fn cached_equals_fresh() {
+        let cache = PlanCache::new(16);
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        for pattern in [vec![0], vec![0, 1], vec![5, 17, 40], vec![2, 9]] {
+            let cached = cache.get_or_compute(&code, &pattern).unwrap();
+            let fresh = decoder::plan(&code, &pattern).unwrap();
+            assert_eq!(cached.plan, fresh, "pattern {pattern:?}");
+        }
+    }
+
+    #[test]
+    fn unrecoverable_is_cached_as_none() {
+        let cache = PlanCache::new(16);
+        let code = Rs::new(10, 6);
+        assert!(cache.get_or_compute(&code, &[0, 1, 2, 3, 4]).is_none());
+        assert!(cache.get_or_compute(&code, &[0, 1, 2, 3, 4]).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn distinct_codes_do_not_collide() {
+        let cache = PlanCache::new(16);
+        let a = Rs::new(10, 6);
+        let b = Rs::new(8, 5);
+        let pa = cache.get_or_compute(&a, &[0]).unwrap();
+        let pb = cache.get_or_compute(&b, &[0]).unwrap();
+        assert_eq!(cache.misses(), 2);
+        assert_ne!(pa.plan.sources.len(), pb.plan.sources.len());
+    }
+
+    #[test]
+    fn eviction_bounds_len() {
+        let cache = PlanCache::new(4);
+        let code = Rs::new(10, 6);
+        for b in 0..10 {
+            cache.get_or_compute(&code, &[b]);
+        }
+        assert!(cache.len() <= 4);
+        // the most recent entry survived
+        cache.get_or_compute(&code, &[9]);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn cached_execute_reconstructs() {
+        let cache = PlanCache::new(8);
+        let code = Rs::new(10, 6);
+        let mut p = crate::prng::Prng::new(11);
+        let data: Vec<Vec<u8>> = (0..code.k()).map(|_| p.bytes(333)).collect();
+        let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let parities = code.encode_blocks(&drefs);
+        let stripe: Vec<Vec<u8>> = data.into_iter().chain(parities).collect();
+        let plan = cache.get_or_compute(&code, &[2, 7]).unwrap();
+        let srcs: Vec<&[u8]> = plan.plan.sources.iter().map(|&s| stripe[s].as_slice()).collect();
+        let rebuilt = plan.execute(&srcs);
+        assert_eq!(rebuilt[0], stripe[2]);
+        assert_eq!(rebuilt[1], stripe[7]);
+    }
+}

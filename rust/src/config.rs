@@ -161,10 +161,27 @@ fn parse_value(s: &str) -> Result<Value> {
 
 /// Build an experiment config from a file (CLI `--config`): recognized
 /// keys under `[experiment]`: `scheme`, `block_kb`, `stripes`,
-/// `cross_gbps`, `aggregated`, `backend`, `seed`.
+/// `cross_gbps`, `aggregated`, `backend`, `seed`, and the GF engine knobs
+/// `gf_kernel` (auto|scalar|ssse3|avx2|neon) / `gf_threads`.
 pub fn experiment_config(cfg: &Config) -> Result<crate::experiments::ExpConfig> {
     use crate::codes::spec::Scheme;
+    use crate::gf::dispatch::{self, GfEngine, Kernel};
     let mut e = crate::experiments::ExpConfig::default();
+    if cfg.get_str("experiment", "gf_kernel").is_some()
+        || cfg.get_usize("experiment", "gf_threads").is_some()
+    {
+        let mut engine = GfEngine::from_env();
+        if let Some(k) = cfg.get_str("experiment", "gf_kernel") {
+            let k = Kernel::parse(k).with_context(|| format!("bad gf_kernel {k:?}"))?;
+            engine = engine.with_kernel(k);
+        }
+        if let Some(t) = cfg.get_usize("experiment", "gf_threads") {
+            engine = engine.with_threads(t);
+        }
+        if !dispatch::install(engine) {
+            eprintln!("note: GF engine already initialized — config gf_kernel/gf_threads ignored");
+        }
+    }
     if let Some(s) = cfg.get_str("experiment", "scheme") {
         e.scheme = Scheme::parse(s).with_context(|| format!("bad scheme {s:?}"))?;
     }
@@ -230,6 +247,14 @@ epsilon = 0.1
         assert_eq!(e.stripes, 4);
         assert!(e.aggregated);
         assert_eq!(e.seed, 42);
+    }
+
+    #[test]
+    fn gf_engine_keys_accepted() {
+        let c = Config::parse("[experiment]\ngf_kernel = \"auto\"").unwrap();
+        assert!(experiment_config(&c).is_ok());
+        let bad = Config::parse("[experiment]\ngf_kernel = \"mmx\"").unwrap();
+        assert!(experiment_config(&bad).is_err());
     }
 
     #[test]

@@ -260,6 +260,7 @@ impl Dss {
             rebuilt.as_slice() == self.meta.block_data(stripe, block).as_slice(),
             "degraded read returned corrupt bytes"
         );
+        crate::gf::pool::recycle(rebuilt);
         Ok(self.net.transfer(ready_at, Endpoint::Proxy(home), Endpoint::Client, bs))
     }
 
@@ -315,6 +316,7 @@ impl Dss {
             rebuilt.as_slice() == self.meta.block_data(stripe, block).as_slice(),
             "reconstruction produced corrupt bytes"
         );
+        crate::gf::pool::recycle(rebuilt);
         // write to a live spare node in the home cluster (or any cluster)
         let spare = self.spare_node(stripe, home)?;
         let done = self.net.transfer(ready_at, Endpoint::Proxy(home), Endpoint::Node(spare), bs);

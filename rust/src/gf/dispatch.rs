@@ -1,0 +1,487 @@
+//! Runtime-dispatched, parallel-striped GF(2^8) engine.
+//!
+//! [`Kernel`] is the instruction-set tier (detected once at startup,
+//! overridable via `UNILRC_GF_KERNEL` / `--gf-kernel`); [`GfEngine`] bundles
+//! a kernel with a striped parallel executor that splits large blocks into
+//! cache-sized lanes and fans them across a scoped thread pool. All tiers
+//! and both execution modes produce byte-identical results — GF(2^8) is
+//! exact and XOR-accumulation is order-independent (`tests/gf_simd.rs`
+//! asserts this differentially).
+//!
+//! The process-wide engine ([`engine`]) backs the hot-path entry points in
+//! [`super::slice`], so every encode / repair / decode in the repo runs at
+//! the selected tier without call sites knowing about dispatch.
+
+use super::slice::{self, NibbleTables};
+use std::sync::OnceLock;
+
+/// Instruction-set tier of the multiply-accumulate kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable SWAR bit-plane loop (`u64` registers) — always available.
+    Scalar,
+    /// x86_64 `PSHUFB` split-nibble lookups, 16 bytes/op.
+    Ssse3,
+    /// x86_64 `VPSHUFB`, 32 bytes/op.
+    Avx2,
+    /// AArch64 `TBL` (`vqtbl1q_u8`), 16 bytes/op.
+    Neon,
+}
+
+impl Kernel {
+    /// Every tier, fastest first.
+    pub fn all() -> [Kernel; 4] {
+        [Kernel::Avx2, Kernel::Neon, Kernel::Ssse3, Kernel::Scalar]
+    }
+
+    /// Best tier the running CPU supports.
+    pub fn detect() -> Kernel {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return Kernel::Avx2;
+            }
+            if is_x86_feature_detected!("ssse3") {
+                return Kernel::Ssse3;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Kernel::Neon;
+            }
+        }
+        Kernel::Scalar
+    }
+
+    /// Can this tier run on the current CPU?
+    pub fn available(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Ssse3 => is_x86_feature_detected!("ssse3"),
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Ssse3 => "ssse3",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// Parse a tier name (`auto` resolves to [`Kernel::detect`]).
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" | "swar" => Some(Kernel::Scalar),
+            "ssse3" => Some(Kernel::Ssse3),
+            "avx2" => Some(Kernel::Avx2),
+            "neon" => Some(Kernel::Neon),
+            "auto" => Some(Kernel::detect()),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Default lane size for the striped executor: half an L2-ish working set,
+/// so one lane's src+dst stay cache-resident while it is processed.
+const DEFAULT_LANE: usize = 64 * 1024;
+
+/// Minimum total bytes of input a call must touch before worker threads are
+/// engaged — below this the scoped-spawn overhead (~tens of µs) dominates.
+const DEFAULT_PAR_WORK: usize = 2 << 20;
+
+/// A GF(2^8) execution engine: one kernel tier + striping parameters.
+#[derive(Debug, Clone)]
+pub struct GfEngine {
+    kernel: Kernel,
+    threads: usize,
+    lane: usize,
+    par_work: usize,
+}
+
+impl Default for GfEngine {
+    fn default() -> Self {
+        GfEngine::auto()
+    }
+}
+
+impl GfEngine {
+    /// Detected kernel, one worker per available core.
+    pub fn auto() -> GfEngine {
+        GfEngine::new(Kernel::detect())
+            .with_threads(std::thread::available_parallelism().map_or(1, |n| n.get()))
+    }
+
+    /// Single-threaded portable baseline (the seed behaviour).
+    pub fn scalar() -> GfEngine {
+        GfEngine::new(Kernel::Scalar)
+    }
+
+    /// Engine on a specific tier; silently falls back to [`Kernel::Scalar`]
+    /// if the tier is not available on this CPU, so a config written on one
+    /// machine stays runnable on another.
+    pub fn new(kernel: Kernel) -> GfEngine {
+        let kernel = if kernel.available() { kernel } else { Kernel::Scalar };
+        GfEngine { kernel, threads: 1, lane: DEFAULT_LANE, par_work: DEFAULT_PAR_WORK }
+    }
+
+    /// Engine configured from the environment:
+    /// `UNILRC_GF_KERNEL` (scalar|ssse3|avx2|neon|auto), `UNILRC_GF_THREADS`,
+    /// `UNILRC_GF_LANE_KB`.
+    pub fn from_env() -> GfEngine {
+        let mut e = GfEngine::auto();
+        if let Ok(k) = std::env::var("UNILRC_GF_KERNEL") {
+            if let Some(k) = Kernel::parse(&k) {
+                e = e.with_kernel(k);
+            }
+        }
+        if let Ok(t) = std::env::var("UNILRC_GF_THREADS") {
+            if let Ok(t) = t.parse::<usize>() {
+                e = e.with_threads(t);
+            }
+        }
+        if let Ok(kb) = std::env::var("UNILRC_GF_LANE_KB") {
+            if let Ok(kb) = kb.parse::<usize>() {
+                e = e.with_lane(kb * 1024);
+            }
+        }
+        e
+    }
+
+    pub fn with_kernel(mut self, kernel: Kernel) -> GfEngine {
+        self.kernel = if kernel.available() { kernel } else { Kernel::Scalar };
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> GfEngine {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn with_lane(mut self, lane_bytes: usize) -> GfEngine {
+        self.lane = lane_bytes.max(64);
+        self
+    }
+
+    /// Lower the parallelism threshold (tests use this to exercise the
+    /// striped path on small blocks).
+    pub fn with_par_work(mut self, bytes: usize) -> GfEngine {
+        self.par_work = bytes;
+        self
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// One-line description for logs and `unilrc engine`.
+    pub fn describe(&self) -> String {
+        format!(
+            "kernel={} threads={} lane={}KiB",
+            self.kernel,
+            self.threads,
+            self.lane / 1024
+        )
+    }
+
+    // ------------------------------------------------------------ slice ops
+
+    /// `dst ^= c · src` on the selected tier.
+    pub fn mul_acc(&self, c: u8, src: &[u8], dst: &mut [u8]) {
+        assert_eq!(dst.len(), src.len(), "mul_acc length mismatch");
+        // The SWAR tier derives its plane constants from `c` directly —
+        // don't build lookup tables it would never read.
+        if self.kernel == Kernel::Scalar {
+            return slice::mul_acc_slice_scalar(c, src, dst);
+        }
+        match c {
+            0 => {}
+            1 => self.xor(dst, src),
+            _ => self.mul_acc_kernel(&NibbleTables::new(c), src, dst),
+        }
+    }
+
+    /// `dst ^= c · src` with the coefficient's tables precomputed (the
+    /// cached-plan hot path: no per-call table build).
+    pub fn mul_acc_t(&self, t: &NibbleTables, src: &[u8], dst: &mut [u8]) {
+        assert_eq!(dst.len(), src.len(), "mul_acc_t length mismatch");
+        match t.c {
+            0 => {}
+            1 => self.xor(dst, src),
+            _ => self.mul_acc_kernel(t, src, dst),
+        }
+    }
+
+    fn mul_acc_kernel(&self, t: &NibbleTables, src: &[u8], dst: &mut [u8]) {
+        // SAFETY: `GfEngine::new`/`with_kernel` only store tiers that
+        // `Kernel::available()` confirmed on this CPU.
+        match self.kernel {
+            Kernel::Scalar => slice::mul_acc_slice_scalar(t.c, src, dst),
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Ssse3 => unsafe { super::simd::x86_64::mul_acc_ssse3(t, src, dst) },
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => unsafe { super::simd::x86_64::mul_acc_avx2(t, src, dst) },
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => unsafe { super::simd::aarch64::mul_acc_neon(t, src, dst) },
+            _ => slice::mul_acc_slice_scalar(t.c, src, dst),
+        }
+    }
+
+    /// `dst ^= src` on the selected tier.
+    pub fn xor(&self, dst: &mut [u8], src: &[u8]) {
+        assert_eq!(dst.len(), src.len(), "xor length mismatch");
+        // SAFETY: kernel availability established at construction.
+        match self.kernel {
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => unsafe { super::simd::x86_64::xor_avx2(dst, src) },
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => unsafe { super::simd::aarch64::xor_neon(dst, src) },
+            _ => slice::xor_slice_scalar(dst, src),
+        }
+    }
+
+    // -------------------------------------------------------- striped ops
+
+    /// Worker count for a call touching `block`-byte rows and `work` total
+    /// input bytes; 1 means run inline.
+    fn workers_for(&self, block: usize, work: usize) -> usize {
+        if self.threads <= 1 || work < self.par_work || block < 2 * self.lane {
+            1
+        } else {
+            self.threads.min(block.div_ceil(self.lane))
+        }
+    }
+
+    /// `dst = srcs[0] ^ srcs[1] ^ …`, striped across workers for large
+    /// blocks (the UniLRC repair path).
+    pub fn fold_blocks(&self, dst: &mut [u8], srcs: &[&[u8]]) {
+        assert!(!srcs.is_empty(), "fold needs at least one source");
+        for s in srcs {
+            assert_eq!(s.len(), dst.len(), "fold length mismatch");
+        }
+        let block = dst.len();
+        let workers = self.workers_for(block, block * srcs.len());
+        if workers <= 1 {
+            dst.copy_from_slice(srcs[0]);
+            for s in &srcs[1..] {
+                self.xor(dst, s);
+            }
+            return;
+        }
+        let lane = self.lane;
+        let mut lanes: Vec<(usize, &mut [u8])> = Vec::with_capacity(block.div_ceil(lane));
+        for (l, chunk) in dst.chunks_mut(lane).enumerate() {
+            lanes.push((l * lane, chunk));
+        }
+        let per = lanes.len().div_ceil(workers);
+        std::thread::scope(|scope| {
+            while !lanes.is_empty() {
+                let group: Vec<_> = lanes.drain(..per.min(lanes.len())).collect();
+                scope.spawn(move || {
+                    for (off, chunk) in group {
+                        let w = chunk.len();
+                        chunk.copy_from_slice(&srcs[0][off..off + w]);
+                        for s in &srcs[1..] {
+                            self.xor(chunk, &s[off..off + w]);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    /// Matrix-style coding primitive: `outs[i] = ⊕_j coeff[i][j] · srcs[j]`,
+    /// striped across workers. Each worker owns a disjoint byte range of
+    /// every output row and walks it source-major, so one cache-resident
+    /// lane of each source is scattered into all rows before moving on.
+    pub fn matmul_blocks(&self, coeff: &[&[u8]], srcs: &[&[u8]], outs: &mut [Vec<u8>]) {
+        let tables: Vec<Vec<NibbleTables>> = coeff
+            .iter()
+            .map(|row| row.iter().map(|&c| NibbleTables::new(c)).collect())
+            .collect();
+        self.matmul_blocks_t(&tables, srcs, outs);
+    }
+
+    /// [`Self::matmul_blocks`] with per-coefficient tables prebuilt — the
+    /// entry point for cached decode plans.
+    pub fn matmul_blocks_t(&self, tables: &[Vec<NibbleTables>], srcs: &[&[u8]], outs: &mut [Vec<u8>]) {
+        assert_eq!(tables.len(), outs.len(), "row count mismatch");
+        let block = srcs.first().map_or(0, |s| s.len());
+        for (row, out) in tables.iter().zip(outs.iter_mut()) {
+            assert_eq!(row.len(), srcs.len(), "column count mismatch");
+            assert_eq!(out.len(), block, "output block size mismatch");
+        }
+        let workers = self.workers_for(block, block * srcs.len() * outs.len().max(1));
+        if workers <= 1 || outs.is_empty() {
+            let mut full: Vec<&mut [u8]> = outs.iter_mut().map(|o| o.as_mut_slice()).collect();
+            self.matmul_lane(tables, srcs, 0, &mut full);
+            return;
+        }
+        let lane = self.lane;
+        let nlanes = block.div_ceil(lane);
+        // Transpose row-major chunking into lane-major work items: lane l
+        // holds the l-th chunk of every output row (disjoint &mut borrows).
+        let mut row_chunks: Vec<_> = outs.iter_mut().map(|o| o.chunks_mut(lane)).collect();
+        let mut lanes: Vec<(usize, Vec<&mut [u8]>)> = Vec::with_capacity(nlanes);
+        for l in 0..nlanes {
+            let chunk: Vec<&mut [u8]> =
+                row_chunks.iter_mut().map(|it| it.next().expect("lane chunk")).collect();
+            lanes.push((l * lane, chunk));
+        }
+        let per = nlanes.div_ceil(workers);
+        std::thread::scope(|scope| {
+            while !lanes.is_empty() {
+                let mut group: Vec<_> = lanes.drain(..per.min(lanes.len())).collect();
+                scope.spawn(move || {
+                    for (off, louts) in group.iter_mut() {
+                        self.matmul_lane(tables, srcs, *off, louts);
+                    }
+                });
+            }
+        });
+    }
+
+    /// One lane of the matmul: outputs are the `[off..off+w)` sub-slices of
+    /// the full rows; sources are indexed with the same offset.
+    fn matmul_lane(&self, tables: &[Vec<NibbleTables>], srcs: &[&[u8]], off: usize, louts: &mut [&mut [u8]]) {
+        for out in louts.iter_mut() {
+            out.fill(0);
+        }
+        for (j, src) in srcs.iter().enumerate() {
+            for (row, out) in tables.iter().zip(louts.iter_mut()) {
+                let w = out.len();
+                self.mul_acc_t(&row[j], &src[off..off + w], out);
+            }
+        }
+    }
+}
+
+static GLOBAL: OnceLock<GfEngine> = OnceLock::new();
+
+/// The process-wide engine. First use freezes it: initialized from the
+/// environment ([`GfEngine::from_env`]) unless [`install`] ran earlier.
+pub fn engine() -> &'static GfEngine {
+    GLOBAL.get_or_init(GfEngine::from_env)
+}
+
+/// Install a specific engine as the process-wide one (CLI `--gf-kernel` /
+/// config `[experiment] gf_kernel`). Returns `false` if the engine was
+/// already initialized — the caller should warn that the override is late.
+pub fn install(e: GfEngine) -> bool {
+    GLOBAL.set(e).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::tables::gf_mul;
+    use crate::prng::Prng;
+
+    fn available_kernels() -> Vec<Kernel> {
+        Kernel::all().into_iter().filter(|k| k.available()).collect()
+    }
+
+    #[test]
+    fn detect_is_available() {
+        assert!(Kernel::detect().available());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in Kernel::all() {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+        }
+        assert!(Kernel::parse("auto").is_some());
+        assert_eq!(Kernel::parse("nope"), None);
+    }
+
+    #[test]
+    fn unavailable_kernel_falls_back_to_scalar() {
+        // At most one of AVX2/NEON exists on any one machine, so whichever
+        // is foreign must clamp to scalar rather than crash later.
+        for k in Kernel::all() {
+            let e = GfEngine::new(k);
+            assert!(e.kernel().available());
+        }
+    }
+
+    #[test]
+    fn every_tier_matches_reference_mul_acc() {
+        let mut p = Prng::new(17);
+        let src = p.bytes(1000);
+        let init = p.bytes(1000);
+        for k in available_kernels() {
+            let e = GfEngine::new(k);
+            for c in [0u8, 1, 2, 0x53, 0xFF] {
+                let mut dst = init.clone();
+                e.mul_acc(c, &src, &mut dst);
+                let expect: Vec<u8> =
+                    init.iter().zip(&src).map(|(&d, &s)| d ^ gf_mul(c, s)).collect();
+                assert_eq!(dst, expect, "kernel={k} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn striped_matmul_matches_serial() {
+        let mut p = Prng::new(18);
+        let block = 10_000; // not a lane multiple: exercises the short tail lane
+        let srcs: Vec<Vec<u8>> = (0..5).map(|_| p.bytes(block)).collect();
+        let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+        let rows: Vec<Vec<u8>> = (0..3).map(|_| p.bytes(5)).collect();
+        let rrefs: Vec<&[u8]> = rows.iter().map(|v| v.as_slice()).collect();
+
+        let serial = GfEngine::scalar();
+        let mut expect = vec![vec![0u8; block]; 3];
+        serial.matmul_blocks(&rrefs, &refs, &mut expect);
+
+        for k in available_kernels() {
+            let par = GfEngine::new(k).with_threads(4).with_lane(1024).with_par_work(0);
+            let mut got = vec![vec![1u8; block]; 3]; // nonzero: checks overwrite
+            par.matmul_blocks(&rrefs, &refs, &mut got);
+            assert_eq!(got, expect, "kernel={k}");
+        }
+    }
+
+    #[test]
+    fn striped_fold_matches_serial() {
+        let mut p = Prng::new(19);
+        let block = 7777;
+        let srcs: Vec<Vec<u8>> = (0..6).map(|_| p.bytes(block)).collect();
+        let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+        let mut expect = vec![0u8; block];
+        GfEngine::scalar().fold_blocks(&mut expect, &refs);
+        for k in available_kernels() {
+            let par = GfEngine::new(k).with_threads(3).with_lane(512).with_par_work(0);
+            let mut got = vec![9u8; block];
+            par.fold_blocks(&mut got, &refs);
+            assert_eq!(got, expect, "kernel={k}");
+        }
+    }
+
+    #[test]
+    fn empty_matmul_ok() {
+        let mut outs: Vec<Vec<u8>> = vec![];
+        GfEngine::auto().matmul_blocks(&[], &[], &mut outs);
+        assert!(outs.is_empty());
+    }
+}

@@ -6,15 +6,23 @@
 //!
 //! * [`tables`] — scalar field ops backed by compile-time exp/log tables.
 //! * [`slice`] — the hot path: XOR and constant-multiply-accumulate over
-//!   byte slices (word-level SWAR XOR, nibble-table and bit-plane multiply).
+//!   byte slices, dispatched through the engine.
+//! * [`simd`] — SSSE3 / AVX2 / NEON split-nibble (`PSHUFB`-class) kernels.
+//! * [`dispatch`] — runtime CPU-feature tier selection ([`Kernel`]) and the
+//!   lane-striped parallel executor ([`GfEngine`]).
+//! * [`pool`] — recycled block buffers for the repair path.
 //! * [`matrix`] — dense matrices over GF(2^8): product, rank, inversion,
 //!   and structured constructors (Vandermonde, Cauchy) used by the code
 //!   constructions.
 
+pub mod dispatch;
 pub mod matrix;
+pub mod pool;
+pub mod simd;
 pub mod slice;
 pub mod tables;
 
+pub use dispatch::{GfEngine, Kernel};
 pub use matrix::Matrix;
-pub use slice::{mul_acc_slice, mul_slice, xor_fold, xor_slice};
+pub use slice::{mul_acc_slice, mul_slice, xor_fold, xor_slice, NibbleTables};
 pub use tables::{gf_div, gf_exp, gf_inv, gf_log, gf_mul, gf_pow};

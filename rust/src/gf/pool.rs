@@ -1,0 +1,140 @@
+//! Reusable block-buffer pool.
+//!
+//! Every repair used to allocate fresh `vec![0u8; block_size]` outputs —
+//! at 1 MB blocks that is a page-faulting allocation per rebuilt block, on
+//! the hottest path in the system. The pool recycles those buffers:
+//! [`take_zeroed`] reuses a warm allocation when one is available (the
+//! `resize` re-zeroes it, which touches already-mapped pages), and
+//! [`recycle`] returns a buffer once its contents are consumed.
+//!
+//! The pool is a bounded LIFO — deliberately simple: buffers of any size
+//! mix freely (capacity is checked on reuse), and at most [`MAX_POOLED`]
+//! buffers are retained so a burst of large repairs cannot pin memory.
+
+use std::sync::Mutex;
+
+/// Retention bound: enough for a full-node recovery fan-out, small enough
+/// that the pool holds at most ~64 MB of 1 MB blocks.
+const MAX_POOLED: usize = 64;
+
+/// A bounded pool of byte buffers.
+pub struct BufferPool {
+    bufs: Mutex<Vec<Vec<u8>>>,
+    max: usize,
+}
+
+impl BufferPool {
+    pub const fn new(max: usize) -> BufferPool {
+        BufferPool { bufs: Mutex::new(Vec::new()), max }
+    }
+
+    /// A zeroed buffer of exactly `len` bytes, reusing a pooled allocation
+    /// with sufficient capacity when possible. Undersized pooled buffers
+    /// are left in place — consuming one would reallocate anyway while
+    /// starving future smaller requests.
+    pub fn take_zeroed(&self, len: usize) -> Vec<u8> {
+        let reused = {
+            let mut bufs = self.bufs.lock().unwrap();
+            bufs.iter().rposition(|b| b.capacity() >= len).map(|i| bufs.swap_remove(i))
+        };
+        match reused {
+            Some(mut b) => {
+                b.clear();
+                b.resize(len, 0);
+                b
+            }
+            None => vec![0u8; len],
+        }
+    }
+
+    /// Return a buffer to the pool (dropped if the pool is full or the
+    /// buffer has no backing allocation).
+    pub fn recycle(&self, buf: Vec<u8>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < self.max {
+            bufs.push(buf);
+        }
+    }
+
+    /// Buffers currently pooled (for tests / introspection).
+    pub fn len(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+static GLOBAL: BufferPool = BufferPool::new(MAX_POOLED);
+
+/// The process-wide pool used by the decode and proxy paths.
+pub fn global() -> &'static BufferPool {
+    &GLOBAL
+}
+
+/// [`BufferPool::take_zeroed`] on the process-wide pool.
+pub fn take_zeroed(len: usize) -> Vec<u8> {
+    GLOBAL.take_zeroed(len)
+}
+
+/// [`BufferPool::recycle`] on the process-wide pool.
+pub fn recycle(buf: Vec<u8>) {
+    GLOBAL.recycle(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_after_recycle() {
+        let pool = BufferPool::new(4);
+        let mut b = pool.take_zeroed(100);
+        b.iter_mut().for_each(|x| *x = 0xAB);
+        pool.recycle(b);
+        let b2 = pool.take_zeroed(50);
+        assert_eq!(b2.len(), 50);
+        assert!(b2.iter().all(|&x| x == 0), "reused buffer must be re-zeroed");
+    }
+
+    #[test]
+    fn reuses_allocation() {
+        let pool = BufferPool::new(4);
+        let b = pool.take_zeroed(1024);
+        let ptr = b.as_ptr();
+        pool.recycle(b);
+        let b2 = pool.take_zeroed(512);
+        assert_eq!(b2.as_ptr(), ptr, "should reuse the pooled allocation");
+    }
+
+    #[test]
+    fn bounded_retention() {
+        let pool = BufferPool::new(2);
+        for _ in 0..5 {
+            pool.recycle(vec![0u8; 16]);
+        }
+        assert_eq!(pool.len(), 2);
+    }
+
+    #[test]
+    fn large_request_does_not_consume_small_buffers() {
+        let pool = BufferPool::new(4);
+        pool.recycle(vec![0u8; 64]);
+        let b = pool.take_zeroed(1024); // no pooled buffer fits → fresh alloc
+        assert_eq!(b.len(), 1024);
+        assert_eq!(pool.len(), 1, "undersized buffer must stay pooled");
+    }
+
+    #[test]
+    fn zero_len_take_ok() {
+        let pool = BufferPool::new(2);
+        let b = pool.take_zeroed(0);
+        assert!(b.is_empty());
+        pool.recycle(b); // capacity 0 — silently dropped
+        assert_eq!(pool.len(), 0);
+    }
+}

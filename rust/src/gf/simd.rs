@@ -1,0 +1,152 @@
+//! SIMD GF(2^8) kernels — the PSHUFB / TBL technique ISA-L uses (§2.3.3).
+//!
+//! A constant multiply over GF(2^8) is two 16-entry table lookups (one per
+//! nibble) plus an XOR, and `PSHUFB` / `VPSHUFB` / `TBL` perform 16/32 such
+//! lookups per instruction. These kernels consume the per-coefficient
+//! [`NibbleTables`] shared with the scalar path, so every tier computes
+//! byte-identical results (asserted by `tests/gf_simd.rs`).
+//!
+//! All functions here are `unsafe` only because of `#[target_feature]`:
+//! callers must guarantee the instruction set is present (checked once at
+//! startup by [`super::dispatch::Kernel::detect`]). Loads and stores are
+//! unaligned, so arbitrary slice offsets are fine.
+
+#![allow(dead_code)] // each arch compiles only its own kernels
+
+use super::slice::NibbleTables;
+
+/// Scalar tail shared by every vector kernel: nibble-table multiply for the
+/// bytes past the last full vector.
+#[inline]
+fn tail_mul_acc(t: &NibbleTables, src: &[u8], dst: &mut [u8]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d ^= t.mul(s);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub mod x86_64 {
+    use super::super::slice::NibbleTables;
+    use super::tail_mul_acc;
+    use std::arch::x86_64::*;
+
+    /// `dst ^= c · src` with 16-byte SSSE3 `PSHUFB` lookups.
+    ///
+    /// # Safety
+    /// The CPU must support SSSE3.
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn mul_acc_ssse3(t: &NibbleTables, src: &[u8], dst: &mut [u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let lo = _mm_loadu_si128(t.lo.as_ptr() as *const __m128i);
+        let hi = _mm_loadu_si128(t.hi.as_ptr() as *const __m128i);
+        let mask = _mm_set1_epi8(0x0F);
+        let n = src.len() & !15;
+        let mut i = 0;
+        while i < n {
+            let s = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            let d = _mm_loadu_si128(dst.as_ptr().add(i) as *const __m128i);
+            let pl = _mm_shuffle_epi8(lo, _mm_and_si128(s, mask));
+            let ph = _mm_shuffle_epi8(hi, _mm_and_si128(_mm_srli_epi64(s, 4), mask));
+            let prod = _mm_xor_si128(pl, ph);
+            _mm_storeu_si128(dst.as_mut_ptr().add(i) as *mut __m128i, _mm_xor_si128(d, prod));
+            i += 16;
+        }
+        tail_mul_acc(t, &src[n..], &mut dst[n..]);
+    }
+
+    /// `dst ^= c · src` with 32-byte AVX2 `VPSHUFB` lookups (the table is
+    /// broadcast to both 128-bit halves, so each half shuffles independently
+    /// — exactly the ISA-L `gf_vect_mad` shape).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_acc_avx2(t: &NibbleTables, src: &[u8], dst: &mut [u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let lo = _mm256_broadcastsi128_si256(_mm_loadu_si128(t.lo.as_ptr() as *const __m128i));
+        let hi = _mm256_broadcastsi128_si256(_mm_loadu_si128(t.hi.as_ptr() as *const __m128i));
+        let mask = _mm256_set1_epi8(0x0F);
+        let n = src.len() & !31;
+        let mut i = 0;
+        while i < n {
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let d = _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i);
+            let pl = _mm256_shuffle_epi8(lo, _mm256_and_si256(s, mask));
+            let ph = _mm256_shuffle_epi8(hi, _mm256_and_si256(_mm256_srli_epi64(s, 4), mask));
+            let prod = _mm256_xor_si256(pl, ph);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, _mm256_xor_si256(d, prod));
+            i += 32;
+        }
+        tail_mul_acc(t, &src[n..], &mut dst[n..]);
+    }
+
+    /// `dst ^= src` with 32-byte AVX2 loads/stores.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_avx2(dst: &mut [u8], src: &[u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let n = src.len() & !31;
+        let mut i = 0;
+        while i < n {
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let d = _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, _mm256_xor_si256(d, s));
+            i += 32;
+        }
+        for (d, s) in dst[n..].iter_mut().zip(&src[n..]) {
+            *d ^= *s;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub mod aarch64 {
+    use super::super::slice::NibbleTables;
+    use super::tail_mul_acc;
+    use std::arch::aarch64::*;
+
+    /// `dst ^= c · src` with 16-byte NEON `TBL` (`vqtbl1q_u8`) lookups.
+    ///
+    /// # Safety
+    /// The CPU must support NEON (baseline on AArch64, still detected).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mul_acc_neon(t: &NibbleTables, src: &[u8], dst: &mut [u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let lo = vld1q_u8(t.lo.as_ptr());
+        let hi = vld1q_u8(t.hi.as_ptr());
+        let mask = vdupq_n_u8(0x0F);
+        let n = src.len() & !15;
+        let mut i = 0;
+        while i < n {
+            let s = vld1q_u8(src.as_ptr().add(i));
+            let d = vld1q_u8(dst.as_ptr().add(i));
+            let pl = vqtbl1q_u8(lo, vandq_u8(s, mask));
+            let ph = vqtbl1q_u8(hi, vshrq_n_u8::<4>(s));
+            vst1q_u8(dst.as_mut_ptr().add(i), veorq_u8(d, veorq_u8(pl, ph)));
+            i += 16;
+        }
+        tail_mul_acc(t, &src[n..], &mut dst[n..]);
+    }
+
+    /// `dst ^= src` with 16-byte NEON loads/stores.
+    ///
+    /// # Safety
+    /// The CPU must support NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn xor_neon(dst: &mut [u8], src: &[u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let n = src.len() & !15;
+        let mut i = 0;
+        while i < n {
+            let s = vld1q_u8(src.as_ptr().add(i));
+            let d = vld1q_u8(dst.as_ptr().add(i));
+            vst1q_u8(dst.as_mut_ptr().add(i), veorq_u8(d, s));
+            i += 16;
+        }
+        for (d, s) in dst[n..].iter_mut().zip(&src[n..]) {
+            *d ^= *s;
+        }
+    }
+}

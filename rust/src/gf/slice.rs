@@ -5,16 +5,26 @@
 //! Figure 3(a)'s XOR-vs-MUL comparison:
 //!
 //! * [`xor_slice`] / [`xor_fold`] — pure-XOR coding (what *XOR locality*
-//!   buys): SWAR over `u64` words, memory-bound.
-//! * [`mul_slice`] / [`mul_acc_slice`] — multiply by a field constant:
-//!   split-nibble tables (the portable cousin of ISA-L's PSHUFB kernel).
+//!   buys).
+//! * [`mul_slice`] / [`mul_acc_slice`] — multiply by a field constant.
 //!
-//! All kernels are alignment-agnostic and handle arbitrary lengths.
+//! Since the engine refactor these entry points dispatch through the
+//! process-wide [`GfEngine`](super::dispatch::GfEngine) (SSSE3 / AVX2 /
+//! NEON split-nibble kernels when the CPU has them); the `*_scalar`
+//! functions below are the portable SWAR fallback tier and the reference
+//! the SIMD tiers are differentially tested against. All kernels are
+//! alignment-agnostic and handle arbitrary lengths.
 
+use super::dispatch;
 use super::tables::gf_mul;
 
-/// `dst ^= src`, word-at-a-time.
+/// `dst ^= src` on the selected engine tier.
 pub fn xor_slice(dst: &mut [u8], src: &[u8]) {
+    dispatch::engine().xor(dst, src);
+}
+
+/// `dst ^= src`, word-at-a-time SWAR — the scalar tier.
+pub fn xor_slice_scalar(dst: &mut [u8], src: &[u8]) {
     assert_eq!(dst.len(), src.len(), "xor_slice length mismatch");
     // Split both into u64-aligned middles. chunks_exact compiles to clean
     // vectorizable loops without unsafe.
@@ -32,18 +42,21 @@ pub fn xor_slice(dst: &mut [u8], src: &[u8]) {
 
 /// XOR-fold many sources into `dst` (which is overwritten):
 /// `dst = srcs[0] ^ srcs[1] ^ ...`. This is the entire decode path for a
-/// UniLRC single-block repair.
+/// UniLRC single-block repair. Large blocks are striped across the
+/// engine's worker threads.
 pub fn xor_fold(dst: &mut [u8], srcs: &[&[u8]]) {
-    assert!(!srcs.is_empty(), "xor_fold needs at least one source");
-    dst.copy_from_slice(srcs[0]);
-    for s in &srcs[1..] {
-        xor_slice(dst, s);
-    }
+    dispatch::engine().fold_blocks(dst, srcs);
 }
 
 /// Per-constant split-nibble tables: `lo[x & 0xF] ^ hi[x >> 4] = c·x`.
-#[derive(Clone, Copy)]
+///
+/// These 32 bytes are exactly what the SIMD tiers feed to `PSHUFB` / `TBL`,
+/// and what [`PlanCache`](crate::codes::plan_cache) precomputes per cached
+/// decode-plan coefficient.
+#[derive(Debug, Clone, Copy)]
 pub struct NibbleTables {
+    /// The constant these tables multiply by.
+    pub c: u8,
     pub lo: [u8; 16],
     pub hi: [u8; 16],
 }
@@ -56,7 +69,7 @@ impl NibbleTables {
             lo[i as usize] = gf_mul(c, i);
             hi[i as usize] = gf_mul(c, i << 4);
         }
-        NibbleTables { lo, hi }
+        NibbleTables { c, lo, hi }
     }
 
     #[inline]
@@ -73,24 +86,29 @@ pub fn mul_slice(c: u8, src: &[u8], dst: &mut [u8]) {
         1 => dst.copy_from_slice(src),
         _ => {
             dst.fill(0);
-            mul_acc_swar(c, src, dst);
+            dispatch::engine().mul_acc(c, src, dst);
         }
     }
 }
 
 /// `dst ^= c · src` — the multiply-accumulate every matrix-style encode and
-/// decode is built from (one call per nonzero generator coefficient).
-///
-/// Fast path: SWAR bit-plane decomposition over `u64` words (§Perf):
-/// `c·x = ⊕_b bit_b(x)·(c·2^b)`, with each bit-plane widened to a byte mask
-/// by the carry-free `t·0xFF` trick — 4 ALU ops per byte, no table loads,
-/// the scalar-register shape of the same idea the L1 Pallas kernel uses on
-/// the TPU VPU. Tail bytes fall back to nibble tables.
+/// decode is built from (one call per nonzero generator coefficient) — on
+/// the selected engine tier.
 pub fn mul_acc_slice(c: u8, src: &[u8], dst: &mut [u8]) {
+    dispatch::engine().mul_acc(c, src, dst);
+}
+
+/// `dst ^= c · src` on the scalar tier: SWAR bit-plane decomposition over
+/// `u64` words (§Perf): `c·x = ⊕_b bit_b(x)·(c·2^b)`, with each bit-plane
+/// widened to a byte mask by the carry-free `t·0xFF` trick — 4 ALU ops per
+/// byte, no table loads, the scalar-register shape of the same idea the L1
+/// Pallas kernel uses on the TPU VPU. Tail bytes fall back to nibble
+/// tables. This is the reference the SIMD tiers are fuzzed against.
+pub fn mul_acc_slice_scalar(c: u8, src: &[u8], dst: &mut [u8]) {
     assert_eq!(dst.len(), src.len(), "mul_acc_slice length mismatch");
     match c {
         0 => {}
-        1 => xor_slice(dst, src),
+        1 => xor_slice_scalar(dst, src),
         _ => mul_acc_swar(c, src, dst),
     }
 }
@@ -131,23 +149,12 @@ fn mul_acc_swar(c: u8, src: &[u8], dst: &mut [u8]) {
 /// `⊕_j coeff[i][j] · src[j]`. Outputs must be pre-sized to the block length.
 ///
 /// This one function implements encode (coefficients = parity submatrix) and
-/// multi-failure decode (coefficients = inverted repair matrix).
+/// multi-failure decode (coefficients = inverted repair matrix). It runs on
+/// the process-wide engine: SIMD kernels plus lane-striped workers for
+/// large blocks (source-major within each lane, so a cache-hot source lane
+/// is scattered into all output rows before the next is streamed in).
 pub fn gf_matmul_blocks(coeff: &[&[u8]], srcs: &[&[u8]], outs: &mut [Vec<u8>]) {
-    assert_eq!(coeff.len(), outs.len(), "row count mismatch");
-    let block = srcs.first().map_or(0, |s| s.len());
-    for (row, out) in coeff.iter().zip(outs.iter_mut()) {
-        assert_eq!(row.len(), srcs.len(), "column count mismatch");
-        assert_eq!(out.len(), block, "output block size mismatch");
-        out.fill(0);
-    }
-    // Source-major order (§Perf): each source block stays cache-hot while
-    // it is scattered into all output rows, instead of being re-streamed
-    // from memory once per row.
-    for (j, src) in srcs.iter().enumerate() {
-        for (row, out) in coeff.iter().zip(outs.iter_mut()) {
-            mul_acc_slice(row[j], src, out);
-        }
-    }
+    dispatch::engine().matmul_blocks(coeff, srcs, outs);
 }
 
 #[cfg(test)]
@@ -165,10 +172,12 @@ mod tests {
         for len in [0, 1, 7, 8, 9, 63, 64, 65, 1000, 4096] {
             let a = p.bytes(len);
             let b = p.bytes(len);
-            let mut d = a.clone();
-            xor_slice(&mut d, &b);
-            let expect: Vec<u8> = a.iter().zip(&b).map(|(x, y)| x ^ y).collect();
-            assert_eq!(d, expect, "len={len}");
+            for f in [xor_slice, xor_slice_scalar] {
+                let mut d = a.clone();
+                f(&mut d, &b);
+                let expect: Vec<u8> = a.iter().zip(&b).map(|(x, y)| x ^ y).collect();
+                assert_eq!(d, expect, "len={len}");
+            }
         }
     }
 
@@ -203,6 +212,7 @@ mod tests {
     fn nibble_tables_match_gf_mul_exhaustive() {
         for c in 0..=255u8 {
             let t = NibbleTables::new(c);
+            assert_eq!(t.c, c);
             for x in 0..=255u8 {
                 assert_eq!(t.mul(x), gf_mul(c, x), "c={c} x={x}");
             }
@@ -226,14 +236,16 @@ mod tests {
         let src = p.bytes(300);
         let init = p.bytes(300);
         for c in [0u8, 1, 97] {
-            let mut dst = init.clone();
-            mul_acc_slice(c, &src, &mut dst);
-            let expect: Vec<u8> = init
-                .iter()
-                .zip(&src)
-                .map(|(&d, &s)| d ^ gf_mul(c, s))
-                .collect();
-            assert_eq!(dst, expect, "c={c}");
+            for f in [mul_acc_slice, mul_acc_slice_scalar] {
+                let mut dst = init.clone();
+                f(c, &src, &mut dst);
+                let expect: Vec<u8> = init
+                    .iter()
+                    .zip(&src)
+                    .map(|(&d, &s)| d ^ gf_mul(c, s))
+                    .collect();
+                assert_eq!(dst, expect, "c={c}");
+            }
         }
     }
 

@@ -131,6 +131,14 @@ impl ProxyCtx<'_> {
         let refs: Vec<&[u8]> = inputs.iter().map(|(_, _, d)| d.as_slice()).collect();
         let cs: Vec<u8> = inputs.iter().map(|(_, c, _)| *c).collect();
         let (rebuilt, secs) = self.timed_combine(&cs, &refs)?;
+        // Aggregation partials are solely owned by `inputs` (stored blocks
+        // keep a metadata reference, so try_unwrap skips them); hand the
+        // consumed buffers back to the block pool.
+        for (_, _, d) in inputs {
+            if let Ok(buf) = Arc::try_unwrap(d) {
+                crate::gf::pool::recycle(buf);
+            }
+        }
         Ok(OpOutcome { ready_at: arrived + secs, rebuilt, home })
     }
 
@@ -141,10 +149,14 @@ impl ProxyCtx<'_> {
             let plan = self.code.repair_plan(block);
             return Ok((plan.sources, plan.coeffs));
         }
-        let plan = self
+        // One cached plan serves every repaired block of the same erasure
+        // pattern: repairing a whole stripe (or node) is a map hit per
+        // block after the first, not a fresh rank test + inversion.
+        let cached = self
             .code
-            .decode_plan(erased)
+            .decode_plan_cached(erased)
             .ok_or_else(|| anyhow::anyhow!("erasure pattern {erased:?} unrecoverable"))?;
+        let plan = &cached.plan;
         let row = plan
             .erased
             .iter()

@@ -11,13 +11,21 @@
 //! sweeps); integration tests assert the two produce identical bytes.
 
 pub mod artifacts;
+
+// The real PJRT backend needs the `xla` FFI crate; without the `pjrt`
+// feature a stub with the same surface keeps every call site compiling
+// (construction fails with a clear error instead).
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use artifacts::{Artifact, ArtifactKind, Manifest};
 pub use pjrt::PjrtCoder;
 
 use crate::codes::Code;
-use crate::gf::slice::{gf_matmul_blocks, xor_fold};
+use crate::gf::{dispatch, pool};
 use anyhow::Result;
 
 /// Backend-independent coding interface used by the proxy's coding service.
@@ -35,7 +43,9 @@ pub trait CodingEngine: Send + Sync {
     fn matmul(&self, coeffs: &[Vec<u8>], sources: &[&[u8]]) -> Result<Vec<Vec<u8>>>;
 }
 
-/// Pure-rust backend over the [`crate::gf`] substrate.
+/// Pure-rust backend over the [`crate::gf`] substrate, running on the
+/// process-wide [`GfEngine`](crate::gf::GfEngine) (SIMD tier + striped
+/// workers) with pooled output buffers.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NativeCoder;
 
@@ -50,16 +60,16 @@ impl CodingEngine for NativeCoder {
 
     fn fold(&self, sources: &[&[u8]]) -> Result<Vec<u8>> {
         anyhow::ensure!(!sources.is_empty(), "fold needs sources");
-        let mut out = vec![0u8; sources[0].len()];
-        xor_fold(&mut out, sources);
+        let mut out = pool::take_zeroed(sources[0].len());
+        dispatch::engine().fold_blocks(&mut out, sources);
         Ok(out)
     }
 
     fn matmul(&self, coeffs: &[Vec<u8>], sources: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
         let len = sources.first().map_or(0, |s| s.len());
         let rows: Vec<&[u8]> = coeffs.iter().map(|r| r.as_slice()).collect();
-        let mut outs = vec![vec![0u8; len]; coeffs.len()];
-        gf_matmul_blocks(&rows, sources, &mut outs);
+        let mut outs: Vec<Vec<u8>> = (0..coeffs.len()).map(|_| pool::take_zeroed(len)).collect();
+        dispatch::engine().matmul_blocks(&rows, sources, &mut outs);
         Ok(outs)
     }
 }

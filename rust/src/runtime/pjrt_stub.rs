@@ -1,0 +1,41 @@
+//! Stub PJRT backend, compiled when the `pjrt` cargo feature is off.
+//!
+//! The real backend (`pjrt.rs`) links the `xla` FFI crate, which pulls the
+//! XLA C library at build time — unavailable in offline builds. This stub
+//! keeps the `PjrtCoder` surface identical so call sites (CLI `--backend
+//! pjrt`, benches, the e2e example) compile unchanged; constructing the
+//! coder fails with a clear message instead.
+
+use super::CodingEngine;
+use crate::codes::Code;
+use anyhow::{bail, Result};
+
+/// Placeholder with the same name and API as the real PJRT coder.
+pub struct PjrtCoder {
+    _private: (),
+}
+
+impl PjrtCoder {
+    /// Always fails: the binary was built without PJRT support.
+    pub fn new(_dir: Option<std::path::PathBuf>) -> Result<PjrtCoder> {
+        bail!("this build has no PJRT backend — rebuild with `--features pjrt`")
+    }
+}
+
+impl CodingEngine for PjrtCoder {
+    fn backend(&self) -> &'static str {
+        "pjrt-stub"
+    }
+
+    fn encode(&self, _code: &Code, _data: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        bail!("PJRT backend unavailable (built without the `pjrt` feature)")
+    }
+
+    fn fold(&self, _sources: &[&[u8]]) -> Result<Vec<u8>> {
+        bail!("PJRT backend unavailable (built without the `pjrt` feature)")
+    }
+
+    fn matmul(&self, _coeffs: &[Vec<u8>], _sources: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        bail!("PJRT backend unavailable (built without the `pjrt` feature)")
+    }
+}

@@ -1,0 +1,135 @@
+//! Differential fuzz: every GF engine tier must be byte-identical to the
+//! scalar `gf_mul` reference, across lengths 0–4096, odd alignments, and
+//! both execution modes (serial and striped-parallel). This is the
+//! correctness contract that lets the dispatcher pick any tier at startup.
+
+use unilrc::gf::dispatch::{GfEngine, Kernel};
+use unilrc::gf::slice::mul_acc_slice_scalar;
+use unilrc::gf::tables::gf_mul;
+use unilrc::prng::Prng;
+
+fn available() -> Vec<Kernel> {
+    Kernel::all().into_iter().filter(|k| k.available()).collect()
+}
+
+/// Reference: bytewise table multiply-accumulate.
+fn ref_mul_acc(c: u8, src: &[u8], dst: &mut [u8]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d ^= gf_mul(c, s);
+    }
+}
+
+#[test]
+fn all_tiers_match_reference_across_lengths_and_alignments() {
+    let mut p = Prng::new(101);
+    let kernels = available();
+    // Every length 0..=300 catches all vector-width remainders (32-byte
+    // AVX2 blocks + tails); the spot sizes cover page-ish lengths to 4096.
+    let lengths: Vec<usize> = (0..=300)
+        .chain([511, 512, 513, 1023, 1024, 1025, 2048, 4095, 4096])
+        .collect();
+    // Backing buffers are over-allocated so we can slice at odd offsets:
+    // offset 0 (aligned), 1 (worst case), 3 (odd, crosses word boundaries).
+    let max = 4096 + 8;
+    let src_buf = p.bytes(max);
+    let init_buf = p.bytes(max);
+    for &len in &lengths {
+        for offset in [0usize, 1, 3] {
+            let src = &src_buf[offset..offset + len];
+            let init = &init_buf[offset..offset + len];
+            for c in [0u8, 1, 2, 0x1D, 0x53, 0x80, 0xFF] {
+                let mut expect = init.to_vec();
+                ref_mul_acc(c, src, &mut expect);
+                // scalar SWAR path is itself a tier under test
+                let mut got = init.to_vec();
+                mul_acc_slice_scalar(c, src, &mut got);
+                assert_eq!(got, expect, "scalar-fn len={len} off={offset} c={c}");
+                for &k in &kernels {
+                    let e = GfEngine::new(k);
+                    let mut got = init.to_vec();
+                    e.mul_acc(c, src, &mut got);
+                    assert_eq!(got, expect, "kernel={k} len={len} off={offset} c={c}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_tiers_match_reference_xor() {
+    let mut p = Prng::new(102);
+    let max = 4096 + 8;
+    let a = p.bytes(max);
+    let bb = p.bytes(max);
+    for len in [0usize, 1, 15, 16, 17, 31, 32, 33, 100, 1000, 4096] {
+        for offset in [0usize, 1] {
+            let src = &a[offset..offset + len];
+            let init = &bb[offset..offset + len];
+            let expect: Vec<u8> = init.iter().zip(src).map(|(x, y)| x ^ y).collect();
+            for k in available() {
+                let e = GfEngine::new(k);
+                let mut got = init.to_vec();
+                e.xor(&mut got, src);
+                assert_eq!(got, expect, "kernel={k} len={len} off={offset}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_random_lengths_coefficients_all_tiers() {
+    let mut p = Prng::new(103);
+    let kernels = available();
+    for round in 0..200 {
+        let len = p.gen_range(4097);
+        let c = (p.next_u64() & 0xFF) as u8;
+        let src = p.bytes(len);
+        let init = p.bytes(len);
+        let mut expect = init.clone();
+        ref_mul_acc(c, &src, &mut expect);
+        for &k in &kernels {
+            let e = GfEngine::new(k);
+            let mut got = init.clone();
+            e.mul_acc(c, &src, &mut got);
+            assert_eq!(got, expect, "round={round} kernel={k} len={len} c={c}");
+        }
+    }
+}
+
+#[test]
+fn parallel_striped_matches_serial_scalar_matmul() {
+    let mut p = Prng::new(104);
+    let block = 50_000; // forces multiple lanes incl. a short tail
+    let srcs: Vec<Vec<u8>> = (0..7).map(|_| p.bytes(block)).collect();
+    let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+    let coeff: Vec<Vec<u8>> = (0..4).map(|_| p.bytes(7)).collect();
+    let crefs: Vec<&[u8]> = coeff.iter().map(|v| v.as_slice()).collect();
+
+    let mut expect = vec![vec![0u8; block]; 4];
+    GfEngine::scalar().matmul_blocks(&crefs, &refs, &mut expect);
+
+    for k in available() {
+        for threads in [2usize, 5] {
+            let e = GfEngine::new(k).with_threads(threads).with_lane(4096).with_par_work(0);
+            let mut got = vec![vec![0xEEu8; block]; 4];
+            e.matmul_blocks(&crefs, &refs, &mut got);
+            assert_eq!(got, expect, "kernel={k} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn parallel_striped_matches_serial_fold() {
+    let mut p = Prng::new(105);
+    let block = 33_333;
+    let srcs: Vec<Vec<u8>> = (0..9).map(|_| p.bytes(block)).collect();
+    let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+    let mut expect = vec![0u8; block];
+    GfEngine::scalar().fold_blocks(&mut expect, &refs);
+    for k in available() {
+        let e = GfEngine::new(k).with_threads(4).with_lane(1024).with_par_work(0);
+        let mut got = vec![7u8; block];
+        e.fold_blocks(&mut got, &refs);
+        assert_eq!(got, expect, "kernel={k}");
+    }
+}

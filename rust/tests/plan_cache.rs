@@ -1,0 +1,106 @@
+//! PlanCache integration: cached plans must be exactly the plans the
+//! decoder would compute fresh, repeated lookups must not re-invert, and
+//! the proxy repair path must go through the cache.
+
+use anyhow::Result;
+use std::sync::Arc;
+use unilrc::codes::plan_cache;
+use unilrc::codes::spec::{CodeFamily, Scheme};
+use unilrc::experiments::{build_dss, ExpConfig};
+use unilrc::prng::Prng;
+
+#[test]
+fn cached_plan_equals_fresh_plan_property() {
+    let mut p = Prng::new(7);
+    for fam in [CodeFamily::UniLrc, CodeFamily::Alrc, CodeFamily::Olrc, CodeFamily::Ulrc] {
+        let code = Scheme::S42.build(fam);
+        for t in 1..=3usize {
+            for _ in 0..10 {
+                let pattern = p.choose_distinct(code.n(), t);
+                let cached = code.decode_plan_cached(&pattern);
+                let fresh = code.decode_plan(&pattern);
+                match (cached, fresh) {
+                    (Some(c), Some(f)) => {
+                        assert_eq!(c.plan, f, "{fam:?} pattern {pattern:?}")
+                    }
+                    (None, None) => {}
+                    (c, f) => panic!(
+                        "{fam:?} pattern {pattern:?}: cached {:?} vs fresh {:?}",
+                        c.is_some(),
+                        f.is_some()
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_pattern_hits_cache_no_reinversion() {
+    let code = Scheme::S42.build(CodeFamily::UniLrc);
+    let pattern = [4usize, 11, 23];
+    let first = code.decode_plan_cached(&pattern).expect("recoverable");
+    for _ in 0..5 {
+        let again = code.decode_plan_cached(&pattern).expect("recoverable");
+        // Same Arc ⇒ the cached object was returned — no rank test, no
+        // Gauss–Jordan, no table rebuild.
+        assert!(Arc::ptr_eq(&first, &again), "lookup must not recompute the plan");
+    }
+    // unsorted/duplicated spellings of the same pattern share the entry
+    let spelled = code.decode_plan_cached(&[23, 4, 11, 4]).expect("recoverable");
+    assert!(Arc::ptr_eq(&first, &spelled));
+}
+
+#[test]
+fn cached_plan_executes_identically_to_fresh() {
+    let code = Scheme::S42.build(CodeFamily::UniLrc);
+    let mut p = Prng::new(9);
+    let block = 2048;
+    let data: Vec<Vec<u8>> = (0..code.k()).map(|_| p.bytes(block)).collect();
+    let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+    let parities = code.encode_blocks(&drefs);
+    let stripe: Vec<Vec<u8>> = data.into_iter().chain(parities).collect();
+
+    let pattern = [0usize, 7, 35];
+    let cached = code.decode_plan_cached(&pattern).unwrap();
+    let fresh = code.decode_plan(&pattern).unwrap();
+    let srcs: Vec<&[u8]> = cached.plan.sources.iter().map(|&s| stripe[s].as_slice()).collect();
+    let via_cache = cached.execute(&srcs);
+    let via_fresh = fresh.execute(&srcs);
+    assert_eq!(via_cache, via_fresh);
+    for (i, &b) in cached.plan.erased.iter().enumerate() {
+        assert_eq!(via_cache[i], stripe[b], "block {b}");
+    }
+}
+
+#[test]
+fn proxy_repairs_of_one_stripe_hit_the_cache() -> Result<()> {
+    // Repairing several blocks of a stripe under the same multi-erasure
+    // pattern used to re-invert the repair matrix once per block; after
+    // the refactor the proxy routes through the global PlanCache, so only
+    // the first repair computes a plan and the rest are lookups. Counters
+    // are global and other tests bump them concurrently, so assertions are
+    // monotonic: repairs here must add at least the expected hits.
+    let cfg = ExpConfig { block_size: 8 * 1024, stripes: 1, ..Default::default() };
+    let mut prng = Prng::new(12345);
+    let mut dss = build_dss(CodeFamily::UniLrc, &cfg);
+    dss.ingest_random_stripes(1, &mut prng)?;
+
+    // Fail the nodes of two data blocks: every stripe-0 repair now plans
+    // through the generic multi-erasure decoder with the same pattern.
+    dss.fail_node(dss.metadata().node_of(0, 0));
+    dss.fail_node(dss.metadata().node_of(0, 1));
+
+    let cache = plan_cache::global();
+    dss.reconstruct(0, 0)?; // seeds the entry (miss or hit, other tests aside)
+    let h_before = cache.hits();
+    dss.reconstruct(0, 1)?;
+    dss.reconstruct(0, 0)?;
+    dss.reconstruct(0, 1)?;
+    let h_after = cache.hits();
+    assert!(
+        h_after >= h_before + 3,
+        "3 follow-up repairs must be ≥3 cache hits (hits {h_before} -> {h_after})"
+    );
+    Ok(())
+}
