@@ -9,6 +9,7 @@ use unilrc::bench_util::{black_box, section, Bencher, JsonReport};
 use unilrc::codes::spec::{CodeFamily, Scheme};
 use unilrc::gf::dispatch::{GfEngine, Kernel};
 use unilrc::gf::slice::{gf_matmul_blocks, mul_slice, xor_fold};
+use unilrc::gf::NibbleTables;
 use unilrc::prng::Prng;
 use unilrc::runtime::{CodingEngine, Manifest, NativeCoder, PjrtCoder};
 
@@ -39,6 +40,28 @@ fn main() {
             println!("  -> {:.2}x over scalar", s.mib_per_s(MB) / scalar_mibs);
         }
         report.add(&s, MB);
+    }
+
+    // --------------------------------------- fused two-coefficient kernel
+    section("GF engine tiers — fused mul_acc2 (2 sources, 1 MiB), single thread");
+    let src2 = p.bytes(MB);
+    for k in Kernel::all().into_iter().rev() {
+        if !k.available() {
+            continue;
+        }
+        let e = GfEngine::new(k);
+        let (t1, t2) = (NibbleTables::new(0x53), NibbleTables::new(0x2B));
+        // 2 MiB of source input per iteration; compare against two chained
+        // single-source mul_acc calls at the same tier.
+        let s = b.bench_throughput(&format!("mul_acc2 fused [{k}]"), 2 * MB, || {
+            e.mul_acc2_t(black_box(&t1), black_box(&src), black_box(&t2), black_box(&src2), black_box(&mut dst));
+        });
+        report.add(&s, 2 * MB);
+        let s = b.bench_throughput(&format!("mul_acc x2 chained [{k}]"), 2 * MB, || {
+            e.mul_acc_t(black_box(&t1), black_box(&src), black_box(&mut dst));
+            e.mul_acc_t(black_box(&t2), black_box(&src2), black_box(&mut dst));
+        });
+        report.add(&s, 2 * MB);
     }
 
     section("GF engine tiers — xor 1 MiB, single thread");

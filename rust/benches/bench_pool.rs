@@ -1,0 +1,177 @@
+//! Multi-stripe repair pipeline bench: persistent-pool batched dispatch vs
+//! the per-call scoped-spawn executor it replaced vs sequential inline —
+//! on small blocks (≤ 256 KiB), where spawn overhead used to eat the
+//! parallel win and the striping gate forced stripe-by-stripe execution.
+//!
+//! The "spawn" rows reimplement the old executor shape (a
+//! `std::thread::scope` + per-lane spawns on *every* stripe) here in the
+//! bench, since the engine itself no longer contains it. All variants run
+//! the same SIMD kernels; only dispatch differs.
+//!
+//! Set `UNILRC_BENCH_JSON=BENCH_pool.json` for the machine-readable
+//! artifact (CI archives it next to `BENCH_gf.json`).
+
+use std::sync::Arc;
+use unilrc::bench_util::{black_box, section, Bencher, JsonReport};
+use unilrc::codes::spec::{CodeFamily, Scheme};
+use unilrc::coordinator::{Dss, DssConfig};
+use unilrc::gf::{GfEngine, Kernel};
+use unilrc::placement::{Topology, UniLrcPlace};
+use unilrc::prng::Prng;
+use unilrc::runtime::NativeCoder;
+use unilrc::sim::NetConfig;
+
+const STRIPES: usize = 40;
+const SOURCES: usize = 6; // UniLRC S42 local-group repair reads r=6 blocks
+const LANE: usize = 16 * 1024;
+
+/// The old executor: scoped threads spawned per call, lanes fanned across
+/// them, joined before returning — reproduced for comparison.
+fn spawn_striped_fold(e: &GfEngine, threads: usize, dst: &mut [u8], srcs: &[&[u8]]) {
+    let block = dst.len();
+    let workers = threads.min(block.div_ceil(LANE)).max(1);
+    if workers <= 1 {
+        dst.copy_from_slice(srcs[0]);
+        for s in &srcs[1..] {
+            e.xor(dst, s);
+        }
+        return;
+    }
+    let mut lanes: Vec<(usize, &mut [u8])> = Vec::new();
+    for (l, chunk) in dst.chunks_mut(LANE).enumerate() {
+        lanes.push((l * LANE, chunk));
+    }
+    let per = lanes.len().div_ceil(workers);
+    std::thread::scope(|scope| {
+        while !lanes.is_empty() {
+            let group: Vec<_> = lanes.drain(..per.min(lanes.len())).collect();
+            scope.spawn(move || {
+                for (off, chunk) in group {
+                    let w = chunk.len();
+                    chunk.copy_from_slice(&srcs[0][off..off + w]);
+                    for s in &srcs[1..] {
+                        e.xor(chunk, &s[off..off + w]);
+                    }
+                }
+            });
+        }
+    });
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut p = Prng::new(9);
+    let mut report = JsonReport::new("bench_pool");
+    let best = Kernel::detect();
+    let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+    report.meta("detected_kernel", best.name());
+    report.meta("threads", &threads.to_string());
+
+    for block in [64 * 1024usize, 256 * 1024] {
+        let kb = block / 1024;
+        section(&format!(
+            "Multi-stripe repair — {STRIPES} stripes × r={SOURCES} fold, {kb} KiB blocks"
+        ));
+        let stripes: Vec<Vec<Vec<u8>>> =
+            (0..STRIPES).map(|_| (0..SOURCES).map(|_| p.bytes(block)).collect()).collect();
+        let srefs: Vec<Vec<&[u8]>> =
+            stripes.iter().map(|s| s.iter().map(|v| v.as_slice()).collect()).collect();
+        let mut outs: Vec<Vec<u8>> = (0..STRIPES).map(|_| vec![0u8; block]).collect();
+        let bytes = STRIPES * SOURCES * block;
+
+        // 1. sequential inline, one thread (what the old defaults did at
+        //    this block size: below the 2 MiB gate, never parallel)
+        let seq = GfEngine::new(best);
+        let s = b.bench_throughput(&format!("fold seq x1 [{kb}KiB]"), bytes, || {
+            for (out, srcs) in outs.iter_mut().zip(&srefs) {
+                seq.fold_blocks(black_box(out), black_box(srcs));
+            }
+        });
+        report.add(&s, bytes);
+        let seq_mibs = s.mib_per_s(bytes);
+
+        // 2. the old executor, forced parallel: a scoped spawn per stripe
+        let s = b.bench_throughput(&format!("fold spawn-per-call x{threads} [{kb}KiB]"), bytes, || {
+            for (out, srcs) in outs.iter_mut().zip(&srefs) {
+                spawn_striped_fold(&seq, threads, black_box(out), black_box(srcs));
+            }
+        });
+        report.add(&s, bytes);
+        let spawn_mibs = s.mib_per_s(bytes);
+
+        // 3. batched persistent-pool dispatch: the whole event in one wave
+        let pooled = GfEngine::new(best).with_threads(threads).with_lane(LANE).with_par_work(0);
+        let s = b.bench_throughput(&format!("fold pool-batched x{threads} [{kb}KiB]"), bytes, || {
+            pooled.batch(bytes, |bt| {
+                for (out, srcs) in outs.iter_mut().zip(&srefs) {
+                    bt.fold(black_box(out), black_box(srcs.clone()));
+                }
+            });
+        });
+        report.add(&s, bytes);
+        let pool_mibs = s.mib_per_s(bytes);
+        println!(
+            "  -> pool-batched: {:.2}x over spawn-per-call, {:.2}x over sequential",
+            pool_mibs / spawn_mibs,
+            pool_mibs / seq_mibs
+        );
+    }
+
+    // Decode-plan shape: multi-erasure matmul batched across stripes.
+    section("Cached-plan decode — 2 erasures, 16 stripes, 64 KiB blocks");
+    let code = Scheme::S42.build(CodeFamily::UniLrc);
+    let block = 64 * 1024;
+    let full: Vec<Vec<Vec<u8>>> = (0..16)
+        .map(|_| {
+            let data: Vec<Vec<u8>> = (0..code.k()).map(|_| p.bytes(block)).collect();
+            let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+            let parities = code.encode_blocks(&drefs);
+            data.into_iter().chain(parities).collect()
+        })
+        .collect();
+    let plan = code.decode_plan(&[0, 1]).expect("recoverable");
+    let srcs: Vec<Vec<&[u8]>> = full
+        .iter()
+        .map(|stripe| plan.sources.iter().map(|&s| stripe[s].as_slice()).collect())
+        .collect();
+    let bytes = srcs.iter().map(|s| s.len()).sum::<usize>() * block;
+    let seq = GfEngine::new(best);
+    let s = b.bench_throughput("decode seq x1", bytes, || {
+        for stripe in &srcs {
+            black_box(plan.execute_batch_on(&seq, std::slice::from_ref(stripe)));
+        }
+    });
+    report.add(&s, bytes);
+    let pooled = GfEngine::new(best).with_threads(threads).with_lane(LANE).with_par_work(0);
+    let s = b.bench_throughput(&format!("decode pool-batched x{threads}"), bytes, || {
+        black_box(plan.execute_batch_on(&pooled, &srcs));
+    });
+    report.add(&s, bytes);
+
+    // End-to-end: full-node recovery on the virtual testbed (real compute,
+    // virtual network) through the batched proxy path.
+    section("Full-node recovery end-to-end (Dss::recover_node, 64 KiB blocks)");
+    let code = Scheme::S42.build(CodeFamily::UniLrc);
+    let clusters = code.groups().len();
+    let mut dss = Dss::new(
+        code,
+        &UniLrcPlace,
+        Topology::new(clusters, 10),
+        NetConfig::default(),
+        Arc::new(NativeCoder),
+        DssConfig { block_size: 64 * 1024, aggregated: true, time_compute: true },
+    );
+    let mut prng = Prng::new(10);
+    dss.ingest_random_stripes(8, &mut prng).expect("ingest");
+    let node = dss.metadata().node_of(0, 0);
+    let lost = dss.metadata().blocks_on_node(node).len();
+    dss.fail_node(node);
+    let bytes = lost * 64 * 1024;
+    let s = b.bench_throughput(&format!("recover_node ({lost} blocks)"), bytes, || {
+        black_box(dss.recover_node(black_box(node)).expect("recover"));
+        dss.quiesce();
+    });
+    report.add(&s, bytes);
+
+    report.write_if_requested();
+}

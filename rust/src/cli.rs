@@ -14,7 +14,7 @@ use crate::analysis::tradeoff;
 use crate::codes::layout;
 use crate::codes::spec::{CodeFamily, Scheme};
 use crate::experiments::{self, ExpConfig};
-use crate::gf::dispatch::{self, GfEngine, Kernel};
+use crate::gf::dispatch::{self, Kernel};
 use std::collections::HashMap;
 
 /// Run the CLI; returns the process exit code.
@@ -55,17 +55,20 @@ USAGE:
   unilrc experiment <1..6> [--config FILE] [--scheme S] [--block-kb N]
                     [--stripes N] [--cross-gbps X] [--backend native|pjrt] [--raw]
                     [--gf-kernel auto|scalar|ssse3|avx2|neon] [--gf-threads N]
-  unilrc engine                                  show GF engine tiers
+                    [--plan-ttl-ms N] [--cache-stats]
+  unilrc engine                       show GF engine tiers + pool + plan cache
   unilrc golden  [--out FILE]
   unilrc help
 
-Experiments (paper §6): 1 normal read · 2 degraded read · 3 recovery
-(single-block + full-node) · 4 bandwidth sweep · 5 decode throughput ·
-6 production workload.
+Experiments (paper §6): 1 normal read · 2 degraded read (single + batched
+burst) · 3 recovery (single-block + full-node) · 4 bandwidth sweep ·
+5 decode throughput · 6 production workload.
 
 The GF engine tier defaults to the best the CPU supports; override with
---gf-kernel / --gf-threads or UNILRC_GF_KERNEL / UNILRC_GF_THREADS
-(see PERF.md).
+--gf-kernel / --gf-threads or UNILRC_GF_KERNEL / UNILRC_GF_THREADS.
+Multi-stripe repairs run batched on the engine's persistent worker pool;
+--gf-threads sizes it. --plan-ttl-ms / UNILRC_PLAN_TTL_MS expires cached
+decode plans (see PERF.md).
 ";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -93,20 +96,11 @@ fn scheme_of(flags: &HashMap<String, String>) -> anyhow::Result<Scheme> {
 fn exp_config(flags: &HashMap<String, String>) -> anyhow::Result<ExpConfig> {
     // GF engine flags install first so the CLI wins over config-file keys
     // (the process-wide engine freezes at first install).
-    if flags.contains_key("gf-kernel") || flags.contains_key("gf-threads") {
-        let mut engine = GfEngine::from_env();
-        if let Some(k) = flags.get("gf-kernel") {
-            let k = Kernel::parse(k)
-                .ok_or_else(|| anyhow::anyhow!("bad --gf-kernel {k:?} (try `unilrc engine`)"))?;
-            engine = engine.with_kernel(k);
-        }
-        if let Some(t) = flags.get("gf-threads") {
-            engine = engine.with_threads(t.parse()?);
-        }
-        if !dispatch::install(engine) {
-            eprintln!("note: GF engine already initialized — --gf-kernel/--gf-threads ignored");
-        }
-    }
+    crate::config::install_gf_engine(
+        flags.get("gf-kernel").map(|s| s.as_str()),
+        flags.get("gf-threads").map(|t| t.parse()).transpose()?,
+        "--gf-kernel/--gf-threads",
+    )?;
     // --config FILE loads a TOML-subset base; explicit flags override it.
     let mut cfg = match flags.get("config") {
         Some(path) => {
@@ -115,6 +109,15 @@ fn exp_config(flags: &HashMap<String, String>) -> anyhow::Result<ExpConfig> {
         }
         None => ExpConfig::default(),
     };
+    // Plan-cache TTL, applied after the config file so the explicit flag
+    // (or environment) wins over `[experiment] plan_ttl_ms`.
+    let ttl_ms = match flags.get("plan-ttl-ms") {
+        Some(v) => Some(v.parse::<u64>()?),
+        None => std::env::var("UNILRC_PLAN_TTL_MS").ok().and_then(|v| v.parse().ok()),
+    };
+    if let Some(ms) = ttl_ms {
+        crate::config::apply_plan_ttl(ms);
+    }
     if flags.contains_key("scheme") {
         cfg.scheme = scheme_of(flags)?;
     }
@@ -139,7 +142,8 @@ fn exp_config(flags: &HashMap<String, String>) -> anyhow::Result<ExpConfig> {
     Ok(cfg)
 }
 
-/// `unilrc engine` — report detected and available GF kernel tiers.
+/// `unilrc engine` — report detected and available GF kernel tiers, the
+/// worker pool, and plan-cache statistics.
 fn cmd_engine() -> anyhow::Result<()> {
     println!("=== GF(2^8) engine ===");
     println!("detected best tier : {}", Kernel::detect());
@@ -148,7 +152,42 @@ fn cmd_engine() -> anyhow::Result<()> {
     }
     println!("active engine      : {}", dispatch::engine().describe());
     println!("override via --gf-kernel/--gf-threads or UNILRC_GF_KERNEL/UNILRC_GF_THREADS");
+
+    print_plan_cache_stats();
     Ok(())
+}
+
+/// Decode-plan cache statistics for the *current process* (also printed
+/// after `unilrc experiment … --cache-stats`, where the cache has just
+/// been exercised by the run).
+fn print_plan_cache_stats() {
+    let stats = crate::codes::plan_cache::global().stats(8);
+    println!("\n=== decode-plan cache ===");
+    println!(
+        "hits {} / misses {} / expired {}   entries {}/{}   ttl {}",
+        stats.hits,
+        stats.misses,
+        stats.expirations,
+        stats.entries,
+        stats.cap,
+        match stats.ttl {
+            Some(t) => format!("{}ms", t.as_millis()),
+            None => "off".to_string(),
+        }
+    );
+    if !stats.top.is_empty() {
+        println!("hottest entries:");
+        for e in &stats.top {
+            println!(
+                "  {:<38} erased={:?} hits={} age={:.1}s{}",
+                e.code,
+                e.erased,
+                e.hits,
+                e.age.as_secs_f64(),
+                if e.recoverable { "" } else { " (unrecoverable)" }
+            );
+        }
+    }
 }
 
 fn cmd_layout(flags: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -307,7 +346,11 @@ fn cmd_experiment(which: Option<&str>, flags: &HashMap<String, String>) -> anyho
             print_rows("Experiment 1 — normal read throughput", &experiments::exp1_normal_read(&cfg)?)
         }
         Some("2") => {
-            print_rows("Experiment 2 — degraded read latency", &experiments::exp2_degraded_read(&cfg)?)
+            print_rows("Experiment 2 — degraded read latency", &experiments::exp2_degraded_read(&cfg)?);
+            print_rows(
+                "Experiment 2 — batched degraded burst (whole node, one event)",
+                &experiments::exp2_degraded_burst(&cfg)?,
+            );
         }
         Some("3") => {
             print_rows(
@@ -347,6 +390,9 @@ fn cmd_experiment(which: Option<&str>, flags: &HashMap<String, String>) -> anyho
             }
         }
         _ => anyhow::bail!("experiment must be 1..6"),
+    }
+    if flags.contains_key("cache-stats") {
+        print_plan_cache_stats();
     }
     Ok(())
 }

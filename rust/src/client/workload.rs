@@ -106,6 +106,17 @@ impl Workload {
     pub fn read_object(&self, dss: &mut Dss, obj: ObjectId) -> anyhow::Result<OpResult> {
         dss.parallel_read(&self.objects[obj])
     }
+
+    /// Read a burst of objects issued at the same instant (one multi-tenant
+    /// event's worth of work): every block of every object fans out at t0,
+    /// and all degraded repairs across the burst's stripes are batched
+    /// through the proxy's worker pool in one wave. Completion is the
+    /// slowest block of the burst.
+    pub fn read_objects(&self, dss: &mut Dss, objs: &[ObjectId]) -> anyhow::Result<OpResult> {
+        let blocks: Vec<(StripeId, usize)> =
+            objs.iter().flat_map(|&o| self.objects[o].iter().copied()).collect();
+        dss.parallel_read(&blocks)
+    }
 }
 
 #[cfg(test)]

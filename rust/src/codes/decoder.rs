@@ -9,9 +9,9 @@
 
 use super::Code;
 use crate::gf::pool;
-use crate::gf::slice::gf_matmul_blocks;
+use crate::gf::slice::{gf_matmul_blocks, NibbleTables};
 use crate::gf::tables::{gf_inv, gf_mul};
-use crate::gf::Matrix;
+use crate::gf::{dispatch, GfEngine, Matrix};
 
 /// A planned multi-erasure decode.
 #[derive(Debug, Clone, PartialEq)]
@@ -51,9 +51,29 @@ impl DecodePlan {
         let len = sources.first().map_or(0, |s| s.len());
         let rows: Vec<&[u8]> = (0..self.coeffs.rows()).map(|i| self.coeffs.row(i)).collect();
         let mut outs: Vec<Vec<u8>> =
-            (0..self.erased.len()).map(|_| pool::take_zeroed(len)).collect();
+            (0..self.erased.len()).map(|_| pool::take_for_overwrite(len)).collect();
         gf_matmul_blocks(&rows, sources, &mut outs);
         outs
+    }
+
+    /// Execute the same plan over many stripes in one worker-pool
+    /// submission wave: `stripes[s][i]` is block `self.sources[i]` of
+    /// stripe `s`. Returns per-stripe reconstructed blocks in
+    /// `self.erased` order — byte-identical to per-stripe
+    /// [`Self::execute`], but the coefficient tables are built once and the
+    /// pool schedules lane-tasks across stripes (the full-node recovery
+    /// shape). Buffers come from the block pool.
+    pub fn execute_batch(&self, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+        self.execute_batch_on(dispatch::engine(), stripes)
+    }
+
+    /// [`Self::execute_batch`] on a specific engine.
+    pub fn execute_batch_on(&self, e: &GfEngine, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+        for sources in stripes {
+            assert_eq!(sources.len(), self.sources.len());
+        }
+        let tables = NibbleTables::for_rows((0..self.coeffs.rows()).map(|i| self.coeffs.row(i)));
+        e.matmul_stripes_t(&tables, stripes)
     }
 }
 

@@ -19,12 +19,13 @@ pub mod ulrc;
 pub mod unilrc;
 
 pub use decoder::DecodePlan;
-pub use plan_cache::{CachedPlan, PlanCache};
+pub use plan_cache::{CacheStats, CachedPlan, EntryStats, PlanCache};
 pub use spec::{CodeFamily, Scheme};
 
+use crate::gf::dispatch;
 use crate::gf::pool;
-use crate::gf::slice::{gf_matmul_blocks, xor_fold};
-use crate::gf::Matrix;
+use crate::gf::slice::{gf_matmul_blocks, xor_fold, NibbleTables};
+use crate::gf::{GfEngine, Matrix};
 use std::sync::Arc;
 
 /// Role of a block within a stripe.
@@ -85,12 +86,14 @@ impl RepairPlan {
     pub fn execute(&self, sources: &[&[u8]]) -> Vec<u8> {
         assert_eq!(sources.len(), self.sources.len());
         let len = sources[0].len();
+        // Both paths overwrite every output byte (fold copies, matmul
+        // zero-fills), so the buffer's stale contents never leak.
         if self.xor_only() {
-            let mut out = pool::take_zeroed(len);
+            let mut out = pool::take_for_overwrite(len);
             xor_fold(&mut out, sources);
             out
         } else {
-            let mut outs = vec![pool::take_zeroed(len)];
+            let mut outs = vec![pool::take_for_overwrite(len)];
             gf_matmul_blocks(&[&self.coeffs], sources, &mut outs);
             outs.pop().unwrap()
         }
@@ -245,6 +248,27 @@ impl Code {
         let mut outs = vec![vec![0u8; len]; self.m()];
         gf_matmul_blocks(&rows, data, &mut outs);
         outs
+    }
+
+    /// Batch encode: compute the parities of many stripes in one worker-pool
+    /// submission wave. Equivalent to calling [`Self::encode_blocks`] per
+    /// stripe (byte-identical — `tests/batch.rs` fuzzes this), but the
+    /// per-coefficient nibble tables are built once and shared, and the
+    /// pool schedules lane-tasks *across* stripes — so bulk ingest of small
+    /// blocks parallelizes even though each block is below the intra-block
+    /// striping threshold.
+    pub fn encode_stripes(&self, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+        self.encode_stripes_on(dispatch::engine(), stripes)
+    }
+
+    /// [`Self::encode_stripes`] on a specific engine (tests sweep thread
+    /// counts through this).
+    pub fn encode_stripes_on(&self, e: &GfEngine, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+        for data in stripes {
+            assert_eq!(data.len(), self.k, "need exactly k data blocks per stripe");
+        }
+        let tables = NibbleTables::for_rows((0..self.m()).map(|i| self.parity.row(i)));
+        e.matmul_stripes_t(&tables, stripes)
     }
 
     /// Symbol-level encode (one byte per block) — used by tests and the

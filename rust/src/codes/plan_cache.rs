@@ -1,4 +1,5 @@
-//! LRU cache of decode plans.
+//! LRU cache of decode plans, with per-entry hit accounting and an
+//! optional TTL.
 //!
 //! Building a [`DecodePlan`] runs a rank test and a Gauss–Jordan solve over
 //! the parity-check matrix — O((n−k)·n·|E|) field ops. Repairs repeat the
@@ -10,6 +11,12 @@
 //! entirely. Unrecoverable patterns are cached too (as `None`), so repeated
 //! rank-deficient probes are also free.
 //!
+//! Each entry tracks its own hit count and creation time; [`PlanCache::stats`]
+//! surfaces them (shown by `unilrc engine`). A TTL ([`PlanCache::set_ttl`],
+//! env `UNILRC_PLAN_TTL_MS`, config `[experiment] plan_ttl_ms`) expires
+//! stale entries on lookup — long-running deployments whose failure
+//! patterns drift don't pin dead plans in the LRU working set.
+//!
 //! Azure-LRC-style deployments do the same plan reuse; `tests/plan_cache.rs`
 //! asserts cached plans are identical to freshly computed ones and that
 //! repeated lookups do not re-invert.
@@ -19,9 +26,11 @@ use super::Code;
 use crate::gf::dispatch;
 use crate::gf::pool;
 use crate::gf::slice::NibbleTables;
+use crate::gf::GfEngine;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// A decode plan plus the precomputed per-coefficient nibble tables.
 pub struct CachedPlan {
@@ -32,9 +41,7 @@ pub struct CachedPlan {
 
 impl CachedPlan {
     fn new(plan: DecodePlan) -> CachedPlan {
-        let tables = (0..plan.coeffs.rows())
-            .map(|i| plan.coeffs.row(i).iter().map(|&c| NibbleTables::new(c)).collect())
-            .collect();
+        let tables = NibbleTables::for_rows((0..plan.coeffs.rows()).map(|i| plan.coeffs.row(i)));
         CachedPlan { plan, tables }
     }
 
@@ -46,9 +53,27 @@ impl CachedPlan {
         assert_eq!(sources.len(), self.plan.sources.len());
         let len = sources.first().map_or(0, |s| s.len());
         let mut outs: Vec<Vec<u8>> =
-            (0..self.plan.erased.len()).map(|_| pool::take_zeroed(len)).collect();
+            (0..self.plan.erased.len()).map(|_| pool::take_for_overwrite(len)).collect();
         dispatch::engine().matmul_blocks_t(&self.tables, sources, &mut outs);
         outs
+    }
+
+    /// Execute the cached plan over many stripes in one worker-pool
+    /// submission wave (`stripes[s][i]` is block `plan.sources[i]` of
+    /// stripe `s`): the multi-stripe repair hot path. Byte-identical to
+    /// per-stripe [`Self::execute`]; the prebuilt tables are shared and the
+    /// pool schedules lane-tasks across stripes, so full-node recovery of
+    /// small blocks parallelizes end to end.
+    pub fn execute_batch(&self, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+        self.execute_batch_on(dispatch::engine(), stripes)
+    }
+
+    /// [`Self::execute_batch`] on a specific engine.
+    pub fn execute_batch_on(&self, e: &GfEngine, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+        for sources in stripes {
+            assert_eq!(sources.len(), self.plan.sources.len());
+        }
+        e.matmul_stripes_t(&self.tables, stripes)
     }
 }
 
@@ -56,6 +81,9 @@ type Key = (String, Vec<usize>);
 
 struct Entry {
     stamp: u64,
+    /// Lookups served by this entry since insertion.
+    hits: u64,
+    created: Instant,
     /// `None` caches "pattern is unrecoverable".
     val: Option<Arc<CachedPlan>>,
 }
@@ -63,6 +91,31 @@ struct Entry {
 struct Inner {
     map: BTreeMap<Key, Entry>,
     tick: u64,
+    /// Entries older than this are dropped on lookup (`None` = keep forever).
+    ttl: Option<Duration>,
+}
+
+/// Per-entry view for introspection (`unilrc engine`).
+#[derive(Debug, Clone)]
+pub struct EntryStats {
+    pub code: String,
+    pub erased: Vec<usize>,
+    pub hits: u64,
+    pub age: Duration,
+    pub recoverable: bool,
+}
+
+/// Aggregate cache statistics.
+#[derive(Debug, Clone)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub expirations: u64,
+    pub entries: usize,
+    pub cap: usize,
+    pub ttl: Option<Duration>,
+    /// Entries sorted by hit count, hottest first.
+    pub top: Vec<EntryStats>,
 }
 
 /// Bounded LRU plan cache (thread-safe; plan construction runs outside the
@@ -72,16 +125,29 @@ pub struct PlanCache {
     inner: Mutex<Inner>,
     hits: AtomicU64,
     misses: AtomicU64,
+    expirations: AtomicU64,
 }
 
 impl PlanCache {
     pub const fn new(cap: usize) -> PlanCache {
         PlanCache {
             cap,
-            inner: Mutex::new(Inner { map: BTreeMap::new(), tick: 0 }),
+            inner: Mutex::new(Inner { map: BTreeMap::new(), tick: 0, ttl: None }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            expirations: AtomicU64::new(0),
         }
+    }
+
+    /// Expire entries older than `ttl` on lookup (`None` disables expiry).
+    /// Already-resident entries are judged by their original insertion
+    /// time, so tightening the TTL takes effect immediately.
+    pub fn set_ttl(&self, ttl: Option<Duration>) {
+        self.inner.lock().unwrap().ttl = ttl;
+    }
+
+    pub fn ttl(&self) -> Option<Duration> {
+        self.inner.lock().unwrap().ttl
     }
 
     /// The cached plan for `erased` on `code`, computing and inserting it
@@ -95,10 +161,23 @@ impl PlanCache {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
             let tick = inner.tick;
-            if let Some(e) = inner.map.get_mut(&key) {
-                e.stamp = tick;
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return e.val.clone();
+            let ttl = inner.ttl;
+            let expired = match inner.map.get_mut(&key) {
+                Some(e) => {
+                    if ttl.is_some_and(|t| e.created.elapsed() > t) {
+                        true
+                    } else {
+                        e.stamp = tick;
+                        e.hits += 1;
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return e.val.clone();
+                    }
+                }
+                None => false,
+            };
+            if expired {
+                inner.map.remove(&key);
+                self.expirations.fetch_add(1, Ordering::Relaxed);
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -107,7 +186,10 @@ impl PlanCache {
         inner.tick += 1;
         let tick = inner.tick;
         // A racing compute may have inserted meanwhile; keep the first.
-        let entry = inner.map.entry(key).or_insert(Entry { stamp: tick, val });
+        let entry = inner
+            .map
+            .entry(key)
+            .or_insert(Entry { stamp: tick, hits: 0, created: Instant::now(), val });
         entry.stamp = tick;
         let out = entry.val.clone();
         if inner.map.len() > self.cap {
@@ -128,12 +210,45 @@ impl PlanCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Entries dropped because they outlived the TTL.
+    pub fn expirations(&self) -> u64 {
+        self.expirations.load(Ordering::Relaxed)
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Snapshot of aggregate and per-entry statistics; `top_n` bounds the
+    /// per-entry listing (hottest first).
+    pub fn stats(&self, top_n: usize) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        let mut top: Vec<EntryStats> = inner
+            .map
+            .iter()
+            .map(|((code, erased), e)| EntryStats {
+                code: code.clone(),
+                erased: erased.clone(),
+                hits: e.hits,
+                age: e.created.elapsed(),
+                recoverable: e.val.is_some(),
+            })
+            .collect();
+        top.sort_by(|a, b| b.hits.cmp(&a.hits));
+        top.truncate(top_n);
+        CacheStats {
+            hits: self.hits(),
+            misses: self.misses(),
+            expirations: self.expirations(),
+            entries: inner.map.len(),
+            cap: self.cap,
+            ttl: inner.ttl,
+            top,
+        }
     }
 
     /// Drop every cached plan (stats are preserved).
@@ -213,6 +328,43 @@ mod tests {
         // the most recent entry survived
         cache.get_or_compute(&code, &[9]);
         assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn per_entry_hits_tracked_in_stats() {
+        let cache = PlanCache::new(16);
+        let code = Rs::new(10, 6);
+        cache.get_or_compute(&code, &[0]);
+        for _ in 0..3 {
+            cache.get_or_compute(&code, &[1]);
+        }
+        let stats = cache.stats(8);
+        assert_eq!(stats.entries, 2);
+        assert_eq!(stats.hits, 2);
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.top[0].erased, vec![1], "hottest entry first");
+        assert_eq!(stats.top[0].hits, 2);
+        assert!(stats.top[0].recoverable);
+        let capped = cache.stats(1);
+        assert_eq!(capped.top.len(), 1);
+    }
+
+    #[test]
+    fn ttl_expires_entries() {
+        let cache = PlanCache::new(16);
+        let code = Rs::new(10, 6);
+        cache.set_ttl(Some(Duration::ZERO));
+        cache.get_or_compute(&code, &[0]);
+        std::thread::sleep(Duration::from_millis(2));
+        // expired on lookup: recomputed, counted as expiration + miss
+        cache.get_or_compute(&code, &[0]);
+        assert_eq!(cache.expirations(), 1);
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        // disabling the TTL makes entries stick again
+        cache.set_ttl(None);
+        cache.get_or_compute(&code, &[0]);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.ttl(), None);
     }
 
     #[test]

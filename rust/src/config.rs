@@ -159,28 +159,52 @@ fn parse_value(s: &str) -> Result<Value> {
     bail!("cannot parse {s:?}")
 }
 
+/// Build and install the process-wide GF engine from optional kernel /
+/// thread overrides (shared by the CLI flags and config-file keys; the
+/// engine freezes at first install, so late overrides warn via `origin`).
+pub fn install_gf_engine(kernel: Option<&str>, threads: Option<usize>, origin: &str) -> Result<()> {
+    use crate::gf::dispatch::{self, GfEngine, Kernel};
+    if kernel.is_none() && threads.is_none() {
+        return Ok(());
+    }
+    let mut engine = GfEngine::from_env();
+    if let Some(k) = kernel {
+        let k = Kernel::parse(k)
+            .with_context(|| format!("bad gf kernel {k:?} (try `unilrc engine`)"))?;
+        engine = engine.with_kernel(k);
+    }
+    if let Some(t) = threads {
+        engine = engine.with_threads(t);
+    }
+    if !dispatch::install(engine) {
+        eprintln!("note: GF engine already initialized — {origin} gf_kernel/gf_threads ignored");
+    }
+    Ok(())
+}
+
+/// Set the decode-plan cache TTL in milliseconds on the global cache
+/// (0 disables expiry). Shared by `--plan-ttl-ms`, `UNILRC_PLAN_TTL_MS`,
+/// and the `[experiment] plan_ttl_ms` config key.
+pub fn apply_plan_ttl(ms: u64) {
+    let ttl = (ms > 0).then(|| std::time::Duration::from_millis(ms));
+    crate::codes::plan_cache::global().set_ttl(ttl);
+}
+
 /// Build an experiment config from a file (CLI `--config`): recognized
 /// keys under `[experiment]`: `scheme`, `block_kb`, `stripes`,
-/// `cross_gbps`, `aggregated`, `backend`, `seed`, and the GF engine knobs
-/// `gf_kernel` (auto|scalar|ssse3|avx2|neon) / `gf_threads`.
+/// `cross_gbps`, `aggregated`, `backend`, `seed`, the GF engine knobs
+/// `gf_kernel` (auto|scalar|ssse3|avx2|neon) / `gf_threads` (worker-pool
+/// size), and `plan_ttl_ms` (decode-plan cache TTL; 0 disables expiry).
 pub fn experiment_config(cfg: &Config) -> Result<crate::experiments::ExpConfig> {
     use crate::codes::spec::Scheme;
-    use crate::gf::dispatch::{self, GfEngine, Kernel};
     let mut e = crate::experiments::ExpConfig::default();
-    if cfg.get_str("experiment", "gf_kernel").is_some()
-        || cfg.get_usize("experiment", "gf_threads").is_some()
-    {
-        let mut engine = GfEngine::from_env();
-        if let Some(k) = cfg.get_str("experiment", "gf_kernel") {
-            let k = Kernel::parse(k).with_context(|| format!("bad gf_kernel {k:?}"))?;
-            engine = engine.with_kernel(k);
-        }
-        if let Some(t) = cfg.get_usize("experiment", "gf_threads") {
-            engine = engine.with_threads(t);
-        }
-        if !dispatch::install(engine) {
-            eprintln!("note: GF engine already initialized — config gf_kernel/gf_threads ignored");
-        }
+    install_gf_engine(
+        cfg.get_str("experiment", "gf_kernel"),
+        cfg.get_usize("experiment", "gf_threads"),
+        "config",
+    )?;
+    if let Some(ms) = cfg.get_usize("experiment", "plan_ttl_ms") {
+        apply_plan_ttl(ms as u64);
     }
     if let Some(s) = cfg.get_str("experiment", "scheme") {
         e.scheme = Scheme::parse(s).with_context(|| format!("bad scheme {s:?}"))?;
@@ -255,6 +279,16 @@ epsilon = 0.1
         assert!(experiment_config(&c).is_ok());
         let bad = Config::parse("[experiment]\ngf_kernel = \"mmx\"").unwrap();
         assert!(experiment_config(&bad).is_err());
+    }
+
+    #[test]
+    fn plan_ttl_key_accepted() {
+        // 0 disables expiry; both forms must parse and apply cleanly.
+        let c = Config::parse("[experiment]\nplan_ttl_ms = 5000").unwrap();
+        assert!(experiment_config(&c).is_ok());
+        let off = Config::parse("[experiment]\nplan_ttl_ms = 0").unwrap();
+        assert!(experiment_config(&off).is_ok());
+        crate::codes::plan_cache::global().set_ttl(None); // leave global state clean
     }
 
     #[test]

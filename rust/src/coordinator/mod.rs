@@ -14,7 +14,7 @@ pub use metadata::{Metadata, StripeId};
 
 use crate::codes::Code;
 use crate::placement::{PlacementStrategy, Topology};
-use crate::proxy::{OpOutcome, ProxyCtx};
+use crate::proxy::{OpOutcome, ProxyCtx, RepairRequest};
 use crate::prng::Prng;
 use crate::runtime::CodingEngine;
 use crate::sim::{Endpoint, NetConfig, NetSim};
@@ -268,19 +268,45 @@ impl Dss {
     /// same instant — healthy blocks straight from their nodes, failed data
     /// blocks through the degraded path — and complete when the slowest
     /// arrives. This is where placement load-imbalance shows up.
+    ///
+    /// All degraded repairs of the fan-out are submitted as *one* batched
+    /// event ([`ProxyCtx::repair_node`]): the engine's worker pool overlaps
+    /// their combines instead of repairing stripe by stripe.
     pub fn parallel_read(&mut self, blocks: &[(StripeId, usize)]) -> anyhow::Result<OpResult> {
         let t0 = self.clock;
         let cross0 = self.net.cross_bytes;
         let bs = self.cfg.block_size;
         let mut done = t0;
+        let mut degraded: Vec<RepairRequest> = Vec::new();
         for &(stripe, block) in blocks {
-            let t = if self.is_failed(stripe, block) {
-                self.degraded_read_at(t0, stripe, block)?
+            if self.is_failed(stripe, block) {
+                anyhow::ensure!(block < self.code.k(), "degraded read targets a data block");
+                degraded.push(RepairRequest {
+                    stripe,
+                    block,
+                    erased: self.failed_blocks(stripe),
+                });
             } else {
                 let node = self.meta.node_of(stripe, block);
-                self.net.transfer(t0, Endpoint::Node(node), Endpoint::Client, bs)
+                let t = self.net.transfer(t0, Endpoint::Node(node), Endpoint::Client, bs);
+                done = done.max(t);
+            }
+        }
+        if !degraded.is_empty() {
+            let outcomes = {
+                let mut ctx = self.proxy_ctx();
+                ctx.repair_node(t0, &degraded)?
             };
-            done = done.max(t);
+            for (req, oc) in degraded.iter().zip(outcomes) {
+                let OpOutcome { ready_at, rebuilt, home } = oc;
+                anyhow::ensure!(
+                    rebuilt.as_slice() == self.meta.block_data(req.stripe, req.block).as_slice(),
+                    "degraded read returned corrupt bytes"
+                );
+                crate::gf::pool::recycle(rebuilt);
+                let t = self.net.transfer(ready_at, Endpoint::Proxy(home), Endpoint::Client, bs);
+                done = done.max(t);
+            }
         }
         self.clock = done;
         Ok(OpResult {
@@ -337,18 +363,41 @@ impl Dss {
     }
 
     /// Full-node recovery (§6 Exp 3): reconstruct every block the failed
-    /// node hosted, all repairs issued in parallel at t=0.
+    /// node hosted, all repairs issued in parallel at t=0 as one batched
+    /// event — the engine's worker pool schedules every stripe's combines
+    /// together ([`ProxyCtx::repair_node`]) instead of stripe by stripe.
     pub fn recover_node(&mut self, node: usize) -> anyhow::Result<RecoveryResult> {
         anyhow::ensure!(self.failed.contains(&node), "node {node} is not failed");
         let lost = self.meta.blocks_on_node(node);
         let t0 = self.clock;
         let cross0 = self.net.cross_bytes;
+        let bs = self.cfg.block_size;
+        let reqs: Vec<RepairRequest> = lost
+            .iter()
+            .map(|&(stripe, block)| RepairRequest {
+                stripe,
+                block,
+                erased: self.failed_blocks(stripe),
+            })
+            .collect();
+        let outcomes = {
+            let mut ctx = self.proxy_ctx();
+            ctx.repair_node(t0, &reqs)?
+        };
         let mut done = t0;
         let mut bytes = 0usize;
-        for (stripe, block) in &lost {
-            let r = self.reconstruct_at(t0, *stripe, *block)?;
-            done = done.max(t0 + r.latency);
-            bytes += r.bytes;
+        for (req, oc) in reqs.iter().zip(outcomes) {
+            let OpOutcome { ready_at, rebuilt, home } = oc;
+            anyhow::ensure!(
+                rebuilt.as_slice() == self.meta.block_data(req.stripe, req.block).as_slice(),
+                "reconstruction produced corrupt bytes"
+            );
+            crate::gf::pool::recycle(rebuilt);
+            // write to a live spare node in the home cluster (or any cluster)
+            let spare = self.spare_node(req.stripe, home)?;
+            let t = self.net.transfer(ready_at, Endpoint::Proxy(home), Endpoint::Node(spare), bs);
+            done = done.max(t);
+            bytes += bs;
         }
         self.clock = done;
         Ok(RecoveryResult {

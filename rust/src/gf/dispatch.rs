@@ -3,17 +3,28 @@
 //! [`Kernel`] is the instruction-set tier (detected once at startup,
 //! overridable via `UNILRC_GF_KERNEL` / `--gf-kernel`); [`GfEngine`] bundles
 //! a kernel with a striped parallel executor that splits large blocks into
-//! cache-sized lanes and fans them across a scoped thread pool. All tiers
-//! and both execution modes produce byte-identical results — GF(2^8) is
-//! exact and XOR-accumulation is order-independent (`tests/gf_simd.rs`
-//! asserts this differentially).
+//! cache-sized lanes and fans them across a persistent [`WorkPool`]
+//! (`gf/workpool.rs`) — workers are spawned once per engine and reused by
+//! every call, so dispatch costs a queue push instead of a thread spawn.
+//! All tiers and both execution modes produce byte-identical results —
+//! GF(2^8) is exact and XOR-accumulation is order-independent
+//! (`tests/gf_simd.rs` asserts this differentially).
+//!
+//! Beyond the per-call striped entry points ([`GfEngine::matmul_blocks`],
+//! [`GfEngine::fold_blocks`]), the engine exposes a *batched* mode:
+//! [`GfEngine::batch`] opens a [`CodingBatch`] into which whole multi-stripe
+//! events (full-node recovery, degraded-read fan-outs, bulk ingest) enqueue
+//! every stripe's combine at once; the pool schedules lane-tasks across
+//! stripes, so small blocks that are below the intra-block striping
+//! threshold still parallelize across the event (`tests/batch.rs`).
 //!
 //! The process-wide engine ([`engine`]) backs the hot-path entry points in
 //! [`super::slice`], so every encode / repair / decode in the repo runs at
 //! the selected tier without call sites knowing about dispatch.
 
 use super::slice::{self, NibbleTables};
-use std::sync::OnceLock;
+use super::workpool::{BatchScope, WorkPool};
+use std::sync::{Arc, OnceLock};
 
 /// Instruction-set tier of the multiply-accumulate kernel.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -101,17 +112,34 @@ impl std::fmt::Display for Kernel {
 /// so one lane's src+dst stay cache-resident while it is processed.
 const DEFAULT_LANE: usize = 64 * 1024;
 
-/// Minimum total bytes of input a call must touch before worker threads are
-/// engaged — below this the scoped-spawn overhead (~tens of µs) dominates.
-const DEFAULT_PAR_WORK: usize = 2 << 20;
+/// Minimum total bytes of input a call must touch before the worker pool is
+/// engaged. Dispatch is a queue push + latch (~1 µs) now that workers are
+/// persistent, so this sits far below the 2 MiB the scoped-spawn executor
+/// needed to hide its ~tens-of-µs thread startup.
+const DEFAULT_PAR_WORK: usize = 256 * 1024;
 
-/// A GF(2^8) execution engine: one kernel tier + striping parameters.
-#[derive(Debug, Clone)]
+/// A GF(2^8) execution engine: one kernel tier + striping parameters +
+/// (for `threads > 1`) a persistent worker pool, created lazily on first
+/// parallel call and frozen with the engine. Clones share the pool.
+#[derive(Clone)]
 pub struct GfEngine {
     kernel: Kernel,
     threads: usize,
     lane: usize,
     par_work: usize,
+    pool: Arc<OnceLock<Arc<WorkPool>>>,
+}
+
+impl std::fmt::Debug for GfEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GfEngine")
+            .field("kernel", &self.kernel)
+            .field("threads", &self.threads)
+            .field("lane", &self.lane)
+            .field("par_work", &self.par_work)
+            .field("pool_started", &self.pool.get().is_some())
+            .finish()
+    }
 }
 
 impl Default for GfEngine {
@@ -137,12 +165,18 @@ impl GfEngine {
     /// machine stays runnable on another.
     pub fn new(kernel: Kernel) -> GfEngine {
         let kernel = if kernel.available() { kernel } else { Kernel::Scalar };
-        GfEngine { kernel, threads: 1, lane: DEFAULT_LANE, par_work: DEFAULT_PAR_WORK }
+        GfEngine {
+            kernel,
+            threads: 1,
+            lane: DEFAULT_LANE,
+            par_work: DEFAULT_PAR_WORK,
+            pool: Arc::new(OnceLock::new()),
+        }
     }
 
     /// Engine configured from the environment:
     /// `UNILRC_GF_KERNEL` (scalar|ssse3|avx2|neon|auto), `UNILRC_GF_THREADS`,
-    /// `UNILRC_GF_LANE_KB`.
+    /// `UNILRC_GF_LANE_KB`, `UNILRC_GF_PAR_KB` (striping work threshold).
     pub fn from_env() -> GfEngine {
         let mut e = GfEngine::auto();
         if let Ok(k) = std::env::var("UNILRC_GF_KERNEL") {
@@ -160,6 +194,11 @@ impl GfEngine {
                 e = e.with_lane(kb * 1024);
             }
         }
+        if let Ok(kb) = std::env::var("UNILRC_GF_PAR_KB") {
+            if let Ok(kb) = kb.parse::<usize>() {
+                e = e.with_par_work(kb * 1024);
+            }
+        }
         e
     }
 
@@ -168,8 +207,12 @@ impl GfEngine {
         self
     }
 
+    /// Set the worker count. Replaces any existing pool handle so the pool
+    /// is (re)created at the new size on the next parallel call; the old
+    /// pool's threads are joined when its last engine clone drops.
     pub fn with_threads(mut self, threads: usize) -> GfEngine {
         self.threads = threads.max(1);
+        self.pool = Arc::new(OnceLock::new());
         self
     }
 
@@ -193,14 +236,41 @@ impl GfEngine {
         self.threads
     }
 
+    /// Striping work threshold in bytes (below it, calls run inline).
+    pub fn par_work(&self) -> usize {
+        self.par_work
+    }
+
+    /// Has the worker pool been started (first parallel call ran)?
+    pub fn pool_started(&self) -> bool {
+        self.pool.get().is_some()
+    }
+
     /// One-line description for logs and `unilrc engine`.
     pub fn describe(&self) -> String {
         format!(
-            "kernel={} threads={} lane={}KiB",
+            "kernel={} threads={} lane={}KiB par_work={}KiB pool={}",
             self.kernel,
             self.threads,
-            self.lane / 1024
+            self.lane / 1024,
+            self.par_work / 1024,
+            if self.threads <= 1 {
+                "off"
+            } else if self.pool_started() {
+                "running"
+            } else {
+                "lazy"
+            }
         )
+    }
+
+    /// The persistent pool, started on first use; `None` when the engine is
+    /// single-threaded.
+    fn pool(&self) -> Option<&WorkPool> {
+        if self.threads <= 1 {
+            return None;
+        }
+        Some(self.pool.get_or_init(|| Arc::new(WorkPool::new(self.threads))).as_ref())
     }
 
     // ------------------------------------------------------------ slice ops
@@ -246,6 +316,45 @@ impl GfEngine {
         }
     }
 
+    /// Fused `dst ^= c1 · src1 ^ c2 · src2`: one load + one store of `dst`
+    /// per two source slices (the SIMD tiers read both products before
+    /// touching `dst`), versus two full read-modify-write passes with
+    /// back-to-back [`Self::mul_acc_t`]. This is the inner step of
+    /// [`Self::matmul_blocks_t`], where `dst` traffic dominates once the
+    /// tables are cached.
+    pub fn mul_acc2_t(
+        &self,
+        t1: &NibbleTables,
+        src1: &[u8],
+        t2: &NibbleTables,
+        src2: &[u8],
+        dst: &mut [u8],
+    ) {
+        assert_eq!(dst.len(), src1.len(), "mul_acc2_t src1 length mismatch");
+        assert_eq!(dst.len(), src2.len(), "mul_acc2_t src2 length mismatch");
+        // A zero coefficient degenerates to the single-source op (which
+        // also keeps the c=1 XOR fast path for the surviving source).
+        if t1.c == 0 {
+            return self.mul_acc_t(t2, src2, dst);
+        }
+        if t2.c == 0 {
+            return self.mul_acc_t(t1, src1, dst);
+        }
+        // SAFETY: kernel availability established at construction.
+        match self.kernel {
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Ssse3 => unsafe { super::simd::x86_64::mul_acc2_ssse3(t1, src1, t2, src2, dst) },
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => unsafe { super::simd::x86_64::mul_acc2_avx2(t1, src1, t2, src2, dst) },
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => unsafe { super::simd::aarch64::mul_acc2_neon(t1, src1, t2, src2, dst) },
+            _ => {
+                slice::mul_acc_slice_scalar(t1.c, src1, dst);
+                slice::mul_acc_slice_scalar(t2.c, src2, dst);
+            }
+        }
+    }
+
     /// `dst ^= src` on the selected tier.
     pub fn xor(&self, dst: &mut [u8], src: &[u8]) {
         assert_eq!(dst.len(), src.len(), "xor length mismatch");
@@ -271,8 +380,8 @@ impl GfEngine {
         }
     }
 
-    /// `dst = srcs[0] ^ srcs[1] ^ …`, striped across workers for large
-    /// blocks (the UniLRC repair path).
+    /// `dst = srcs[0] ^ srcs[1] ^ …`, striped across the worker pool for
+    /// large blocks (the UniLRC repair path).
     pub fn fold_blocks(&self, dst: &mut [u8], srcs: &[&[u8]]) {
         assert!(!srcs.is_empty(), "fold needs at least one source");
         for s in srcs {
@@ -280,28 +389,31 @@ impl GfEngine {
         }
         let block = dst.len();
         let workers = self.workers_for(block, block * srcs.len());
-        if workers <= 1 {
+        let pool = if workers > 1 { self.pool() } else { None };
+        let Some(pool) = pool else {
             dst.copy_from_slice(srcs[0]);
             for s in &srcs[1..] {
                 self.xor(dst, s);
             }
             return;
-        }
+        };
         let lane = self.lane;
-        let mut lanes: Vec<(usize, &mut [u8])> = Vec::with_capacity(block.div_ceil(lane));
-        for (l, chunk) in dst.chunks_mut(lane).enumerate() {
-            lanes.push((l * lane, chunk));
-        }
-        let per = lanes.len().div_ceil(workers);
-        std::thread::scope(|scope| {
-            while !lanes.is_empty() {
-                let group: Vec<_> = lanes.drain(..per.min(lanes.len())).collect();
-                scope.spawn(move || {
-                    for (off, chunk) in group {
-                        let w = chunk.len();
-                        chunk.copy_from_slice(&srcs[0][off..off + w]);
+        // Group whole lanes into one task per worker; within a task, each
+        // lane is copied and folded before the next so src+dst stay
+        // cache-resident.
+        let per = block.div_ceil(lane).div_ceil(workers).max(1) * lane;
+        pool.scope(|scope| {
+            let mut off = 0usize;
+            for chunk in dst.chunks_mut(per) {
+                let base = off;
+                off += chunk.len();
+                scope.submit(move || {
+                    for (l, c) in chunk.chunks_mut(lane).enumerate() {
+                        let o = base + l * lane;
+                        let w = c.len();
+                        c.copy_from_slice(&srcs[0][o..o + w]);
                         for s in &srcs[1..] {
-                            self.xor(chunk, &s[off..off + w]);
+                            self.xor(c, &s[o..o + w]);
                         }
                     }
                 });
@@ -310,14 +422,11 @@ impl GfEngine {
     }
 
     /// Matrix-style coding primitive: `outs[i] = ⊕_j coeff[i][j] · srcs[j]`,
-    /// striped across workers. Each worker owns a disjoint byte range of
-    /// every output row and walks it source-major, so one cache-resident
+    /// striped across the worker pool. Each task owns a disjoint byte range
+    /// of every output row and walks it source-major, so one cache-resident
     /// lane of each source is scattered into all rows before moving on.
     pub fn matmul_blocks(&self, coeff: &[&[u8]], srcs: &[&[u8]], outs: &mut [Vec<u8>]) {
-        let tables: Vec<Vec<NibbleTables>> = coeff
-            .iter()
-            .map(|row| row.iter().map(|&c| NibbleTables::new(c)).collect())
-            .collect();
+        let tables = NibbleTables::for_rows(coeff.iter().copied());
         self.matmul_blocks_t(&tables, srcs, outs);
     }
 
@@ -331,11 +440,12 @@ impl GfEngine {
             assert_eq!(out.len(), block, "output block size mismatch");
         }
         let workers = self.workers_for(block, block * srcs.len() * outs.len().max(1));
-        if workers <= 1 || outs.is_empty() {
+        let pool = if workers > 1 && !outs.is_empty() { self.pool() } else { None };
+        let Some(pool) = pool else {
             let mut full: Vec<&mut [u8]> = outs.iter_mut().map(|o| o.as_mut_slice()).collect();
             self.matmul_lane(tables, srcs, 0, &mut full);
             return;
-        }
+        };
         let lane = self.lane;
         let nlanes = block.div_ceil(lane);
         // Transpose row-major chunking into lane-major work items: lane l
@@ -348,10 +458,10 @@ impl GfEngine {
             lanes.push((l * lane, chunk));
         }
         let per = nlanes.div_ceil(workers);
-        std::thread::scope(|scope| {
+        pool.scope(|scope| {
             while !lanes.is_empty() {
                 let mut group: Vec<_> = lanes.drain(..per.min(lanes.len())).collect();
-                scope.spawn(move || {
+                scope.submit(move || {
                     for (off, louts) in group.iter_mut() {
                         self.matmul_lane(tables, srcs, *off, louts);
                     }
@@ -361,16 +471,192 @@ impl GfEngine {
     }
 
     /// One lane of the matmul: outputs are the `[off..off+w)` sub-slices of
-    /// the full rows; sources are indexed with the same offset.
+    /// the full rows; sources are indexed with the same offset. Sources are
+    /// consumed in fused pairs ([`Self::mul_acc2_t`]) so each output lane
+    /// is loaded/stored once per *two* sources.
     fn matmul_lane(&self, tables: &[Vec<NibbleTables>], srcs: &[&[u8]], off: usize, louts: &mut [&mut [u8]]) {
         for out in louts.iter_mut() {
             out.fill(0);
         }
-        for (j, src) in srcs.iter().enumerate() {
+        let mut j = 0;
+        while j + 1 < srcs.len() {
             for (row, out) in tables.iter().zip(louts.iter_mut()) {
                 let w = out.len();
-                self.mul_acc_t(&row[j], &src[off..off + w], out);
+                self.mul_acc2_t(
+                    &row[j],
+                    &srcs[j][off..off + w],
+                    &row[j + 1],
+                    &srcs[j + 1][off..off + w],
+                    out,
+                );
             }
+            j += 2;
+        }
+        if j < srcs.len() {
+            for (row, out) in tables.iter().zip(louts.iter_mut()) {
+                let w = out.len();
+                self.mul_acc_t(&row[j], &srcs[j][off..off + w], out);
+            }
+        }
+    }
+
+    // -------------------------------------------------------- batched ops
+
+    /// Apply one coefficient-table matrix to many stripes in a single
+    /// batched wave: `result[s][i] = ⊕_j tables[i][j] · stripes[s][j]`.
+    /// This is the shared engine for `Code::encode_stripes`,
+    /// `DecodePlan::execute_batch`, and `CachedPlan::execute_batch`.
+    /// Output buffers come from the block pool (callers may
+    /// [`recycle`](super::pool::recycle) them); every byte is overwritten.
+    pub fn matmul_stripes_t(
+        &self,
+        tables: &[Vec<NibbleTables>],
+        stripes: &[Vec<&[u8]>],
+    ) -> Vec<Vec<Vec<u8>>> {
+        let mut all: Vec<Vec<Vec<u8>>> = stripes
+            .iter()
+            .map(|sources| {
+                let len = sources.first().map_or(0, |s| s.len());
+                (0..tables.len()).map(|_| super::pool::take_for_overwrite(len)).collect()
+            })
+            .collect();
+        let work: usize =
+            stripes.iter().map(|s| s.iter().map(|b| b.len()).sum::<usize>()).sum::<usize>();
+        self.batch(work, |b| {
+            for (sources, outs) in stripes.iter().zip(all.iter_mut()) {
+                b.matmul_t(tables, sources.clone(), outs);
+            }
+        });
+        all
+    }
+
+    /// Run a *batch* of coding operations as one pool submission wave:
+    /// `f` receives a [`CodingBatch`] and enqueues any number of folds /
+    /// matmuls (typically one per stripe of a recovery or read event); all
+    /// of them have completed when `batch` returns. `work` is the total
+    /// input bytes the batch will touch — below the engine's striping
+    /// threshold (or on a single-threaded engine) the ops run inline in
+    /// submission order instead of through the pool.
+    ///
+    /// This is how multi-stripe events beat the per-call striping gate on
+    /// small blocks: a 64 KiB block is too small to stripe by itself, but
+    /// 40 stripes × 64 KiB submitted together keep every worker busy.
+    pub fn batch<'env, R, F>(&'env self, work: usize, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&mut CodingBatch<'scope, 'env>) -> R,
+    {
+        let pool = if self.threads > 1 && work >= self.par_work { self.pool() } else { None };
+        match pool {
+            Some(pool) => pool.scope(|scope| {
+                let mut b = CodingBatch { engine: self, scope: Some(scope) };
+                f(&mut b)
+            }),
+            None => {
+                let mut b = CodingBatch { engine: self, scope: None };
+                f(&mut b)
+            }
+        }
+    }
+}
+
+/// A batch of coding operations submitted to the engine's worker pool in
+/// one wave (see [`GfEngine::batch`]). Ops enqueued here do **not** run
+/// eagerly — they complete by the time `batch` returns. Each op is split
+/// into lane-sized tasks so the pool load-balances across stripes.
+pub struct CodingBatch<'scope, 'env: 'scope> {
+    engine: &'env GfEngine,
+    /// `None` ⇒ run ops inline (single-threaded engine or tiny batch).
+    scope: Option<&'scope BatchScope<'scope, 'env>>,
+}
+
+impl<'scope, 'env> CodingBatch<'scope, 'env> {
+    /// Chunk size for batch tasks: whole lanes, one task for sub-lane blocks.
+    fn chunk(&self) -> usize {
+        self.engine.lane
+    }
+
+    /// Enqueue an arbitrary engine task (advanced callers).
+    pub fn submit<F>(&mut self, f: F)
+    where
+        F: FnOnce(&GfEngine) + Send + 'env,
+    {
+        let engine = self.engine;
+        match self.scope {
+            None => f(engine),
+            Some(scope) => scope.submit(move || f(engine)),
+        }
+    }
+
+    /// Enqueue `dst = srcs[0] ^ srcs[1] ^ …` (XOR-local repair of one
+    /// stripe within a batched event).
+    pub fn fold(&mut self, dst: &'env mut [u8], srcs: Vec<&'env [u8]>) {
+        assert!(!srcs.is_empty(), "fold needs at least one source");
+        for s in &srcs {
+            assert_eq!(s.len(), dst.len(), "fold length mismatch");
+        }
+        let engine = self.engine;
+        let Some(scope) = self.scope else {
+            dst.copy_from_slice(srcs[0]);
+            for s in &srcs[1..] {
+                engine.xor(dst, s);
+            }
+            return;
+        };
+        let step = self.chunk();
+        // One shared allocation for the source list; tasks clone the Arc.
+        let srcs = Arc::new(srcs);
+        let mut off = 0usize;
+        for c in dst.chunks_mut(step) {
+            let o = off;
+            let w = c.len();
+            off += w;
+            let srcs = Arc::clone(&srcs);
+            scope.submit(move || {
+                c.copy_from_slice(&srcs[0][o..o + w]);
+                for s in &srcs[1..] {
+                    engine.xor(c, &s[o..o + w]);
+                }
+            });
+        }
+    }
+
+    /// Enqueue `outs[i] = ⊕_j tables[i][j] · srcs[j]` (one stripe's encode
+    /// or decode within a batched event). `tables` must outlive the batch —
+    /// build them once and share them across every stripe of the event.
+    pub fn matmul_t(
+        &mut self,
+        tables: &'env [Vec<NibbleTables>],
+        srcs: Vec<&'env [u8]>,
+        outs: &'env mut [Vec<u8>],
+    ) {
+        assert_eq!(tables.len(), outs.len(), "row count mismatch");
+        let block = srcs.first().map_or(0, |s| s.len());
+        for (row, out) in tables.iter().zip(outs.iter_mut()) {
+            assert_eq!(row.len(), srcs.len(), "column count mismatch");
+            assert_eq!(out.len(), block, "output block size mismatch");
+        }
+        let engine = self.engine;
+        let Some(scope) = self.scope else {
+            let mut full: Vec<&mut [u8]> = outs.iter_mut().map(|o| o.as_mut_slice()).collect();
+            engine.matmul_lane(tables, &srcs, 0, &mut full);
+            return;
+        };
+        if outs.is_empty() {
+            return;
+        }
+        let step = self.chunk();
+        let nlanes = block.div_ceil(step);
+        // One shared allocation for the source list; tasks clone the Arc.
+        let srcs = Arc::new(srcs);
+        let mut row_chunks: Vec<_> = outs.iter_mut().map(|o| o.chunks_mut(step)).collect();
+        for l in 0..nlanes {
+            let mut louts: Vec<&mut [u8]> =
+                row_chunks.iter_mut().map(|it| it.next().expect("lane chunk")).collect();
+            let srcs = Arc::clone(&srcs);
+            let off = l * step;
+            scope.submit(move || {
+                engine.matmul_lane(tables, &srcs, off, &mut louts);
+            });
         }
     }
 }
@@ -442,6 +728,29 @@ mod tests {
     }
 
     #[test]
+    fn mul_acc2_matches_two_single_ops() {
+        let mut p = Prng::new(23);
+        // straddle the vector widths and exercise the scalar tail
+        for len in [0usize, 1, 15, 16, 17, 31, 32, 33, 64, 1000] {
+            let s1 = p.bytes(len);
+            let s2 = p.bytes(len);
+            let init = p.bytes(len);
+            for k in available_kernels() {
+                let e = GfEngine::new(k);
+                for (c1, c2) in [(0u8, 0u8), (0, 7), (1, 1), (1, 0x53), (2, 3), (0x53, 0xFF)] {
+                    let (t1, t2) = (NibbleTables::new(c1), NibbleTables::new(c2));
+                    let mut fused = init.clone();
+                    e.mul_acc2_t(&t1, &s1, &t2, &s2, &mut fused);
+                    let mut seq = init.clone();
+                    e.mul_acc_t(&t1, &s1, &mut seq);
+                    e.mul_acc_t(&t2, &s2, &mut seq);
+                    assert_eq!(fused, seq, "kernel={k} c1={c1} c2={c2} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn striped_matmul_matches_serial() {
         let mut p = Prng::new(18);
         let block = 10_000; // not a lane multiple: exercises the short tail lane
@@ -483,5 +792,88 @@ mod tests {
         let mut outs: Vec<Vec<u8>> = vec![];
         GfEngine::auto().matmul_blocks(&[], &[], &mut outs);
         assert!(outs.is_empty());
+    }
+
+    #[test]
+    fn pool_is_lazy_and_reused_across_calls() {
+        let mut p = Prng::new(20);
+        let e = GfEngine::new(Kernel::detect()).with_threads(2).with_lane(256).with_par_work(0);
+        assert!(!e.pool_started(), "pool must not start before a parallel call");
+        let srcs: Vec<Vec<u8>> = (0..3).map(|_| p.bytes(4096)).collect();
+        let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0u8; 4096];
+        e.fold_blocks(&mut out, &refs);
+        assert!(e.pool_started());
+        let clone = e.clone();
+        assert!(clone.pool_started(), "clones share the started pool");
+    }
+
+    #[test]
+    fn batch_matches_sequential_ops() {
+        let mut p = Prng::new(21);
+        let block = 3000;
+        let stripes = 5;
+        let all_srcs: Vec<Vec<Vec<u8>>> =
+            (0..stripes).map(|_| (0..4).map(|_| p.bytes(block)).collect()).collect();
+        let coeff: Vec<Vec<u8>> = (0..2).map(|_| p.bytes(4)).collect();
+        let tables: Vec<Vec<NibbleTables>> = coeff
+            .iter()
+            .map(|row| row.iter().map(|&c| NibbleTables::new(c)).collect())
+            .collect();
+
+        let serial = GfEngine::scalar();
+        let crefs: Vec<&[u8]> = coeff.iter().map(|v| v.as_slice()).collect();
+        let mut expect: Vec<Vec<Vec<u8>>> = Vec::new();
+        for srcs in &all_srcs {
+            let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+            let mut outs = vec![vec![0u8; block]; 2];
+            serial.matmul_blocks(&crefs, &refs, &mut outs);
+            expect.push(outs);
+        }
+
+        for threads in [1usize, 2, 8] {
+            let e = GfEngine::new(Kernel::detect())
+                .with_threads(threads)
+                .with_lane(512)
+                .with_par_work(0);
+            let mut got: Vec<Vec<Vec<u8>>> = vec![vec![vec![7u8; block]; 2]; stripes];
+            e.batch(stripes * 4 * block, |b| {
+                for (srcs, outs) in all_srcs.iter().zip(got.iter_mut()) {
+                    let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+                    b.matmul_t(&tables, refs, outs);
+                }
+            });
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn batch_fold_matches_sequential() {
+        let mut p = Prng::new(22);
+        let block = 2049;
+        let stripes = 4;
+        let all_srcs: Vec<Vec<Vec<u8>>> =
+            (0..stripes).map(|_| (0..5).map(|_| p.bytes(block)).collect()).collect();
+        let mut expect: Vec<Vec<u8>> = Vec::new();
+        for srcs in &all_srcs {
+            let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+            let mut out = vec![0u8; block];
+            GfEngine::scalar().fold_blocks(&mut out, &refs);
+            expect.push(out);
+        }
+        for threads in [1usize, 2, 8] {
+            let e = GfEngine::new(Kernel::detect())
+                .with_threads(threads)
+                .with_lane(512)
+                .with_par_work(0);
+            let mut got: Vec<Vec<u8>> = vec![vec![3u8; block]; stripes];
+            e.batch(stripes * 5 * block, |b| {
+                for (srcs, out) in all_srcs.iter().zip(got.iter_mut()) {
+                    let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+                    b.fold(out, refs);
+                }
+            });
+            assert_eq!(got, expect, "threads={threads}");
+        }
     }
 }

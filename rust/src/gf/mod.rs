@@ -9,7 +9,10 @@
 //!   byte slices, dispatched through the engine.
 //! * [`simd`] — SSSE3 / AVX2 / NEON split-nibble (`PSHUFB`-class) kernels.
 //! * [`dispatch`] — runtime CPU-feature tier selection ([`Kernel`]) and the
-//!   lane-striped parallel executor ([`GfEngine`]).
+//!   lane-striped parallel executor ([`GfEngine`]), including the batched
+//!   multi-stripe mode ([`dispatch::CodingBatch`]).
+//! * [`workpool`] — the persistent worker pool behind every striped and
+//!   batched operation (long-lived threads, per-batch completion latch).
 //! * [`pool`] — recycled block buffers for the repair path.
 //! * [`matrix`] — dense matrices over GF(2^8): product, rank, inversion,
 //!   and structured constructors (Vandermonde, Cauchy) used by the code
@@ -21,8 +24,10 @@ pub mod pool;
 pub mod simd;
 pub mod slice;
 pub mod tables;
+pub mod workpool;
 
-pub use dispatch::{GfEngine, Kernel};
+pub use dispatch::{CodingBatch, GfEngine, Kernel};
+pub use workpool::{BatchScope, WorkPool};
 pub use matrix::Matrix;
 pub use slice::{mul_acc_slice, mul_slice, xor_fold, xor_slice, NibbleTables};
 pub use tables::{gf_div, gf_exp, gf_inv, gf_log, gf_mul, gf_pow};

@@ -47,6 +47,27 @@ impl BufferPool {
         }
     }
 
+    /// A buffer of exactly `len` bytes whose contents are **unspecified**
+    /// (stale data from a previous use) — for consumers that overwrite
+    /// every byte before reading (fold's `copy_from_slice`, matmul's
+    /// `fill(0)` + accumulate). Skips the re-zeroing pass of
+    /// [`Self::take_zeroed`], which is pure overhead on those paths. Only
+    /// already-initialized pooled bytes are reused (`b.len() >= len`), so
+    /// no uninitialized memory is ever exposed.
+    pub fn take_for_overwrite(&self, len: usize) -> Vec<u8> {
+        let reused = {
+            let mut bufs = self.bufs.lock().unwrap();
+            bufs.iter().rposition(|b| b.len() >= len).map(|i| bufs.swap_remove(i))
+        };
+        match reused {
+            Some(mut b) => {
+                b.truncate(len);
+                b
+            }
+            None => vec![0u8; len],
+        }
+    }
+
     /// Return a buffer to the pool (dropped if the pool is full or the
     /// buffer has no backing allocation).
     pub fn recycle(&self, buf: Vec<u8>) {
@@ -79,6 +100,11 @@ pub fn global() -> &'static BufferPool {
 /// [`BufferPool::take_zeroed`] on the process-wide pool.
 pub fn take_zeroed(len: usize) -> Vec<u8> {
     GLOBAL.take_zeroed(len)
+}
+
+/// [`BufferPool::take_for_overwrite`] on the process-wide pool.
+pub fn take_for_overwrite(len: usize) -> Vec<u8> {
+    GLOBAL.take_for_overwrite(len)
 }
 
 /// [`BufferPool::recycle`] on the process-wide pool.
@@ -127,6 +153,24 @@ mod tests {
         let b = pool.take_zeroed(1024); // no pooled buffer fits → fresh alloc
         assert_eq!(b.len(), 1024);
         assert_eq!(pool.len(), 1, "undersized buffer must stay pooled");
+    }
+
+    #[test]
+    fn take_for_overwrite_reuses_without_zeroing() {
+        let pool = BufferPool::new(4);
+        let mut b = pool.take_zeroed(128);
+        b.iter_mut().for_each(|x| *x = 0xCD);
+        let ptr = b.as_ptr();
+        pool.recycle(b);
+        let b2 = pool.take_for_overwrite(100);
+        assert_eq!(b2.len(), 100);
+        assert_eq!(b2.as_ptr(), ptr, "must reuse the pooled allocation");
+        assert!(b2.iter().all(|&x| x == 0xCD), "contents intentionally stale");
+        // an oversized request can't reuse the (shorter) pooled contents
+        pool.recycle(b2);
+        let b3 = pool.take_for_overwrite(4096);
+        assert_eq!(b3.len(), 4096);
+        assert!(b3.iter().all(|&x| x == 0), "fresh allocation is zeroed");
     }
 
     #[test]

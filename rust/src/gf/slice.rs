@@ -72,6 +72,18 @@ impl NibbleTables {
         NibbleTables { c, lo, hi }
     }
 
+    /// Tables for a whole coefficient matrix, row-major — the shape every
+    /// cached/batched matmul consumes.
+    pub fn for_rows<I>(rows: I) -> Vec<Vec<NibbleTables>>
+    where
+        I: IntoIterator,
+        I::Item: AsRef<[u8]>,
+    {
+        rows.into_iter()
+            .map(|r| r.as_ref().iter().map(|&c| NibbleTables::new(c)).collect())
+            .collect()
+    }
+
     #[inline]
     pub fn mul(&self, x: u8) -> u8 {
         self.lo[(x & 0xF) as usize] ^ self.hi[(x >> 4) as usize]

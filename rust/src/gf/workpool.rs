@@ -1,0 +1,340 @@
+//! Persistent GF worker pool — the executor behind every striped and
+//! batched coding operation.
+//!
+//! The first engine iteration spawned scoped threads on *every*
+//! `matmul_blocks` / `fold_blocks` call; the ~tens of µs of spawn + join
+//! per call capped parallel wins to multi-MiB blocks and serialized
+//! multi-stripe events stripe by stripe. [`WorkPool`] replaces that with
+//! long-lived workers and a shared FIFO task queue:
+//!
+//! * workers are spawned once (sized with the engine's `--gf-threads` /
+//!   `UNILRC_GF_THREADS` knob) and park on a condvar when idle;
+//! * [`WorkPool::scope`] opens a [`BatchScope`] into which any number of
+//!   tasks borrowing caller data can be submitted — a per-scope completion
+//!   latch makes the borrow sound (the scope cannot return before every
+//!   task ran), the same contract `std::thread::scope` provides without
+//!   the per-call spawn;
+//! * the scoping thread *helps drain the queue* while it waits, so a
+//!   worker that opens a nested scope (e.g. a batched repair whose combine
+//!   stripes a large block) can never deadlock: every waiter is also an
+//!   executor;
+//! * dropping the pool flags shutdown, wakes everyone, and joins the
+//!   workers — engines (and their pools) constructed in tests come and go
+//!   without leaking threads (`tests/workpool.rs` asserts this).
+//!
+//! Task panics are caught on the worker, recorded on the latch, and
+//! re-raised on the scoping thread once the batch has fully settled.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A queued unit of work (lifetime-erased; see [`BatchScope::submit`]).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    /// Signalled when a task is pushed or shutdown is flagged.
+    available: Condvar,
+}
+
+/// Completion latch for one [`BatchScope`]: counts outstanding tasks and
+/// remembers whether any of them panicked.
+struct Latch {
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new() -> Latch {
+        Latch { pending: Mutex::new(0), done: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn add(&self) {
+        *self.pending.lock().unwrap() += 1;
+    }
+
+    fn count_down(&self) {
+        let mut p = self.pending.lock().unwrap();
+        *p -= 1;
+        if *p == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.pending.lock().unwrap() == 0
+    }
+
+    fn wait(&self) {
+        let mut p = self.pending.lock().unwrap();
+        while *p > 0 {
+            p = self.done.wait(p).unwrap();
+        }
+    }
+}
+
+/// A pool of persistent worker threads executing queued coding tasks.
+pub struct WorkPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkPool {
+    /// Spawn `workers` (≥ 1) long-lived worker threads.
+    pub fn new(workers: usize) -> WorkPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { tasks: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gf-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn gf worker")
+            })
+            .collect();
+        WorkPool { shared, workers: handles }
+    }
+
+    /// Number of worker threads.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn push(&self, task: Task) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.tasks.push_back(task);
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Pop one queued task without blocking (caller-runs helping).
+    fn try_pop(&self) -> Option<Task> {
+        self.shared.queue.lock().unwrap().tasks.pop_front()
+    }
+
+    /// Open a batch scope: `f` may submit any number of tasks borrowing
+    /// data that outlives the `scope` call; all of them have completed by
+    /// the time `scope` returns. The calling thread helps execute queued
+    /// tasks while it waits, so nested scopes (a pooled task opening its
+    /// own scope) make progress instead of deadlocking.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope BatchScope<'scope, 'env>) -> R,
+    {
+        let latch = Arc::new(Latch::new());
+        let scope =
+            BatchScope { pool: self, latch: Arc::clone(&latch), _env: PhantomData, _scope: PhantomData };
+        // Even if `f` unwinds we must wait for already-submitted tasks —
+        // they borrow `'env` data that is freed once we return.
+        let result = panic::catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        while !latch.is_done() {
+            match self.try_pop() {
+                Some(task) => task(),
+                None => {
+                    latch.wait();
+                    break;
+                }
+            }
+        }
+        match result {
+            Err(payload) => panic::resume_unwind(payload),
+            Ok(r) => {
+                if latch.panicked.load(Ordering::Acquire) {
+                    panic!("GF worker task panicked");
+                }
+                r
+            }
+        }
+    }
+}
+
+impl Drop for WorkPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.available.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkPool").field("workers", &self.workers.len()).finish()
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.tasks.pop_front() {
+                    break Some(t);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match task {
+            Some(t) => t(),
+            None => return,
+        }
+    }
+}
+
+/// Handle for submitting tasks into one batch; created by
+/// [`WorkPool::scope`]. `'env` is the lifetime of the data tasks may
+/// borrow — everything alive across the whole `scope` call.
+pub struct BatchScope<'scope, 'env: 'scope> {
+    pool: &'scope WorkPool,
+    latch: Arc<Latch>,
+    _env: PhantomData<&'env mut &'env ()>,
+    _scope: PhantomData<&'scope mut &'scope ()>,
+}
+
+impl<'scope, 'env> BatchScope<'scope, 'env> {
+    /// Enqueue `f` onto the pool. It runs on some worker (or on the
+    /// scoping thread while it drains the queue) before the enclosing
+    /// [`WorkPool::scope`] returns.
+    pub fn submit<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.latch.add();
+        let latch = Arc::clone(&self.latch);
+        let wrapped = move || {
+            if panic::catch_unwind(AssertUnwindSafe(f)).is_err() {
+                latch.panicked.store(true, Ordering::Release);
+            }
+            latch.count_down();
+        };
+        let boxed: Box<dyn FnOnce() + Send + 'env> = Box::new(wrapped);
+        // SAFETY: lifetime erasure to store the task in the 'static queue.
+        // `WorkPool::scope` does not return until the latch reports every
+        // submitted task completed (even when the scope body unwinds), so
+        // all `'env` borrows captured by the task are live for its entire
+        // execution — the same guarantee `std::thread::scope` provides.
+        let boxed: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Box<dyn FnOnce() + Send + 'static>>(
+                boxed,
+            )
+        };
+        self.pool.push(boxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn empty_scope_returns() {
+        let pool = WorkPool::new(2);
+        let r = pool.scope(|_| 41 + 1);
+        assert_eq!(r, 42);
+    }
+
+    #[test]
+    fn tasks_see_and_mutate_borrowed_data() {
+        let pool = WorkPool::new(4);
+        let mut data = vec![0u32; 1024];
+        pool.scope(|s| {
+            for (i, chunk) in data.chunks_mut(100).enumerate() {
+                s.submit(move || {
+                    for v in chunk.iter_mut() {
+                        *v = i as u32;
+                    }
+                });
+            }
+        });
+        for (i, chunk) in data.chunks(100).enumerate() {
+            assert!(chunk.iter().all(|&v| v == i as u32), "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn many_scopes_reuse_the_same_workers() {
+        let pool = WorkPool::new(2);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.scope(|s| {
+                for _ in 0..8 {
+                    s.submit(|| {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 800);
+    }
+
+    #[test]
+    fn nested_scopes_progress() {
+        let pool = WorkPool::new(1); // single worker: nesting must caller-run
+        let total = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let (pool_ref, total_ref) = (&pool, &total);
+            for _ in 0..4 {
+                s.submit(move || {
+                    pool_ref.scope(|inner| {
+                        for _ in 0..4 {
+                            inner.submit(move || {
+                                total_ref.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn task_panic_propagates_after_batch_settles() {
+        let pool = WorkPool::new(2);
+        let ran = AtomicUsize::new(0);
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.submit(|| panic!("boom"));
+                for _ in 0..4 {
+                    s.submit(|| {
+                        ran.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }));
+        assert!(result.is_err(), "worker panic must surface on the scoping thread");
+        assert_eq!(ran.load(Ordering::Relaxed), 4, "other tasks still completed");
+        // pool stays usable after a panicked batch
+        assert_eq!(pool.scope(|_| 7), 7);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkPool::new(3);
+        pool.scope(|s| {
+            for _ in 0..16 {
+                s.submit(|| std::thread::yield_now());
+            }
+        });
+        drop(pool); // must not hang
+    }
+}

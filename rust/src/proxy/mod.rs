@@ -6,10 +6,19 @@
 //!
 //! Network time is virtual ([`NetSim`]); coding time is *real*, measured
 //! around the engine call and folded into the virtual clock.
+//!
+//! Repairs are *batched by event*: [`ProxyCtx::repair_node`] takes every
+//! (stripe, block) of a whole-node recovery or degraded-read fan-out and
+//! executes all gateway pre-combines, then all final combines, as two
+//! [`CodingEngine::combine_batch`] waves — the worker pool schedules
+//! lane-tasks across stripes instead of serializing stripe by stripe.
+//! Measured compute time for each wave is apportioned to the requests by
+//! input bytes and folded into the virtual clock. [`ProxyCtx::repair_block`]
+//! is the single-request special case of the same path.
 
 use crate::codes::Code;
 use crate::coordinator::metadata::{Metadata, StripeId};
-use crate::runtime::CodingEngine;
+use crate::runtime::{CodingEngine, CombineJob};
 use crate::sim::{Endpoint, NetSim};
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -26,6 +35,14 @@ pub struct OpOutcome {
     pub home: usize,
 }
 
+/// One repair of a batched event: rebuild `block` of `stripe` with every
+/// member of `erased` unavailable.
+pub struct RepairRequest {
+    pub stripe: StripeId,
+    pub block: usize,
+    pub erased: Vec<usize>,
+}
+
 /// Borrowed view of the system a proxy op needs.
 pub struct ProxyCtx<'a> {
     pub code: &'a Code,
@@ -38,18 +55,30 @@ pub struct ProxyCtx<'a> {
     pub time_compute: bool,
 }
 
-/// One repair input: where it lives and its combination coefficient.
-struct SourceRef {
-    coeff: u8,
-    node: usize,
+/// A gateway pre-combine waiting for the phase-1 batch: one remote
+/// cluster's contribution to one request.
+struct AggJob {
+    coeffs: Vec<u8>,
+    data: Vec<Arc<Vec<u8>>>,
+    /// Virtual instant all sources reached the remote proxy.
+    arrive: f64,
     cluster: usize,
-    data: Arc<Vec<u8>>,
+    /// Index into the request list this partial feeds.
+    req: usize,
+}
+
+/// Per-request state between the gather and final-combine phases.
+struct PendingRepair {
+    home: usize,
+    /// Final-combine inputs: (arrival, coefficient, bytes).
+    inputs: Vec<(f64, u8, Arc<Vec<u8>>)>,
 }
 
 impl ProxyCtx<'_> {
     /// Rebuild `block` of `stripe` on its home-cluster proxy, given the
     /// stripe's full erasure set. Returns the rebuilt bytes and the
-    /// virtual-clock instant they are ready.
+    /// virtual-clock instant they are ready. (The single-request case of
+    /// [`Self::repair_node`].)
     pub fn repair_block(
         &mut self,
         t0: f64,
@@ -57,89 +86,123 @@ impl ProxyCtx<'_> {
         block: usize,
         erased: &[usize],
     ) -> Result<OpOutcome> {
-        let home = self.meta.cluster_of(stripe, block);
-        let (source_ids, coeffs) = self.plan_for(block, erased)?;
-        let sources: Vec<SourceRef> = source_ids
-            .iter()
-            .zip(&coeffs)
-            .map(|(&b, &c)| SourceRef {
-                coeff: c,
-                node: self.meta.node_of(stripe, b),
-                cluster: self.meta.cluster_of(stripe, b),
-                data: self.meta.block_data(stripe, b),
-            })
-            .collect();
+        let req = RepairRequest { stripe, block, erased: erased.to_vec() };
+        let mut outcomes = self.repair_node(t0, std::slice::from_ref(&req))?;
+        Ok(outcomes.pop().expect("one outcome per request"))
+    }
 
-        // Partition by cluster.
-        let mut local: Vec<&SourceRef> = Vec::new();
-        let mut remote: BTreeMap<usize, Vec<&SourceRef>> = BTreeMap::new();
-        for s in &sources {
-            if s.cluster == home {
-                local.push(s);
-            } else {
-                remote.entry(s.cluster).or_default().push(s);
-            }
-        }
+    /// Rebuild every requested block of a multi-stripe event, all repairs
+    /// issued at virtual instant `t0`. The virtual network moves each
+    /// stripe's sources independently, then the *compute* runs as two
+    /// batched waves shared by the whole event (gateway pre-combines, then
+    /// final combines), so the engine's worker pool overlaps stripes.
+    /// Outcomes are returned in request order.
+    pub fn repair_node(&mut self, t0: f64, reqs: &[RepairRequest]) -> Result<Vec<OpOutcome>> {
+        // ------------------------------------------------ gather (virtual)
+        let mut pend: Vec<PendingRepair> = Vec::with_capacity(reqs.len());
+        let mut aggs: Vec<AggJob> = Vec::new();
+        for (ri, req) in reqs.iter().enumerate() {
+            let home = self.meta.cluster_of(req.stripe, req.block);
+            let (source_ids, coeffs) = self.plan_for(req.block, &req.erased)?;
 
-        // Inputs to the final combine at the home proxy: (arrival, coeff, bytes)
-        let mut inputs: Vec<(f64, u8, Arc<Vec<u8>>)> = Vec::new();
-
-        for s in &local {
-            let t = self.net.transfer(t0, Endpoint::Node(s.node), Endpoint::Proxy(home), self.block_size);
-            inputs.push((t, s.coeff, s.data.clone()));
-        }
-
-        for (rc, srcs) in &remote {
-            if self.aggregated && srcs.len() > 1 {
-                // gather within the remote cluster, pre-combine, ship one block
-                let mut arrive = t0;
-                for s in srcs {
+            // Partition sources by cluster.
+            let mut inputs: Vec<(f64, u8, Arc<Vec<u8>>)> = Vec::new();
+            let mut remote: BTreeMap<usize, Vec<(u8, usize, Arc<Vec<u8>>)>> = BTreeMap::new();
+            for (&b, &c) in source_ids.iter().zip(&coeffs) {
+                let node = self.meta.node_of(req.stripe, b);
+                let cluster = self.meta.cluster_of(req.stripe, b);
+                let data = self.meta.block_data(req.stripe, b);
+                if cluster == home {
                     let t = self.net.transfer(
                         t0,
-                        Endpoint::Node(s.node),
-                        Endpoint::Proxy(*rc),
-                        self.block_size,
-                    );
-                    arrive = arrive.max(t);
-                }
-                let refs: Vec<&[u8]> = srcs.iter().map(|s| s.data.as_slice()).collect();
-                let cs: Vec<u8> = srcs.iter().map(|s| s.coeff).collect();
-                let (partial, secs) = self.timed_combine(&cs, &refs)?;
-                let t = self.net.transfer(
-                    arrive + secs,
-                    Endpoint::Proxy(*rc),
-                    Endpoint::Proxy(home),
-                    self.block_size,
-                );
-                inputs.push((t, 1, Arc::new(partial)));
-            } else {
-                // raw: each block crosses the gateway individually
-                for s in srcs {
-                    let t = self.net.transfer(
-                        t0,
-                        Endpoint::Node(s.node),
+                        Endpoint::Node(node),
                         Endpoint::Proxy(home),
                         self.block_size,
                     );
-                    inputs.push((t, s.coeff, s.data.clone()));
+                    inputs.push((t, c, data));
+                } else {
+                    remote.entry(cluster).or_default().push((c, node, data));
                 }
             }
+
+            for (rc, srcs) in remote {
+                if self.aggregated && srcs.len() > 1 {
+                    // gather within the remote cluster; the pre-combine and
+                    // the single cross-gateway ship happen in phase 1
+                    let mut arrive = t0;
+                    for (_, node, _) in &srcs {
+                        let t = self.net.transfer(
+                            t0,
+                            Endpoint::Node(*node),
+                            Endpoint::Proxy(rc),
+                            self.block_size,
+                        );
+                        arrive = arrive.max(t);
+                    }
+                    aggs.push(AggJob {
+                        coeffs: srcs.iter().map(|(c, _, _)| *c).collect(),
+                        data: srcs.into_iter().map(|(_, _, d)| d).collect(),
+                        arrive,
+                        cluster: rc,
+                        req: ri,
+                    });
+                } else {
+                    // raw: each block crosses the gateway individually
+                    for (c, node, data) in srcs {
+                        let t = self.net.transfer(
+                            t0,
+                            Endpoint::Node(node),
+                            Endpoint::Proxy(home),
+                            self.block_size,
+                        );
+                        inputs.push((t, c, data));
+                    }
+                }
+            }
+            pend.push(PendingRepair { home, inputs });
         }
 
-        // Final combine once everything arrived.
-        let arrived = inputs.iter().fold(t0, |a, (t, _, _)| a.max(*t));
-        let refs: Vec<&[u8]> = inputs.iter().map(|(_, _, d)| d.as_slice()).collect();
-        let cs: Vec<u8> = inputs.iter().map(|(_, c, _)| *c).collect();
-        let (rebuilt, secs) = self.timed_combine(&cs, &refs)?;
-        // Aggregation partials are solely owned by `inputs` (stored blocks
-        // keep a metadata reference, so try_unwrap skips them); hand the
-        // consumed buffers back to the block pool.
-        for (_, _, d) in inputs {
-            if let Ok(buf) = Arc::try_unwrap(d) {
-                crate::gf::pool::recycle(buf);
-            }
+        // ------------------------- phase 1: all gateway pre-combines, batched
+        let agg_coeffs: Vec<Vec<u8>> = aggs.iter().map(|a| a.coeffs.clone()).collect();
+        let agg_srcs: Vec<Vec<&[u8]>> =
+            aggs.iter().map(|a| a.data.iter().map(|d| d.as_slice()).collect()).collect();
+        let (partials, agg_secs) = self.batch_combine(&agg_coeffs, &agg_srcs)?;
+        drop(agg_srcs);
+        for ((agg, partial), secs) in aggs.into_iter().zip(partials).zip(agg_secs) {
+            let home = pend[agg.req].home;
+            let t = self.net.transfer(
+                agg.arrive + secs,
+                Endpoint::Proxy(agg.cluster),
+                Endpoint::Proxy(home),
+                self.block_size,
+            );
+            pend[agg.req].inputs.push((t, 1, Arc::new(partial)));
         }
-        Ok(OpOutcome { ready_at: arrived + secs, rebuilt, home })
+
+        // ----------------------------- phase 2: all final combines, batched
+        let fin_coeffs: Vec<Vec<u8>> =
+            pend.iter().map(|p| p.inputs.iter().map(|(_, c, _)| *c).collect()).collect();
+        let fin_srcs: Vec<Vec<&[u8]>> = pend
+            .iter()
+            .map(|p| p.inputs.iter().map(|(_, _, d)| d.as_slice()).collect())
+            .collect();
+        let (rebuilt, fin_secs) = self.batch_combine(&fin_coeffs, &fin_srcs)?;
+        drop(fin_srcs);
+
+        let mut out = Vec::with_capacity(reqs.len());
+        for ((p, rb), secs) in pend.into_iter().zip(rebuilt).zip(fin_secs) {
+            let arrived = p.inputs.iter().fold(t0, |a, (t, _, _)| a.max(*t));
+            // Aggregation partials are solely owned by `inputs` (stored
+            // blocks keep a metadata reference, so try_unwrap skips them);
+            // hand the consumed buffers back to the block pool.
+            for (_, _, d) in p.inputs {
+                if let Ok(buf) = Arc::try_unwrap(d) {
+                    crate::gf::pool::recycle(buf);
+                }
+            }
+            out.push(OpOutcome { ready_at: arrived + secs, rebuilt: rb, home: p.home });
+        }
+        Ok(out)
     }
 
     /// (sources, coefficients) reconstructing `block` with every member of
@@ -171,20 +234,37 @@ impl ProxyCtx<'_> {
         ))
     }
 
-    /// Run the linear combine on the engine, returning (bytes, virtual
-    /// seconds to charge — the measured real time, or 0 when compute
+    /// Run a set of single-output combines as one batched engine wave.
+    /// Returns the output blocks plus each job's share of the measured
+    /// compute time (apportioned by input bytes; all zeros when compute
     /// timing is disabled for determinism).
-    fn timed_combine(&self, coeffs: &[u8], sources: &[&[u8]]) -> Result<(Vec<u8>, f64)> {
+    fn batch_combine(
+        &self,
+        coeffs: &[Vec<u8>],
+        sources: &[Vec<&[u8]>],
+    ) -> Result<(Vec<Vec<u8>>, Vec<f64>)> {
+        debug_assert_eq!(coeffs.len(), sources.len());
+        if coeffs.is_empty() {
+            return Ok((Vec::new(), Vec::new()));
+        }
+        let jobs: Vec<CombineJob> = coeffs
+            .iter()
+            .zip(sources)
+            .map(|(c, s)| CombineJob { coeffs: vec![c.clone()], sources: s.clone() })
+            .collect();
         let t = Instant::now();
-        let out = if coeffs.iter().all(|&c| c == 1) {
-            self.engine.fold(sources)?
-        } else {
-            self.engine
-                .matmul(&[coeffs.to_vec()], sources)?
-                .pop()
-                .expect("one output row")
-        };
-        let secs = if self.time_compute { t.elapsed().as_secs_f64() } else { 0.0 };
-        Ok((out, secs))
+        let outs = self.engine.combine_batch(&jobs)?;
+        let elapsed = if self.time_compute { t.elapsed().as_secs_f64() } else { 0.0 };
+        let bytes: Vec<usize> = jobs.iter().map(|j| j.work()).collect();
+        let total: usize = bytes.iter().sum();
+        let secs: Vec<f64> = bytes
+            .iter()
+            .map(|&b| if total > 0 { elapsed * b as f64 / total as f64 } else { 0.0 })
+            .collect();
+        let blocks: Vec<Vec<u8>> = outs
+            .into_iter()
+            .map(|mut rows| rows.pop().expect("one output row per combine"))
+            .collect();
+        Ok((blocks, secs))
     }
 }

@@ -25,8 +25,29 @@ pub use artifacts::{Artifact, ArtifactKind, Manifest};
 pub use pjrt::PjrtCoder;
 
 use crate::codes::Code;
+use crate::gf::slice::NibbleTables;
 use crate::gf::{dispatch, pool};
 use anyhow::Result;
+
+/// One linear-combination job of a batched submission: output row `i` is
+/// `⊕_j coeffs[i][j] · sources[j]`. A single all-ones row is a pure
+/// XOR-fold (XOR-local repair).
+pub struct CombineJob<'a> {
+    pub coeffs: Vec<Vec<u8>>,
+    pub sources: Vec<&'a [u8]>,
+}
+
+impl CombineJob<'_> {
+    /// Is this job a single-row pure XOR fold?
+    pub fn xor_only(&self) -> bool {
+        self.coeffs.len() == 1 && self.coeffs[0].iter().all(|&c| c == 1)
+    }
+
+    /// Total input bytes this job reads.
+    pub fn work(&self) -> usize {
+        self.sources.iter().map(|s| s.len()).sum()
+    }
+}
 
 /// Backend-independent coding interface used by the proxy's coding service.
 pub trait CodingEngine: Send + Sync {
@@ -41,6 +62,21 @@ pub trait CodingEngine: Send + Sync {
 
     /// General linear combination: `coeffs` is `outs × sources.len()`.
     fn matmul(&self, coeffs: &[Vec<u8>], sources: &[&[u8]]) -> Result<Vec<Vec<u8>>>;
+
+    /// Execute many combine jobs (one per stripe of a multi-stripe event).
+    /// The default runs them sequentially; backends with a worker pool
+    /// override this to schedule all jobs as one submission wave.
+    fn combine_batch(&self, jobs: &[CombineJob]) -> Result<Vec<Vec<Vec<u8>>>> {
+        jobs.iter()
+            .map(|j| {
+                if j.xor_only() {
+                    Ok(vec![self.fold(&j.sources)?])
+                } else {
+                    self.matmul(&j.coeffs, &j.sources)
+                }
+            })
+            .collect()
+    }
 }
 
 /// Pure-rust backend over the [`crate::gf`] substrate, running on the
@@ -60,7 +96,7 @@ impl CodingEngine for NativeCoder {
 
     fn fold(&self, sources: &[&[u8]]) -> Result<Vec<u8>> {
         anyhow::ensure!(!sources.is_empty(), "fold needs sources");
-        let mut out = pool::take_zeroed(sources[0].len());
+        let mut out = pool::take_for_overwrite(sources[0].len());
         dispatch::engine().fold_blocks(&mut out, sources);
         Ok(out)
     }
@@ -68,8 +104,47 @@ impl CodingEngine for NativeCoder {
     fn matmul(&self, coeffs: &[Vec<u8>], sources: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
         let len = sources.first().map_or(0, |s| s.len());
         let rows: Vec<&[u8]> = coeffs.iter().map(|r| r.as_slice()).collect();
-        let mut outs: Vec<Vec<u8>> = (0..coeffs.len()).map(|_| pool::take_zeroed(len)).collect();
+        let mut outs: Vec<Vec<u8>> =
+            (0..coeffs.len()).map(|_| pool::take_for_overwrite(len)).collect();
         dispatch::engine().matmul_blocks(&rows, sources, &mut outs);
+        Ok(outs)
+    }
+
+    /// All jobs of the event go into one [`crate::gf::GfEngine::batch`]
+    /// wave: the
+    /// worker pool schedules lane-tasks across stripes, so a multi-stripe
+    /// repair of small blocks parallelizes even though each individual
+    /// combine is below the intra-block striping threshold. Byte-identical
+    /// to the sequential default (`tests/batch.rs` fuzzes this).
+    fn combine_batch(&self, jobs: &[CombineJob]) -> Result<Vec<Vec<Vec<u8>>>> {
+        let engine = dispatch::engine();
+        // xor-only jobs (the common local-repair case) go through the fold
+        // path and never read coefficient tables — don't build them.
+        let tables: Vec<Option<Vec<Vec<NibbleTables>>>> = jobs
+            .iter()
+            .map(|j| (!j.xor_only()).then(|| NibbleTables::for_rows(j.coeffs.iter())))
+            .collect();
+        let mut outs: Vec<Vec<Vec<u8>>> = jobs
+            .iter()
+            .map(|j| {
+                let len = j.sources.first().map_or(0, |s| s.len());
+                (0..j.coeffs.len()).map(|_| pool::take_for_overwrite(len)).collect()
+            })
+            .collect();
+        let work: usize = jobs.iter().map(|j| j.work()).sum();
+        engine.batch(work, |b| {
+            for ((job, tab), out) in jobs.iter().zip(&tables).zip(outs.iter_mut()) {
+                match tab {
+                    Some(tab) => b.matmul_t(tab, job.sources.clone(), out),
+                    None if !job.sources.is_empty() => {
+                        b.fold(&mut out[0], job.sources.clone());
+                    }
+                    // xor-only with no sources: the zero-length output row
+                    // is already correct.
+                    None => {}
+                }
+            }
+        });
         Ok(outs)
     }
 }

@@ -6,6 +6,7 @@
 use unilrc::gf::dispatch::{GfEngine, Kernel};
 use unilrc::gf::slice::mul_acc_slice_scalar;
 use unilrc::gf::tables::gf_mul;
+use unilrc::gf::NibbleTables;
 use unilrc::prng::Prng;
 
 fn available() -> Vec<Kernel> {
@@ -92,6 +93,38 @@ fn fuzz_random_lengths_coefficients_all_tiers() {
             let mut got = init.clone();
             e.mul_acc(c, &src, &mut got);
             assert_eq!(got, expect, "round={round} kernel={k} len={len} c={c}");
+        }
+    }
+}
+
+#[test]
+fn fuzz_fused_mul_acc2_all_tiers() {
+    // The fused two-source kernel must equal two chained single-source
+    // ops for every tier, coefficient pair (incl. 0 and 1 special cases),
+    // length remainder, and odd alignment.
+    let mut p = Prng::new(106);
+    let kernels = available();
+    let max = 4096 + 8;
+    let s1_buf = p.bytes(max);
+    let s2_buf = p.bytes(max);
+    let init_buf = p.bytes(max);
+    for round in 0..200 {
+        let len = p.gen_range(1025);
+        let offset = (p.next_u64() % 4) as usize;
+        let c1 = (p.next_u64() & 0xFF) as u8;
+        let c2 = (p.next_u64() & 0xFF) as u8;
+        let s1 = &s1_buf[offset..offset + len];
+        let s2 = &s2_buf[offset..offset + len];
+        let init = &init_buf[offset..offset + len];
+        let mut expect = init.to_vec();
+        ref_mul_acc(c1, s1, &mut expect);
+        ref_mul_acc(c2, s2, &mut expect);
+        let (t1, t2) = (NibbleTables::new(c1), NibbleTables::new(c2));
+        for &k in &kernels {
+            let e = GfEngine::new(k);
+            let mut got = init.to_vec();
+            e.mul_acc2_t(&t1, s1, &t2, s2, &mut got);
+            assert_eq!(got, expect, "round={round} kernel={k} len={len} c1={c1} c2={c2}");
         }
     }
 }

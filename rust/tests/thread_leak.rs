@@ -1,0 +1,62 @@
+//! Engine reconfiguration must not leak worker threads: every dropped
+//! [`WorkPool`](unilrc::gf::WorkPool) joins its workers. This is the only
+//! test in the file on purpose — it counts process-wide OS threads, so it
+//! cannot share a test binary slot with concurrently running tests.
+
+#![cfg(target_os = "linux")]
+
+use unilrc::gf::{GfEngine, Kernel};
+use unilrc::prng::Prng;
+
+/// Current thread count of this process (Linux: /proc/self/status).
+fn thread_count() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").expect("read /proc/self/status");
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("Threads: line")
+}
+
+fn pooled_engine(threads: usize) -> GfEngine {
+    GfEngine::new(Kernel::detect()).with_threads(threads).with_lane(512).with_par_work(0)
+}
+
+fn run_striped_op(e: &GfEngine) {
+    let mut p = Prng::new(7);
+    let srcs: Vec<Vec<u8>> = (0..4).map(|_| p.bytes(8 * 1024)).collect();
+    let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+    let mut out = vec![0u8; 8 * 1024];
+    e.fold_blocks(&mut out, &refs);
+}
+
+#[test]
+fn engine_reconfiguration_does_not_leak_threads() {
+    // Warm up: one full engine lifecycle so any lazy runtime threads
+    // (allocator, test harness) are already counted in the baseline.
+    {
+        let e = pooled_engine(2);
+        run_striped_op(&e);
+    }
+    let baseline = thread_count();
+    for round in 0..10 {
+        // with_threads replaces the pool handle — reconfigure repeatedly
+        // and make sure dropped pools actually join their workers.
+        let e = pooled_engine(2 + round % 3);
+        run_striped_op(&e);
+        let reconfigured = e.clone().with_threads(4);
+        run_striped_op(&reconfigured);
+        drop(reconfigured);
+        drop(e);
+    }
+    // Dropping the last engine clone joins its pool; allow brief settling.
+    let mut now = thread_count();
+    for _ in 0..50 {
+        if now <= baseline {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        now = thread_count();
+    }
+    assert!(now <= baseline, "thread leak: baseline {baseline}, after reconfiguration {now}");
+}

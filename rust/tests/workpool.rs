@@ -1,0 +1,56 @@
+//! Worker-pool lifecycle: pools start lazily, are reused across calls and
+//! batches, and shut down cleanly on drop. (The process-wide thread-leak
+//! check lives alone in `tests/thread_leak.rs` — it counts OS threads and
+//! must not race concurrently running tests.)
+
+use unilrc::gf::{GfEngine, Kernel, WorkPool};
+use unilrc::prng::Prng;
+
+fn pooled_engine(threads: usize) -> GfEngine {
+    GfEngine::new(Kernel::detect()).with_threads(threads).with_lane(512).with_par_work(0)
+}
+
+fn run_striped_op(e: &GfEngine) {
+    let mut p = Prng::new(7);
+    let srcs: Vec<Vec<u8>> = (0..4).map(|_| p.bytes(8 * 1024)).collect();
+    let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+    let mut out = vec![0u8; 8 * 1024];
+    e.fold_blocks(&mut out, &refs);
+    let mut expect = vec![0u8; 8 * 1024];
+    GfEngine::scalar().fold_blocks(&mut expect, &refs);
+    assert_eq!(out, expect);
+}
+
+#[test]
+fn pool_shutdown_joins_workers() {
+    let pool = WorkPool::new(4);
+    assert_eq!(pool.worker_count(), 4);
+    pool.scope(|s| {
+        for _ in 0..32 {
+            s.submit(|| {
+                std::hint::black_box(1 + 1);
+            });
+        }
+    });
+    drop(pool); // joins; must not hang (the test harness would time out)
+}
+
+#[test]
+fn pool_reused_across_many_batches() {
+    let e = pooled_engine(3);
+    for _ in 0..50 {
+        run_striped_op(&e);
+    }
+    assert!(e.pool_started());
+}
+
+#[test]
+fn distinct_engines_get_distinct_pools_with_right_size() {
+    let a = pooled_engine(2);
+    let b = pooled_engine(5);
+    run_striped_op(&a);
+    run_striped_op(&b);
+    assert!(a.pool_started() && b.pool_started());
+    assert_eq!(a.threads(), 2);
+    assert_eq!(b.threads(), 5);
+}

@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Compare two bench JSON artifacts (BENCH_gf.json / BENCH_pool.json
+schema) and fail on throughput regressions.
+
+Usage:
+    bench_compare.py BASELINE.json CURRENT.json [--max-regression 0.20]
+
+A case regresses when its current MiB/s drops more than the threshold
+below the baseline. Cases present in only one file are reported but never
+fatal (benches evolve). Exit code 1 iff at least one regression exceeds
+the threshold.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_results(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {row["name"]: row for row in doc.get("results", [])}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.20,
+        help="fractional throughput drop that fails the check (default 0.20)",
+    )
+    args = ap.parse_args()
+
+    base = load_results(args.baseline)
+    curr = load_results(args.current)
+
+    failures = []
+    for name, row in sorted(curr.items()):
+        if name not in base:
+            print(f"  NEW     {name}: {row['mib_per_s']:.1f} MiB/s")
+            continue
+        b, c = base[name]["mib_per_s"], row["mib_per_s"]
+        if b <= 0:
+            continue
+        delta = (c - b) / b
+        status = "ok"
+        if delta < -args.max_regression:
+            status = "REGRESSION"
+            failures.append((name, b, c, delta))
+        print(f"  {status:<10} {name}: {b:.1f} -> {c:.1f} MiB/s ({delta:+.1%})")
+    for name in sorted(set(base) - set(curr)):
+        print(f"  GONE    {name} (was {base[name]['mib_per_s']:.1f} MiB/s)")
+
+    if failures:
+        print(
+            f"\n{len(failures)} case(s) regressed more than "
+            f"{args.max_regression:.0%} vs baseline:",
+            file=sys.stderr,
+        )
+        for name, b, c, delta in failures:
+            print(f"  {name}: {b:.1f} -> {c:.1f} MiB/s ({delta:+.1%})", file=sys.stderr)
+        return 1
+    print("\nno regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
