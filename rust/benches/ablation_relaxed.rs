@@ -11,7 +11,10 @@ use unilrc::placement::{PlacementStrategy, Topology, UniLrcPlace, UniLrcSpread};
 
 fn main() {
     section("Ablation — relaxed UniLRC (α=1, z=6): rate vs cross-cluster repair traffic");
-    println!("{:>2} {:>4} {:>4} {:>8} {:>6} {:>6} {:>6}", "t", "n", "lp", "rate", "r̄", "CARC", "ADRC");
+    println!(
+        "{:>2} {:>4} {:>4} {:>8} {:>6} {:>6} {:>6}",
+        "t", "n", "lp", "rate", "r̄", "CARC", "ADRC"
+    );
     for t in [1usize, 2, 3, 6] {
         let code = UniLrc::new_relaxed(1, 6, t);
         let topo = Topology::new(6, 16);

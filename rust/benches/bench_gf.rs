@@ -19,6 +19,9 @@ fn main() {
     const MB: usize = 1 << 20;
     let mut report = JsonReport::new("bench_gf");
     report.meta("detected_kernel", Kernel::detect().name());
+    let avail: Vec<&str> =
+        Kernel::all().into_iter().filter(|k| k.available()).map(|k| k.name()).collect();
+    report.meta("available_kernels", &avail.join(","));
 
     // ------------------------------------------------ engine tier shootout
     section("GF engine tiers — mul_acc 1 MiB, single thread");
@@ -54,7 +57,13 @@ fn main() {
         // 2 MiB of source input per iteration; compare against two chained
         // single-source mul_acc calls at the same tier.
         let s = b.bench_throughput(&format!("mul_acc2 fused [{k}]"), 2 * MB, || {
-            e.mul_acc2_t(black_box(&t1), black_box(&src), black_box(&t2), black_box(&src2), black_box(&mut dst));
+            e.mul_acc2_t(
+                black_box(&t1),
+                black_box(&src),
+                black_box(&t2),
+                black_box(&src2),
+                black_box(&mut dst),
+            );
         });
         report.add(&s, 2 * MB);
         let s = b.bench_throughput(&format!("mul_acc x2 chained [{k}]"), 2 * MB, || {
@@ -117,7 +126,8 @@ fn main() {
         let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
         let rows: Vec<&[u8]> = (0..code.m()).map(|i| code.parity_matrix().row(i)).collect();
         let mut outs = vec![vec![0u8; 65536]; code.m()];
-        let s = b.bench_throughput(&format!("encode {} (k·B in)", scheme.label()), code.k() * 65536, || {
+        let name = format!("encode {} (k·B in)", scheme.label());
+        let s = b.bench_throughput(&name, code.k() * 65536, || {
             gf_matmul_blocks(black_box(&rows), black_box(&drefs), black_box(&mut outs));
         });
         report.add(&s, code.k() * 65536);

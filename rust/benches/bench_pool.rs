@@ -117,6 +117,38 @@ fn main() {
         );
     }
 
+    // Chunk sweep: batch task granularity vs throughput on the
+    // degraded-burst shape (many small blocks in one wave). chunk=adaptive
+    // is the default policy (~2–4 tasks per worker); the fixed rows show
+    // where the knob pays and where task-flooding hurts.
+    section(&format!(
+        "Chunk sweep — {STRIPES} stripes × r={SOURCES} fold, 64 KiB blocks, pool x{threads}"
+    ));
+    let block = 64 * 1024;
+    let stripes: Vec<Vec<Vec<u8>>> =
+        (0..STRIPES).map(|_| (0..SOURCES).map(|_| p.bytes(block)).collect()).collect();
+    let srefs: Vec<Vec<&[u8]>> =
+        stripes.iter().map(|s| s.iter().map(|v| v.as_slice()).collect()).collect();
+    let mut outs: Vec<Vec<u8>> = (0..STRIPES).map(|_| vec![0u8; block]).collect();
+    let bytes = STRIPES * SOURCES * block;
+    for chunk_kb in [0usize, 16, 64, 256, 1024] {
+        let label =
+            if chunk_kb == 0 { "adaptive".to_string() } else { format!("{chunk_kb}KiB") };
+        let e = GfEngine::new(best)
+            .with_threads(threads)
+            .with_lane(LANE)
+            .with_par_work(0)
+            .with_chunk(chunk_kb * 1024);
+        let s = b.bench_throughput(&format!("fold chunk={label} x{threads}"), bytes, || {
+            e.batch(bytes, |bt| {
+                for (out, srcs) in outs.iter_mut().zip(&srefs) {
+                    bt.fold(black_box(out), black_box(srcs.clone()));
+                }
+            });
+        });
+        report.add(&s, bytes);
+    }
+
     // Decode-plan shape: multi-erasure matmul batched across stripes.
     section("Cached-plan decode — 2 erasures, 16 stripes, 64 KiB blocks");
     let code = Scheme::S42.build(CodeFamily::UniLrc);

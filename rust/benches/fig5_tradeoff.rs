@@ -8,7 +8,10 @@ use unilrc::bench_util::section;
 fn main() {
     section("Figure 5 — code-rate / stripe-width trade-off");
     println!("feasible: rate ≥ {TARGET_RATE}, n ∈ [{WIDTH_MIN},{WIDTH_MAX}]");
-    println!("{:>2} {:>3} {:>5} {:>5} {:>4} {:>8} {:>9}", "α", "z", "n", "k", "r", "rate", "feasible");
+    println!(
+        "{:>2} {:>3} {:>5} {:>5} {:>4} {:>8} {:>9}",
+        "α", "z", "n", "k", "r", "rate", "feasible"
+    );
     for p in sweep(20, &[1, 2, 3]) {
         println!(
             "{:>2} {:>3} {:>5} {:>5} {:>4} {:>8.4} {:>9}",

@@ -36,7 +36,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         "layout" => cmd_layout(&flags),
         "analyze" => cmd_analyze(&flags),
         "experiment" => cmd_experiment(args.get(1).map(|s| s.as_str()), &flags),
-        "engine" => cmd_engine(),
+        "engine" => cmd_engine(&flags),
         "golden" => cmd_golden(&flags),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -54,9 +54,12 @@ USAGE:
   unilrc analyze [--fig3b] [--fig5] [--fig8] [--table2] [--table4] [--all]
   unilrc experiment <1..6> [--config FILE] [--scheme S] [--block-kb N]
                     [--stripes N] [--cross-gbps X] [--backend native|pjrt] [--raw]
-                    [--gf-kernel auto|scalar|ssse3|avx2|neon] [--gf-threads N]
+                    [--gf-kernel auto|scalar|ssse3|avx2|avx512|gfni|neon]
+                    [--gf-threads N] [--gf-chunk-kb N]
                     [--plan-ttl-ms N] [--cache-stats]
-  unilrc engine                       show GF engine tiers + pool + plan cache
+  unilrc engine [--check TIER]        show GF engine tiers + pool + plan cache
+                                      (--check exits non-zero if TIER cannot
+                                      run on this CPU — the CI matrix probe)
   unilrc golden  [--out FILE]
   unilrc help
 
@@ -67,8 +70,9 @@ burst) · 3 recovery (single-block + full-node) · 4 bandwidth sweep ·
 The GF engine tier defaults to the best the CPU supports; override with
 --gf-kernel / --gf-threads or UNILRC_GF_KERNEL / UNILRC_GF_THREADS.
 Multi-stripe repairs run batched on the engine's persistent worker pool;
---gf-threads sizes it. --plan-ttl-ms / UNILRC_PLAN_TTL_MS expires cached
-decode plans (see PERF.md).
+--gf-threads sizes it, --gf-chunk-kb / UNILRC_GF_CHUNK_KB pins the batch
+task granularity (default: adaptive from event size vs. workers).
+--plan-ttl-ms / UNILRC_PLAN_TTL_MS expires cached decode plans (PERF.md).
 ";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -99,7 +103,8 @@ fn exp_config(flags: &HashMap<String, String>) -> anyhow::Result<ExpConfig> {
     crate::config::install_gf_engine(
         flags.get("gf-kernel").map(|s| s.as_str()),
         flags.get("gf-threads").map(|t| t.parse()).transpose()?,
-        "--gf-kernel/--gf-threads",
+        flags.get("gf-chunk-kb").map(|t| t.parse()).transpose()?,
+        "--gf-kernel/--gf-threads/--gf-chunk-kb",
     )?;
     // --config FILE loads a TOML-subset base; explicit flags override it.
     let mut cfg = match flags.get("config") {
@@ -143,15 +148,24 @@ fn exp_config(flags: &HashMap<String, String>) -> anyhow::Result<ExpConfig> {
 }
 
 /// `unilrc engine` — report detected and available GF kernel tiers, the
-/// worker pool, and plan-cache statistics.
-fn cmd_engine() -> anyhow::Result<()> {
+/// worker pool, and plan-cache statistics. With `--check TIER`, probe a
+/// single tier instead: exit 0 iff this CPU can run it (the CI
+/// kernel-matrix uses this to skip tiers the runner lacks).
+fn cmd_engine(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    if let Some(tier) = flags.get("check") {
+        let k = Kernel::parse(tier)
+            .ok_or_else(|| anyhow::anyhow!("unknown kernel tier {tier:?} (try `unilrc engine`)"))?;
+        anyhow::ensure!(k.available(), "kernel tier '{k}' unavailable on this CPU");
+        println!("{k}: available");
+        return Ok(());
+    }
     println!("=== GF(2^8) engine ===");
     println!("detected best tier : {}", Kernel::detect());
     for k in Kernel::all() {
         println!("  {:<8} {}", k.name(), if k.available() { "available" } else { "-" });
     }
     println!("active engine      : {}", dispatch::engine().describe());
-    println!("override via --gf-kernel/--gf-threads or UNILRC_GF_KERNEL/UNILRC_GF_THREADS");
+    println!("override via --gf-kernel/--gf-threads/--gf-chunk-kb or UNILRC_GF_* env");
 
     print_plan_cache_stats();
     Ok(())
@@ -254,7 +268,10 @@ fn fig5() {
     println!(
         "=== Figure 5 — z/α vs code rate & stripe width (feasible: rate ≥ 0.85, n ∈ [25,504]) ==="
     );
-    println!("{:>3} {:>3} {:>5} {:>5} {:>4} {:>8} {:>9}", "α", "z", "n", "k", "r", "rate", "feasible");
+    println!(
+        "{:>3} {:>3} {:>5} {:>5} {:>4} {:>8} {:>9}",
+        "α", "z", "n", "k", "r", "rate", "feasible"
+    );
     for p in tradeoff::sweep(20, &[1, 2, 3]) {
         println!(
             "{:>3} {:>3} {:>5} {:>5} {:>4} {:>8.4} {:>9}",
@@ -343,10 +360,16 @@ fn cmd_experiment(which: Option<&str>, flags: &HashMap<String, String>) -> anyho
     };
     match which {
         Some("1") => {
-            print_rows("Experiment 1 — normal read throughput", &experiments::exp1_normal_read(&cfg)?)
+            print_rows(
+                "Experiment 1 — normal read throughput",
+                &experiments::exp1_normal_read(&cfg)?,
+            )
         }
         Some("2") => {
-            print_rows("Experiment 2 — degraded read latency", &experiments::exp2_degraded_read(&cfg)?);
+            print_rows(
+                "Experiment 2 — degraded read latency",
+                &experiments::exp2_degraded_read(&cfg)?,
+            );
             print_rows(
                 "Experiment 2 — batched degraded burst (whole node, one event)",
                 &experiments::exp2_degraded_burst(&cfg)?,
@@ -454,7 +477,19 @@ mod tests {
 
     #[test]
     fn engine_runs() {
-        cmd_engine().unwrap();
+        cmd_engine(&HashMap::new()).unwrap();
+    }
+
+    #[test]
+    fn engine_check_probes_tier_availability() {
+        // scalar always passes; bogus names and (if any exists on this
+        // machine) an unavailable tier must exit non-zero for the CI probe
+        cmd_engine(&parse_flags(&["--check".into(), "scalar".into()])).unwrap();
+        assert!(cmd_engine(&parse_flags(&["--check".into(), "mmx".into()])).is_err());
+        if let Some(k) = Kernel::all().into_iter().find(|k| !k.available()) {
+            let f = parse_flags(&["--check".into(), k.name().into()]);
+            assert!(cmd_engine(&f).is_err(), "{k} should probe unavailable");
+        }
     }
 
     #[test]

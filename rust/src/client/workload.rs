@@ -75,7 +75,12 @@ impl Workload {
     /// Place as many objects as fit (up to `max_objects`) instead of
     /// panicking on overflow — used by experiment drivers whose stripe
     /// budget is a config knob.
-    pub fn place_fit(dss: &Dss, spec: WorkloadSpec, max_objects: usize, prng: &mut Prng) -> Workload {
+    pub fn place_fit(
+        dss: &Dss,
+        spec: WorkloadSpec,
+        max_objects: usize,
+        prng: &mut Prng,
+    ) -> Workload {
         let k = dss.code.k();
         let capacity = dss.metadata().stripe_count() * k;
         let mut cursor = 0usize;

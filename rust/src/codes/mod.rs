@@ -401,7 +401,8 @@ mod tests {
         let data: Vec<Vec<u8>> = (0..code.k()).map(|_| p.bytes(block)).collect();
         let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
         let parities = code.encode_blocks(&drefs);
-        let stripe: Vec<&[u8]> = drefs.iter().copied().chain(parities.iter().map(|v| v.as_slice())).collect();
+        let stripe: Vec<&[u8]> =
+            drefs.iter().copied().chain(parities.iter().map(|v| v.as_slice())).collect();
 
         // symbol-level encode agrees with block-level encode per byte
         for b in 0..block.min(4) {

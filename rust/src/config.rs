@@ -160,11 +160,17 @@ fn parse_value(s: &str) -> Result<Value> {
 }
 
 /// Build and install the process-wide GF engine from optional kernel /
-/// thread overrides (shared by the CLI flags and config-file keys; the
-/// engine freezes at first install, so late overrides warn via `origin`).
-pub fn install_gf_engine(kernel: Option<&str>, threads: Option<usize>, origin: &str) -> Result<()> {
+/// thread / batch-chunk overrides (shared by the CLI flags and config-file
+/// keys; the engine freezes at first install, so late overrides warn via
+/// `origin`). `chunk_kb = 0` explicitly selects the adaptive chunk policy.
+pub fn install_gf_engine(
+    kernel: Option<&str>,
+    threads: Option<usize>,
+    chunk_kb: Option<usize>,
+    origin: &str,
+) -> Result<()> {
     use crate::gf::dispatch::{self, GfEngine, Kernel};
-    if kernel.is_none() && threads.is_none() {
+    if kernel.is_none() && threads.is_none() && chunk_kb.is_none() {
         return Ok(());
     }
     let mut engine = GfEngine::from_env();
@@ -176,8 +182,11 @@ pub fn install_gf_engine(kernel: Option<&str>, threads: Option<usize>, origin: &
     if let Some(t) = threads {
         engine = engine.with_threads(t);
     }
+    if let Some(kb) = chunk_kb {
+        engine = engine.with_chunk(kb * 1024);
+    }
     if !dispatch::install(engine) {
-        eprintln!("note: GF engine already initialized — {origin} gf_kernel/gf_threads ignored");
+        eprintln!("note: GF engine already initialized — {origin} overrides ignored");
     }
     Ok(())
 }
@@ -193,14 +202,16 @@ pub fn apply_plan_ttl(ms: u64) {
 /// Build an experiment config from a file (CLI `--config`): recognized
 /// keys under `[experiment]`: `scheme`, `block_kb`, `stripes`,
 /// `cross_gbps`, `aggregated`, `backend`, `seed`, the GF engine knobs
-/// `gf_kernel` (auto|scalar|ssse3|avx2|neon) / `gf_threads` (worker-pool
-/// size), and `plan_ttl_ms` (decode-plan cache TTL; 0 disables expiry).
+/// `gf_kernel` (auto|scalar|ssse3|avx2|avx512|gfni|neon) / `gf_threads`
+/// (worker-pool size) / `gf_chunk_kb` (batch task granularity; 0 =
+/// adaptive), and `plan_ttl_ms` (decode-plan cache TTL; 0 disables expiry).
 pub fn experiment_config(cfg: &Config) -> Result<crate::experiments::ExpConfig> {
     use crate::codes::spec::Scheme;
     let mut e = crate::experiments::ExpConfig::default();
     install_gf_engine(
         cfg.get_str("experiment", "gf_kernel"),
         cfg.get_usize("experiment", "gf_threads"),
+        cfg.get_usize("experiment", "gf_chunk_kb"),
         "config",
     )?;
     if let Some(ms) = cfg.get_usize("experiment", "plan_ttl_ms") {
@@ -279,6 +290,15 @@ epsilon = 0.1
         assert!(experiment_config(&c).is_ok());
         let bad = Config::parse("[experiment]\ngf_kernel = \"mmx\"").unwrap();
         assert!(experiment_config(&bad).is_err());
+    }
+
+    #[test]
+    fn gf_chunk_key_accepted() {
+        // explicit granularity and the 0 = adaptive sentinel both parse
+        let c = Config::parse("[experiment]\ngf_chunk_kb = 256").unwrap();
+        assert!(experiment_config(&c).is_ok());
+        let adaptive = Config::parse("[experiment]\ngf_chunk_kb = 0").unwrap();
+        assert!(experiment_config(&adaptive).is_ok());
     }
 
     #[test]

@@ -271,7 +271,10 @@ impl Dss {
     ///
     /// All degraded repairs of the fan-out are submitted as *one* batched
     /// event ([`ProxyCtx::repair_node`]): the engine's worker pool overlaps
-    /// their combines instead of repairing stripe by stripe.
+    /// their combines instead of repairing stripe by stripe, and the batch
+    /// sizes its task granularity to the event (a burst of thousands of
+    /// small blocks lands ~2–4 tasks per worker, not thousands of
+    /// lane-sized ones — `GfEngine::batch_chunk`).
     pub fn parallel_read(&mut self, blocks: &[(StripeId, usize)]) -> anyhow::Result<OpResult> {
         let t0 = self.clock;
         let cross0 = self.net.cross_bytes;
@@ -365,7 +368,9 @@ impl Dss {
     /// Full-node recovery (§6 Exp 3): reconstruct every block the failed
     /// node hosted, all repairs issued in parallel at t=0 as one batched
     /// event — the engine's worker pool schedules every stripe's combines
-    /// together ([`ProxyCtx::repair_node`]) instead of stripe by stripe.
+    /// together ([`ProxyCtx::repair_node`]) instead of stripe by stripe,
+    /// at a task granularity adapted to the event size
+    /// (`GfEngine::batch_chunk`, knob `--gf-chunk-kb`).
     pub fn recover_node(&mut self, node: usize) -> anyhow::Result<RecoveryResult> {
         anyhow::ensure!(self.failed.contains(&node), "node {node} is not failed");
         let lost = self.meta.blocks_on_node(node);

@@ -251,7 +251,11 @@ pub struct Exp6Result {
     pub degraded_cdf: Vec<(f64, f64)>,
 }
 
-pub fn exp6_production(cfg: &ExpConfig, objects: usize, requests: usize) -> Result<Vec<Exp6Result>> {
+pub fn exp6_production(
+    cfg: &ExpConfig,
+    objects: usize,
+    requests: usize,
+) -> Result<Vec<Exp6Result>> {
     let mut out = Vec::new();
     for fam in CodeFamily::paper_baselines() {
         let mut prng = Prng::new(cfg.seed);

@@ -14,9 +14,14 @@
 //! [`GfEngine::fold_blocks`]), the engine exposes a *batched* mode:
 //! [`GfEngine::batch`] opens a [`CodingBatch`] into which whole multi-stripe
 //! events (full-node recovery, degraded-read fan-outs, bulk ingest) enqueue
-//! every stripe's combine at once; the pool schedules lane-tasks across
-//! stripes, so small blocks that are below the intra-block striping
-//! threshold still parallelize across the event (`tests/batch.rs`).
+//! every stripe's combine at once; the pool schedules tasks across stripes,
+//! so small blocks that are below the intra-block striping threshold still
+//! parallelize across the event (`tests/batch.rs`). Task granularity is
+//! *adaptive* ([`GfEngine::batch_chunk`]): derived per batch from total
+//! work vs. worker count (~2–4 tasks per worker per wave, floored at the
+//! lane size), so a degraded burst of thousands of stripes no longer
+//! floods the queue with lane-sized tasks; `--gf-chunk-kb` /
+//! `UNILRC_GF_CHUNK_KB` pins it explicitly (`tests/chunking.rs`).
 //!
 //! The process-wide engine ([`engine`]) backs the hot-path entry points in
 //! [`super::slice`], so every encode / repair / decode in the repo runs at
@@ -35,20 +40,35 @@ pub enum Kernel {
     Ssse3,
     /// x86_64 `VPSHUFB`, 32 bytes/op.
     Avx2,
+    /// x86_64 64-byte `VPSHUFB` with a `VPTERNLOGD` fused accumulate
+    /// (needs AVX-512F + AVX-512BW).
+    Avx512,
+    /// x86_64 `GF2P8AFFINEQB`: one affine transform per 64-byte product
+    /// (needs GFNI + AVX-512F + AVX-512BW; VEX-only GFNI parts fall back
+    /// to `avx2`).
+    Gfni,
     /// AArch64 `TBL` (`vqtbl1q_u8`), 16 bytes/op.
     Neon,
 }
 
 impl Kernel {
     /// Every tier, fastest first.
-    pub fn all() -> [Kernel; 4] {
-        [Kernel::Avx2, Kernel::Neon, Kernel::Ssse3, Kernel::Scalar]
+    pub fn all() -> [Kernel; 6] {
+        [Kernel::Gfni, Kernel::Avx512, Kernel::Avx2, Kernel::Neon, Kernel::Ssse3, Kernel::Scalar]
     }
 
     /// Best tier the running CPU supports.
     pub fn detect() -> Kernel {
         #[cfg(target_arch = "x86_64")]
         {
+            let avx512 =
+                is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512bw");
+            if avx512 && is_x86_feature_detected!("gfni") {
+                return Kernel::Gfni;
+            }
+            if avx512 {
+                return Kernel::Avx512;
+            }
             if is_x86_feature_detected!("avx2") {
                 return Kernel::Avx2;
             }
@@ -73,6 +93,16 @@ impl Kernel {
             Kernel::Ssse3 => is_x86_feature_detected!("ssse3"),
             #[cfg(target_arch = "x86_64")]
             Kernel::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx512 => {
+                is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512bw")
+            }
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Gfni => {
+                is_x86_feature_detected!("gfni")
+                    && is_x86_feature_detected!("avx512f")
+                    && is_x86_feature_detected!("avx512bw")
+            }
             #[cfg(target_arch = "aarch64")]
             Kernel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
             #[allow(unreachable_patterns)]
@@ -85,8 +115,28 @@ impl Kernel {
             Kernel::Scalar => "scalar",
             Kernel::Ssse3 => "ssse3",
             Kernel::Avx2 => "avx2",
+            Kernel::Avx512 => "avx512",
+            Kernel::Gfni => "gfni",
             Kernel::Neon => "neon",
         }
+    }
+
+    /// The tier forced via `UNILRC_GF_KERNEL`, treated as *authoritative*:
+    /// `None` when the variable is unset, empty, or `auto`; **panics** on
+    /// an unknown or CPU-unsupported name. This is the strict reading the
+    /// forced-kernel CI matrix needs — a broken tier must never be
+    /// silently replaced by a fallback during tests.
+    /// ([`GfEngine::from_env`] keeps the lenient fall-back-to-scalar
+    /// reading for production configs.)
+    pub fn forced_from_env() -> Option<Kernel> {
+        let name = std::env::var("UNILRC_GF_KERNEL").ok()?;
+        if name.is_empty() || name.eq_ignore_ascii_case("auto") {
+            return None;
+        }
+        let k = Kernel::parse(&name)
+            .unwrap_or_else(|| panic!("UNILRC_GF_KERNEL={name}: unknown tier"));
+        assert!(k.available(), "UNILRC_GF_KERNEL={name}: tier unavailable on this CPU");
+        Some(k)
     }
 
     /// Parse a tier name (`auto` resolves to [`Kernel::detect`]).
@@ -95,6 +145,8 @@ impl Kernel {
             "scalar" | "swar" => Some(Kernel::Scalar),
             "ssse3" => Some(Kernel::Ssse3),
             "avx2" => Some(Kernel::Avx2),
+            "avx512" | "avx512bw" => Some(Kernel::Avx512),
+            "gfni" => Some(Kernel::Gfni),
             "neon" => Some(Kernel::Neon),
             "auto" => Some(Kernel::detect()),
             _ => None,
@@ -118,6 +170,11 @@ const DEFAULT_LANE: usize = 64 * 1024;
 /// needed to hide its ~tens-of-µs thread startup.
 const DEFAULT_PAR_WORK: usize = 256 * 1024;
 
+/// Adaptive batch chunking targets this many tasks per worker per wave:
+/// enough slack for load balancing across uneven stripes, few enough that
+/// a degraded burst doesn't flood the queue with lane-sized tasks.
+const BATCH_TASKS_PER_WORKER: usize = 3;
+
 /// A GF(2^8) execution engine: one kernel tier + striping parameters +
 /// (for `threads > 1`) a persistent worker pool, created lazily on first
 /// parallel call and frozen with the engine. Clones share the pool.
@@ -127,6 +184,9 @@ pub struct GfEngine {
     threads: usize,
     lane: usize,
     par_work: usize,
+    /// Explicit batch task granularity (input bytes per pool task);
+    /// `None` = adaptive (derived per batch from work vs. worker count).
+    chunk: Option<usize>,
     pool: Arc<OnceLock<Arc<WorkPool>>>,
 }
 
@@ -137,6 +197,7 @@ impl std::fmt::Debug for GfEngine {
             .field("threads", &self.threads)
             .field("lane", &self.lane)
             .field("par_work", &self.par_work)
+            .field("chunk", &self.chunk)
             .field("pool_started", &self.pool.get().is_some())
             .finish()
     }
@@ -170,13 +231,16 @@ impl GfEngine {
             threads: 1,
             lane: DEFAULT_LANE,
             par_work: DEFAULT_PAR_WORK,
+            chunk: None,
             pool: Arc::new(OnceLock::new()),
         }
     }
 
     /// Engine configured from the environment:
-    /// `UNILRC_GF_KERNEL` (scalar|ssse3|avx2|neon|auto), `UNILRC_GF_THREADS`,
-    /// `UNILRC_GF_LANE_KB`, `UNILRC_GF_PAR_KB` (striping work threshold).
+    /// `UNILRC_GF_KERNEL` (scalar|ssse3|avx2|avx512|gfni|neon|auto),
+    /// `UNILRC_GF_THREADS`, `UNILRC_GF_LANE_KB`, `UNILRC_GF_PAR_KB`
+    /// (striping work threshold), `UNILRC_GF_CHUNK_KB` (explicit batch
+    /// task granularity; 0 = adaptive).
     pub fn from_env() -> GfEngine {
         let mut e = GfEngine::auto();
         if let Ok(k) = std::env::var("UNILRC_GF_KERNEL") {
@@ -197,6 +261,11 @@ impl GfEngine {
         if let Ok(kb) = std::env::var("UNILRC_GF_PAR_KB") {
             if let Ok(kb) = kb.parse::<usize>() {
                 e = e.with_par_work(kb * 1024);
+            }
+        }
+        if let Ok(kb) = std::env::var("UNILRC_GF_CHUNK_KB") {
+            if let Ok(kb) = kb.parse::<usize>() {
+                e = e.with_chunk(kb * 1024);
             }
         }
         e
@@ -228,6 +297,16 @@ impl GfEngine {
         self
     }
 
+    /// Pin the batch task granularity to `bytes` of input work per pool
+    /// task (`--gf-chunk-kb` / `UNILRC_GF_CHUNK_KB`); `0` restores the
+    /// adaptive policy. The per-op output step is still floored at one
+    /// lane, so an absurdly small value degrades to lane-sized tasks
+    /// rather than sub-vector splinters.
+    pub fn with_chunk(mut self, bytes: usize) -> GfEngine {
+        self.chunk = (bytes > 0).then_some(bytes);
+        self
+    }
+
     pub fn kernel(&self) -> Kernel {
         self.kernel
     }
@@ -249,11 +328,15 @@ impl GfEngine {
     /// One-line description for logs and `unilrc engine`.
     pub fn describe(&self) -> String {
         format!(
-            "kernel={} threads={} lane={}KiB par_work={}KiB pool={}",
+            "kernel={} threads={} lane={}KiB par_work={}KiB chunk={} pool={}",
             self.kernel,
             self.threads,
             self.lane / 1024,
             self.par_work / 1024,
+            match self.chunk {
+                Some(c) => format!("{}KiB", c.div_ceil(1024)),
+                None => "adaptive".to_string(),
+            },
             if self.threads <= 1 {
                 "off"
             } else if self.pool_started() {
@@ -262,6 +345,30 @@ impl GfEngine {
                 "lazy"
             }
         )
+    }
+
+    /// Batch task granularity in input bytes per pool task, for a batch
+    /// touching `work` total input bytes: the explicit `--gf-chunk-kb`
+    /// override if set, otherwise `work / (workers × ~3)` rounded up to
+    /// whole lanes — so a huge multi-stripe event lands ~2–4 tasks on each
+    /// worker instead of thousands of lane-sized ones, while small events
+    /// floor at one lane and keep their parallelism.
+    pub fn batch_chunk(&self, work: usize) -> usize {
+        if let Some(c) = self.chunk {
+            return c;
+        }
+        let tasks = self.threads.max(1) * BATCH_TASKS_PER_WORKER;
+        work.div_ceil(tasks).div_ceil(self.lane).max(1) * self.lane
+    }
+
+    /// Output bytes each pool task of a batched op produces, for an op
+    /// reading `sources` input slices within a batch of `work` total input
+    /// bytes: the batch granularity divided across the op's inputs, in
+    /// whole lanes, floored at one lane. (Chunking is per-op: a batch of
+    /// more stripes than workers still enqueues at least one task per
+    /// stripe.)
+    pub fn batch_step(&self, work: usize, sources: usize) -> usize {
+        (self.batch_chunk(work) / (self.lane * sources.max(1))).max(1) * self.lane
     }
 
     /// The persistent pool, started on first use; `None` when the engine is
@@ -310,6 +417,10 @@ impl GfEngine {
             Kernel::Ssse3 => unsafe { super::simd::x86_64::mul_acc_ssse3(t, src, dst) },
             #[cfg(target_arch = "x86_64")]
             Kernel::Avx2 => unsafe { super::simd::x86_64::mul_acc_avx2(t, src, dst) },
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx512 => unsafe { super::simd::x86_64::mul_acc_avx512(t, src, dst) },
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Gfni => unsafe { super::simd::x86_64::mul_acc_gfni(t, src, dst) },
             #[cfg(target_arch = "aarch64")]
             Kernel::Neon => unsafe { super::simd::aarch64::mul_acc_neon(t, src, dst) },
             _ => slice::mul_acc_slice_scalar(t.c, src, dst),
@@ -343,9 +454,17 @@ impl GfEngine {
         // SAFETY: kernel availability established at construction.
         match self.kernel {
             #[cfg(target_arch = "x86_64")]
-            Kernel::Ssse3 => unsafe { super::simd::x86_64::mul_acc2_ssse3(t1, src1, t2, src2, dst) },
+            Kernel::Ssse3 => unsafe {
+                super::simd::x86_64::mul_acc2_ssse3(t1, src1, t2, src2, dst)
+            },
             #[cfg(target_arch = "x86_64")]
             Kernel::Avx2 => unsafe { super::simd::x86_64::mul_acc2_avx2(t1, src1, t2, src2, dst) },
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx512 => unsafe {
+                super::simd::x86_64::mul_acc2_avx512(t1, src1, t2, src2, dst)
+            },
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Gfni => unsafe { super::simd::x86_64::mul_acc2_gfni(t1, src1, t2, src2, dst) },
             #[cfg(target_arch = "aarch64")]
             Kernel::Neon => unsafe { super::simd::aarch64::mul_acc2_neon(t1, src1, t2, src2, dst) },
             _ => {
@@ -362,6 +481,8 @@ impl GfEngine {
         match self.kernel {
             #[cfg(target_arch = "x86_64")]
             Kernel::Avx2 => unsafe { super::simd::x86_64::xor_avx2(dst, src) },
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx512 | Kernel::Gfni => unsafe { super::simd::x86_64::xor_avx512(dst, src) },
             #[cfg(target_arch = "aarch64")]
             Kernel::Neon => unsafe { super::simd::aarch64::xor_neon(dst, src) },
             _ => slice::xor_slice_scalar(dst, src),
@@ -432,7 +553,12 @@ impl GfEngine {
 
     /// [`Self::matmul_blocks`] with per-coefficient tables prebuilt — the
     /// entry point for cached decode plans.
-    pub fn matmul_blocks_t(&self, tables: &[Vec<NibbleTables>], srcs: &[&[u8]], outs: &mut [Vec<u8>]) {
+    pub fn matmul_blocks_t(
+        &self,
+        tables: &[Vec<NibbleTables>],
+        srcs: &[&[u8]],
+        outs: &mut [Vec<u8>],
+    ) {
         assert_eq!(tables.len(), outs.len(), "row count mismatch");
         let block = srcs.first().map_or(0, |s| s.len());
         for (row, out) in tables.iter().zip(outs.iter_mut()) {
@@ -474,7 +600,13 @@ impl GfEngine {
     /// the full rows; sources are indexed with the same offset. Sources are
     /// consumed in fused pairs ([`Self::mul_acc2_t`]) so each output lane
     /// is loaded/stored once per *two* sources.
-    fn matmul_lane(&self, tables: &[Vec<NibbleTables>], srcs: &[&[u8]], off: usize, louts: &mut [&mut [u8]]) {
+    fn matmul_lane(
+        &self,
+        tables: &[Vec<NibbleTables>],
+        srcs: &[&[u8]],
+        off: usize,
+        louts: &mut [&mut [u8]],
+    ) {
         for out in louts.iter_mut() {
             out.fill(0);
         }
@@ -545,14 +677,15 @@ impl GfEngine {
     where
         F: for<'scope> FnOnce(&mut CodingBatch<'scope, 'env>) -> R,
     {
+        let chunk = self.batch_chunk(work);
         let pool = if self.threads > 1 && work >= self.par_work { self.pool() } else { None };
         match pool {
             Some(pool) => pool.scope(|scope| {
-                let mut b = CodingBatch { engine: self, scope: Some(scope) };
+                let mut b = CodingBatch { engine: self, scope: Some(scope), chunk };
                 f(&mut b)
             }),
             None => {
-                let mut b = CodingBatch { engine: self, scope: None };
+                let mut b = CodingBatch { engine: self, scope: None, chunk };
                 f(&mut b)
             }
         }
@@ -567,12 +700,17 @@ pub struct CodingBatch<'scope, 'env: 'scope> {
     engine: &'env GfEngine,
     /// `None` ⇒ run ops inline (single-threaded engine or tiny batch).
     scope: Option<&'scope BatchScope<'scope, 'env>>,
+    /// Input-work granularity per pool task for this batch, fixed when the
+    /// batch opened (adaptive or the `--gf-chunk-kb` override).
+    chunk: usize,
 }
 
 impl<'scope, 'env> CodingBatch<'scope, 'env> {
-    /// Chunk size for batch tasks: whole lanes, one task for sub-lane blocks.
-    fn chunk(&self) -> usize {
-        self.engine.lane
+    /// Output bytes per task for an op reading `sources` slices: the batch
+    /// granularity spread across the op's inputs, whole lanes, floored at
+    /// one lane (mirrors [`GfEngine::batch_step`]).
+    fn step(&self, sources: usize) -> usize {
+        (self.chunk / (self.engine.lane * sources.max(1))).max(1) * self.engine.lane
     }
 
     /// Enqueue an arbitrary engine task (advanced callers).
@@ -602,19 +740,25 @@ impl<'scope, 'env> CodingBatch<'scope, 'env> {
             }
             return;
         };
-        let step = self.chunk();
+        let step = self.step(srcs.len());
+        let lane = engine.lane;
         // One shared allocation for the source list; tasks clone the Arc.
         let srcs = Arc::new(srcs);
         let mut off = 0usize;
         for c in dst.chunks_mut(step) {
-            let o = off;
-            let w = c.len();
-            off += w;
+            let base = off;
+            off += c.len();
             let srcs = Arc::clone(&srcs);
+            // Within a task, copy + fold one lane at a time so src+dst
+            // stay cache-resident however large the task's span is.
             scope.submit(move || {
-                c.copy_from_slice(&srcs[0][o..o + w]);
-                for s in &srcs[1..] {
-                    engine.xor(c, &s[o..o + w]);
+                for (l, sub) in c.chunks_mut(lane).enumerate() {
+                    let o = base + l * lane;
+                    let w = sub.len();
+                    sub.copy_from_slice(&srcs[0][o..o + w]);
+                    for s in &srcs[1..] {
+                        engine.xor(sub, &s[o..o + w]);
+                    }
                 }
             });
         }
@@ -644,18 +788,28 @@ impl<'scope, 'env> CodingBatch<'scope, 'env> {
         if outs.is_empty() {
             return;
         }
-        let step = self.chunk();
-        let nlanes = block.div_ceil(step);
+        let step = self.step(srcs.len());
+        let lane = engine.lane;
+        let ntasks = block.div_ceil(step);
         // One shared allocation for the source list; tasks clone the Arc.
         let srcs = Arc::new(srcs);
         let mut row_chunks: Vec<_> = outs.iter_mut().map(|o| o.chunks_mut(step)).collect();
-        for l in 0..nlanes {
+        for t in 0..ntasks {
             let mut louts: Vec<&mut [u8]> =
-                row_chunks.iter_mut().map(|it| it.next().expect("lane chunk")).collect();
+                row_chunks.iter_mut().map(|it| it.next().expect("task chunk")).collect();
             let srcs = Arc::clone(&srcs);
-            let off = l * step;
+            let off = t * step;
+            // Within a task, run the matmul one lane at a time so each
+            // output window stays cache-resident across the fused source
+            // pairs, however large the task's span is.
             scope.submit(move || {
-                engine.matmul_lane(tables, &srcs, off, &mut louts);
+                let nsub = louts.first().map_or(0, |o| o.len().div_ceil(lane));
+                let mut subs: Vec<_> = louts.iter_mut().map(|o| o.chunks_mut(lane)).collect();
+                for s in 0..nsub {
+                    let mut lane_outs: Vec<&mut [u8]> =
+                        subs.iter_mut().map(|it| it.next().expect("lane chunk")).collect();
+                    engine.matmul_lane(tables, &srcs, off + s * lane, &mut lane_outs);
+                }
             });
         }
     }
@@ -806,6 +960,35 @@ mod tests {
         assert!(e.pool_started());
         let clone = e.clone();
         assert!(clone.pool_started(), "clones share the started pool");
+    }
+
+    #[test]
+    fn adaptive_chunk_scales_with_work_and_floors_at_lane() {
+        let e = GfEngine::new(Kernel::Scalar).with_threads(2).with_lane(4096);
+        // tiny or empty batches floor at one lane
+        assert_eq!(e.batch_chunk(0), 4096);
+        assert_eq!(e.batch_chunk(100), 4096);
+        // large batches land ~2–4 tasks per worker, in whole lanes
+        let work = 60 * 4096 * 6;
+        let chunk = e.batch_chunk(work);
+        assert_eq!(chunk % 4096, 0);
+        let tasks = work.div_ceil(chunk);
+        assert!((2..=8).contains(&tasks), "tasks={tasks} for 2 workers");
+        // explicit override wins at any work size; 0 restores adaptive
+        let o = e.clone().with_chunk(12345);
+        assert_eq!(o.batch_chunk(1 << 30), 12345);
+        assert_eq!(o.with_chunk(0).batch_chunk(0), 4096);
+    }
+
+    #[test]
+    fn batch_step_spreads_chunk_across_sources_with_lane_floor() {
+        let e = GfEngine::new(Kernel::Scalar).with_threads(2).with_lane(1024).with_chunk(64);
+        // absurdly small explicit chunk: per-task output is still one lane
+        assert_eq!(e.batch_step(1 << 20, 8), 1024);
+        let e = e.with_chunk(1 << 20);
+        let step = e.batch_step(1 << 20, 4);
+        assert_eq!(step % 1024, 0);
+        assert_eq!(step, (1 << 20) / (1024 * 4) * 1024);
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! SIMD GF(2^8) kernels — the PSHUFB / TBL technique ISA-L uses (§2.3.3).
 //!
 //! A constant multiply over GF(2^8) is two 16-entry table lookups (one per
-//! nibble) plus an XOR, and `PSHUFB` / `VPSHUFB` / `TBL` perform 16/32 such
-//! lookups per instruction. These kernels consume the per-coefficient
-//! [`NibbleTables`] shared with the scalar path, so every tier computes
-//! byte-identical results (asserted by `tests/gf_simd.rs`).
+//! nibble) plus an XOR, and `PSHUFB` / `VPSHUFB` / `TBL` perform 16/32/64
+//! such lookups per instruction; the AVX-512BW tier additionally fuses the
+//! XOR accumulate into a single `VPTERNLOGD`, and the GFNI tier replaces
+//! the lookups entirely with one `GF2P8AFFINEQB` affine transform per 64
+//! bytes (the coefficient's 8×8 bit matrix rides in `NibbleTables::mx`).
+//! All kernels consume the per-coefficient [`NibbleTables`] shared with
+//! the scalar path, so every tier computes byte-identical results
+//! (asserted by `tests/gf_simd.rs`).
 //!
 //! All functions here are `unsafe` only because of `#[target_feature]`:
 //! callers must guarantee the instruction set is present (checked once at
@@ -175,6 +179,155 @@ pub mod x86_64 {
         tail_mul_acc2(t1, &src1[n..], t2, &src2[n..], &mut dst[n..]);
     }
 
+    /// `dst ^= c · src` with 64-byte AVX-512BW `VPSHUFB` lookups: the
+    /// nibble tables are broadcast to all four 128-bit lanes, and the
+    /// accumulate `d ^ pl ^ ph` is a single `VPTERNLOGD` (imm `0x96` =
+    /// three-way XOR) instead of two vector XORs.
+    ///
+    /// # Safety
+    /// The CPU must support AVX-512F and AVX-512BW.
+    #[target_feature(enable = "avx512f,avx512bw")]
+    pub unsafe fn mul_acc_avx512(t: &NibbleTables, src: &[u8], dst: &mut [u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let lo = _mm512_broadcast_i32x4(_mm_loadu_si128(t.lo.as_ptr() as *const __m128i));
+        let hi = _mm512_broadcast_i32x4(_mm_loadu_si128(t.hi.as_ptr() as *const __m128i));
+        let mask = _mm512_set1_epi8(0x0F);
+        let n = src.len() & !63;
+        let mut i = 0;
+        while i < n {
+            let s = _mm512_loadu_epi8(src.as_ptr().add(i) as *const i8);
+            let d = _mm512_loadu_epi8(dst.as_ptr().add(i) as *const i8);
+            let pl = _mm512_shuffle_epi8(lo, _mm512_and_si512(s, mask));
+            let ph = _mm512_shuffle_epi8(hi, _mm512_and_si512(_mm512_srli_epi64::<4>(s), mask));
+            _mm512_storeu_epi8(
+                dst.as_mut_ptr().add(i) as *mut i8,
+                _mm512_ternarylogic_epi32::<0x96>(d, pl, ph),
+            );
+            i += 64;
+        }
+        tail_mul_acc(t, &src[n..], &mut dst[n..]);
+    }
+
+    /// Fused `dst ^= c1·src1 ^ c2·src2` with 64-byte AVX-512BW `VPSHUFB` —
+    /// the `gf_2vect_mad` shape at 512-bit width: one `dst` load/store per
+    /// two sources, two `VPTERNLOGD`s for the four-way XOR accumulate.
+    ///
+    /// # Safety
+    /// The CPU must support AVX-512F and AVX-512BW.
+    #[target_feature(enable = "avx512f,avx512bw")]
+    pub unsafe fn mul_acc2_avx512(
+        t1: &NibbleTables,
+        src1: &[u8],
+        t2: &NibbleTables,
+        src2: &[u8],
+        dst: &mut [u8],
+    ) {
+        debug_assert_eq!(src1.len(), dst.len());
+        debug_assert_eq!(src2.len(), dst.len());
+        let lo1 = _mm512_broadcast_i32x4(_mm_loadu_si128(t1.lo.as_ptr() as *const __m128i));
+        let hi1 = _mm512_broadcast_i32x4(_mm_loadu_si128(t1.hi.as_ptr() as *const __m128i));
+        let lo2 = _mm512_broadcast_i32x4(_mm_loadu_si128(t2.lo.as_ptr() as *const __m128i));
+        let hi2 = _mm512_broadcast_i32x4(_mm_loadu_si128(t2.hi.as_ptr() as *const __m128i));
+        let mask = _mm512_set1_epi8(0x0F);
+        let n = dst.len() & !63;
+        let mut i = 0;
+        while i < n {
+            let s1 = _mm512_loadu_epi8(src1.as_ptr().add(i) as *const i8);
+            let s2 = _mm512_loadu_epi8(src2.as_ptr().add(i) as *const i8);
+            let d = _mm512_loadu_epi8(dst.as_ptr().add(i) as *const i8);
+            let p1l = _mm512_shuffle_epi8(lo1, _mm512_and_si512(s1, mask));
+            let p1h = _mm512_shuffle_epi8(hi1, _mm512_and_si512(_mm512_srli_epi64::<4>(s1), mask));
+            let p2l = _mm512_shuffle_epi8(lo2, _mm512_and_si512(s2, mask));
+            let p2h = _mm512_shuffle_epi8(hi2, _mm512_and_si512(_mm512_srli_epi64::<4>(s2), mask));
+            let acc = _mm512_ternarylogic_epi32::<0x96>(d, p1l, p1h);
+            _mm512_storeu_epi8(
+                dst.as_mut_ptr().add(i) as *mut i8,
+                _mm512_ternarylogic_epi32::<0x96>(acc, p2l, p2h),
+            );
+            i += 64;
+        }
+        tail_mul_acc2(t1, &src1[n..], t2, &src2[n..], &mut dst[n..]);
+    }
+
+    /// `dst ^= c · src` with GFNI: one 64-byte `GF2P8AFFINEQB` forms all 64
+    /// products at once — the per-coefficient 8×8 bit matrix rides in
+    /// [`NibbleTables::mx`] — and a `VPTERNLOGD`-free XOR accumulates.
+    /// No table broadcasts, no nibble split: 2 instructions per 64 bytes.
+    ///
+    /// # Safety
+    /// The CPU must support GFNI, AVX-512F and AVX-512BW.
+    #[target_feature(enable = "gfni,avx512f,avx512bw")]
+    pub unsafe fn mul_acc_gfni(t: &NibbleTables, src: &[u8], dst: &mut [u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let a = _mm512_set1_epi64(t.mx as i64);
+        let n = src.len() & !63;
+        let mut i = 0;
+        while i < n {
+            let s = _mm512_loadu_epi8(src.as_ptr().add(i) as *const i8);
+            let d = _mm512_loadu_epi8(dst.as_ptr().add(i) as *const i8);
+            let prod = _mm512_gf2p8affine_epi64_epi8::<0>(s, a);
+            _mm512_storeu_epi8(dst.as_mut_ptr().add(i) as *mut i8, _mm512_xor_si512(d, prod));
+            i += 64;
+        }
+        tail_mul_acc(t, &src[n..], &mut dst[n..]);
+    }
+
+    /// Fused `dst ^= c1·src1 ^ c2·src2` with GFNI: two affine transforms
+    /// and one `VPTERNLOGD` per 64 output bytes — `dst` is loaded and
+    /// stored once per two sources.
+    ///
+    /// # Safety
+    /// The CPU must support GFNI, AVX-512F and AVX-512BW.
+    #[target_feature(enable = "gfni,avx512f,avx512bw")]
+    pub unsafe fn mul_acc2_gfni(
+        t1: &NibbleTables,
+        src1: &[u8],
+        t2: &NibbleTables,
+        src2: &[u8],
+        dst: &mut [u8],
+    ) {
+        debug_assert_eq!(src1.len(), dst.len());
+        debug_assert_eq!(src2.len(), dst.len());
+        let a1 = _mm512_set1_epi64(t1.mx as i64);
+        let a2 = _mm512_set1_epi64(t2.mx as i64);
+        let n = dst.len() & !63;
+        let mut i = 0;
+        while i < n {
+            let s1 = _mm512_loadu_epi8(src1.as_ptr().add(i) as *const i8);
+            let s2 = _mm512_loadu_epi8(src2.as_ptr().add(i) as *const i8);
+            let d = _mm512_loadu_epi8(dst.as_ptr().add(i) as *const i8);
+            let p1 = _mm512_gf2p8affine_epi64_epi8::<0>(s1, a1);
+            let p2 = _mm512_gf2p8affine_epi64_epi8::<0>(s2, a2);
+            _mm512_storeu_epi8(
+                dst.as_mut_ptr().add(i) as *mut i8,
+                _mm512_ternarylogic_epi32::<0x96>(d, p1, p2),
+            );
+            i += 64;
+        }
+        tail_mul_acc2(t1, &src1[n..], t2, &src2[n..], &mut dst[n..]);
+    }
+
+    /// `dst ^= src` with 64-byte AVX-512BW loads/stores (shared by the
+    /// `avx512` and `gfni` tiers — XOR has no multiply to accelerate).
+    ///
+    /// # Safety
+    /// The CPU must support AVX-512F and AVX-512BW.
+    #[target_feature(enable = "avx512f,avx512bw")]
+    pub unsafe fn xor_avx512(dst: &mut [u8], src: &[u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let n = src.len() & !63;
+        let mut i = 0;
+        while i < n {
+            let s = _mm512_loadu_epi8(src.as_ptr().add(i) as *const i8);
+            let d = _mm512_loadu_epi8(dst.as_ptr().add(i) as *const i8);
+            _mm512_storeu_epi8(dst.as_mut_ptr().add(i) as *mut i8, _mm512_xor_si512(d, s));
+            i += 64;
+        }
+        for (d, s) in dst[n..].iter_mut().zip(&src[n..]) {
+            *d ^= *s;
+        }
+    }
+
     /// `dst ^= src` with 32-byte AVX2 loads/stores.
     ///
     /// # Safety
@@ -251,8 +404,14 @@ pub mod aarch64 {
             let s1 = vld1q_u8(src1.as_ptr().add(i));
             let s2 = vld1q_u8(src2.as_ptr().add(i));
             let d = vld1q_u8(dst.as_ptr().add(i));
-            let p1 = veorq_u8(vqtbl1q_u8(lo1, vandq_u8(s1, mask)), vqtbl1q_u8(hi1, vshrq_n_u8::<4>(s1)));
-            let p2 = veorq_u8(vqtbl1q_u8(lo2, vandq_u8(s2, mask)), vqtbl1q_u8(hi2, vshrq_n_u8::<4>(s2)));
+            let p1 = veorq_u8(
+                vqtbl1q_u8(lo1, vandq_u8(s1, mask)),
+                vqtbl1q_u8(hi1, vshrq_n_u8::<4>(s1)),
+            );
+            let p2 = veorq_u8(
+                vqtbl1q_u8(lo2, vandq_u8(s2, mask)),
+                vqtbl1q_u8(hi2, vshrq_n_u8::<4>(s2)),
+            );
             vst1q_u8(dst.as_mut_ptr().add(i), veorq_u8(d, veorq_u8(p1, p2)));
             i += 16;
         }

@@ -52,13 +52,20 @@ pub fn xor_fold(dst: &mut [u8], srcs: &[&[u8]]) {
 ///
 /// These 32 bytes are exactly what the SIMD tiers feed to `PSHUFB` / `TBL`,
 /// and what [`PlanCache`](crate::codes::plan_cache) precomputes per cached
-/// decode-plan coefficient.
+/// decode-plan coefficient. The extra [`mx`](Self::mx) qword is the same
+/// multiply expressed as an 8×8 GF(2) bit matrix — what the GFNI tier
+/// feeds to `GF2P8AFFINEQB` instead of table lookups.
 #[derive(Debug, Clone, Copy)]
 pub struct NibbleTables {
     /// The constant these tables multiply by.
     pub c: u8,
     pub lo: [u8; 16],
     pub hi: [u8; 16],
+    /// Bit matrix of `x ↦ c·x` in `GF2P8AFFINEQB` operand layout: qword
+    /// byte `7−i` holds output-bit row `i`, whose bit `j` is bit `i` of
+    /// `c·2^j` (multiplication by a constant is GF(2)-linear, so it is
+    /// exactly one affine transform with zero offset).
+    pub mx: u64,
 }
 
 impl NibbleTables {
@@ -69,7 +76,16 @@ impl NibbleTables {
             lo[i as usize] = gf_mul(c, i);
             hi[i as usize] = gf_mul(c, i << 4);
         }
-        NibbleTables { c, lo, hi }
+        let mut mx = [0u8; 8];
+        for j in 0..8usize {
+            let p = gf_mul(c, 1u8 << j);
+            for i in 0..8usize {
+                if (p >> i) & 1 == 1 {
+                    mx[7 - i] |= 1u8 << j;
+                }
+            }
+        }
+        NibbleTables { c, lo, hi, mx: u64::from_le_bytes(mx) }
     }
 
     /// Tables for a whole coefficient matrix, row-major — the shape every
@@ -229,6 +245,34 @@ mod tests {
                 assert_eq!(t.mul(x), gf_mul(c, x), "c={c} x={x}");
             }
         }
+    }
+
+    /// Software model of `GF2P8AFFINEQB` (Intel SDM pseudocode): output bit
+    /// `i` is the parity of `matrix.byte[7−i] AND x`.
+    fn affine_apply(mx: u64, x: u8) -> u8 {
+        let rows = mx.to_le_bytes();
+        let mut out = 0u8;
+        for i in 0..8usize {
+            if (rows[7 - i] & x).count_ones() & 1 == 1 {
+                out |= 1u8 << i;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn affine_matrix_matches_gf_mul_exhaustive() {
+        // Validates the GFNI operand layout on every CPU, including ones
+        // without the instruction — the hardware tier is additionally
+        // fuzzed against scalar in tests/gf_simd.rs where available.
+        for c in 0..=255u8 {
+            let t = NibbleTables::new(c);
+            for x in 0..=255u8 {
+                assert_eq!(affine_apply(t.mx, x), gf_mul(c, x), "c={c} x={x}");
+            }
+        }
+        // c=1 must be the canonical GFNI identity matrix
+        assert_eq!(NibbleTables::new(1).mx, 0x0102_0408_1020_4080);
     }
 
     #[test]

@@ -136,8 +136,12 @@ impl WorkPool {
         F: for<'scope> FnOnce(&'scope BatchScope<'scope, 'env>) -> R,
     {
         let latch = Arc::new(Latch::new());
-        let scope =
-            BatchScope { pool: self, latch: Arc::clone(&latch), _env: PhantomData, _scope: PhantomData };
+        let scope = BatchScope {
+            pool: self,
+            latch: Arc::clone(&latch),
+            _env: PhantomData,
+            _scope: PhantomData,
+        };
         // Even if `f` unwinds we must wait for already-submitted tasks —
         // they borrow `'env` data that is freed once we return.
         let result = panic::catch_unwind(AssertUnwindSafe(|| f(&scope)));
@@ -232,9 +236,10 @@ impl<'scope, 'env> BatchScope<'scope, 'env> {
         // all `'env` borrows captured by the task are live for its entire
         // execution — the same guarantee `std::thread::scope` provides.
         let boxed: Task = unsafe {
-            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Box<dyn FnOnce() + Send + 'static>>(
-                boxed,
-            )
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'env>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(boxed)
         };
         self.pool.push(boxed);
     }

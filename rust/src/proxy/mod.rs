@@ -11,7 +11,9 @@
 //! (stripe, block) of a whole-node recovery or degraded-read fan-out and
 //! executes all gateway pre-combines, then all final combines, as two
 //! [`CodingEngine::combine_batch`] waves — the worker pool schedules
-//! lane-tasks across stripes instead of serializing stripe by stripe.
+//! tasks across stripes instead of serializing stripe by stripe, with the
+//! task granularity adapted to the wave's size (`GfEngine::batch_chunk`),
+//! so a whole-node burst never floods the queue with tiny tasks.
 //! Measured compute time for each wave is apportioned to the requests by
 //! input bytes and folded into the virtual clock. [`ProxyCtx::repair_block`]
 //! is the single-request special case of the same path.

@@ -6,7 +6,7 @@
 //! pjrt`, benches, the e2e example) compile unchanged; constructing the
 //! coder fails with a clear message instead.
 
-use super::CodingEngine;
+use super::{CodingEngine, CombineJob};
 use crate::codes::Code;
 use anyhow::{bail, Result};
 
@@ -36,6 +36,14 @@ impl CodingEngine for PjrtCoder {
     }
 
     fn matmul(&self, _coeffs: &[Vec<u8>], _sources: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        bail!("PJRT backend unavailable (built without the `pjrt` feature)")
+    }
+
+    /// Mirrors the real backend's `combine_batch` override so both builds
+    /// expose the identical surface (the real one groups same-shape jobs
+    /// into shared artifact invocations; `tests/runtime_pjrt.rs` keeps the
+    /// stub honest).
+    fn combine_batch(&self, _jobs: &[CombineJob]) -> Result<Vec<Vec<Vec<u8>>>> {
         bail!("PJRT backend unavailable (built without the `pjrt` feature)")
     }
 }

@@ -14,12 +14,22 @@ use unilrc::runtime::{CodingEngine, CombineJob, NativeCoder};
 
 const THREADS: [usize; 3] = [1, 2, 8];
 
+/// Tier under test: the one forced via `UNILRC_GF_KERNEL` (the CI kernel
+/// matrix sets it per job; `Kernel::forced_from_env` fails loudly on
+/// unknown or unsupported names instead of silently testing whatever
+/// dispatch picks), else the detected best.
+fn kernel_under_test() -> Kernel {
+    Kernel::forced_from_env().unwrap_or_else(Kernel::detect)
+}
+
 /// Engines under test: every thread count, lane shrunk and the work
 /// threshold zeroed so even tiny blocks exercise the pooled path.
 fn engines() -> Vec<GfEngine> {
     THREADS
         .iter()
-        .map(|&t| GfEngine::new(Kernel::detect()).with_threads(t).with_lane(1024).with_par_work(0))
+        .map(|&t| {
+            GfEngine::new(kernel_under_test()).with_threads(t).with_lane(1024).with_par_work(0)
+        })
         .collect()
 }
 

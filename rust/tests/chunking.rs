@@ -1,0 +1,129 @@
+//! `CodingBatch` adaptive-chunking edge cases: the granularity policy
+//! itself (explicit `--gf-chunk-kb` override, whole-lane rounding, floor
+//! at one lane) and batch-vs-sequential byte equality at the shapes that
+//! stress it — a single stripe, a single-threaded engine, stripe counts
+//! far above the worker count, and sub-lane blocks. GF(2^8) is exact, so
+//! equality is bit-for-bit.
+
+use unilrc::codes::spec::{CodeFamily, Scheme};
+use unilrc::gf::{GfEngine, Kernel};
+use unilrc::prng::Prng;
+
+/// Tier under test: the one forced via `UNILRC_GF_KERNEL` (the CI kernel
+/// matrix), else the detected best; `Kernel::forced_from_env` fails
+/// loudly on unknown/unsupported names.
+fn kernel_under_test() -> Kernel {
+    Kernel::forced_from_env().unwrap_or_else(Kernel::detect)
+}
+
+/// Encode `stripes` random stripes batched on a configured engine and
+/// compare against per-stripe scalar sequential encodes.
+fn check_encode_equivalence(stripes: usize, block: usize, threads: usize, chunk: usize) {
+    let code = Scheme::S42.build(CodeFamily::UniLrc);
+    let mut p = Prng::new((stripes * 31 + block * 7 + threads + chunk) as u64);
+    let data: Vec<Vec<Vec<u8>>> =
+        (0..stripes).map(|_| (0..code.k()).map(|_| p.bytes(block)).collect()).collect();
+    let srefs: Vec<Vec<&[u8]>> =
+        data.iter().map(|d| d.iter().map(|v| v.as_slice()).collect()).collect();
+    let expect: Vec<Vec<Vec<u8>>> = srefs.iter().map(|d| code.encode_blocks(d)).collect();
+    let e = GfEngine::new(kernel_under_test())
+        .with_threads(threads)
+        .with_lane(1024)
+        .with_par_work(0)
+        .with_chunk(chunk);
+    let got = code.encode_stripes_on(&e, &srefs);
+    assert_eq!(got, expect, "stripes={stripes} block={block} threads={threads} chunk={chunk}");
+}
+
+#[test]
+fn one_stripe_batch_matches_sequential() {
+    // a lone stripe must be correct whether the granularity is adaptive,
+    // splintered, lane-sized, or far larger than the whole op
+    for chunk in [0usize, 64, 4096, 1 << 20] {
+        check_encode_equivalence(1, 3000, 2, chunk);
+    }
+}
+
+#[test]
+fn single_threaded_engine_runs_batches_inline() {
+    let code = Scheme::S42.build(CodeFamily::UniLrc);
+    let mut p = Prng::new(5);
+    let data: Vec<Vec<u8>> = (0..code.k()).map(|_| p.bytes(2048)).collect();
+    let stripe: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+    let srefs: Vec<Vec<&[u8]>> = vec![stripe.clone(); 4];
+    let e = GfEngine::new(kernel_under_test()).with_threads(1).with_par_work(0);
+    let got = code.encode_stripes_on(&e, &srefs);
+    assert!(!e.pool_started(), "--gf-threads 1 must run batches inline, no pool");
+    let expect = code.encode_blocks(&stripe);
+    for g in &got {
+        assert_eq!(g, &expect);
+    }
+}
+
+#[test]
+fn many_stripes_few_workers() {
+    // stripe count ≫ worker count: the adaptive policy floors at one task
+    // per stripe instead of lane-splintering every block — and stays
+    // byte-identical
+    check_encode_equivalence(64, 1500, 2, 0);
+}
+
+#[test]
+fn sub_lane_blocks_with_explicit_chunks() {
+    // blocks below the lane size exercise the single-task-per-op floor
+    for chunk in [0usize, 64, 1024, 1 << 22] {
+        check_encode_equivalence(9, 700, 8, chunk);
+    }
+}
+
+#[test]
+fn fold_batches_respect_chunk_overrides() {
+    let mut p = Prng::new(11);
+    let block = 2500;
+    let stripes: Vec<Vec<Vec<u8>>> =
+        (0..10).map(|_| (0..5).map(|_| p.bytes(block)).collect()).collect();
+    let mut expect: Vec<Vec<u8>> = Vec::new();
+    for srcs in &stripes {
+        let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0u8; block];
+        GfEngine::scalar().fold_blocks(&mut out, &refs);
+        expect.push(out);
+    }
+    for chunk in [0usize, 64, 2048, 1 << 21] {
+        let e = GfEngine::new(kernel_under_test())
+            .with_threads(3)
+            .with_lane(512)
+            .with_par_work(0)
+            .with_chunk(chunk);
+        let mut got: Vec<Vec<u8>> = vec![vec![9u8; block]; 10];
+        e.batch(10 * 5 * block, |b| {
+            for (srcs, out) in stripes.iter().zip(got.iter_mut()) {
+                let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+                b.fold(out, refs);
+            }
+        });
+        assert_eq!(got, expect, "chunk={chunk}");
+    }
+}
+
+#[test]
+fn chunk_floor_is_the_lane_size() {
+    // a sub-lane explicit chunk degrades to lane-sized tasks, never
+    // sub-vector splinters
+    let e = GfEngine::new(Kernel::Scalar).with_threads(4).with_lane(4096).with_chunk(64);
+    assert_eq!(e.batch_step(1 << 24, 6), 4096);
+    assert_eq!(e.batch_chunk(1 << 24), 64, "explicit chunk is reported as-is");
+    // and the adaptive policy never goes below one lane either
+    let a = GfEngine::new(Kernel::Scalar).with_threads(4).with_lane(4096);
+    assert_eq!(a.batch_chunk(0), 4096);
+    assert_eq!(a.batch_step(1, 100), 4096);
+}
+
+#[test]
+fn env_knob_parses_into_engine() {
+    // UNILRC_GF_CHUNK_KB pins the granularity in from_env engines
+    std::env::set_var("UNILRC_GF_CHUNK_KB", "128");
+    let e = GfEngine::from_env();
+    std::env::remove_var("UNILRC_GF_CHUNK_KB");
+    assert_eq!(e.batch_chunk(1 << 30), 128 * 1024);
+}

@@ -2,6 +2,11 @@
 //! scalar `gf_mul` reference, across lengths 0–4096, odd alignments, and
 //! both execution modes (serial and striped-parallel). This is the
 //! correctness contract that lets the dispatcher pick any tier at startup.
+//!
+//! With `UNILRC_GF_KERNEL` set (the CI kernel matrix forces one tier per
+//! job), exactly that tier is tested — and an unknown or unsupported
+//! forced tier fails loudly, so a broken kernel can never hide behind
+//! runtime dispatch quietly picking a different one.
 
 use unilrc::gf::dispatch::{GfEngine, Kernel};
 use unilrc::gf::slice::mul_acc_slice_scalar;
@@ -10,7 +15,10 @@ use unilrc::gf::NibbleTables;
 use unilrc::prng::Prng;
 
 fn available() -> Vec<Kernel> {
-    Kernel::all().into_iter().filter(|k| k.available()).collect()
+    match Kernel::forced_from_env() {
+        Some(k) => vec![k],
+        None => Kernel::all().into_iter().filter(|k| k.available()).collect(),
+    }
 }
 
 /// Reference: bytewise table multiply-accumulate.

@@ -7,7 +7,7 @@
 
 use unilrc::codes::spec::{CodeFamily, Scheme};
 use unilrc::prng::Prng;
-use unilrc::runtime::{CodingEngine, Manifest, NativeCoder, PjrtCoder};
+use unilrc::runtime::{CodingEngine, CombineJob, Manifest, NativeCoder, PjrtCoder};
 
 fn coder() -> Option<PjrtCoder> {
     if Manifest::load(Manifest::default_dir()).is_err() {
@@ -155,6 +155,66 @@ fn every_manifest_artifact_compiles() {
             scheme.label()
         );
     }
+}
+
+#[test]
+fn pjrt_combine_batch_matches_per_job_calls() {
+    // The real combine_batch groups same-shape jobs into shared artifact
+    // invocations (concatenated along the block axis); results must be
+    // byte-identical to per-job fold/matmul, including the lone odd-shape
+    // job that forms its own group.
+    let Some(pjrt) = coder() else { return };
+    let mut p = Prng::new(7);
+    let fold_srcs: Vec<Vec<Vec<u8>>> =
+        (0..5).map(|_| (0..4).map(|_| p.bytes(10_000)).collect()).collect();
+    let mm_srcs: Vec<Vec<Vec<u8>>> =
+        (0..3).map(|_| (0..6).map(|_| p.bytes(10_000)).collect()).collect();
+    let odd: Vec<Vec<u8>> = (0..2).map(|_| p.bytes(7_777)).collect();
+    let mm_coeffs: Vec<Vec<u8>> =
+        (0..2).map(|r| (0..6).map(|j| (r * 7 + j * 13 + 2) as u8).collect()).collect();
+    let mut jobs: Vec<CombineJob> = Vec::new();
+    for s in &fold_srcs {
+        jobs.push(CombineJob {
+            coeffs: vec![vec![1; 4]],
+            sources: s.iter().map(|v| v.as_slice()).collect(),
+        });
+    }
+    for s in &mm_srcs {
+        jobs.push(CombineJob {
+            coeffs: mm_coeffs.clone(),
+            sources: s.iter().map(|v| v.as_slice()).collect(),
+        });
+    }
+    jobs.push(CombineJob {
+        coeffs: vec![vec![1, 1]],
+        sources: odd.iter().map(|v| v.as_slice()).collect(),
+    });
+    let expect: Vec<Vec<Vec<u8>>> = jobs
+        .iter()
+        .map(|j| {
+            if j.xor_only() {
+                vec![pjrt.fold(&j.sources).unwrap()]
+            } else {
+                pjrt.matmul(&j.coeffs, &j.sources).unwrap()
+            }
+        })
+        .collect();
+    let got = pjrt.combine_batch(&jobs).unwrap();
+    assert_eq!(got, expect);
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stub_parity_fails_with_actionable_error() {
+    // Feature-off builds must keep the full CodingEngine surface —
+    // including the combine_batch override — and fail construction with a
+    // clear message instead of silently running a different backend.
+    let err = match PjrtCoder::new(None) {
+        Ok(_) => panic!("stub construction must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("pjrt"), "unexpected stub error: {err}");
+    let _ = <PjrtCoder as CodingEngine>::combine_batch;
 }
 
 #[test]

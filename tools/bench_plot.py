@@ -1,0 +1,316 @@
+#!/usr/bin/env python3
+"""Render the rolling bench baselines into a perf-trajectory SVG.
+
+Maintains a history file (JSONL, one line per CI run) next to the cached
+baselines and draws, for each bench, every case's throughput across runs
+*indexed to its first recorded value* — a flat line at 100% is "no
+change", dips are regressions, the single shared axis works for cases
+whose absolute MiB/s differ by orders of magnitude. The largest movers
+get the categorical colors and the legend; every other case stays as a
+gray context line, so the chart stays readable at dozens of cases.
+
+Pure stdlib — CI runners need nothing beyond python3. A text summary
+table is printed to stdout (the accessible/table view of the same data).
+
+Usage (CI):
+    bench_plot.py --history bench-baseline/history.jsonl \
+        --append BENCH_gf.json BENCH_pool.json --label "$GITHUB_RUN_NUMBER" \
+        --out bench-trajectory.svg
+
+Usage (local, re-render only):
+    bench_plot.py --history bench-baseline/history.jsonl --out t.svg
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# Reference categorical palette (fixed slot order, never cycled): movers
+# beyond the highlight budget fold into gray context lines instead of
+# minting new hues.
+SERIES = ["#2a78d6", "#eb6834", "#1baf7a", "#eda100", "#e87ba4", "#008300"]
+CONTEXT = "#d6d5d1"  # non-highlighted case lines
+SURFACE = "#fcfcfb"
+GRID = "#e8e7e3"
+BASELINE = "#b6b5b0"  # the 100% reference rule
+TEXT_PRIMARY = "#0b0b0b"
+TEXT_SECONDARY = "#52514e"
+
+PANEL_W = 960
+PLOT_H = 240
+MARGIN_L = 64
+MARGIN_R = 24
+TITLE_H = 44
+AXIS_H = 34
+LEGEND_ROW_H = 18
+
+
+def esc(s):
+    return s.replace("&", "&amp;").replace("<", "&lt;").replace(">", "&gt;")
+
+
+def load_history(path):
+    entries = []
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    entries.append(json.loads(line))
+                except json.JSONDecodeError:
+                    print("warning: skipping corrupt history line", file=sys.stderr)
+    return entries
+
+
+def append_run(entries, bench_files, label, max_runs):
+    benches = {}
+    for path in bench_files:
+        with open(path) as f:
+            doc = json.load(f)
+        name = doc.get("bench") or os.path.basename(path)
+        benches[name] = {
+            row["name"]: row["mib_per_s"] for row in doc.get("results", [])
+        }
+    entries.append({"label": label or str(len(entries) + 1), "benches": benches})
+    return entries[-max_runs:]
+
+
+def save_history(entries, path):
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        for e in entries:
+            f.write(json.dumps(e) + "\n")
+
+
+def collect_series(entries, bench):
+    """case -> list of per-run values (None where the case is absent)."""
+    cases = {}
+    for i, e in enumerate(entries):
+        for name, mib in e.get("benches", {}).get(bench, {}).items():
+            cases.setdefault(name, [None] * len(entries))[i] = mib
+    return cases
+
+
+def indexed(values):
+    """Percent-of-first-recorded-value, None preserved."""
+    base = next((v for v in values if v), None)
+    if not base:
+        return [None] * len(values)
+    return [None if v is None else 100.0 * v / base for v in values]
+
+
+def nice_ticks(lo, hi):
+    span = hi - lo
+    for step in (5, 10, 20, 25, 50, 100, 200):
+        if span / step <= 6:
+            break
+    first = int(lo // step) * step
+    return [t for t in range(first, int(hi) + step, step) if lo <= t <= hi]
+
+
+def render_panel(svg, y0, bench, cases, labels, highlight_n):
+    idx = {name: indexed(vals) for name, vals in sorted(cases.items())}
+    flat = [v for vals in idx.values() for v in vals if v is not None]
+    if not flat:
+        return y0
+    lo = min(85.0, min(flat) - 5.0)
+    hi = max(115.0, max(flat) + 5.0)
+    nruns = len(labels)
+
+    def x(i):
+        if nruns == 1:
+            return MARGIN_L + (PANEL_W - MARGIN_L - MARGIN_R) / 2
+        return MARGIN_L + (PANEL_W - MARGIN_L - MARGIN_R) * i / (nruns - 1)
+
+    def y(v):
+        return y0 + TITLE_H + PLOT_H * (1 - (v - lo) / (hi - lo))
+
+    # movers: largest |last - 100| get the categorical slots, fixed order
+    def last(vals):
+        return next((v for v in reversed(vals) if v is not None), 100.0)
+
+    movers = sorted(idx, key=lambda n: abs(last(idx[n]) - 100.0), reverse=True)
+    colored = movers[:highlight_n]
+    color_of = {n: SERIES[i] for i, n in enumerate(colored)}
+
+    svg.append(
+        f'<text x="{MARGIN_L}" y="{y0 + 20}" fill="{TEXT_PRIMARY}" '
+        f'font-size="15" font-weight="600">{esc(bench)}</text>'
+    )
+    svg.append(
+        f'<text x="{MARGIN_L}" y="{y0 + 36}" fill="{TEXT_SECONDARY}" '
+        f'font-size="11">throughput, % of first recorded run · '
+        f"{len(idx)} cases · {nruns} runs</text>"
+    )
+
+    for t in nice_ticks(lo, hi):
+        yy = y(t)
+        stroke = BASELINE if t == 100 else GRID
+        svg.append(
+            f'<line x1="{MARGIN_L}" y1="{yy:.1f}" x2="{PANEL_W - MARGIN_R}" '
+            f'y2="{yy:.1f}" stroke="{stroke}" stroke-width="1"/>'
+        )
+        svg.append(
+            f'<text x="{MARGIN_L - 8}" y="{yy + 4:.1f}" fill="{TEXT_SECONDARY}" '
+            f'font-size="11" text-anchor="end">{t}%</text>'
+        )
+
+    # x labels: first, last, and a few in between
+    shown = {0, nruns - 1}
+    if nruns > 2:
+        shown |= {nruns // 2}
+    for i in sorted(shown):
+        svg.append(
+            f'<text x="{x(i):.1f}" y="{y0 + TITLE_H + PLOT_H + 18}" '
+            f'fill="{TEXT_SECONDARY}" font-size="11" text-anchor="middle">'
+            f"run {esc(str(labels[i]))}</text>"
+        )
+
+    def polyline(vals, color, width, opacity):
+        pts = [(x(i), y(v)) for i, v in enumerate(vals) if v is not None]
+        if not pts:
+            return
+        if len(pts) == 1:
+            cx, cy = pts[0]
+            svg.append(
+                f'<circle cx="{cx:.1f}" cy="{cy:.1f}" r="4" fill="{color}" '
+                f'opacity="{opacity}"/>'
+            )
+            return
+        d = " ".join(f"{px:.1f},{py:.1f}" for px, py in pts)
+        svg.append(
+            f'<polyline points="{d}" fill="none" stroke="{color}" '
+            f'stroke-width="{width}" stroke-linejoin="round" '
+            f'stroke-linecap="round" opacity="{opacity}"/>'
+        )
+
+    # context lines first (under), highlighted movers on top
+    for name in idx:
+        if name not in color_of:
+            polyline(idx[name], CONTEXT, 1.2, 0.9)
+    for name in colored:
+        polyline(idx[name], color_of[name], 2, 1.0)
+        vals = idx[name]
+        li = max(i for i, v in enumerate(vals) if v is not None) if any(
+            v is not None for v in vals
+        ) else None
+        if li is not None:
+            svg.append(
+                f'<circle cx="{x(li):.1f}" cy="{y(vals[li]):.1f}" r="3.5" '
+                f'fill="{color_of[name]}" stroke="{SURFACE}" stroke-width="2">'
+                f"<title>{esc(name)}: {vals[li]:.1f}% of first run</title></circle>"
+            )
+
+    ly = y0 + TITLE_H + PLOT_H + AXIS_H
+    for i, name in enumerate(colored):
+        yy = ly + i * LEGEND_ROW_H
+        pct = last(idx[name])
+        svg.append(
+            f'<rect x="{MARGIN_L}" y="{yy - 9}" width="10" height="10" rx="2" '
+            f'fill="{color_of[name]}"/>'
+        )
+        svg.append(
+            f'<text x="{MARGIN_L + 16}" y="{yy}" fill="{TEXT_PRIMARY}" '
+            f'font-size="11">{esc(name[:70])}</text>'
+        )
+        svg.append(
+            f'<text x="{PANEL_W - MARGIN_R}" y="{yy}" fill="{TEXT_SECONDARY}" '
+            f'font-size="11" text-anchor="end">{pct:.1f}%</text>'
+        )
+    rest = len(idx) - len(colored)
+    if rest > 0:
+        yy = ly + len(colored) * LEGEND_ROW_H
+        svg.append(
+            f'<rect x="{MARGIN_L}" y="{yy - 9}" width="10" height="10" rx="2" '
+            f'fill="{CONTEXT}"/>'
+        )
+        svg.append(
+            f'<text x="{MARGIN_L + 16}" y="{yy}" fill="{TEXT_SECONDARY}" '
+            f'font-size="11">{rest} further cases (within normal variance)</text>'
+        )
+    return ly + (len(colored) + (1 if rest else 0)) * LEGEND_ROW_H + 20
+
+
+def render(entries, out, highlight_n):
+    labels = [e.get("label", str(i + 1)) for i, e in enumerate(entries)]
+    bench_names = []
+    for e in entries:
+        for b in e.get("benches", {}):
+            if b not in bench_names:
+                bench_names.append(b)
+
+    svg = []
+    y = 8
+    if not bench_names:
+        svg.append(
+            f'<text x="24" y="40" fill="{TEXT_PRIMARY}" font-size="14">'
+            "no bench history yet — the trajectory appears after the first "
+            "recorded run</text>"
+        )
+        y = 80
+    for bench in bench_names:
+        cases = collect_series(entries, bench)
+        y = render_panel(svg, y, bench, cases, labels, highlight_n)
+
+    doc = (
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{PANEL_W}" '
+        f'height="{y}" viewBox="0 0 {PANEL_W} {y}" '
+        f'font-family="system-ui, sans-serif">\n'
+        f'<rect width="{PANEL_W}" height="{y}" fill="{SURFACE}"/>\n'
+        + "\n".join(svg)
+        + "\n</svg>\n"
+    )
+    with open(out, "w") as f:
+        f.write(doc)
+    print(f"wrote {out} ({len(bench_names)} panel(s), {len(entries)} run(s))")
+
+
+def print_table(entries):
+    if not entries:
+        return
+    last = entries[-1]
+    for bench, cases in last.get("benches", {}).items():
+        print(f"\n{bench} — latest run (label {last.get('label')}):")
+        hist = collect_series(entries, bench)
+        for name in sorted(cases):
+            pct = indexed(hist[name])
+            cur = next((v for v in reversed(pct) if v is not None), None)
+            rel = f"{cur:6.1f}% of first" if cur is not None else "      new"
+            print(f"  {name:<48} {cases[name]:>10.1f} MiB/s  {rel}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--history", required=True, help="JSONL history file")
+    ap.add_argument(
+        "--append",
+        nargs="*",
+        default=[],
+        metavar="BENCH.json",
+        help="bench JSON artifacts to record as one new run",
+    )
+    ap.add_argument("--label", default=None, help="label for the appended run")
+    ap.add_argument("--max-runs", type=int, default=60)
+    ap.add_argument("--highlight", type=int, default=len(SERIES))
+    ap.add_argument("--out", required=True, help="output SVG path")
+    args = ap.parse_args()
+
+    entries = load_history(args.history)
+    if args.append:
+        entries = append_run(entries, args.append, args.label, args.max_runs)
+        save_history(entries, args.history)
+    render(entries, args.out, min(args.highlight, len(SERIES)))
+    print_table(entries)
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:
+        sys.exit(0)  # stdout piped into head &c. — the artifact is written
