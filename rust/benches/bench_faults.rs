@@ -1,0 +1,100 @@
+//! Fault-injection scenario bench: end-to-end `exp7_faults` replay,
+//! per-family batched multi-node recovery bursts, and the decode-plan
+//! warm-up prefetch cost.
+//!
+//! Set `UNILRC_BENCH_JSON=BENCH_faults.json` for the machine-readable
+//! artifact — CI appends it to the rolling perf trajectory next to
+//! `BENCH_gf.json` / `BENCH_pool.json` (PERF.md explains the rows).
+
+use unilrc::bench_util::{black_box, section, Bencher, JsonReport};
+use unilrc::codes::spec::CodeFamily;
+use unilrc::codes::PlanCache;
+use unilrc::experiments::{build_dss, exp7_faults, predicted_patterns, ExpConfig, FaultSimConfig};
+use unilrc::prng::Prng;
+use unilrc::sim::faults::{FaultConfig, FaultTrace};
+
+fn scenario_cfgs() -> (ExpConfig, FaultSimConfig) {
+    let cfg = ExpConfig {
+        block_size: 16 * 1024,
+        stripes: 2,
+        seed: 42,
+        time_compute: false,
+        ..Default::default()
+    };
+    let fc = FaultSimConfig {
+        fault: FaultConfig {
+            node_mttf_hours: 300.0,
+            node_mttr_hours: 10.0,
+            cluster_mttf_hours: 1_500.0,
+            cluster_mttr_hours: 5.0,
+            horizon_hours: 400.0,
+        },
+        tenants: 3,
+        objects_per_tenant: 6,
+        reads_per_event: 1,
+        measure_cap: 12,
+    };
+    (cfg, fc)
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut report = JsonReport::new("bench_faults");
+    report.meta("engine", &unilrc::gf::dispatch::engine().describe());
+
+    // ---------------- end-to-end scenario replay (all four families)
+    section("exp7 fault-injection scenario (4 families, deterministic)");
+    let (cfg, fc) = scenario_cfgs();
+    let rows = exp7_faults(&cfg, &fc).expect("scenario runs");
+    let scenario_bytes: usize =
+        rows.iter().map(|r| r.repaired_blocks).sum::<usize>() * cfg.block_size;
+    let s = b.bench_throughput("faults/exp7-scenario", scenario_bytes, || {
+        black_box(exp7_faults(&cfg, &fc).expect("scenario runs"));
+    });
+    report.add(&s, scenario_bytes);
+
+    // ---------------- batched burst recovery per family
+    section("batched two-node recovery burst (recover_nodes)");
+    for fam in CodeFamily::paper_baselines() {
+        let mut dss = build_dss(fam, &cfg);
+        let mut prng = Prng::new(cfg.seed);
+        dss.ingest_random_stripes(cfg.stripes, &mut prng).expect("ingest");
+        // two nodes from different clusters — a correlated-burst shape
+        let n0 = dss.metadata().node_of(0, 0);
+        let n1 = dss.metadata().node_of(0, dss.code.k() - 1);
+        assert_ne!(n0, n1);
+        dss.fail_node(n0);
+        dss.fail_node(n1);
+        let blocks =
+            dss.metadata().blocks_on_node(n0).len() + dss.metadata().blocks_on_node(n1).len();
+        dss.heal_node(n0);
+        dss.heal_node(n1);
+        let bytes = blocks * cfg.block_size;
+        let name = format!("faults/recover-burst/{}", fam.name());
+        let s = b.bench_throughput(&name, bytes, || {
+            dss.fail_node(n0);
+            dss.fail_node(n1);
+            black_box(dss.recover_nodes(&[n0, n1]).expect("burst recovery"));
+            dss.heal_node(n0);
+            dss.heal_node(n1);
+            dss.quiesce();
+        });
+        report.add(&s, bytes);
+    }
+
+    // ---------------- plan-cache warm-up prefetch cost
+    section("decode-plan warm-up prefetch (predicted trace patterns)");
+    let mut dss = build_dss(CodeFamily::UniLrc, &cfg);
+    let mut prng = Prng::new(cfg.seed);
+    dss.ingest_random_stripes(cfg.stripes, &mut prng).expect("ingest");
+    let trace = FaultTrace::generate(dss.topo, &fc.fault, cfg.seed);
+    let patterns = predicted_patterns(&dss, &trace);
+    println!("predicted patterns: {}", patterns.len());
+    let s = b.bench_latency("faults/plan-warmup-prefetch", || {
+        let cache = PlanCache::new(1024);
+        black_box(cache.prefetch(&dss.code, &patterns));
+    });
+    report.add(&s, 0);
+
+    report.write_if_requested();
+}

@@ -109,6 +109,67 @@ pub fn mttdl_years(n: usize, f: usize, c: f64, p: &MttdlParams) -> f64 {
     absorption_time_hours(&lam, &mu) / HOURS_PER_YEAR
 }
 
+/// Steady-state distribution of an ergodic birth–death chain:
+/// `lam[i]` is the rate of `i → i+1` and `mu[i]` the rate of `i+1 → i`,
+/// so the chain has `lam.len() + 1` states and detailed balance gives
+/// `π_{i+1} = π_i · λ_i / μ_i` (normalized).
+pub fn steady_state(lam: &[f64], mu: &[f64]) -> Vec<f64> {
+    assert_eq!(lam.len(), mu.len());
+    let mut pi = vec![1.0f64];
+    for i in 0..lam.len() {
+        assert!(mu[i] > 0.0, "repair rates must be positive");
+        let next = pi[i] * lam[i] / mu[i];
+        pi.push(next);
+    }
+    let total: f64 = pi.iter().sum();
+    for p in &mut pi {
+        *p /= total;
+    }
+    pi
+}
+
+/// The fault *injector's* per-stripe chain (`sim::faults`): `n` blocks on
+/// independent nodes, each failing at rate `lambda` and repairing
+/// independently at rate `mu` — so state `i` fails at `(n−i)λ` and repairs
+/// at `i·μ`. (The MTTDL chain above instead models bandwidth-limited /
+/// detection-limited repair; this one is what the injected traces realize,
+/// and is what `exp7_faults` measurements are checked against.)
+pub fn injected_chain(n: usize, lambda: f64, mu: f64) -> (Vec<f64>, Vec<f64>) {
+    assert!(n > 0 && lambda > 0.0 && mu > 0.0);
+    let lam: Vec<f64> = (0..n).map(|i| (n - i) as f64 * lambda).collect();
+    let rep: Vec<f64> = (1..=n).map(|i| i as f64 * mu).collect();
+    (lam, rep)
+}
+
+/// Long-run fraction of time ≥1 of the stripe's `n` blocks is failed
+/// under the injector's chain (`1 − π_0`; equivalently
+/// `1 − (μ/(λ+μ))^n`, since the steady state is Binomial).
+pub fn degraded_fraction(n: usize, lambda: f64, mu: f64) -> f64 {
+    let (lam, rep) = injected_chain(n, lambda, mu);
+    1.0 - steady_state(&lam, &rep)[0]
+}
+
+/// Long-run fraction of time more than `f` blocks are failed — data
+/// unavailable under the injector's independent-repair model.
+pub fn unavailable_fraction(n: usize, f: usize, lambda: f64, mu: f64) -> f64 {
+    let (lam, rep) = injected_chain(n, lambda, mu);
+    steady_state(&lam, &rep).iter().skip(f + 1).sum()
+}
+
+/// MTTDL (years) under the injector's chain: expected first time more
+/// than `f` of `n` blocks are simultaneously failed, with independent
+/// repairs at rate `i·μ` — the closed form short-trace estimates from
+/// `exp7_faults` are compared against.
+pub fn mttdl_injected_years(n: usize, f: usize, lambda: f64, mu: f64) -> f64 {
+    assert!(f >= 1 && f < n);
+    let lam: Vec<f64> = (0..=f).map(|i| (n - i) as f64 * lambda).collect();
+    let mut rep = vec![0.0f64; f + 1];
+    for (i, r) in rep.iter_mut().enumerate().skip(1) {
+        *r = i as f64 * mu;
+    }
+    absorption_time_hours(&lam, &rep) / HOURS_PER_YEAR
+}
+
 /// The paper's closed-form product approximation
 /// `MTTDL ≈ (μ·μ'^{f−1}) / Π_{i=0}^{f} λ_i` — kept for comparison.
 pub fn mttdl_years_approx(n: usize, f: usize, c: f64, p: &MttdlParams) -> f64 {
@@ -186,6 +247,42 @@ mod tests {
         // ratios in the paper's ballpark (2.02× / 1.71×)
         assert!(uni / alrc > 1.5 && uni / alrc < 3.0);
         assert!(uni / ulrc > 1.3 && uni / ulrc < 2.5);
+    }
+
+    #[test]
+    fn steady_state_is_binomial_for_independent_nodes() {
+        // n independent up/down nodes ⇒ π_i = C(n,i) p^i (1−p)^{n−i} with
+        // p = λ/(λ+μ); check the chain reproduces it exactly for n = 4.
+        let (n, lambda, mu) = (4usize, 0.3f64, 1.7f64);
+        let (lam, rep) = injected_chain(n, lambda, mu);
+        let pi = steady_state(&lam, &rep);
+        assert!((pi.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        let p = lambda / (lambda + mu);
+        let binom = [1.0, 4.0, 6.0, 4.0, 1.0];
+        for (i, &c) in binom.iter().enumerate() {
+            let expect = c * p.powi(i as i32) * (1.0 - p).powi((n - i) as i32);
+            assert!((pi[i] - expect).abs() < 1e-12, "state {i}: {} vs {expect}", pi[i]);
+        }
+        let degraded = degraded_fraction(n, lambda, mu);
+        assert!((degraded - (1.0 - (1.0 - p).powi(4))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unavailable_fraction_monotone_in_tolerance() {
+        let (n, lambda, mu) = (42usize, 1.0 / 1000.0, 1.0 / 10.0);
+        let u7 = unavailable_fraction(n, 7, lambda, mu);
+        let u11 = unavailable_fraction(n, 11, lambda, mu);
+        assert!(u7 > u11, "more tolerance ⇒ less unavailable time: {u7} vs {u11}");
+        assert!(u7 < degraded_fraction(n, lambda, mu));
+    }
+
+    #[test]
+    fn mttdl_injected_grows_with_repair_rate_and_tolerance() {
+        let slow = mttdl_injected_years(42, 7, 1.0 / 1000.0, 1.0 / 100.0);
+        let fast = mttdl_injected_years(42, 7, 1.0 / 1000.0, 1.0 / 10.0);
+        assert!(fast > slow * 100.0);
+        let wide = mttdl_injected_years(42, 11, 1.0 / 1000.0, 1.0 / 10.0);
+        assert!(wide > fast * 100.0);
     }
 
     #[test]

@@ -52,11 +52,11 @@ unilrc — Wide LRCs with Unified Locality (paper reproduction)
 USAGE:
   unilrc layout  [--scheme 42|136|210]
   unilrc analyze [--fig3b] [--fig5] [--fig8] [--table2] [--table4] [--all]
-  unilrc experiment <1..6> [--config FILE] [--scheme S] [--block-kb N]
+  unilrc experiment <1..7> [--config FILE] [--scheme S] [--block-kb N]
                     [--stripes N] [--cross-gbps X] [--backend native|pjrt] [--raw]
                     [--gf-kernel auto|scalar|ssse3|avx2|avx512|gfni|neon]
                     [--gf-threads N] [--gf-chunk-kb N]
-                    [--plan-ttl-ms N] [--cache-stats]
+                    [--plan-ttl-ms N] [--plan-warmup] [--cache-stats]
   unilrc engine [--check TIER]        show GF engine tiers + pool + plan cache
                                       (--check exits non-zero if TIER cannot
                                       run on this CPU — the CI matrix probe)
@@ -65,7 +65,11 @@ USAGE:
 
 Experiments (paper §6): 1 normal read · 2 degraded read (single + batched
 burst) · 3 recovery (single-block + full-node) · 4 bandwidth sweep ·
-5 decode throughput · 6 production workload.
+5 decode throughput · 6 production workload · 7 fault injection
+(deterministic seeded failure schedule; extra knobs: --horizon-hours
+--mttf-hours --mttr-hours --cluster-mttf-hours --cluster-mttr-hours
+--tenants --measure-cap; --plan-warmup prefetches decode plans for the
+trace's predicted failure patterns).
 
 The GF engine tier defaults to the best the CPU supports; override with
 --gf-kernel / --gf-threads or UNILRC_GF_KERNEL / UNILRC_GF_THREADS.
@@ -141,10 +145,60 @@ fn exp_config(flags: &HashMap<String, String>) -> anyhow::Result<ExpConfig> {
     if let Some(s) = flags.get("seed") {
         cfg.seed = s.parse()?;
     }
+    if let Some(v) = flags.get("plan-warmup") {
+        cfg.plan_warmup = v != "false";
+    }
     if flags.get("backend").map(|s| s.as_str()) == Some("pjrt") {
         cfg = cfg.with_pjrt()?;
     }
     Ok(cfg)
+}
+
+/// Experiment 7 knobs: config-file `[faults]` section first, explicit
+/// flags override.
+fn fault_sim_config(
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<experiments::FaultSimConfig> {
+    let mut fc = experiments::FaultSimConfig::default();
+    if let Some(path) = flags.get("config") {
+        let file = crate::config::Config::load(path)?;
+        crate::config::apply_fault_keys(&file, &mut fc);
+    }
+    if let Some(v) = flags.get("horizon-hours") {
+        fc.fault.horizon_hours = v.parse()?;
+    }
+    if let Some(v) = flags.get("mttf-hours") {
+        fc.fault.node_mttf_hours = v.parse()?;
+    }
+    if let Some(v) = flags.get("mttr-hours") {
+        fc.fault.node_mttr_hours = v.parse()?;
+    }
+    if let Some(v) = flags.get("cluster-mttf-hours") {
+        fc.fault.cluster_mttf_hours = v.parse()?;
+    }
+    if let Some(v) = flags.get("cluster-mttr-hours") {
+        fc.fault.cluster_mttr_hours = v.parse()?;
+    }
+    if let Some(v) = flags.get("tenants") {
+        fc.tenants = v.parse()?;
+    }
+    if let Some(v) = flags.get("measure-cap") {
+        fc.measure_cap = v.parse()?;
+    }
+    anyhow::ensure!(fc.tenants > 0, "--tenants must be at least 1");
+    anyhow::ensure!(fc.objects_per_tenant > 0, "objects_per_tenant must be at least 1");
+    anyhow::ensure!(fc.fault.horizon_hours > 0.0, "--horizon-hours must be positive");
+    // a zero MTTF deliberately disables an event class; a zero/negative
+    // MTTR with failures enabled would silently disable them too — reject
+    anyhow::ensure!(
+        fc.fault.node_mttf_hours <= 0.0 || fc.fault.node_mttr_hours > 0.0,
+        "--mttr-hours must be positive while node failures are enabled (--mttf-hours > 0)"
+    );
+    anyhow::ensure!(
+        fc.fault.cluster_mttf_hours <= 0.0 || fc.fault.cluster_mttr_hours > 0.0,
+        "--cluster-mttr-hours must be positive while cluster events are enabled"
+    );
+    Ok(fc)
 }
 
 /// `unilrc engine` — report detected and available GF kernel tiers, the
@@ -188,6 +242,10 @@ fn print_plan_cache_stats() {
             Some(t) => format!("{}ms", t.as_millis()),
             None => "off".to_string(),
         }
+    );
+    println!(
+        "warm-up: prefetched {} plans, {} demand hits served warm (--plan-warmup)",
+        stats.prefetched, stats.prefetch_hits
     );
     if !stats.top.is_empty() {
         println!("hottest entries:");
@@ -317,13 +375,6 @@ fn fig3b() {
     println!();
 }
 
-/// OLRC's failure tolerance (its d is larger than f+1; Theorem 2.3 bound).
-fn olrc_f(scheme: Scheme) -> usize {
-    let code = scheme.build(CodeFamily::Olrc);
-    let r = code.repair_plan(0).sources.len();
-    code.n() - code.k() - code.k().div_ceil(r) + 2 - 1
-}
-
 fn table4() {
     println!("=== Table 4 — MTTDL (years, exact absorption time; see EXPERIMENTS.md on scale) ===");
     let params = MttdlParams::default();
@@ -331,10 +382,7 @@ fn table4() {
     for scheme in Scheme::paper_schemes() {
         let mut vals = HashMap::new();
         for (fam, m) in metric_rows(scheme) {
-            let f_tol = match fam {
-                CodeFamily::Olrc => olrc_f(scheme),
-                _ => scheme.f,
-            };
+            let f_tol = experiments::family_tolerance(scheme, fam);
             let code = scheme.build(fam);
             vals.insert(fam, mttdl_years(code.n(), f_tol, m.mttdl_c.max(0.05), &params));
         }
@@ -412,7 +460,50 @@ fn cmd_experiment(which: Option<&str>, flags: &HashMap<String, String>) -> anyho
                 }
             }
         }
-        _ => anyhow::bail!("experiment must be 1..6"),
+        Some("7") => {
+            let fc = fault_sim_config(flags)?;
+            let rows = experiments::exp7_faults(&cfg, &fc)?;
+            println!(
+                "=== Experiment 7 — fault injection [{}] (seed {}, horizon {:.0} h, \
+                 warm-up {}) ===",
+                cfg.scheme.label(),
+                cfg.seed,
+                fc.fault.horizon_hours,
+                if cfg.plan_warmup { "on" } else { "off" }
+            );
+            for r in &rows {
+                println!("  {:<8} trace digest {:016x}", r.family.name(), r.digest);
+                println!(
+                    "    events {} (node-fail {}, cluster-fail {})   data-loss stripes {}",
+                    r.events, r.node_failures, r.cluster_failures, r.data_loss_stripe_events
+                );
+                println!(
+                    "    repairs {:>4} events / {:>5} blocks   mean {:>9.2} ms   \
+                     cross {:>8.1} MiB",
+                    r.repair_events,
+                    r.repaired_blocks,
+                    r.mean_repair_ms,
+                    r.cross_bytes as f64 / (1 << 20) as f64
+                );
+                println!(
+                    "    degraded reads {:>3}   mean {:>9.2} ms   prefetched plans {}",
+                    r.degraded_reads, r.mean_degraded_ms, r.prefetched_plans
+                );
+                println!(
+                    "    degraded {:>8.1} h   unavailable {:>8.3} h   \
+                     stripe-0 degraded {:.4} (markov {:.4})",
+                    r.degraded_hours,
+                    r.unavailable_hours,
+                    r.sim_degraded_frac,
+                    r.markov_degraded_frac
+                );
+                println!(
+                    "    MTTDL est {:>10.3e} y   markov {:>10.3e} y",
+                    r.mttdl_est_years, r.mttdl_markov_years
+                );
+            }
+        }
+        _ => anyhow::bail!("experiment must be 1..7"),
     }
     if flags.contains_key("cache-stats") {
         print_plan_cache_stats();
@@ -490,6 +581,47 @@ mod tests {
             let f = parse_flags(&["--check".into(), k.name().into()]);
             assert!(cmd_engine(&f).is_err(), "{k} should probe unavailable");
         }
+    }
+
+    #[test]
+    fn fault_flags_parse_and_override_defaults() {
+        let f = parse_flags(&[
+            "--horizon-hours".into(),
+            "500".into(),
+            "--mttf-hours".into(),
+            "50".into(),
+            "--cluster-mttf-hours".into(),
+            "0".into(),
+            "--tenants".into(),
+            "2".into(),
+            "--measure-cap".into(),
+            "4".into(),
+        ]);
+        let fc = fault_sim_config(&f).unwrap();
+        assert_eq!(fc.fault.horizon_hours, 500.0);
+        assert_eq!(fc.fault.node_mttf_hours, 50.0);
+        assert_eq!(fc.fault.cluster_mttf_hours, 0.0);
+        assert_eq!(fc.tenants, 2);
+        assert_eq!(fc.measure_cap, 4);
+        // unset knobs keep their defaults
+        let d = experiments::FaultSimConfig::default();
+        assert_eq!(fc.fault.node_mttr_hours, d.fault.node_mttr_hours);
+        // degenerate knobs are rejected, not panicked on deep in the sim
+        assert!(fault_sim_config(&parse_flags(&["--tenants".into(), "0".into()])).is_err());
+        assert!(fault_sim_config(&parse_flags(&["--horizon-hours".into(), "0".into()])).is_err());
+        assert!(fault_sim_config(&parse_flags(&["--mttr-hours".into(), "0".into()])).is_err());
+        // ...but a zero MTTF legitimately disables the class, MTTR moot
+        let off =
+            parse_flags(&["--mttf-hours".into(), "0".into(), "--mttr-hours".into(), "0".into()]);
+        assert!(fault_sim_config(&off).is_ok());
+    }
+
+    #[test]
+    fn plan_warmup_flag_parses() {
+        let cfg = exp_config(&parse_flags(&["--plan-warmup".into()])).unwrap();
+        assert!(cfg.plan_warmup);
+        let off = exp_config(&HashMap::new()).unwrap();
+        assert!(!off.plan_warmup);
     }
 
     #[test]

@@ -26,6 +26,24 @@ impl Default for WorkloadSpec {
 }
 
 impl WorkloadSpec {
+    /// Small-file-heavy tenant (metadata / config object stores).
+    pub fn small_files() -> WorkloadSpec {
+        WorkloadSpec { mix: [(1, 0.95), (8, 0.04), (32, 0.01)] }
+    }
+
+    /// Scan-heavy tenant (analytics backfill: mostly large objects).
+    pub fn scan_heavy() -> WorkloadSpec {
+        WorkloadSpec { mix: [(1, 0.40), (32, 0.35), (64, 0.25)] }
+    }
+
+    /// The canonical multi-tenant mix cycle used by the fault-injection
+    /// scenarios: the EC-Cache production mix plus a small-file tenant and
+    /// a scan-heavy tenant, so one failure burst hits requests of very
+    /// different fan-out widths at once.
+    pub fn tenant_mixes() -> [WorkloadSpec; 3] {
+        [WorkloadSpec::default(), WorkloadSpec::small_files(), WorkloadSpec::scan_heavy()]
+    }
+
     /// Draw an object size (in blocks).
     pub fn draw(&self, prng: &mut Prng) -> usize {
         let x = prng.gen_f64();
@@ -99,6 +117,60 @@ impl Workload {
         Workload { objects }
     }
 
+    /// Place `tenants` co-resident workloads over the DSS's stripes, each
+    /// drawing from its own [`WorkloadSpec::tenant_mixes`] entry, packing
+    /// block ranges back to back so tenants share stripes (and therefore
+    /// failure domains) the way a multi-tenant cluster does. Tenants that
+    /// no longer fit get fewer (possibly zero) objects instead of
+    /// panicking — capacity is a config knob in the fault scenarios.
+    pub fn place_tenants(
+        dss: &Dss,
+        tenants: usize,
+        objects_per_tenant: usize,
+        prng: &mut Prng,
+    ) -> Vec<Workload> {
+        assert!(tenants > 0);
+        let k = dss.code.k();
+        let capacity = dss.metadata().stripe_count() * k;
+        let mixes = WorkloadSpec::tenant_mixes();
+        let mut cursor = 0usize;
+        let mut out = Vec::with_capacity(tenants);
+        for t in 0..tenants {
+            let spec = mixes[t % mixes.len()];
+            let mut objects = Vec::new();
+            for _ in 0..objects_per_tenant {
+                // truncate to the remaining capacity so small test systems
+                // still host every tenant (a 64-block object on a 30-block
+                // system becomes a 30-block object, not a panic)
+                let size = spec.draw(prng).min(capacity - cursor);
+                if size == 0 {
+                    break;
+                }
+                let blocks: Vec<(StripeId, usize)> =
+                    (cursor..cursor + size).map(|i| (i / k, i % k)).collect();
+                cursor += size;
+                objects.push(blocks);
+            }
+            out.push(Workload { objects });
+        }
+        assert!(
+            out.iter().any(|w| !w.objects.is_empty()),
+            "no capacity for even one object across {tenants} tenants"
+        );
+        out
+    }
+
+    /// Objects with at least one block hosted on `node` — the requests a
+    /// failure of that node degrades.
+    pub fn objects_touching(&self, dss: &Dss, node: usize) -> Vec<ObjectId> {
+        self.objects
+            .iter()
+            .enumerate()
+            .filter(|(_, blocks)| blocks.iter().any(|&(s, b)| dss.metadata().node_of(s, b) == node))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
     /// Total data blocks across all objects.
     pub fn total_blocks(&self) -> usize {
         self.objects.iter().map(|o| o.len()).sum()
@@ -127,6 +199,46 @@ impl Workload {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tenant_mixes_partition_capacity_deterministically() {
+        use crate::codes::spec::{CodeFamily, Scheme};
+        use crate::coordinator::{Dss, DssConfig};
+        use crate::placement::{Topology, UniLrcPlace};
+        use crate::runtime::NativeCoder;
+        use crate::sim::NetConfig;
+        use std::sync::Arc;
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        let mut dss = Dss::new(
+            code,
+            &UniLrcPlace,
+            Topology::new(6, 9),
+            NetConfig::default(),
+            Arc::new(NativeCoder),
+            DssConfig { block_size: 1024, aggregated: true, time_compute: false },
+        );
+        let mut p = Prng::new(3);
+        dss.ingest_random_stripes(3, &mut p).unwrap();
+        let a = Workload::place_tenants(&dss, 3, 6, &mut Prng::new(9));
+        let b = Workload::place_tenants(&dss, 3, 6, &mut Prng::new(9));
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.objects, y.objects, "same seed ⇒ same tenant placement");
+        }
+        // block ranges are disjoint across tenants and objects
+        let mut seen = std::collections::HashSet::new();
+        for wl in &a {
+            for o in &wl.objects {
+                for &blk in o {
+                    assert!(seen.insert(blk), "block {blk:?} double-assigned");
+                }
+            }
+        }
+        // objects_touching finds the owner of a known block
+        let (s0, b0) = a[0].objects[0][0];
+        let node = dss.metadata().node_of(s0, b0);
+        assert!(a[0].objects_touching(&dss, node).contains(&0));
+    }
 
     #[test]
     fn mix_draw_distribution() {

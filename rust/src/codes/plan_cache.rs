@@ -1,5 +1,5 @@
-//! LRU cache of decode plans, with per-entry hit accounting and an
-//! optional TTL.
+//! LRU cache of decode plans, with per-entry hit accounting, an optional
+//! TTL, and a warm-up prefetch path for predicted failure patterns.
 //!
 //! Building a [`DecodePlan`] runs a rank test and a Gauss–Jordan solve over
 //! the parity-check matrix — O((n−k)·n·|E|) field ops. Repairs repeat the
@@ -16,6 +16,14 @@
 //! env `UNILRC_PLAN_TTL_MS`, config `[experiment] plan_ttl_ms`) expires
 //! stale entries on lookup — long-running deployments whose failure
 //! patterns drift don't pin dead plans in the LRU working set.
+//!
+//! [`PlanCache::prefetch`] warms the cache with *predicted* erasure
+//! patterns (the distinct per-stripe patterns a fault trace will produce —
+//! `experiments::exp7_faults` with `--plan-warmup`) so the first failure
+//! burst of a multi-tenant sim pays no inversion latency. Prefetched
+//! entries are tracked separately from demand misses in [`CacheStats`]
+//! (`prefetched` / `prefetch_hits`), and repairs are byte-identical warm
+//! or cold — only where the inversion cost lands changes.
 //!
 //! Azure-LRC-style deployments do the same plan reuse; `tests/plan_cache.rs`
 //! asserts cached plans are identical to freshly computed ones and that
@@ -84,6 +92,8 @@ struct Entry {
     /// Lookups served by this entry since insertion.
     hits: u64,
     created: Instant,
+    /// Inserted by [`PlanCache::prefetch`] rather than a demand miss.
+    prefetched: bool,
     /// `None` caches "pattern is unrecoverable".
     val: Option<Arc<CachedPlan>>,
 }
@@ -103,6 +113,8 @@ pub struct EntryStats {
     pub hits: u64,
     pub age: Duration,
     pub recoverable: bool,
+    /// Inserted by warm-up prefetch rather than a demand miss.
+    pub prefetched: bool,
 }
 
 /// Aggregate cache statistics.
@@ -111,6 +123,11 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub expirations: u64,
+    /// Plans inserted by [`PlanCache::prefetch`] (counted separately from
+    /// demand `misses` — warm-up work is not demand-path latency).
+    pub prefetched: u64,
+    /// Demand lookups served by a prefetched entry (subset of `hits`).
+    pub prefetch_hits: u64,
     pub entries: usize,
     pub cap: usize,
     pub ttl: Option<Duration>,
@@ -126,6 +143,8 @@ pub struct PlanCache {
     hits: AtomicU64,
     misses: AtomicU64,
     expirations: AtomicU64,
+    prefetched: AtomicU64,
+    prefetch_hits: AtomicU64,
 }
 
 impl PlanCache {
@@ -136,6 +155,8 @@ impl PlanCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             expirations: AtomicU64::new(0),
+            prefetched: AtomicU64::new(0),
+            prefetch_hits: AtomicU64::new(0),
         }
     }
 
@@ -170,6 +191,9 @@ impl PlanCache {
                         e.stamp = tick;
                         e.hits += 1;
                         self.hits.fetch_add(1, Ordering::Relaxed);
+                        if e.prefetched {
+                            self.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                        }
                         return e.val.clone();
                     }
                 }
@@ -186,20 +210,67 @@ impl PlanCache {
         inner.tick += 1;
         let tick = inner.tick;
         // A racing compute may have inserted meanwhile; keep the first.
-        let entry = inner
-            .map
-            .entry(key)
-            .or_insert(Entry { stamp: tick, hits: 0, created: Instant::now(), val });
+        let fresh = Entry { stamp: tick, hits: 0, created: Instant::now(), prefetched: false, val };
+        let entry = inner.map.entry(key).or_insert(fresh);
         entry.stamp = tick;
         let out = entry.val.clone();
-        if inner.map.len() > self.cap {
-            if let Some(oldest) =
-                inner.map.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| k.clone())
-            {
-                inner.map.remove(&oldest);
-            }
-        }
+        Self::evict_to_cap(&mut inner, self.cap);
         out
+    }
+
+    /// Warm the cache with predicted erasure `patterns` for `code` ahead of
+    /// demand (failure-trace warm-up, `--plan-warmup`). Patterns already
+    /// resident are left untouched; newly built plans are tagged so
+    /// [`CacheStats`] separates warm-up work (`prefetched`) from demand
+    /// `misses`, and later demand hits on them count as `prefetch_hits`.
+    /// Unrecoverable patterns are cached as `None`, exactly like the demand
+    /// path. Returns the number of entries inserted.
+    pub fn prefetch(&self, code: &Code, patterns: &[Vec<usize>]) -> usize {
+        let mut inserted = 0usize;
+        for pat in patterns {
+            let mut pattern = pat.clone();
+            pattern.sort_unstable();
+            pattern.dedup();
+            let key: Key = (code.name().to_string(), pattern.clone());
+            {
+                // TTL-expired residents count as absent (like the demand
+                // path), so warm-up re-builds them instead of leaving the
+                // first post-expiry burst cold.
+                let mut inner = self.inner.lock().unwrap();
+                let ttl = inner.ttl;
+                match inner.map.get(&key) {
+                    Some(e) if ttl.is_some_and(|t| e.created.elapsed() > t) => {
+                        inner.map.remove(&key);
+                        self.expirations.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Some(_) => continue,
+                    None => {}
+                }
+            }
+            // Plan construction runs outside the lock, like the demand path.
+            let val = decoder::plan(code, &pattern).map(|p| Arc::new(CachedPlan::new(p)));
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            let fresh =
+                Entry { stamp: tick, hits: 0, created: Instant::now(), prefetched: true, val };
+            if let std::collections::btree_map::Entry::Vacant(slot) = inner.map.entry(key) {
+                slot.insert(fresh);
+                inserted += 1;
+                self.prefetched.fetch_add(1, Ordering::Relaxed);
+            }
+            Self::evict_to_cap(&mut inner, self.cap);
+        }
+        inserted
+    }
+
+    fn evict_to_cap(inner: &mut Inner, cap: usize) {
+        while inner.map.len() > cap {
+            match inner.map.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| k.clone()) {
+                Some(oldest) => inner.map.remove(&oldest),
+                None => break,
+            };
+        }
     }
 
     pub fn hits(&self) -> u64 {
@@ -213,6 +284,16 @@ impl PlanCache {
     /// Entries dropped because they outlived the TTL.
     pub fn expirations(&self) -> u64 {
         self.expirations.load(Ordering::Relaxed)
+    }
+
+    /// Plans inserted by [`Self::prefetch`].
+    pub fn prefetched(&self) -> u64 {
+        self.prefetched.load(Ordering::Relaxed)
+    }
+
+    /// Demand lookups served by a prefetched entry.
+    pub fn prefetch_hits(&self) -> u64 {
+        self.prefetch_hits.load(Ordering::Relaxed)
     }
 
     pub fn len(&self) -> usize {
@@ -236,6 +317,7 @@ impl PlanCache {
                 hits: e.hits,
                 age: e.created.elapsed(),
                 recoverable: e.val.is_some(),
+                prefetched: e.prefetched,
             })
             .collect();
         top.sort_by(|a, b| b.hits.cmp(&a.hits));
@@ -244,6 +326,8 @@ impl PlanCache {
             hits: self.hits(),
             misses: self.misses(),
             expirations: self.expirations(),
+            prefetched: self.prefetched(),
+            prefetch_hits: self.prefetch_hits(),
             entries: inner.map.len(),
             cap: self.cap,
             ttl: inner.ttl,
@@ -365,6 +449,62 @@ mod tests {
         cache.get_or_compute(&code, &[0]);
         assert_eq!(cache.hits(), 1);
         assert_eq!(cache.ttl(), None);
+    }
+
+    #[test]
+    fn prefetch_counts_separately_from_demand_misses() {
+        let cache = PlanCache::new(16);
+        let code = Rs::new(10, 6);
+        let inserted = cache.prefetch(&code, &[vec![0, 1], vec![2], vec![1, 0]]);
+        assert_eq!(inserted, 2, "duplicate normalized pattern inserted once");
+        assert_eq!(cache.prefetched(), 2);
+        assert_eq!((cache.hits(), cache.misses()), (0, 0), "warm-up is not demand traffic");
+        // demand lookup of a prefetched pattern: a hit, tagged prefetch_hit
+        let warm = cache.get_or_compute(&code, &[1, 0]).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 0));
+        assert_eq!(cache.prefetch_hits(), 1);
+        // demand miss on an unseen pattern stays a plain miss
+        cache.get_or_compute(&code, &[5]).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.prefetch_hits(), 1);
+        // prefetching an already-resident pattern is a no-op
+        assert_eq!(cache.prefetch(&code, &[vec![5]]), 0);
+        assert_eq!(cache.prefetched(), 2);
+        // the warm plan is exactly what a fresh inversion produces
+        let fresh = decoder::plan(&code, &[0, 1]).unwrap();
+        assert_eq!(warm.plan, fresh);
+        let stats = cache.stats(8);
+        assert_eq!(stats.prefetched, 2);
+        assert_eq!(stats.prefetch_hits, 1);
+        assert!(stats.top.iter().any(|e| e.prefetched));
+    }
+
+    #[test]
+    fn prefetch_caches_unrecoverable_and_respects_cap() {
+        let cache = PlanCache::new(3);
+        let code = Rs::new(10, 6);
+        let inserted = cache.prefetch(&code, &[vec![0, 1, 2, 3, 4]]);
+        assert_eq!(inserted, 1);
+        assert!(cache.get_or_compute(&code, &[0, 1, 2, 3, 4]).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (1, 0), "unrecoverable served from warm-up");
+        let many: Vec<Vec<usize>> = (0..8).map(|b| vec![b]).collect();
+        cache.prefetch(&code, &many);
+        assert!(cache.len() <= 3, "prefetch respects the LRU cap");
+    }
+
+    #[test]
+    fn prefetch_rebuilds_ttl_expired_entries() {
+        let cache = PlanCache::new(16);
+        let code = Rs::new(10, 6);
+        cache.set_ttl(Some(Duration::ZERO));
+        assert_eq!(cache.prefetch(&code, &[vec![0, 1]]), 1);
+        std::thread::sleep(Duration::from_millis(2));
+        // an expired resident counts as absent: rebuilt, not skipped
+        assert_eq!(cache.prefetch(&code, &[vec![0, 1]]), 1);
+        assert_eq!(cache.expirations(), 1);
+        assert_eq!(cache.prefetched(), 2);
+        cache.set_ttl(None);
+        assert_eq!(cache.prefetch(&code, &[vec![0, 1]]), 0, "live residents are skipped");
     }
 
     #[test]

@@ -204,7 +204,9 @@ pub fn apply_plan_ttl(ms: u64) {
 /// `cross_gbps`, `aggregated`, `backend`, `seed`, the GF engine knobs
 /// `gf_kernel` (auto|scalar|ssse3|avx2|avx512|gfni|neon) / `gf_threads`
 /// (worker-pool size) / `gf_chunk_kb` (batch task granularity; 0 =
-/// adaptive), and `plan_ttl_ms` (decode-plan cache TTL; 0 disables expiry).
+/// adaptive), `plan_ttl_ms` (decode-plan cache TTL; 0 disables expiry),
+/// and `plan_warmup` (prefetch decode plans for the fault trace's
+/// predicted failure patterns — experiment 7).
 pub fn experiment_config(cfg: &Config) -> Result<crate::experiments::ExpConfig> {
     use crate::codes::spec::Scheme;
     let mut e = crate::experiments::ExpConfig::default();
@@ -235,10 +237,48 @@ pub fn experiment_config(cfg: &Config) -> Result<crate::experiments::ExpConfig> 
     if let Some(s) = cfg.get_usize("experiment", "seed") {
         e.seed = s as u64;
     }
+    if let Some(w) = cfg.get_bool("experiment", "plan_warmup") {
+        e.plan_warmup = w;
+    }
     if cfg.get_str("experiment", "backend") == Some("pjrt") {
         e = e.with_pjrt()?;
     }
     Ok(e)
+}
+
+/// Apply the `[faults]` section onto an experiment-7 config: recognized
+/// keys `horizon_hours`, `node_mttf_hours`, `node_mttr_hours`,
+/// `cluster_mttf_hours`, `cluster_mttr_hours` (hours; a zero MTTF
+/// disables that event class), `tenants`, `objects_per_tenant`,
+/// `reads_per_event`, `measure_cap`. Explicit CLI flags override these.
+pub fn apply_fault_keys(cfg: &Config, f: &mut crate::experiments::FaultSimConfig) {
+    if let Some(v) = cfg.get_f64("faults", "horizon_hours") {
+        f.fault.horizon_hours = v;
+    }
+    if let Some(v) = cfg.get_f64("faults", "node_mttf_hours") {
+        f.fault.node_mttf_hours = v;
+    }
+    if let Some(v) = cfg.get_f64("faults", "node_mttr_hours") {
+        f.fault.node_mttr_hours = v;
+    }
+    if let Some(v) = cfg.get_f64("faults", "cluster_mttf_hours") {
+        f.fault.cluster_mttf_hours = v;
+    }
+    if let Some(v) = cfg.get_f64("faults", "cluster_mttr_hours") {
+        f.fault.cluster_mttr_hours = v;
+    }
+    if let Some(v) = cfg.get_usize("faults", "tenants") {
+        f.tenants = v;
+    }
+    if let Some(v) = cfg.get_usize("faults", "objects_per_tenant") {
+        f.objects_per_tenant = v;
+    }
+    if let Some(v) = cfg.get_usize("faults", "reads_per_event") {
+        f.reads_per_event = v;
+    }
+    if let Some(v) = cfg.get_usize("faults", "measure_cap") {
+        f.measure_cap = v;
+    }
 }
 
 #[cfg(test)]
@@ -309,6 +349,33 @@ epsilon = 0.1
         let off = Config::parse("[experiment]\nplan_ttl_ms = 0").unwrap();
         assert!(experiment_config(&off).is_ok());
         crate::codes::plan_cache::global().set_ttl(None); // leave global state clean
+    }
+
+    #[test]
+    fn plan_warmup_key_accepted() {
+        let on = Config::parse("[experiment]\nplan_warmup = true").unwrap();
+        assert!(experiment_config(&on).unwrap().plan_warmup);
+        let off = Config::parse("[experiment]\nplan_warmup = false").unwrap();
+        assert!(!experiment_config(&off).unwrap().plan_warmup);
+    }
+
+    #[test]
+    fn faults_section_applies_over_defaults() {
+        let c = Config::parse(
+            "[faults]\nhorizon_hours = 500.0\nnode_mttf_hours = 50\n\
+             cluster_mttf_hours = 0\ntenants = 2\nmeasure_cap = 4",
+        )
+        .unwrap();
+        let mut f = crate::experiments::FaultSimConfig::default();
+        let defaults = crate::experiments::FaultSimConfig::default();
+        apply_fault_keys(&c, &mut f);
+        assert_eq!(f.fault.horizon_hours, 500.0);
+        assert_eq!(f.fault.node_mttf_hours, 50.0);
+        assert_eq!(f.fault.cluster_mttf_hours, 0.0);
+        assert_eq!(f.tenants, 2);
+        assert_eq!(f.measure_cap, 4);
+        assert_eq!(f.fault.node_mttr_hours, defaults.fault.node_mttr_hours);
+        assert_eq!(f.reads_per_event, defaults.reads_per_event);
     }
 
     #[test]

@@ -172,6 +172,41 @@ impl Dss {
         (0..self.code.n()).filter(|&b| self.is_failed(stripe, b)).collect()
     }
 
+    /// Availability snapshot under the current failure set:
+    /// `(degraded, unavailable)` — degraded when any stripe has ≥ 1 failed
+    /// block, unavailable when some stripe's erasure pattern is
+    /// unrecoverable (a data-unavailability window in the fault scenarios).
+    /// Recoverability goes through the decode-plan cache, so sweeping the
+    /// same failure state between events is a map hit, not a rank test.
+    pub fn availability(&self) -> (bool, bool) {
+        let mut degraded = false;
+        for s in 0..self.meta.stripe_count() {
+            let failed = self.failed_blocks(s);
+            if failed.is_empty() {
+                continue;
+            }
+            degraded = true;
+            if self.code.decode_plan_cached(&failed).is_none() {
+                return (true, true);
+            }
+        }
+        (degraded, false)
+    }
+
+    /// True when `stripe`'s current erasure pattern is recoverable.
+    pub fn stripe_recoverable(&self, stripe: StripeId) -> bool {
+        let failed = self.failed_blocks(stripe);
+        failed.is_empty() || self.code.decode_plan_cached(&failed).is_some()
+    }
+
+    /// Warm the global decode-plan cache with predicted erasure patterns
+    /// (fault-trace warm-up, `--plan-warmup`): the first failure burst then
+    /// pays map hits instead of rank tests + inversions. Returns the
+    /// number of plans inserted ([`crate::codes::PlanCache::prefetch`]).
+    pub fn prefetch_plans(&mut self, patterns: &[Vec<usize>]) -> usize {
+        self.proxy_ctx().warm_plans(patterns)
+    }
+
     fn proxy_ctx(&mut self) -> ProxyCtx<'_> {
         ProxyCtx {
             code: &self.code,
@@ -372,8 +407,30 @@ impl Dss {
     /// at a task granularity adapted to the event size
     /// (`GfEngine::batch_chunk`, knob `--gf-chunk-kb`).
     pub fn recover_node(&mut self, node: usize) -> anyhow::Result<RecoveryResult> {
-        anyhow::ensure!(self.failed.contains(&node), "node {node} is not failed");
-        let lost = self.meta.blocks_on_node(node);
+        self.recover_nodes(&[node])
+    }
+
+    /// Recover several failed nodes as **one** batched repair event (the
+    /// correlated-burst shape of the fault scenarios: a whole-cluster
+    /// repair lands many replacement nodes at the same instant). Every
+    /// lost block across all nodes goes through a single
+    /// [`ProxyCtx::repair_node`] submission, so the engine's batched
+    /// pipeline sizes its task granularity to the entire burst.
+    pub fn recover_nodes(&mut self, nodes: &[usize]) -> anyhow::Result<RecoveryResult> {
+        let mut lost: Vec<(StripeId, usize)> = Vec::new();
+        for &node in nodes {
+            anyhow::ensure!(self.failed.contains(&node), "node {node} is not failed");
+            lost.extend(self.meta.blocks_on_node(node));
+        }
+        lost.sort_unstable();
+        self.recover_blocks(&lost)
+    }
+
+    /// Rebuild an arbitrary set of lost blocks as one batched repair event
+    /// and write each onto a live spare node. Callers pass blocks whose
+    /// stripes are currently recoverable (the fault-scenario runner skips —
+    /// and counts — stripes that are not; see [`Self::stripe_recoverable`]).
+    pub fn recover_blocks(&mut self, lost: &[(StripeId, usize)]) -> anyhow::Result<RecoveryResult> {
         let t0 = self.clock;
         let cross0 = self.net.cross_bytes;
         let bs = self.cfg.block_size;

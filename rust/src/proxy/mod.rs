@@ -207,6 +207,15 @@ impl ProxyCtx<'_> {
         Ok(out)
     }
 
+    /// Pre-build decode plans for predicted erasure `patterns` on this
+    /// proxy's code ([`crate::codes::PlanCache::prefetch`]): the first
+    /// failure burst that realizes a predicted pattern then skips the rank
+    /// test + inversion entirely. Repairs are byte-identical warm or cold —
+    /// only where the cold-start cost lands moves. Returns plans inserted.
+    pub fn warm_plans(&self, patterns: &[Vec<usize>]) -> usize {
+        crate::codes::plan_cache::global().prefetch(self.code, patterns)
+    }
+
     /// (sources, coefficients) reconstructing `block` with every member of
     /// `erased` unavailable.
     fn plan_for(&self, block: usize, erased: &[usize]) -> Result<(Vec<usize>, Vec<u8>)> {

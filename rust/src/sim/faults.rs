@@ -1,0 +1,532 @@
+//! Deterministic fault injection — the event generator behind
+//! `experiments::exp7_faults` (§6 "frequent system events" and the Table 4
+//! reliability claims, exercised on the *running* prototype instead of only
+//! the closed-form Markov model in [`crate::analysis::markov`]).
+//!
+//! The model is the one the MTTDL analysis assumes, made executable:
+//!
+//! * every node alternates up/down with independent exponential clocks —
+//!   `Exp(1/MTTF)` until the next failure, `Exp(1/MTTR)` until the
+//!   replacement is back — seeded per node so the whole trace is a pure
+//!   function of `(topology, config, seed)`;
+//! * every cluster additionally carries a *correlated* failure clock
+//!   (rack power / ToR switch events): a cluster failure takes all of its
+//!   nodes down at once, and its repair brings back exactly the nodes it
+//!   took (node-level clocks keep ticking independently — a node can stay
+//!   down after its cluster heals, or fail again on its own).
+//!
+//! Traces are replayable: [`FaultTrace::to_text`] / [`FaultTrace::parse`]
+//! round-trip bit-exact event times (hex `f64` bits), and
+//! [`FaultTrace::digest`] is a stable FNV-1a fingerprint used by tests and
+//! `exp7_faults` to assert *same seed ⇒ identical trace* across runs and
+//! worker-thread counts.
+
+use crate::placement::Topology;
+use crate::prng::Prng;
+
+/// Fault-model parameters (hours on the virtual clock). A rate of `0.0`
+/// disables that event class entirely.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultConfig {
+    /// Mean time to failure of a single node (paper §6: 4 years).
+    pub node_mttf_hours: f64,
+    /// Mean time until a failed node's replacement is serviceable.
+    pub node_mttr_hours: f64,
+    /// Mean time between correlated whole-cluster events (0 = off).
+    pub cluster_mttf_hours: f64,
+    /// Mean duration of a whole-cluster outage.
+    pub cluster_mttr_hours: f64,
+    /// Trace length (hours).
+    pub horizon_hours: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        // §6 Setup: 1/λ = 4 years; repairs land within a day; cluster-wide
+        // events are rare (decade scale) and short (half a shift).
+        FaultConfig {
+            node_mttf_hours: 4.0 * 24.0 * 365.0,
+            node_mttr_hours: 24.0,
+            cluster_mttf_hours: 10.0 * 24.0 * 365.0,
+            cluster_mttr_hours: 12.0,
+            horizon_hours: 10.0 * 24.0 * 365.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Accelerated-aging preset for tests and benches: failures every few
+    /// hundred virtual hours, so short horizons still see correlated
+    /// bursts and multi-failure windows.
+    pub fn accelerated() -> FaultConfig {
+        FaultConfig {
+            node_mttf_hours: 400.0,
+            node_mttr_hours: 8.0,
+            cluster_mttf_hours: 2_000.0,
+            cluster_mttr_hours: 4.0,
+            horizon_hours: 2_000.0,
+        }
+    }
+}
+
+/// One injected event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A single node fails (node-level clock).
+    NodeFail(usize),
+    /// A failed node's replacement is serviceable again.
+    NodeRepair(usize),
+    /// A correlated whole-cluster outage begins.
+    ClusterFail(usize),
+    /// The cluster outage ends.
+    ClusterRepair(usize),
+}
+
+impl FaultKind {
+    /// Stable tag for digests, sort tie-breaks and the trace text format.
+    pub fn tag(&self) -> u64 {
+        match self {
+            FaultKind::NodeFail(_) => 0,
+            FaultKind::NodeRepair(_) => 1,
+            FaultKind::ClusterFail(_) => 2,
+            FaultKind::ClusterRepair(_) => 3,
+        }
+    }
+
+    /// Node or cluster index the event applies to.
+    pub fn index(&self) -> usize {
+        match self {
+            FaultKind::NodeFail(i)
+            | FaultKind::NodeRepair(i)
+            | FaultKind::ClusterFail(i)
+            | FaultKind::ClusterRepair(i) => *i,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            FaultKind::NodeFail(_) => "node-fail",
+            FaultKind::NodeRepair(_) => "node-repair",
+            FaultKind::ClusterFail(_) => "cluster-fail",
+            FaultKind::ClusterRepair(_) => "cluster-repair",
+        }
+    }
+}
+
+/// A timestamped fault event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual hours since trace start.
+    pub at_hours: f64,
+    pub kind: FaultKind,
+}
+
+/// A generated (or parsed) failure schedule, sorted by time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultTrace {
+    pub events: Vec<FaultEvent>,
+    pub horizon_hours: f64,
+    pub nodes: usize,
+    pub clusters: usize,
+}
+
+/// Draw from `Exp(1/mean)` by inversion; `1 − u ∈ (0, 1]` keeps the log
+/// finite for every PRNG output.
+fn exp_sample(prng: &mut Prng, mean: f64) -> f64 {
+    -mean * (1.0 - prng.gen_f64()).ln()
+}
+
+/// Alternate fail/repair draws for one node- or cluster-level stream
+/// until the horizon, appending to `events`.
+fn renewal(
+    prng: &mut Prng,
+    mttf: f64,
+    mttr: f64,
+    horizon: f64,
+    idx: usize,
+    node_level: bool,
+    events: &mut Vec<FaultEvent>,
+) {
+    let mut t = 0.0f64;
+    loop {
+        t += exp_sample(prng, mttf);
+        if t >= horizon {
+            return;
+        }
+        let kind = if node_level {
+            FaultKind::NodeFail(idx)
+        } else {
+            FaultKind::ClusterFail(idx)
+        };
+        events.push(FaultEvent { at_hours: t, kind });
+        t += exp_sample(prng, mttr);
+        if t >= horizon {
+            return;
+        }
+        let kind = if node_level {
+            FaultKind::NodeRepair(idx)
+        } else {
+            FaultKind::ClusterRepair(idx)
+        };
+        events.push(FaultEvent { at_hours: t, kind });
+    }
+}
+
+/// FNV-1a step over one 64-bit word (byte-wise, little-endian).
+pub fn digest_mix(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// FNV-1a offset basis — seed for [`digest_mix`] chains.
+pub const DIGEST_SEED: u64 = 0xCBF2_9CE4_8422_2325;
+
+impl FaultTrace {
+    /// Generate the schedule for `topo` — a pure function of
+    /// `(topo, cfg, seed)`. Each node and each cluster draws from its own
+    /// seeded stream, so the trace is independent of iteration order,
+    /// thread counts, and everything else in the process.
+    pub fn generate(topo: Topology, cfg: &FaultConfig, seed: u64) -> FaultTrace {
+        let mut events: Vec<FaultEvent> = Vec::new();
+        if cfg.node_mttf_hours > 0.0 && cfg.node_mttr_hours > 0.0 {
+            for node in 0..topo.total_nodes() {
+                // splitmix64 seeding decorrelates consecutive stream ids
+                let mut prng = Prng::new(seed.wrapping_add(1 + node as u64));
+                renewal(
+                    &mut prng,
+                    cfg.node_mttf_hours,
+                    cfg.node_mttr_hours,
+                    cfg.horizon_hours,
+                    node,
+                    true,
+                    &mut events,
+                );
+            }
+        }
+        if cfg.cluster_mttf_hours > 0.0 && cfg.cluster_mttr_hours > 0.0 {
+            for cluster in 0..topo.clusters {
+                let mut prng = Prng::new(seed.wrapping_add(1_000_003 + cluster as u64));
+                renewal(
+                    &mut prng,
+                    cfg.cluster_mttf_hours,
+                    cfg.cluster_mttr_hours,
+                    cfg.horizon_hours,
+                    cluster,
+                    false,
+                    &mut events,
+                );
+            }
+        }
+        events.sort_by(|a, b| {
+            a.at_hours
+                .total_cmp(&b.at_hours)
+                .then(a.kind.tag().cmp(&b.kind.tag()))
+                .then(a.kind.index().cmp(&b.kind.index()))
+        });
+        FaultTrace {
+            events,
+            horizon_hours: cfg.horizon_hours,
+            nodes: topo.total_nodes(),
+            clusters: topo.clusters,
+        }
+    }
+
+    /// Stable fingerprint of the whole schedule (event times bit-exact).
+    pub fn digest(&self) -> u64 {
+        let mut h = DIGEST_SEED;
+        h = digest_mix(h, self.horizon_hours.to_bits());
+        h = digest_mix(h, self.nodes as u64);
+        h = digest_mix(h, self.clusters as u64);
+        for e in &self.events {
+            h = digest_mix(h, e.at_hours.to_bits());
+            h = digest_mix(h, e.kind.tag());
+            h = digest_mix(h, e.kind.index() as u64);
+        }
+        h
+    }
+
+    /// Distinct node ids that fail at least once (directly or through a
+    /// cluster event) — the support of predicted failure patterns.
+    pub fn failing_nodes(&self) -> Vec<usize> {
+        let npc = self.nodes / self.clusters.max(1);
+        let mut seen = vec![false; self.nodes];
+        for e in &self.events {
+            match e.kind {
+                FaultKind::NodeFail(n) => seen[n] = true,
+                FaultKind::ClusterFail(c) => {
+                    for n in c * npc..((c + 1) * npc).min(self.nodes) {
+                        seen[n] = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        (0..self.nodes).filter(|&n| seen[n]).collect()
+    }
+
+    /// Distinct cluster ids hit by a correlated event.
+    pub fn failing_clusters(&self) -> Vec<usize> {
+        let mut seen = vec![false; self.clusters];
+        for e in &self.events {
+            if let FaultKind::ClusterFail(c) = e.kind {
+                seen[c] = true;
+            }
+        }
+        (0..self.clusters).filter(|&c| seen[c]).collect()
+    }
+
+    /// Replayable text form: a header plus one event per line, event times
+    /// serialized as hex `f64` bits so [`Self::parse`] round-trips exactly.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("unilrc-fault-trace v1\n");
+        out.push_str(&format!("nodes {}\n", self.nodes));
+        out.push_str(&format!("clusters {}\n", self.clusters));
+        out.push_str(&format!(
+            "horizon {:016x} # {:.3} h\n",
+            self.horizon_hours.to_bits(),
+            self.horizon_hours
+        ));
+        for e in &self.events {
+            out.push_str(&format!(
+                "{:016x} {} {} # t={:.3} h\n",
+                e.at_hours.to_bits(),
+                e.kind.name(),
+                e.kind.index(),
+                e.at_hours
+            ));
+        }
+        out
+    }
+
+    /// Parse [`Self::to_text`] output back into a trace.
+    pub fn parse(text: &str) -> anyhow::Result<FaultTrace> {
+        let mut lines = text.lines().map(|l| match l.find('#') {
+            Some(i) => l[..i].trim(),
+            None => l.trim(),
+        });
+        anyhow::ensure!(
+            lines.next() == Some("unilrc-fault-trace v1"),
+            "bad trace header (want unilrc-fault-trace v1)"
+        );
+        let mut field = |name: &str| -> anyhow::Result<String> {
+            let line = lines.next().unwrap_or("");
+            let (key, val) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow::anyhow!("expected `{name} <value>`, got {line:?}"))?;
+            anyhow::ensure!(key == name, "expected `{name}`, got {key:?}");
+            Ok(val.trim().to_string())
+        };
+        let nodes: usize = field("nodes")?.parse()?;
+        let clusters: usize = field("clusters")?.parse()?;
+        let horizon_hours = f64::from_bits(u64::from_str_radix(&field("horizon")?, 16)?);
+        let mut events = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(parts.len() == 3, "bad event line {line:?}");
+            let at_hours = f64::from_bits(u64::from_str_radix(parts[0], 16)?);
+            let idx: usize = parts[2].parse()?;
+            let kind = match parts[1] {
+                "node-fail" => FaultKind::NodeFail(idx),
+                "node-repair" => FaultKind::NodeRepair(idx),
+                "cluster-fail" => FaultKind::ClusterFail(idx),
+                "cluster-repair" => FaultKind::ClusterRepair(idx),
+                other => anyhow::bail!("unknown event kind {other:?}"),
+            };
+            events.push(FaultEvent { at_hours, kind });
+        }
+        Ok(FaultTrace { events, horizon_hours, nodes, clusters })
+    }
+}
+
+/// Effective node up/down state during trace replay, tracking *causes*
+/// separately: a node is down while its node-level clock has it failed
+/// **or** its cluster is in an outage, and only transitions when the
+/// combined state flips — so a node-level repair during a cluster outage
+/// does not resurrect the node early.
+#[derive(Debug, Clone)]
+pub struct DownState {
+    node_cause: Vec<bool>,
+    cluster_cause: Vec<bool>,
+    nodes_per_cluster: usize,
+}
+
+impl DownState {
+    pub fn new(topo: Topology) -> DownState {
+        DownState {
+            node_cause: vec![false; topo.total_nodes()],
+            cluster_cause: vec![false; topo.clusters],
+            nodes_per_cluster: topo.nodes_per_cluster,
+        }
+    }
+
+    pub fn is_down(&self, node: usize) -> bool {
+        self.node_cause[node] || self.cluster_cause[node / self.nodes_per_cluster]
+    }
+
+    /// Number of effectively-down nodes.
+    pub fn down_count(&self) -> usize {
+        (0..self.node_cause.len()).filter(|&n| self.is_down(n)).count()
+    }
+
+    /// Apply one event; returns `(node, now_down)` for every node whose
+    /// *effective* state flipped (empty for redundant events, e.g. a
+    /// node-level failure inside an ongoing cluster outage).
+    pub fn apply(&mut self, kind: FaultKind) -> Vec<(usize, bool)> {
+        let mut changed = Vec::new();
+        match kind {
+            FaultKind::NodeFail(n) | FaultKind::NodeRepair(n) => {
+                let failing = matches!(kind, FaultKind::NodeFail(_));
+                let before = self.is_down(n);
+                self.node_cause[n] = failing;
+                let after = self.is_down(n);
+                if before != after {
+                    changed.push((n, after));
+                }
+            }
+            FaultKind::ClusterFail(c) | FaultKind::ClusterRepair(c) => {
+                let failing = matches!(kind, FaultKind::ClusterFail(_));
+                let was = self.cluster_cause[c];
+                self.cluster_cause[c] = failing;
+                if was != failing {
+                    for n in c * self.nodes_per_cluster..(c + 1) * self.nodes_per_cluster {
+                        let before = self.node_cause[n] || was;
+                        let after = self.node_cause[n] || failing;
+                        if before != after {
+                            changed.push((n, after));
+                        }
+                    }
+                }
+            }
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::new(4, 5)
+    }
+
+    #[test]
+    fn same_seed_same_digest() {
+        let cfg = FaultConfig::accelerated();
+        let a = FaultTrace::generate(topo(), &cfg, 42);
+        let b = FaultTrace::generate(topo(), &cfg, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        let c = FaultTrace::generate(topo(), &cfg, 43);
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn events_sorted_and_within_horizon() {
+        let cfg = FaultConfig::accelerated();
+        let t = FaultTrace::generate(topo(), &cfg, 7);
+        assert!(!t.events.is_empty());
+        for w in t.events.windows(2) {
+            assert!(w[0].at_hours <= w[1].at_hours);
+        }
+        assert!(t.events.iter().all(|e| e.at_hours > 0.0 && e.at_hours < cfg.horizon_hours));
+    }
+
+    #[test]
+    fn event_count_tracks_rates() {
+        let cfg = FaultConfig {
+            node_mttf_hours: 100.0,
+            node_mttr_hours: 10.0,
+            cluster_mttf_hours: 0.0,
+            cluster_mttr_hours: 0.0,
+            horizon_hours: 10_000.0,
+        };
+        let t = FaultTrace::generate(topo(), &cfg, 1);
+        let fails =
+            t.events.iter().filter(|e| matches!(e.kind, FaultKind::NodeFail(_))).count() as f64;
+        // 20 nodes × horizon/(mttf+mttr) ≈ 1818 expected failures
+        let expect = 20.0 * 10_000.0 / 110.0;
+        assert!((fails - expect).abs() / expect < 0.15, "{fails} vs {expect}");
+        assert!(t.failing_clusters().is_empty());
+    }
+
+    #[test]
+    fn zero_rates_disable_event_classes() {
+        let cfg = FaultConfig {
+            node_mttf_hours: 0.0,
+            node_mttr_hours: 0.0,
+            cluster_mttf_hours: 50.0,
+            cluster_mttr_hours: 5.0,
+            horizon_hours: 1_000.0,
+        };
+        let t = FaultTrace::generate(topo(), &cfg, 9);
+        assert!(t.events.iter().all(|e| e.kind.tag() >= 2));
+        assert!(!t.failing_clusters().is_empty());
+    }
+
+    #[test]
+    fn text_roundtrip_is_exact() {
+        let cfg = FaultConfig::accelerated();
+        let t = FaultTrace::generate(topo(), &cfg, 5);
+        let parsed = FaultTrace::parse(&t.to_text()).unwrap();
+        assert_eq!(t, parsed);
+        assert_eq!(t.digest(), parsed.digest());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultTrace::parse("nope").is_err());
+        assert!(FaultTrace::parse("unilrc-fault-trace v1\nnodes x\n").is_err());
+        let bad_kind = "unilrc-fault-trace v1\nnodes 1\nclusters 1\nhorizon \
+                        4059000000000000\n3ff0000000000000 node-melt 0\n";
+        assert!(FaultTrace::parse(bad_kind).is_err());
+    }
+
+    #[test]
+    fn down_state_tracks_causes() {
+        let mut s = DownState::new(Topology::new(2, 3));
+        assert_eq!(s.apply(FaultKind::NodeFail(1)), vec![(1, true)]);
+        // cluster 0 outage: nodes 0 and 2 flip; node 1 already down
+        assert_eq!(s.apply(FaultKind::ClusterFail(0)), vec![(0, true), (2, true)]);
+        // node-level repair during the outage: no effective change
+        assert_eq!(s.apply(FaultKind::NodeRepair(1)), vec![]);
+        assert_eq!(s.down_count(), 3);
+        // outage ends: every cluster-0 node comes back (node 1 repaired above)
+        let mut back = s.apply(FaultKind::ClusterRepair(0));
+        back.sort_unstable();
+        assert_eq!(back, vec![(0, false), (1, false), (2, false)]);
+        assert_eq!(s.down_count(), 0);
+    }
+
+    #[test]
+    fn failing_nodes_includes_cluster_members() {
+        let cfg = FaultConfig {
+            node_mttf_hours: 0.0,
+            node_mttr_hours: 0.0,
+            cluster_mttf_hours: 100.0,
+            cluster_mttr_hours: 10.0,
+            horizon_hours: 1_000.0,
+        };
+        let t = FaultTrace::generate(Topology::new(2, 3), &cfg, 3);
+        let nodes = t.failing_nodes();
+        for c in t.failing_clusters() {
+            for n in c * 3..(c + 1) * 3 {
+                assert!(nodes.contains(&n));
+            }
+        }
+    }
+
+    #[test]
+    fn digest_mix_is_order_sensitive() {
+        let a = digest_mix(digest_mix(DIGEST_SEED, 1), 2);
+        let b = digest_mix(digest_mix(DIGEST_SEED, 2), 1);
+        assert_ne!(a, b);
+    }
+}

@@ -13,6 +13,8 @@
 //! *data plane* still moves real bytes and runs real coding (timed
 //! separately and folded into the clock by the proxy layer).
 
+pub mod faults;
+
 use crate::placement::Topology;
 
 /// Gb/s → bytes/second.

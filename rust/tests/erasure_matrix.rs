@@ -1,0 +1,138 @@
+//! Erasure-matrix conformance suite — the backbone the fault injector
+//! stands on: for every code family, enumerate erasure patterns up to the
+//! code's fault tolerance (exhaustively for singles and doubles, sampled
+//! beyond) and assert the generic decoder restores byte-identical data.
+//! Every pattern the fault scenarios can realize must already be proven
+//! here, so a scenario failure can only ever be a *system* bug, never a
+//! coding bug.
+//!
+//! All decodes go through fresh plans (`Code::decode_plan`), bypassing the
+//! plan cache — `tests/plan_cache.rs` separately proves cached ≡ fresh.
+
+use unilrc::codes::spec::{CodeFamily, Scheme};
+use unilrc::codes::Code;
+use unilrc::experiments::{family_tolerance, strategy_and_topo};
+use unilrc::prng::Prng;
+
+const BLOCK: usize = 48;
+
+fn stripe_for(code: &Code, prng: &mut Prng) -> Vec<Vec<u8>> {
+    let data: Vec<Vec<u8>> = (0..code.k()).map(|_| prng.bytes(BLOCK)).collect();
+    let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+    let parities = code.encode_blocks(&drefs);
+    data.into_iter().chain(parities).collect()
+}
+
+/// Decode `erased` from scratch and check every rebuilt block byte-for-byte.
+fn check_decodes(code: &Code, stripe: &[Vec<u8>], erased: &[usize], ctx: &str) {
+    let plan = code
+        .decode_plan(erased)
+        .unwrap_or_else(|| panic!("{ctx}: pattern {erased:?} must be recoverable"));
+    let srcs: Vec<&[u8]> = plan.sources.iter().map(|&s| stripe[s].as_slice()).collect();
+    let rebuilt = plan.execute(&srcs);
+    for (i, &b) in plan.erased.iter().enumerate() {
+        assert_eq!(rebuilt[i], stripe[b], "{ctx}: pattern {erased:?}, block {b}");
+    }
+}
+
+#[test]
+fn exhaustive_single_erasures_all_families() {
+    let mut prng = Prng::new(0xE1);
+    for fam in CodeFamily::paper_baselines() {
+        let code = Scheme::S42.build(fam);
+        let stripe = stripe_for(&code, &mut prng);
+        for a in 0..code.n() {
+            check_decodes(&code, &stripe, &[a], &format!("{fam:?} singles"));
+        }
+    }
+}
+
+#[test]
+fn exhaustive_double_erasures_all_families() {
+    let mut prng = Prng::new(0xE2);
+    for fam in CodeFamily::paper_baselines() {
+        let code = Scheme::S42.build(fam);
+        let stripe = stripe_for(&code, &mut prng);
+        for a in 0..code.n() {
+            for b in a + 1..code.n() {
+                check_decodes(&code, &stripe, &[a, b], &format!("{fam:?} doubles"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sampled_patterns_up_to_family_tolerance() {
+    let mut prng = Prng::new(0xE3);
+    for fam in CodeFamily::paper_baselines() {
+        let code = Scheme::S42.build(fam);
+        let f = family_tolerance(Scheme::S42, fam);
+        let stripe = stripe_for(&code, &mut prng);
+        for t in 3..=f {
+            for _ in 0..25 {
+                let erased = prng.choose_distinct(code.n(), t);
+                check_decodes(&code, &stripe, &erased, &format!("{fam:?} |E|={t}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn whole_cluster_erasures_decode_all_families() {
+    // One-cluster failure tolerance is a placement invariant (§2.3.2):
+    // erasing every block a cluster hosts must decode, for every rotation.
+    let mut prng = Prng::new(0xE4);
+    for fam in CodeFamily::paper_baselines() {
+        let code = Scheme::S42.build(fam);
+        let (strategy, topo) = strategy_and_topo(fam, &code);
+        let stripe = stripe_for(&code, &mut prng);
+        for rot in 0..topo.clusters {
+            let placement = strategy.place(&code, &topo, rot);
+            for cluster in 0..topo.clusters {
+                let erased = placement.blocks_in_cluster(cluster);
+                if erased.is_empty() {
+                    continue;
+                }
+                check_decodes(
+                    &code,
+                    &stripe,
+                    &erased,
+                    &format!("{fam:?} cluster {cluster} rot {rot}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn beyond_tolerance_never_panics_and_never_lies() {
+    // Past the guaranteed tolerance the decoder may return None — but when
+    // it claims recoverability it must deliver exact bytes, and patterns
+    // wider than n−k must always be rejected.
+    let mut prng = Prng::new(0xE5);
+    for fam in CodeFamily::paper_baselines() {
+        let code = Scheme::S42.build(fam);
+        let f = family_tolerance(Scheme::S42, fam);
+        let stripe = stripe_for(&code, &mut prng);
+        for t in (f + 1)..=code.m() {
+            for _ in 0..10 {
+                let erased = prng.choose_distinct(code.n(), t);
+                match code.decode_plan(&erased) {
+                    Some(plan) => {
+                        assert!(code.can_decode(&erased));
+                        let srcs: Vec<&[u8]> =
+                            plan.sources.iter().map(|&s| stripe[s].as_slice()).collect();
+                        let rebuilt = plan.execute(&srcs);
+                        for (i, &b) in plan.erased.iter().enumerate() {
+                            assert_eq!(rebuilt[i], stripe[b], "{fam:?} {erased:?}");
+                        }
+                    }
+                    None => assert!(!code.can_decode(&erased), "{fam:?} {erased:?}"),
+                }
+            }
+        }
+        let too_many = prng.choose_distinct(code.n(), code.m() + 1);
+        assert!(code.decode_plan(&too_many).is_none());
+        assert!(!code.can_decode(&too_many));
+    }
+}

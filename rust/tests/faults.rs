@@ -1,0 +1,216 @@
+//! Fault-injection scenario conformance:
+//!
+//! * trace determinism — same seed ⇒ bit-identical schedule and digest,
+//!   text round-trip exact (the replayable trace format);
+//! * `exp7_faults` determinism — the full scenario digest (trace + every
+//!   measured virtual latency) reproduces across runs, and plan-cache
+//!   warm-up never changes a single measured value (warm ≡ cold);
+//! * differential reliability — occupancy and MTTDL estimates from short
+//!   injected traces agree with the `analysis::markov` closed forms
+//!   within stated tolerances, for all four code families;
+//! * correlated cluster bursts run end to end (batched recovery, data-loss
+//!   accounting) without corrupting any served byte (every repair verifies
+//!   against ground truth internally).
+
+use unilrc::analysis::markov;
+use unilrc::experiments::{exp7_faults, family_tolerance, ExpConfig, FaultSimConfig};
+use unilrc::placement::Topology;
+use unilrc::sim::faults::{FaultConfig, FaultTrace};
+
+/// Deterministic scenario base: virtual clock only, small blocks.
+fn tiny_exp() -> ExpConfig {
+    ExpConfig { block_size: 4 * 1024, stripes: 2, seed: 7, ..Default::default() }
+}
+
+fn short_faults() -> FaultSimConfig {
+    FaultSimConfig {
+        fault: FaultConfig {
+            node_mttf_hours: 300.0,
+            node_mttr_hours: 10.0,
+            cluster_mttf_hours: 1_500.0,
+            cluster_mttr_hours: 5.0,
+            horizon_hours: 600.0,
+        },
+        tenants: 2,
+        objects_per_tenant: 6,
+        reads_per_event: 1,
+        measure_cap: 8,
+    }
+}
+
+#[test]
+fn trace_generation_is_seed_deterministic() {
+    let cfg = FaultConfig::accelerated();
+    let topo = Topology::new(6, 9);
+    let a = FaultTrace::generate(topo, &cfg, 11);
+    let b = FaultTrace::generate(topo, &cfg, 11);
+    assert_eq!(a, b, "same seed ⇒ identical schedule");
+    assert_eq!(a.digest(), b.digest());
+    assert_ne!(a.digest(), FaultTrace::generate(topo, &cfg, 12).digest());
+    // replayable text format round-trips bit-exact
+    let parsed = FaultTrace::parse(&a.to_text()).unwrap();
+    assert_eq!(parsed.digest(), a.digest());
+}
+
+#[test]
+fn exp7_digest_reproduces_across_runs() {
+    let cfg = tiny_exp();
+    let fc = short_faults();
+    let a = exp7_faults(&cfg, &fc).unwrap();
+    let b = exp7_faults(&cfg, &fc).unwrap();
+    assert_eq!(a.len(), 4);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.family, y.family);
+        assert_eq!(x.digest, y.digest, "{:?}: digest must reproduce", x.family);
+        assert_eq!(x.events, y.events);
+        assert_eq!(x.repaired_blocks, y.repaired_blocks);
+        assert_eq!(x.cross_bytes, y.cross_bytes);
+        assert_eq!(x.mean_repair_ms.to_bits(), y.mean_repair_ms.to_bits());
+        assert_eq!(x.mean_degraded_ms.to_bits(), y.mean_degraded_ms.to_bits());
+    }
+    // a different seed produces a different schedule (and digest)
+    let mut other = tiny_exp();
+    other.seed = 8;
+    let c = exp7_faults(&other, &fc).unwrap();
+    assert_ne!(a[0].digest, c[0].digest);
+}
+
+#[test]
+fn plan_warmup_never_changes_measurements() {
+    // Runs at S136 — no other test in this binary touches S136 exp7, and
+    // cache keys embed the code name, so concurrently-running S42 tests
+    // cannot interfere. The COLD run goes first: its measurements are
+    // taken before prefetch touches the shared global cache, so a
+    // divergent prefetched plan could not also serve the cold side. The
+    // warm run's prefetch still finds plenty to insert afterwards —
+    // predicted patterns (e.g. pure whole-cluster states) are a strict
+    // superset of the failure states the cold replay realized.
+    let mut warm_cfg = tiny_exp();
+    warm_cfg.scheme = unilrc::codes::spec::Scheme::S136;
+    warm_cfg.seed = 99;
+    warm_cfg.plan_warmup = true;
+    let mut cold_cfg = warm_cfg.clone();
+    cold_cfg.plan_warmup = false;
+    let mut fc = short_faults();
+    // frequent cluster events: fully-grouped codes predict only cluster
+    // patterns (single-node repairs bypass the cache), and pure-cluster
+    // states are essentially never realized exactly by the cold replay,
+    // so the warm run always has plans left to insert
+    fc.fault.cluster_mttf_hours = 300.0;
+    let cold = exp7_faults(&cold_cfg, &fc).unwrap();
+    let warm = exp7_faults(&warm_cfg, &fc).unwrap();
+    for (c, w) in cold.iter().zip(&warm) {
+        assert_eq!(c.digest, w.digest, "{:?}: warm-up must be output-invisible", c.family);
+        assert_eq!(c.repaired_blocks, w.repaired_blocks);
+        assert_eq!(c.cross_bytes, w.cross_bytes);
+        assert_eq!(c.mean_repair_ms.to_bits(), w.mean_repair_ms.to_bits());
+        assert_eq!(c.prefetched_plans, 0, "cold run must not prefetch");
+        assert!(w.prefetched_plans > 0, "{:?}: warm run must prefetch plans", w.family);
+    }
+}
+
+#[test]
+fn simulated_reliability_matches_markov_closed_form() {
+    // Node-level clocks only (the chain the closed form models), long
+    // horizon, occupancy-only (measure_cap 0 — no DSS ops, so this stays
+    // cheap while the estimator converges).
+    let (mttf, mttr) = (1_000.0f64, 10.0f64);
+    let cfg = ExpConfig { block_size: 1024, stripes: 1, seed: 21, ..Default::default() };
+    let fc = FaultSimConfig {
+        fault: FaultConfig {
+            node_mttf_hours: mttf,
+            node_mttr_hours: mttr,
+            cluster_mttf_hours: 0.0,
+            cluster_mttr_hours: 0.0,
+            horizon_hours: 30_000.0,
+        },
+        tenants: 1,
+        objects_per_tenant: 2,
+        reads_per_event: 0,
+        measure_cap: 0,
+    };
+    let rows = exp7_faults(&cfg, &fc).unwrap();
+    assert_eq!(rows.len(), 4);
+    for r in &rows {
+        // degraded-time fraction of stripe 0 vs the birth–death steady
+        // state: stated tolerance 25% relative (the estimator sees ~1500
+        // up/down cycles at these rates).
+        let rel = (r.sim_degraded_frac - r.markov_degraded_frac).abs() / r.markov_degraded_frac;
+        assert!(
+            rel < 0.25,
+            "{:?}: sim {} vs markov {} (rel {rel:.3})",
+            r.family,
+            r.sim_degraded_frac,
+            r.markov_degraded_frac
+        );
+        // MTTDL from trace-estimated rates vs from configured rates: the
+        // chain amplifies rate error ~(2f+1)×, so the stated tolerance is
+        // a factor bound, not a relative one.
+        let f_tol = family_tolerance(cfg.scheme, r.family);
+        let bound = if f_tol > 8 { 10.0 } else { 4.0 };
+        let ratio = r.mttdl_est_years / r.mttdl_markov_years;
+        assert!(
+            ratio.is_finite() && ratio > 1.0 / bound && ratio < bound,
+            "{:?}: MTTDL est {:.3e} vs markov {:.3e} (ratio {ratio:.3})",
+            r.family,
+            r.mttdl_est_years,
+            r.mttdl_markov_years
+        );
+        // sanity: the closed form itself matches the direct formula
+        let expect = markov::degraded_fraction(42, 1.0 / mttf, 1.0 / mttr);
+        assert_eq!(r.markov_degraded_frac.to_bits(), expect.to_bits());
+    }
+}
+
+#[test]
+fn correlated_cluster_bursts_run_batched_and_account_loss() {
+    // Cluster events dominate: whole-rack outages land many repairs in one
+    // batched event; unrecoverable windows are counted, never panicked on,
+    // and every served byte still verifies against ground truth.
+    let cfg = ExpConfig { block_size: 4 * 1024, stripes: 2, seed: 3, ..Default::default() };
+    let fc = FaultSimConfig {
+        fault: FaultConfig {
+            node_mttf_hours: 500.0,
+            node_mttr_hours: 20.0,
+            cluster_mttf_hours: 300.0,
+            cluster_mttr_hours: 10.0,
+            horizon_hours: 1_200.0,
+        },
+        tenants: 3,
+        objects_per_tenant: 6,
+        reads_per_event: 2,
+        measure_cap: 16,
+    };
+    let rows = exp7_faults(&cfg, &fc).unwrap();
+    for r in &rows {
+        assert!(r.cluster_failures > 0, "{:?}: schedule must include cluster events", r.family);
+        assert!(r.degraded_hours > 0.0);
+        assert!(r.unavailable_hours >= 0.0);
+        assert!(r.unavailable_hours <= r.degraded_hours + 1e-9);
+        // a whole-cluster repair must rebuild more blocks than a
+        // single-node one can host per stripe — proves batching saw bursts
+        if r.repair_events > 0 {
+            assert!(r.repaired_blocks >= r.repair_events, "{:?}", r.family);
+        }
+    }
+    // same seed reproduces even under cluster bursts and data loss
+    let again = exp7_faults(&cfg, &fc).unwrap();
+    for (x, y) in rows.iter().zip(&again) {
+        assert_eq!(x.digest, y.digest);
+        assert_eq!(x.data_loss_stripe_events, y.data_loss_stripe_events);
+    }
+}
+
+#[test]
+fn every_family_uses_fixed_seeds_for_trace_randomness() {
+    // Trace determinism is the repo-wide seed policy made testable: two
+    // fresh generations from the same explicit seed must agree event by
+    // event for every family's topology shape.
+    for (clusters, nodes) in [(6usize, 9usize), (11, 8), (2, 4)] {
+        let topo = Topology::new(clusters, nodes);
+        let cfg = FaultConfig::accelerated();
+        let a = FaultTrace::generate(topo, &cfg, 0xF00D);
+        let b = FaultTrace::generate(topo, &cfg, 0xF00D);
+        assert_eq!(a.digest(), b.digest(), "topo {clusters}x{nodes}");
+    }
+}

@@ -104,3 +104,59 @@ fn proxy_repairs_of_one_stripe_hit_the_cache() -> Result<()> {
     );
     Ok(())
 }
+
+#[test]
+fn warm_and_cold_repairs_are_byte_identical() -> Result<()> {
+    // Two identical systems, one with the failure pattern prefetched
+    // (`Dss::prefetch_plans`), one repairing cold: the recovered payloads
+    // must match each other and ground truth exactly — warm-up only moves
+    // where the inversion cost lands, never what gets rebuilt. (Each
+    // recovery also verifies bytes against ground truth internally.)
+    let cfg =
+        ExpConfig { block_size: 8 * 1024, stripes: 2, time_compute: false, ..Default::default() };
+    let mut warm = build_dss(CodeFamily::UniLrc, &cfg);
+    let mut cold = build_dss(CodeFamily::UniLrc, &cfg);
+    warm.ingest_random_stripes(2, &mut Prng::new(777))?;
+    cold.ingest_random_stripes(2, &mut Prng::new(777))?;
+
+    let node = warm.metadata().node_of(0, 2);
+    warm.fail_node(node);
+    cold.fail_node(node);
+    let patterns: Vec<Vec<usize>> =
+        (0..2).map(|s| warm.failed_blocks(s)).filter(|p| !p.is_empty()).collect();
+
+    // cold recovery FIRST — before prefetch touches the shared global
+    // cache — so a divergent prefetched plan could not also serve it
+    let rc = cold.recover_node(node)?;
+
+    let cache = plan_cache::global();
+    let pre_before = cache.prefetched();
+    let inserted = warm.prefetch_plans(&patterns);
+    // entries may already be resident from other tests (global cache);
+    // the counter must move exactly as many times as insertions happened
+    assert_eq!(cache.prefetched(), pre_before + inserted as u64);
+
+    let rw = warm.recover_node(node)?;
+    assert_eq!(rw.blocks, rc.blocks);
+    assert_eq!(rw.bytes, rc.bytes);
+    assert_eq!(rw.cross_bytes, rc.cross_bytes);
+    assert_eq!(rw.seconds.to_bits(), rc.seconds.to_bits(), "virtual repair time must match");
+    Ok(())
+}
+
+#[test]
+fn prefetch_is_visible_in_global_stats() {
+    // `unilrc engine` surfaces warm-up separately from demand misses.
+    let code = Scheme::S42.build(CodeFamily::Ulrc);
+    let cache = plan_cache::global();
+    let (pre0, hit0) = (cache.prefetched(), cache.prefetch_hits());
+    let pattern = vec![1usize, 2, 40];
+    let inserted = cache.prefetch(&code, std::slice::from_ref(&pattern));
+    assert!(cache.prefetched() >= pre0 + inserted as u64);
+    let _ = code.decode_plan_cached(&pattern).expect("recoverable");
+    if inserted > 0 {
+        assert!(cache.prefetch_hits() > hit0, "demand hit on a prefetched entry must be tagged");
+    }
+    let stats = cache.stats(64);
+    assert!(stats.prefetched >= inserted as u64);
+}
