@@ -36,8 +36,8 @@ fn main() -> anyhow::Result<()> {
         let mut dss = build_dss(fam, &cfg);
         println!(
             "topology: {} clusters × {} nodes, {} placement",
-            dss.topo.clusters,
-            dss.topo.nodes_per_cluster,
+            dss.topo.clusters(),
+            dss.topo.max_cluster_size(),
             dss.metadata().strategy_name()
         );
 

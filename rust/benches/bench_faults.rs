@@ -87,7 +87,7 @@ fn main() {
     let mut dss = build_dss(CodeFamily::UniLrc, &cfg);
     let mut prng = Prng::new(cfg.seed);
     dss.ingest_random_stripes(cfg.stripes, &mut prng).expect("ingest");
-    let trace = FaultTrace::generate(dss.topo, &fc.fault, cfg.seed);
+    let trace = FaultTrace::generate(&dss.topo, &fc.fault, cfg.seed);
     let patterns = predicted_patterns(&dss, &trace);
     println!("predicted patterns: {}", patterns.len());
     let s = b.bench_latency("faults/plan-warmup-prefetch", || {

@@ -133,24 +133,55 @@ fn main() {
         report.add(&s, code.k() * 65536);
     }
 
-    if Manifest::load(Manifest::default_dir()).is_ok() {
+    // --------------------------- PJRT backend rows in the engine-tier table
+    // The PJRT coder is a peer engine tier: fold + matmul + batched-combine
+    // rows land next to the native tiers whenever a runtime and artifacts
+    // exist. Builds with the vendored offline `xla` stub (or without
+    // artifacts) record why the rows are absent instead of silently
+    // skipping — the trajectory join keys stay stable either way.
+    let pjrt_state = if Manifest::load(Manifest::default_dir()).is_ok() {
         match PjrtCoder::new(None) {
             Ok(pjrt) => {
-                section("PJRT backend vs native (xor fold r=6, 1 MiB)");
-                let s = b.bench_throughput("pjrt fold", 6 * MB, || {
+                section("PJRT backend tier (vs native, 1 MiB blocks)");
+                let s = b.bench_throughput("pjrt fold r=6", 6 * MB, || {
                     black_box(pjrt.fold(black_box(&refs)).unwrap());
                 });
                 report.add(&s, 6 * MB);
-                let s = b.bench_throughput("native fold", 6 * MB, || {
+                let s = b.bench_throughput("native fold r=6", 6 * MB, || {
                     black_box(NativeCoder.fold(black_box(&refs)).unwrap());
                 });
                 report.add(&s, 6 * MB);
+                let coeffs: Vec<Vec<u8>> =
+                    (0..2).map(|r| (0..6).map(|j| (r * 7 + j * 13 + 2) as u8).collect()).collect();
+                let s = b.bench_throughput("pjrt matmul 2x6", 6 * MB, || {
+                    black_box(pjrt.matmul(black_box(&coeffs), black_box(&refs)).unwrap());
+                });
+                report.add(&s, 6 * MB);
+                // same-shape jobs share artifact invocations (PjrtCoder's
+                // combine_batch override) — the multi-stripe repair shape
+                let jobs: Vec<unilrc::runtime::CombineJob> = (0..8)
+                    .map(|_| unilrc::runtime::CombineJob {
+                        coeffs: vec![vec![1; 6]],
+                        sources: refs.clone(),
+                    })
+                    .collect();
+                let batch_bytes = 8 * 6 * MB;
+                let s = b.bench_throughput("pjrt combine_batch 8x fold", batch_bytes, || {
+                    black_box(pjrt.combine_batch(black_box(&jobs)).unwrap());
+                });
+                report.add(&s, batch_bytes);
+                "available".to_string()
             }
-            Err(e) => println!("PJRT section skipped: {e}"),
+            Err(e) => {
+                println!("PJRT rows skipped: {e}");
+                format!("unavailable: {e}")
+            }
         }
     } else {
-        println!("artifacts/ missing — run `make artifacts` for the PJRT section");
-    }
+        println!("artifacts/ missing — run `make artifacts` for the PJRT rows");
+        "unavailable: artifacts/ not built".to_string()
+    };
+    report.meta("pjrt_backend", &pjrt_state);
 
     report.write_if_requested();
 }

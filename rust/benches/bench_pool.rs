@@ -187,7 +187,7 @@ fn main() {
     let clusters = code.groups().len();
     let mut dss = Dss::new(
         code,
-        &UniLrcPlace,
+        Box::new(UniLrcPlace),
         Topology::new(clusters, 10),
         NetConfig::default(),
         Arc::new(NativeCoder),

@@ -1,0 +1,108 @@
+//! Elastic-topology migration bench: end-to-end `exp8_elastic` scenario
+//! replay plus per-family single-event costs (scale-out rebalance, drain,
+//! whole-cluster scale-out) on the batched coding pipeline.
+//!
+//! Set `UNILRC_BENCH_JSON=BENCH_rebalance.json` for the machine-readable
+//! artifact — CI joins it to the rolling perf trajectory next to
+//! `BENCH_gf.json` / `BENCH_pool.json` / `BENCH_faults.json` (PERF.md
+//! explains the rows).
+
+use unilrc::bench_util::{black_box, section, Bencher, JsonReport};
+use unilrc::codes::spec::CodeFamily;
+use unilrc::experiments::{build_dss, exp8_elastic, ElasticConfig, ExpConfig};
+use unilrc::placement::TopologyEvent;
+use unilrc::prng::Prng;
+
+fn cfgs() -> (ExpConfig, ElasticConfig) {
+    let cfg = ExpConfig {
+        block_size: 16 * 1024,
+        stripes: 2,
+        seed: 42,
+        time_compute: false,
+        ..Default::default()
+    };
+    let ec = ElasticConfig {
+        add_nodes: 1,
+        drain_nodes: 1,
+        add_clusters: 1,
+        cluster_nodes: 0,
+        fault_horizon_hours: 150.0,
+    };
+    (cfg, ec)
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut report = JsonReport::new("bench_rebalance");
+    report.meta("engine", &unilrc::gf::dispatch::engine().describe());
+    let (cfg, ec) = cfgs();
+
+    // ------------- end-to-end elastic scenario (all four families)
+    section("exp8 elastic scenario (4 families, deterministic)");
+    let rows = exp8_elastic(&cfg, &ec).expect("scenario runs");
+    let scenario_bytes: usize = rows.iter().map(|r| r.migrated_bytes).sum();
+    for r in &rows {
+        println!(
+            "  {:<8} moves {:>5}  cross {:>8.1} KiB  window {:>8.2} ms",
+            r.family.name(),
+            r.moves,
+            r.cross_migration_bytes as f64 / 1024.0,
+            r.migration_seconds * 1e3
+        );
+    }
+    let s = b.bench_throughput("rebalance/exp8-scenario", scenario_bytes, || {
+        black_box(exp8_elastic(&cfg, &ec).expect("scenario runs"));
+    });
+    report.add(&s, scenario_bytes);
+
+    // ------------- per-family single events (fresh DSS per iteration —
+    // topology events are irreversible, so setup cost is inside the loop
+    // for every family alike; the numbers compare families, not absolutes)
+    for fam in CodeFamily::paper_baselines() {
+        section(&format!("single events — {}", fam.name()));
+        let mk = || {
+            let mut dss = build_dss(fam, &cfg);
+            let mut prng = Prng::new(cfg.seed);
+            dss.ingest_random_stripes(cfg.stripes, &mut prng).expect("ingest");
+            dss
+        };
+        // bytes per event measured once on a probe run
+        let mut probe = mk();
+        let add = probe.apply_topology_event(TopologyEvent::AddNode { cluster: 0 }).unwrap();
+        let name = format!("rebalance/add-node/{}", fam.name());
+        let s = b.bench_throughput(&name, add.bytes_moved.max(1), || {
+            let mut dss = mk();
+            black_box(dss.apply_topology_event(TopologyEvent::AddNode { cluster: 0 }).unwrap());
+        });
+        report.add(&s, add.bytes_moved.max(1));
+
+        let mut probe = mk();
+        let victim = probe.metadata().node_of(0, 0);
+        let drain = probe.apply_topology_event(TopologyEvent::DrainNode { node: victim }).unwrap();
+        let name = format!("rebalance/drain/{}", fam.name());
+        let s = b.bench_throughput(&name, drain.bytes_moved.max(1), || {
+            let mut dss = mk();
+            let victim = dss.metadata().node_of(0, 0);
+            black_box(dss.apply_topology_event(TopologyEvent::DrainNode { node: victim }).unwrap());
+        });
+        report.add(&s, drain.bytes_moved.max(1));
+
+        let mut probe = mk();
+        let nodes = probe.topo.max_cluster_size();
+        let grow = probe.apply_topology_event(TopologyEvent::AddCluster { nodes }).unwrap();
+        println!(
+            "  add-cluster moves {} blocks, {:.1} KiB cross",
+            grow.moves,
+            grow.cross_bytes as f64 / 1024.0
+        );
+        let name = format!("rebalance/add-cluster/{}", fam.name());
+        let s = b.bench_throughput(&name, grow.bytes_moved.max(1), || {
+            let mut dss = mk();
+            let nodes = dss.topo.max_cluster_size();
+            black_box(dss.apply_topology_event(TopologyEvent::AddCluster { nodes }).unwrap());
+        });
+        report.add(&s, grow.bytes_moved.max(1));
+    }
+
+    report.write_if_requested();
+}

@@ -170,6 +170,19 @@ pub fn mttdl_injected_years(n: usize, f: usize, lambda: f64, mu: f64) -> f64 {
     absorption_time_hours(&lam, &rep) / HOURS_PER_YEAR
 }
 
+/// Closed-form degraded-exposure during a migration window: probability
+/// that at least one of `nodes` independent exponential failure clocks
+/// (rate `lambda` per hour) fires while a topology event's block moves
+/// are in flight for `hours` — `1 − e^{−n·λ·T}`. The elastic-topology
+/// scenarios (`exp8`) report this next to the measured migration window
+/// so the "wide stripes must survive frequent system events" claim has an
+/// analytic anchor: the window is exactly the period during which a
+/// coincident failure would find the system mid-move.
+pub fn migration_exposure(nodes: usize, lambda: f64, hours: f64) -> f64 {
+    assert!(lambda >= 0.0 && hours >= 0.0, "rates and windows are non-negative");
+    1.0 - (-(nodes as f64) * lambda * hours).exp()
+}
+
 /// The paper's closed-form product approximation
 /// `MTTDL ≈ (μ·μ'^{f−1}) / Π_{i=0}^{f} λ_i` — kept for comparison.
 pub fn mttdl_years_approx(n: usize, f: usize, c: f64, p: &MttdlParams) -> f64 {
@@ -283,6 +296,23 @@ mod tests {
         assert!(fast > slow * 100.0);
         let wide = mttdl_injected_years(42, 11, 1.0 / 1000.0, 1.0 / 10.0);
         assert!(wide > fast * 100.0);
+    }
+
+    #[test]
+    fn migration_exposure_closed_form() {
+        // hand-computed: 10 nodes, λ = 1/1000 h⁻¹, 2 h window
+        let got = migration_exposure(10, 1e-3, 2.0);
+        let expect = 1.0 - (-0.02f64).exp();
+        assert!((got - expect).abs() < 1e-15);
+        // bounds and monotonicity
+        assert_eq!(migration_exposure(10, 1e-3, 0.0), 0.0);
+        assert_eq!(migration_exposure(0, 1e-3, 5.0), 0.0);
+        let short = migration_exposure(100, 1e-4, 0.5);
+        let long = migration_exposure(100, 1e-4, 5.0);
+        assert!((0.0..1.0).contains(&short) && short < long && long < 1.0);
+        // small-rate limit ≈ n·λ·T
+        let tiny = migration_exposure(4, 1e-9, 1.0);
+        assert!((tiny - 4e-9).abs() / 4e-9 < 1e-6);
     }
 
     #[test]

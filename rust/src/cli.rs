@@ -3,7 +3,8 @@
 //! ```text
 //! unilrc layout  [--scheme 42|136|210]           Fig 1-style layouts
 //! unilrc analyze [--fig5|--fig8|--fig3b|--table2|--table4|--all]
-//! unilrc experiment <1|2|3|4|5|6> [options]      §6 system experiments
+//! unilrc experiment <1..8> [options]             §6 experiments + faults
+//!                                                + elastic topology
 //! unilrc golden  [--out FILE]                    cross-language vectors
 //! unilrc help
 //! ```
@@ -52,11 +53,13 @@ unilrc — Wide LRCs with Unified Locality (paper reproduction)
 USAGE:
   unilrc layout  [--scheme 42|136|210]
   unilrc analyze [--fig3b] [--fig5] [--fig8] [--table2] [--table4] [--all]
-  unilrc experiment <1..7> [--config FILE] [--scheme S] [--block-kb N]
+  unilrc experiment <1..8> [--config FILE] [--scheme S] [--block-kb N]
                     [--stripes N] [--cross-gbps X] [--backend native|pjrt] [--raw]
+                    [--topology N,N,...] (asymmetric per-cluster node counts)
                     [--gf-kernel auto|scalar|ssse3|avx2|avx512|gfni|neon]
                     [--gf-threads N] [--gf-chunk-kb N]
-                    [--plan-ttl-ms N] [--plan-warmup] [--cache-stats]
+                    [--plan-ttl-ms N] [--plan-warmup [trace|learned|off]]
+                    [--cache-stats]
   unilrc engine [--check TIER]        show GF engine tiers + pool + plan cache
                                       (--check exits non-zero if TIER cannot
                                       run on this CPU — the CI matrix probe)
@@ -68,8 +71,12 @@ burst) · 3 recovery (single-block + full-node) · 4 bandwidth sweep ·
 5 decode throughput · 6 production workload · 7 fault injection
 (deterministic seeded failure schedule; extra knobs: --horizon-hours
 --mttf-hours --mttr-hours --cluster-mttf-hours --cluster-mttr-hours
---tenants --measure-cap; --plan-warmup prefetches decode plans for the
-trace's predicted failure patterns).
+--tenants --measure-cap; --plan-warmup trace prefetches decode plans for
+the trace's predicted failure patterns, --plan-warmup learned derives
+them online from the observed failure history) · 8 elastic topology
+(deterministic scale-out/drain scenario with coordinator-planned block
+migration; knobs: --add-nodes --drain-nodes --add-clusters
+--cluster-nodes --fault-horizon-hours, [elastic] config section).
 
 The GF engine tier defaults to the best the CPU supports; override with
 --gf-kernel / --gf-threads or UNILRC_GF_KERNEL / UNILRC_GF_THREADS.
@@ -146,7 +153,17 @@ fn exp_config(flags: &HashMap<String, String>) -> anyhow::Result<ExpConfig> {
         cfg.seed = s.parse()?;
     }
     if let Some(v) = flags.get("plan-warmup") {
-        cfg.plan_warmup = v != "false";
+        cfg.plan_warmup = experiments::WarmupMode::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("bad --plan-warmup {v:?} (off|trace|learned)"))?;
+    }
+    if let Some(t) = flags.get("topology") {
+        cfg.topology = Some(experiments::parse_topology_spec(t)?);
+    }
+    // validate the (possibly config-file-sourced) topology against the
+    // final scheme for every family up front — a clean error here instead
+    // of a panic deep inside build_dss
+    if let Some(sizes) = &cfg.topology {
+        experiments::validate_topology(cfg.scheme, sizes)?;
     }
     if flags.get("backend").map(|s| s.as_str()) == Some("pjrt") {
         cfg = cfg.with_pjrt()?;
@@ -199,6 +216,39 @@ fn fault_sim_config(
         "--cluster-mttr-hours must be positive while cluster events are enabled"
     );
     Ok(fc)
+}
+
+/// Experiment 8 knobs: config-file `[elastic]` section first, explicit
+/// flags override.
+fn elastic_config(
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<experiments::ElasticConfig> {
+    let mut ec = experiments::ElasticConfig::default();
+    if let Some(path) = flags.get("config") {
+        let file = crate::config::Config::load(path)?;
+        crate::config::apply_elastic_keys(&file, &mut ec);
+    }
+    if let Some(v) = flags.get("add-nodes") {
+        ec.add_nodes = v.parse()?;
+    }
+    if let Some(v) = flags.get("drain-nodes") {
+        ec.drain_nodes = v.parse()?;
+    }
+    if let Some(v) = flags.get("add-clusters") {
+        ec.add_clusters = v.parse()?;
+    }
+    if let Some(v) = flags.get("cluster-nodes") {
+        ec.cluster_nodes = v.parse()?;
+    }
+    if let Some(v) = flags.get("fault-horizon-hours") {
+        ec.fault_horizon_hours = v.parse()?;
+    }
+    anyhow::ensure!(
+        ec.add_nodes + ec.drain_nodes + ec.add_clusters > 0,
+        "experiment 8 needs at least one topology event"
+    );
+    anyhow::ensure!(ec.fault_horizon_hours >= 0.0, "--fault-horizon-hours must be ≥ 0");
+    Ok(ec)
 }
 
 /// `unilrc engine` — report detected and available GF kernel tiers, the
@@ -469,7 +519,7 @@ fn cmd_experiment(which: Option<&str>, flags: &HashMap<String, String>) -> anyho
                 cfg.scheme.label(),
                 cfg.seed,
                 fc.fault.horizon_hours,
-                if cfg.plan_warmup { "on" } else { "off" }
+                cfg.plan_warmup.name()
             );
             for r in &rows {
                 println!("  {:<8} trace digest {:016x}", r.family.name(), r.digest);
@@ -503,7 +553,45 @@ fn cmd_experiment(which: Option<&str>, flags: &HashMap<String, String>) -> anyho
                 );
             }
         }
-        _ => anyhow::bail!("experiment must be 1..7"),
+        Some("8") => {
+            let ec = elastic_config(flags)?;
+            let rows = experiments::exp8_elastic(&cfg, &ec)?;
+            println!(
+                "=== Experiment 8 — elastic topology [{}] (seed {}, +{} nodes, \
+                 -{} drains, +{} clusters) ===",
+                cfg.scheme.label(),
+                cfg.seed,
+                ec.add_nodes,
+                ec.drain_nodes,
+                ec.add_clusters
+            );
+            for r in &rows {
+                println!("  {:<8} scenario digest {:016x}", r.family.name(), r.digest);
+                println!(
+                    "    events {:>2}   moves {:>5} ({} rebuilt)   migrated {:>8.1} MiB \
+                     (cross {:>8.1} MiB)",
+                    r.events,
+                    r.moves,
+                    r.repaired_moves,
+                    r.migrated_bytes as f64 / (1 << 20) as f64,
+                    r.cross_migration_bytes as f64 / (1 << 20) as f64
+                );
+                println!(
+                    "    migration window {:>9.2} ms   exposure P(failure during move) {:.3e}",
+                    r.migration_seconds * 1e3,
+                    r.exposure_prob
+                );
+                println!(
+                    "    invariant checks {:>4} passed   post-scale fault events {}   \
+                     final topology {} clusters / {} live nodes",
+                    r.invariant_checks,
+                    r.post_scale_fault_events,
+                    r.final_clusters,
+                    r.final_live_nodes
+                );
+            }
+        }
+        _ => anyhow::bail!("experiment must be 1..8"),
     }
     if flags.contains_key("cache-stats") {
         print_plan_cache_stats();
@@ -618,10 +706,62 @@ mod tests {
 
     #[test]
     fn plan_warmup_flag_parses() {
+        use crate::experiments::WarmupMode;
+        // bare flag keeps the old boolean meaning: trace-driven warm-up
         let cfg = exp_config(&parse_flags(&["--plan-warmup".into()])).unwrap();
-        assert!(cfg.plan_warmup);
+        assert_eq!(cfg.plan_warmup, WarmupMode::Trace);
+        let learned =
+            exp_config(&parse_flags(&["--plan-warmup".into(), "learned".into()])).unwrap();
+        assert_eq!(learned.plan_warmup, WarmupMode::Learned);
         let off = exp_config(&HashMap::new()).unwrap();
-        assert!(!off.plan_warmup);
+        assert_eq!(off.plan_warmup, WarmupMode::Off);
+        assert!(exp_config(&parse_flags(&["--plan-warmup".into(), "maybe".into()])).is_err());
+    }
+
+    #[test]
+    fn topology_flag_parses_and_validates() {
+        // sized for every S42 family (OLRC chunks need ≥ 11 per cluster)
+        let spec = "14, 13,13,12,12,11,11";
+        let cfg = exp_config(&parse_flags(&["--topology".into(), spec.into()])).unwrap();
+        assert_eq!(cfg.topology, Some(vec![14, 13, 13, 12, 12, 11, 11]));
+        // bad shapes error at parse time…
+        assert!(exp_config(&parse_flags(&["--topology".into(), "9,x".into()])).is_err());
+        assert!(exp_config(&parse_flags(&["--topology".into(), "9,0".into()])).is_err());
+        // …and shape-valid but family-infeasible specs error at validation
+        // (3 clusters of 3 cannot place any S42 family) instead of
+        // panicking inside build_dss
+        assert!(exp_config(&parse_flags(&["--topology".into(), "3,3,3".into()])).is_err());
+    }
+
+    #[test]
+    fn elastic_flags_parse_and_override_defaults() {
+        let f = parse_flags(&[
+            "--add-nodes".into(),
+            "3".into(),
+            "--drain-nodes".into(),
+            "0".into(),
+            "--cluster-nodes".into(),
+            "5".into(),
+            "--fault-horizon-hours".into(),
+            "0".into(),
+        ]);
+        let ec = elastic_config(&f).unwrap();
+        assert_eq!(ec.add_nodes, 3);
+        assert_eq!(ec.drain_nodes, 0);
+        assert_eq!(ec.cluster_nodes, 5);
+        assert_eq!(ec.fault_horizon_hours, 0.0);
+        let d = experiments::ElasticConfig::default();
+        assert_eq!(ec.add_clusters, d.add_clusters, "unset knobs keep defaults");
+        // a scenario with no events at all is rejected
+        let none = parse_flags(&[
+            "--add-nodes".into(),
+            "0".into(),
+            "--drain-nodes".into(),
+            "0".into(),
+            "--add-clusters".into(),
+            "0".into(),
+        ]);
+        assert!(elastic_config(&none).is_err());
     }
 
     #[test]

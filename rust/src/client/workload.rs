@@ -211,7 +211,7 @@ mod tests {
         let code = Scheme::S42.build(CodeFamily::UniLrc);
         let mut dss = Dss::new(
             code,
-            &UniLrcPlace,
+            Box::new(UniLrcPlace),
             Topology::new(6, 9),
             NetConfig::default(),
             Arc::new(NativeCoder),

@@ -237,13 +237,55 @@ pub fn experiment_config(cfg: &Config) -> Result<crate::experiments::ExpConfig> 
     if let Some(s) = cfg.get_usize("experiment", "seed") {
         e.seed = s as u64;
     }
-    if let Some(w) = cfg.get_bool("experiment", "plan_warmup") {
-        e.plan_warmup = w;
+    match cfg.get("experiment", "plan_warmup") {
+        Some(Value::Bool(b)) => {
+            e.plan_warmup = if *b {
+                crate::experiments::WarmupMode::Trace
+            } else {
+                crate::experiments::WarmupMode::Off
+            };
+        }
+        Some(Value::Str(s)) => {
+            e.plan_warmup = crate::experiments::WarmupMode::parse(s)
+                .with_context(|| format!("bad plan_warmup {s:?} (off|trace|learned)"))?;
+        }
+        Some(v) => bail!("bad plan_warmup {v:?} (off|trace|learned or a boolean)"),
+        None => {}
+    }
+    if let Some(spec) = cfg.get_str("topology", "clusters") {
+        // same grammar as --topology (one shared parser; the CLI layer
+        // validates the final scheme/topology pair per family)
+        e.topology = Some(
+            crate::experiments::parse_topology_spec(spec)
+                .with_context(|| format!("bad [topology] clusters {spec:?}"))?,
+        );
     }
     if cfg.get_str("experiment", "backend") == Some("pjrt") {
         e = e.with_pjrt()?;
     }
     Ok(e)
+}
+
+/// Apply the `[elastic]` section onto an experiment-8 config: recognized
+/// keys `add_nodes`, `drain_nodes`, `add_clusters`, `cluster_nodes`
+/// (0 = match the largest existing cluster), `fault_horizon_hours`
+/// (post-scale fault replay; 0 disables). Explicit CLI flags override.
+pub fn apply_elastic_keys(cfg: &Config, e: &mut crate::experiments::ElasticConfig) {
+    if let Some(v) = cfg.get_usize("elastic", "add_nodes") {
+        e.add_nodes = v;
+    }
+    if let Some(v) = cfg.get_usize("elastic", "drain_nodes") {
+        e.drain_nodes = v;
+    }
+    if let Some(v) = cfg.get_usize("elastic", "add_clusters") {
+        e.add_clusters = v;
+    }
+    if let Some(v) = cfg.get_usize("elastic", "cluster_nodes") {
+        e.cluster_nodes = v;
+    }
+    if let Some(v) = cfg.get_f64("elastic", "fault_horizon_hours") {
+        e.fault_horizon_hours = v;
+    }
 }
 
 /// Apply the `[faults]` section onto an experiment-7 config: recognized
@@ -353,10 +395,44 @@ epsilon = 0.1
 
     #[test]
     fn plan_warmup_key_accepted() {
+        use crate::experiments::WarmupMode;
         let on = Config::parse("[experiment]\nplan_warmup = true").unwrap();
-        assert!(experiment_config(&on).unwrap().plan_warmup);
+        assert_eq!(experiment_config(&on).unwrap().plan_warmup, WarmupMode::Trace);
         let off = Config::parse("[experiment]\nplan_warmup = false").unwrap();
-        assert!(!experiment_config(&off).unwrap().plan_warmup);
+        assert_eq!(experiment_config(&off).unwrap().plan_warmup, WarmupMode::Off);
+        let learned = Config::parse("[experiment]\nplan_warmup = \"learned\"").unwrap();
+        assert_eq!(experiment_config(&learned).unwrap().plan_warmup, WarmupMode::Learned);
+        let bad = Config::parse("[experiment]\nplan_warmup = \"maybe\"").unwrap();
+        assert!(experiment_config(&bad).is_err());
+    }
+
+    #[test]
+    fn topology_section_parses_cluster_sizes() {
+        // shape-level parsing only here — per-family feasibility is the
+        // CLI layer's job (experiments::validate_topology)
+        let c = Config::parse("[topology]\nclusters = \"9, 9, 8\"").unwrap();
+        assert_eq!(experiment_config(&c).unwrap().topology, Some(vec![9, 9, 8]));
+        let bad = Config::parse("[topology]\nclusters = \"9,zero\"").unwrap();
+        assert!(experiment_config(&bad).is_err());
+        let zero = Config::parse("[topology]\nclusters = \"9,0\"").unwrap();
+        assert!(experiment_config(&zero).is_err());
+    }
+
+    #[test]
+    fn elastic_section_applies_over_defaults() {
+        let c = Config::parse(
+            "[elastic]\nadd_nodes = 4\ndrain_nodes = 1\ncluster_nodes = 6\n\
+             fault_horizon_hours = 0",
+        )
+        .unwrap();
+        let mut e = crate::experiments::ElasticConfig::default();
+        let d = crate::experiments::ElasticConfig::default();
+        apply_elastic_keys(&c, &mut e);
+        assert_eq!(e.add_nodes, 4);
+        assert_eq!(e.drain_nodes, 1);
+        assert_eq!(e.cluster_nodes, 6);
+        assert_eq!(e.fault_horizon_hours, 0.0);
+        assert_eq!(e.add_clusters, d.add_clusters);
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! The coordinator-owned **block map**: the single mutable source of truth
+//! for "where does every block of every stripe live".
+//!
+//! Placement used to be a pure recomputed function
+//! `(strategy, topology, stripe_idx) → Placement` over a frozen topology —
+//! which cannot express a node joining, draining, or a cluster growing.
+//! The [`BlockMap`] inverts that dataflow: placements are *state*, seeded
+//! by a [`crate::placement::PlacementStrategy`] at ingest and mutated by
+//! the migration scheduler ([`crate::coordinator::migrate`]) when topology
+//! events fire. Every layer (coordinator ops, proxy repair, fault sim,
+//! experiments) consults this map instead of recomputing placements.
+//!
+//! Three indexes are kept in lockstep by [`BlockMap::move_block`]:
+//!
+//! * stripe → per-block `(cluster, node)` (the [`Placement`] rows),
+//! * stripe × cluster → sorted block list (the precomputed per-cluster
+//!   index that replaces the O(n) `Placement::blocks_in_cluster` scans in
+//!   per-event sim loops),
+//! * node → `(stripe, block)` reverse index (whole-node recovery, drains).
+
+use crate::placement::Placement;
+use std::collections::HashMap;
+
+/// Stripe identifier.
+pub type StripeId = usize;
+
+/// Mutable stripe → block → (cluster, node) state with per-cluster and
+/// per-node indexes. `Clone` is cheap enough at prototype scale that the
+/// migration planner works on a scratch copy while deciding moves.
+#[derive(Debug, Default, Clone)]
+pub struct BlockMap {
+    placements: Vec<Placement>,
+    /// `[stripe][cluster]` → sorted blocks of that stripe in that cluster.
+    per_cluster: Vec<Vec<Vec<usize>>>,
+    /// node → (stripe, block) reverse index.
+    by_node: HashMap<usize, Vec<(StripeId, usize)>>,
+}
+
+impl BlockMap {
+    pub fn new() -> BlockMap {
+        BlockMap::default()
+    }
+
+    pub fn stripe_count(&self) -> usize {
+        self.placements.len()
+    }
+
+    /// Register a stripe's placement; returns its id.
+    pub fn insert_stripe(&mut self, placement: Placement, clusters: usize) -> StripeId {
+        let id = self.placements.len();
+        let mut row: Vec<Vec<usize>> = vec![Vec::new(); clusters];
+        for (b, (&c, &node)) in
+            placement.cluster_of.iter().zip(&placement.node_of).enumerate()
+        {
+            row[c].push(b);
+            self.by_node.entry(node).or_default().push((id, b));
+        }
+        self.per_cluster.push(row);
+        self.placements.push(placement);
+        id
+    }
+
+    pub fn placement(&self, stripe: StripeId) -> &Placement {
+        &self.placements[stripe]
+    }
+
+    /// Node hosting a block.
+    pub fn node_of(&self, stripe: StripeId, block: usize) -> usize {
+        self.placements[stripe].node_of[block]
+    }
+
+    /// Cluster hosting a block.
+    pub fn cluster_of(&self, stripe: StripeId, block: usize) -> usize {
+        self.placements[stripe].cluster_of[block]
+    }
+
+    /// Blocks of `stripe` hosted in `cluster`, sorted — the precomputed
+    /// index (no scan). Clusters added after the stripe was placed simply
+    /// return empty.
+    pub fn blocks_in_cluster(&self, stripe: StripeId, cluster: usize) -> &[usize] {
+        self.per_cluster[stripe].get(cluster).map_or(&[], |v| v.as_slice())
+    }
+
+    /// Number of distinct clusters hosting blocks of `stripe`.
+    pub fn clusters_used(&self, stripe: StripeId) -> usize {
+        self.per_cluster[stripe].iter().filter(|v| !v.is_empty()).count()
+    }
+
+    /// All (stripe, block) pairs on a node (unsorted insertion order; the
+    /// list for a node never contains duplicates).
+    pub fn blocks_on_node(&self, node: usize) -> &[(StripeId, usize)] {
+        self.by_node.get(&node).map_or(&[], |v| v.as_slice())
+    }
+
+    /// Blocks hosted on a node (count only — the load metric the migration
+    /// planner balances).
+    pub fn node_load(&self, node: usize) -> usize {
+        self.by_node.get(&node).map_or(0, |v| v.len())
+    }
+
+    /// Reassign one block to `(to_cluster, to_node)`, updating all three
+    /// indexes. The caller (the migration executor) is responsible for
+    /// having moved the bytes.
+    pub fn move_block(
+        &mut self,
+        stripe: StripeId,
+        block: usize,
+        to_cluster: usize,
+        to_node: usize,
+    ) {
+        let from_node = self.placements[stripe].node_of[block];
+        let from_cluster = self.placements[stripe].cluster_of[block];
+        if from_node == to_node {
+            return;
+        }
+        self.placements[stripe].node_of[block] = to_node;
+        self.placements[stripe].cluster_of[block] = to_cluster;
+        // per-cluster index
+        let row = &mut self.per_cluster[stripe];
+        if row.len() <= to_cluster {
+            row.resize(to_cluster + 1, Vec::new());
+        }
+        let from = &mut row[from_cluster];
+        let pos = from.iter().position(|&b| b == block).expect("block indexed");
+        from.remove(pos);
+        let to = &mut row[to_cluster];
+        let at = to.partition_point(|&b| b < block);
+        to.insert(at, block);
+        // reverse index
+        let src = self.by_node.get_mut(&from_node).expect("node indexed");
+        let pos = src.iter().position(|&e| e == (stripe, block)).expect("entry indexed");
+        src.swap_remove(pos);
+        self.by_node.entry(to_node).or_default().push((stripe, block));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn placement() -> Placement {
+        // 4 blocks over 2 clusters of 2 nodes each
+        Placement { cluster_of: vec![0, 0, 1, 1], node_of: vec![0, 1, 2, 3] }
+    }
+
+    #[test]
+    fn indexes_agree_after_insert() {
+        let mut m = BlockMap::new();
+        let s = m.insert_stripe(placement(), 2);
+        assert_eq!(s, 0);
+        assert_eq!(m.stripe_count(), 1);
+        assert_eq!(m.blocks_in_cluster(0, 0), &[0, 1]);
+        assert_eq!(m.blocks_in_cluster(0, 1), &[2, 3]);
+        assert_eq!(m.blocks_in_cluster(0, 7), &[] as &[usize]);
+        assert_eq!(m.clusters_used(0), 2);
+        assert_eq!(m.blocks_on_node(1), &[(0, 1)]);
+        assert_eq!(m.node_load(3), 1);
+        assert_eq!(m.node_of(0, 2), 2);
+        assert_eq!(m.cluster_of(0, 2), 1);
+    }
+
+    #[test]
+    fn move_block_updates_all_indexes() {
+        let mut m = BlockMap::new();
+        m.insert_stripe(placement(), 2);
+        // move block 1 from (cluster 0, node 1) to a brand-new cluster 2
+        m.move_block(0, 1, 2, 9);
+        assert_eq!(m.node_of(0, 1), 9);
+        assert_eq!(m.cluster_of(0, 1), 2);
+        assert_eq!(m.blocks_in_cluster(0, 0), &[0]);
+        assert_eq!(m.blocks_in_cluster(0, 2), &[1]);
+        assert_eq!(m.clusters_used(0), 3);
+        assert!(m.blocks_on_node(1).is_empty());
+        assert_eq!(m.blocks_on_node(9), &[(0, 1)]);
+        // moving back restores sorted order in the per-cluster list
+        m.move_block(0, 1, 0, 1);
+        assert_eq!(m.blocks_in_cluster(0, 0), &[0, 1]);
+        assert_eq!(m.clusters_used(0), 2);
+    }
+
+    #[test]
+    fn self_move_is_a_noop() {
+        let mut m = BlockMap::new();
+        m.insert_stripe(placement(), 2);
+        m.move_block(0, 0, 0, 0);
+        assert_eq!(m.blocks_in_cluster(0, 0), &[0, 1]);
+        assert_eq!(m.blocks_on_node(0), &[(0, 0)]);
+    }
+}

@@ -1,89 +1,87 @@
-//! Coordinator metadata: stripe placements and the (ground-truth) block
-//! store. In the paper's prototype this is the stripe-to-file and
-//! block-to-node mapping the coordinator manages (§4.2).
+//! Coordinator metadata: the mutable [`BlockMap`] (stripe → per-block
+//! `(cluster, node)`, the single source of truth every layer consults)
+//! plus the (ground-truth) block store. In the paper's prototype this is
+//! the stripe-to-file and block-to-node mapping the coordinator manages
+//! (§4.2) — here made *stateful* so topology events can migrate blocks.
 
 use crate::codes::Code;
+use crate::coordinator::block_map::BlockMap;
 use crate::placement::{Placement, PlacementStrategy, Topology};
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Stripe identifier.
-pub type StripeId = usize;
+pub use crate::coordinator::block_map::StripeId;
 
-/// Stripe placements + block data. Blocks are `Arc`'d so ops can hold
-/// references while the virtual network "moves" them.
+/// Block map + block data. Blocks are `Arc`'d so ops can hold references
+/// while the virtual network "moves" them. New stripes are placed by the
+/// owned strategy against the *current* topology; existing placements are
+/// mutated only through [`Metadata::move_block`] (the migration executor).
 pub struct Metadata {
-    placements: Vec<Placement>,
+    map: BlockMap,
     /// (stripe, block) → bytes. Ground truth for verification; a failed
     /// node's blocks are unreadable through ops but remain here.
     blocks: HashMap<(StripeId, usize), Arc<Vec<u8>>>,
-    /// node → (stripe, block) reverse index.
-    by_node: HashMap<usize, Vec<(StripeId, usize)>>,
-    strategy_name: &'static str,
-    template: PlacementTemplate,
-}
-
-struct PlacementTemplate {
+    strategy: Box<dyn PlacementStrategy>,
     n: usize,
-    placements_fn: Box<dyn Fn(usize) -> Placement>,
 }
 
 impl Metadata {
-    pub fn new(code: &Code, strategy: &dyn PlacementStrategy, topo: Topology) -> Metadata {
-        let code_cl = code.clone();
-        let n = code.n();
-        // Pre-compute a rotation cycle of placements; stripes reuse
-        // placements cyclically (strategies rotate by stripe index).
-        let cycle: Vec<Placement> = (0..topo.clusters.max(1))
-            .map(|i| strategy.place(&code_cl, &topo, i))
-            .collect();
-        let name = strategy.name();
-        Metadata {
-            placements: Vec::new(),
-            blocks: HashMap::new(),
-            by_node: HashMap::new(),
-            strategy_name: name,
-            template: PlacementTemplate {
-                n,
-                placements_fn: Box::new(move |idx| cycle[idx % cycle.len()].clone()),
-            },
-        }
+    pub fn new(code: &Code, strategy: Box<dyn PlacementStrategy>) -> Metadata {
+        Metadata { map: BlockMap::new(), blocks: HashMap::new(), strategy, n: code.n() }
     }
 
     pub fn strategy_name(&self) -> &'static str {
-        self.strategy_name
+        self.strategy.name()
     }
 
     pub fn stripe_count(&self) -> usize {
-        self.placements.len()
+        self.map.stripe_count()
     }
 
-    /// Register a new stripe with its block data; returns its id.
-    pub fn add_stripe(&mut self, blocks: Vec<Arc<Vec<u8>>>) -> StripeId {
-        assert_eq!(blocks.len(), self.template.n, "stripe must have n blocks");
-        let id = self.placements.len();
-        let placement = (self.template.placements_fn)(id);
+    /// The coordinator-owned block map (read view; mutations go through
+    /// [`Metadata::move_block`]).
+    pub fn block_map(&self) -> &BlockMap {
+        &self.map
+    }
+
+    /// Register a new stripe with its block data, placed by the strategy
+    /// on the current topology; returns its id.
+    pub fn add_stripe(
+        &mut self,
+        blocks: Vec<Arc<Vec<u8>>>,
+        code: &Code,
+        topo: &Topology,
+    ) -> StripeId {
+        assert_eq!(blocks.len(), self.n, "stripe must have n blocks");
+        let id = self.map.stripe_count();
+        let placement = self.strategy.place(code, topo, id);
+        let sid = self.map.insert_stripe(placement, topo.clusters());
+        debug_assert_eq!(sid, id);
         for (b, data) in blocks.into_iter().enumerate() {
-            let node = placement.node_of[b];
             self.blocks.insert((id, b), data);
-            self.by_node.entry(node).or_default().push((id, b));
         }
-        self.placements.push(placement);
         id
     }
 
     pub fn placement(&self, stripe: StripeId) -> &Placement {
-        &self.placements[stripe]
+        self.map.placement(stripe)
     }
 
     /// Node hosting a block.
     pub fn node_of(&self, stripe: StripeId, block: usize) -> usize {
-        self.placements[stripe].node_of[block]
+        self.map.node_of(stripe, block)
     }
 
     /// Cluster hosting a block.
     pub fn cluster_of(&self, stripe: StripeId, block: usize) -> usize {
-        self.placements[stripe].cluster_of[block]
+        self.map.cluster_of(stripe, block)
+    }
+
+    /// Blocks of `stripe` in `cluster` — the precomputed per-cluster index
+    /// (replaces the O(n) `Placement::blocks_in_cluster` scan in per-event
+    /// sim loops).
+    pub fn blocks_in_cluster(&self, stripe: StripeId, cluster: usize) -> &[usize] {
+        self.map.blocks_in_cluster(stripe, cluster)
     }
 
     /// Block bytes (ground truth).
@@ -93,7 +91,19 @@ impl Metadata {
 
     /// All (stripe, block) pairs on a node.
     pub fn blocks_on_node(&self, node: usize) -> Vec<(StripeId, usize)> {
-        self.by_node.get(&node).cloned().unwrap_or_default()
+        self.map.blocks_on_node(node).to_vec()
+    }
+
+    /// Reassign one block (migration executor only — the bytes must have
+    /// been moved/rebuilt by the caller).
+    pub fn move_block(
+        &mut self,
+        stripe: StripeId,
+        block: usize,
+        to_cluster: usize,
+        to_node: usize,
+    ) {
+        self.map.move_block(stripe, block, to_cluster, to_node);
     }
 }
 
@@ -103,21 +113,21 @@ mod tests {
     use crate::codes::spec::{CodeFamily, Scheme};
     use crate::placement::UniLrcPlace;
 
-    fn meta() -> Metadata {
+    fn meta() -> (Metadata, Code, Topology) {
         let code = Scheme::S42.build(CodeFamily::UniLrc);
         let topo = Topology::new(6, 16);
-        let mut m = Metadata::new(&code, &UniLrcPlace, topo);
+        let mut m = Metadata::new(&code, Box::new(UniLrcPlace));
         for s in 0..4 {
             let blocks: Vec<Arc<Vec<u8>>> =
                 (0..42).map(|b| Arc::new(vec![(s * 42 + b) as u8; 8])).collect();
-            m.add_stripe(blocks);
+            m.add_stripe(blocks, &code, &topo);
         }
-        m
+        (m, code, topo)
     }
 
     #[test]
     fn stripes_register_and_lookup() {
-        let m = meta();
+        let (m, _, _) = meta();
         assert_eq!(m.stripe_count(), 4);
         assert_eq!(m.block_data(2, 5)[0], (2 * 42 + 5) as u8);
         let node = m.node_of(1, 3);
@@ -126,17 +136,54 @@ mod tests {
 
     #[test]
     fn rotation_spreads_stripes() {
-        let m = meta();
+        let (m, _, _) = meta();
         // stripe 0 and 1 place block 0 in different clusters
         assert_ne!(m.cluster_of(0, 0), m.cluster_of(1, 0));
-        // rotation cycle wraps: 0 and 6-th would match (we made 4 stripes)
         assert_eq!(m.cluster_of(0, 0), m.placement(0).cluster_of[0]);
     }
 
     #[test]
     fn reverse_index_complete() {
-        let m = meta();
+        let (m, _, _) = meta();
         let total: usize = (0..6 * 16).map(|n| m.blocks_on_node(n).len()).sum();
         assert_eq!(total, 4 * 42);
+    }
+
+    #[test]
+    fn cluster_index_matches_placement_scan() {
+        let (m, _, topo) = meta();
+        for s in 0..m.stripe_count() {
+            for c in 0..topo.clusters() {
+                assert_eq!(
+                    m.blocks_in_cluster(s, c),
+                    m.placement(s).blocks_in_cluster(c).as_slice(),
+                    "stripe {s} cluster {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn move_block_rehomes_across_indexes() {
+        let (mut m, _, topo) = meta();
+        let old_node = m.node_of(0, 0);
+        let old_cluster = m.cluster_of(0, 0);
+        // free slot in another cluster
+        let to_cluster = (old_cluster + 1) % topo.clusters();
+        let used: Vec<usize> = m.blocks_in_cluster(0, to_cluster).to_vec();
+        let to_node = *topo
+            .nodes_of(to_cluster)
+            .iter()
+            .find(|&&n| !used.iter().any(|&b| m.node_of(0, b) == n))
+            .unwrap();
+        m.move_block(0, 0, to_cluster, to_node);
+        assert_eq!(m.node_of(0, 0), to_node);
+        assert_eq!(m.cluster_of(0, 0), to_cluster);
+        assert!(!m.blocks_on_node(old_node).contains(&(0, 0)));
+        assert!(m.blocks_on_node(to_node).contains(&(0, 0)));
+        assert!(m.blocks_in_cluster(0, to_cluster).contains(&0));
+        assert!(!m.blocks_in_cluster(0, old_cluster).contains(&0));
+        // data is keyed by (stripe, block) — untouched by the move
+        assert_eq!(m.block_data(0, 0)[0], 0);
     }
 }

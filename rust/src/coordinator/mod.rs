@@ -7,13 +7,24 @@
 //! virtual-time [`NetSim`] (DESIGN.md §5 substitution).
 //! Operations return latencies on the virtual clock with the measured
 //! coding time folded in.
+//!
+//! The coordinator also owns the **elastic-topology control loop**:
+//! [`Dss::apply_topology_event`] mutates the live [`Topology`], asks the
+//! migration scheduler ([`migrate`]) for an invariant-preserving move
+//! plan, and executes it as batched transfer + coding waves on the
+//! virtual clock — dead-source moves rebuild through the same batched
+//! [`ProxyCtx::repair_node`] pipeline every repair uses.
 
+pub mod block_map;
 pub mod metadata;
+pub mod migrate;
 
+pub use block_map::BlockMap;
 pub use metadata::{Metadata, StripeId};
+pub use migrate::{BlockMove, MigrationPlan, MigrationPolicy};
 
 use crate::codes::Code;
-use crate::placement::{PlacementStrategy, Topology};
+use crate::placement::{NodeState, PlacementStrategy, Topology, TopologyEvent};
 use crate::proxy::{OpOutcome, ProxyCtx, RepairRequest};
 use crate::prng::Prng;
 use crate::runtime::CodingEngine;
@@ -78,26 +89,21 @@ pub struct Dss {
 }
 
 impl Dss {
-    /// Build a DSS for `code` placed by `strategy` on `topo`.
+    /// Build a DSS for `code` placed by `strategy` on `topo`. The strategy
+    /// is owned: new stripes (and only new stripes) are placed by it
+    /// against the *current* topology; existing placements live in the
+    /// coordinator's [`BlockMap`] and only move through migration.
     pub fn new(
         code: Code,
-        strategy: &dyn PlacementStrategy,
+        strategy: Box<dyn PlacementStrategy>,
         topo: Topology,
         net_cfg: NetConfig,
         engine: Arc<dyn CodingEngine>,
         cfg: DssConfig,
     ) -> Dss {
-        let meta = Metadata::new(&code, strategy, topo);
-        Dss {
-            code,
-            topo,
-            net: NetSim::new(topo, net_cfg),
-            cfg,
-            engine,
-            meta,
-            failed: HashSet::new(),
-            clock: 0.0,
-        }
+        let meta = Metadata::new(&code, strategy);
+        let net = NetSim::new(&topo, net_cfg);
+        Dss { code, topo, net, cfg, engine, meta, failed: HashSet::new(), clock: 0.0 }
     }
 
     pub fn metadata(&self) -> &Metadata {
@@ -142,7 +148,7 @@ impl Dss {
         let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
         let parities = self.engine.encode(&self.code, &drefs)?;
         let blocks: Vec<Arc<Vec<u8>>> = data.into_iter().chain(parities).map(Arc::new).collect();
-        Ok(self.meta.add_stripe(blocks))
+        Ok(self.meta.add_stripe(blocks, &self.code, &self.topo))
     }
 
     // ------------------------------------------------------------ failures
@@ -387,14 +393,17 @@ impl Dss {
         Ok(OpResult { latency: done - t0, bytes: bs, cross_bytes: self.net.cross_bytes - cross0 })
     }
 
-    /// Pick a live node in `cluster` not already hosting a block of the
-    /// stripe; falls back to any live node elsewhere.
+    /// Pick a live *active* node in `cluster` not already hosting a block
+    /// of the stripe; falls back to any active node elsewhere.
     fn spare_node(&self, stripe: StripeId, cluster: usize) -> anyhow::Result<usize> {
         let used: HashSet<usize> =
             (0..self.code.n()).map(|b| self.meta.node_of(stripe, b)).collect();
-        let free = |n: &usize| !used.contains(n) && !self.failed.contains(n);
+        let free =
+            |n: &usize| !used.contains(n) && !self.failed.contains(n) && self.topo.is_active(*n);
         self.topo
             .nodes_of(cluster)
+            .iter()
+            .copied()
             .find(free)
             .or_else(|| (0..self.topo.total_nodes()).find(free))
             .ok_or_else(|| anyhow::anyhow!("no spare node available"))
@@ -469,4 +478,203 @@ impl Dss {
             cross_bytes: self.net.cross_bytes - cross0,
         })
     }
+
+    // ----------------------------------------------------- elastic topology
+
+    /// Apply a topology event: mutate the live [`Topology`], plan the
+    /// minimal invariant-preserving block migration
+    /// ([`migrate`]), execute it as batched transfer/coding waves on the
+    /// virtual clock, and commit the moves to the coordinator's
+    /// [`BlockMap`]. Returns the migration metrics.
+    pub fn apply_topology_event(
+        &mut self,
+        ev: TopologyEvent,
+    ) -> anyhow::Result<MigrationReport> {
+        match ev {
+            TopologyEvent::AddNode { cluster } => {
+                anyhow::ensure!(cluster < self.topo.clusters(), "no such cluster {cluster}");
+                anyhow::ensure!(!self.topo.is_retired(cluster), "cluster {cluster} is retired");
+                let node = self.topo.add_node(cluster);
+                self.net.sync(&self.topo);
+                let plan = migrate::plan_add_node(
+                    &self.topo,
+                    self.meta.block_map(),
+                    &self.failed,
+                    cluster,
+                    node,
+                );
+                let report = self.execute_migration(ev, &plan)?;
+                self.topo.set_state(node, NodeState::Active);
+                Ok(report)
+            }
+            TopologyEvent::DrainNode { node } => {
+                anyhow::ensure!(node < self.topo.total_nodes(), "no such node {node}");
+                anyhow::ensure!(self.topo.is_live(node), "node {node} is already dead");
+                // Plan before touching lifecycle state, so an unplannable
+                // drain leaves the system exactly as it was. Planning with
+                // the victim still Active is sound: every move the plan
+                // contains is for a stripe the victim hosts, and a stripe's
+                // own nodes are never target-eligible.
+                let policy = MigrationPolicy::for_strategy(self.meta.strategy_name());
+                let plan = migrate::plan_drain(
+                    &self.code,
+                    policy,
+                    &self.topo,
+                    self.meta.block_map(),
+                    &self.failed,
+                    node,
+                )?;
+                self.topo.set_state(node, NodeState::Draining);
+                let report = self.execute_migration(ev, &plan)?;
+                self.topo.set_state(node, NodeState::Dead);
+                self.failed.remove(&node); // dead ≠ failed: nothing left to repair
+                Ok(report)
+            }
+            TopologyEvent::AddCluster { nodes } => {
+                anyhow::ensure!(nodes > 0, "a cluster needs at least one node");
+                let cluster = self.topo.add_cluster(nodes);
+                self.net.sync(&self.topo);
+                let plan = migrate::plan_add_cluster(
+                    &self.topo,
+                    self.meta.block_map(),
+                    &self.failed,
+                    cluster,
+                );
+                let report = self.execute_migration(ev, &plan)?;
+                let members = self.topo.nodes_of(cluster).to_vec();
+                for n in members {
+                    self.topo.set_state(n, NodeState::Active);
+                }
+                Ok(report)
+            }
+            TopologyEvent::DecommissionCluster { cluster } => {
+                anyhow::ensure!(cluster < self.topo.clusters(), "no such cluster {cluster}");
+                anyhow::ensure!(!self.topo.is_retired(cluster), "cluster {cluster} is retired");
+                // Plan first: an undecommissionable cluster (no eligible
+                // homes) must leave the topology untouched and the event
+                // retryable. The planner already skips the retiring
+                // cluster as a relocation target, so planning while it is
+                // still open/active is sound.
+                let plan = migrate::plan_decommission(
+                    &self.topo,
+                    self.meta.block_map(),
+                    &self.failed,
+                    cluster,
+                )?;
+                self.topo.retire_cluster(cluster);
+                let members = self.topo.nodes_of(cluster).to_vec();
+                for &n in &members {
+                    if self.topo.is_live(n) {
+                        self.topo.set_state(n, NodeState::Draining);
+                    }
+                }
+                let report = self.execute_migration(ev, &plan)?;
+                for &n in &members {
+                    self.topo.set_state(n, NodeState::Dead);
+                    self.failed.remove(&n);
+                }
+                Ok(report)
+            }
+        }
+    }
+
+    /// Execute a migration plan as one event on the virtual clock:
+    ///
+    /// * moves whose source is readable are direct node→node transfers
+    ///   (gateway-metered when they cross clusters), all issued at `t0`;
+    /// * moves whose source is failed/dead rebuild through **one** batched
+    ///   [`ProxyCtx::repair_node`] submission — the same
+    ///   `GfEngine::batch`-backed pipeline every repair burst uses, so
+    ///   migration coding never spawns per-move threads or falls back to
+    ///   scalar paths — then ship proxy→target.
+    ///
+    /// Every rebuilt block is verified against ground truth before the
+    /// map is updated.
+    fn execute_migration(
+        &mut self,
+        event: TopologyEvent,
+        plan: &MigrationPlan,
+    ) -> anyhow::Result<MigrationReport> {
+        let t0 = self.clock;
+        let cross0 = self.net.cross_bytes;
+        let bs = self.cfg.block_size;
+        let mut done = t0;
+        let mut direct: Vec<&BlockMove> = Vec::new();
+        let mut rebuild: Vec<&BlockMove> = Vec::new();
+        for mv in &plan.moves {
+            let src_dead =
+                self.failed.contains(&mv.from_node) || !self.topo.is_live(mv.from_node);
+            if src_dead {
+                rebuild.push(mv);
+            } else {
+                direct.push(mv);
+            }
+        }
+        for mv in &direct {
+            let t = self.net.transfer(
+                t0,
+                Endpoint::Node(mv.from_node),
+                Endpoint::Node(mv.to_node),
+                bs,
+            );
+            done = done.max(t);
+        }
+        if !rebuild.is_empty() {
+            let reqs: Vec<RepairRequest> = rebuild
+                .iter()
+                .map(|mv| RepairRequest {
+                    stripe: mv.stripe,
+                    block: mv.block,
+                    erased: self.failed_blocks(mv.stripe),
+                })
+                .collect();
+            let outcomes = {
+                let mut ctx = self.proxy_ctx();
+                ctx.repair_node(t0, &reqs)?
+            };
+            for (mv, oc) in rebuild.iter().zip(outcomes) {
+                let OpOutcome { ready_at, rebuilt, home } = oc;
+                anyhow::ensure!(
+                    rebuilt.as_slice() == self.meta.block_data(mv.stripe, mv.block).as_slice(),
+                    "migration rebuild produced corrupt bytes"
+                );
+                crate::gf::pool::recycle(rebuilt);
+                let t = self.net.transfer(
+                    ready_at,
+                    Endpoint::Proxy(home),
+                    Endpoint::Node(mv.to_node),
+                    bs,
+                );
+                done = done.max(t);
+            }
+        }
+        for mv in &plan.moves {
+            self.meta.move_block(mv.stripe, mv.block, mv.to_cluster, mv.to_node);
+        }
+        self.clock = done;
+        Ok(MigrationReport {
+            event,
+            moves: plan.len(),
+            repaired_moves: rebuild.len(),
+            bytes_moved: plan.len() * bs,
+            cross_bytes: self.net.cross_bytes - cross0,
+            seconds: done - t0,
+        })
+    }
+}
+
+/// Metrics of one executed topology event.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationReport {
+    pub event: TopologyEvent,
+    /// Blocks moved (direct + rebuilt).
+    pub moves: usize,
+    /// Moves whose source was failed/dead and went through the batched
+    /// repair pipeline instead of a direct copy.
+    pub repaired_moves: usize,
+    pub bytes_moved: usize,
+    /// Cross-cluster bytes this event pushed through gateways.
+    pub cross_bytes: u64,
+    /// Virtual seconds from event start to the last block landing.
+    pub seconds: f64,
 }

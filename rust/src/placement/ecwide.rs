@@ -60,16 +60,17 @@ impl PlacementStrategy for EcWide {
 
     fn assign_clusters(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Vec<usize> {
         let chunks = Self::chunks(code);
+        let open = topo.open_clusters();
         assert!(
-            topo.clusters >= chunks.len(),
-            "ECWide needs {} clusters for {}, topology has {}",
+            open.len() >= chunks.len(),
+            "ECWide needs {} clusters for {}, topology has {} open",
             chunks.len(),
             code.name(),
-            topo.clusters
+            open.len()
         );
         let mut cluster_of = vec![usize::MAX; code.n()];
         for (ci, chunk) in chunks.iter().enumerate() {
-            let c = (ci + stripe_idx) % topo.clusters;
+            let c = open[(ci + stripe_idx) % open.len()];
             for &b in chunk {
                 cluster_of[b] = c;
             }

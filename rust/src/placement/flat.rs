@@ -13,7 +13,8 @@ impl PlacementStrategy for FlatPlace {
     }
 
     fn assign_clusters(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Vec<usize> {
-        (0..code.n()).map(|b| (b + stripe_idx) % topo.clusters).collect()
+        let open = topo.open_clusters();
+        (0..code.n()).map(|b| open[(b + stripe_idx) % open.len()]).collect()
     }
 }
 

@@ -1,8 +1,15 @@
 //! Cluster topology and stripe placement (§2.3.2 *topology locality*).
 //!
-//! A [`Topology`] is a two-tier DSS: `z` clusters of `nodes_per_cluster`
-//! nodes each, with fast inner-cluster links and an oversubscribed gateway
-//! per cluster. A [`PlacementStrategy`] maps each block of a stripe to a
+//! A [`Topology`] is a two-tier DSS: clusters of nodes with fast
+//! inner-cluster links and an oversubscribed gateway per cluster. Unlike
+//! the original frozen `(clusters, nodes_per_cluster)` pair, the topology
+//! is *elastic*: clusters may have different sizes, every node carries a
+//! lifecycle state ([`NodeState`]), and [`TopologyEvent`]s (scale-out,
+//! drain, decommission) mutate it at runtime — the coordinator's
+//! migration scheduler ([`crate::coordinator::migrate`]) moves blocks to
+//! follow.
+//!
+//! A [`PlacementStrategy`] maps each block of a stripe to a
 //! (cluster, node) pair:
 //!
 //! * [`unilrc_place::UniLrcPlace`] — the paper's "one local group, one
@@ -13,7 +20,8 @@
 //! * [`flat::FlatPlace`] — topology-oblivious round-robin (ablation).
 //!
 //! All strategies must keep one-cluster-failure tolerance (verified by
-//! integration tests: erasing any whole cluster's blocks decodes).
+//! integration tests: erasing any whole cluster's blocks decodes), and
+//! the migration scheduler must preserve it across every move.
 
 pub mod ecwide;
 pub mod flat;
@@ -25,38 +33,196 @@ pub use unilrc_place::{UniLrcPlace, UniLrcSpread};
 
 use crate::codes::Code;
 
-/// Two-tier cluster topology.
+/// Lifecycle state of a storage node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Freshly added by a scale-out event; receives migrated blocks but no
+    /// new stripe placements until activated.
+    Joining,
+    /// Serving — placement target and repair source.
+    Active,
+    /// Being emptied by the migration scheduler; still readable, no longer
+    /// a placement or migration target.
+    Draining,
+    /// Decommissioned. Never reused; node ids are stable forever.
+    Dead,
+}
+
+/// A topology mutation — the system events of the paper's "frequent
+/// system events" scenario family. Applied by
+/// [`crate::coordinator::Dss::apply_topology_event`], which also plans and
+/// executes the block migration that keeps placement invariants true.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyEvent {
+    /// Add one node to an existing cluster (intra-cluster rebalance).
+    AddNode { cluster: usize },
+    /// Drain a node: move every block off it, then mark it dead.
+    DrainNode { node: usize },
+    /// Add a whole new cluster of `nodes` nodes (cross-cluster rebalance).
+    AddCluster { nodes: usize },
+    /// Retire a cluster: relocate every block it hosts, then kill it.
+    DecommissionCluster { cluster: usize },
+}
+
+/// Two-tier cluster topology with variable-size clusters and per-node
+/// lifecycle states. Node ids are stable: adding nodes allocates fresh
+/// ids, draining / decommissioning marks ids [`NodeState::Dead`] but never
+/// reassigns them — so block maps, fault clocks and network meters keyed
+/// by node id survive every topology event.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Topology {
-    pub clusters: usize,
-    pub nodes_per_cluster: usize,
+    /// cluster → member node ids in slot order (all lifecycle states).
+    members: Vec<Vec<usize>>,
+    /// node id → owning cluster.
+    cluster_of: Vec<usize>,
+    /// node id → lifecycle state.
+    states: Vec<NodeState>,
+    /// cluster → closed to new placements (decommissioned).
+    retired: Vec<bool>,
 }
 
 impl Topology {
+    /// Uniform topology: `clusters` clusters of `nodes_per_cluster` active
+    /// nodes each, numbered cluster-major (the original frozen shape).
     pub fn new(clusters: usize, nodes_per_cluster: usize) -> Topology {
         assert!(clusters > 0 && nodes_per_cluster > 0);
-        Topology { clusters, nodes_per_cluster }
+        Self::with_cluster_sizes(&vec![nodes_per_cluster; clusters])
     }
 
+    /// Asymmetric topology from explicit per-cluster sizes
+    /// (`--topology 8,8,4,4`).
+    pub fn with_cluster_sizes(sizes: &[usize]) -> Topology {
+        assert!(!sizes.is_empty() && sizes.iter().all(|&s| s > 0), "clusters must be non-empty");
+        let mut members = Vec::with_capacity(sizes.len());
+        let mut cluster_of = Vec::new();
+        let mut next = 0usize;
+        for (c, &s) in sizes.iter().enumerate() {
+            members.push((next..next + s).collect());
+            cluster_of.extend(std::iter::repeat(c).take(s));
+            next += s;
+        }
+        Topology {
+            members,
+            states: vec![NodeState::Active; cluster_of.len()],
+            cluster_of,
+            retired: vec![false; sizes.len()],
+        }
+    }
+
+    /// Number of clusters (including retired ones — cluster ids are stable).
+    pub fn clusters(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Total node ids ever allocated (including dead nodes).
     pub fn total_nodes(&self) -> usize {
-        self.clusters * self.nodes_per_cluster
+        self.cluster_of.len()
     }
 
     /// Cluster that owns a (global) node id.
     pub fn cluster_of_node(&self, node: usize) -> usize {
         assert!(node < self.total_nodes());
-        node / self.nodes_per_cluster
+        self.cluster_of[node]
     }
 
     /// Global node id from (cluster, slot).
     pub fn node_id(&self, cluster: usize, slot: usize) -> usize {
-        assert!(cluster < self.clusters && slot < self.nodes_per_cluster);
-        cluster * self.nodes_per_cluster + slot
+        assert!(cluster < self.clusters() && slot < self.members[cluster].len());
+        self.members[cluster][slot]
     }
 
-    /// Node ids of a cluster.
-    pub fn nodes_of(&self, cluster: usize) -> std::ops::Range<usize> {
-        cluster * self.nodes_per_cluster..(cluster + 1) * self.nodes_per_cluster
+    /// Node ids of a cluster (every lifecycle state).
+    pub fn nodes_of(&self, cluster: usize) -> &[usize] {
+        &self.members[cluster]
+    }
+
+    /// Member count of a cluster (every lifecycle state).
+    pub fn cluster_size(&self, cluster: usize) -> usize {
+        self.members[cluster].len()
+    }
+
+    /// Largest cluster member count.
+    pub fn max_cluster_size(&self) -> usize {
+        self.members.iter().map(|m| m.len()).max().unwrap_or(0)
+    }
+
+    /// Lifecycle state of a node.
+    pub fn state(&self, node: usize) -> NodeState {
+        self.states[node]
+    }
+
+    pub fn set_state(&mut self, node: usize, state: NodeState) {
+        self.states[node] = state;
+    }
+
+    /// Node is a valid *placement* target for new stripes.
+    pub fn is_active(&self, node: usize) -> bool {
+        self.states[node] == NodeState::Active
+    }
+
+    /// Node may receive *migrated* blocks (joining nodes take blocks
+    /// before they start taking new placements).
+    pub fn is_migratable(&self, node: usize) -> bool {
+        matches!(self.states[node], NodeState::Active | NodeState::Joining)
+    }
+
+    /// Node is not dead — it holds readable data and draws fault clocks.
+    pub fn is_live(&self, node: usize) -> bool {
+        self.states[node] != NodeState::Dead
+    }
+
+    /// Active node ids of a cluster, in slot order.
+    pub fn active_nodes_of(&self, cluster: usize) -> Vec<usize> {
+        self.members[cluster].iter().copied().filter(|&n| self.is_active(n)).collect()
+    }
+
+    /// Migration-target node ids of a cluster, in slot order.
+    pub fn migratable_nodes_of(&self, cluster: usize) -> Vec<usize> {
+        self.members[cluster].iter().copied().filter(|&n| self.is_migratable(n)).collect()
+    }
+
+    /// All live node ids (fault clocks tick exactly for these).
+    pub fn live_nodes(&self) -> Vec<usize> {
+        (0..self.total_nodes()).filter(|&n| self.is_live(n)).collect()
+    }
+
+    /// Clusters open to placement (not retired), in id order.
+    pub fn open_clusters(&self) -> Vec<usize> {
+        (0..self.clusters()).filter(|&c| !self.retired[c]).collect()
+    }
+
+    pub fn is_retired(&self, cluster: usize) -> bool {
+        self.retired[cluster]
+    }
+
+    /// Close a cluster to placement (decommission).
+    pub fn retire_cluster(&mut self, cluster: usize) {
+        self.retired[cluster] = true;
+    }
+
+    /// Allocate a fresh node id in `cluster`, state [`NodeState::Joining`].
+    pub fn add_node(&mut self, cluster: usize) -> usize {
+        assert!(cluster < self.clusters() && !self.retired[cluster]);
+        let id = self.cluster_of.len();
+        self.cluster_of.push(cluster);
+        self.states.push(NodeState::Joining);
+        self.members[cluster].push(id);
+        id
+    }
+
+    /// Allocate a fresh cluster of `nodes` joining nodes; returns its id.
+    pub fn add_cluster(&mut self, nodes: usize) -> usize {
+        assert!(nodes > 0);
+        let c = self.members.len();
+        self.members.push(Vec::with_capacity(nodes));
+        self.retired.push(false);
+        for _ in 0..nodes {
+            let id = self.cluster_of.len();
+            self.cluster_of.push(c);
+            self.states.push(NodeState::Joining);
+            self.members[c].push(id);
+        }
+        c
     }
 }
 
@@ -70,12 +236,15 @@ pub struct Placement {
 }
 
 impl Placement {
-    /// Blocks hosted in `cluster`.
+    /// Blocks hosted in `cluster` (O(n) scan — one-shot analysis helper;
+    /// the sim/event hot paths use the precomputed per-cluster index on
+    /// [`crate::coordinator::BlockMap`] instead).
     pub fn blocks_in_cluster(&self, cluster: usize) -> Vec<usize> {
         (0..self.cluster_of.len()).filter(|&b| self.cluster_of[b] == cluster).collect()
     }
 
-    /// Number of distinct clusters used.
+    /// Number of distinct clusters used (O(n log n) — analysis helper; hot
+    /// paths use [`crate::coordinator::BlockMap::clusters_used`]).
     pub fn clusters_used(&self) -> usize {
         let mut c: Vec<usize> = self.cluster_of.clone();
         c.sort_unstable();
@@ -96,7 +265,7 @@ impl Placement {
         assert_eq!(self.cluster_of.len(), code.n());
         assert_eq!(self.node_of.len(), code.n());
         for b in 0..code.n() {
-            assert!(self.cluster_of[b] < topo.clusters, "cluster out of range");
+            assert!(self.cluster_of[b] < topo.clusters(), "cluster out of range");
             assert_eq!(
                 topo.cluster_of_node(self.node_of[b]),
                 self.cluster_of[b],
@@ -117,26 +286,30 @@ pub trait PlacementStrategy {
     fn name(&self) -> &'static str;
 
     /// Assign clusters to every block of `code`'s stripe. `stripe_idx`
-    /// rotates assignments so consecutive stripes spread load.
+    /// rotates assignments so consecutive stripes spread load. Strategies
+    /// must only use open (non-retired) clusters.
     fn assign_clusters(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Vec<usize>;
 
     /// Full placement: clusters via [`Self::assign_clusters`], then node
-    /// slots within each cluster (rotated by stripe so full-node recovery
-    /// parallelizes across surviving nodes).
+    /// slots within each cluster's *active* members (rotated by stripe so
+    /// full-node recovery parallelizes across surviving nodes).
     fn place(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Placement {
         let cluster_of = self.assign_clusters(code, topo, stripe_idx);
-        let mut next_slot = vec![0usize; topo.clusters];
+        let active: Vec<Vec<usize>> =
+            (0..topo.clusters()).map(|c| topo.active_nodes_of(c)).collect();
+        let mut next_slot = vec![0usize; topo.clusters()];
         let mut node_of = vec![0usize; code.n()];
         for b in 0..code.n() {
             let c = cluster_of[b];
-            let slot = (next_slot[c] + stripe_idx) % topo.nodes_per_cluster;
+            let slots = &active[c];
             assert!(
-                next_slot[c] < topo.nodes_per_cluster,
-                "{}: cluster {c} overflows its {} nodes",
+                next_slot[c] < slots.len(),
+                "{}: cluster {c} overflows its {} active nodes",
                 self.name(),
-                topo.nodes_per_cluster
+                slots.len()
             );
-            node_of[b] = topo.node_id(c, slot);
+            let slot = (next_slot[c] + stripe_idx) % slots.len();
+            node_of[b] = slots[slot];
             next_slot[c] += 1;
         }
         let p = Placement { cluster_of, node_of };
@@ -153,15 +326,67 @@ mod tests {
     fn topology_node_math() {
         let t = Topology::new(6, 8);
         assert_eq!(t.total_nodes(), 48);
+        assert_eq!(t.clusters(), 6);
         assert_eq!(t.cluster_of_node(0), 0);
         assert_eq!(t.cluster_of_node(47), 5);
         assert_eq!(t.node_id(2, 3), 19);
-        assert_eq!(t.nodes_of(1), 8..16);
+        assert_eq!(t.nodes_of(1), &(8..16).collect::<Vec<_>>()[..]);
+        assert_eq!(t.cluster_size(1), 8);
     }
 
     #[test]
     #[should_panic]
     fn node_out_of_range_panics() {
         Topology::new(2, 4).cluster_of_node(8);
+    }
+
+    #[test]
+    fn asymmetric_clusters() {
+        let t = Topology::with_cluster_sizes(&[3, 5, 2]);
+        assert_eq!(t.clusters(), 3);
+        assert_eq!(t.total_nodes(), 10);
+        assert_eq!(t.cluster_size(0), 3);
+        assert_eq!(t.cluster_size(1), 5);
+        assert_eq!(t.nodes_of(2), &[8, 9]);
+        assert_eq!(t.cluster_of_node(7), 1);
+        assert_eq!(t.max_cluster_size(), 5);
+    }
+
+    #[test]
+    fn node_lifecycle_and_scale_out() {
+        let mut t = Topology::new(2, 3);
+        assert!(t.is_active(0) && t.is_live(0));
+        // scale-out: fresh id, joining state, migratable but not placeable
+        let n = t.add_node(1);
+        assert_eq!(n, 6);
+        assert_eq!(t.cluster_of_node(n), 1);
+        assert_eq!(t.state(n), NodeState::Joining);
+        assert!(t.is_migratable(n) && !t.is_active(n));
+        assert_eq!(t.active_nodes_of(1), vec![3, 4, 5]);
+        assert_eq!(t.migratable_nodes_of(1), vec![3, 4, 5, 6]);
+        t.set_state(n, NodeState::Active);
+        assert_eq!(t.active_nodes_of(1), vec![3, 4, 5, 6]);
+        // drain: still live (readable) but neither placeable nor migratable
+        t.set_state(0, NodeState::Draining);
+        assert!(t.is_live(0) && !t.is_active(0) && !t.is_migratable(0));
+        assert_eq!(t.active_nodes_of(0), vec![1, 2]);
+        t.set_state(0, NodeState::Dead);
+        assert!(!t.is_live(0));
+        assert!(!t.live_nodes().contains(&0));
+        assert_eq!(t.total_nodes(), 7, "dead ids are never reused");
+    }
+
+    #[test]
+    fn add_and_retire_cluster() {
+        let mut t = Topology::new(2, 2);
+        let c = t.add_cluster(3);
+        assert_eq!(c, 2);
+        assert_eq!(t.clusters(), 3);
+        assert_eq!(t.nodes_of(2), &[4, 5, 6]);
+        assert!(t.nodes_of(2).iter().all(|&n| t.state(n) == NodeState::Joining));
+        assert_eq!(t.open_clusters(), vec![0, 1, 2]);
+        t.retire_cluster(0);
+        assert!(t.is_retired(0));
+        assert_eq!(t.open_clusters(), vec![1, 2]);
     }
 }

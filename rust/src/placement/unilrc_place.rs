@@ -9,7 +9,7 @@ use super::{PlacementStrategy, Topology};
 use crate::codes::Code;
 
 /// "One local group, one cluster" placement. Requires the code's groups to
-/// partition the stripe (true for UniLRC and ULRC) and `topo.clusters ≥
+/// partition the stripe (true for UniLRC and ULRC) and `topo.clusters() ≥
 /// number of groups`.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct UniLrcPlace;
@@ -22,15 +22,16 @@ impl PlacementStrategy for UniLrcPlace {
     fn assign_clusters(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Vec<usize> {
         let z = code.groups().len();
         assert!(z > 0, "{} requires local groups", self.name());
+        let open = topo.open_clusters();
         assert!(
-            topo.clusters >= z,
-            "need ≥ {z} clusters for {}",
+            open.len() >= z,
+            "need ≥ {z} open clusters for {}",
             code.name()
         );
         let mut cluster_of = vec![usize::MAX; code.n()];
         for (gi, grp) in code.groups().iter().enumerate() {
             // rotate group→cluster by stripe so stripes spread over clusters
-            let c = (gi + stripe_idx) % topo.clusters;
+            let c = open[(gi + stripe_idx) % open.len()];
             for &m in &grp.members {
                 assert!(
                     cluster_of[m] == usize::MAX || cluster_of[m] == c,
@@ -65,9 +66,10 @@ impl PlacementStrategy for UniLrcSpread {
     fn assign_clusters(&self, code: &Code, topo: &Topology, stripe_idx: usize) -> Vec<usize> {
         let l = code.groups().len();
         assert!(l > 0, "{} requires local groups", self.name());
+        let open = topo.open_clusters();
         assert!(
-            topo.clusters >= l * self.t,
-            "need ≥ {} clusters for {} with t={}",
+            open.len() >= l * self.t,
+            "need ≥ {} open clusters for {} with t={}",
             l * self.t,
             code.name(),
             self.t
@@ -75,7 +77,7 @@ impl PlacementStrategy for UniLrcSpread {
         let mut cluster_of = vec![usize::MAX; code.n()];
         for (gi, grp) in code.groups().iter().enumerate() {
             for (mi, &m) in grp.members.iter().enumerate() {
-                let c = (gi * self.t + mi % self.t + stripe_idx) % topo.clusters;
+                let c = open[(gi * self.t + mi % self.t + stripe_idx) % open.len()];
                 assert!(cluster_of[m] == usize::MAX, "overlapping groups");
                 cluster_of[m] = c;
             }

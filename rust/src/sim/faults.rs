@@ -189,10 +189,16 @@ impl FaultTrace {
     /// `(topo, cfg, seed)`. Each node and each cluster draws from its own
     /// seeded stream, so the trace is independent of iteration order,
     /// thread counts, and everything else in the process.
-    pub fn generate(topo: Topology, cfg: &FaultConfig, seed: u64) -> FaultTrace {
+    ///
+    /// Fail/repair clocks follow **live membership**: only nodes that are
+    /// not [`crate::placement::NodeState::Dead`] draw a stream (a drained
+    /// node generates no events; a scaled-out node gets clocks keyed to
+    /// its fresh stable id), and correlated cluster events only fire for
+    /// clusters with at least one live member.
+    pub fn generate(topo: &Topology, cfg: &FaultConfig, seed: u64) -> FaultTrace {
         let mut events: Vec<FaultEvent> = Vec::new();
         if cfg.node_mttf_hours > 0.0 && cfg.node_mttr_hours > 0.0 {
-            for node in 0..topo.total_nodes() {
+            for node in topo.live_nodes() {
                 // splitmix64 seeding decorrelates consecutive stream ids
                 let mut prng = Prng::new(seed.wrapping_add(1 + node as u64));
                 renewal(
@@ -207,7 +213,10 @@ impl FaultTrace {
             }
         }
         if cfg.cluster_mttf_hours > 0.0 && cfg.cluster_mttr_hours > 0.0 {
-            for cluster in 0..topo.clusters {
+            for cluster in 0..topo.clusters() {
+                if !topo.nodes_of(cluster).iter().any(|&n| topo.is_live(n)) {
+                    continue;
+                }
                 let mut prng = Prng::new(seed.wrapping_add(1_000_003 + cluster as u64));
                 renewal(
                     &mut prng,
@@ -230,7 +239,7 @@ impl FaultTrace {
             events,
             horizon_hours: cfg.horizon_hours,
             nodes: topo.total_nodes(),
-            clusters: topo.clusters,
+            clusters: topo.clusters(),
         }
     }
 
@@ -249,16 +258,20 @@ impl FaultTrace {
     }
 
     /// Distinct node ids that fail at least once (directly or through a
-    /// cluster event) — the support of predicted failure patterns.
-    pub fn failing_nodes(&self) -> Vec<usize> {
-        let npc = self.nodes / self.clusters.max(1);
+    /// cluster event) — the support of predicted failure patterns. Cluster
+    /// events expand through `topo`'s live membership (clusters are no
+    /// longer uniform, so the old `node / nodes_per_cluster` arithmetic
+    /// would misattribute members on elastic topologies).
+    pub fn failing_nodes(&self, topo: &Topology) -> Vec<usize> {
         let mut seen = vec![false; self.nodes];
         for e in &self.events {
             match e.kind {
                 FaultKind::NodeFail(n) => seen[n] = true,
                 FaultKind::ClusterFail(c) => {
-                    for n in c * npc..((c + 1) * npc).min(self.nodes) {
-                        seen[n] = true;
+                    for &n in topo.nodes_of(c) {
+                        if topo.is_live(n) {
+                            seen[n] = true;
+                        }
                     }
                 }
                 _ => {}
@@ -354,20 +367,26 @@ impl FaultTrace {
 pub struct DownState {
     node_cause: Vec<bool>,
     cluster_cause: Vec<bool>,
-    nodes_per_cluster: usize,
+    /// node id → owning cluster (snapshot of the topology's map).
+    cluster_of: Vec<usize>,
+    /// cluster → live member node ids.
+    members: Vec<Vec<usize>>,
 }
 
 impl DownState {
-    pub fn new(topo: Topology) -> DownState {
+    pub fn new(topo: &Topology) -> DownState {
         DownState {
             node_cause: vec![false; topo.total_nodes()],
-            cluster_cause: vec![false; topo.clusters],
-            nodes_per_cluster: topo.nodes_per_cluster,
+            cluster_cause: vec![false; topo.clusters()],
+            cluster_of: (0..topo.total_nodes()).map(|n| topo.cluster_of_node(n)).collect(),
+            members: (0..topo.clusters())
+                .map(|c| topo.nodes_of(c).iter().copied().filter(|&n| topo.is_live(n)).collect())
+                .collect(),
         }
     }
 
     pub fn is_down(&self, node: usize) -> bool {
-        self.node_cause[node] || self.cluster_cause[node / self.nodes_per_cluster]
+        self.node_cause[node] || self.cluster_cause[self.cluster_of[node]]
     }
 
     /// Number of effectively-down nodes.
@@ -395,7 +414,7 @@ impl DownState {
                 let was = self.cluster_cause[c];
                 self.cluster_cause[c] = failing;
                 if was != failing {
-                    for n in c * self.nodes_per_cluster..(c + 1) * self.nodes_per_cluster {
+                    for &n in &self.members[c] {
                         let before = self.node_cause[n] || was;
                         let after = self.node_cause[n] || failing;
                         if before != after {
@@ -420,18 +439,18 @@ mod tests {
     #[test]
     fn same_seed_same_digest() {
         let cfg = FaultConfig::accelerated();
-        let a = FaultTrace::generate(topo(), &cfg, 42);
-        let b = FaultTrace::generate(topo(), &cfg, 42);
+        let a = FaultTrace::generate(&topo(), &cfg, 42);
+        let b = FaultTrace::generate(&topo(), &cfg, 42);
         assert_eq!(a, b);
         assert_eq!(a.digest(), b.digest());
-        let c = FaultTrace::generate(topo(), &cfg, 43);
+        let c = FaultTrace::generate(&topo(), &cfg, 43);
         assert_ne!(a.digest(), c.digest());
     }
 
     #[test]
     fn events_sorted_and_within_horizon() {
         let cfg = FaultConfig::accelerated();
-        let t = FaultTrace::generate(topo(), &cfg, 7);
+        let t = FaultTrace::generate(&topo(), &cfg, 7);
         assert!(!t.events.is_empty());
         for w in t.events.windows(2) {
             assert!(w[0].at_hours <= w[1].at_hours);
@@ -448,7 +467,7 @@ mod tests {
             cluster_mttr_hours: 0.0,
             horizon_hours: 10_000.0,
         };
-        let t = FaultTrace::generate(topo(), &cfg, 1);
+        let t = FaultTrace::generate(&topo(), &cfg, 1);
         let fails =
             t.events.iter().filter(|e| matches!(e.kind, FaultKind::NodeFail(_))).count() as f64;
         // 20 nodes × horizon/(mttf+mttr) ≈ 1818 expected failures
@@ -466,7 +485,7 @@ mod tests {
             cluster_mttr_hours: 5.0,
             horizon_hours: 1_000.0,
         };
-        let t = FaultTrace::generate(topo(), &cfg, 9);
+        let t = FaultTrace::generate(&topo(), &cfg, 9);
         assert!(t.events.iter().all(|e| e.kind.tag() >= 2));
         assert!(!t.failing_clusters().is_empty());
     }
@@ -474,7 +493,7 @@ mod tests {
     #[test]
     fn text_roundtrip_is_exact() {
         let cfg = FaultConfig::accelerated();
-        let t = FaultTrace::generate(topo(), &cfg, 5);
+        let t = FaultTrace::generate(&topo(), &cfg, 5);
         let parsed = FaultTrace::parse(&t.to_text()).unwrap();
         assert_eq!(t, parsed);
         assert_eq!(t.digest(), parsed.digest());
@@ -491,7 +510,7 @@ mod tests {
 
     #[test]
     fn down_state_tracks_causes() {
-        let mut s = DownState::new(Topology::new(2, 3));
+        let mut s = DownState::new(&Topology::new(2, 3));
         assert_eq!(s.apply(FaultKind::NodeFail(1)), vec![(1, true)]);
         // cluster 0 outage: nodes 0 and 2 flip; node 1 already down
         assert_eq!(s.apply(FaultKind::ClusterFail(0)), vec![(0, true), (2, true)]);
@@ -514,13 +533,54 @@ mod tests {
             cluster_mttr_hours: 10.0,
             horizon_hours: 1_000.0,
         };
-        let t = FaultTrace::generate(Topology::new(2, 3), &cfg, 3);
-        let nodes = t.failing_nodes();
+        let topo = Topology::new(2, 3);
+        let t = FaultTrace::generate(&topo, &cfg, 3);
+        let nodes = t.failing_nodes(&topo);
         for c in t.failing_clusters() {
-            for n in c * 3..(c + 1) * 3 {
+            for &n in topo.nodes_of(c) {
                 assert!(nodes.contains(&n));
             }
         }
+    }
+
+    #[test]
+    fn clocks_follow_live_membership() {
+        use crate::placement::NodeState;
+        // failure interarrival ≪ horizon, so every live node's stream is
+        // mathematically certain (P ≈ 1 − e⁻⁴⁰) to fire at least once
+        let cfg = FaultConfig {
+            node_mttf_hours: 50.0,
+            node_mttr_hours: 5.0,
+            cluster_mttf_hours: 0.0,
+            cluster_mttr_hours: 0.0,
+            horizon_hours: 2_000.0,
+        };
+        let mut topo = Topology::new(2, 3);
+        let dead = 1usize;
+        topo.set_state(dead, NodeState::Dead);
+        let added = topo.add_node(0);
+        let t = FaultTrace::generate(&topo, &cfg, 77);
+        // the dead node draws no clock; the scaled-out node draws its own
+        assert!(t.events.iter().all(|e| {
+            !matches!(e.kind, FaultKind::NodeFail(n) | FaultKind::NodeRepair(n) if n == dead)
+        }));
+        assert!(t
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::NodeFail(n) if n == added)));
+        // a cluster event never flips the dead node's effective state
+        let mut s = DownState::new(&topo);
+        let flipped = s.apply(FaultKind::ClusterFail(0));
+        assert!(flipped.iter().all(|&(n, _)| n != dead));
+        assert!(flipped.iter().any(|&(n, down)| n == added && down));
+        // draining nodes still tick (they hold readable data until dead)
+        let mut topo2 = Topology::new(1, 2);
+        topo2.set_state(0, NodeState::Draining);
+        let t2 = FaultTrace::generate(&topo2, &cfg, 77);
+        assert!(t2
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::NodeFail(0))));
     }
 
     #[test]

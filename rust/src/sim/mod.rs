@@ -87,11 +87,15 @@ pub enum Endpoint {
     Coordinator,
 }
 
-/// The virtual network: resource state + topology.
+/// The virtual network: resource state + a node→cluster map kept in sync
+/// with the (elastic) topology. Scale-out events allocate fresh NICs and
+/// gateways via [`NetSim::sync`]; dead nodes keep their resources (their
+/// ids are stable and simply see no more transfers).
 #[derive(Debug, Clone)]
 pub struct NetSim {
-    topo: Topology,
     cfg: NetConfig,
+    /// node id → owning cluster (mirror of the topology's map).
+    node_cluster: Vec<usize>,
     node_nics: Vec<Resource>,
     proxy_nics: Vec<Resource>,
     gateways: Vec<Resource>,
@@ -104,28 +108,44 @@ pub struct NetSim {
 }
 
 impl NetSim {
-    pub fn new(topo: Topology, cfg: NetConfig) -> NetSim {
-        NetSim {
-            topo,
+    pub fn new(topo: &Topology, cfg: NetConfig) -> NetSim {
+        let mut sim = NetSim {
             cfg,
-            node_nics: vec![Resource::new(cfg.node_bw); topo.total_nodes()],
-            proxy_nics: vec![Resource::new(cfg.node_bw); topo.clusters],
-            gateways: vec![Resource::new(cfg.cross_bw); topo.clusters],
+            node_cluster: Vec::new(),
+            node_nics: Vec::new(),
+            proxy_nics: Vec::new(),
+            gateways: Vec::new(),
             client_nic: Resource::new(cfg.client_bw),
             coord_nic: Resource::new(cfg.client_bw),
             cross_bytes: 0,
             total_bytes: 0,
-        }
+        };
+        sim.sync(topo);
+        sim
     }
 
     pub fn config(&self) -> NetConfig {
         self.cfg
     }
 
+    /// Grow resource state to cover every node and cluster of `topo`
+    /// (idempotent; called after each topology event). New NICs start
+    /// idle — `occupy` never schedules before a transfer's start time.
+    pub fn sync(&mut self, topo: &Topology) {
+        for n in self.node_cluster.len()..topo.total_nodes() {
+            self.node_cluster.push(topo.cluster_of_node(n));
+            self.node_nics.push(Resource::new(self.cfg.node_bw));
+        }
+        for _ in self.proxy_nics.len()..topo.clusters() {
+            self.proxy_nics.push(Resource::new(self.cfg.node_bw));
+            self.gateways.push(Resource::new(self.cfg.cross_bw));
+        }
+    }
+
     /// Cluster an endpoint belongs to (None for client/coordinator).
     fn cluster_of(&self, e: Endpoint) -> Option<usize> {
         match e {
-            Endpoint::Node(n) => Some(self.topo.cluster_of_node(n)),
+            Endpoint::Node(n) => Some(self.node_cluster[n]),
             Endpoint::Proxy(c) => Some(c),
             _ => None,
         }
@@ -195,7 +215,7 @@ mod tests {
     use super::*;
 
     fn sim() -> NetSim {
-        NetSim::new(Topology::new(3, 4), NetConfig::default())
+        NetSim::new(&Topology::new(3, 4), NetConfig::default())
     }
 
     const MB: usize = 1 << 20;
@@ -277,9 +297,24 @@ mod tests {
     }
 
     #[test]
+    fn sync_extends_resources_for_scale_out() {
+        let mut topo = Topology::new(2, 2);
+        let mut s = NetSim::new(&topo, NetConfig::default());
+        topo.add_node(1);
+        let c = topo.add_cluster(2);
+        s.sync(&topo);
+        // the new node and the new cluster's nodes are routable, and the
+        // fresh gateway throttles cross traffic like any other
+        let t = s.transfer(0.0, Endpoint::Node(4), Endpoint::Node(topo.node_id(c, 0)), MB);
+        let expect = MB as f64 / (1.0 * GBIT) + 200e-6;
+        assert!((t - expect).abs() < 1e-9, "{t} vs {expect}");
+        assert_eq!(s.cross_bytes, MB as u64);
+    }
+
+    #[test]
     fn exp4_bandwidth_knob() {
         let cfg = NetConfig::default().with_cross_gbps(10.0);
-        let mut s = NetSim::new(Topology::new(2, 2), cfg);
+        let mut s = NetSim::new(&Topology::new(2, 2), cfg);
         let t = s.transfer(0.0, Endpoint::Node(0), Endpoint::Node(2), MB);
         let expect = MB as f64 / (10.0 * GBIT) + 200e-6;
         assert!((t - expect).abs() < 1e-9);

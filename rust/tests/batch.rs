@@ -167,7 +167,7 @@ fn batched_recovery_end_to_end_is_correct() {
     let topo = Topology::new(clusters, 10);
     let mut dss = Dss::new(
         code,
-        &UniLrcPlace,
+        Box::new(UniLrcPlace),
         topo,
         NetConfig::default(),
         Arc::new(NativeCoder),

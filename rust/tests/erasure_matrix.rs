@@ -86,9 +86,9 @@ fn whole_cluster_erasures_decode_all_families() {
         let code = Scheme::S42.build(fam);
         let (strategy, topo) = strategy_and_topo(fam, &code);
         let stripe = stripe_for(&code, &mut prng);
-        for rot in 0..topo.clusters {
+        for rot in 0..topo.clusters() {
             let placement = strategy.place(&code, &topo, rot);
-            for cluster in 0..topo.clusters {
+            for cluster in 0..topo.clusters() {
                 let erased = placement.blocks_in_cluster(cluster);
                 if erased.is_empty() {
                     continue;
@@ -99,6 +99,57 @@ fn whole_cluster_erasures_decode_all_families() {
                     &erased,
                     &format!("{fam:?} cluster {cluster} rot {rot}"),
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn whole_cluster_erasures_decode_after_each_migration_step() {
+    // Post-migration safety: the one-cluster-failure invariant must hold
+    // not just at initial placement but after *every* step of a topology
+    // event sequence, for every placement strategy — asserted here with
+    // fresh decode plans against the coordinator's live block map (the
+    // migrated ground truth), byte for byte.
+    use unilrc::experiments::{build_dss, ExpConfig};
+    use unilrc::placement::TopologyEvent;
+    let cfg = ExpConfig {
+        block_size: 1024,
+        stripes: 2,
+        time_compute: false,
+        ..Default::default()
+    };
+    for fam in CodeFamily::paper_baselines() {
+        let mut prng = Prng::new(0xE6);
+        let mut dss = build_dss(fam, &cfg);
+        dss.ingest_random_stripes(2, &mut prng).unwrap();
+        for si in 0..4usize {
+            // victims resolve against the *current* map: a block's host is
+            // always live, so each drain targets a live node
+            let ev = match si {
+                0 => TopologyEvent::AddNode { cluster: 0 },
+                1 => TopologyEvent::DrainNode { node: dss.metadata().node_of(0, 0) },
+                2 => TopologyEvent::AddCluster { nodes: dss.topo.max_cluster_size() },
+                _ => TopologyEvent::DrainNode { node: dss.metadata().node_of(1, 2) },
+            };
+            dss.apply_topology_event(ev).unwrap();
+            for s in 0..dss.metadata().stripe_count() {
+                // reassemble the stripe from the (migrated) ground truth
+                let stripe: Vec<Vec<u8>> = (0..dss.code.n())
+                    .map(|b| dss.metadata().block_data(s, b).to_vec())
+                    .collect();
+                for cluster in 0..dss.topo.clusters() {
+                    let erased = dss.metadata().blocks_in_cluster(s, cluster);
+                    if erased.is_empty() {
+                        continue;
+                    }
+                    check_decodes(
+                        &dss.code,
+                        &stripe,
+                        erased,
+                        &format!("{fam:?} step {si} stripe {s} cluster {cluster}"),
+                    );
+                }
             }
         }
     }

@@ -42,11 +42,11 @@ fn short_faults() -> FaultSimConfig {
 fn trace_generation_is_seed_deterministic() {
     let cfg = FaultConfig::accelerated();
     let topo = Topology::new(6, 9);
-    let a = FaultTrace::generate(topo, &cfg, 11);
-    let b = FaultTrace::generate(topo, &cfg, 11);
+    let a = FaultTrace::generate(&topo, &cfg, 11);
+    let b = FaultTrace::generate(&topo, &cfg, 11);
     assert_eq!(a, b, "same seed ⇒ identical schedule");
     assert_eq!(a.digest(), b.digest());
-    assert_ne!(a.digest(), FaultTrace::generate(topo, &cfg, 12).digest());
+    assert_ne!(a.digest(), FaultTrace::generate(&topo, &cfg, 12).digest());
     // replayable text format round-trips bit-exact
     let parsed = FaultTrace::parse(&a.to_text()).unwrap();
     assert_eq!(parsed.digest(), a.digest());
@@ -88,9 +88,9 @@ fn plan_warmup_never_changes_measurements() {
     let mut warm_cfg = tiny_exp();
     warm_cfg.scheme = unilrc::codes::spec::Scheme::S136;
     warm_cfg.seed = 99;
-    warm_cfg.plan_warmup = true;
+    warm_cfg.plan_warmup = unilrc::experiments::WarmupMode::Trace;
     let mut cold_cfg = warm_cfg.clone();
-    cold_cfg.plan_warmup = false;
+    cold_cfg.plan_warmup = unilrc::experiments::WarmupMode::Off;
     let mut fc = short_faults();
     // frequent cluster events: fully-grouped codes predict only cluster
     // patterns (single-node repairs bypass the cache), and pure-cluster
@@ -107,6 +107,99 @@ fn plan_warmup_never_changes_measurements() {
         assert_eq!(c.prefetched_plans, 0, "cold run must not prefetch");
         assert!(w.prefetched_plans > 0, "{:?}: warm run must prefetch plans", w.family);
     }
+}
+
+#[test]
+fn learned_warmup_is_output_invisible_and_prefetches() {
+    // Runs exp7 at S210, reserved for this test: plan-cache keys embed the
+    // code name, so S42 (the other scenario tests) and S136 (the
+    // trace-warm-up test) traffic cannot interfere with the insert counts
+    // asserted here. The OFF run goes first; its demand path only inserts
+    // *realized* mixed failure states, while the learned predictor inserts
+    // pure whole-cluster patterns on each cluster's first observed outage
+    // — with ~7 of 230 nodes down on average at these rates, a realized
+    // state is essentially never cluster-pure, so the learned run always
+    // has plans left to insert.
+    use unilrc::experiments::WarmupMode;
+    let mut learned_cfg = tiny_exp();
+    learned_cfg.scheme = unilrc::codes::spec::Scheme::S210;
+    learned_cfg.stripes = 1;
+    learned_cfg.block_size = 1024;
+    learned_cfg.seed = 77;
+    learned_cfg.plan_warmup = WarmupMode::Learned;
+    let mut off_cfg = learned_cfg.clone();
+    off_cfg.plan_warmup = WarmupMode::Off;
+    let fc = FaultSimConfig {
+        fault: FaultConfig {
+            node_mttf_hours: 300.0,
+            node_mttr_hours: 10.0,
+            cluster_mttf_hours: 250.0,
+            cluster_mttr_hours: 5.0,
+            horizon_hours: 250.0,
+        },
+        tenants: 1,
+        objects_per_tenant: 2,
+        reads_per_event: 1,
+        measure_cap: 4,
+    };
+    let off = exp7_faults(&off_cfg, &fc).unwrap();
+    let learned = exp7_faults(&learned_cfg, &fc).unwrap();
+    for (c, l) in off.iter().zip(&learned) {
+        assert_eq!(c.family, l.family);
+        assert_eq!(
+            c.digest, l.digest,
+            "{:?}: learned warm-up must be output-invisible",
+            c.family
+        );
+        assert_eq!(c.repaired_blocks, l.repaired_blocks);
+        assert_eq!(c.cross_bytes, l.cross_bytes);
+        assert_eq!(c.prefetched_plans, 0, "off mode must not prefetch");
+        assert!(
+            l.prefetched_plans > 0,
+            "{:?}: learned mode must prefetch from observed history",
+            l.family
+        );
+    }
+}
+
+#[test]
+fn predictor_prefetch_drives_cache_stats_counters() {
+    // Satellite check on a *local* PlanCache (no global-state interference):
+    // learned-history prefetch must surface through the CacheStats counters
+    // exactly like trace-driven warm-up — prefetched ≠ demand misses, and
+    // demand lookups of predicted patterns count as prefetch_hits.
+    use unilrc::codes::PlanCache;
+    use unilrc::experiments::{build_dss, PatternPredictor};
+    use unilrc::prng::Prng;
+    let cfg = ExpConfig { block_size: 1024, stripes: 2, ..tiny_exp() };
+    let mut dss = build_dss(unilrc::codes::spec::CodeFamily::UniLrc, &cfg);
+    let mut p = Prng::new(5);
+    dss.ingest_random_stripes(2, &mut p).unwrap();
+    let mut pred = PatternPredictor::new();
+    let node = dss.metadata().node_of(0, 0);
+    let cluster = dss.metadata().cluster_of(0, 0);
+    let patterns = pred.observe(&dss, &[node], &[cluster]);
+    assert!(!patterns.is_empty());
+
+    let cache = PlanCache::new(64);
+    let inserted = cache.prefetch(&dss.code, &patterns);
+    assert_eq!(inserted, patterns.len());
+    let stats = cache.stats(8);
+    assert_eq!(stats.prefetched as usize, inserted);
+    assert_eq!(stats.prefetch_hits, 0);
+    assert_eq!((stats.hits, stats.misses), (0, 0), "warm-up is not demand traffic");
+
+    // demand lookup of a predicted pattern: hit, tagged prefetch_hit
+    assert!(cache.get_or_compute(&dss.code, &patterns[0]).is_some());
+    let stats = cache.stats(8);
+    assert_eq!((stats.hits, stats.misses), (1, 0));
+    assert_eq!(stats.prefetch_hits, 1);
+    assert!(stats.top.iter().any(|e| e.prefetched));
+
+    // re-observing predicts nothing, re-prefetching inserts nothing
+    assert!(pred.observe(&dss, &[node], &[cluster]).is_empty());
+    assert_eq!(cache.prefetch(&dss.code, &patterns), 0);
+    assert_eq!(cache.stats(8).prefetched as usize, inserted);
 }
 
 #[test]
@@ -209,8 +302,8 @@ fn every_family_uses_fixed_seeds_for_trace_randomness() {
     for (clusters, nodes) in [(6usize, 9usize), (11, 8), (2, 4)] {
         let topo = Topology::new(clusters, nodes);
         let cfg = FaultConfig::accelerated();
-        let a = FaultTrace::generate(topo, &cfg, 0xF00D);
-        let b = FaultTrace::generate(topo, &cfg, 0xF00D);
+        let a = FaultTrace::generate(&topo, &cfg, 0xF00D);
+        let b = FaultTrace::generate(&topo, &cfg, 0xF00D);
         assert_eq!(a.digest(), b.digest(), "topo {clusters}x{nodes}");
     }
 }

@@ -12,7 +12,6 @@ use std::sync::Arc;
 use unilrc::codes::spec::{CodeFamily, Scheme};
 use unilrc::coordinator::{Dss, DssConfig};
 use unilrc::experiments::strategy_and_topo;
-use unilrc::placement::PlacementStrategy;
 use unilrc::prng::Prng;
 use unilrc::runtime::NativeCoder;
 use unilrc::sim::{Endpoint, NetConfig, NetSim};
@@ -22,7 +21,7 @@ fn make_dss(fam: CodeFamily, scheme: Scheme, bs: usize) -> Dss {
     let (strategy, topo) = strategy_and_topo(fam, &code);
     Dss::new(
         code,
-        strategy.as_ref(),
+        strategy,
         topo,
         NetConfig::default(),
         Arc::new(NativeCoder),
@@ -122,7 +121,7 @@ fn prop_placement_rotation_invariants() {
             let base = strategy.place(&code, &topo, 0);
             let base_hist: Vec<usize> = {
                 let mut h: Vec<usize> =
-                    (0..topo.clusters).map(|c| base.blocks_in_cluster(c).len()).collect();
+                    (0..topo.clusters()).map(|c| base.blocks_in_cluster(c).len()).collect();
                 h.sort_unstable();
                 h
             };
@@ -136,7 +135,7 @@ fn prop_placement_rotation_invariants() {
                 assert_eq!(nodes.len(), code.n(), "{fam:?} rot {rot}");
                 // rotation permutes clusters but preserves the load shape
                 let mut h: Vec<usize> =
-                    (0..topo.clusters).map(|c| p.blocks_in_cluster(c).len()).collect();
+                    (0..topo.clusters()).map(|c| p.blocks_in_cluster(c).len()).collect();
                 h.sort_unstable();
                 assert_eq!(h, base_hist, "{fam:?} rot {rot}");
             }
@@ -151,8 +150,8 @@ fn prop_more_bandwidth_never_slower() {
     for _ in 0..30 {
         let gbps_lo = 0.5 + prng.gen_f64() * 2.0;
         let gbps_hi = gbps_lo * (1.5 + prng.gen_f64());
-        let mut lo = NetSim::new(topo, NetConfig::default().with_cross_gbps(gbps_lo));
-        let mut hi = NetSim::new(topo, NetConfig::default().with_cross_gbps(gbps_hi));
+        let mut lo = NetSim::new(&topo, NetConfig::default().with_cross_gbps(gbps_lo));
+        let mut hi = NetSim::new(&topo, NetConfig::default().with_cross_gbps(gbps_hi));
         // identical random transfer schedule through both
         let mut t_lo = 0.0f64;
         let mut t_hi = 0.0f64;

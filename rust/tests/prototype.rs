@@ -22,7 +22,7 @@ fn build(fam: CodeFamily, scheme: Scheme) -> Dss {
     let topo = Topology::new(clusters, npc);
     Dss::new(
         code,
-        strategy.as_ref(),
+        strategy,
         topo,
         NetConfig::default(),
         Arc::new(NativeCoder),
@@ -184,7 +184,7 @@ fn exp4_unilrc_flat_under_bandwidth_sweep() {
         let topo = Topology::new(6, 10);
         let mut dss = Dss::new(
             code,
-            &UniLrcPlace,
+            Box::new(UniLrcPlace),
             topo,
             NetConfig::default().with_cross_gbps(gbps),
             Arc::new(NativeCoder),
