@@ -1,0 +1,136 @@
+//! Durability-layer bench: WAL append throughput, group-commit latency
+//! across fsync cadences, manifest snapshot + log-truncation cost, and
+//! crash-recovery replay time as a function of log length (the numbers
+//! behind PERF.md's durability-overhead section).
+//!
+//! Set `UNILRC_BENCH_JSON=BENCH_wal.json` for the machine-readable
+//! artifact — CI joins it to the rolling perf trajectory next to
+//! `BENCH_gf.json` / `BENCH_pool.json` / `BENCH_rebalance.json`.
+
+use std::path::PathBuf;
+use unilrc::bench_util::{black_box, section, Bencher, JsonReport};
+use unilrc::codes::spec::CodeFamily;
+use unilrc::coordinator::manifest::{CoordinatorState, MANIFEST_CURRENT};
+use unilrc::coordinator::recover;
+use unilrc::coordinator::wal::{DurabilityOptions, Journal, WalRecord};
+use unilrc::experiments::{build_dss, ExpConfig};
+use unilrc::prng::Prng;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("unilrc-benchwal-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A real coordinator state to seed journals with (two S42 stripes).
+fn seed_state() -> CoordinatorState {
+    let cfg =
+        ExpConfig { block_size: 4 * 1024, stripes: 2, time_compute: false, ..Default::default() };
+    let mut dss = build_dss(CodeFamily::UniLrc, &cfg);
+    let mut prng = Prng::new(42);
+    dss.ingest_random_stripes(cfg.stripes, &mut prng).expect("ingest");
+    dss.capture_state()
+}
+
+/// A representative committed group: one full-width (n = 42) stripe
+/// registration — the largest standalone record the coordinator logs.
+fn stripe_record(state: &CoordinatorState) -> WalRecord {
+    WalRecord::AddStripe {
+        cluster_of: state.placements[0].0.clone(),
+        node_of: state.placements[0].1.clone(),
+    }
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut report = JsonReport::new("bench_wal");
+    report.meta("engine", &unilrc::gf::dispatch::engine().describe());
+    let state = seed_state();
+
+    // ------------------------------------------------ append throughput
+    section("WAL append (group commit, sync-every 8)");
+    let rec = stripe_record(&state);
+    let frame_bytes = rec.encode(1).len();
+    let dir = scratch("append");
+    let mut journal = Journal::create(
+        &dir,
+        &state,
+        DurabilityOptions { sync_every: 8, snapshot_every: usize::MAX },
+    )
+    .expect("journal");
+    let s = b.bench_throughput("wal/append-stripe-record", frame_bytes, || {
+        journal.commit_op(std::slice::from_ref(&rec)).expect("append");
+    });
+    report.add(&s, frame_bytes);
+    println!("  appended {} records / {} bytes", journal.wal_records(), journal.wal_bytes());
+    drop(journal);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // -------------------------------- group-commit latency vs fsync cadence
+    section("group-commit latency vs --wal-sync-every");
+    for sync_every in [1usize, 8, 64] {
+        let dir = scratch(&format!("sync-{sync_every}"));
+        let mut journal = Journal::create(
+            &dir,
+            &state,
+            DurabilityOptions { sync_every, snapshot_every: usize::MAX },
+        )
+        .expect("journal");
+        let toggle = WalRecord::SetFailed { node: 0, down: true };
+        let name = format!("wal/commit-latency/sync-{sync_every}");
+        let s = b.bench_latency(&name, || {
+            journal.commit_op(std::slice::from_ref(&toggle)).expect("append");
+        });
+        report.add(&s, frame_bytes);
+        drop(journal);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // ------------------------------------- snapshot + truncation cost
+    section("manifest snapshot + log truncation");
+    let dir = scratch("snap");
+    let mut journal = Journal::create(
+        &dir,
+        &state,
+        DurabilityOptions { sync_every: 8, snapshot_every: usize::MAX },
+    )
+    .expect("journal");
+    let manifest_bytes = std::fs::metadata(dir.join(MANIFEST_CURRENT)).map_or(1, |m| m.len());
+    let s = b.bench_latency("wal/snapshot-truncate", || {
+        journal.commit_op(std::slice::from_ref(&rec)).expect("append");
+        journal.snapshot(&state).expect("snapshot");
+    });
+    report.add(&s, manifest_bytes as usize);
+    println!("  manifest {} bytes, {} snapshots", manifest_bytes, journal.snapshots());
+    drop(journal);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // ----------------------------------- recovery replay vs log length
+    section("crash-recovery replay vs log length");
+    for n in [100usize, 1000] {
+        let dir = scratch(&format!("recover-{n}"));
+        let mut journal = Journal::create(
+            &dir,
+            &state,
+            DurabilityOptions { sync_every: 64, snapshot_every: usize::MAX },
+        )
+        .expect("journal");
+        for i in 0..n {
+            journal
+                .commit_op(&[WalRecord::SetFailed { node: 0, down: i % 2 == 0 }])
+                .expect("append");
+        }
+        let log_bytes = journal.wal_bytes() as usize;
+        drop(journal);
+        let name = format!("wal/recover/{n}-records");
+        let s = b.bench_throughput(&name, log_bytes, || {
+            let rec = recover(&dir).expect("recovery");
+            assert_eq!(rec.replayed_records, n);
+            black_box(rec);
+        });
+        report.add(&s, log_bytes);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    report.write_if_requested();
+}

@@ -3,8 +3,9 @@
 //! ```text
 //! unilrc layout  [--scheme 42|136|210]           Fig 1-style layouts
 //! unilrc analyze [--fig5|--fig8|--fig3b|--table2|--table4|--all]
-//! unilrc experiment <1..8> [options]             §6 experiments + faults
+//! unilrc experiment <1..9> [options]             §6 experiments + faults
 //!                                                + elastic topology
+//!                                                + durable coordinator
 //! unilrc golden  [--out FILE]                    cross-language vectors
 //! unilrc help
 //! ```
@@ -53,7 +54,7 @@ unilrc — Wide LRCs with Unified Locality (paper reproduction)
 USAGE:
   unilrc layout  [--scheme 42|136|210]
   unilrc analyze [--fig3b] [--fig5] [--fig8] [--table2] [--table4] [--all]
-  unilrc experiment <1..8> [--config FILE] [--scheme S] [--block-kb N]
+  unilrc experiment <1..9> [--config FILE] [--scheme S] [--block-kb N]
                     [--stripes N] [--cross-gbps X] [--backend native|pjrt] [--raw]
                     [--topology N,N,...] (asymmetric per-cluster node counts)
                     [--gf-kernel auto|scalar|ssse3|avx2|avx512|gfni|neon]
@@ -76,7 +77,14 @@ the trace's predicted failure patterns, --plan-warmup learned derives
 them online from the observed failure history) · 8 elastic topology
 (deterministic scale-out/drain scenario with coordinator-planned block
 migration; knobs: --add-nodes --drain-nodes --add-clusters
---cluster-nodes --fault-horizon-hours, [elastic] config section).
+--cluster-nodes --fault-horizon-hours, [elastic] config section) ·
+9 durable coordinator (checksummed manifest + write-ahead log; kills the
+coordinator at every distinct WAL position of a scale-out/drain/fault
+scenario, recovers, and proves the recovered block map byte-identical to
+the never-crashed oracle; knobs: --wal-sync-every (group-commit fsync
+cadence, also UNILRC_WAL_SYNC_EVERY or the [durability] config section)
+--snapshot-every --crash-cap --add-nodes --drain-nodes --add-clusters
+--fault-ops; see PERF.md on durability overhead).
 
 The GF engine tier defaults to the best the CPU supports; override with
 --gf-kernel / --gf-threads or UNILRC_GF_KERNEL / UNILRC_GF_THREADS.
@@ -249,6 +257,48 @@ fn elastic_config(
     );
     anyhow::ensure!(ec.fault_horizon_hours >= 0.0, "--fault-horizon-hours must be ≥ 0");
     Ok(ec)
+}
+
+/// Experiment 9 knobs, later sources overriding earlier ones: defaults,
+/// then the config-file `[durability]` section, then the
+/// `UNILRC_WAL_SYNC_EVERY` environment variable, then explicit flags.
+fn durability_config(
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<experiments::DurabilitySimConfig> {
+    let mut dc = experiments::DurabilitySimConfig::default();
+    if let Some(path) = flags.get("config") {
+        let file = crate::config::Config::load(path)?;
+        crate::config::apply_durability_keys(&file, &mut dc);
+    }
+    if let Ok(v) = std::env::var("UNILRC_WAL_SYNC_EVERY") {
+        dc.wal_sync_every = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad UNILRC_WAL_SYNC_EVERY {v:?} (want an integer)"))?;
+    }
+    if let Some(v) = flags.get("wal-sync-every") {
+        dc.wal_sync_every = v.parse()?;
+    }
+    if let Some(v) = flags.get("snapshot-every") {
+        dc.snapshot_every = v.parse()?;
+    }
+    if let Some(v) = flags.get("add-nodes") {
+        dc.add_nodes = v.parse()?;
+    }
+    if let Some(v) = flags.get("drain-nodes") {
+        dc.drain_nodes = v.parse()?;
+    }
+    if let Some(v) = flags.get("add-clusters") {
+        dc.add_clusters = v.parse()?;
+    }
+    if let Some(v) = flags.get("fault-ops") {
+        dc.fault_ops = v.parse()?;
+    }
+    if let Some(v) = flags.get("crash-cap") {
+        dc.crash_cap = v.parse()?;
+    }
+    anyhow::ensure!(dc.wal_sync_every > 0, "--wal-sync-every must be at least 1");
+    anyhow::ensure!(dc.snapshot_every > 0, "--snapshot-every must be at least 1");
+    Ok(dc)
 }
 
 /// `unilrc engine` — report detected and available GF kernel tiers, the
@@ -589,9 +639,62 @@ fn cmd_experiment(which: Option<&str>, flags: &HashMap<String, String>) -> anyho
                     r.final_clusters,
                     r.final_live_nodes
                 );
+                // wall vs. virtual split per event — the baseline exp9's
+                // recovery-replay timings are compared against
+                println!("    per-event timing (wall / virtual):");
+                for (ev, wall_ms, virt_s, moves) in &r.event_timings {
+                    println!(
+                        "      {:<34} wall {:>8.3} ms   virtual {:>9.2} ms   moves {:>4}",
+                        format!("{ev:?}"),
+                        wall_ms,
+                        virt_s * 1e3,
+                        moves
+                    );
+                }
             }
         }
-        _ => anyhow::bail!("experiment must be 1..8"),
+        Some("9") => {
+            let dc = durability_config(flags)?;
+            let rows = experiments::exp9_durability(&cfg, &dc)?;
+            println!(
+                "=== Experiment 9 — durable coordinator [{}] (seed {}, sync-every {}, \
+                 snapshot-every {}) ===",
+                cfg.scheme.label(),
+                cfg.seed,
+                dc.wal_sync_every,
+                dc.snapshot_every
+            );
+            for r in &rows {
+                println!("  {:<8} oracle digest {:016x}", r.family.name(), r.oracle_digest);
+                println!(
+                    "    ops {:>3}   wal records {:>4} / {:>8} bytes",
+                    r.ops, r.wal_records, r.wal_bytes
+                );
+                println!(
+                    "    crash points {:>4} tested of {:>4}   digest matches {:>4}   \
+                     torn tails {:>3}   pending re-plans {:>3}",
+                    r.crash_points_tested,
+                    r.crash_points_total,
+                    r.digest_matches,
+                    r.torn_tails,
+                    r.pending_replans
+                );
+                println!(
+                    "    decode checks {:>5} passed   byte-exact reconstructions {:>4}",
+                    r.decode_checks, r.reconstructed_blocks
+                );
+                println!(
+                    "    mean recover {:>8.3} ms   mean op-tail re-exec {:>8.3} ms",
+                    r.mean_recover_ms, r.mean_reexec_ms
+                );
+                println!(
+                    "    snapshot-cadence run: {} manifests written, recovery digest {}",
+                    r.snapshot_run_snapshots,
+                    if r.snapshot_digest_match { "matches oracle" } else { "MISMATCH" }
+                );
+            }
+        }
+        _ => anyhow::bail!("experiment must be 1..9"),
     }
     if flags.contains_key("cache-stats") {
         print_plan_cache_stats();
@@ -762,6 +865,34 @@ mod tests {
             "0".into(),
         ]);
         assert!(elastic_config(&none).is_err());
+    }
+
+    #[test]
+    fn durability_flags_parse_and_override_defaults() {
+        let f = parse_flags(&[
+            "--wal-sync-every".into(),
+            "1".into(),
+            "--snapshot-every".into(),
+            "16".into(),
+            "--crash-cap".into(),
+            "10".into(),
+            "--fault-ops".into(),
+            "2".into(),
+        ]);
+        let dc = durability_config(&f).unwrap();
+        assert_eq!(dc.wal_sync_every, 1);
+        assert_eq!(dc.snapshot_every, 16);
+        assert_eq!(dc.crash_cap, 10);
+        assert_eq!(dc.fault_ops, 2);
+        // unset knobs keep their defaults
+        let d = experiments::DurabilitySimConfig::default();
+        assert_eq!(dc.add_nodes, d.add_nodes);
+        assert_eq!(dc.drain_nodes, d.drain_nodes);
+        // degenerate knobs are rejected up front
+        assert!(durability_config(&parse_flags(&["--wal-sync-every".into(), "0".into()]))
+            .is_err());
+        assert!(durability_config(&parse_flags(&["--snapshot-every".into(), "0".into()]))
+            .is_err());
     }
 
     #[test]

@@ -288,6 +288,38 @@ pub fn apply_elastic_keys(cfg: &Config, e: &mut crate::experiments::ElasticConfi
     }
 }
 
+/// Apply the `[durability]` section onto an experiment-9 config:
+/// recognized keys `wal_sync_every` (fsync once per this many committed
+/// WAL groups — group commit), `snapshot_every` (manifest snapshot + log
+/// truncation cadence in committed ops), `add_nodes`, `drain_nodes`,
+/// `add_clusters`, `fault_ops` (scenario shape), `crash_cap` (crash
+/// positions tested per family; 0 = all). The `UNILRC_WAL_SYNC_EVERY`
+/// environment variable and explicit CLI flags override these, in that
+/// order.
+pub fn apply_durability_keys(cfg: &Config, d: &mut crate::experiments::DurabilitySimConfig) {
+    if let Some(v) = cfg.get_usize("durability", "wal_sync_every") {
+        d.wal_sync_every = v;
+    }
+    if let Some(v) = cfg.get_usize("durability", "snapshot_every") {
+        d.snapshot_every = v;
+    }
+    if let Some(v) = cfg.get_usize("durability", "add_nodes") {
+        d.add_nodes = v;
+    }
+    if let Some(v) = cfg.get_usize("durability", "drain_nodes") {
+        d.drain_nodes = v;
+    }
+    if let Some(v) = cfg.get_usize("durability", "add_clusters") {
+        d.add_clusters = v;
+    }
+    if let Some(v) = cfg.get_usize("durability", "fault_ops") {
+        d.fault_ops = v;
+    }
+    if let Some(v) = cfg.get_usize("durability", "crash_cap") {
+        d.crash_cap = v;
+    }
+}
+
 /// Apply the `[faults]` section onto an experiment-7 config: recognized
 /// keys `horizon_hours`, `node_mttf_hours`, `node_mttr_hours`,
 /// `cluster_mttf_hours`, `cluster_mttr_hours` (hours; a zero MTTF
@@ -452,6 +484,25 @@ epsilon = 0.1
         assert_eq!(f.measure_cap, 4);
         assert_eq!(f.fault.node_mttr_hours, defaults.fault.node_mttr_hours);
         assert_eq!(f.reads_per_event, defaults.reads_per_event);
+    }
+
+    #[test]
+    fn durability_section_applies_over_defaults() {
+        let c = Config::parse(
+            "[durability]\nwal_sync_every = 1\nsnapshot_every = 16\ncrash_cap = 10\n\
+             fault_ops = 2",
+        )
+        .unwrap();
+        let mut d = crate::experiments::DurabilitySimConfig::default();
+        let defaults = crate::experiments::DurabilitySimConfig::default();
+        apply_durability_keys(&c, &mut d);
+        assert_eq!(d.wal_sync_every, 1);
+        assert_eq!(d.snapshot_every, 16);
+        assert_eq!(d.crash_cap, 10);
+        assert_eq!(d.fault_ops, 2);
+        assert_eq!(d.add_nodes, defaults.add_nodes);
+        assert_eq!(d.drain_nodes, defaults.drain_nodes);
+        assert_eq!(d.add_clusters, defaults.add_clusters);
     }
 
     #[test]

@@ -1,0 +1,706 @@
+//! Checksummed, versioned **manifest snapshots** of the coordinator's
+//! durable state.
+//!
+//! A [`CoordinatorState`] is the *logical* state that must survive a
+//! coordinator crash: the [`crate::placement::Topology`] parts (cluster
+//! ownership, lifecycle states, retired clusters), every stripe's
+//! placement rows from the [`crate::coordinator::BlockMap`], and the
+//! failure set. Block *bytes* are node-resident in the crash model and
+//! are re-attached at restore time ([`crate::coordinator::Dss::restore`]);
+//! derived indexes (per-cluster, per-node) are rebuilt, not stored.
+//!
+//! The on-disk [`Manifest`] wraps a state with the WAL high-water mark
+//! (`last_seq`) and the committed-operation counter, framed as
+//! `magic · version · length · CRC32 · payload`. [`ManifestStore`] writes
+//! snapshots with the classic write-temp → fsync → rename protocol and
+//! keeps **two generations** (`MANIFEST.bin` + `MANIFEST.prev.bin`) so
+//! recovery can fall back across one corrupt or torn snapshot.
+
+use crate::coordinator::block_map::BlockMap;
+use crate::placement::{NodeState, Placement, Topology};
+use crate::sim::faults::{digest_mix, DIGEST_SEED};
+use std::collections::HashSet;
+use std::fs::{self, File};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// File magic: identifies a UniLRC manifest.
+pub const MANIFEST_MAGIC: &[u8; 8] = b"UNILRCMF";
+/// On-disk format version. Bump on any encoding change.
+pub const MANIFEST_VERSION: u32 = 1;
+/// Current-generation snapshot file name.
+pub const MANIFEST_CURRENT: &str = "MANIFEST.bin";
+/// Previous-generation snapshot file name (fallback).
+pub const MANIFEST_PREV: &str = "MANIFEST.prev.bin";
+
+// ---------------------------------------------------------------- CRC32
+
+/// CRC32 (IEEE, reflected polynomial 0xEDB88320) lookup table, built at
+/// compile time — the checksum every manifest payload and WAL record
+/// carries. Hand-rolled: no checksum crates in this offline build.
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32 (IEEE) of a byte slice.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ------------------------------------------------------- binary encoding
+
+/// Little-endian append helpers shared by the manifest and WAL encoders.
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian cursor over an encoded payload. Every
+/// read can fail — decode paths must survive arbitrary corruption.
+pub(crate) struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        if self.pos >= self.buf.len() {
+            return Err("payload truncated (u8)".into());
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        if self.pos + 4 > self.buf.len() {
+            return Err("payload truncated (u32)".into());
+        }
+        let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        if self.pos + 8 > self.buf.len() {
+            return Err("payload truncated (u64)".into());
+        }
+        let v = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        Ok(v)
+    }
+
+    /// Length-prefixed id list; `limit` caps the count so a corrupt
+    /// length can never drive an over-allocation.
+    pub fn u32_vec(&mut self, limit: usize) -> Result<Vec<u32>, String> {
+        let len = self.u32()? as usize;
+        if len > limit {
+            return Err(format!("list length {len} exceeds limit {limit}"));
+        }
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn str(&mut self, limit: usize) -> Result<String, String> {
+        let len = self.u32()? as usize;
+        if len > limit {
+            return Err(format!("string length {len} exceeds limit {limit}"));
+        }
+        if self.pos + len > self.buf.len() {
+            return Err("payload truncated (str)".into());
+        }
+        let s = std::str::from_utf8(&self.buf[self.pos..self.pos + len])
+            .map_err(|_| "string is not UTF-8".to_string())?
+            .to_string();
+        self.pos += len;
+        Ok(s)
+    }
+
+    pub fn done(&self) -> Result<(), String> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after payload", self.buf.len() - self.pos))
+        }
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_u32_vec(buf: &mut Vec<u8>, v: &[u32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_u32(buf, x);
+    }
+}
+
+/// Caps on decoded list lengths — generous versus any prototype scale,
+/// tight enough that a bit-flipped length field cannot drive a huge
+/// allocation before the CRC or bounds checks reject the record.
+const MAX_NODES: usize = 1 << 20;
+const MAX_CLUSTERS: usize = 1 << 16;
+const MAX_STRIPES: usize = 1 << 24;
+const MAX_BLOCKS: usize = 1 << 12;
+
+// ------------------------------------------------------ coordinator state
+
+/// The coordinator's durable logical state: everything needed to rebuild
+/// [`crate::placement::Topology`] + [`BlockMap`] + the failure set after
+/// a crash. This is also the unit the exp9 oracle digests: two runs agree
+/// iff their `CoordinatorState`s are bit-identical.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoordinatorState {
+    /// Code label (report/diagnostic only — the restore caller supplies
+    /// the actual `Code`).
+    pub code_name: String,
+    /// Placement-strategy name — checked at restore so a manifest is
+    /// never replayed under a different placement policy.
+    pub strategy: String,
+    /// node id → owning cluster.
+    pub cluster_of: Vec<u32>,
+    /// node id → lifecycle state tag ([`NodeState::tag`]).
+    pub states: Vec<u8>,
+    /// cluster id → retired flag.
+    pub retired: Vec<bool>,
+    /// Per stripe: (per-block cluster, per-block node) placement rows.
+    pub placements: Vec<(Vec<u32>, Vec<u32>)>,
+    /// Failed node ids, sorted ascending.
+    pub failed: Vec<u32>,
+}
+
+impl CoordinatorState {
+    /// Snapshot the live coordinator structures.
+    pub fn capture(
+        code_name: &str,
+        strategy: &str,
+        topo: &Topology,
+        map: &BlockMap,
+        failed: &HashSet<usize>,
+    ) -> CoordinatorState {
+        let cluster_of =
+            (0..topo.total_nodes()).map(|n| topo.cluster_of_node(n) as u32).collect();
+        let states = (0..topo.total_nodes()).map(|n| topo.state(n).tag()).collect();
+        let retired = (0..topo.clusters()).map(|c| topo.is_retired(c)).collect();
+        let placements = (0..map.stripe_count())
+            .map(|s| {
+                let p = map.placement(s);
+                (
+                    p.cluster_of.iter().map(|&c| c as u32).collect(),
+                    p.node_of.iter().map(|&n| n as u32).collect(),
+                )
+            })
+            .collect();
+        let mut failed: Vec<u32> = failed.iter().map(|&n| n as u32).collect();
+        failed.sort_unstable();
+        CoordinatorState {
+            code_name: code_name.to_string(),
+            strategy: strategy.to_string(),
+            cluster_of,
+            states,
+            retired,
+            placements,
+            failed,
+        }
+    }
+
+    /// FNV-1a digest over every field — the exp9 oracle comparator (same
+    /// chain discipline as exp7/exp8 digests).
+    pub fn digest(&self) -> u64 {
+        let mut h = DIGEST_SEED;
+        for b in self.code_name.bytes().chain(self.strategy.bytes()) {
+            h = digest_mix(h, b as u64);
+        }
+        h = digest_mix(h, self.cluster_of.len() as u64);
+        for &c in &self.cluster_of {
+            h = digest_mix(h, c as u64);
+        }
+        for &s in &self.states {
+            h = digest_mix(h, s as u64);
+        }
+        h = digest_mix(h, self.retired.len() as u64);
+        for &r in &self.retired {
+            h = digest_mix(h, r as u64);
+        }
+        h = digest_mix(h, self.placements.len() as u64);
+        for (clusters, nodes) in &self.placements {
+            for &c in clusters {
+                h = digest_mix(h, c as u64);
+            }
+            for &n in nodes {
+                h = digest_mix(h, n as u64);
+            }
+        }
+        h = digest_mix(h, self.failed.len() as u64);
+        for &f in &self.failed {
+            h = digest_mix(h, f as u64);
+        }
+        h
+    }
+
+    /// Structural invariant proof — the gate every recovered state must
+    /// pass before it is allowed to become a live coordinator. Checks the
+    /// exact properties `Placement::validate` asserts at ingest, plus
+    /// topology-shape and failure-set consistency; returns a description
+    /// of the first violation.
+    pub fn prove_invariants(&self) -> Result<(), String> {
+        let nodes = self.cluster_of.len();
+        let clusters = self.retired.len();
+        if self.states.len() != nodes {
+            return Err(format!(
+                "state count {} != node count {nodes}",
+                self.states.len()
+            ));
+        }
+        if clusters == 0 {
+            return Err("no clusters".into());
+        }
+        for (n, &c) in self.cluster_of.iter().enumerate() {
+            if c as usize >= clusters {
+                return Err(format!("node {n} owned by out-of-range cluster {c}"));
+            }
+        }
+        for (n, &s) in self.states.iter().enumerate() {
+            if NodeState::from_tag(s).is_none() {
+                return Err(format!("node {n} has unknown state tag {s}"));
+            }
+        }
+        let width = self.placements.first().map_or(0, |(c, _)| c.len());
+        for (s, (p_clusters, p_nodes)) in self.placements.iter().enumerate() {
+            if p_clusters.len() != p_nodes.len() || p_clusters.len() != width || width == 0 {
+                return Err(format!("stripe {s} has malformed placement row"));
+            }
+            let mut seen = HashSet::with_capacity(width);
+            for (b, (&c, &node)) in p_clusters.iter().zip(p_nodes).enumerate() {
+                if node as usize >= nodes {
+                    return Err(format!("stripe {s} block {b} on out-of-range node {node}"));
+                }
+                if self.cluster_of[node as usize] != c {
+                    return Err(format!(
+                        "stripe {s} block {b}: node {node} is in cluster {} not {c}",
+                        self.cluster_of[node as usize]
+                    ));
+                }
+                if !seen.insert(node) {
+                    return Err(format!("stripe {s}: two blocks share node {node}"));
+                }
+            }
+        }
+        let mut prev: Option<u32> = None;
+        for &f in &self.failed {
+            if f as usize >= nodes {
+                return Err(format!("failed set names out-of-range node {f}"));
+            }
+            if prev.is_some_and(|p| p >= f) {
+                return Err("failed set is not sorted-unique".into());
+            }
+            prev = Some(f);
+        }
+        Ok(())
+    }
+
+    /// Rebuild the live [`Topology`]. Call [`Self::prove_invariants`]
+    /// first — this conversion asserts rather than checks.
+    pub fn restore_topology(&self) -> Topology {
+        let cluster_of = self.cluster_of.iter().map(|&c| c as usize).collect();
+        let states = self
+            .states
+            .iter()
+            .map(|&s| NodeState::from_tag(s).expect("state tags proven by invariants"))
+            .collect();
+        Topology::from_parts(cluster_of, states, self.retired.clone())
+    }
+
+    /// Rebuild the live [`BlockMap`] (derived indexes recomputed). Call
+    /// [`Self::prove_invariants`] first.
+    pub fn restore_block_map(&self) -> BlockMap {
+        let mut map = BlockMap::new();
+        for (clusters, nodes) in &self.placements {
+            let placement = Placement {
+                cluster_of: clusters.iter().map(|&c| c as usize).collect(),
+                node_of: nodes.iter().map(|&n| n as usize).collect(),
+            };
+            map.insert_stripe(placement, self.retired.len());
+        }
+        map
+    }
+
+    fn encode_into(&self, buf: &mut Vec<u8>) {
+        put_str(buf, &self.code_name);
+        put_str(buf, &self.strategy);
+        put_u32_vec(buf, &self.cluster_of);
+        put_u32(buf, self.states.len() as u32);
+        buf.extend_from_slice(&self.states);
+        put_u32(buf, self.retired.len() as u32);
+        buf.extend(self.retired.iter().map(|&r| r as u8));
+        put_u32(buf, self.placements.len() as u32);
+        for (clusters, nodes) in &self.placements {
+            put_u32_vec(buf, clusters);
+            put_u32_vec(buf, nodes);
+        }
+        put_u32_vec(buf, &self.failed);
+    }
+
+    fn decode_from(cur: &mut Cursor<'_>) -> Result<CoordinatorState, String> {
+        let code_name = cur.str(256)?;
+        let strategy = cur.str(256)?;
+        let cluster_of = cur.u32_vec(MAX_NODES)?;
+        let n_states = cur.u32()? as usize;
+        if n_states > MAX_NODES {
+            return Err(format!("state count {n_states} exceeds limit"));
+        }
+        let mut states = Vec::with_capacity(n_states);
+        for _ in 0..n_states {
+            states.push(cur.u8()?);
+        }
+        let n_retired = cur.u32()? as usize;
+        if n_retired > MAX_CLUSTERS {
+            return Err(format!("cluster count {n_retired} exceeds limit"));
+        }
+        let mut retired = Vec::with_capacity(n_retired);
+        for _ in 0..n_retired {
+            retired.push(cur.u8()? != 0);
+        }
+        let n_stripes = cur.u32()? as usize;
+        if n_stripes > MAX_STRIPES {
+            return Err(format!("stripe count {n_stripes} exceeds limit"));
+        }
+        let mut placements = Vec::with_capacity(n_stripes);
+        for _ in 0..n_stripes {
+            let clusters = cur.u32_vec(MAX_BLOCKS)?;
+            let nodes = cur.u32_vec(MAX_BLOCKS)?;
+            placements.push((clusters, nodes));
+        }
+        let failed = cur.u32_vec(MAX_NODES)?;
+        Ok(CoordinatorState {
+            code_name,
+            strategy,
+            cluster_of,
+            states,
+            retired,
+            placements,
+            failed,
+        })
+    }
+}
+
+// -------------------------------------------------------------- manifest
+
+/// One snapshot generation: a [`CoordinatorState`] plus the WAL position
+/// it covers. Replay resumes at `last_seq + 1`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub state: CoordinatorState,
+    /// Sequence number of the last WAL record folded into this snapshot
+    /// (0 = fresh journal, nothing logged yet).
+    pub last_seq: u64,
+    /// Committed logical operations folded into this snapshot — lets a
+    /// deterministic driver resume its op list after recovery.
+    pub committed_ops: u64,
+}
+
+impl Manifest {
+    /// Serialize: `magic · version · payload_len · crc32 · payload`.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::with_capacity(256);
+        put_u64(&mut payload, self.last_seq);
+        put_u64(&mut payload, self.committed_ops);
+        self.state.encode_into(&mut payload);
+        let mut out = Vec::with_capacity(payload.len() + 20);
+        out.extend_from_slice(MANIFEST_MAGIC);
+        put_u32(&mut out, MANIFEST_VERSION);
+        put_u32(&mut out, payload.len() as u32);
+        put_u32(&mut out, crc32(&payload));
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Decode and verify a manifest image. Any framing, checksum,
+    /// length, or field-level inconsistency is an error — a torn or
+    /// bit-flipped snapshot must never decode to a plausible state.
+    pub fn decode(bytes: &[u8]) -> Result<Manifest, String> {
+        if bytes.len() < 20 {
+            return Err(format!("file too short ({} bytes)", bytes.len()));
+        }
+        if &bytes[..8] != MANIFEST_MAGIC {
+            return Err("bad magic".into());
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != MANIFEST_VERSION {
+            return Err(format!("unsupported version {version}"));
+        }
+        let len = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        if bytes.len() != 20 + len {
+            return Err(format!("payload length {len} != {} file bytes", bytes.len() - 20));
+        }
+        let payload = &bytes[20..];
+        if crc32(payload) != crc {
+            return Err("payload CRC mismatch".into());
+        }
+        let mut cur = Cursor::new(payload);
+        let last_seq = cur.u64()?;
+        let committed_ops = cur.u64()?;
+        let state = CoordinatorState::decode_from(&mut cur)?;
+        cur.done()?;
+        Ok(Manifest { state, last_seq, committed_ops })
+    }
+}
+
+// --------------------------------------------------------- manifest store
+
+/// Atomic two-generation snapshot store.
+///
+/// Write protocol: encode to `MANIFEST.tmp`, fsync the file, rotate
+/// `MANIFEST.bin` → `MANIFEST.prev.bin`, rename the temp into place,
+/// fsync the directory. A crash at any step leaves at least one intact
+/// generation on disk; [`ManifestStore::load`] prefers the current file
+/// and reports whether the previous generation had to be used.
+#[derive(Debug)]
+pub struct ManifestStore {
+    dir: PathBuf,
+}
+
+/// A successfully loaded snapshot, tagged with its provenance.
+#[derive(Debug)]
+pub struct LoadedManifest {
+    pub manifest: Manifest,
+    /// True when `MANIFEST.bin` was missing/corrupt and the previous
+    /// generation was used instead.
+    pub used_fallback: bool,
+    /// Human-readable reason the current generation was rejected (when
+    /// `used_fallback`).
+    pub fallback_reason: Option<String>,
+}
+
+/// Load failure: distinguishes "never initialized" from "present but
+/// unreadable" so recovery can type its errors.
+#[derive(Debug)]
+pub enum ManifestLoadError {
+    /// Neither generation exists — the directory was never initialized.
+    Missing,
+    /// At least one generation exists but none decodes; the payload lists
+    /// each candidate's failure.
+    Corrupt(String),
+}
+
+impl ManifestStore {
+    pub fn new(dir: &Path) -> ManifestStore {
+        ManifestStore { dir: dir.to_path_buf() }
+    }
+
+    pub fn current_path(&self) -> PathBuf {
+        self.dir.join(MANIFEST_CURRENT)
+    }
+
+    pub fn prev_path(&self) -> PathBuf {
+        self.dir.join(MANIFEST_PREV)
+    }
+
+    /// Atomically persist `manifest` as the current generation.
+    pub fn write(&self, manifest: &Manifest) -> std::io::Result<()> {
+        let tmp = self.dir.join("MANIFEST.tmp");
+        let current = self.current_path();
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&manifest.encode())?;
+            f.sync_all()?;
+        }
+        if current.exists() {
+            fs::rename(&current, self.prev_path())?;
+        }
+        fs::rename(&tmp, &current)?;
+        // Persist the renames themselves.
+        File::open(&self.dir)?.sync_all()?;
+        Ok(())
+    }
+
+    /// Load the best available generation: current first, then previous.
+    pub fn load(&self) -> Result<LoadedManifest, ManifestLoadError> {
+        let mut reasons = Vec::new();
+        let mut any_present = false;
+        for (path, fallback) in [(self.current_path(), false), (self.prev_path(), true)] {
+            let mut bytes = Vec::new();
+            match File::open(&path).and_then(|mut f| f.read_to_end(&mut bytes)) {
+                Ok(_) => any_present = true,
+                Err(_) => {
+                    reasons.push(format!("{}: missing/unreadable", path.display()));
+                    continue;
+                }
+            }
+            match Manifest::decode(&bytes) {
+                Ok(manifest) => {
+                    return Ok(LoadedManifest {
+                        manifest,
+                        used_fallback: fallback,
+                        fallback_reason: fallback.then(|| reasons.join("; ")),
+                    })
+                }
+                Err(e) => reasons.push(format!("{}: {e}", path.display())),
+            }
+        }
+        if any_present {
+            Err(ManifestLoadError::Corrupt(reasons.join("; ")))
+        } else {
+            Err(ManifestLoadError::Missing)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metadata;
+    use crate::codes::spec::{CodeFamily, Scheme};
+    use crate::placement::UniLrcPlace;
+    use std::sync::Arc;
+
+    fn sample_state() -> CoordinatorState {
+        let code = Scheme::S42.build(CodeFamily::UniLrc);
+        let mut topo = Topology::new(6, 16);
+        let mut meta = Metadata::new(&code, Box::new(UniLrcPlace));
+        for s in 0..3 {
+            let blocks: Vec<Arc<Vec<u8>>> =
+                (0..code.n()).map(|b| Arc::new(vec![(s * 7 + b) as u8; 16])).collect();
+            meta.add_stripe(blocks, &code, &topo);
+        }
+        topo.add_node(2);
+        topo.set_state(5, NodeState::Draining);
+        let failed: HashSet<usize> = [3, 40].into_iter().collect();
+        CoordinatorState::capture("unilrc-s42", "one-group-one-cluster", &topo, meta.block_map(), &failed)
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC32 of "123456789" — the standard check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn state_round_trips_through_manifest() {
+        let state = sample_state();
+        assert!(state.prove_invariants().is_ok());
+        let m = Manifest { state, last_seq: 17, committed_ops: 5 };
+        let decoded = Manifest::decode(&m.encode()).unwrap();
+        assert_eq!(decoded, m);
+        assert_eq!(decoded.state.digest(), m.state.digest());
+    }
+
+    #[test]
+    fn topology_and_map_restore_bit_exact() {
+        let state = sample_state();
+        let topo = state.restore_topology();
+        assert_eq!(topo.total_nodes(), state.cluster_of.len());
+        let map = state.restore_block_map();
+        let recaptured = CoordinatorState::capture(
+            &state.code_name,
+            &state.strategy,
+            &topo,
+            &map,
+            &state.failed.iter().map(|&f| f as usize).collect(),
+        );
+        assert_eq!(recaptured, state);
+    }
+
+    #[test]
+    fn every_flipped_byte_is_rejected_or_equal() {
+        let m = Manifest { state: sample_state(), last_seq: 3, committed_ops: 2 };
+        let good = m.encode();
+        for at in 0..good.len() {
+            let mut bad = good.clone();
+            bad[at] ^= 0x40;
+            // A single bit flip must never decode to a *different* manifest.
+            if let Ok(d) = Manifest::decode(&bad) {
+                assert_eq!(d, m, "flip at {at} decoded to a different manifest");
+            }
+        }
+    }
+
+    #[test]
+    fn truncations_are_rejected() {
+        let m = Manifest { state: sample_state(), last_seq: 3, committed_ops: 2 };
+        let good = m.encode();
+        for len in 0..good.len() {
+            assert!(Manifest::decode(&good[..len]).is_err(), "truncation to {len} accepted");
+        }
+    }
+
+    #[test]
+    fn invariant_proof_catches_violations() {
+        let mut s = sample_state();
+        s.placements[0].1[0] = s.placements[0].1[1]; // two blocks on one node
+        assert!(s.prove_invariants().is_err());
+        let mut s = sample_state();
+        s.cluster_of[0] = 999;
+        assert!(s.prove_invariants().is_err());
+        let mut s = sample_state();
+        s.failed = vec![2, 1];
+        assert!(s.prove_invariants().is_err());
+        let mut s = sample_state();
+        s.states[0] = 7;
+        assert!(s.prove_invariants().is_err());
+    }
+
+    #[test]
+    fn store_rotates_generations_and_falls_back() {
+        let dir = std::env::temp_dir().join(format!("unilrc-manifest-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let store = ManifestStore::new(&dir);
+        assert!(matches!(store.load(), Err(ManifestLoadError::Missing)));
+
+        let m1 = Manifest { state: sample_state(), last_seq: 1, committed_ops: 1 };
+        let mut m2 = m1.clone();
+        m2.last_seq = 9;
+        store.write(&m1).unwrap();
+        store.write(&m2).unwrap();
+        let loaded = store.load().unwrap();
+        assert!(!loaded.used_fallback);
+        assert_eq!(loaded.manifest.last_seq, 9);
+
+        // Corrupt the current generation: load falls back to m1.
+        let mut bytes = fs::read(store.current_path()).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        fs::write(store.current_path(), &bytes).unwrap();
+        let loaded = store.load().unwrap();
+        assert!(loaded.used_fallback);
+        assert_eq!(loaded.manifest.last_seq, 1);
+
+        // Corrupt both: typed corruption error, not a panic.
+        fs::write(store.prev_path(), b"garbage").unwrap();
+        assert!(matches!(store.load(), Err(ManifestLoadError::Corrupt(_))));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

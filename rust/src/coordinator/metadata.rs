@@ -30,6 +30,18 @@ impl Metadata {
         Metadata { map: BlockMap::new(), blocks: HashMap::new(), strategy, n: code.n() }
     }
 
+    /// Rebuild metadata from recovered parts: a restored [`BlockMap`]
+    /// plus the surviving block store (crash model: block bytes are
+    /// node-resident and survive a coordinator crash).
+    pub fn restore(
+        map: BlockMap,
+        blocks: HashMap<(StripeId, usize), Arc<Vec<u8>>>,
+        strategy: Box<dyn PlacementStrategy>,
+        n: usize,
+    ) -> Metadata {
+        Metadata { map, blocks, strategy, n }
+    }
+
     pub fn strategy_name(&self) -> &'static str {
         self.strategy.name()
     }
@@ -52,11 +64,28 @@ impl Metadata {
         code: &Code,
         topo: &Topology,
     ) -> StripeId {
+        let placement = self.place_next_stripe(code, topo);
+        self.add_stripe_with_placement(blocks, placement, topo.clusters())
+    }
+
+    /// Placement the strategy would assign to the *next* stripe — pure:
+    /// computes without registering, so the durable coordinator can log
+    /// the placement to the WAL before committing it
+    /// ([`crate::coordinator::Dss::ingest_stripe`]).
+    pub fn place_next_stripe(&self, code: &Code, topo: &Topology) -> Placement {
+        self.strategy.place(code, topo, self.map.stripe_count())
+    }
+
+    /// Register a stripe under an already-computed placement (the commit
+    /// half of the log-then-apply ingest path).
+    pub fn add_stripe_with_placement(
+        &mut self,
+        blocks: Vec<Arc<Vec<u8>>>,
+        placement: Placement,
+        clusters: usize,
+    ) -> StripeId {
         assert_eq!(blocks.len(), self.n, "stripe must have n blocks");
-        let id = self.map.stripe_count();
-        let placement = self.strategy.place(code, topo, id);
-        let sid = self.map.insert_stripe(placement, topo.clusters());
-        debug_assert_eq!(sid, id);
+        let id = self.map.insert_stripe(placement, clusters);
         for (b, data) in blocks.into_iter().enumerate() {
             self.blocks.insert((id, b), data);
         }
@@ -92,6 +121,24 @@ impl Metadata {
     /// All (stripe, block) pairs on a node.
     pub fn blocks_on_node(&self, node: usize) -> Vec<(StripeId, usize)> {
         self.map.blocks_on_node(node).to_vec()
+    }
+
+    /// Snapshot of the whole block store (`Arc` clones — cheap). The
+    /// exp9 crash harness uses this as the surviving node-resident data
+    /// handed to [`Metadata::restore`] after a simulated coordinator
+    /// death.
+    pub fn export_blocks(&self) -> HashMap<(StripeId, usize), Arc<Vec<u8>>> {
+        self.blocks.clone()
+    }
+
+    /// Fault-injection hook: overwrite one block's ground-truth bytes.
+    /// Only for corruption-injection tests — a mismatch here makes every
+    /// downstream byte-verification of the block fail.
+    pub fn corrupt_block_data(&mut self, stripe: StripeId, block: usize) {
+        let data = self.blocks.get_mut(&(stripe, block)).expect("block exists");
+        let mut flipped = data.as_ref().clone();
+        flipped[0] ^= 0xFF;
+        *data = Arc::new(flipped);
     }
 
     /// Reassign one block (migration executor only — the bytes must have

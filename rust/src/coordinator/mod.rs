@@ -16,12 +16,18 @@
 //! [`ProxyCtx::repair_node`] pipeline every repair uses.
 
 pub mod block_map;
+pub mod manifest;
 pub mod metadata;
 pub mod migrate;
+pub mod recovery;
+pub mod wal;
 
 pub use block_map::BlockMap;
+pub use manifest::{CoordinatorState, Manifest, ManifestStore};
 pub use metadata::{Metadata, StripeId};
 pub use migrate::{BlockMove, MigrationPlan, MigrationPolicy};
+pub use recovery::{recover, Recovered, RecoveryError};
+pub use wal::{DurabilityOptions, Journal, WalRecord};
 
 use crate::codes::Code;
 use crate::placement::{NodeState, PlacementStrategy, Topology, TopologyEvent};
@@ -29,7 +35,8 @@ use crate::proxy::{OpOutcome, ProxyCtx, RepairRequest};
 use crate::prng::Prng;
 use crate::runtime::CodingEngine;
 use crate::sim::{Endpoint, NetConfig, NetSim};
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
 use std::sync::Arc;
 
 /// System-level configuration (§6 Setup).
@@ -86,6 +93,11 @@ pub struct Dss {
     meta: Metadata,
     failed: HashSet<usize>,
     clock: f64,
+    /// Durability journal (WAL + manifest snapshots). `None` = the
+    /// original in-memory-only coordinator; enabled via
+    /// [`Dss::enable_durability`]. When present, every durable mutation
+    /// is logged **before** the in-memory state commits.
+    journal: Option<Journal>,
 }
 
 impl Dss {
@@ -103,7 +115,64 @@ impl Dss {
     ) -> Dss {
         let meta = Metadata::new(&code, strategy);
         let net = NetSim::new(&topo, net_cfg);
-        Dss { code, topo, net, cfg, engine, meta, failed: HashSet::new(), clock: 0.0 }
+        Dss { code, topo, net, cfg, engine, meta, failed: HashSet::new(), clock: 0.0, journal: None }
+    }
+
+    /// Rebuild a coordinator from a recovered [`CoordinatorState`] plus
+    /// the surviving block store (crash model: block bytes are
+    /// node-resident and survive the coordinator's death). Fails loudly
+    /// on any inconsistency — a missing block or mismatched strategy
+    /// must never be papered over as silent data loss. The restored
+    /// coordinator starts without a journal; call
+    /// [`Dss::enable_durability`] on a fresh directory to resume logging.
+    pub fn restore(
+        code: Code,
+        strategy: Box<dyn PlacementStrategy>,
+        state: &CoordinatorState,
+        blocks: HashMap<(StripeId, usize), Arc<Vec<u8>>>,
+        net_cfg: NetConfig,
+        engine: Arc<dyn CodingEngine>,
+        cfg: DssConfig,
+    ) -> anyhow::Result<Dss> {
+        state
+            .prove_invariants()
+            .map_err(|d| anyhow::anyhow!("recovered state fails invariant proof: {d}"))?;
+        anyhow::ensure!(
+            state.strategy == strategy.name(),
+            "manifest was written under strategy '{}', not '{}'",
+            state.strategy,
+            strategy.name()
+        );
+        if let Some((clusters, _)) = state.placements.first() {
+            anyhow::ensure!(
+                clusters.len() == code.n(),
+                "manifest stripes are {} blocks wide but the code has n = {}",
+                clusters.len(),
+                code.n()
+            );
+        }
+        let topo = state.restore_topology();
+        let map = state.restore_block_map();
+        for s in 0..map.stripe_count() {
+            for b in 0..code.n() {
+                let data = blocks.get(&(s, b)).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "block store is missing stripe {s} block {b} — refusing to restore \
+                         a map that silently drops blocks"
+                    )
+                })?;
+                anyhow::ensure!(
+                    data.len() == cfg.block_size,
+                    "stripe {s} block {b} has {} bytes, expected {}",
+                    data.len(),
+                    cfg.block_size
+                );
+            }
+        }
+        let failed = state.failed.iter().map(|&f| f as usize).collect();
+        let net = NetSim::new(&topo, net_cfg);
+        let meta = Metadata::restore(map, blocks, strategy, code.n());
+        Ok(Dss { code, topo, net, cfg, engine, meta, failed, clock: 0.0, journal: None })
     }
 
     pub fn metadata(&self) -> &Metadata {
@@ -123,6 +192,73 @@ impl Dss {
     pub fn quiesce(&mut self) {
         self.clock = 0.0;
         self.net.reset();
+    }
+
+    // ---------------------------------------------------------- durability
+
+    /// Turn on the durability layer: write an initial manifest snapshot
+    /// of the current state into `dir` and open a WAL. From here on,
+    /// every durable mutation (stripe registration, failure-set change,
+    /// topology event with its block moves) is logged before it commits
+    /// in memory, and the manifest is re-snapshotted (with log
+    /// truncation) every `opts.snapshot_every` committed operations.
+    pub fn enable_durability(&mut self, dir: &Path, opts: DurabilityOptions) -> anyhow::Result<()> {
+        anyhow::ensure!(self.journal.is_none(), "durability already enabled");
+        let state = self.capture_state();
+        self.journal = Some(Journal::create(dir, &state, opts)?);
+        Ok(())
+    }
+
+    /// The journal, when durability is enabled (report metrics: WAL
+    /// bytes/records, snapshot count, committed operations).
+    pub fn journal(&self) -> Option<&Journal> {
+        self.journal.as_ref()
+    }
+
+    /// Snapshot the durable logical state (topology + block map +
+    /// failure set). This is what the manifest persists and what the
+    /// exp9 oracle digests.
+    pub fn capture_state(&self) -> CoordinatorState {
+        CoordinatorState::capture(
+            self.code.name(),
+            self.meta.strategy_name(),
+            &self.topo,
+            self.meta.block_map(),
+            &self.failed,
+        )
+    }
+
+    /// Export the block store (`Arc` clones) — the node-resident bytes
+    /// that survive a simulated coordinator crash.
+    pub fn export_blocks(&self) -> HashMap<(StripeId, usize), Arc<Vec<u8>>> {
+        self.meta.export_blocks()
+    }
+
+    /// Corruption-injection hook (tests): flip the ground-truth bytes of
+    /// one block so every later byte-verification of it fails.
+    pub fn corrupt_block_data(&mut self, stripe: StripeId, block: usize) {
+        self.meta.corrupt_block_data(stripe, block);
+    }
+
+    /// Append one committed operation to the WAL (no-op without a
+    /// journal). Durability failures are fatal: continuing after a lost
+    /// log write would silently break the crash-consistency contract.
+    fn log_op(&mut self, records: &[WalRecord]) {
+        if let Some(j) = self.journal.as_mut() {
+            j.commit_op(records).expect("WAL append failed — cannot keep durability promise");
+        }
+    }
+
+    /// Re-snapshot the manifest when the cadence is due.
+    fn maybe_snapshot(&mut self) {
+        if self.journal.as_ref().is_some_and(|j| j.snapshot_due()) {
+            let state = self.capture_state();
+            self.journal
+                .as_mut()
+                .expect("journal checked above")
+                .snapshot(&state)
+                .expect("manifest snapshot failed — cannot keep durability promise");
+        }
     }
 
     // ------------------------------------------------------------- ingest
@@ -148,7 +284,16 @@ impl Dss {
         let drefs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
         let parities = self.engine.encode(&self.code, &drefs)?;
         let blocks: Vec<Arc<Vec<u8>>> = data.into_iter().chain(parities).map(Arc::new).collect();
-        Ok(self.meta.add_stripe(blocks, &self.code, &self.topo))
+        // Log-then-apply: the placement is computed (pure), journaled as
+        // an `AddStripe` record, and only then committed to the map.
+        let placement = self.meta.place_next_stripe(&self.code, &self.topo);
+        self.log_op(&[WalRecord::AddStripe {
+            cluster_of: placement.cluster_of.iter().map(|&c| c as u32).collect(),
+            node_of: placement.node_of.iter().map(|&n| n as u32).collect(),
+        }]);
+        let id = self.meta.add_stripe_with_placement(blocks, placement, self.topo.clusters());
+        self.maybe_snapshot();
+        Ok(id)
     }
 
     // ------------------------------------------------------------ failures
@@ -158,11 +303,16 @@ impl Dss {
     /// node's blocks are simply unreadable by operations.
     pub fn fail_node(&mut self, node: usize) {
         assert!(node < self.topo.total_nodes());
+        self.log_op(&[WalRecord::SetFailed { node: node as u32, down: true }]);
         self.failed.insert(node);
+        self.maybe_snapshot();
     }
 
     pub fn heal_node(&mut self, node: usize) {
+        assert!(node < self.topo.total_nodes());
+        self.log_op(&[WalRecord::SetFailed { node: node as u32, down: false }]);
         self.failed.remove(&node);
+        self.maybe_snapshot();
     }
 
     pub fn failed_nodes(&self) -> &HashSet<usize> {
@@ -486,7 +636,26 @@ impl Dss {
     /// ([`migrate`]), execute it as batched transfer/coding waves on the
     /// virtual clock, and commit the moves to the coordinator's
     /// [`BlockMap`]. Returns the migration metrics.
+    ///
+    /// Commit discipline (the WAL contract): transfers run and every
+    /// rebuilt block is **byte-verified** first; only then is the event
+    /// group (topology transitions + block moves) appended to the WAL,
+    /// and only after that does the in-memory [`BlockMap`] mutate. A
+    /// failure anywhere before the WAL commit rolls the topology back
+    /// and leaves the map untouched — verified by
+    /// `tests/recovery.rs::failed_event_commits_nothing`.
     pub fn apply_topology_event(
+        &mut self,
+        ev: TopologyEvent,
+    ) -> anyhow::Result<MigrationReport> {
+        let wall0 = std::time::Instant::now();
+        let mut report = self.apply_topology_event_inner(ev)?;
+        report.wall_ms = wall0.elapsed().as_secs_f64() * 1e3;
+        self.maybe_snapshot();
+        Ok(report)
+    }
+
+    fn apply_topology_event_inner(
         &mut self,
         ev: TopologyEvent,
     ) -> anyhow::Result<MigrationReport> {
@@ -503,7 +672,28 @@ impl Dss {
                     cluster,
                     node,
                 );
-                let report = self.execute_migration(ev, &plan)?;
+                let exec = self.transfer_and_verify(&plan).and_then(|exec| {
+                    self.log_event(
+                        ev,
+                        vec![WalRecord::TopoAddNode { cluster: cluster as u32 }],
+                        &plan,
+                        vec![WalRecord::TopoSetState {
+                            node: node as u32,
+                            state: NodeState::Active.tag(),
+                        }],
+                    )?;
+                    Ok(exec)
+                });
+                let exec = match exec {
+                    Ok(exec) => exec,
+                    Err(e) => {
+                        // Node ids are never reused: the failed scale-out
+                        // leaves a dead id behind, the map untouched.
+                        self.topo.set_state(node, NodeState::Dead);
+                        return Err(e);
+                    }
+                };
+                let report = self.commit_migration(ev, &plan, exec);
                 self.topo.set_state(node, NodeState::Active);
                 Ok(report)
             }
@@ -524,8 +714,27 @@ impl Dss {
                     &self.failed,
                     node,
                 )?;
+                let prior = self.topo.state(node);
                 self.topo.set_state(node, NodeState::Draining);
-                let report = self.execute_migration(ev, &plan)?;
+                let mut post = vec![WalRecord::TopoSetState {
+                    node: node as u32,
+                    state: NodeState::Dead.tag(),
+                }];
+                if self.failed.contains(&node) {
+                    post.push(WalRecord::SetFailed { node: node as u32, down: false });
+                }
+                let exec = self.transfer_and_verify(&plan).and_then(|exec| {
+                    self.log_event(ev, Vec::new(), &plan, post)?;
+                    Ok(exec)
+                });
+                let exec = match exec {
+                    Ok(exec) => exec,
+                    Err(e) => {
+                        self.topo.set_state(node, prior);
+                        return Err(e);
+                    }
+                };
+                let report = self.commit_migration(ev, &plan, exec);
                 self.topo.set_state(node, NodeState::Dead);
                 self.failed.remove(&node); // dead ≠ failed: nothing left to repair
                 Ok(report)
@@ -540,8 +749,36 @@ impl Dss {
                     &self.failed,
                     cluster,
                 );
-                let report = self.execute_migration(ev, &plan)?;
                 let members = self.topo.nodes_of(cluster).to_vec();
+                let post = members
+                    .iter()
+                    .map(|&n| WalRecord::TopoSetState {
+                        node: n as u32,
+                        state: NodeState::Active.tag(),
+                    })
+                    .collect();
+                let exec = self.transfer_and_verify(&plan).and_then(|exec| {
+                    self.log_event(
+                        ev,
+                        vec![WalRecord::TopoAddCluster { nodes: nodes as u32 }],
+                        &plan,
+                        post,
+                    )?;
+                    Ok(exec)
+                });
+                let exec = match exec {
+                    Ok(exec) => exec,
+                    Err(e) => {
+                        // Retire the stillborn cluster; its joining nodes
+                        // die with it (ids are never reused).
+                        self.topo.retire_cluster(cluster);
+                        for &n in &members {
+                            self.topo.set_state(n, NodeState::Dead);
+                        }
+                        return Err(e);
+                    }
+                };
+                let report = self.commit_migration(ev, &plan, exec);
                 for n in members {
                     self.topo.set_state(n, NodeState::Active);
                 }
@@ -561,14 +798,39 @@ impl Dss {
                     &self.failed,
                     cluster,
                 )?;
-                self.topo.retire_cluster(cluster);
                 let members = self.topo.nodes_of(cluster).to_vec();
+                let prior: Vec<NodeState> =
+                    members.iter().map(|&n| self.topo.state(n)).collect();
                 for &n in &members {
                     if self.topo.is_live(n) {
                         self.topo.set_state(n, NodeState::Draining);
                     }
                 }
-                let report = self.execute_migration(ev, &plan)?;
+                let mut post = vec![WalRecord::TopoRetire { cluster: cluster as u32 }];
+                for &n in &members {
+                    post.push(WalRecord::TopoSetState {
+                        node: n as u32,
+                        state: NodeState::Dead.tag(),
+                    });
+                    if self.failed.contains(&n) {
+                        post.push(WalRecord::SetFailed { node: n as u32, down: false });
+                    }
+                }
+                let exec = self.transfer_and_verify(&plan).and_then(|exec| {
+                    self.log_event(ev, Vec::new(), &plan, post)?;
+                    Ok(exec)
+                });
+                let exec = match exec {
+                    Ok(exec) => exec,
+                    Err(e) => {
+                        for (&n, &s) in members.iter().zip(&prior) {
+                            self.topo.set_state(n, s);
+                        }
+                        return Err(e);
+                    }
+                };
+                let report = self.commit_migration(ev, &plan, exec);
+                self.topo.retire_cluster(cluster);
                 for &n in &members {
                     self.topo.set_state(n, NodeState::Dead);
                     self.failed.remove(&n);
@@ -578,7 +840,41 @@ impl Dss {
         }
     }
 
-    /// Execute a migration plan as one event on the virtual clock:
+    /// Append one topology event's WAL group:
+    /// `BeginEvent · pre · MoveBlock* · post · CommitEvent`. Replay
+    /// applies the group atomically at the commit marker, so the record
+    /// order mirrors replay needs (e.g. `TopoAddNode` precedes the moves
+    /// that target the new node), not in-memory mutation order.
+    fn log_event(
+        &mut self,
+        ev: TopologyEvent,
+        pre: Vec<WalRecord>,
+        plan: &MigrationPlan,
+        post: Vec<WalRecord>,
+    ) -> anyhow::Result<()> {
+        if self.journal.is_none() {
+            return Ok(());
+        }
+        let mut records = Vec::with_capacity(pre.len() + plan.len() + post.len() + 2);
+        records.push(WalRecord::BeginEvent { event: wal::WalEvent::from_event(ev) });
+        records.extend(pre);
+        records.extend(plan.moves.iter().map(|mv| WalRecord::MoveBlock {
+            stripe: mv.stripe as u32,
+            block: mv.block as u32,
+            to_cluster: mv.to_cluster as u32,
+            to_node: mv.to_node as u32,
+        }));
+        records.extend(post);
+        records.push(WalRecord::CommitEvent);
+        self.journal
+            .as_mut()
+            .expect("journal checked above")
+            .commit_op(&records)
+            .map_err(|e| anyhow::anyhow!("WAL commit of {ev:?} failed: {e}"))
+    }
+
+    /// Run a migration plan's data movement as one event on the virtual
+    /// clock — **without committing anything to the map**:
     ///
     /// * moves whose source is readable are direct node→node transfers
     ///   (gateway-metered when they cross clusters), all issued at `t0`;
@@ -588,13 +884,11 @@ impl Dss {
     ///   migration coding never spawns per-move threads or falls back to
     ///   scalar paths — then ship proxy→target.
     ///
-    /// Every rebuilt block is verified against ground truth before the
-    /// map is updated.
-    fn execute_migration(
-        &mut self,
-        event: TopologyEvent,
-        plan: &MigrationPlan,
-    ) -> anyhow::Result<MigrationReport> {
+    /// Every rebuilt block is byte-verified against ground truth here;
+    /// an error return leaves the [`BlockMap`] untouched. The caller
+    /// commits via [`Dss::commit_migration`] only after the event's WAL
+    /// group is down.
+    fn transfer_and_verify(&mut self, plan: &MigrationPlan) -> anyhow::Result<MigrationExec> {
         let t0 = self.clock;
         let cross0 = self.net.cross_bytes;
         let bs = self.cfg.block_size;
@@ -648,19 +942,41 @@ impl Dss {
                 done = done.max(t);
             }
         }
+        Ok(MigrationExec { t0, done, cross0, repaired_moves: rebuild.len() })
+    }
+
+    /// Commit half of a migration: apply the plan's moves to the
+    /// [`BlockMap`], advance the clock, and report. Runs only after
+    /// byte-verification succeeded and the WAL group committed.
+    fn commit_migration(
+        &mut self,
+        event: TopologyEvent,
+        plan: &MigrationPlan,
+        exec: MigrationExec,
+    ) -> MigrationReport {
         for mv in &plan.moves {
             self.meta.move_block(mv.stripe, mv.block, mv.to_cluster, mv.to_node);
         }
-        self.clock = done;
-        Ok(MigrationReport {
+        self.clock = exec.done;
+        MigrationReport {
             event,
             moves: plan.len(),
-            repaired_moves: rebuild.len(),
-            bytes_moved: plan.len() * bs,
-            cross_bytes: self.net.cross_bytes - cross0,
-            seconds: done - t0,
-        })
+            repaired_moves: exec.repaired_moves,
+            bytes_moved: plan.len() * self.cfg.block_size,
+            cross_bytes: self.net.cross_bytes - exec.cross0,
+            seconds: exec.done - exec.t0,
+            wall_ms: 0.0,
+        }
     }
+}
+
+/// Virtual-clock outcome of a migration's transfer/verify phase, held
+/// until the WAL group commits.
+struct MigrationExec {
+    t0: f64,
+    done: f64,
+    cross0: u64,
+    repaired_moves: usize,
 }
 
 /// Metrics of one executed topology event.
@@ -677,4 +993,8 @@ pub struct MigrationReport {
     pub cross_bytes: u64,
     /// Virtual seconds from event start to the last block landing.
     pub seconds: f64,
+    /// Real (wall-clock) milliseconds spent planning + executing +
+    /// logging the event — the exp8 baseline row exp9 compares its
+    /// recovery-replay timing against. Not part of any digest.
+    pub wall_ms: f64,
 }

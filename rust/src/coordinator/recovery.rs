@@ -1,0 +1,399 @@
+//! Crash-restart recovery: rebuild the coordinator's durable state from
+//! the newest decodable manifest snapshot plus WAL replay.
+//!
+//! Failure tolerance:
+//!
+//! * **torn tails** — a crash mid-append leaves an incomplete record at
+//!   the end of a segment; the intact prefix replays, the tail is
+//!   discarded (it never committed);
+//! * **truncated / bit-flipped snapshots** — the current manifest
+//!   generation fails its CRC or framing and recovery falls back to the
+//!   previous generation, replaying the older (longer) WAL suffix;
+//! * **interrupted topology events** — a `BeginEvent` group without its
+//!   `CommitEvent` is discarded atomically and surfaced as
+//!   [`Recovered::pending_event`] so the driver can re-plan the
+//!   migration from the consistent pre-event state.
+//!
+//! Anything else — a bit-flipped *committed* record, a sequence gap, a
+//! semantically impossible mutation, a replayed state that fails the
+//! structural invariant proof — is a typed [`RecoveryError`]. Recovery
+//! never panics on arbitrary bytes and never silently drops committed
+//! state: an unreplayable log fails loudly instead of shrinking the map.
+
+use crate::coordinator::block_map::BlockMap;
+use crate::coordinator::manifest::{CoordinatorState, ManifestLoadError, ManifestStore};
+use crate::coordinator::wal::{list_segments, scan_segment, ScanEnd, WalRecord};
+use crate::placement::{NodeState, Placement, Topology, TopologyEvent};
+use std::collections::HashSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Typed recovery failure. Every variant is a loud, diagnosable stop —
+/// the caller decides whether to retry, fall back, or page a human.
+#[derive(Debug)]
+pub enum RecoveryError {
+    /// No manifest generation exists — the directory holds no journal.
+    NoManifest { dir: PathBuf },
+    /// Manifest files exist but no generation decodes.
+    CorruptManifest { detail: String },
+    /// A committed WAL record is corrupt (bad CRC, bad framing, sequence
+    /// gap) at a known position.
+    CorruptWal { path: PathBuf, offset: usize, detail: String },
+    /// A record decoded cleanly but describes an impossible mutation
+    /// against the replayed state (unplannable-state detection).
+    Unreplayable { seq: u64, detail: String },
+    /// The fully replayed state fails the structural invariant proof.
+    InvariantViolation { detail: String },
+    /// Filesystem error while reading the journal.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for RecoveryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RecoveryError::NoManifest { dir } => {
+                write!(f, "no manifest in {}", dir.display())
+            }
+            RecoveryError::CorruptManifest { detail } => {
+                write!(f, "all manifest generations corrupt: {detail}")
+            }
+            RecoveryError::CorruptWal { path, offset, detail } => {
+                write!(f, "corrupt WAL record in {} at byte {offset}: {detail}", path.display())
+            }
+            RecoveryError::Unreplayable { seq, detail } => {
+                write!(f, "WAL record seq {seq} is unreplayable: {detail}")
+            }
+            RecoveryError::InvariantViolation { detail } => {
+                write!(f, "recovered state fails invariant proof: {detail}")
+            }
+            RecoveryError::Io(e) => write!(f, "journal I/O error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RecoveryError {}
+
+impl From<std::io::Error> for RecoveryError {
+    fn from(e: std::io::Error) -> Self {
+        RecoveryError::Io(e)
+    }
+}
+
+/// Outcome of a successful recovery.
+#[derive(Debug)]
+pub struct Recovered {
+    /// The recovered coordinator state (invariant-proven).
+    pub state: CoordinatorState,
+    /// Committed logical operations reflected in `state` — a
+    /// deterministic driver resumes its op list from here.
+    pub committed_ops: u64,
+    /// Last WAL sequence number folded into `state`.
+    pub last_seq: u64,
+    /// Records replayed on top of the snapshot.
+    pub replayed_records: usize,
+    /// A topology event was mid-flight (logged but uncommitted) at the
+    /// crash; its migration must be re-planned from `state`.
+    pub pending_event: Option<TopologyEvent>,
+    /// The final segment ended in an incomplete record (crash mid-append).
+    pub torn_tail: bool,
+    /// The current manifest generation was unreadable and the previous
+    /// one was used.
+    pub used_fallback: bool,
+}
+
+/// Mutable replay state: the same structures the live coordinator owns,
+/// minus block bytes and the network.
+struct Replayer {
+    topo: Topology,
+    map: BlockMap,
+    failed: HashSet<usize>,
+    /// Blocks per stripe (fixed by the code; 0 until the first stripe).
+    width: usize,
+}
+
+impl Replayer {
+    fn from_state(state: &CoordinatorState) -> Replayer {
+        Replayer {
+            topo: state.restore_topology(),
+            map: state.restore_block_map(),
+            failed: state.failed.iter().map(|&n| n as usize).collect(),
+            width: state.placements.first().map_or(0, |(c, _)| c.len()),
+        }
+    }
+
+    /// Apply one committed record; semantic violations return a
+    /// description (mapped to [`RecoveryError::Unreplayable`]).
+    fn apply(&mut self, rec: &WalRecord) -> Result<(), String> {
+        match rec {
+            WalRecord::AddStripe { cluster_of, node_of } => {
+                if cluster_of.len() != node_of.len() {
+                    return Err("placement rows differ in length".into());
+                }
+                if self.width != 0 && cluster_of.len() != self.width {
+                    return Err(format!(
+                        "stripe width {} != established width {}",
+                        cluster_of.len(),
+                        self.width
+                    ));
+                }
+                let mut seen = HashSet::with_capacity(node_of.len());
+                for (b, (&c, &node)) in cluster_of.iter().zip(node_of).enumerate() {
+                    let (c, node) = (c as usize, node as usize);
+                    if node >= self.topo.total_nodes() {
+                        return Err(format!("block {b} on unknown node {node}"));
+                    }
+                    if self.topo.cluster_of_node(node) != c {
+                        return Err(format!("block {b}: node {node} not in cluster {c}"));
+                    }
+                    if !seen.insert(node) {
+                        return Err(format!("two blocks share node {node}"));
+                    }
+                }
+                let placement = Placement {
+                    cluster_of: cluster_of.iter().map(|&c| c as usize).collect(),
+                    node_of: node_of.iter().map(|&n| n as usize).collect(),
+                };
+                self.width = placement.cluster_of.len();
+                self.map.insert_stripe(placement, self.topo.clusters());
+                Ok(())
+            }
+            WalRecord::SetFailed { node, down } => {
+                let node = *node as usize;
+                if node >= self.topo.total_nodes() {
+                    return Err(format!("failure mark on unknown node {node}"));
+                }
+                if *down {
+                    self.failed.insert(node);
+                } else {
+                    self.failed.remove(&node);
+                }
+                Ok(())
+            }
+            WalRecord::TopoAddNode { cluster } => {
+                let cluster = *cluster as usize;
+                if cluster >= self.topo.clusters() {
+                    return Err(format!("add-node to unknown cluster {cluster}"));
+                }
+                if self.topo.is_retired(cluster) {
+                    return Err(format!("add-node to retired cluster {cluster}"));
+                }
+                self.topo.add_node(cluster);
+                Ok(())
+            }
+            WalRecord::TopoAddCluster { nodes } => {
+                if *nodes == 0 {
+                    return Err("add-cluster with zero nodes".into());
+                }
+                self.topo.add_cluster(*nodes as usize);
+                Ok(())
+            }
+            WalRecord::TopoSetState { node, state } => {
+                let node = *node as usize;
+                if node >= self.topo.total_nodes() {
+                    return Err(format!("state change on unknown node {node}"));
+                }
+                let Some(state) = NodeState::from_tag(*state) else {
+                    return Err(format!("unknown node-state tag {state}"));
+                };
+                self.topo.set_state(node, state);
+                Ok(())
+            }
+            WalRecord::TopoRetire { cluster } => {
+                let cluster = *cluster as usize;
+                if cluster >= self.topo.clusters() {
+                    return Err(format!("retire of unknown cluster {cluster}"));
+                }
+                self.topo.retire_cluster(cluster);
+                Ok(())
+            }
+            WalRecord::MoveBlock { stripe, block, to_cluster, to_node } => {
+                let (stripe, block) = (*stripe as usize, *block as usize);
+                let (to_cluster, to_node) = (*to_cluster as usize, *to_node as usize);
+                if stripe >= self.map.stripe_count() {
+                    return Err(format!("move in unknown stripe {stripe}"));
+                }
+                if block >= self.width {
+                    return Err(format!("move of out-of-range block {block}"));
+                }
+                if to_node >= self.topo.total_nodes()
+                    || to_cluster >= self.topo.clusters()
+                    || self.topo.cluster_of_node(to_node) != to_cluster
+                {
+                    return Err(format!("move target ({to_cluster}, {to_node}) is invalid"));
+                }
+                let row = &self.map.placement(stripe).node_of;
+                if row.iter().enumerate().any(|(b, &n)| n == to_node && b != block) {
+                    return Err(format!(
+                        "move would co-locate two blocks of stripe {stripe} on node {to_node}"
+                    ));
+                }
+                self.map.move_block(stripe, block, to_cluster, to_node);
+                Ok(())
+            }
+            WalRecord::BeginEvent { .. } | WalRecord::CommitEvent => {
+                Err("group marker cannot be applied as a mutation".into())
+            }
+        }
+    }
+}
+
+/// Recover the coordinator state from a journal directory: load the best
+/// manifest generation, replay the committed WAL suffix, prove
+/// invariants. See the module docs for the tolerance/fail-loudly policy.
+pub fn recover(dir: &Path) -> Result<Recovered, RecoveryError> {
+    let store = ManifestStore::new(dir);
+    let loaded = match store.load() {
+        Ok(l) => l,
+        Err(ManifestLoadError::Missing) => {
+            return Err(RecoveryError::NoManifest { dir: dir.to_path_buf() })
+        }
+        Err(ManifestLoadError::Corrupt(detail)) => {
+            return Err(RecoveryError::CorruptManifest { detail })
+        }
+    };
+    let manifest = loaded.manifest;
+    manifest
+        .state
+        .prove_invariants()
+        .map_err(|detail| RecoveryError::InvariantViolation { detail })?;
+
+    // Pick the replay window: the segment containing `last_seq + 1` and
+    // everything after it. Older segments are fully covered by the
+    // snapshot; a missing *start* segment while later ones exist is a
+    // hole we must not paper over.
+    let segments = list_segments(dir)?;
+    let start = segments
+        .iter()
+        .rposition(|&(first_seq, _)| first_seq <= manifest.last_seq + 1)
+        .unwrap_or(0);
+    if let Some((first_seq, path)) = segments.get(start) {
+        if *first_seq > manifest.last_seq + 1 {
+            return Err(RecoveryError::CorruptWal {
+                path: path.clone(),
+                offset: 0,
+                detail: format!(
+                    "log starts at seq {first_seq} but snapshot covers only up to {}",
+                    manifest.last_seq
+                ),
+            });
+        }
+    }
+
+    let mut replayer = Replayer::from_state(&manifest.state);
+    let mut committed_ops = manifest.committed_ops;
+    let mut expected_seq = manifest.last_seq + 1;
+    let mut replayed = 0usize;
+    let mut torn_tail = false;
+    let mut staged: Option<(TopologyEvent, Vec<WalRecord>)> = None;
+
+    for (si, (_, path)) in segments.iter().enumerate().skip(start) {
+        let bytes = std::fs::read(path)?;
+        let (records, end) = scan_segment(&bytes);
+        for sr in records {
+            let (seq, offset, record) = (sr.seq, sr.offset, sr.record);
+            if seq < expected_seq {
+                continue; // covered by the snapshot
+            }
+            if seq > expected_seq {
+                return Err(RecoveryError::CorruptWal {
+                    path: path.clone(),
+                    offset,
+                    detail: format!("sequence gap: expected {expected_seq}, found {seq}"),
+                });
+            }
+            expected_seq += 1;
+            replayed += 1;
+            let unreplayable = |detail: String| RecoveryError::Unreplayable { seq, detail };
+            match record {
+                WalRecord::BeginEvent { event } => {
+                    if staged.is_some() {
+                        return Err(unreplayable("nested BeginEvent".into()));
+                    }
+                    let ev = event
+                        .to_event()
+                        .ok_or_else(|| unreplayable(format!("unknown event tag {}", event.tag)))?;
+                    staged = Some((ev, Vec::new()));
+                }
+                WalRecord::CommitEvent => {
+                    let Some((_, group)) = staged.take() else {
+                        return Err(unreplayable("CommitEvent outside a group".into()));
+                    };
+                    for rec in &group {
+                        replayer.apply(rec).map_err(&unreplayable)?;
+                    }
+                    committed_ops += 1;
+                }
+                rec @ (WalRecord::TopoAddNode { .. }
+                | WalRecord::TopoAddCluster { .. }
+                | WalRecord::TopoSetState { .. }
+                | WalRecord::TopoRetire { .. }
+                | WalRecord::MoveBlock { .. }) => {
+                    let Some((_, group)) = staged.as_mut() else {
+                        return Err(unreplayable(format!(
+                            "{rec:?} outside a BeginEvent group"
+                        )));
+                    };
+                    group.push(rec);
+                }
+                // Failure-set changes are standalone committed ops on
+                // their own, but also ride inside event groups (a drain
+                // clears the victim's failure mark atomically with it).
+                rec @ WalRecord::SetFailed { .. } => {
+                    if let Some((_, group)) = staged.as_mut() {
+                        group.push(rec);
+                    } else {
+                        replayer.apply(&rec).map_err(&unreplayable)?;
+                        committed_ops += 1;
+                    }
+                }
+                rec @ WalRecord::AddStripe { .. } => {
+                    if staged.is_some() {
+                        return Err(unreplayable(format!("{rec:?} inside an event group")));
+                    }
+                    replayer.apply(&rec).map_err(&unreplayable)?;
+                    committed_ops += 1;
+                }
+            }
+        }
+        match end {
+            ScanEnd::Clean => {}
+            ScanEnd::TornTail { .. } => {
+                // A torn tail in a non-final segment leaves a hole; the
+                // next segment's first record will trip the sequence-gap
+                // check above, so just note it here.
+                torn_tail = si == segments.len() - 1;
+            }
+            ScanEnd::Corrupt { offset, detail } => {
+                // Committed (fully written) record that no longer
+                // verifies: records after it exist but are unreachable —
+                // refusing loudly beats silently dropping them.
+                return Err(RecoveryError::CorruptWal { path: path.clone(), offset, detail });
+            }
+        }
+    }
+
+    // An open group at end-of-log is the crash-mid-event case: the event
+    // never committed; surface it for re-planning.
+    let pending_event = staged.map(|(ev, _)| ev);
+
+    let state = CoordinatorState::capture(
+        &manifest.state.code_name,
+        &manifest.state.strategy,
+        &replayer.topo,
+        &replayer.map,
+        &replayer.failed,
+    );
+    state
+        .prove_invariants()
+        .map_err(|detail| RecoveryError::InvariantViolation { detail })?;
+
+    Ok(Recovered {
+        state,
+        committed_ops,
+        last_seq: expected_seq - 1,
+        replayed_records: replayed,
+        pending_event,
+        torn_tail,
+        used_fallback: loaded.used_fallback,
+    })
+}

@@ -1,0 +1,609 @@
+//! Write-ahead log + journal orchestration for the durable coordinator.
+//!
+//! Every mutation of the coordinator's durable state ([`BlockMap`]
+//! moves, stripe registrations, failure-set changes, topology
+//! lifecycle transitions) is encoded as a length-prefixed, CRC32'd,
+//! sequence-stamped [`WalRecord`] and appended to a segment file
+//! **before** the in-memory state commits. Records belonging to one
+//! topology event form a *group* (`BeginEvent … CommitEvent`) written
+//! with a single buffered append — replay applies a group atomically at
+//! its commit record, so a crash anywhere inside the group recovers to
+//! the consistent pre-event state (and reports the interrupted event for
+//! re-planning).
+//!
+//! Record framing: `[len: u32 LE][crc32(payload): u32 LE][payload]`,
+//! payload = `[seq: u64 LE][kind: u8][body]`. Sequence numbers are
+//! global and contiguous across segment files; segments are named
+//! `wal-<first_seq>.log` and rotate at each snapshot, which lets
+//! truncation ([`Journal::snapshot`]) delete every segment already
+//! covered by the *previous* manifest generation while keeping enough
+//! log to replay on top of either surviving snapshot.
+//!
+//! Durability knobs: `sync_every` batches fsyncs across committed
+//! groups (group commit); `snapshot_every` bounds replay length by
+//! snapshotting the manifest every N committed operations.
+
+use crate::coordinator::manifest::{
+    crc32, put_u32, put_u64, CoordinatorState, Cursor, Manifest, ManifestStore,
+};
+use crate::placement::TopologyEvent;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Maximum record payload accepted by the reader. A bit-flipped length
+/// field beyond this is rejected immediately instead of being chased as
+/// a torn tail across megabytes.
+pub const MAX_RECORD_LEN: usize = 1 << 22;
+
+/// Prefix of WAL segment file names: `wal-<first_seq>.log`.
+pub const SEGMENT_PREFIX: &str = "wal-";
+pub const SEGMENT_SUFFIX: &str = ".log";
+
+// ---------------------------------------------------------------- records
+
+/// One durable mutation. `Topo*` and `MoveBlock` records are only valid
+/// inside a `BeginEvent … CommitEvent` group; `AddStripe` and
+/// `SetFailed` are standalone committed operations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalRecord {
+    /// A new stripe was placed: per-block cluster and node rows.
+    AddStripe { cluster_of: Vec<u32>, node_of: Vec<u32> },
+    /// Failure-set change: `down = true` marks failed, `false` heals.
+    SetFailed { node: u32, down: bool },
+    /// A topology event starts; everything up to `CommitEvent` commits
+    /// atomically.
+    BeginEvent { event: WalEvent },
+    /// `Topology::add_node(cluster)` — allocates the next node id.
+    TopoAddNode { cluster: u32 },
+    /// `Topology::add_cluster(nodes)` — allocates the next cluster id.
+    TopoAddCluster { nodes: u32 },
+    /// Node lifecycle transition ([`crate::placement::NodeState::tag`]).
+    TopoSetState { node: u32, state: u8 },
+    /// Cluster closed to placement.
+    TopoRetire { cluster: u32 },
+    /// One committed block move (post byte-verification).
+    MoveBlock { stripe: u32, block: u32, to_cluster: u32, to_node: u32 },
+    /// Group commit marker.
+    CommitEvent,
+}
+
+/// Encodable mirror of [`TopologyEvent`] for `BeginEvent` records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalEvent {
+    pub tag: u8,
+    pub arg: u32,
+}
+
+impl WalEvent {
+    pub fn from_event(ev: TopologyEvent) -> WalEvent {
+        match ev {
+            TopologyEvent::AddNode { cluster } => WalEvent { tag: 0, arg: cluster as u32 },
+            TopologyEvent::DrainNode { node } => WalEvent { tag: 1, arg: node as u32 },
+            TopologyEvent::AddCluster { nodes } => WalEvent { tag: 2, arg: nodes as u32 },
+            TopologyEvent::DecommissionCluster { cluster } => {
+                WalEvent { tag: 3, arg: cluster as u32 }
+            }
+        }
+    }
+
+    pub fn to_event(self) -> Option<TopologyEvent> {
+        let arg = self.arg as usize;
+        match self.tag {
+            0 => Some(TopologyEvent::AddNode { cluster: arg }),
+            1 => Some(TopologyEvent::DrainNode { node: arg }),
+            2 => Some(TopologyEvent::AddCluster { nodes: arg }),
+            3 => Some(TopologyEvent::DecommissionCluster { cluster: arg }),
+            _ => None,
+        }
+    }
+}
+
+impl WalRecord {
+    fn kind(&self) -> u8 {
+        match self {
+            WalRecord::AddStripe { .. } => 1,
+            WalRecord::SetFailed { .. } => 2,
+            WalRecord::BeginEvent { .. } => 3,
+            WalRecord::TopoAddNode { .. } => 4,
+            WalRecord::TopoAddCluster { .. } => 5,
+            WalRecord::TopoSetState { .. } => 6,
+            WalRecord::TopoRetire { .. } => 7,
+            WalRecord::MoveBlock { .. } => 8,
+            WalRecord::CommitEvent => 9,
+        }
+    }
+
+    fn encode_body(&self, buf: &mut Vec<u8>) {
+        match self {
+            WalRecord::AddStripe { cluster_of, node_of } => {
+                put_u32(buf, cluster_of.len() as u32);
+                for &c in cluster_of {
+                    put_u32(buf, c);
+                }
+                for &n in node_of {
+                    put_u32(buf, n);
+                }
+            }
+            WalRecord::SetFailed { node, down } => {
+                put_u32(buf, *node);
+                buf.push(*down as u8);
+            }
+            WalRecord::BeginEvent { event } => {
+                buf.push(event.tag);
+                put_u32(buf, event.arg);
+            }
+            WalRecord::TopoAddNode { cluster } => put_u32(buf, *cluster),
+            WalRecord::TopoAddCluster { nodes } => put_u32(buf, *nodes),
+            WalRecord::TopoSetState { node, state } => {
+                put_u32(buf, *node);
+                buf.push(*state);
+            }
+            WalRecord::TopoRetire { cluster } => put_u32(buf, *cluster),
+            WalRecord::MoveBlock { stripe, block, to_cluster, to_node } => {
+                put_u32(buf, *stripe);
+                put_u32(buf, *block);
+                put_u32(buf, *to_cluster);
+                put_u32(buf, *to_node);
+            }
+            WalRecord::CommitEvent => {}
+        }
+    }
+
+    fn decode_body(kind: u8, cur: &mut Cursor<'_>) -> Result<WalRecord, String> {
+        let rec = match kind {
+            1 => {
+                let width = cur.u32()? as usize;
+                if width == 0 || width > 1 << 12 {
+                    return Err(format!("AddStripe width {width} out of range"));
+                }
+                let mut cluster_of = Vec::with_capacity(width);
+                for _ in 0..width {
+                    cluster_of.push(cur.u32()?);
+                }
+                let mut node_of = Vec::with_capacity(width);
+                for _ in 0..width {
+                    node_of.push(cur.u32()?);
+                }
+                WalRecord::AddStripe { cluster_of, node_of }
+            }
+            2 => WalRecord::SetFailed { node: cur.u32()?, down: cur.u8()? != 0 },
+            3 => WalRecord::BeginEvent { event: WalEvent { tag: cur.u8()?, arg: cur.u32()? } },
+            4 => WalRecord::TopoAddNode { cluster: cur.u32()? },
+            5 => WalRecord::TopoAddCluster { nodes: cur.u32()? },
+            6 => WalRecord::TopoSetState { node: cur.u32()?, state: cur.u8()? },
+            7 => WalRecord::TopoRetire { cluster: cur.u32()? },
+            8 => WalRecord::MoveBlock {
+                stripe: cur.u32()?,
+                block: cur.u32()?,
+                to_cluster: cur.u32()?,
+                to_node: cur.u32()?,
+            },
+            9 => WalRecord::CommitEvent,
+            k => return Err(format!("unknown record kind {k}")),
+        };
+        cur.done()?;
+        Ok(rec)
+    }
+
+    /// Frame one record: `[len][crc][seq · kind · body]`.
+    pub fn encode(&self, seq: u64) -> Vec<u8> {
+        let mut payload = Vec::with_capacity(32);
+        put_u64(&mut payload, seq);
+        payload.push(self.kind());
+        self.encode_body(&mut payload);
+        let mut out = Vec::with_capacity(payload.len() + 8);
+        put_u32(&mut out, payload.len() as u32);
+        put_u32(&mut out, crc32(&payload));
+        out.extend_from_slice(&payload);
+        out
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+/// A decoded record with its sequence number and byte offset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SequencedRecord {
+    pub seq: u64,
+    /// Byte offset of the record's frame within its segment.
+    pub offset: usize,
+    pub record: WalRecord,
+}
+
+/// Why a segment scan stopped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScanEnd {
+    /// Clean end: the file ends exactly on a record boundary.
+    Clean,
+    /// The file ends inside a record (crash mid-append). The incomplete
+    /// tail is discarded; everything before it is intact.
+    TornTail { offset: usize },
+    /// A *complete* record failed its checksum or decoded inconsistently
+    /// — corruption, not a crash artifact.
+    Corrupt { offset: usize, detail: String },
+}
+
+/// Scan one segment file: returns every intact record in order plus how
+/// the scan ended. Never panics on arbitrary bytes.
+pub fn scan_segment(bytes: &[u8]) -> (Vec<SequencedRecord>, ScanEnd) {
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        if pos + 8 > bytes.len() {
+            return (records, ScanEnd::TornTail { offset: pos });
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        if len < 9 || len > MAX_RECORD_LEN {
+            return (
+                records,
+                ScanEnd::Corrupt { offset: pos, detail: format!("record length {len} invalid") },
+            );
+        }
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if pos + 8 + len > bytes.len() {
+            return (records, ScanEnd::TornTail { offset: pos });
+        }
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc {
+            return (
+                records,
+                ScanEnd::Corrupt { offset: pos, detail: "record CRC mismatch".into() },
+            );
+        }
+        let mut cur = Cursor::new(payload);
+        let seq = cur.u64().expect("length checked above");
+        let kind = cur.u8().expect("length checked above");
+        match WalRecord::decode_body(kind, &mut cur) {
+            Ok(record) => records.push(SequencedRecord { seq, offset: pos, record }),
+            Err(detail) => return (records, ScanEnd::Corrupt { offset: pos, detail }),
+        }
+        pos += 8 + len;
+    }
+    (records, ScanEnd::Clean)
+}
+
+/// List segment files in a journal directory, sorted by first sequence
+/// number: `(first_seq, path)`.
+pub fn list_segments(dir: &Path) -> std::io::Result<Vec<(u64, PathBuf)>> {
+    let mut segs = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(mid) =
+            name.strip_prefix(SEGMENT_PREFIX).and_then(|s| s.strip_suffix(SEGMENT_SUFFIX))
+        {
+            if let Ok(first_seq) = mid.parse::<u64>() {
+                segs.push((first_seq, entry.path()));
+            }
+        }
+    }
+    segs.sort_unstable_by_key(|&(s, _)| s);
+    Ok(segs)
+}
+
+fn segment_path(dir: &Path, first_seq: u64) -> PathBuf {
+    dir.join(format!("{SEGMENT_PREFIX}{first_seq:012}{SEGMENT_SUFFIX}"))
+}
+
+// ---------------------------------------------------------------- writer
+
+/// Append side of one segment with group commit: each
+/// [`WalWriter::append_group`] is a single buffered `write`, fsynced
+/// once every `sync_every` groups (and always on rotation/snapshot).
+#[derive(Debug)]
+pub struct WalWriter {
+    file: File,
+    next_seq: u64,
+    sync_every: usize,
+    unsynced_groups: usize,
+    bytes_written: u64,
+    records_written: u64,
+}
+
+impl WalWriter {
+    fn open(dir: &Path, first_seq: u64, sync_every: usize) -> std::io::Result<WalWriter> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(segment_path(dir, first_seq))?;
+        Ok(WalWriter {
+            file,
+            next_seq: first_seq,
+            sync_every: sync_every.max(1),
+            unsynced_groups: 0,
+            bytes_written: 0,
+            records_written: 0,
+        })
+    }
+
+    /// Append `records` as one atomic group (single buffered write),
+    /// stamping contiguous sequence numbers. Returns the last sequence
+    /// number written.
+    pub fn append_group(&mut self, records: &[WalRecord]) -> std::io::Result<u64> {
+        assert!(!records.is_empty(), "empty WAL group");
+        let mut buf = Vec::with_capacity(records.len() * 32);
+        for rec in records {
+            buf.extend_from_slice(&rec.encode(self.next_seq));
+            self.next_seq += 1;
+        }
+        self.file.write_all(&buf)?;
+        self.bytes_written += buf.len() as u64;
+        self.records_written += records.len() as u64;
+        self.unsynced_groups += 1;
+        if self.unsynced_groups >= self.sync_every {
+            self.file.sync_data()?;
+            self.unsynced_groups = 0;
+        }
+        Ok(self.next_seq - 1)
+    }
+
+    /// Force outstanding appends to disk (pre-snapshot barrier).
+    pub fn sync(&mut self) -> std::io::Result<()> {
+        if self.unsynced_groups > 0 {
+            self.file.sync_data()?;
+            self.unsynced_groups = 0;
+        }
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- journal
+
+/// Durability knobs (`[durability]` config section / `--wal-sync-every`).
+#[derive(Debug, Clone, Copy)]
+pub struct DurabilityOptions {
+    /// fsync once per this many committed groups (1 = every commit).
+    pub sync_every: usize,
+    /// Snapshot the manifest (and truncate the log) every this many
+    /// committed operations. `usize::MAX` disables periodic snapshots.
+    pub snapshot_every: usize,
+}
+
+impl Default for DurabilityOptions {
+    fn default() -> Self {
+        DurabilityOptions { sync_every: 8, snapshot_every: 64 }
+    }
+}
+
+/// The coordinator's journal: manifest store + active WAL segment +
+/// group/snapshot bookkeeping. Owned by [`crate::coordinator::Dss`] when
+/// durability is enabled; every mutation is logged through here before
+/// the in-memory state commits.
+#[derive(Debug)]
+pub struct Journal {
+    dir: PathBuf,
+    store: ManifestStore,
+    writer: WalWriter,
+    opts: DurabilityOptions,
+    /// Sequence number of the last record appended (0 = none yet).
+    last_seq: u64,
+    /// Committed logical operations since journal creation.
+    committed_ops: u64,
+    /// Operations since the last snapshot.
+    ops_since_snapshot: usize,
+    /// `last_seq` of the previous manifest generation (truncation bound).
+    prev_manifest_seq: u64,
+    /// Snapshots written (including the initial one).
+    snapshots: usize,
+    /// Total WAL bytes/records appended across segments (report metric).
+    total_bytes: u64,
+    total_records: u64,
+}
+
+impl Journal {
+    /// Initialize a fresh journal: write the initial manifest for
+    /// `state` and open the first segment. The directory is created;
+    /// pre-existing journal files in it are an error (refuse to clobber
+    /// a previous incarnation's history silently).
+    pub fn create(
+        dir: &Path,
+        state: &CoordinatorState,
+        opts: DurabilityOptions,
+    ) -> anyhow::Result<Journal> {
+        fs::create_dir_all(dir)?;
+        let store = ManifestStore::new(dir);
+        anyhow::ensure!(
+            !store.current_path().exists() && list_segments(dir)?.is_empty(),
+            "journal directory {} already holds a journal — recover or clear it first",
+            dir.display()
+        );
+        store.write(&Manifest { state: state.clone(), last_seq: 0, committed_ops: 0 })?;
+        let writer = WalWriter::open(dir, 1, opts.sync_every)?;
+        Ok(Journal {
+            dir: dir.to_path_buf(),
+            store,
+            writer,
+            opts,
+            last_seq: 0,
+            committed_ops: 0,
+            ops_since_snapshot: 0,
+            prev_manifest_seq: 0,
+            snapshots: 1,
+            total_bytes: 0,
+            total_records: 0,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn committed_ops(&self) -> u64 {
+        self.committed_ops
+    }
+
+    pub fn last_seq(&self) -> u64 {
+        self.last_seq
+    }
+
+    pub fn snapshots(&self) -> usize {
+        self.snapshots
+    }
+
+    pub fn wal_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    pub fn wal_records(&self) -> u64 {
+        self.total_records
+    }
+
+    /// Commit one logical operation: append its records as one group.
+    pub fn commit_op(&mut self, records: &[WalRecord]) -> std::io::Result<()> {
+        let b0 = self.writer.bytes_written;
+        let r0 = self.writer.records_written;
+        self.last_seq = self.writer.append_group(records)?;
+        self.total_bytes += self.writer.bytes_written - b0;
+        self.total_records += self.writer.records_written - r0;
+        self.committed_ops += 1;
+        self.ops_since_snapshot += 1;
+        Ok(())
+    }
+
+    /// True when the snapshot cadence is due.
+    pub fn snapshot_due(&self) -> bool {
+        self.opts.snapshot_every != usize::MAX
+            && self.ops_since_snapshot >= self.opts.snapshot_every
+    }
+
+    /// Snapshot `state` as the new current manifest, rotate to a fresh
+    /// segment, and truncate: delete every segment fully covered by the
+    /// *previous* manifest generation (so either surviving snapshot can
+    /// still replay to the tip).
+    pub fn snapshot(&mut self, state: &CoordinatorState) -> anyhow::Result<()> {
+        self.writer.sync()?;
+        self.store.write(&Manifest {
+            state: state.clone(),
+            last_seq: self.last_seq,
+            committed_ops: self.committed_ops,
+        })?;
+        // Rotate: next record starts a fresh segment aligned with this
+        // snapshot's high-water mark.
+        self.writer = WalWriter::open(&self.dir, self.last_seq + 1, self.opts.sync_every)?;
+        // Truncate: segments whose first record the previous generation
+        // already covers are unreachable from both snapshots.
+        for (first_seq, path) in list_segments(&self.dir)? {
+            if first_seq <= self.prev_manifest_seq {
+                fs::remove_file(path)?;
+            }
+        }
+        self.prev_manifest_seq = self.last_seq;
+        self.ops_since_snapshot = 0;
+        self.snapshots += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::AddStripe { cluster_of: vec![0, 0, 1], node_of: vec![0, 1, 2] },
+            WalRecord::SetFailed { node: 7, down: true },
+            WalRecord::BeginEvent {
+                event: WalEvent::from_event(TopologyEvent::DrainNode { node: 7 }),
+            },
+            WalRecord::TopoAddNode { cluster: 1 },
+            WalRecord::TopoAddCluster { nodes: 4 },
+            WalRecord::TopoSetState { node: 7, state: 3 },
+            WalRecord::TopoRetire { cluster: 0 },
+            WalRecord::MoveBlock { stripe: 2, block: 5, to_cluster: 1, to_node: 9 },
+            WalRecord::CommitEvent,
+        ]
+    }
+
+    #[test]
+    fn records_round_trip() {
+        for (i, rec) in sample_records().into_iter().enumerate() {
+            let framed = rec.encode(i as u64 + 1);
+            let (decoded, end) = scan_segment(&framed);
+            assert_eq!(end, ScanEnd::Clean);
+            assert_eq!(decoded.len(), 1);
+            assert_eq!(decoded[0].seq, i as u64 + 1);
+            assert_eq!(decoded[0].record, rec);
+        }
+    }
+
+    #[test]
+    fn wal_event_round_trips() {
+        for ev in [
+            TopologyEvent::AddNode { cluster: 3 },
+            TopologyEvent::DrainNode { node: 11 },
+            TopologyEvent::AddCluster { nodes: 5 },
+            TopologyEvent::DecommissionCluster { cluster: 2 },
+        ] {
+            assert_eq!(WalEvent::from_event(ev).to_event(), Some(ev));
+        }
+        assert_eq!(WalEvent { tag: 9, arg: 0 }.to_event(), None);
+    }
+
+    #[test]
+    fn scan_stops_clean_on_torn_tail() {
+        let mut bytes = Vec::new();
+        for (i, rec) in sample_records().into_iter().enumerate() {
+            bytes.extend_from_slice(&rec.encode(i as u64 + 1));
+        }
+        let (full, end) = scan_segment(&bytes);
+        assert_eq!(end, ScanEnd::Clean);
+        assert_eq!(full.len(), 9);
+        // every strict prefix is either clean at a boundary or torn
+        for cut in 0..bytes.len() {
+            let (recs, end) = scan_segment(&bytes[..cut]);
+            match end {
+                ScanEnd::Clean => assert_eq!(bytes[..cut].len(), recs_len(&bytes, recs.len())),
+                ScanEnd::TornTail { offset } => {
+                    assert_eq!(offset, recs_len(&bytes, recs.len()))
+                }
+                ScanEnd::Corrupt { .. } => panic!("truncation reported as corruption at {cut}"),
+            }
+        }
+    }
+
+    /// Byte length of the first `n` records of an encoded stream.
+    fn recs_len(bytes: &[u8], n: usize) -> usize {
+        let mut pos = 0;
+        for _ in 0..n {
+            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            pos += 8 + len;
+        }
+        pos
+    }
+
+    #[test]
+    fn flipped_payload_byte_is_corrupt_not_torn() {
+        let rec = WalRecord::MoveBlock { stripe: 1, block: 2, to_cluster: 3, to_node: 4 };
+        let mut bytes = rec.encode(1);
+        let at = 12; // inside the payload
+        bytes[at] ^= 0x01;
+        let (recs, end) = scan_segment(&bytes);
+        assert!(recs.is_empty());
+        assert!(matches!(end, ScanEnd::Corrupt { .. }), "got {end:?}");
+    }
+
+    #[test]
+    fn writer_groups_are_contiguous_and_replayable() {
+        let dir = std::env::temp_dir().join(format!("unilrc-wal-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let mut w = WalWriter::open(&dir, 1, 2).unwrap();
+        let last = w.append_group(&sample_records()).unwrap();
+        assert_eq!(last, 9);
+        let last = w
+            .append_group(&[WalRecord::SetFailed { node: 1, down: false }])
+            .unwrap();
+        assert_eq!(last, 10);
+        w.sync().unwrap();
+        let segs = list_segments(&dir).unwrap();
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].0, 1);
+        let (recs, end) = scan_segment(&fs::read(&segs[0].1).unwrap());
+        assert_eq!(end, ScanEnd::Clean);
+        assert_eq!(recs.len(), 10);
+        assert!(recs.windows(2).all(|pair| pair[1].seq == pair[0].seq + 1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -12,7 +12,11 @@ use crate::analysis::markov;
 use crate::client::workload::{Workload, WorkloadSpec};
 use crate::client::{cdf_points, mean};
 use crate::codes::spec::{CodeFamily, Scheme};
-use crate::coordinator::{Dss, DssConfig, MigrationReport, StripeId};
+use crate::coordinator::manifest::{MANIFEST_CURRENT, MANIFEST_PREV};
+use crate::coordinator::wal::{list_segments, scan_segment, ScanEnd};
+use crate::coordinator::{
+    recover, Dss, DssConfig, DurabilityOptions, ManifestStore, MigrationReport, StripeId,
+};
 use crate::placement::{EcWide, PlacementStrategy, Topology, TopologyEvent, UniLrcPlace};
 use crate::prng::Prng;
 use crate::runtime::{CodingEngine, NativeCoder, PjrtCoder};
@@ -908,6 +912,10 @@ pub struct Exp8Result {
     /// node-failure clock fires somewhere during the total migration
     /// window ([`markov::migration_exposure`]).
     pub exposure_prob: f64,
+    /// Per-event timing rows `(event, wall_ms, virtual_seconds, moves)` —
+    /// the wall/virtual split per topology event, the comparable baseline
+    /// for exp9's recovery-replay timings. Not part of the digest.
+    pub event_timings: Vec<(TopologyEvent, f64, f64, usize)>,
 }
 
 /// Most-loaded active, non-failed node (ties break to the lowest id) —
@@ -991,6 +999,9 @@ fn exp8_family(fam: CodeFamily, cfg: &ExpConfig, ecfg: &ElasticConfig) -> Result
         reports.push(run_event(&mut dss, TopologyEvent::DrainNode { node })?);
     }
 
+    let event_timings: Vec<(TopologyEvent, f64, f64, usize)> =
+        reports.iter().map(|r| (r.event, r.wall_ms, r.seconds, r.moves)).collect();
+
     let (mut moves, mut repaired, mut bytes) = (0usize, 0usize, 0usize);
     let (mut cross, mut seconds) = (0u64, 0.0f64);
     for r in &reports {
@@ -1056,6 +1067,417 @@ fn exp8_family(fam: CodeFamily, cfg: &ExpConfig, ecfg: &ElasticConfig) -> Result
         final_clusters: dss.topo.clusters(),
         final_live_nodes: dss.topo.live_nodes().len(),
         exposure_prob,
+        event_timings,
+    })
+}
+
+// --------------------------------------------------------------------------
+// Experiment 9 — durable coordinator: crash-restart recovery sweep
+// --------------------------------------------------------------------------
+
+/// Experiment 9 scenario knobs (CLI `--wal-sync-every` etc., config
+/// `[durability]`).
+#[derive(Debug, Clone)]
+pub struct DurabilitySimConfig {
+    /// fsync once per this many committed WAL groups (group commit;
+    /// `--wal-sync-every` / `UNILRC_WAL_SYNC_EVERY`).
+    pub wal_sync_every: usize,
+    /// Snapshot cadence in committed ops for the snapshot-cadence
+    /// verification run. The crash sweep itself pins snapshots off so a
+    /// single WAL segment holds every crash position.
+    pub snapshot_every: usize,
+    /// AddNode events in the scale-out window.
+    pub add_nodes: usize,
+    /// DrainNode events.
+    pub drain_nodes: usize,
+    /// AddCluster events.
+    pub add_clusters: usize,
+    /// Extra fail → batched-recover → heal pairs appended after the scale
+    /// window (the fault-replay tail).
+    pub fault_ops: usize,
+    /// Cap on crash positions tested per family (0 = every position).
+    /// When sampling, the stride is forced odd so both record boundaries
+    /// and mid-record (torn-tail) positions are exercised, and the tested
+    /// count is reported next to the total — no silent caps.
+    pub crash_cap: usize,
+}
+
+impl Default for DurabilitySimConfig {
+    fn default() -> Self {
+        DurabilitySimConfig {
+            wal_sync_every: 8,
+            snapshot_every: 4,
+            add_nodes: 2,
+            drain_nodes: 1,
+            add_clusters: 1,
+            fault_ops: 1,
+            crash_cap: 64,
+        }
+    }
+}
+
+/// One deterministic driver operation of the exp9 scenario. Each op
+/// commits exactly **one** WAL unit (a standalone record or one event
+/// group), which is what lets a recovered run resume the op list from
+/// [`crate::coordinator::Recovered::committed_ops`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DurOp {
+    /// Ingest one stripe; data regenerated from `seed ^ op-index`, so a
+    /// re-executed ingest produces byte-identical blocks.
+    Ingest,
+    /// AddNode, round-robin over open clusters.
+    AddNode,
+    /// Fail the lowest-id live, loaded, not-yet-failed node.
+    Fail,
+    /// Drain the most-loaded live node.
+    Drain,
+    /// Batched-recover then heal the lowest failed node.
+    Heal,
+    /// AddCluster sized to the largest existing cluster.
+    AddCluster,
+}
+
+/// The scenario's op list: ingest, scale out, a failure, drains under an
+/// outstanding failure, heal, whole-cluster scale-out, then the
+/// fault-replay tail.
+fn exp9_ops(cfg: &ExpConfig, dcfg: &DurabilitySimConfig) -> Vec<DurOp> {
+    let mut ops = Vec::new();
+    for _ in 0..cfg.stripes {
+        ops.push(DurOp::Ingest);
+    }
+    for _ in 0..dcfg.add_nodes {
+        ops.push(DurOp::AddNode);
+    }
+    ops.push(DurOp::Fail);
+    for _ in 0..dcfg.drain_nodes {
+        ops.push(DurOp::Drain);
+    }
+    ops.push(DurOp::Heal);
+    for _ in 0..dcfg.add_clusters {
+        ops.push(DurOp::AddCluster);
+    }
+    for _ in 0..dcfg.fault_ops {
+        ops.push(DurOp::Fail);
+        ops.push(DurOp::Heal);
+    }
+    ops
+}
+
+/// Execute one driver op. Every parameter is a pure function of the
+/// current coordinator state plus the op index — a recovered run
+/// re-executing the tail of the op list therefore reproduces the oracle
+/// exactly (the property the digest comparison proves).
+fn exp9_apply_op(dss: &mut Dss, op: DurOp, op_index: usize, cfg: &ExpConfig) -> Result<()> {
+    match op {
+        DurOp::Ingest => {
+            let mut p = Prng::new(cfg.seed ^ (0xD9D9_0000 + op_index as u64));
+            let data: Vec<Vec<u8>> =
+                (0..dss.code.k()).map(|_| p.bytes(cfg.block_size)).collect();
+            dss.ingest_stripe(data)?;
+        }
+        DurOp::AddNode => {
+            let clusters = dss.topo.clusters();
+            let cluster = (0..clusters)
+                .map(|i| (op_index + i) % clusters)
+                .find(|&c| !dss.topo.is_retired(c))
+                .ok_or_else(|| anyhow::anyhow!("no open cluster to grow"))?;
+            dss.apply_topology_event(TopologyEvent::AddNode { cluster })?;
+        }
+        DurOp::Fail => {
+            let victim = (0..dss.topo.total_nodes())
+                .find(|&n| {
+                    dss.topo.is_live(n)
+                        && !dss.failed_nodes().contains(&n)
+                        && !dss.metadata().blocks_on_node(n).is_empty()
+                })
+                .ok_or_else(|| anyhow::anyhow!("no live loaded node to fail"))?;
+            dss.fail_node(victim);
+        }
+        DurOp::Drain => {
+            let node = most_loaded_live_node(dss)
+                .ok_or_else(|| anyhow::anyhow!("no live node left to drain"))?;
+            dss.apply_topology_event(TopologyEvent::DrainNode { node })?;
+        }
+        DurOp::Heal => {
+            let victim = dss
+                .failed_nodes()
+                .iter()
+                .copied()
+                .min()
+                .ok_or_else(|| anyhow::anyhow!("heal op with empty failure set"))?;
+            // Repairs rebuild bytes but never move blocks in the map, so
+            // the only durable mutation here is the heal itself.
+            dss.recover_nodes(&[victim])?;
+            dss.heal_node(victim);
+        }
+        DurOp::AddCluster => {
+            let nodes = dss.topo.max_cluster_size();
+            dss.apply_topology_event(TopologyEvent::AddCluster { nodes })?;
+        }
+    }
+    Ok(())
+}
+
+/// Per-family summary of one crash-restart recovery sweep.
+#[derive(Debug, Clone)]
+pub struct Exp9Result {
+    pub family: CodeFamily,
+    /// Final-state digest of the never-crashed oracle run; every crash
+    /// point's recovered + re-executed state must digest identically.
+    pub oracle_digest: u64,
+    /// Driver operations in the scenario (each = one committed WAL unit).
+    pub ops: usize,
+    pub wal_records: u64,
+    pub wal_bytes: u64,
+    /// Distinct crash positions (every record boundary plus a mid-record
+    /// point inside every record) in the oracle WAL…
+    pub crash_points_total: usize,
+    /// …and how many were actually tested (`crash_cap` sampling).
+    pub crash_points_tested: usize,
+    /// Crash points whose recovered state digested equal to the oracle
+    /// (must equal `crash_points_tested`).
+    pub digest_matches: usize,
+    /// Crash points that recovered with a mid-flight topology event
+    /// surfaced for re-planning.
+    pub pending_replans: usize,
+    /// Crash points whose final segment ended in a torn record.
+    pub torn_tails: usize,
+    /// (stripe, cluster) decode-plan gates passed across all crash points.
+    pub decode_checks: usize,
+    /// Rotating byte-exact reconstructions performed (one per crash point).
+    pub reconstructed_blocks: usize,
+    /// Mean wall-clock cost of `recover()` per crash point…
+    pub mean_recover_ms: f64,
+    /// …and of re-executing the op tail on the restored coordinator
+    /// (compare against exp8's per-event `wall_ms` rows).
+    pub mean_reexec_ms: f64,
+    /// Snapshot-cadence verification run: manifests written, and whether
+    /// its recovery digested equal to the oracle.
+    pub snapshot_run_snapshots: usize,
+    pub snapshot_digest_match: bool,
+}
+
+/// Experiment 9 — durable coordinator: run a deterministic scale-out +
+/// drain + fault-replay scenario with the WAL enabled, then kill the
+/// coordinator at every distinct WAL position (each record boundary and a
+/// point inside every record), recover from the surviving manifest + log,
+/// re-execute the uncommitted op tail, and prove the recovered block map
+/// byte-identical to the never-crashed oracle (FNV digest, exp7/exp8
+/// discipline). Every recovered map also passes the erasure-matrix gate:
+/// all stripes survive any single-cluster loss, and a rotating block is
+/// byte-exactly reconstructed. A second run with periodic snapshots +
+/// log truncation proves recovery across manifest rotation and GC.
+pub fn exp9_durability(cfg: &ExpConfig, dcfg: &DurabilitySimConfig) -> Result<Vec<Exp9Result>> {
+    let mut out = Vec::new();
+    for fam in CodeFamily::paper_baselines() {
+        out.push(exp9_family(fam, cfg, dcfg)?);
+    }
+    Ok(out)
+}
+
+fn exp9_scratch_dir(fam: CodeFamily, seed: u64, tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("unilrc-exp9-{}-{fam:?}-{seed}-{tag}", std::process::id()))
+}
+
+fn exp9_family(fam: CodeFamily, cfg: &ExpConfig, dcfg: &DurabilitySimConfig) -> Result<Exp9Result> {
+    let mut det = cfg.clone();
+    det.time_compute = false;
+    let ops = exp9_ops(&det, dcfg);
+
+    // ----------------- oracle: never crashes, periodic snapshots pinned
+    // off so a single WAL segment holds every crash position
+    let oracle_dir = exp9_scratch_dir(fam, det.seed, "oracle");
+    let _ = std::fs::remove_dir_all(&oracle_dir);
+    let mut dss = build_dss(fam, &det);
+    dss.enable_durability(
+        &oracle_dir,
+        DurabilityOptions { sync_every: dcfg.wal_sync_every, snapshot_every: usize::MAX },
+    )?;
+    for (i, &op) in ops.iter().enumerate() {
+        exp9_apply_op(&mut dss, op, i, &det)?;
+    }
+    let oracle_digest = dss.capture_state().digest();
+    let blocks = dss.export_blocks();
+    let journal = dss.journal().expect("durability enabled above");
+    let (wal_records, wal_bytes) = (journal.wal_records(), journal.wal_bytes());
+    anyhow::ensure!(
+        journal.committed_ops() == ops.len() as u64,
+        "{fam:?}: every driver op must commit exactly one WAL unit ({} != {})",
+        journal.committed_ops(),
+        ops.len()
+    );
+    drop(dss);
+
+    // ------------------------------------------ enumerate crash positions
+    let segments = list_segments(&oracle_dir)?;
+    anyhow::ensure!(segments.len() == 1, "oracle journal must hold exactly one segment");
+    let wal_path = segments[0].1.clone();
+    let wal_img = std::fs::read(&wal_path)?;
+    let (records, end) = scan_segment(&wal_img);
+    anyhow::ensure!(end == ScanEnd::Clean, "oracle WAL must scan clean, got {end:?}");
+    anyhow::ensure!(records.len() as u64 == wal_records, "oracle WAL record count mismatch");
+    // Even indices are record boundaries, odd indices mid-record points.
+    let mut positions: Vec<usize> = Vec::with_capacity(records.len() * 2 + 1);
+    for (i, r) in records.iter().enumerate() {
+        let next = records.get(i + 1).map_or(wal_img.len(), |n| n.offset);
+        positions.push(r.offset);
+        positions.push(r.offset + (next - r.offset) / 2);
+    }
+    positions.push(wal_img.len());
+    let total = positions.len();
+    let tested_idx: Vec<usize> = if dcfg.crash_cap > 0 && total > dcfg.crash_cap {
+        let mut step = total.div_ceil(dcfg.crash_cap);
+        if step % 2 == 0 {
+            step += 1; // odd stride: sample boundaries *and* torn tails
+        }
+        let mut idx: Vec<usize> = (0..total).step_by(step).collect();
+        if idx.last() != Some(&(total - 1)) {
+            idx.push(total - 1);
+        }
+        idx
+    } else {
+        (0..total).collect()
+    };
+
+    // ----------------------------------------------------- the crash sweep
+    let store = ManifestStore::new(&oracle_dir);
+    let crash_dir = exp9_scratch_dir(fam, det.seed, "crash");
+    let (mut digest_matches, mut pending_replans, mut torn_tails) = (0usize, 0usize, 0usize);
+    let (mut decode_checks, mut reconstructed) = (0usize, 0usize);
+    let (mut recover_ms, mut reexec_ms) = (Vec::new(), Vec::new());
+
+    for (pi, &idx) in tested_idx.iter().enumerate() {
+        let cut = positions[idx];
+        let _ = std::fs::remove_dir_all(&crash_dir);
+        std::fs::create_dir_all(&crash_dir)?;
+        std::fs::copy(store.current_path(), crash_dir.join(MANIFEST_CURRENT))?;
+        if store.prev_path().exists() {
+            std::fs::copy(store.prev_path(), crash_dir.join(MANIFEST_PREV))?;
+        }
+        std::fs::write(
+            crash_dir.join(wal_path.file_name().expect("segment file name")),
+            &wal_img[..cut],
+        )?;
+
+        let t_rec = std::time::Instant::now();
+        let rec = recover(&crash_dir).map_err(|e| {
+            anyhow::anyhow!("{fam:?}: recovery at crash position {cut} failed: {e}")
+        })?;
+        recover_ms.push(t_rec.elapsed().as_secs_f64() * 1e3);
+        torn_tails += rec.torn_tail as usize;
+        pending_replans += rec.pending_event.is_some() as usize;
+
+        let code = det.scheme.build(fam);
+        let (strategy, _) = strategy_and_topo(fam, &code);
+        let mut rdss = Dss::restore(
+            code,
+            strategy,
+            &rec.state,
+            blocks.clone(),
+            NetConfig::default().with_cross_gbps(det.cross_gbps),
+            det.engine.clone(),
+            DssConfig {
+                block_size: det.block_size,
+                aggregated: det.aggregated,
+                time_compute: false,
+            },
+        )?;
+
+        let resume = rec.committed_ops as usize;
+        anyhow::ensure!(
+            resume <= ops.len(),
+            "{fam:?}: recovered {resume} committed ops, scenario has only {}",
+            ops.len()
+        );
+        let t_re = std::time::Instant::now();
+        for (i, &op) in ops.iter().enumerate().skip(resume) {
+            exp9_apply_op(&mut rdss, op, i, &det)?;
+        }
+        reexec_ms.push(t_re.elapsed().as_secs_f64() * 1e3);
+
+        let got = rdss.capture_state().digest();
+        anyhow::ensure!(
+            got == oracle_digest,
+            "{fam:?}: crash at WAL byte {cut} diverged: {got:#x} != oracle {oracle_digest:#x}"
+        );
+        digest_matches += 1;
+
+        // erasure-matrix gate: every stripe survives any one-cluster loss…
+        for s in 0..rdss.metadata().stripe_count() {
+            for c in 0..rdss.topo.clusters() {
+                let in_cluster = rdss.metadata().blocks_in_cluster(s, c);
+                if in_cluster.is_empty() {
+                    continue;
+                }
+                anyhow::ensure!(
+                    rdss.code.decode_plan_cached(in_cluster).is_some(),
+                    "{fam:?}: stripe {s} undecodable after losing cluster {c} (crash at {cut})"
+                );
+                decode_checks += 1;
+            }
+        }
+        // …and one rotating byte-exact reconstruction proves real decode
+        let stripes = rdss.metadata().stripe_count();
+        if stripes > 0 {
+            let s = pi % stripes;
+            let b = pi % rdss.code.n();
+            let node = rdss.metadata().node_of(s, b);
+            rdss.fail_node(node);
+            rdss.reconstruct(s, b)?;
+            rdss.heal_node(node);
+            reconstructed += 1;
+        }
+    }
+    let _ = std::fs::remove_dir_all(&crash_dir);
+
+    // -------------- snapshot-cadence verification run (rotation + GC on)
+    let snap_dir = exp9_scratch_dir(fam, det.seed, "snap");
+    let _ = std::fs::remove_dir_all(&snap_dir);
+    let mut sdss = build_dss(fam, &det);
+    sdss.enable_durability(
+        &snap_dir,
+        DurabilityOptions {
+            sync_every: dcfg.wal_sync_every,
+            snapshot_every: dcfg.snapshot_every.max(1),
+        },
+    )?;
+    for (i, &op) in ops.iter().enumerate() {
+        exp9_apply_op(&mut sdss, op, i, &det)?;
+    }
+    let snapshot_run_snapshots = sdss.journal().expect("durability enabled above").snapshots();
+    anyhow::ensure!(
+        sdss.capture_state().digest() == oracle_digest,
+        "{fam:?}: snapshot-cadence run diverged from the oracle"
+    );
+    drop(sdss);
+    let rec = recover(&snap_dir)
+        .map_err(|e| anyhow::anyhow!("{fam:?}: snapshot-run recovery failed: {e}"))?;
+    anyhow::ensure!(
+        rec.committed_ops == ops.len() as u64,
+        "{fam:?}: snapshot-run recovery lost committed ops"
+    );
+    let snapshot_digest_match = rec.state.digest() == oracle_digest;
+    anyhow::ensure!(snapshot_digest_match, "{fam:?}: snapshot-run recovery diverged");
+    let _ = std::fs::remove_dir_all(&snap_dir);
+    let _ = std::fs::remove_dir_all(&oracle_dir);
+
+    Ok(Exp9Result {
+        family: fam,
+        oracle_digest,
+        ops: ops.len(),
+        wal_records,
+        wal_bytes,
+        crash_points_total: total,
+        crash_points_tested: tested_idx.len(),
+        digest_matches,
+        pending_replans,
+        torn_tails,
+        decode_checks,
+        reconstructed_blocks: reconstructed,
+        mean_recover_ms: mean_or_zero(&recover_ms),
+        mean_reexec_ms: mean_or_zero(&reexec_ms),
+        snapshot_run_snapshots,
+        snapshot_digest_match,
     })
 }
 
@@ -1202,6 +1624,47 @@ mod tests {
             assert!(r.post_scale_fault_events > 0, "{:?}", r.family);
             assert!((0.0..1.0).contains(&r.exposure_prob), "{:?}", r.family);
             assert!(r.final_clusters >= 7, "{:?}: one cluster added", r.family);
+            // the per-event timing rows (exp9's baseline) cover every event
+            assert_eq!(r.event_timings.len(), r.events, "{:?}", r.family);
+            let virtual_sum: f64 = r.event_timings.iter().map(|&(_, _, s, _)| s).sum();
+            assert!((virtual_sum - r.migration_seconds).abs() < 1e-9, "{:?}", r.family);
+            for &(_, wall_ms, _, moves) in &r.event_timings {
+                assert!(wall_ms.is_finite() && wall_ms >= 0.0, "{:?}", r.family);
+                assert!(moves <= r.moves, "{:?}", r.family);
+            }
+        }
+    }
+
+    #[test]
+    fn exp9_smoke_all_families() {
+        let cfg = ExpConfig { block_size: 4 * 1024, stripes: 2, ..tiny() };
+        let dcfg = DurabilitySimConfig {
+            wal_sync_every: 4,
+            snapshot_every: 3,
+            add_nodes: 1,
+            drain_nodes: 1,
+            add_clusters: 1,
+            fault_ops: 0,
+            crash_cap: 7,
+        };
+        let rows = exp9_durability(&cfg, &dcfg).unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            // 2 ingests + add-node + fail + drain + heal + add-cluster
+            assert_eq!(r.ops, 7, "{:?}", r.family);
+            assert!(r.wal_records >= r.ops as u64, "{:?}", r.family);
+            assert!(r.wal_bytes > 0, "{:?}", r.family);
+            assert!(r.crash_points_total >= r.crash_points_tested, "{:?}", r.family);
+            assert!(r.crash_points_tested > 0, "{:?}", r.family);
+            // the acceptance gate: every tested crash point recovered to
+            // the byte-identical oracle map
+            assert_eq!(r.digest_matches, r.crash_points_tested, "{:?}", r.family);
+            // the odd sampling stride guarantees mid-record crash points
+            assert!(r.torn_tails > 0, "{:?}: no torn-tail crash tested", r.family);
+            assert!(r.decode_checks > 0, "{:?}", r.family);
+            assert_eq!(r.reconstructed_blocks, r.crash_points_tested, "{:?}", r.family);
+            assert!(r.snapshot_run_snapshots > 1, "{:?}: cadence never fired", r.family);
+            assert!(r.snapshot_digest_match, "{:?}", r.family);
         }
     }
 

@@ -48,6 +48,31 @@ pub enum NodeState {
     Dead,
 }
 
+impl NodeState {
+    /// Stable one-byte tag for the durability layer (manifest/WAL
+    /// encoding). Tags are part of the on-disk format — never renumber.
+    pub fn tag(self) -> u8 {
+        match self {
+            NodeState::Joining => 0,
+            NodeState::Active => 1,
+            NodeState::Draining => 2,
+            NodeState::Dead => 3,
+        }
+    }
+
+    /// Inverse of [`NodeState::tag`]; `None` for unknown tags (corrupt or
+    /// future-version records).
+    pub fn from_tag(tag: u8) -> Option<NodeState> {
+        match tag {
+            0 => Some(NodeState::Joining),
+            1 => Some(NodeState::Active),
+            2 => Some(NodeState::Draining),
+            3 => Some(NodeState::Dead),
+            _ => None,
+        }
+    }
+}
+
 /// A topology mutation — the system events of the paper's "frequent
 /// system events" scenario family. Applied by
 /// [`crate::coordinator::Dss::apply_topology_event`], which also plans and
@@ -107,6 +132,30 @@ impl Topology {
             cluster_of,
             retired: vec![false; sizes.len()],
         }
+    }
+
+    /// Rebuild a topology from its persisted parts (manifest recovery).
+    ///
+    /// `members` is derived, not stored: every construction path
+    /// ([`Topology::with_cluster_sizes`], [`Topology::add_node`],
+    /// [`Topology::add_cluster`]) appends fresh (maximal) node ids, so a
+    /// cluster's member list is always its owned ids in increasing order —
+    /// scanning `cluster_of` reproduces it exactly. Callers must have
+    /// validated the parts (see `CoordinatorState::prove_invariants`);
+    /// this constructor only asserts basic shape.
+    pub fn from_parts(
+        cluster_of: Vec<usize>,
+        states: Vec<NodeState>,
+        retired: Vec<bool>,
+    ) -> Topology {
+        assert_eq!(cluster_of.len(), states.len(), "one state per node");
+        assert!(!retired.is_empty(), "at least one cluster");
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); retired.len()];
+        for (node, &c) in cluster_of.iter().enumerate() {
+            assert!(c < retired.len(), "cluster id out of range");
+            members[c].push(node);
+        }
+        Topology { members, cluster_of, states, retired }
     }
 
     /// Number of clusters (including retired ones — cluster ids are stable).
@@ -374,6 +423,30 @@ mod tests {
         assert!(!t.is_live(0));
         assert!(!t.live_nodes().contains(&0));
         assert_eq!(t.total_nodes(), 7, "dead ids are never reused");
+    }
+
+    #[test]
+    fn state_tags_round_trip() {
+        for s in [NodeState::Joining, NodeState::Active, NodeState::Draining, NodeState::Dead] {
+            assert_eq!(NodeState::from_tag(s.tag()), Some(s));
+        }
+        assert_eq!(NodeState::from_tag(4), None);
+    }
+
+    #[test]
+    fn from_parts_round_trips_mutated_topology() {
+        let mut t = Topology::new(3, 4);
+        t.add_node(1);
+        t.add_cluster(2);
+        t.set_state(0, NodeState::Dead);
+        t.set_state(5, NodeState::Draining);
+        t.retire_cluster(2);
+        let cluster_of: Vec<usize> =
+            (0..t.total_nodes()).map(|n| t.cluster_of_node(n)).collect();
+        let states: Vec<NodeState> = (0..t.total_nodes()).map(|n| t.state(n)).collect();
+        let retired: Vec<bool> = (0..t.clusters()).map(|c| t.is_retired(c)).collect();
+        let rebuilt = Topology::from_parts(cluster_of, states, retired);
+        assert_eq!(rebuilt, t);
     }
 
     #[test]

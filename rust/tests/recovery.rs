@@ -1,0 +1,330 @@
+//! Durability conformance: the checksummed manifest + WAL journal must
+//! reproduce the live coordinator bit-exactly after a restart, tolerate
+//! torn tails / truncated snapshots / bit flips by recovering an earlier
+//! consistent state or failing with a typed error — and never panic,
+//! never return a map that fails the invariant proof, never silently
+//! drop committed operations. Replayed alongside `tests/migration.rs` by
+//! the forced-kernel CI matrix.
+
+use std::path::{Path, PathBuf};
+use unilrc::codes::spec::CodeFamily;
+use unilrc::coordinator::manifest::{MANIFEST_CURRENT, MANIFEST_PREV};
+use unilrc::coordinator::wal::{list_segments, scan_segment, ScanEnd};
+use unilrc::coordinator::{recover, Dss, DssConfig, DurabilityOptions, RecoveryError};
+use unilrc::experiments::{build_dss, strategy_and_topo, ExpConfig};
+use unilrc::placement::{NodeState, TopologyEvent};
+use unilrc::prng::Prng;
+use unilrc::sim::NetConfig;
+
+fn tiny() -> ExpConfig {
+    ExpConfig { block_size: 4 * 1024, stripes: 2, time_compute: false, ..Default::default() }
+}
+
+/// Fresh per-test scratch directory (removed up front so a previous
+/// aborted run cannot trip the journal's refuse-to-clobber check).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("unilrc-rectest-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The standard mutation mix: ingest, scale-out, a failure + repair +
+/// heal, a drain, and a cross-cluster scale-out — every WAL record kind.
+fn run_scenario(fam: CodeFamily, cfg: &ExpConfig, dir: &Path, opts: DurabilityOptions) -> Dss {
+    let mut dss = build_dss(fam, cfg);
+    dss.enable_durability(dir, opts).unwrap();
+    let mut prng = Prng::new(cfg.seed);
+    dss.ingest_random_stripes(cfg.stripes, &mut prng).unwrap();
+    dss.apply_topology_event(TopologyEvent::AddNode { cluster: 0 }).unwrap();
+    let victim = dss.metadata().node_of(0, 0);
+    dss.fail_node(victim);
+    dss.recover_nodes(&[victim]).unwrap();
+    dss.heal_node(victim);
+    let drain = dss.metadata().node_of(0, 1);
+    dss.apply_topology_event(TopologyEvent::DrainNode { node: drain }).unwrap();
+    dss.apply_topology_event(TopologyEvent::AddCluster { nodes: dss.topo.max_cluster_size() })
+        .unwrap();
+    dss
+}
+
+#[test]
+fn snapshot_plus_wal_replay_matches_live_state_all_families() {
+    for fam in CodeFamily::paper_baselines() {
+        let dir = scratch(&format!("rt-{fam:?}"));
+        let dss = run_scenario(fam, &tiny(), &dir, DurabilityOptions::default());
+        let live = dss.capture_state();
+        let committed = dss.journal().unwrap().committed_ops();
+        drop(dss);
+        let rec = recover(&dir).unwrap();
+        assert_eq!(rec.state, live, "{fam:?}: replayed state must be bit-exact");
+        assert_eq!(rec.state.digest(), live.digest(), "{fam:?}");
+        assert_eq!(rec.committed_ops, committed, "{fam:?}");
+        assert!(rec.pending_event.is_none(), "{fam:?}");
+        assert!(!rec.torn_tail, "{fam:?}");
+        assert!(!rec.used_fallback, "{fam:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn asymmetric_topology_roundtrip_all_families() {
+    // explicit per-cluster sizes (the --topology knob): the manifest must
+    // persist variable-size clusters, not just the symmetric layout
+    let cfg = ExpConfig { topology: Some(vec![14, 13, 13, 12, 12, 11, 11]), ..tiny() };
+    for fam in CodeFamily::paper_baselines() {
+        let dir = scratch(&format!("asym-{fam:?}"));
+        let dss = run_scenario(fam, &cfg, &dir, DurabilityOptions::default());
+        let live = dss.capture_state();
+        drop(dss);
+        let rec = recover(&dir).unwrap();
+        assert_eq!(rec.state, live, "{fam:?}: asymmetric replay must be bit-exact");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn snapshot_rotation_truncates_log_and_still_replays() {
+    let dir = scratch("rot");
+    let dss = run_scenario(
+        CodeFamily::UniLrc,
+        &tiny(),
+        &dir,
+        DurabilityOptions { sync_every: 2, snapshot_every: 2 },
+    );
+    let live = dss.capture_state();
+    let journal = dss.journal().unwrap();
+    assert!(journal.snapshots() > 2, "cadence 2 over 7 ops must rotate manifests");
+    let committed = journal.committed_ops();
+    drop(dss);
+    assert!(dir.join(MANIFEST_PREV).exists(), "rotation keeps the previous generation");
+    let segments = list_segments(&dir).unwrap();
+    assert!(!segments.is_empty());
+    assert!(
+        segments[0].0 > 1,
+        "segments covered by both surviving snapshots must be truncated"
+    );
+    let rec = recover(&dir).unwrap();
+    assert_eq!(rec.state, live, "multi-segment replay after truncation must be bit-exact");
+    assert_eq!(rec.committed_ops, committed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_group_surfaces_pending_event_for_replanning() {
+    let cfg = tiny();
+    let dir = scratch("pend");
+    let mut durable = build_dss(CodeFamily::UniLrc, &cfg);
+    durable.enable_durability(&dir, DurabilityOptions::default()).unwrap();
+    let mut pa = Prng::new(3);
+    durable.ingest_random_stripes(2, &mut pa).unwrap();
+    durable.apply_topology_event(TopologyEvent::AddNode { cluster: 1 }).unwrap();
+    drop(durable);
+    // reference run: identical ingests, no topology event
+    let mut reference = build_dss(CodeFamily::UniLrc, &cfg);
+    let mut pb = Prng::new(3);
+    reference.ingest_random_stripes(2, &mut pb).unwrap();
+    let pre_event = reference.capture_state();
+
+    let segments = list_segments(&dir).unwrap();
+    assert_eq!(segments.len(), 1);
+    let img = std::fs::read(&segments[0].1).unwrap();
+    let (records, end) = scan_segment(&img);
+    assert_eq!(end, ScanEnd::Clean);
+    // crash before the group's CommitEvent hit disk: the event never
+    // committed, so recovery drops the whole group atomically and
+    // surfaces it for re-planning
+    let cut = records.last().unwrap().offset;
+    std::fs::write(&segments[0].1, &img[..cut]).unwrap();
+    let rec = recover(&dir).unwrap();
+    assert_eq!(rec.pending_event, Some(TopologyEvent::AddNode { cluster: 1 }));
+    assert!(!rec.torn_tail, "cut at a record boundary is a clean stop");
+    assert_eq!(rec.committed_ops, 2);
+    assert_eq!(rec.state, pre_event, "uncommitted group must leave no trace");
+
+    // crash mid-record: same outcome, flagged as a torn tail
+    std::fs::write(&segments[0].1, &img[..cut + 3]).unwrap();
+    let rec = recover(&dir).unwrap();
+    assert!(rec.torn_tail);
+    assert_eq!(rec.pending_event, Some(TopologyEvent::AddNode { cluster: 1 }));
+    assert_eq!(rec.state, pre_event);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_current_manifest_falls_back_to_previous_generation() {
+    let dir = scratch("fb");
+    let dss = run_scenario(
+        CodeFamily::UniLrc,
+        &tiny(),
+        &dir,
+        DurabilityOptions { sync_every: 1, snapshot_every: 3 },
+    );
+    let live = dss.capture_state();
+    drop(dss);
+    let current = dir.join(MANIFEST_CURRENT);
+    let mut bytes = std::fs::read(&current).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&current, &bytes).unwrap();
+    let rec = recover(&dir).unwrap();
+    assert!(rec.used_fallback, "current generation corrupt → previous must serve");
+    assert_eq!(
+        rec.state, live,
+        "the older snapshot replays the longer WAL suffix to the same tip"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn typed_errors_no_manifest_and_corrupt_committed_record() {
+    let dir = scratch("err-empty");
+    std::fs::create_dir_all(&dir).unwrap();
+    match recover(&dir) {
+        Err(RecoveryError::NoManifest { .. }) => {}
+        other => panic!("empty dir must be NoManifest, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let dir = scratch("err-wal");
+    let dss = run_scenario(CodeFamily::UniLrc, &tiny(), &dir, DurabilityOptions::default());
+    drop(dss);
+    let segments = list_segments(&dir).unwrap();
+    let img = std::fs::read(&segments[0].1).unwrap();
+    let (records, _) = scan_segment(&img);
+    // flip a payload byte of the first committed record: CRC must catch
+    // it, and recovery must refuse loudly rather than drop the records
+    // behind it
+    let mut bad = img.clone();
+    bad[records[0].offset + 8] ^= 0xFF;
+    std::fs::write(&segments[0].1, &bad).unwrap();
+    match recover(&dir) {
+        Err(RecoveryError::CorruptWal { .. }) => {}
+        other => panic!("flipped committed record must be CorruptWal, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corruption_fuzz_recovers_or_fails_typed_never_panics() {
+    let pristine = scratch("fuzz-pristine");
+    let dss = run_scenario(
+        CodeFamily::UniLrc,
+        &tiny(),
+        &pristine,
+        DurabilityOptions { sync_every: 1, snapshot_every: 3 },
+    );
+    let oracle_digest = dss.capture_state().digest();
+    let total_ops = dss.journal().unwrap().committed_ops();
+    drop(dss);
+    let files: Vec<(String, Vec<u8>)> = std::fs::read_dir(&pristine)
+        .unwrap()
+        .map(|e| {
+            let e = e.unwrap();
+            (e.file_name().into_string().unwrap(), std::fs::read(e.path()).unwrap())
+        })
+        .collect();
+    assert!(files.len() >= 3, "want both manifest generations plus WAL segments");
+
+    let work = scratch("fuzz-work");
+    for seed in 0..30u64 {
+        let mut p = Prng::new(0xF022 + seed);
+        let _ = std::fs::remove_dir_all(&work);
+        std::fs::create_dir_all(&work).unwrap();
+        for (name, bytes) in &files {
+            std::fs::write(work.join(name), bytes).unwrap();
+        }
+        let (name, bytes) = &files[p.gen_range(files.len())];
+        let mut mutated = bytes.clone();
+        if mutated.is_empty() {
+            continue; // a freshly rotated, still-empty segment
+        }
+        if p.gen_range(2) == 0 {
+            let at = p.gen_range(mutated.len());
+            mutated[at] ^= 1 << p.gen_range(8);
+        } else {
+            mutated.truncate(p.gen_range(mutated.len()));
+        }
+        std::fs::write(work.join(name), &mutated).unwrap();
+        match recover(&work) {
+            Ok(rec) => {
+                // whatever survived must be a consistent state, and
+                // recovery must never invent operations
+                rec.state.prove_invariants().unwrap_or_else(|e| {
+                    panic!("seed {seed} ({name}): invariant violation surfaced as Ok: {e}")
+                });
+                assert!(rec.committed_ops <= total_ops, "seed {seed} ({name})");
+                if rec.committed_ops == total_ops && rec.pending_event.is_none() {
+                    assert_eq!(
+                        rec.state.digest(),
+                        oracle_digest,
+                        "seed {seed} ({name}): full-length recovery must match the oracle"
+                    );
+                }
+            }
+            Err(e) => {
+                // typed, displayable, diagnosable — never a panic
+                assert!(!format!("{e}").is_empty(), "seed {seed} ({name})");
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&work);
+    let _ = std::fs::remove_dir_all(&pristine);
+}
+
+/// The log-then-apply ordering pin: block-map mutations commit strictly
+/// after byte-verification, so an event whose rebuild fails verification
+/// leaves no trace — in memory, in the topology lifecycle, or in the WAL.
+#[test]
+fn failed_event_commits_nothing() {
+    let dir = scratch("abort");
+    let cfg = tiny();
+    let mut dss = build_dss(CodeFamily::UniLrc, &cfg);
+    dss.enable_durability(&dir, DurabilityOptions::default()).unwrap();
+    let mut prng = Prng::new(5);
+    dss.ingest_random_stripes(2, &mut prng).unwrap();
+    // draining a failed node rebuilds its blocks; corrupt one so
+    // byte-verification rejects the rebuild mid-event
+    let victim = dss.metadata().node_of(0, 0);
+    dss.fail_node(victim);
+    dss.corrupt_block_data(0, 0);
+    let pre = dss.capture_state();
+    let pre_records = dss.journal().unwrap().wal_records();
+    let pre_ops = dss.journal().unwrap().committed_ops();
+    let err = dss.apply_topology_event(TopologyEvent::DrainNode { node: victim });
+    assert!(err.is_err(), "verification must reject the corrupted rebuild");
+    assert_eq!(dss.capture_state(), pre, "no in-memory mutation may commit");
+    assert_eq!(dss.journal().unwrap().wal_records(), pre_records, "no WAL record may land");
+    assert_eq!(dss.journal().unwrap().committed_ops(), pre_ops);
+    assert_eq!(dss.topo.state(victim), NodeState::Active, "lifecycle rolled back");
+    drop(dss);
+    let rec = recover(&dir).unwrap();
+    assert_eq!(rec.state, pre, "the journal replays to the pre-event state");
+    assert!(rec.pending_event.is_none(), "nothing of the event was logged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restore_refuses_a_map_with_missing_blocks() {
+    let cfg = tiny();
+    let mut dss = build_dss(CodeFamily::UniLrc, &cfg);
+    let mut prng = Prng::new(9);
+    dss.ingest_random_stripes(2, &mut prng).unwrap();
+    let state = dss.capture_state();
+    let mut blocks = dss.export_blocks();
+    let engine = dss.engine().clone();
+    drop(dss);
+    blocks.remove(&(0, 0));
+    let code = cfg.scheme.build(CodeFamily::UniLrc);
+    let (strategy, _) = strategy_and_topo(CodeFamily::UniLrc, &code);
+    let err = Dss::restore(
+        code,
+        strategy,
+        &state,
+        blocks,
+        NetConfig::default(),
+        engine,
+        DssConfig { block_size: cfg.block_size, aggregated: cfg.aggregated, time_compute: false },
+    );
+    let msg = format!("{:#}", err.expect_err("a silently shrunken block store must be refused"));
+    assert!(msg.contains("missing"), "error must name the loss: {msg}");
+}
