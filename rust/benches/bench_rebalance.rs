@@ -9,7 +9,9 @@
 
 use unilrc::bench_util::{black_box, section, Bencher, JsonReport};
 use unilrc::codes::spec::CodeFamily;
-use unilrc::experiments::{build_dss, exp8_elastic, ElasticConfig, ExpConfig};
+use unilrc::experiments::{
+    build_dss, exp10_interference, exp10_rates, exp8_elastic, ElasticConfig, ExpConfig,
+};
 use unilrc::placement::TopologyEvent;
 use unilrc::prng::Prng;
 
@@ -102,6 +104,61 @@ fn main() {
             black_box(dss.apply_topology_event(TopologyEvent::AddCluster { nodes }).unwrap());
         });
         report.add(&s, grow.bytes_moved.max(1));
+    }
+
+    // ------------- migration under load: background-move throttle sweep
+    // × foreground degraded-read latency on the shared network budget
+    // (virtual-clock percentiles, deterministic — see PERF.md on reading
+    // the interference curve), plus the retry counters of an online drain
+    // whose source is down
+    section("migration under load (throttle sweep × foreground p50/p99)");
+    let rates = exp10_rates(400.0);
+    let burst = 512.0 * 1024.0;
+    for fam in CodeFamily::paper_baselines() {
+        let mut dss = build_dss(fam, &cfg);
+        let mut prng = Prng::new(cfg.seed);
+        dss.ingest_random_stripes(cfg.stripes, &mut prng).expect("ingest");
+        let curve = exp10_interference(&mut dss, &rates, burst, 32).expect("interference curve");
+        for (mbps, p50, p99) in &curve {
+            println!(
+                "  {:<8} throttle {:>8.1} Mb/s   fg p50 {:>8.3} ms   p99 {:>8.3} ms",
+                fam.name(),
+                mbps,
+                p50 * 1e3,
+                p99 * 1e3
+            );
+            let tag = format!("rebalance/migrate-load/{}/r{:.0}", fam.name(), mbps);
+            report.add_value(&format!("{tag}/fg-p50"), p50 * 1e3, "ms");
+            report.add_value(&format!("{tag}/fg-p99"), p99 * 1e3, "ms");
+        }
+
+        // online drain of a dead source: the rebuild/retry pipeline
+        let victim = dss.metadata().node_of(0, 0);
+        dss.fail_node(victim);
+        dss.submit_topology_event(TopologyEvent::DrainNode { node: victim }).expect("drain");
+        while dss.online_in_flight() > 0 {
+            dss.pump_migrations(f64::INFINITY, 64).expect("pump");
+            if dss.online_in_flight() > 0 && !dss.parked_events().is_empty() {
+                dss.retry_parked();
+            }
+        }
+        let stats = dss.migration_stats();
+        println!(
+            "  {:<8} dead-source drain: {} moves rebuilt, {:.2} retries/event",
+            fam.name(),
+            stats.source_flips,
+            stats.retries as f64 / stats.submitted.max(1) as f64
+        );
+        report.add_value(
+            &format!("rebalance/migrate-load/{}/retries-per-event", fam.name()),
+            stats.retries as f64 / stats.submitted.max(1) as f64,
+            "retries",
+        );
+        report.add_value(
+            &format!("rebalance/migrate-load/{}/rebuilt-moves", fam.name()),
+            stats.source_flips as f64,
+            "moves",
+        );
     }
 
     report.write_if_requested();

@@ -174,6 +174,17 @@ impl JsonReport {
         ));
     }
 
+    /// Record a directly measured value (not a timed loop) — e.g. a
+    /// simulated latency percentile from a throttle interference sweep.
+    pub fn add_value(&mut self, name: &str, value: f64, unit: &str) {
+        self.rows.push(format!(
+            r#"{{"name":{},"value":{:.6},"unit":{}}}"#,
+            json_str(name),
+            value,
+            json_str(unit)
+        ));
+    }
+
     /// Write to `$UNILRC_BENCH_JSON` if set; returns the path written.
     pub fn write_if_requested(&self) -> Option<String> {
         let path = std::env::var("UNILRC_BENCH_JSON").ok()?;

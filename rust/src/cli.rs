@@ -3,9 +3,10 @@
 //! ```text
 //! unilrc layout  [--scheme 42|136|210]           Fig 1-style layouts
 //! unilrc analyze [--fig5|--fig8|--fig3b|--table2|--table4|--all]
-//! unilrc experiment <1..9> [options]             §6 experiments + faults
+//! unilrc experiment <1..10> [options]            §6 experiments + faults
 //!                                                + elastic topology
 //!                                                + durable coordinator
+//!                                                + online migration
 //! unilrc golden  [--out FILE]                    cross-language vectors
 //! unilrc help
 //! ```
@@ -54,7 +55,7 @@ unilrc — Wide LRCs with Unified Locality (paper reproduction)
 USAGE:
   unilrc layout  [--scheme 42|136|210]
   unilrc analyze [--fig3b] [--fig5] [--fig8] [--table2] [--table4] [--all]
-  unilrc experiment <1..9> [--config FILE] [--scheme S] [--block-kb N]
+  unilrc experiment <1..10> [--config FILE] [--scheme S] [--block-kb N]
                     [--stripes N] [--cross-gbps X] [--backend native|pjrt] [--raw]
                     [--topology N,N,...] (asymmetric per-cluster node counts)
                     [--gf-kernel auto|scalar|ssse3|avx2|avx512|gfni|neon]
@@ -84,7 +85,15 @@ scenario, recovers, and proves the recovered block map byte-identical to
 the never-crashed oracle; knobs: --wal-sync-every (group-commit fsync
 cadence, also UNILRC_WAL_SYNC_EVERY or the [durability] config section)
 --snapshot-every --crash-cap --add-nodes --drain-nodes --add-clusters
---fault-ops; see PERF.md on durability overhead).
+--fault-ops; see PERF.md on durability overhead) · 10 online migration
+under load (concurrent topology events with typed conflict
+serialization, token-bucket-throttled background moves sharing the
+network with foreground reads, source/destination death mid-move, and a
+crash-at-every-WAL-position sweep over open migration waves; knobs:
+--migrate-rate-mbps --migrate-burst (KiB) --backoff-base-ms
+--backoff-cap-ms --max-attempts --add-nodes --drain-nodes
+--add-clusters --crash-cap --fg-reads, [migration] config section; see
+PERF.md on reading the throttle interference curve).
 
 The GF engine tier defaults to the best the CPU supports; override with
 --gf-kernel / --gf-threads or UNILRC_GF_KERNEL / UNILRC_GF_THREADS.
@@ -299,6 +308,58 @@ fn durability_config(
     anyhow::ensure!(dc.wal_sync_every > 0, "--wal-sync-every must be at least 1");
     anyhow::ensure!(dc.snapshot_every > 0, "--snapshot-every must be at least 1");
     Ok(dc)
+}
+
+/// Experiment 10 knobs: config-file `[migration]` section first, explicit
+/// flags override.
+fn migration_config(
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<experiments::MigrationSimConfig> {
+    let mut mc = experiments::MigrationSimConfig::default();
+    if let Some(path) = flags.get("config") {
+        let file = crate::config::Config::load(path)?;
+        crate::config::apply_migration_keys(&file, &mut mc);
+    }
+    if let Some(v) = flags.get("migrate-rate-mbps") {
+        mc.rate_mbps = v.parse()?;
+    }
+    if let Some(v) = flags.get("migrate-burst") {
+        mc.burst_kb = v.parse()?;
+    }
+    if let Some(v) = flags.get("backoff-base-ms") {
+        mc.backoff_base_ms = v.parse()?;
+    }
+    if let Some(v) = flags.get("backoff-cap-ms") {
+        mc.backoff_cap_ms = v.parse()?;
+    }
+    if let Some(v) = flags.get("max-attempts") {
+        mc.max_attempts = v.parse()?;
+    }
+    if let Some(v) = flags.get("add-nodes") {
+        mc.add_nodes = v.parse()?;
+    }
+    if let Some(v) = flags.get("drain-nodes") {
+        mc.drain_nodes = v.parse()?;
+    }
+    if let Some(v) = flags.get("add-clusters") {
+        mc.add_clusters = v.parse()?;
+    }
+    if let Some(v) = flags.get("crash-cap") {
+        mc.crash_cap = v.parse()?;
+    }
+    if let Some(v) = flags.get("fg-reads") {
+        mc.fg_reads = v.parse()?;
+    }
+    anyhow::ensure!(mc.rate_mbps > 0.0, "--migrate-rate-mbps must be positive");
+    anyhow::ensure!(mc.burst_kb > 0, "--migrate-burst must be at least 1 KiB");
+    anyhow::ensure!(mc.backoff_base_ms > 0.0, "--backoff-base-ms must be positive");
+    anyhow::ensure!(
+        mc.backoff_cap_ms >= mc.backoff_base_ms,
+        "--backoff-cap-ms must be at least the base delay"
+    );
+    anyhow::ensure!(mc.max_attempts > 0, "--max-attempts must be at least 1");
+    anyhow::ensure!(mc.fg_reads > 0, "--fg-reads must be at least 1");
+    Ok(mc)
 }
 
 /// `unilrc engine` — report detected and available GF kernel tiers, the
@@ -694,7 +755,55 @@ fn cmd_experiment(which: Option<&str>, flags: &HashMap<String, String>) -> anyho
                 );
             }
         }
-        _ => anyhow::bail!("experiment must be 1..9"),
+        Some("10") => {
+            let mc = migration_config(flags)?;
+            let rows = experiments::exp10_migration(&cfg, &mc)?;
+            println!(
+                "=== Experiment 10 — online migration under load [{}] (seed {}, \
+                 throttle {} Mb/s burst {} KiB, backoff {}..{} ms × {}) ===",
+                cfg.scheme.label(),
+                cfg.seed,
+                mc.rate_mbps,
+                mc.burst_kb,
+                mc.backoff_base_ms,
+                mc.backoff_cap_ms,
+                mc.max_attempts
+            );
+            for r in &rows {
+                println!("  {:<8} oracle digest {:016x}", r.family.name(), r.oracle_digest);
+                println!(
+                    "    window: peak {:>2} events in flight   trace faults {:>2}   \
+                     invariant checks {:>4} passed",
+                    r.concurrent_peak, r.trace_faults_applied, r.invariant_checks
+                );
+                for line in r.stats.render().lines() {
+                    println!("    {line}");
+                }
+                println!(
+                    "    crash sweep: {:>3} of {:>3} positions tested   digest matches {:>3}   \
+                     mid-wave resumes {:>3}   decode checks {:>5}",
+                    r.crash_points_tested,
+                    r.crash_points_total,
+                    r.digest_matches,
+                    r.pending_resumes,
+                    r.decode_checks
+                );
+                println!(
+                    "    interference curve ({}):",
+                    if r.curve_monotone { "monotone" } else { "NOT MONOTONE" }
+                );
+                for (mbps, p50, p99) in &r.curve {
+                    println!(
+                        "      throttle {:>8.1} Mb/s   foreground p50 {:>8.3} ms   \
+                         p99 {:>8.3} ms",
+                        mbps,
+                        p50 * 1e3,
+                        p99 * 1e3
+                    );
+                }
+            }
+        }
+        _ => anyhow::bail!("experiment must be 1..10"),
     }
     if flags.contains_key("cache-stats") {
         print_plan_cache_stats();
@@ -893,6 +1002,45 @@ mod tests {
             .is_err());
         assert!(durability_config(&parse_flags(&["--snapshot-every".into(), "0".into()]))
             .is_err());
+    }
+
+    #[test]
+    fn migration_flags_parse_and_override_defaults() {
+        let f = parse_flags(&[
+            "--migrate-rate-mbps".into(),
+            "100".into(),
+            "--migrate-burst".into(),
+            "256".into(),
+            "--backoff-base-ms".into(),
+            "5".into(),
+            "--max-attempts".into(),
+            "3".into(),
+            "--fg-reads".into(),
+            "16".into(),
+        ]);
+        let mc = migration_config(&f).unwrap();
+        assert_eq!(mc.rate_mbps, 100.0);
+        assert_eq!(mc.burst_kb, 256);
+        assert_eq!(mc.backoff_base_ms, 5.0);
+        assert_eq!(mc.max_attempts, 3);
+        assert_eq!(mc.fg_reads, 16);
+        // unset knobs keep their defaults
+        let d = experiments::MigrationSimConfig::default();
+        assert_eq!(mc.backoff_cap_ms, d.backoff_cap_ms);
+        assert_eq!(mc.crash_cap, d.crash_cap);
+        // degenerate knobs are rejected up front
+        assert!(migration_config(&parse_flags(&["--migrate-rate-mbps".into(), "0".into()]))
+            .is_err());
+        assert!(migration_config(&parse_flags(&["--migrate-burst".into(), "0".into()])).is_err());
+        // a cap below the base delay would make backoff regress instantly
+        let bad = parse_flags(&[
+            "--backoff-base-ms".into(),
+            "50".into(),
+            "--backoff-cap-ms".into(),
+            "10".into(),
+        ]);
+        assert!(migration_config(&bad).is_err());
+        assert!(migration_config(&parse_flags(&["--max-attempts".into(), "0".into()])).is_err());
     }
 
     #[test]

@@ -320,6 +320,47 @@ pub fn apply_durability_keys(cfg: &Config, d: &mut crate::experiments::Durabilit
     }
 }
 
+/// Apply the `[migration]` section onto an experiment-10 config:
+/// recognized keys `rate_mbps` (token-bucket refill rate for background
+/// moves, megabits/s), `burst_kb` (bucket depth), `backoff_base_ms` /
+/// `backoff_cap_ms` / `max_attempts` (capped exponential retry before an
+/// event parks as retryable), `add_nodes`, `drain_nodes`, `add_clusters`
+/// (crash-sweep scenario shape), `crash_cap` (crash positions tested per
+/// family; 0 = all), `fg_reads` (foreground probes per throttle rate in
+/// the interference curve). Explicit CLI flags override these.
+pub fn apply_migration_keys(cfg: &Config, m: &mut crate::experiments::MigrationSimConfig) {
+    if let Some(v) = cfg.get_f64("migration", "rate_mbps") {
+        m.rate_mbps = v;
+    }
+    if let Some(v) = cfg.get_usize("migration", "burst_kb") {
+        m.burst_kb = v;
+    }
+    if let Some(v) = cfg.get_f64("migration", "backoff_base_ms") {
+        m.backoff_base_ms = v;
+    }
+    if let Some(v) = cfg.get_f64("migration", "backoff_cap_ms") {
+        m.backoff_cap_ms = v;
+    }
+    if let Some(v) = cfg.get_usize("migration", "max_attempts") {
+        m.max_attempts = v;
+    }
+    if let Some(v) = cfg.get_usize("migration", "add_nodes") {
+        m.add_nodes = v;
+    }
+    if let Some(v) = cfg.get_usize("migration", "drain_nodes") {
+        m.drain_nodes = v;
+    }
+    if let Some(v) = cfg.get_usize("migration", "add_clusters") {
+        m.add_clusters = v;
+    }
+    if let Some(v) = cfg.get_usize("migration", "crash_cap") {
+        m.crash_cap = v;
+    }
+    if let Some(v) = cfg.get_usize("migration", "fg_reads") {
+        m.fg_reads = v;
+    }
+}
+
 /// Apply the `[faults]` section onto an experiment-7 config: recognized
 /// keys `horizon_hours`, `node_mttf_hours`, `node_mttr_hours`,
 /// `cluster_mttf_hours`, `cluster_mttr_hours` (hours; a zero MTTF
@@ -503,6 +544,26 @@ epsilon = 0.1
         assert_eq!(d.add_nodes, defaults.add_nodes);
         assert_eq!(d.drain_nodes, defaults.drain_nodes);
         assert_eq!(d.add_clusters, defaults.add_clusters);
+    }
+
+    #[test]
+    fn migration_section_applies_over_defaults() {
+        let c = Config::parse(
+            "[migration]\nrate_mbps = 100\nburst_kb = 256\nbackoff_base_ms = 5.0\n\
+             max_attempts = 3\nfg_reads = 16",
+        )
+        .unwrap();
+        let mut m = crate::experiments::MigrationSimConfig::default();
+        let defaults = crate::experiments::MigrationSimConfig::default();
+        apply_migration_keys(&c, &mut m);
+        assert_eq!(m.rate_mbps, 100.0);
+        assert_eq!(m.burst_kb, 256);
+        assert_eq!(m.backoff_base_ms, 5.0);
+        assert_eq!(m.max_attempts, 3);
+        assert_eq!(m.fg_reads, 16);
+        assert_eq!(m.backoff_cap_ms, defaults.backoff_cap_ms);
+        assert_eq!(m.crash_cap, defaults.crash_cap);
+        assert_eq!(m.add_nodes, defaults.add_nodes);
     }
 
     #[test]

@@ -24,6 +24,30 @@ use std::collections::HashMap;
 /// Stripe identifier.
 pub type StripeId = usize;
 
+/// Per-block migration state (undermoon's per-slot migrating/stable tags,
+/// at block grain). A `Migrating` block still *lives* on its source node —
+/// every read/repair path keeps resolving through [`BlockMap::node_of`]
+/// until the move commits, so an in-flight migration never opens a
+/// phantom unavailability window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockState {
+    /// Not part of any in-flight move.
+    Stable,
+    /// Claimed by an in-flight topology event: bytes are being copied
+    /// (or rebuilt) from `from` onto `to`, but the map still points at
+    /// `from` until [`BlockMap::commit_move`].
+    Migrating { from: usize, to: usize },
+}
+
+/// Internal record of one claimed move (the commit target includes the
+/// destination cluster, which [`BlockState`] does not need to expose).
+#[derive(Debug, Clone, Copy)]
+struct MoveClaim {
+    from_node: usize,
+    to_cluster: usize,
+    to_node: usize,
+}
+
 /// Mutable stripe → block → (cluster, node) state with per-cluster and
 /// per-node indexes. `Clone` is cheap enough at prototype scale that the
 /// migration planner works on a scratch copy while deciding moves.
@@ -34,6 +58,8 @@ pub struct BlockMap {
     per_cluster: Vec<Vec<Vec<usize>>>,
     /// node → (stripe, block) reverse index.
     by_node: HashMap<usize, Vec<(StripeId, usize)>>,
+    /// Blocks claimed by in-flight moves; absent ⇒ [`BlockState::Stable`].
+    migrating: HashMap<(StripeId, usize), MoveClaim>,
 }
 
 impl BlockMap {
@@ -132,6 +158,71 @@ impl BlockMap {
         src.swap_remove(pos);
         self.by_node.entry(to_node).or_default().push((stripe, block));
     }
+
+    // ------------------------------------------------ migration claims
+
+    /// Migration state of one block.
+    pub fn state_of(&self, stripe: StripeId, block: usize) -> BlockState {
+        match self.migrating.get(&(stripe, block)) {
+            Some(c) => BlockState::Migrating { from: c.from_node, to: c.to_node },
+            None => BlockState::Stable,
+        }
+    }
+
+    /// Claim `block` for an in-flight move onto `(to_cluster, to_node)`.
+    /// Returns `false` (and changes nothing) when another event already
+    /// holds the block — the conflict-serialization primitive: a claim is
+    /// all-or-nothing, so two overlapping plans can never interleave into
+    /// a corrupt map.
+    pub fn begin_move(
+        &mut self,
+        stripe: StripeId,
+        block: usize,
+        to_cluster: usize,
+        to_node: usize,
+    ) -> bool {
+        let from_node = self.placements[stripe].node_of[block];
+        match self.migrating.entry((stripe, block)) {
+            std::collections::hash_map::Entry::Occupied(_) => false,
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(MoveClaim { from_node, to_cluster, to_node });
+                true
+            }
+        }
+    }
+
+    /// Re-point an in-flight claim at a new destination (destination died
+    /// mid-move, the event re-planned). Panics if the block is not
+    /// migrating — re-targeting an unclaimed block is a scheduler bug.
+    pub fn retarget_move(
+        &mut self,
+        stripe: StripeId,
+        block: usize,
+        to_cluster: usize,
+        to_node: usize,
+    ) {
+        let claim = self.migrating.get_mut(&(stripe, block)).expect("block is migrating");
+        claim.to_cluster = to_cluster;
+        claim.to_node = to_node;
+    }
+
+    /// Commit an in-flight move: the bytes landed (and verified), so the
+    /// map finally re-points the block at the claim's target and the
+    /// block returns to [`BlockState::Stable`].
+    pub fn commit_move(&mut self, stripe: StripeId, block: usize) {
+        let claim = self.migrating.remove(&(stripe, block)).expect("block is migrating");
+        self.move_block(stripe, block, claim.to_cluster, claim.to_node);
+    }
+
+    /// Release a claim without moving anything (event aborted/unwound).
+    pub fn abort_move(&mut self, stripe: StripeId, block: usize) {
+        self.migrating.remove(&(stripe, block));
+    }
+
+    /// Blocks currently claimed by in-flight moves.
+    pub fn migrating_count(&self) -> usize {
+        self.migrating.len()
+    }
 }
 
 #[cfg(test)]
@@ -185,5 +276,44 @@ mod tests {
         m.move_block(0, 0, 0, 0);
         assert_eq!(m.blocks_in_cluster(0, 0), &[0, 1]);
         assert_eq!(m.blocks_on_node(0), &[(0, 0)]);
+    }
+
+    #[test]
+    fn migrating_block_stays_readable_from_source_until_commit() {
+        let mut m = BlockMap::new();
+        m.insert_stripe(placement(), 2);
+        assert_eq!(m.state_of(0, 1), BlockState::Stable);
+        assert!(m.begin_move(0, 1, 1, 3));
+        // satellite-2 pin: the claim changes *state*, not residency — every
+        // index keeps resolving to the source until the commit
+        assert_eq!(m.state_of(0, 1), BlockState::Migrating { from: 1, to: 3 });
+        assert_eq!(m.node_of(0, 1), 1);
+        assert_eq!(m.blocks_on_node(1), &[(0, 1)]);
+        assert_eq!(m.blocks_in_cluster(0, 0), &[0, 1]);
+        assert_eq!(m.migrating_count(), 1);
+        // a second event claiming the same block serializes
+        assert!(!m.begin_move(0, 1, 0, 0));
+        assert_eq!(m.state_of(0, 1), BlockState::Migrating { from: 1, to: 3 });
+        m.commit_move(0, 1);
+        assert_eq!(m.state_of(0, 1), BlockState::Stable);
+        assert_eq!(m.node_of(0, 1), 3);
+        assert_eq!(m.cluster_of(0, 1), 1);
+        assert_eq!(m.migrating_count(), 0);
+    }
+
+    #[test]
+    fn abort_and_retarget_claims() {
+        let mut m = BlockMap::new();
+        m.insert_stripe(placement(), 2);
+        assert!(m.begin_move(0, 0, 1, 2));
+        m.abort_move(0, 0);
+        assert_eq!(m.state_of(0, 0), BlockState::Stable);
+        assert_eq!(m.node_of(0, 0), 0, "abort commits nothing");
+        // retarget: destination died, the event re-planned onto node 3
+        assert!(m.begin_move(0, 0, 1, 2));
+        m.retarget_move(0, 0, 1, 3);
+        assert_eq!(m.state_of(0, 0), BlockState::Migrating { from: 0, to: 3 });
+        m.commit_move(0, 0);
+        assert_eq!(m.node_of(0, 0), 3);
     }
 }

@@ -5,7 +5,7 @@
 //! (§4.2) — here made *stateful* so topology events can migrate blocks.
 
 use crate::codes::Code;
-use crate::coordinator::block_map::BlockMap;
+use crate::coordinator::block_map::{BlockMap, BlockState};
 use crate::placement::{Placement, PlacementStrategy, Topology};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -151,6 +151,47 @@ impl Metadata {
         to_node: usize,
     ) {
         self.map.move_block(stripe, block, to_cluster, to_node);
+    }
+
+    // Claim passthroughs for the online (background) migration scheduler:
+    // a claimed block keeps serving reads from its source until
+    // `commit_move` re-points it.
+
+    /// Migration state of a block.
+    pub fn block_state(&self, stripe: StripeId, block: usize) -> BlockState {
+        self.map.state_of(stripe, block)
+    }
+
+    /// Claim a block for an in-flight move; `false` if already claimed.
+    pub fn begin_move(
+        &mut self,
+        stripe: StripeId,
+        block: usize,
+        to_cluster: usize,
+        to_node: usize,
+    ) -> bool {
+        self.map.begin_move(stripe, block, to_cluster, to_node)
+    }
+
+    /// Point an in-flight claim at a new target (dest-death re-plan).
+    pub fn retarget_move(
+        &mut self,
+        stripe: StripeId,
+        block: usize,
+        to_cluster: usize,
+        to_node: usize,
+    ) {
+        self.map.retarget_move(stripe, block, to_cluster, to_node);
+    }
+
+    /// Commit an in-flight claim: re-point the block at its target.
+    pub fn commit_move(&mut self, stripe: StripeId, block: usize) {
+        self.map.commit_move(stripe, block);
+    }
+
+    /// Drop an in-flight claim, leaving the block where it is.
+    pub fn abort_move(&mut self, stripe: StripeId, block: usize) {
+        self.map.abort_move(stripe, block);
     }
 }
 

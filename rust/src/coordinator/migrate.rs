@@ -29,9 +29,128 @@
 use crate::codes::Code;
 use crate::coordinator::block_map::{BlockMap, StripeId};
 use crate::placement::Topology;
-use anyhow::{bail, Result};
 use std::cmp::Reverse;
 use std::collections::HashSet;
+use std::fmt;
+
+/// Typed planning/scheduling failure. [`MigrationError::retryable`]
+/// separates transient contention (retry after backoff, or after the
+/// conflicting event commits) from permanently unplannable events (the
+/// topology itself lacks an invariant-satisfying home — only adding
+/// capacity can help).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MigrationError {
+    /// No invariant-preserving plan exists on the current topology.
+    /// Permanent until the topology changes.
+    Unplannable { reason: String },
+    /// Another in-flight event already claims a block (or target slot)
+    /// this plan needs; the events serialize — retry after it commits.
+    Conflicting { stripe: StripeId, block: usize },
+    /// A move's source died mid-transfer and the stripe's erasure pattern
+    /// is (currently) not rebuildable; retryable once repairs land.
+    SourceDown { node: usize },
+}
+
+impl MigrationError {
+    /// `true` for transient failures worth retrying with backoff.
+    pub fn retryable(&self) -> bool {
+        !matches!(self, MigrationError::Unplannable { .. })
+    }
+}
+
+impl fmt::Display for MigrationError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MigrationError::Unplannable { reason } => write!(f, "{reason}"),
+            MigrationError::Conflicting { stripe, block } => write!(
+                f,
+                "stripe {stripe} block {block} is claimed by another in-flight event \
+                 (retryable)"
+            ),
+            MigrationError::SourceDown { node } => {
+                write!(f, "source node {node} is down and not yet rebuildable (retryable)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MigrationError {}
+
+/// Retry discipline for failed background moves: capped exponential
+/// backoff, then park the event as retryable
+/// (`--backoff-base-ms` / `--backoff-cap-ms` / `--max-attempts`,
+/// `[migration]` config keys).
+#[derive(Debug, Clone, Copy)]
+pub struct BackoffPolicy {
+    /// First retry delay in virtual milliseconds.
+    pub base_ms: f64,
+    /// Ceiling on any single delay (caps the exponential).
+    pub cap_ms: f64,
+    /// Attempts before the event parks as retryable.
+    pub max_attempts: usize,
+}
+
+impl Default for BackoffPolicy {
+    fn default() -> Self {
+        BackoffPolicy { base_ms: 10.0, cap_ms: 1_000.0, max_attempts: 5 }
+    }
+}
+
+impl BackoffPolicy {
+    /// Delay before retry number `attempt` (0-based):
+    /// `min(base · 2^attempt, cap)` milliseconds.
+    pub fn delay_ms(&self, attempt: usize) -> f64 {
+        (self.base_ms * 2f64.powi(attempt.min(30) as i32)).min(self.cap_ms)
+    }
+}
+
+/// Background-migration counters, printed like `PlanCache::stats()`
+/// (`Dss::migration_stats`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationStats {
+    /// Events admitted into the in-flight queue.
+    pub submitted: usize,
+    /// Events whose every move committed.
+    pub completed: usize,
+    /// Submissions rejected with [`MigrationError::Conflicting`].
+    pub conflicts: usize,
+    /// Submissions rejected with [`MigrationError::Unplannable`].
+    pub unplannable: usize,
+    /// Move attempts that failed and were re-scheduled with backoff.
+    pub retries: usize,
+    /// Moves whose source died mid-event and flipped onto the batched
+    /// rebuild path.
+    pub source_flips: usize,
+    /// Moves re-planned onto a new target after their destination died.
+    pub dest_replans: usize,
+    /// Events parked as retryable after exhausting their attempts.
+    pub parked: usize,
+    /// Events resumed from a recovered WAL (crash-mid-wave).
+    pub resumed: usize,
+    /// Individual block moves committed to the map.
+    pub moves_committed: usize,
+}
+
+impl MigrationStats {
+    /// One-line-per-counter report (the `PlanCache::stats()` idiom).
+    pub fn render(&self) -> String {
+        format!(
+            "migration stats:\n  events submitted {} completed {} parked {} resumed {}\n  \
+             rejections: conflicts {} unplannable {}\n  moves committed {} \
+             (source-flips {} dest-replans {} retries {})",
+            self.submitted,
+            self.completed,
+            self.parked,
+            self.resumed,
+            self.conflicts,
+            self.unplannable,
+            self.moves_committed,
+            self.source_flips,
+            self.dest_replans,
+            self.retries,
+        )
+    }
+}
 
 /// One planned block move.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -119,8 +238,10 @@ fn cluster_load(map: &BlockMap, topo: &Topology, cluster: usize) -> usize {
 }
 
 /// Least-loaded migratable node of `cluster` that is not failed and hosts
-/// no block of `stripe`; ties break on the lower node id.
-fn target_in_cluster(
+/// no block of `stripe`; ties break on the lower node id. Also the
+/// dest-death re-planning primitive of the online scheduler
+/// ([`crate::coordinator::Dss::pump_migrations`]).
+pub(crate) fn target_in_cluster(
     map: &BlockMap,
     topo: &Topology,
     failed: &HashSet<usize>,
@@ -208,7 +329,8 @@ pub fn plan_add_node(
 
 /// Empty a draining node: local spare first (invariants untouched), then
 /// policy-checked single-block relocation to the least-loaded eligible
-/// cluster. Errors when some block has no valid home anywhere.
+/// cluster. [`MigrationError::Unplannable`] when some block has no valid
+/// home anywhere.
 pub fn plan_drain(
     code: &Code,
     policy: MigrationPolicy,
@@ -216,7 +338,7 @@ pub fn plan_drain(
     map: &BlockMap,
     failed: &HashSet<usize>,
     node: usize,
-) -> Result<MigrationPlan> {
+) -> Result<MigrationPlan, MigrationError> {
     let mut scratch = map.clone();
     let mut moves = Vec::new();
     let mut items = scratch.blocks_on_node(node).to_vec();
@@ -268,10 +390,14 @@ pub fn plan_drain(
                 });
                 scratch.move_block(s, b, c, t);
             }
-            None => bail!(
-                "cannot drain node {node}: no invariant-preserving target for \
-                 stripe {s} block {b}"
-            ),
+            None => {
+                return Err(MigrationError::Unplannable {
+                    reason: format!(
+                        "cannot drain node {node}: no invariant-preserving target for \
+                         stripe {s} block {b}"
+                    ),
+                })
+            }
         }
     }
     Ok(MigrationPlan { moves })
@@ -341,14 +467,15 @@ pub fn plan_add_cluster(
 }
 
 /// Retire a cluster: every (stripe, cluster) unit relocates to a cluster
-/// hosting none of that stripe, least-loaded first. Errors when a unit
-/// has no eligible home (the system is too full to decommission).
+/// hosting none of that stripe, least-loaded first.
+/// [`MigrationError::Unplannable`] when a unit has no eligible home (the
+/// system is too full to decommission).
 pub fn plan_decommission(
     topo: &Topology,
     map: &BlockMap,
     failed: &HashSet<usize>,
     cluster: usize,
-) -> Result<MigrationPlan> {
+) -> Result<MigrationPlan, MigrationError> {
     let mut scratch = map.clone();
     let mut moves = Vec::new();
     for s in 0..scratch.stripe_count() {
@@ -382,11 +509,15 @@ pub fn plan_decommission(
                     scratch.move_block(s, b, c, t);
                 }
             }
-            None => bail!(
-                "cannot decommission cluster {cluster}: stripe {s}'s \
-                 {}-block unit has no eligible home",
-                unit.len()
-            ),
+            None => {
+                return Err(MigrationError::Unplannable {
+                    reason: format!(
+                        "cannot decommission cluster {cluster}: stripe {s}'s \
+                         {}-block unit has no eligible home",
+                        unit.len()
+                    ),
+                })
+            }
         }
     }
     Ok(MigrationPlan { moves })
@@ -487,7 +618,41 @@ mod tests {
                 // acceptable only if genuinely out of room — 6→5 clusters
                 // for a 6-group UniLRC placement is exactly that case
                 assert!(e.to_string().contains("no eligible home"), "{e}");
+                assert!(!e.retryable(), "an unplannable event is permanent");
             }
         }
+    }
+
+    #[test]
+    fn migration_error_retryability_and_display() {
+        let unplannable = MigrationError::Unplannable { reason: "no eligible home".into() };
+        assert!(!unplannable.retryable());
+        assert!(unplannable.to_string().contains("no eligible home"));
+        let conflict = MigrationError::Conflicting { stripe: 3, block: 1 };
+        assert!(conflict.retryable());
+        assert!(conflict.to_string().contains("stripe 3 block 1"));
+        let down = MigrationError::SourceDown { node: 7 };
+        assert!(down.retryable());
+        assert!(down.to_string().contains("node 7"));
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = BackoffPolicy { base_ms: 10.0, cap_ms: 100.0, max_attempts: 5 };
+        assert_eq!(p.delay_ms(0), 10.0);
+        assert_eq!(p.delay_ms(1), 20.0);
+        assert_eq!(p.delay_ms(2), 40.0);
+        assert_eq!(p.delay_ms(3), 80.0);
+        assert_eq!(p.delay_ms(4), 100.0, "capped");
+        assert_eq!(p.delay_ms(60), 100.0, "huge attempts do not overflow");
+    }
+
+    #[test]
+    fn stats_render_lists_every_counter() {
+        let s = MigrationStats { submitted: 4, completed: 3, retries: 2, ..Default::default() };
+        let r = s.render();
+        assert!(r.contains("submitted 4"), "{r}");
+        assert!(r.contains("completed 3"), "{r}");
+        assert!(r.contains("retries 2"), "{r}");
     }
 }

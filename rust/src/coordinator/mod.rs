@@ -22,11 +22,13 @@ pub mod migrate;
 pub mod recovery;
 pub mod wal;
 
-pub use block_map::BlockMap;
+pub use block_map::{BlockMap, BlockState};
 pub use manifest::{CoordinatorState, Manifest, ManifestStore};
 pub use metadata::{Metadata, StripeId};
-pub use migrate::{BlockMove, MigrationPlan, MigrationPolicy};
-pub use recovery::{recover, Recovered, RecoveryError};
+pub use migrate::{
+    BackoffPolicy, BlockMove, MigrationError, MigrationPlan, MigrationPolicy, MigrationStats,
+};
+pub use recovery::{recover, PendingOnline, Recovered, RecoveryError};
 pub use wal::{DurabilityOptions, Journal, WalRecord};
 
 use crate::codes::Code;
@@ -34,7 +36,7 @@ use crate::placement::{NodeState, PlacementStrategy, Topology, TopologyEvent};
 use crate::proxy::{OpOutcome, ProxyCtx, RepairRequest};
 use crate::prng::Prng;
 use crate::runtime::CodingEngine;
-use crate::sim::{Endpoint, NetConfig, NetSim};
+use crate::sim::{Endpoint, NetConfig, NetSim, TrafficClass};
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
 use std::sync::Arc;
@@ -98,6 +100,9 @@ pub struct Dss {
     /// [`Dss::enable_durability`]. When present, every durable mutation
     /// is logged **before** the in-memory state commits.
     journal: Option<Journal>,
+    /// In-flight background (online) migrations — see
+    /// [`Dss::submit_topology_event`] / [`Dss::pump_migrations`].
+    online: OnlineMigrations,
 }
 
 impl Dss {
@@ -115,7 +120,18 @@ impl Dss {
     ) -> Dss {
         let meta = Metadata::new(&code, strategy);
         let net = NetSim::new(&topo, net_cfg);
-        Dss { code, topo, net, cfg, engine, meta, failed: HashSet::new(), clock: 0.0, journal: None }
+        Dss {
+            code,
+            topo,
+            net,
+            cfg,
+            engine,
+            meta,
+            failed: HashSet::new(),
+            clock: 0.0,
+            journal: None,
+            online: OnlineMigrations::default(),
+        }
     }
 
     /// Rebuild a coordinator from a recovered [`CoordinatorState`] plus
@@ -172,7 +188,18 @@ impl Dss {
         let failed = state.failed.iter().map(|&f| f as usize).collect();
         let net = NetSim::new(&topo, net_cfg);
         let meta = Metadata::restore(map, blocks, strategy, code.n());
-        Ok(Dss { code, topo, net, cfg, engine, meta, failed, clock: 0.0, journal: None })
+        Ok(Dss {
+            code,
+            topo,
+            net,
+            cfg,
+            engine,
+            meta,
+            failed,
+            clock: 0.0,
+            journal: None,
+            online: OnlineMigrations::default(),
+        })
     }
 
     pub fn metadata(&self) -> &Metadata {
@@ -204,6 +231,15 @@ impl Dss {
     /// truncation) every `opts.snapshot_every` committed operations.
     pub fn enable_durability(&mut self, dir: &Path, opts: DurabilityOptions) -> anyhow::Result<()> {
         anyhow::ensure!(self.journal.is_none(), "durability already enabled");
+        // An in-flight online event's Begin/plan records live only in the
+        // *previous* journal; a fresh journal's snapshot would not carry
+        // the claims and its WAL would see done-moves for an event it
+        // never admitted. Finish or cancel in-flight work first.
+        anyhow::ensure!(
+            self.online.events.is_empty(),
+            "cannot enable durability with {} online migration(s) in flight",
+            self.online.events.len()
+        );
         let state = self.capture_state();
         self.journal = Some(Journal::create(dir, &state, opts)?);
         Ok(())
@@ -249,8 +285,14 @@ impl Dss {
         }
     }
 
-    /// Re-snapshot the manifest when the cadence is due.
+    /// Re-snapshot the manifest when the cadence is due. Gated off while
+    /// any online migration is open: a snapshot rotates and truncates the
+    /// WAL, and an open event's `BeginOnline`/plan records must survive
+    /// until its commit or abort marker lands.
     fn maybe_snapshot(&mut self) {
+        if !self.online.events.is_empty() {
+            return;
+        }
         if self.journal.as_ref().is_some_and(|j| j.snapshot_due()) {
             let state = self.capture_state();
             self.journal
@@ -437,8 +479,14 @@ impl Dss {
     }
 
     /// Degraded-read path starting at a fixed virtual instant; returns the
-    /// completion time (used by [`Self::parallel_read`] fan-outs).
-    fn degraded_read_at(&mut self, t0: f64, stripe: StripeId, block: usize) -> anyhow::Result<f64> {
+    /// completion time (used by [`Self::parallel_read`] fan-outs and the
+    /// fixed-schedule foreground probes of the exp10 interference curve).
+    pub(crate) fn degraded_read_at(
+        &mut self,
+        t0: f64,
+        stripe: StripeId,
+        block: usize,
+    ) -> anyhow::Result<f64> {
         anyhow::ensure!(block < self.code.k(), "degraded read targets a data block");
         let bs = self.cfg.block_size;
         let erased = self.failed_blocks(stripe);
@@ -648,6 +696,14 @@ impl Dss {
         &mut self,
         ev: TopologyEvent,
     ) -> anyhow::Result<MigrationReport> {
+        // Stop-the-world and online migration never mix in one wave: the
+        // stop-the-world committer writes through `BlockMap::move_block`,
+        // which must not race an open claim.
+        anyhow::ensure!(
+            self.online.events.is_empty(),
+            "stop-the-world topology event while {} online migration(s) are in flight",
+            self.online.events.len()
+        );
         let wall0 = std::time::Instant::now();
         let mut report = self.apply_topology_event_inner(ev)?;
         report.wall_ms = wall0.elapsed().as_secs_f64() * 1e3;
@@ -968,6 +1024,642 @@ impl Dss {
             wall_ms: 0.0,
         }
     }
+
+    // ----------------------------------------------------- online migration
+
+    /// Admit a topology event into the background-migration queue without
+    /// moving a byte. The admission mutation (new node/cluster joins, the
+    /// drain victim turns Draining) happens now; every planned move claims
+    /// its block (`BlockState::Migrating`) and reserves its target slot,
+    /// and the full plan is journaled as an **open** `BeginOnline` group.
+    /// Data moves only when [`Dss::pump_migrations`] runs.
+    ///
+    /// Conflict discipline: a plan that touches a block another in-flight
+    /// event already claims — or targets a `(stripe, node)` slot another
+    /// in-flight move reserves, or drains a node an in-flight move is
+    /// landing on — is rejected with [`MigrationError::Conflicting`]
+    /// (retryable after the holder commits) and the admission mutation is
+    /// rolled back exactly like a failed stop-the-world event. The map is
+    /// never left half-claimed.
+    pub fn submit_topology_event(&mut self, ev: TopologyEvent) -> Result<u32, MigrationError> {
+        let (plan, admitted, prior) = match self.admit_event(ev) {
+            Ok(parts) => parts,
+            Err(e) => {
+                match &e {
+                    MigrationError::Conflicting { .. } => self.online.stats.conflicts += 1,
+                    MigrationError::Unplannable { .. } => self.online.stats.unplannable += 1,
+                    MigrationError::SourceDown { .. } => {}
+                }
+                return Err(e);
+            }
+        };
+        let id = self.online.next_id;
+        self.online.next_id += 1;
+        for mv in &plan.moves {
+            let claimed = self.meta.begin_move(mv.stripe, mv.block, mv.to_cluster, mv.to_node);
+            debug_assert!(claimed, "conflict check precedes claims");
+            self.online.reserved.insert((mv.stripe, mv.to_node));
+        }
+        if self.journal.is_some() {
+            let mut records = Vec::with_capacity(plan.len() + 1);
+            records.push(WalRecord::BeginOnline {
+                event_id: id,
+                event: wal::WalEvent::from_event(ev),
+                moves: plan.len() as u32,
+            });
+            records.extend(plan.moves.iter().map(|mv| WalRecord::OnlineMove {
+                event_id: id,
+                done: false,
+                stripe: mv.stripe as u32,
+                block: mv.block as u32,
+                from_node: mv.from_node as u32,
+                to_cluster: mv.to_cluster as u32,
+                to_node: mv.to_node as u32,
+            }));
+            self.journal
+                .as_mut()
+                .expect("journal checked above")
+                .append_op_part(&records)
+                .expect("WAL append failed — cannot keep durability promise");
+        }
+        self.online.events.push(OnlineEvent {
+            id,
+            event: ev,
+            admitted,
+            prior,
+            remaining: plan.moves,
+            done: Vec::new(),
+            attempts: 0,
+            next_retry_at: self.clock,
+            parked: None,
+            t_admit: self.clock,
+            repaired_moves: 0,
+            cross_bytes: 0,
+        });
+        self.online.stats.submitted += 1;
+        Ok(id)
+    }
+
+    /// Validate + apply the admission mutation and plan one event.
+    /// Mirrors [`Dss::apply_topology_event_inner`]'s admission order:
+    /// scale-outs mutate the topology first (the planner needs the new
+    /// node) and roll back on conflict; drains plan first, so a rejected
+    /// drain leaves the system untouched.
+    fn admit_event(
+        &mut self,
+        ev: TopologyEvent,
+    ) -> Result<(MigrationPlan, Vec<usize>, Vec<(usize, NodeState)>), MigrationError> {
+        let unplannable = |reason: String| MigrationError::Unplannable { reason };
+        match ev {
+            TopologyEvent::AddNode { cluster } => {
+                if cluster >= self.topo.clusters() {
+                    return Err(unplannable(format!("no such cluster {cluster}")));
+                }
+                if self.topo.is_retired(cluster) {
+                    return Err(unplannable(format!("cluster {cluster} is retired")));
+                }
+                let node = self.topo.add_node(cluster);
+                self.net.sync(&self.topo);
+                let plan = migrate::plan_add_node(
+                    &self.topo,
+                    self.meta.block_map(),
+                    &self.failed,
+                    cluster,
+                    node,
+                );
+                if let Err(e) = self.check_conflicts(&plan) {
+                    // node ids are never reused: the rejected scale-out
+                    // leaves a dead id behind, the map untouched
+                    self.topo.set_state(node, NodeState::Dead);
+                    return Err(e);
+                }
+                Ok((plan, vec![node], Vec::new()))
+            }
+            TopologyEvent::AddCluster { nodes } => {
+                if nodes == 0 {
+                    return Err(unplannable("a cluster needs at least one node".into()));
+                }
+                let cluster = self.topo.add_cluster(nodes);
+                self.net.sync(&self.topo);
+                let plan = migrate::plan_add_cluster(
+                    &self.topo,
+                    self.meta.block_map(),
+                    &self.failed,
+                    cluster,
+                );
+                let members = self.topo.nodes_of(cluster).to_vec();
+                if let Err(e) = self.check_conflicts(&plan) {
+                    self.topo.retire_cluster(cluster);
+                    for &n in &members {
+                        self.topo.set_state(n, NodeState::Dead);
+                    }
+                    return Err(e);
+                }
+                Ok((plan, members, Vec::new()))
+            }
+            TopologyEvent::DrainNode { node } => {
+                if node >= self.topo.total_nodes() {
+                    return Err(unplannable(format!("no such node {node}")));
+                }
+                if !self.topo.is_live(node) {
+                    return Err(unplannable(format!("node {node} is already dead")));
+                }
+                if let Some((stripe, block)) = self.inflight_target_conflict(&[node]) {
+                    return Err(MigrationError::Conflicting { stripe, block });
+                }
+                let policy = MigrationPolicy::for_strategy(self.meta.strategy_name());
+                let plan = migrate::plan_drain(
+                    &self.code,
+                    policy,
+                    &self.topo,
+                    self.meta.block_map(),
+                    &self.failed,
+                    node,
+                )?;
+                self.check_conflicts(&plan)?;
+                let prior = vec![(node, self.topo.state(node))];
+                self.topo.set_state(node, NodeState::Draining);
+                Ok((plan, Vec::new(), prior))
+            }
+            TopologyEvent::DecommissionCluster { cluster } => {
+                if cluster >= self.topo.clusters() {
+                    return Err(unplannable(format!("no such cluster {cluster}")));
+                }
+                if self.topo.is_retired(cluster) {
+                    return Err(unplannable(format!("cluster {cluster} is retired")));
+                }
+                let members = self.topo.nodes_of(cluster).to_vec();
+                if let Some((stripe, block)) = self.inflight_target_conflict(&members) {
+                    return Err(MigrationError::Conflicting { stripe, block });
+                }
+                let plan = migrate::plan_decommission(
+                    &self.topo,
+                    self.meta.block_map(),
+                    &self.failed,
+                    cluster,
+                )?;
+                self.check_conflicts(&plan)?;
+                let prior: Vec<(usize, NodeState)> =
+                    members.iter().map(|&n| (n, self.topo.state(n))).collect();
+                for &n in &members {
+                    if self.topo.is_live(n) {
+                        self.topo.set_state(n, NodeState::Draining);
+                    }
+                }
+                Ok((plan, Vec::new(), prior))
+            }
+        }
+    }
+
+    /// Reject a plan that crosses any in-flight claim. Two grains:
+    ///
+    /// * **block** — the plan moves a block another event already claims;
+    /// * **(stripe, target cluster)** — an in-flight move is landing a
+    ///   block of the same stripe in the same cluster the plan targets.
+    ///   The planner's cluster-level safety checks (unit-permutation,
+    ///   policy caps, can-decode) read committed residency only, so an
+    ///   incoming uncommitted block would silently invalidate them; moves
+    ///   *out* of a cluster only make those checks conservative and need
+    ///   no serialization.
+    fn check_conflicts(&self, plan: &MigrationPlan) -> Result<(), MigrationError> {
+        let mut incoming: HashSet<(StripeId, usize)> = HashSet::new();
+        for ev in &self.online.events {
+            for m in &ev.remaining {
+                incoming.insert((m.stripe, m.to_cluster));
+            }
+        }
+        for mv in &plan.moves {
+            if self.meta.block_state(mv.stripe, mv.block) != BlockState::Stable
+                || incoming.contains(&(mv.stripe, mv.to_cluster))
+            {
+                return Err(MigrationError::Conflicting { stripe: mv.stripe, block: mv.block });
+            }
+        }
+        Ok(())
+    }
+
+    /// First in-flight move landing on any of `nodes` (draining a node an
+    /// open event is migrating *onto* must serialize behind that event).
+    fn inflight_target_conflict(&self, nodes: &[usize]) -> Option<(StripeId, usize)> {
+        for ev in &self.online.events {
+            for m in &ev.remaining {
+                if nodes.contains(&m.to_node) {
+                    return Some((m.stripe, m.block));
+                }
+            }
+        }
+        None
+    }
+
+    /// Run up to `max_moves` background block moves, oldest-deadline event
+    /// first, and complete events whose plans drain. Only events whose
+    /// retry deadline is `<= until` are touched, so a caller interleaving
+    /// foreground work can hold back throttled or backed-off events.
+    ///
+    /// Per move, at pump time (not admission time):
+    /// * a dead **destination** re-plans onto a fresh invariant-satisfying
+    ///   target in the same cluster (`dest_replans`);
+    /// * a dead **source** flips the event's dead-source moves onto one
+    ///   batched [`ProxyCtx::repair_node`] rebuild (`source_flips`), each
+    ///   rebuilt block byte-verified before it ships;
+    /// * a move that cannot run now (unrecoverable stripe, no replacement
+    ///   target) re-schedules the event with capped exponential backoff
+    ///   (`retries`) until [`BackoffPolicy::max_attempts`], then parks it
+    ///   as retryable (`parked`; see [`Dss::retry_parked`]) with its
+    ///   claims held.
+    ///
+    /// Move commit discipline mirrors the stop-the-world path: bytes move
+    /// and verify on the virtual clock, the `OnlineMove{done}` record is
+    /// journaled, and only then does the claim commit to the map. Crash
+    /// anywhere → recovery replays exactly the committed moves and
+    /// resumes the rest ([`Dss::resume_online`]).
+    pub fn pump_migrations(
+        &mut self,
+        until: f64,
+        max_moves: usize,
+    ) -> anyhow::Result<Vec<MigrationReport>> {
+        let mut reports = Vec::new();
+        let mut budget = max_moves;
+        while budget > 0 {
+            let Some(idx) = self
+                .online
+                .events
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.parked.is_none() && e.next_retry_at <= until)
+                .min_by(|(_, a), (_, b)| {
+                    a.next_retry_at
+                        .partial_cmp(&b.next_retry_at)
+                        .expect("retry deadlines are finite")
+                        .then(a.id.cmp(&b.id))
+                })
+                .map(|(i, _)| i)
+            else {
+                break;
+            };
+            let t0 = self.clock.max(self.online.events[idx].next_retry_at);
+            if let Some(report) = self.pump_one(idx, t0, &mut budget)? {
+                reports.push(report);
+            }
+        }
+        Ok(reports)
+    }
+
+    /// One scheduling round for event `idx`: retarget dead destinations,
+    /// then run either the head move (live source, one throttled direct
+    /// copy) or the batched rebuild of every dead-source move.
+    fn pump_one(
+        &mut self,
+        idx: usize,
+        t0: f64,
+        budget: &mut usize,
+    ) -> anyhow::Result<Option<MigrationReport>> {
+        if self.online.events[idx].remaining.is_empty() {
+            // resume path: the crash fell between the last move's commit
+            // and the event's commit marker
+            return Ok(Some(self.complete_online(idx)));
+        }
+        if let Err(e) = self.retarget_dead_destinations(idx) {
+            self.reschedule(idx, t0, e);
+            return Ok(None);
+        }
+        let bs = self.cfg.block_size;
+        let head = self.online.events[idx].remaining[0];
+        let dead =
+            |dss: &Dss, n: usize| dss.failed.contains(&n) || !dss.topo.is_live(n);
+        if dead(self, head.from_node) {
+            let batch: Vec<BlockMove> = self.online.events[idx]
+                .remaining
+                .iter()
+                .filter(|m| dead(self, m.from_node))
+                .take(*budget)
+                .copied()
+                .collect();
+            for mv in &batch {
+                if !self.stripe_recoverable(mv.stripe) {
+                    self.reschedule(idx, t0, MigrationError::SourceDown { node: mv.from_node });
+                    return Ok(None);
+                }
+            }
+            let cross0 = self.net.cross_bytes;
+            let reqs: Vec<RepairRequest> = batch
+                .iter()
+                .map(|mv| RepairRequest {
+                    stripe: mv.stripe,
+                    block: mv.block,
+                    erased: self.failed_blocks(mv.stripe),
+                })
+                .collect();
+            let outcomes = {
+                let mut ctx = self.proxy_ctx();
+                ctx.repair_node(t0, &reqs)?
+            };
+            for (mv, oc) in batch.iter().zip(outcomes) {
+                let OpOutcome { ready_at, rebuilt, home } = oc;
+                anyhow::ensure!(
+                    rebuilt.as_slice() == self.meta.block_data(mv.stripe, mv.block).as_slice(),
+                    "online migration rebuild produced corrupt bytes"
+                );
+                crate::gf::pool::recycle(rebuilt);
+                let t = self.net.transfer_class(
+                    ready_at,
+                    Endpoint::Proxy(home),
+                    Endpoint::Node(mv.to_node),
+                    bs,
+                    TrafficClass::Migration,
+                );
+                self.commit_online_move(idx, mv, t, true);
+            }
+            self.online.events[idx].cross_bytes += self.net.cross_bytes - cross0;
+            *budget = budget.saturating_sub(batch.len().max(1));
+        } else {
+            let cross0 = self.net.cross_bytes;
+            let t = self.net.transfer_class(
+                t0,
+                Endpoint::Node(head.from_node),
+                Endpoint::Node(head.to_node),
+                bs,
+                TrafficClass::Migration,
+            );
+            self.commit_online_move(idx, &head, t, false);
+            self.online.events[idx].cross_bytes += self.net.cross_bytes - cross0;
+            *budget -= 1;
+        }
+        if self.online.events[idx].remaining.is_empty() {
+            return Ok(Some(self.complete_online(idx)));
+        }
+        Ok(None)
+    }
+
+    /// Re-point every pending move of event `idx` whose destination died
+    /// onto a fresh target in the same cluster (same-cluster keeps every
+    /// cluster-level invariant the planner proved).
+    fn retarget_dead_destinations(&mut self, idx: usize) -> Result<(), MigrationError> {
+        let stale: Vec<(usize, BlockMove)> = self.online.events[idx]
+            .remaining
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| self.failed.contains(&m.to_node) || !self.topo.is_live(m.to_node))
+            .map(|(i, m)| (i, *m))
+            .collect();
+        for (i, mv) in stale {
+            let Some(t) = self.replan_target(mv.stripe, mv.to_cluster) else {
+                return Err(MigrationError::Unplannable {
+                    reason: format!(
+                        "no replacement target in cluster {} for stripe {} block {} after \
+                         destination {} died",
+                        mv.to_cluster, mv.stripe, mv.block, mv.to_node
+                    ),
+                });
+            };
+            self.meta.retarget_move(mv.stripe, mv.block, mv.to_cluster, t);
+            self.online.reserved.remove(&(mv.stripe, mv.to_node));
+            self.online.reserved.insert((mv.stripe, t));
+            self.online.events[idx].remaining[i].to_node = t;
+            self.online.stats.dest_replans += 1;
+        }
+        Ok(())
+    }
+
+    /// Least-loaded live target in `cluster` that hosts no block of
+    /// `stripe` and no in-flight reservation for it.
+    fn replan_target(&self, stripe: StripeId, cluster: usize) -> Option<usize> {
+        let map = self.meta.block_map();
+        let occupied: HashSet<usize> = map.placement(stripe).node_of.iter().copied().collect();
+        self.topo
+            .migratable_nodes_of(cluster)
+            .into_iter()
+            .filter(|n| {
+                !self.failed.contains(n)
+                    && !occupied.contains(n)
+                    && !self.online.reserved.contains(&(stripe, *n))
+            })
+            .min_by_key(|&n| (map.node_load(n), n))
+    }
+
+    /// Commit one executed move: journal the `done` record, re-point the
+    /// claim in the map, release the reservation, advance the clock.
+    fn commit_online_move(&mut self, idx: usize, mv: &BlockMove, done_at: f64, rebuilt: bool) {
+        let id = self.online.events[idx].id;
+        if let Some(j) = self.journal.as_mut() {
+            j.append_op_part(&[WalRecord::OnlineMove {
+                event_id: id,
+                done: true,
+                stripe: mv.stripe as u32,
+                block: mv.block as u32,
+                from_node: mv.from_node as u32,
+                to_cluster: mv.to_cluster as u32,
+                to_node: mv.to_node as u32,
+            }])
+            .expect("WAL append failed — cannot keep durability promise");
+        }
+        self.meta.commit_move(mv.stripe, mv.block);
+        self.online.reserved.remove(&(mv.stripe, mv.to_node));
+        let ev = &mut self.online.events[idx];
+        let pos = ev
+            .remaining
+            .iter()
+            .position(|m| m.stripe == mv.stripe && m.block == mv.block)
+            .expect("committed move was pending");
+        ev.remaining.remove(pos);
+        ev.done.push(*mv);
+        ev.attempts = 0;
+        if rebuilt {
+            ev.repaired_moves += 1;
+            self.online.stats.source_flips += 1;
+        }
+        self.online.stats.moves_committed += 1;
+        self.clock = self.clock.max(done_at);
+    }
+
+    /// Finish a drained event: journal `CommitOnline` (one committed op),
+    /// apply the completion topology mutation, report.
+    fn complete_online(&mut self, idx: usize) -> MigrationReport {
+        let ev = self.online.events.remove(idx);
+        if let Some(j) = self.journal.as_mut() {
+            j.commit_op(&[WalRecord::CommitOnline { event_id: ev.id }])
+                .expect("WAL append failed — cannot keep durability promise");
+        }
+        match ev.event {
+            TopologyEvent::AddNode { .. } | TopologyEvent::AddCluster { .. } => {
+                for &n in &ev.admitted {
+                    self.topo.set_state(n, NodeState::Active);
+                }
+            }
+            TopologyEvent::DrainNode { node } => {
+                self.topo.set_state(node, NodeState::Dead);
+                self.failed.remove(&node); // dead ≠ failed: nothing left to repair
+            }
+            TopologyEvent::DecommissionCluster { cluster } => {
+                self.topo.retire_cluster(cluster);
+                for n in self.topo.nodes_of(cluster).to_vec() {
+                    self.topo.set_state(n, NodeState::Dead);
+                    self.failed.remove(&n);
+                }
+            }
+        }
+        self.online.stats.completed += 1;
+        let report = MigrationReport {
+            event: ev.event,
+            moves: ev.done.len(),
+            repaired_moves: ev.repaired_moves,
+            bytes_moved: ev.done.len() * self.cfg.block_size,
+            cross_bytes: ev.cross_bytes,
+            seconds: self.clock - ev.t_admit,
+            wall_ms: 0.0,
+        };
+        self.maybe_snapshot();
+        report
+    }
+
+    /// Record a failed scheduling round: capped exponential backoff, then
+    /// park the event as retryable with its claims held.
+    fn reschedule(&mut self, idx: usize, t0: f64, err: MigrationError) {
+        let o = &mut self.online;
+        let ev = &mut o.events[idx];
+        ev.attempts += 1;
+        o.stats.retries += 1;
+        if ev.attempts >= o.backoff.max_attempts {
+            ev.parked = Some(err);
+            o.stats.parked += 1;
+        } else {
+            ev.next_retry_at = t0 + o.backoff.delay_ms(ev.attempts - 1) / 1e3;
+        }
+    }
+
+    /// Re-install crash-interrupted online events from recovery
+    /// ([`Recovered::pending_online`]): re-claim each remaining move and
+    /// queue the event for [`Dss::pump_migrations`]. The admission
+    /// mutation and all committed moves are already in the restored state.
+    pub fn resume_online(&mut self, pending: &[PendingOnline]) {
+        for p in pending {
+            for mv in &p.remaining {
+                let claimed = self.meta.begin_move(mv.stripe, mv.block, mv.to_cluster, mv.to_node);
+                assert!(claimed, "recovered claim must be re-installable");
+                self.online.reserved.insert((mv.stripe, mv.to_node));
+            }
+            self.online.events.push(OnlineEvent {
+                id: p.event_id,
+                event: p.event,
+                admitted: p.admitted.clone(),
+                prior: p.prior.clone(),
+                remaining: p.remaining.clone(),
+                done: Vec::new(),
+                attempts: 0,
+                next_retry_at: self.clock,
+                parked: None,
+                t_admit: self.clock,
+                repaired_moves: 0,
+                cross_bytes: 0,
+            });
+            self.online.next_id = self.online.next_id.max(p.event_id + 1);
+            self.online.stats.resumed += 1;
+        }
+    }
+
+    /// Un-park every parked event (operator retry after fixing capacity);
+    /// returns how many re-entered the queue.
+    pub fn retry_parked(&mut self) -> usize {
+        let clock = self.clock;
+        let mut n = 0;
+        for ev in &mut self.online.events {
+            if ev.parked.take().is_some() {
+                ev.attempts = 0;
+                ev.next_retry_at = clock;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Cancel an in-flight online event: release its claims, roll back
+    /// its admission mutation, journal `AbortOnline` (one committed op).
+    /// Moves already committed stay — each was individually
+    /// invariant-checked — so a scale-out that has landed blocks on its
+    /// new node(s) refuses to cancel (the blocks would strand on a node
+    /// about to die).
+    pub fn cancel_online(&mut self, event_id: u32) -> Result<(), MigrationError> {
+        let Some(idx) = self.online.events.iter().position(|e| e.id == event_id) else {
+            return Err(MigrationError::Unplannable {
+                reason: format!("no in-flight online event {event_id}"),
+            });
+        };
+        let scale_out = matches!(
+            self.online.events[idx].event,
+            TopologyEvent::AddNode { .. } | TopologyEvent::AddCluster { .. }
+        );
+        if scale_out && !self.online.events[idx].done.is_empty() {
+            return Err(MigrationError::Unplannable {
+                reason: format!(
+                    "cannot cancel event {event_id}: blocks already landed on its new node(s)"
+                ),
+            });
+        }
+        if let Some(j) = self.journal.as_mut() {
+            j.commit_op(&[WalRecord::AbortOnline { event_id }])
+                .expect("WAL append failed — cannot keep durability promise");
+        }
+        let ev = self.online.events.remove(idx);
+        for mv in &ev.remaining {
+            self.meta.abort_move(mv.stripe, mv.block);
+            self.online.reserved.remove(&(mv.stripe, mv.to_node));
+        }
+        match ev.event {
+            TopologyEvent::AddNode { .. } => {
+                for &n in &ev.admitted {
+                    self.topo.set_state(n, NodeState::Dead);
+                }
+            }
+            TopologyEvent::AddCluster { .. } => {
+                if let Some(&n0) = ev.admitted.first() {
+                    let c = self.topo.cluster_of_node(n0);
+                    self.topo.retire_cluster(c);
+                }
+                for &n in &ev.admitted {
+                    self.topo.set_state(n, NodeState::Dead);
+                }
+            }
+            TopologyEvent::DrainNode { .. } | TopologyEvent::DecommissionCluster { .. } => {
+                for &(n, s) in &ev.prior {
+                    self.topo.set_state(n, s);
+                }
+            }
+        }
+        self.maybe_snapshot();
+        Ok(())
+    }
+
+    /// Background-migration counters (the `PlanCache::stats()` idiom —
+    /// print with [`MigrationStats::render`]).
+    pub fn migration_stats(&self) -> MigrationStats {
+        self.online.stats
+    }
+
+    /// Open (admitted, uncommitted) online events.
+    pub fn online_in_flight(&self) -> usize {
+        self.online.events.len()
+    }
+
+    /// `(event id, error)` for every parked event.
+    pub fn parked_events(&self) -> Vec<(u32, MigrationError)> {
+        self.online
+            .events
+            .iter()
+            .filter_map(|e| e.parked.clone().map(|err| (e.id, err)))
+            .collect()
+    }
+
+    /// Retry discipline for failed background moves
+    /// (`--backoff-base-ms` / `--backoff-cap-ms` / `--max-attempts`).
+    pub fn set_migration_backoff(&mut self, policy: BackoffPolicy) {
+        self.online.backoff = policy;
+    }
+
+    /// Cap background-move bandwidth with a token bucket shared across
+    /// all in-flight events (`--migrate-rate-mbps` / `--migrate-burst`).
+    pub fn set_migration_throttle(&mut self, rate_bps: f64, burst: f64) {
+        self.net.set_migration_throttle(rate_bps, burst);
+    }
 }
 
 /// Virtual-clock outcome of a migration's transfer/verify phase, held
@@ -977,6 +1669,43 @@ struct MigrationExec {
     done: f64,
     cross0: u64,
     repaired_moves: usize,
+}
+
+/// The background-migration queue: every in-flight online event plus the
+/// cross-event conflict state and counters.
+#[derive(Default)]
+struct OnlineMigrations {
+    events: Vec<OnlineEvent>,
+    next_id: u32,
+    /// `(stripe, target node)` slots claimed by in-flight moves — the
+    /// conflict grain (alongside per-block claims) that keeps two plans
+    /// from landing two blocks of one stripe on one node.
+    reserved: HashSet<(StripeId, usize)>,
+    stats: MigrationStats,
+    backoff: BackoffPolicy,
+}
+
+/// One admitted, uncommitted online topology event.
+struct OnlineEvent {
+    id: u32,
+    event: TopologyEvent,
+    /// Node ids the admission mutation allocated (AddNode/AddCluster).
+    admitted: Vec<usize>,
+    /// Pre-admission node states (drain/decommission cancel rollback).
+    prior: Vec<(usize, NodeState)>,
+    /// Planned moves not yet committed, in plan order.
+    remaining: Vec<BlockMove>,
+    /// Committed moves (targets reflect any dest-death re-plan).
+    done: Vec<BlockMove>,
+    /// Consecutive failed scheduling rounds (reset on any progress).
+    attempts: usize,
+    /// Virtual instant before which the scheduler will not retry.
+    next_retry_at: f64,
+    /// Set when attempts exhausted; cleared by [`Dss::retry_parked`].
+    parked: Option<MigrationError>,
+    t_admit: f64,
+    repaired_moves: usize,
+    cross_bytes: u64,
 }
 
 /// Metrics of one executed topology event.

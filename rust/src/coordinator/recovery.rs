@@ -22,9 +22,10 @@
 
 use crate::coordinator::block_map::BlockMap;
 use crate::coordinator::manifest::{CoordinatorState, ManifestLoadError, ManifestStore};
+use crate::coordinator::migrate::BlockMove;
 use crate::coordinator::wal::{list_segments, scan_segment, ScanEnd, WalRecord};
 use crate::placement::{NodeState, Placement, Topology, TopologyEvent};
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::fmt;
 use std::path::{Path, PathBuf};
 
@@ -94,11 +95,52 @@ pub struct Recovered {
     /// A topology event was mid-flight (logged but uncommitted) at the
     /// crash; its migration must be re-planned from `state`.
     pub pending_event: Option<TopologyEvent>,
+    /// Online (background) migrations open at the crash: admission and
+    /// any completed moves are already folded into `state`; `remaining`
+    /// is the recorded plan's uncommitted tail, resumable via
+    /// [`crate::coordinator::Dss::resume_online`]. Sorted by `event_id`.
+    pub pending_online: Vec<PendingOnline>,
     /// The final segment ended in an incomplete record (crash mid-append).
     pub torn_tail: bool,
     /// The current manifest generation was unreadable and the previous
     /// one was used.
     pub used_fallback: bool,
+}
+
+/// One online migration event that was open (admitted, not committed) at
+/// the crash. Its admission topology mutation and every `done` move are
+/// already part of the recovered state; `remaining` is the logged plan's
+/// tail in plan order — resuming executes exactly these moves, which is
+/// what makes a crash-interrupted wave digest-identical to a never-crashed
+/// oracle instead of merely re-plannable.
+#[derive(Debug, Clone)]
+pub struct PendingOnline {
+    pub event_id: u32,
+    pub event: TopologyEvent,
+    /// Node ids the admission mutation allocated (AddNode/AddCluster) —
+    /// resume needs them to apply the completion mutation.
+    pub admitted: Vec<usize>,
+    /// Pre-admission node states (drain/decommission cancel rollback).
+    pub prior: Vec<(usize, NodeState)>,
+    pub remaining: Vec<BlockMove>,
+}
+
+/// Replay-side staging of one open online event. The admission topology
+/// mutation is applied *lazily* — only once all `declared` planned-move
+/// records have been replayed — so a crash that tears the admission
+/// append (BeginOnline plus a prefix of the plan) recovers as if the
+/// event was never submitted instead of resuming a truncated plan.
+struct OnlineStage {
+    event: TopologyEvent,
+    /// Plan length the `BeginOnline` record declared.
+    declared: usize,
+    /// `Some((admitted, prior))` once the full plan has been seen and the
+    /// admission mutation applied: node ids the mutation allocated
+    /// (AddNode/AddCluster) and pre-admission node states
+    /// (drain/decommission abort rollback).
+    applied: Option<(Vec<usize>, Vec<(usize, NodeState)>)>,
+    planned: Vec<BlockMove>,
+    done: HashSet<(usize, usize)>,
 }
 
 /// Mutable replay state: the same structures the live coordinator owns,
@@ -230,8 +272,123 @@ impl Replayer {
                 self.map.move_block(stripe, block, to_cluster, to_node);
                 Ok(())
             }
-            WalRecord::BeginEvent { .. } | WalRecord::CommitEvent => {
+            WalRecord::BeginEvent { .. }
+            | WalRecord::CommitEvent
+            | WalRecord::BeginOnline { .. }
+            | WalRecord::OnlineMove { .. }
+            | WalRecord::CommitOnline { .. }
+            | WalRecord::AbortOnline { .. } => {
                 Err("group marker cannot be applied as a mutation".into())
+            }
+        }
+    }
+
+    /// Re-apply the admission mutation of an online event (what the live
+    /// coordinator did before logging `BeginOnline`). Returns the node ids
+    /// the mutation allocated plus the prior states it overwrote, so a
+    /// later `AbortOnline` can roll it back exactly.
+    fn admit_online(
+        &mut self,
+        ev: TopologyEvent,
+    ) -> Result<(Vec<usize>, Vec<(usize, NodeState)>), String> {
+        match ev {
+            TopologyEvent::AddNode { cluster } => {
+                if cluster >= self.topo.clusters() {
+                    return Err(format!("online add-node to unknown cluster {cluster}"));
+                }
+                if self.topo.is_retired(cluster) {
+                    return Err(format!("online add-node to retired cluster {cluster}"));
+                }
+                let n = self.topo.add_node(cluster);
+                Ok((vec![n], Vec::new()))
+            }
+            TopologyEvent::AddCluster { nodes } => {
+                if nodes == 0 {
+                    return Err("online add-cluster with zero nodes".into());
+                }
+                let c = self.topo.add_cluster(nodes);
+                Ok((self.topo.nodes_of(c).to_vec(), Vec::new()))
+            }
+            TopologyEvent::DrainNode { node } => {
+                if node >= self.topo.total_nodes() {
+                    return Err(format!("online drain of unknown node {node}"));
+                }
+                let prior = vec![(node, self.topo.state(node))];
+                self.topo.set_state(node, NodeState::Draining);
+                Ok((Vec::new(), prior))
+            }
+            TopologyEvent::DecommissionCluster { cluster } => {
+                if cluster >= self.topo.clusters() {
+                    return Err(format!("online decommission of unknown cluster {cluster}"));
+                }
+                if self.topo.is_retired(cluster) {
+                    return Err(format!("online decommission of retired cluster {cluster}"));
+                }
+                let members = self.topo.nodes_of(cluster).to_vec();
+                let prior: Vec<_> =
+                    members.iter().map(|&n| (n, self.topo.state(n))).collect();
+                for &n in &members {
+                    if self.topo.is_live(n) {
+                        self.topo.set_state(n, NodeState::Draining);
+                    }
+                }
+                Ok((Vec::new(), prior))
+            }
+        }
+    }
+
+    /// Apply the completion mutation of an online event (the counterpart
+    /// of `CommitOnline`): joiners go active, drained nodes die, retired
+    /// clusters retire.
+    fn commit_online(&mut self, ev: TopologyEvent, admitted: &[usize]) {
+        match ev {
+            TopologyEvent::AddNode { .. } | TopologyEvent::AddCluster { .. } => {
+                for &n in admitted {
+                    self.topo.set_state(n, NodeState::Active);
+                }
+            }
+            TopologyEvent::DrainNode { node } => {
+                self.topo.set_state(node, NodeState::Dead);
+                self.failed.remove(&node);
+            }
+            TopologyEvent::DecommissionCluster { cluster } => {
+                self.topo.retire_cluster(cluster);
+                for n in self.topo.nodes_of(cluster).to_vec() {
+                    self.topo.set_state(n, NodeState::Dead);
+                    self.failed.remove(&n);
+                }
+            }
+        }
+    }
+
+    /// Roll back the admission mutation of a cancelled online event. Any
+    /// `done` moves stay where they landed (each was invariant-checked),
+    /// so only the topology bookkeeping unwinds.
+    fn abort_online(
+        &mut self,
+        ev: TopologyEvent,
+        admitted: &[usize],
+        prior: &[(usize, NodeState)],
+    ) {
+        match ev {
+            TopologyEvent::AddNode { .. } => {
+                for &n in admitted {
+                    self.topo.set_state(n, NodeState::Dead);
+                }
+            }
+            TopologyEvent::AddCluster { .. } => {
+                if let Some(&n0) = admitted.first() {
+                    let c = self.topo.cluster_of_node(n0);
+                    self.topo.retire_cluster(c);
+                }
+                for &n in admitted {
+                    self.topo.set_state(n, NodeState::Dead);
+                }
+            }
+            TopologyEvent::DrainNode { .. } | TopologyEvent::DecommissionCluster { .. } => {
+                for &(n, s) in prior {
+                    self.topo.set_state(n, s);
+                }
             }
         }
     }
@@ -285,6 +442,7 @@ pub fn recover(dir: &Path) -> Result<Recovered, RecoveryError> {
     let mut replayed = 0usize;
     let mut torn_tail = false;
     let mut staged: Option<(TopologyEvent, Vec<WalRecord>)> = None;
+    let mut online: BTreeMap<u32, OnlineStage> = BTreeMap::new();
 
     for (si, (_, path)) in segments.iter().enumerate().skip(start) {
         let bytes = std::fs::read(path)?;
@@ -321,6 +479,119 @@ pub fn recover(dir: &Path) -> Result<Recovered, RecoveryError> {
                     for rec in &group {
                         replayer.apply(rec).map_err(&unreplayable)?;
                     }
+                    committed_ops += 1;
+                }
+                // Online (background) migration records interleave with
+                // standalone ops but never sit inside a stop-the-world
+                // event group — the live coordinator forbids both modes
+                // at once for the same wave.
+                WalRecord::BeginOnline { event_id, event, moves } => {
+                    if staged.is_some() {
+                        return Err(unreplayable("BeginOnline inside an event group".into()));
+                    }
+                    if online.contains_key(&event_id) {
+                        return Err(unreplayable(format!(
+                            "duplicate online event id {event_id}"
+                        )));
+                    }
+                    let ev = event
+                        .to_event()
+                        .ok_or_else(|| unreplayable(format!("unknown event tag {}", event.tag)))?;
+                    // Admission applies only once the full declared plan
+                    // has been replayed (immediately for an empty plan).
+                    let applied = if moves == 0 {
+                        Some(replayer.admit_online(ev).map_err(&unreplayable)?)
+                    } else {
+                        None
+                    };
+                    online.insert(
+                        event_id,
+                        OnlineStage {
+                            event: ev,
+                            declared: moves as usize,
+                            applied,
+                            planned: Vec::new(),
+                            done: HashSet::new(),
+                        },
+                    );
+                }
+                WalRecord::OnlineMove { event_id, done, stripe, block, from_node, to_cluster, to_node } => {
+                    let Some(stage) = online.get_mut(&event_id) else {
+                        return Err(unreplayable(format!(
+                            "OnlineMove for unknown event {event_id}"
+                        )));
+                    };
+                    if done {
+                        if stage.applied.is_none() {
+                            return Err(unreplayable(format!(
+                                "done move for event {event_id} before its plan completed"
+                            )));
+                        }
+                        // A committed move was byte-verified live; fold it
+                        // in now with full MoveBlock validation. The
+                        // target may differ from the planned twin — that
+                        // is the durable trace of a destination re-plan.
+                        stage.done.insert((stripe as usize, block as usize));
+                        replayer
+                            .apply(&WalRecord::MoveBlock { stripe, block, to_cluster, to_node })
+                            .map_err(&unreplayable)?;
+                    } else {
+                        if stage.planned.len() >= stage.declared {
+                            return Err(unreplayable(format!(
+                                "event {event_id} has more planned moves than the {} declared",
+                                stage.declared
+                            )));
+                        }
+                        stage.planned.push(BlockMove {
+                            stripe: stripe as usize,
+                            block: block as usize,
+                            from_node: from_node as usize,
+                            to_cluster: to_cluster as usize,
+                            to_node: to_node as usize,
+                        });
+                        if stage.planned.len() == stage.declared {
+                            let ev = stage.event;
+                            stage.applied =
+                                Some(replayer.admit_online(ev).map_err(&unreplayable)?);
+                        }
+                    }
+                }
+                WalRecord::CommitOnline { event_id } => {
+                    let Some(stage) = online.remove(&event_id) else {
+                        return Err(unreplayable(format!(
+                            "CommitOnline for unknown event {event_id}"
+                        )));
+                    };
+                    let Some((admitted, _)) = stage.applied else {
+                        return Err(unreplayable(format!(
+                            "CommitOnline {event_id} before its plan completed"
+                        )));
+                    };
+                    if let Some(mv) = stage
+                        .planned
+                        .iter()
+                        .find(|m| !stage.done.contains(&(m.stripe, m.block)))
+                    {
+                        return Err(unreplayable(format!(
+                            "CommitOnline {event_id} with unfinished move of stripe {} block {}",
+                            mv.stripe, mv.block
+                        )));
+                    }
+                    replayer.commit_online(stage.event, &admitted);
+                    committed_ops += 1;
+                }
+                WalRecord::AbortOnline { event_id } => {
+                    let Some(stage) = online.remove(&event_id) else {
+                        return Err(unreplayable(format!(
+                            "AbortOnline for unknown event {event_id}"
+                        )));
+                    };
+                    let Some((admitted, prior)) = stage.applied else {
+                        return Err(unreplayable(format!(
+                            "AbortOnline {event_id} before its plan completed"
+                        )));
+                    };
+                    replayer.abort_online(stage.event, &admitted, &prior);
                     committed_ops += 1;
                 }
                 rec @ (WalRecord::TopoAddNode { .. }
@@ -376,6 +647,30 @@ pub fn recover(dir: &Path) -> Result<Recovered, RecoveryError> {
     // never committed; surface it for re-planning.
     let pending_event = staged.map(|(ev, _)| ev);
 
+    // Online events still open at end-of-log resume from the logged
+    // plan's uncommitted tail — in plan order, so the resumed run is
+    // move-for-move identical to a never-crashed one. A stage whose plan
+    // never completed (torn admission append) was never applied and is
+    // dropped: the crash predates the submit's durability point, so the
+    // driver simply re-submits the event.
+    let pending_online: Vec<PendingOnline> = online
+        .into_iter()
+        .filter_map(|(event_id, stage)| {
+            let OnlineStage { event, declared: _, applied, planned, done } = stage;
+            let (admitted, prior) = applied?;
+            Some(PendingOnline {
+                event_id,
+                event,
+                admitted,
+                prior,
+                remaining: planned
+                    .into_iter()
+                    .filter(|m| !done.contains(&(m.stripe, m.block)))
+                    .collect(),
+            })
+        })
+        .collect();
+
     let state = CoordinatorState::capture(
         &manifest.state.code_name,
         &manifest.state.strategy,
@@ -393,6 +688,7 @@ pub fn recover(dir: &Path) -> Result<Recovered, RecoveryError> {
         last_seq: expected_seq - 1,
         replayed_records: replayed,
         pending_event,
+        pending_online,
         torn_tail,
         used_fallback: loaded.used_fallback,
     })

@@ -66,6 +66,38 @@ pub enum WalRecord {
     MoveBlock { stripe: u32, block: u32, to_cluster: u32, to_node: u32 },
     /// Group commit marker.
     CommitEvent,
+    /// An *online* (background) topology event was admitted: the event
+    /// itself rides in the record so recovery can re-apply the admission
+    /// topology mutation deterministically. Unlike `BeginEvent` groups,
+    /// online records are spread across many appends — planned moves land
+    /// at admission, each completed move as it commits, and
+    /// `CommitOnline` when the event drains. `event_id` correlates them.
+    /// `moves` declares the plan length: replay applies the admission
+    /// mutation only after seeing that many planned-move records, so a
+    /// crash that tears the admission append recovers as if the event
+    /// was never submitted (no half-planned claims, no orphan node ids).
+    BeginOnline { event_id: u32, event: WalEvent, moves: u32 },
+    /// One move of an online event. `done = false` records the *plan* at
+    /// admission (replayed only as a pending claim); `done = true` is a
+    /// committed, byte-verified move applied on replay. The `(to_cluster,
+    /// to_node)` of a done record may differ from its planned twin — that
+    /// is the durable trace of a destination-death re-plan.
+    OnlineMove {
+        event_id: u32,
+        done: bool,
+        stripe: u32,
+        block: u32,
+        from_node: u32,
+        to_cluster: u32,
+        to_node: u32,
+    },
+    /// Online event fully drained: replay applies its completion topology
+    /// mutation (drain → Dead, decommission → retire) and counts one
+    /// committed operation.
+    CommitOnline { event_id: u32 },
+    /// Online event unwound before completion: replay rolls back its
+    /// admission mutation and forgets its claims.
+    AbortOnline { event_id: u32 },
 }
 
 /// Encodable mirror of [`TopologyEvent`] for `BeginEvent` records.
@@ -111,6 +143,10 @@ impl WalRecord {
             WalRecord::TopoRetire { .. } => 7,
             WalRecord::MoveBlock { .. } => 8,
             WalRecord::CommitEvent => 9,
+            WalRecord::BeginOnline { .. } => 10,
+            WalRecord::OnlineMove { .. } => 11,
+            WalRecord::CommitOnline { .. } => 12,
+            WalRecord::AbortOnline { .. } => 13,
         }
     }
 
@@ -147,6 +183,23 @@ impl WalRecord {
                 put_u32(buf, *to_node);
             }
             WalRecord::CommitEvent => {}
+            WalRecord::BeginOnline { event_id, event, moves } => {
+                put_u32(buf, *event_id);
+                buf.push(event.tag);
+                put_u32(buf, event.arg);
+                put_u32(buf, *moves);
+            }
+            WalRecord::OnlineMove { event_id, done, stripe, block, from_node, to_cluster, to_node } => {
+                put_u32(buf, *event_id);
+                buf.push(*done as u8);
+                put_u32(buf, *stripe);
+                put_u32(buf, *block);
+                put_u32(buf, *from_node);
+                put_u32(buf, *to_cluster);
+                put_u32(buf, *to_node);
+            }
+            WalRecord::CommitOnline { event_id } => put_u32(buf, *event_id),
+            WalRecord::AbortOnline { event_id } => put_u32(buf, *event_id),
         }
     }
 
@@ -180,6 +233,22 @@ impl WalRecord {
                 to_node: cur.u32()?,
             },
             9 => WalRecord::CommitEvent,
+            10 => WalRecord::BeginOnline {
+                event_id: cur.u32()?,
+                event: WalEvent { tag: cur.u8()?, arg: cur.u32()? },
+                moves: cur.u32()?,
+            },
+            11 => WalRecord::OnlineMove {
+                event_id: cur.u32()?,
+                done: cur.u8()? != 0,
+                stripe: cur.u32()?,
+                block: cur.u32()?,
+                from_node: cur.u32()?,
+                to_cluster: cur.u32()?,
+                to_node: cur.u32()?,
+            },
+            12 => WalRecord::CommitOnline { event_id: cur.u32()? },
+            13 => WalRecord::AbortOnline { event_id: cur.u32()? },
             k => return Err(format!("unknown record kind {k}")),
         };
         cur.done()?;
@@ -452,13 +521,22 @@ impl Journal {
 
     /// Commit one logical operation: append its records as one group.
     pub fn commit_op(&mut self, records: &[WalRecord]) -> std::io::Result<()> {
+        self.append_op_part(records)?;
+        self.committed_ops += 1;
+        self.ops_since_snapshot += 1;
+        Ok(())
+    }
+
+    /// Append records durably **without** counting a committed operation —
+    /// the incremental-progress side of an online migration (admission,
+    /// per-move completions). The operation only counts when its
+    /// `CommitOnline` lands via [`Journal::commit_op`].
+    pub fn append_op_part(&mut self, records: &[WalRecord]) -> std::io::Result<()> {
         let b0 = self.writer.bytes_written;
         let r0 = self.writer.records_written;
         self.last_seq = self.writer.append_group(records)?;
         self.total_bytes += self.writer.bytes_written - b0;
         self.total_records += self.writer.records_written - r0;
-        self.committed_ops += 1;
-        self.ops_since_snapshot += 1;
         Ok(())
     }
 
@@ -513,6 +591,31 @@ mod tests {
             WalRecord::TopoRetire { cluster: 0 },
             WalRecord::MoveBlock { stripe: 2, block: 5, to_cluster: 1, to_node: 9 },
             WalRecord::CommitEvent,
+            WalRecord::BeginOnline {
+                event_id: 3,
+                event: WalEvent::from_event(TopologyEvent::AddNode { cluster: 2 }),
+                moves: 1,
+            },
+            WalRecord::OnlineMove {
+                event_id: 3,
+                done: false,
+                stripe: 1,
+                block: 4,
+                from_node: 6,
+                to_cluster: 2,
+                to_node: 11,
+            },
+            WalRecord::OnlineMove {
+                event_id: 3,
+                done: true,
+                stripe: 1,
+                block: 4,
+                from_node: 6,
+                to_cluster: 2,
+                to_node: 12,
+            },
+            WalRecord::CommitOnline { event_id: 3 },
+            WalRecord::AbortOnline { event_id: 4 },
         ]
     }
 
@@ -549,7 +652,7 @@ mod tests {
         }
         let (full, end) = scan_segment(&bytes);
         assert_eq!(end, ScanEnd::Clean);
-        assert_eq!(full.len(), 9);
+        assert_eq!(full.len(), 14);
         // every strict prefix is either clean at a boundary or torn
         for cut in 0..bytes.len() {
             let (recs, end) = scan_segment(&bytes[..cut]);
@@ -591,18 +694,18 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let mut w = WalWriter::open(&dir, 1, 2).unwrap();
         let last = w.append_group(&sample_records()).unwrap();
-        assert_eq!(last, 9);
+        assert_eq!(last, 14);
         let last = w
             .append_group(&[WalRecord::SetFailed { node: 1, down: false }])
             .unwrap();
-        assert_eq!(last, 10);
+        assert_eq!(last, 15);
         w.sync().unwrap();
         let segs = list_segments(&dir).unwrap();
         assert_eq!(segs.len(), 1);
         assert_eq!(segs[0].0, 1);
         let (recs, end) = scan_segment(&fs::read(&segs[0].1).unwrap());
         assert_eq!(end, ScanEnd::Clean);
-        assert_eq!(recs.len(), 10);
+        assert_eq!(recs.len(), 15);
         assert!(recs.windows(2).all(|pair| pair[1].seq == pair[0].seq + 1));
         let _ = fs::remove_dir_all(&dir);
     }

@@ -15,13 +15,14 @@ use crate::codes::spec::{CodeFamily, Scheme};
 use crate::coordinator::manifest::{MANIFEST_CURRENT, MANIFEST_PREV};
 use crate::coordinator::wal::{list_segments, scan_segment, ScanEnd};
 use crate::coordinator::{
-    recover, Dss, DssConfig, DurabilityOptions, ManifestStore, MigrationReport, StripeId,
+    recover, BackoffPolicy, BlockState, Dss, DssConfig, DurabilityOptions, ManifestStore,
+    MigrationError, MigrationReport, MigrationStats, StripeId,
 };
 use crate::placement::{EcWide, PlacementStrategy, Topology, TopologyEvent, UniLrcPlace};
 use crate::prng::Prng;
 use crate::runtime::{CodingEngine, NativeCoder, PjrtCoder};
 use crate::sim::faults::{digest_mix, DownState, FaultConfig, FaultKind, FaultTrace};
-use crate::sim::NetConfig;
+use crate::sim::{Endpoint, NetConfig};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -1481,6 +1482,618 @@ fn exp9_family(fam: CodeFamily, cfg: &ExpConfig, dcfg: &DurabilitySimConfig) -> 
     })
 }
 
+// --------------------------------------------------------------------------
+// Experiment 10 — online migration under load
+// --------------------------------------------------------------------------
+
+/// Experiment 10 scenario knobs (CLI `--migrate-rate-mbps` etc., config
+/// `[migration]`).
+#[derive(Debug, Clone)]
+pub struct MigrationSimConfig {
+    /// Background-move token-bucket rate in megabits/s
+    /// (`--migrate-rate-mbps`).
+    pub rate_mbps: f64,
+    /// Token-bucket burst in KiB (`--migrate-burst`).
+    pub burst_kb: usize,
+    /// First retry delay in virtual milliseconds (`--backoff-base-ms`).
+    pub backoff_base_ms: f64,
+    /// Ceiling on any single retry delay (`--backoff-cap-ms`).
+    pub backoff_cap_ms: f64,
+    /// Attempts before an event parks as retryable (`--max-attempts`).
+    pub max_attempts: usize,
+    /// Online AddNode events in the crash-sweep scenario.
+    pub add_nodes: usize,
+    /// Online DrainNode events.
+    pub drain_nodes: usize,
+    /// Online AddCluster events.
+    pub add_clusters: usize,
+    /// Cap on crash positions tested per family (exp9 discipline: odd
+    /// stride, last position always included, tested/total reported).
+    pub crash_cap: usize,
+    /// Foreground degraded-read probes per throttle rate in the
+    /// interference curve.
+    pub fg_reads: usize,
+}
+
+impl Default for MigrationSimConfig {
+    fn default() -> Self {
+        MigrationSimConfig {
+            rate_mbps: 400.0,
+            burst_kb: 512,
+            backoff_base_ms: 10.0,
+            backoff_cap_ms: 1_000.0,
+            max_attempts: 5,
+            add_nodes: 1,
+            drain_nodes: 1,
+            add_clusters: 1,
+            crash_cap: 48,
+            fg_reads: 24,
+        }
+    }
+}
+
+impl MigrationSimConfig {
+    /// `(rate_bps, burst_bytes)` for [`Dss::set_migration_throttle`].
+    pub fn bucket(&self) -> (f64, f64) {
+        (self.rate_mbps * 1e6 / 8.0, (self.burst_kb * 1024) as f64)
+    }
+
+    pub fn backoff(&self) -> BackoffPolicy {
+        BackoffPolicy {
+            base_ms: self.backoff_base_ms,
+            cap_ms: self.backoff_cap_ms,
+            max_attempts: self.max_attempts,
+        }
+    }
+}
+
+/// Per-family summary of one online-migration-under-load run.
+#[derive(Debug, Clone)]
+pub struct Exp10Result {
+    pub family: CodeFamily,
+    // ---- phase A: fault trace through an active migration window
+    /// Scheduler counters after the window drained (submitted, completed,
+    /// conflicts, source-flips, dest-replans, retries, parked, …).
+    pub stats: MigrationStats,
+    /// Most online events in flight at once.
+    pub concurrent_peak: usize,
+    /// Fault-trace events applied mid-window (fail/repair, guarded to
+    /// stay within the code's tolerance).
+    pub trace_faults_applied: usize,
+    /// (stripe, cluster) decode gates passed on the final map.
+    pub invariant_checks: usize,
+    // ---- phase B: crash sweep over online waves
+    pub oracle_digest: u64,
+    pub ops: usize,
+    pub crash_points_total: usize,
+    pub crash_points_tested: usize,
+    pub digest_matches: usize,
+    /// Crash points that recovered an open online wave and resumed it
+    /// move-for-move from the logged plan.
+    pub pending_resumes: usize,
+    pub decode_checks: usize,
+    // ---- phase C: throttle interference curve
+    /// `(rate_mbps, foreground degraded-read p50 s, p99 s)` per throttle
+    /// rate, ascending.
+    pub curve: Vec<(f64, f64, f64)>,
+    pub curve_monotone: bool,
+}
+
+/// Default throttle sweep for the interference curve: rates straddling
+/// the 1 Gb/s cross-cluster gateway around the configured operating point.
+pub fn exp10_rates(base_mbps: f64) -> [f64; 4] {
+    [base_mbps * 0.25, base_mbps, base_mbps * 4.0, base_mbps * 16.0]
+}
+
+fn exp10_scratch_dir(fam: CodeFamily, seed: u64, tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("unilrc-exp10-{}-{fam:?}-{seed}-{tag}", std::process::id()))
+}
+
+/// Pump every in-flight online event to completion, reviving parked
+/// events as their blockers clear. Bounded so a genuinely stuck event
+/// fails loudly instead of spinning.
+fn exp10_drain_online(dss: &mut Dss) -> Result<()> {
+    for _ in 0..10_000 {
+        if dss.online_in_flight() == 0 {
+            return Ok(());
+        }
+        dss.pump_migrations(f64::INFINITY, 64)?;
+        if dss.online_in_flight() > 0 && !dss.parked_events().is_empty() {
+            dss.retry_parked();
+        }
+    }
+    anyhow::bail!(
+        "online migration failed to drain: {} in flight, parked: {:?}",
+        dss.online_in_flight(),
+        dss.parked_events()
+    )
+}
+
+/// Submit one event and drain it — the Phase B op wrapper that makes a
+/// whole online wave one committed WAL operation (only its `CommitOnline`
+/// bumps the op count).
+fn exp10_run_online(dss: &mut Dss, ev: TopologyEvent) -> Result<()> {
+    dss.submit_topology_event(ev)
+        .map_err(|e| anyhow::anyhow!("online submit {ev:?} rejected: {e}"))?;
+    exp10_drain_online(dss)
+}
+
+/// Phase B op list: the exp9 scenario shape with every topology event
+/// executed as an *online* wave instead of a stop-the-world migration.
+fn exp10_ops(cfg: &ExpConfig, mcfg: &MigrationSimConfig) -> Vec<DurOp> {
+    let mut ops = Vec::new();
+    for _ in 0..cfg.stripes {
+        ops.push(DurOp::Ingest);
+    }
+    for _ in 0..mcfg.add_nodes {
+        ops.push(DurOp::AddNode);
+    }
+    ops.push(DurOp::Fail);
+    for _ in 0..mcfg.drain_nodes {
+        ops.push(DurOp::Drain);
+    }
+    ops.push(DurOp::Heal);
+    for _ in 0..mcfg.add_clusters {
+        ops.push(DurOp::AddCluster);
+    }
+    ops
+}
+
+/// Execute one Phase B op. Non-event ops reuse [`exp9_apply_op`]
+/// verbatim; topology events go through the online queue. Every
+/// parameter stays a pure function of (state, op index), so a recovered
+/// run re-executing the tail reproduces the oracle exactly.
+fn exp10_apply_op(dss: &mut Dss, op: DurOp, op_index: usize, cfg: &ExpConfig) -> Result<()> {
+    match op {
+        DurOp::Ingest | DurOp::Fail | DurOp::Heal => exp9_apply_op(dss, op, op_index, cfg),
+        DurOp::AddNode => {
+            let clusters = dss.topo.clusters();
+            let cluster = (0..clusters)
+                .map(|i| (op_index + i) % clusters)
+                .find(|&c| !dss.topo.is_retired(c))
+                .ok_or_else(|| anyhow::anyhow!("no open cluster to grow"))?;
+            exp10_run_online(dss, TopologyEvent::AddNode { cluster })
+        }
+        DurOp::Drain => {
+            let node = most_loaded_live_node(dss)
+                .ok_or_else(|| anyhow::anyhow!("no live node left to drain"))?;
+            exp10_run_online(dss, TopologyEvent::DrainNode { node })
+        }
+        DurOp::AddCluster => {
+            let nodes = dss.topo.max_cluster_size();
+            exp10_run_online(dss, TopologyEvent::AddCluster { nodes })
+        }
+    }
+}
+
+/// Measure the throttle-rate × foreground-latency interference curve on
+/// one shared gateway/NIC budget.
+///
+/// Monotone **by construction**, not by luck: migration traffic is
+/// admitted at fixed wall-clock ticks (rate-independent instants), and
+/// each admission takes everything the token bucket accrued
+/// ([`crate::sim::TokenBucket::drain`]). A higher rate therefore injects
+/// pointwise-more bytes at identical instants into the same FIFO
+/// resources, so every foreground completion time — and hence p50/p99 —
+/// is non-decreasing in the rate. Rate-paced `acquire` admissions do
+/// *not* have this property (phase alignment can invert single points).
+pub fn exp10_interference(
+    dss: &mut Dss,
+    rates_mbps: &[f64],
+    burst: f64,
+    fg_reads: usize,
+) -> Result<Vec<(f64, f64, f64)>> {
+    let stripe = 0;
+    let block = 0;
+    // fail the probe block's node so every foreground read is degraded
+    let victim = dss.metadata().node_of(stripe, block);
+    // migration rides a surviving node's NIC and its cluster gateway —
+    // the same FIFO resources the degraded read's repair + ship path
+    // uses. That shared budget is what the curve measures.
+    let src = dss.metadata().node_of(stripe, 1);
+    let src_cluster = dss.topo.cluster_of_node(src);
+    let dst = (0..dss.topo.total_nodes())
+        .find(|&n| dss.topo.is_live(n) && dss.topo.cluster_of_node(n) != src_cluster)
+        .ok_or_else(|| anyhow::anyhow!("no cross-cluster migration destination"))?;
+    dss.fail_node(victim);
+
+    const TICK: f64 = 0.002; // 2 ms admission cadence
+    const FG_GAP: f64 = 0.005; // 5 ms between foreground probes
+    let mut curve = Vec::with_capacity(rates_mbps.len());
+    for &mbps in rates_mbps {
+        dss.quiesce();
+        dss.set_migration_throttle(mbps * 1e6 / 8.0, burst);
+        let mut lat = Vec::with_capacity(fg_reads);
+        let mut tick = 0usize;
+        for i in 0..fg_reads {
+            let t_issue = i as f64 * FG_GAP;
+            while tick as f64 * TICK <= t_issue {
+                let now = tick as f64 * TICK;
+                let grant = dss.net.migration_grant(now);
+                if grant > 0 {
+                    dss.net.transfer(now, Endpoint::Node(src), Endpoint::Node(dst), grant);
+                }
+                tick += 1;
+            }
+            let done = dss.degraded_read_at(t_issue, stripe, block)?;
+            lat.push(done - t_issue);
+        }
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        curve.push((mbps, pctl(&lat, 0.50), pctl(&lat, 0.99)));
+    }
+    dss.heal_node(victim);
+    Ok(curve)
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+fn pctl(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Experiment 10 — online migration under load: (A) replay a fault trace
+/// through an actively migrating system — concurrent events admitted,
+/// conflicting ones serialized with a typed retryable error, a drain
+/// source killed mid-move (remaining moves flip onto the batched
+/// rebuild), a scale-out destination killed before any byte lands
+/// (moves re-plan onto a spare) — and prove every event completes with
+/// the one-cluster-loss invariant intact; (B) crash the coordinator at
+/// every sampled WAL position inside online waves and prove recovery +
+/// plan-tail resume digest-identical to a never-crashed oracle (exp9
+/// discipline); (C) measure the throttle interference curve and prove
+/// it monotone.
+pub fn exp10_migration(cfg: &ExpConfig, mcfg: &MigrationSimConfig) -> Result<Vec<Exp10Result>> {
+    let mut out = Vec::new();
+    for fam in CodeFamily::paper_baselines() {
+        out.push(exp10_family(fam, cfg, mcfg)?);
+    }
+    Ok(out)
+}
+
+fn exp10_family(
+    fam: CodeFamily,
+    cfg: &ExpConfig,
+    mcfg: &MigrationSimConfig,
+) -> Result<Exp10Result> {
+    let mut det = cfg.clone();
+    det.time_compute = false;
+    let (rate_bps, burst) = mcfg.bucket();
+
+    // ------------ Phase A: fault trace through an active migration window
+    let mut dss = build_dss(fam, &det);
+    let mut prng = Prng::new(det.seed);
+    dss.ingest_random_stripes(det.stripes, &mut prng)?;
+    dss.set_migration_throttle(rate_bps, burst);
+    dss.set_migration_backoff(mcfg.backoff());
+
+    // concurrent admissions: a scale-out wave and a drain in flight at once
+    dss.submit_topology_event(TopologyEvent::AddNode { cluster: 0 })
+        .map_err(|e| anyhow::anyhow!("{fam:?}: online AddNode rejected: {e}"))?;
+    dss.pump_migrations(f64::INFINITY, 1)?; // leave the wave part-done
+    let victim = (0..dss.topo.total_nodes())
+        .filter(|&n| {
+            dss.topo.is_active(n)
+                && !dss.failed_nodes().contains(&n)
+                && dss.topo.cluster_of_node(n) != 0
+        })
+        .max_by_key(|&n| (dss.metadata().block_map().node_load(n), std::cmp::Reverse(n)))
+        .ok_or_else(|| anyhow::anyhow!("{fam:?}: no drain victim outside cluster 0"))?;
+    if dss.submit_topology_event(TopologyEvent::DrainNode { node: victim }).is_err() {
+        // this family's drain plan collided with the open wave — the
+        // events serialize: finish the wave, then the drain admits
+        exp10_drain_online(&mut dss)?;
+        dss.submit_topology_event(TopologyEvent::DrainNode { node: victim })
+            .map_err(|e| anyhow::anyhow!("{fam:?}: serialized drain rejected: {e}"))?;
+    }
+    let mut concurrent_peak = dss.online_in_flight();
+
+    // claims never open a phantom unavailability window (blocks serve
+    // from their source until the move commits)
+    anyhow::ensure!(
+        dss.availability() == (false, false),
+        "{fam:?}: in-flight claims made healthy data look degraded"
+    );
+    // a second drain of the same node must serialize with a typed,
+    // retryable conflict — never a half-claimed map
+    match dss.submit_topology_event(TopologyEvent::DrainNode { node: victim }) {
+        Err(e @ MigrationError::Conflicting { .. }) => {
+            anyhow::ensure!(e.retryable(), "{fam:?}: conflict must be retryable")
+        }
+        other => anyhow::bail!("{fam:?}: duplicate drain not rejected as conflict: {other:?}"),
+    }
+
+    // source death mid-drain: remaining moves flip onto the batched rebuild
+    dss.fail_node(victim);
+    dss.pump_migrations(f64::INFINITY, 64)?;
+    anyhow::ensure!(
+        dss.migration_stats().source_flips >= 1,
+        "{fam:?}: drain source died mid-move but no move flipped to rebuild"
+    );
+
+    // replay the fault trace with a rolling window of online waves open
+    let trace = FaultTrace::generate(&dss.topo, &FaultConfig::accelerated(), det.seed ^ 0x10AD);
+    let mut trace_faults_applied = 0usize;
+    for (i, e) in trace.events.iter().take(16).enumerate() {
+        if i % 4 == 0 {
+            // keep the window active: another wave joins mid-replay
+            // (a conflicting admission just counts toward the stats)
+            let clusters = dss.topo.clusters();
+            let cluster = (0..clusters)
+                .map(|j| (i / 4 + j) % clusters)
+                .find(|&c| !dss.topo.is_retired(c))
+                .expect("no cluster retires in phase A");
+            let _ = dss.submit_topology_event(TopologyEvent::AddNode { cluster });
+        }
+        match e.kind {
+            FaultKind::NodeFail(n)
+                if dss.topo.is_live(n)
+                    && !dss.failed_nodes().contains(&n)
+                    && dss.failed_nodes().len() < 2 =>
+            {
+                dss.fail_node(n);
+                if (0..dss.metadata().stripe_count()).all(|s| dss.stripe_recoverable(s)) {
+                    trace_faults_applied += 1;
+                } else {
+                    dss.heal_node(n); // over-tolerance injection: veto
+                }
+            }
+            FaultKind::NodeRepair(n) if dss.failed_nodes().contains(&n) => {
+                if !dss.metadata().blocks_on_node(n).is_empty() {
+                    dss.recover_nodes(&[n])?;
+                }
+                dss.heal_node(n);
+                trace_faults_applied += 1;
+            }
+            _ => {}
+        }
+        concurrent_peak = concurrent_peak.max(dss.online_in_flight());
+        dss.pump_migrations(f64::INFINITY, 2)?;
+    }
+
+    // heal outstanding failures, revive parked events, drain the window
+    let mut still_failed: Vec<usize> = dss.failed_nodes().iter().copied().collect();
+    still_failed.sort_unstable();
+    for n in still_failed {
+        if !dss.metadata().blocks_on_node(n).is_empty() {
+            dss.recover_nodes(&[n])?;
+        }
+        dss.heal_node(n);
+    }
+    dss.retry_parked();
+    exp10_drain_online(&mut dss)?;
+
+    // destination death: an AddCluster wave with one spare node; its
+    // lowest-id target dies before any byte lands, so every move onto it
+    // must re-plan onto an invariant-satisfying replacement
+    let spare_nodes = dss.topo.max_cluster_size() + 1;
+    dss.submit_topology_event(TopologyEvent::AddCluster { nodes: spare_nodes })
+        .map_err(|e| anyhow::anyhow!("{fam:?}: online AddCluster rejected: {e}"))?;
+    let new_cluster = dss.topo.clusters() - 1;
+    let mut targets: Vec<usize> = Vec::new();
+    for s in 0..dss.metadata().stripe_count() {
+        for b in 0..dss.code.n() {
+            if let BlockState::Migrating { to, .. } = dss.metadata().block_state(s, b) {
+                if dss.topo.cluster_of_node(to) == new_cluster {
+                    targets.push(to);
+                }
+            }
+        }
+    }
+    targets.sort_unstable();
+    targets.dedup();
+    let dest = *targets.first().ok_or_else(|| {
+        anyhow::anyhow!("{fam:?}: AddCluster wave planned no moves into the new cluster")
+    })?;
+    let replans0 = dss.migration_stats().dest_replans;
+    dss.fail_node(dest);
+    exp10_drain_online(&mut dss)?;
+    anyhow::ensure!(
+        dss.migration_stats().dest_replans > replans0,
+        "{fam:?}: destination died before transfer yet no move re-planned"
+    );
+    dss.heal_node(dest); // the spare slot: nothing landed, nothing to rebuild
+
+    // every admitted event completed; invariants re-proven on the final map
+    let stats = dss.migration_stats();
+    anyhow::ensure!(
+        dss.online_in_flight() == 0 && stats.completed == stats.submitted,
+        "{fam:?}: {} of {} admitted events never completed",
+        stats.submitted - stats.completed,
+        stats.submitted
+    );
+    anyhow::ensure!(stats.conflicts >= 1, "{fam:?}: conflict probe not counted");
+    let mut invariant_checks = 0usize;
+    for s in 0..dss.metadata().stripe_count() {
+        anyhow::ensure!(dss.stripe_recoverable(s), "{fam:?}: stripe {s} unrecoverable");
+        for c in 0..dss.topo.clusters() {
+            let blocks = dss.metadata().blocks_in_cluster(s, c);
+            if blocks.is_empty() {
+                continue;
+            }
+            anyhow::ensure!(
+                dss.code.decode_plan_cached(blocks).is_some(),
+                "{fam:?}: stripe {s} would not survive losing cluster {c} after the window"
+            );
+            invariant_checks += 1;
+        }
+    }
+    dss.quiesce();
+    dss.normal_read(0)?;
+    drop(dss);
+
+    // ---------- Phase B: exp9-discipline crash sweep over online waves
+    let ops = exp10_ops(&det, mcfg);
+    let oracle_dir = exp10_scratch_dir(fam, det.seed, "oracle");
+    let _ = std::fs::remove_dir_all(&oracle_dir);
+    let mut odss = build_dss(fam, &det);
+    odss.enable_durability(
+        &oracle_dir,
+        DurabilityOptions { sync_every: 8, snapshot_every: usize::MAX },
+    )?;
+    for (i, &op) in ops.iter().enumerate() {
+        exp10_apply_op(&mut odss, op, i, &det)?;
+    }
+    let oracle_digest = odss.capture_state().digest();
+    let blocks = odss.export_blocks();
+    let journal = odss.journal().expect("durability enabled above");
+    anyhow::ensure!(
+        journal.committed_ops() == ops.len() as u64,
+        "{fam:?}: every driver op must commit exactly one WAL unit ({} != {})",
+        journal.committed_ops(),
+        ops.len()
+    );
+    let wal_records = journal.wal_records();
+    drop(odss);
+
+    let segments = list_segments(&oracle_dir)?;
+    anyhow::ensure!(segments.len() == 1, "oracle journal must hold exactly one segment");
+    let wal_path = segments[0].1.clone();
+    let wal_img = std::fs::read(&wal_path)?;
+    let (records, end) = scan_segment(&wal_img);
+    anyhow::ensure!(end == ScanEnd::Clean, "oracle WAL must scan clean, got {end:?}");
+    anyhow::ensure!(records.len() as u64 == wal_records, "oracle WAL record count mismatch");
+    let mut positions: Vec<usize> = Vec::with_capacity(records.len() * 2 + 1);
+    for (i, r) in records.iter().enumerate() {
+        let next = records.get(i + 1).map_or(wal_img.len(), |n| n.offset);
+        positions.push(r.offset);
+        positions.push(r.offset + (next - r.offset) / 2);
+    }
+    positions.push(wal_img.len());
+    let total = positions.len();
+    let tested_idx: Vec<usize> = if mcfg.crash_cap > 0 && total > mcfg.crash_cap {
+        let mut step = total.div_ceil(mcfg.crash_cap);
+        if step % 2 == 0 {
+            step += 1; // odd stride: sample boundaries *and* torn tails
+        }
+        let mut idx: Vec<usize> = (0..total).step_by(step).collect();
+        if idx.last() != Some(&(total - 1)) {
+            idx.push(total - 1);
+        }
+        idx
+    } else {
+        (0..total).collect()
+    };
+
+    let store = ManifestStore::new(&oracle_dir);
+    let crash_dir = exp10_scratch_dir(fam, det.seed, "crash");
+    let (mut digest_matches, mut pending_resumes) = (0usize, 0usize);
+    let mut decode_checks = 0usize;
+    for &idx in &tested_idx {
+        let cut = positions[idx];
+        let _ = std::fs::remove_dir_all(&crash_dir);
+        std::fs::create_dir_all(&crash_dir)?;
+        std::fs::copy(store.current_path(), crash_dir.join(MANIFEST_CURRENT))?;
+        if store.prev_path().exists() {
+            std::fs::copy(store.prev_path(), crash_dir.join(MANIFEST_PREV))?;
+        }
+        std::fs::write(
+            crash_dir.join(wal_path.file_name().expect("segment file name")),
+            &wal_img[..cut],
+        )?;
+
+        let rec = recover(&crash_dir).map_err(|e| {
+            anyhow::anyhow!("{fam:?}: recovery at crash position {cut} failed: {e}")
+        })?;
+        anyhow::ensure!(
+            rec.pending_online.len() <= 1,
+            "{fam:?}: scenario runs one online wave at a time, recovered {}",
+            rec.pending_online.len()
+        );
+
+        let code = det.scheme.build(fam);
+        let (strategy, _) = strategy_and_topo(fam, &code);
+        let mut rdss = Dss::restore(
+            code,
+            strategy,
+            &rec.state,
+            blocks.clone(),
+            NetConfig::default().with_cross_gbps(det.cross_gbps),
+            det.engine.clone(),
+            DssConfig {
+                block_size: det.block_size,
+                aggregated: det.aggregated,
+                time_compute: false,
+            },
+        )?;
+
+        let mut next = rec.committed_ops as usize;
+        anyhow::ensure!(
+            next <= ops.len(),
+            "{fam:?}: recovered {next} committed ops, scenario has only {}",
+            ops.len()
+        );
+        if !rec.pending_online.is_empty() {
+            // crash mid-wave: the op at `next` is the interrupted event —
+            // resume its logged plan tail instead of re-submitting
+            let is_event = ops.get(next).is_some_and(|op| {
+                matches!(op, DurOp::AddNode | DurOp::Drain | DurOp::AddCluster)
+            });
+            anyhow::ensure!(is_event, "{fam:?}: pending online wave at a non-event op");
+            rdss.resume_online(&rec.pending_online);
+            exp10_drain_online(&mut rdss)?;
+            pending_resumes += 1;
+            next += 1;
+        }
+        for (i, &op) in ops.iter().enumerate().skip(next) {
+            exp10_apply_op(&mut rdss, op, i, &det)?;
+        }
+        let got = rdss.capture_state().digest();
+        anyhow::ensure!(
+            got == oracle_digest,
+            "{fam:?}: crash at WAL byte {cut} diverged: {got:#x} != oracle {oracle_digest:#x}"
+        );
+        digest_matches += 1;
+        for s in 0..rdss.metadata().stripe_count() {
+            for c in 0..rdss.topo.clusters() {
+                let in_cluster = rdss.metadata().blocks_in_cluster(s, c);
+                if in_cluster.is_empty() {
+                    continue;
+                }
+                anyhow::ensure!(
+                    rdss.code.decode_plan_cached(in_cluster).is_some(),
+                    "{fam:?}: stripe {s} undecodable after losing cluster {c} (crash at {cut})"
+                );
+                decode_checks += 1;
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&crash_dir);
+    let _ = std::fs::remove_dir_all(&oracle_dir);
+
+    // ------------------------ Phase C: throttle interference curve
+    let mut cdss = build_dss(fam, &det);
+    let mut prng = Prng::new(det.seed ^ 0xC10);
+    cdss.ingest_random_stripes(det.stripes, &mut prng)?;
+    let rates = exp10_rates(mcfg.rate_mbps);
+    let curve = exp10_interference(&mut cdss, &rates, burst, mcfg.fg_reads)?;
+    let curve_monotone =
+        curve.windows(2).all(|w| w[1].1 + 1e-9 >= w[0].1 && w[1].2 + 1e-9 >= w[0].2);
+    anyhow::ensure!(
+        curve_monotone,
+        "{fam:?}: interference curve is not monotone in the throttle rate: {curve:?}"
+    );
+
+    Ok(Exp10Result {
+        family: fam,
+        stats,
+        concurrent_peak,
+        trace_faults_applied,
+        invariant_checks,
+        oracle_digest,
+        ops: ops.len(),
+        crash_points_total: total,
+        crash_points_tested: tested_idx.len(),
+        digest_matches,
+        pending_resumes,
+        decode_checks,
+        curve,
+        curve_monotone,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1665,6 +2278,35 @@ mod tests {
             assert_eq!(r.reconstructed_blocks, r.crash_points_tested, "{:?}", r.family);
             assert!(r.snapshot_run_snapshots > 1, "{:?}: cadence never fired", r.family);
             assert!(r.snapshot_digest_match, "{:?}", r.family);
+        }
+    }
+
+    #[test]
+    fn exp10_smoke_all_families() {
+        let cfg = ExpConfig { block_size: 4 * 1024, stripes: 2, ..tiny() };
+        let mcfg = MigrationSimConfig { crash_cap: 12, fg_reads: 8, ..Default::default() };
+        let rows = exp10_migration(&cfg, &mcfg).unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            let fam = r.family;
+            // every admitted event completed, including the ones that
+            // lost their source or destination mid-move
+            assert_eq!(r.stats.completed, r.stats.submitted, "{fam:?}");
+            assert!(r.stats.conflicts >= 1, "{fam:?}: conflict probe uncounted");
+            assert!(r.stats.source_flips >= 1, "{fam:?}: no source-death flip");
+            assert!(r.stats.dest_replans >= 1, "{fam:?}: no dest-death re-plan");
+            assert!(r.concurrent_peak >= 2 || r.stats.conflicts >= 1, "{fam:?}");
+            assert!(r.invariant_checks > 0, "{fam:?}");
+            // 2 ingests + add-node + fail + drain + heal + add-cluster
+            assert_eq!(r.ops, 7, "{fam:?}");
+            assert!(r.crash_points_tested > 0, "{fam:?}");
+            assert_eq!(r.digest_matches, r.crash_points_tested, "{fam:?}");
+            // at least one crash point recovered an open wave and
+            // resumed it from the logged plan
+            assert!(r.pending_resumes > 0, "{fam:?}: no mid-wave crash resumed");
+            assert!(r.decode_checks > 0, "{fam:?}");
+            assert_eq!(r.curve.len(), 4, "{fam:?}");
+            assert!(r.curve_monotone, "{fam:?}: {:?}", r.curve);
         }
     }
 

@@ -74,6 +74,81 @@ impl Resource {
     }
 }
 
+/// Traffic class of a transfer: foreground (client reads/repairs) rides
+/// the raw resources; background migration additionally pays the
+/// token-bucket throttle first, so the two classes share each NIC/gateway
+/// budget with foreground keeping priority.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficClass {
+    Foreground,
+    Migration,
+}
+
+/// A token bucket on the virtual clock: tokens (bytes) accrue at
+/// `rate_bps` up to `burst`; an admission that finds the bucket short is
+/// delayed until the deficit has accrued. Deterministic — pure function
+/// of the admission sequence.
+#[derive(Debug, Clone, Copy)]
+pub struct TokenBucket {
+    /// Refill rate in bytes per (virtual) second.
+    pub rate_bps: f64,
+    /// Token capacity in bytes.
+    pub burst: f64,
+    tokens: f64,
+    /// Virtual instant the token count was last brought current.
+    last: f64,
+}
+
+impl TokenBucket {
+    pub fn new(rate_bps: f64, burst: f64) -> TokenBucket {
+        let burst = burst.max(1.0);
+        // start full: the first burst-worth of work is unthrottled
+        TokenBucket { rate_bps: rate_bps.max(1.0), burst, tokens: burst, last: 0.0 }
+    }
+
+    /// Bring the token count current at `now` (capped at the burst).
+    fn refill(&mut self, now: f64) {
+        if now > self.last {
+            self.tokens = (self.tokens + (now - self.last) * self.rate_bps).min(self.burst);
+            self.last = now;
+        }
+    }
+
+    /// Admit `bytes` at the earliest instant ≥ `now` the budget allows;
+    /// returns that instant. Debt is taken immediately, so back-to-back
+    /// acquisitions queue behind each other like a FIFO resource.
+    pub fn acquire(&mut self, now: f64, bytes: usize) -> f64 {
+        self.refill(now);
+        let need = bytes as f64;
+        if self.tokens >= need {
+            self.tokens -= need;
+            return now;
+        }
+        let wait = (need - self.tokens) / self.rate_bps;
+        self.tokens = 0.0;
+        self.last = now + wait;
+        now + wait
+    }
+
+    /// Take *everything* accrued by `now` and return it as a byte budget
+    /// (the fixed-cadence admission primitive of the interference curve:
+    /// admissions happen at fixed instants, with per-admission size — not
+    /// timing — scaling with the throttle rate, which makes the induced
+    /// foreground delay monotone in the rate by construction).
+    pub fn drain(&mut self, now: f64) -> usize {
+        self.refill(now);
+        let grant = self.tokens.floor();
+        self.tokens -= grant;
+        grant as usize
+    }
+
+    /// Reset to a full bucket at t = 0 (between experiment phases).
+    pub fn reset(&mut self) {
+        self.tokens = self.burst;
+        self.last = 0.0;
+    }
+}
+
 /// Communication endpoints of the prototype.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Endpoint {
@@ -105,6 +180,11 @@ pub struct NetSim {
     pub cross_bytes: u64,
     /// total bytes moved at all (traffic meter)
     pub total_bytes: u64,
+    /// Shared bandwidth budget for [`TrafficClass::Migration`] transfers
+    /// (`None` = unthrottled).
+    migration_bucket: Option<TokenBucket>,
+    /// Bytes admitted through the migration throttle (meter).
+    pub migration_bytes: u64,
 }
 
 impl NetSim {
@@ -119,6 +199,8 @@ impl NetSim {
             coord_nic: Resource::new(cfg.client_bw),
             cross_bytes: 0,
             total_bytes: 0,
+            migration_bucket: None,
+            migration_bytes: 0,
         };
         sim.sync(topo);
         sim
@@ -193,6 +275,61 @@ impl NetSim {
         begin + bytes as f64 / bottleneck + self.cfg.base_latency
     }
 
+    /// Install (or replace) the migration token bucket: background moves
+    /// are admitted at `rate_bps` bytes/s with `burst` bytes of credit,
+    /// *then* contend for the same NICs/gateways foreground traffic uses.
+    pub fn set_migration_throttle(&mut self, rate_bps: f64, burst: f64) {
+        self.migration_bucket = Some(TokenBucket::new(rate_bps, burst));
+    }
+
+    /// Drop the migration throttle (background moves run unthrottled).
+    pub fn clear_migration_throttle(&mut self) {
+        self.migration_bucket = None;
+    }
+
+    /// The installed throttle's `(rate_bps, burst)`, if any.
+    pub fn migration_throttle(&self) -> Option<(f64, f64)> {
+        self.migration_bucket.map(|b| (b.rate_bps, b.burst))
+    }
+
+    /// Class-aware transfer: foreground is [`NetSim::transfer`] verbatim;
+    /// migration first waits for token-bucket admission, then rides the
+    /// same FIFO resources (so a large foreground burst still queues
+    /// behind admitted migration bytes — the shared-budget interference
+    /// experiment 10 measures).
+    pub fn transfer_class(
+        &mut self,
+        start: f64,
+        from: Endpoint,
+        to: Endpoint,
+        bytes: usize,
+        class: TrafficClass,
+    ) -> f64 {
+        let start = match (class, self.migration_bucket.as_mut()) {
+            (TrafficClass::Migration, Some(bucket)) => {
+                if from != to && bytes > 0 {
+                    self.migration_bytes += bytes as u64;
+                }
+                bucket.acquire(start, bytes)
+            }
+            (TrafficClass::Migration, None) => {
+                if from != to && bytes > 0 {
+                    self.migration_bytes += bytes as u64;
+                }
+                start
+            }
+            (TrafficClass::Foreground, _) => start,
+        };
+        self.transfer(start, from, to, bytes)
+    }
+
+    /// Fixed-cadence admission grant: all tokens accrued by `now`
+    /// (0 without a throttle — callers must size their own waves). See
+    /// [`TokenBucket::drain`].
+    pub fn migration_grant(&mut self, now: f64) -> usize {
+        self.migration_bucket.as_mut().map_or(0, |b| b.drain(now))
+    }
+
     /// Reset resource clocks and meters (between experiments).
     pub fn reset(&mut self) {
         for r in self
@@ -207,6 +344,10 @@ impl NetSim {
         self.coord_nic.available_at = 0.0;
         self.cross_bytes = 0;
         self.total_bytes = 0;
+        self.migration_bytes = 0;
+        if let Some(b) = self.migration_bucket.as_mut() {
+            b.reset();
+        }
     }
 }
 
@@ -318,5 +459,77 @@ mod tests {
         let t = s.transfer(0.0, Endpoint::Node(0), Endpoint::Node(2), MB);
         let expect = MB as f64 / (10.0 * GBIT) + 200e-6;
         assert!((t - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_bucket_delays_when_short_and_caps_at_burst() {
+        let mut b = TokenBucket::new(100.0, 50.0); // 100 B/s, 50 B burst
+        // starts full: 50 bytes admit instantly
+        assert_eq!(b.acquire(0.0, 50), 0.0);
+        // next 100 bytes must wait the full deficit: 100/100 = 1 s
+        assert!((b.acquire(0.0, 100) - 1.0).abs() < 1e-12);
+        // tokens never accrue past the burst: after a long idle gap only
+        // 50 bytes are banked, so 100 bytes wait 0.5 s past `now`
+        assert!((b.acquire(100.0, 100) - 100.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_bucket_drain_grants_accrued_bytes() {
+        let mut b = TokenBucket::new(1000.0, 400.0);
+        assert_eq!(b.drain(0.0), 400, "starts full");
+        assert_eq!(b.drain(0.1), 100, "0.1 s × 1000 B/s");
+        assert_eq!(b.drain(0.1), 0, "nothing accrues without time passing");
+        assert_eq!(b.drain(10.0), 400, "capped at the burst");
+    }
+
+    #[test]
+    fn migration_class_pays_the_throttle_foreground_does_not() {
+        let mut s = sim();
+        s.set_migration_throttle(1000.0, MB as f64); // tiny rate, 1 MB burst
+        // first MB rides the burst: same completion as foreground
+        let fg = s.transfer_class(0.0, Endpoint::Node(0), Endpoint::Node(1), MB,
+            TrafficClass::Foreground);
+        s.reset();
+        let m1 = s.transfer_class(0.0, Endpoint::Node(0), Endpoint::Node(1), MB,
+            TrafficClass::Migration);
+        assert!((fg - m1).abs() < 1e-9, "burst admits instantly: {fg} vs {m1}");
+        // the second MB waits ~MB/1000 s for tokens — far beyond NIC time
+        let m2 = s.transfer_class(0.0, Endpoint::Node(0), Endpoint::Node(2), MB,
+            TrafficClass::Migration);
+        assert!(m2 > MB as f64 / 1000.0, "{m2}");
+        assert_eq!(s.migration_bytes, 2 * MB as u64);
+        // foreground still never waits on the bucket
+        let fg2 = s.transfer_class(0.0, Endpoint::Node(4), Endpoint::Node(5), MB,
+            TrafficClass::Foreground);
+        assert!((fg2 - fg).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admitted_migration_contends_on_shared_resources() {
+        let mut s = sim();
+        s.set_migration_throttle(1e12, 1e12); // effectively unthrottled
+        let base = s.transfer(0.0, Endpoint::Node(1), Endpoint::Client, MB);
+        s.reset();
+        // a migration leaving cluster 0 holds the gateway; a foreground
+        // read from the same cluster then queues behind it
+        s.transfer_class(0.0, Endpoint::Node(0), Endpoint::Node(4), MB,
+            TrafficClass::Migration);
+        let fg = s.transfer_class(0.0, Endpoint::Node(1), Endpoint::Client, MB,
+            TrafficClass::Foreground);
+        assert!(fg > base + 0.5 * MB as f64 / GBIT, "{fg} vs {base}");
+    }
+
+    #[test]
+    fn reset_refills_the_bucket() {
+        let mut s = sim();
+        s.set_migration_throttle(100.0, MB as f64);
+        s.transfer_class(0.0, Endpoint::Node(0), Endpoint::Node(1), MB,
+            TrafficClass::Migration);
+        s.reset();
+        assert_eq!(s.migration_bytes, 0);
+        let t = s.transfer_class(0.0, Endpoint::Node(0), Endpoint::Node(1), MB,
+            TrafficClass::Migration);
+        let expect = MB as f64 / (10.0 * GBIT) + 200e-6;
+        assert!((t - expect).abs() < 1e-9, "full burst again after reset: {t}");
     }
 }

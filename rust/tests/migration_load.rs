@@ -1,0 +1,360 @@
+//! Online-migration conformance: topology events running as background
+//! workloads must
+//!
+//! * serialize conflicting admissions with a typed retryable error —
+//!   never a half-claimed map,
+//! * keep a `Migrating` block readable from its source until the move
+//!   commits (no phantom unavailability window),
+//! * survive source death mid-move by flipping the remaining moves onto
+//!   the batched rebuild, byte-identically,
+//! * survive destination death by re-planning onto a fresh
+//!   invariant-satisfying target,
+//! * recover a coordinator crash mid-wave digest-identical to a
+//!   never-crashed oracle, resuming the logged plan tail.
+//!
+//! Replayed alongside `tests/migration.rs` and `tests/recovery.rs` by
+//! the forced-kernel CI matrix.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+use unilrc::codes::spec::CodeFamily;
+use unilrc::coordinator::manifest::{MANIFEST_CURRENT, MANIFEST_PREV};
+use unilrc::coordinator::wal::list_segments;
+use unilrc::coordinator::{recover, BlockState, Dss, DssConfig, DurabilityOptions, MigrationError};
+use unilrc::experiments::{build_dss, strategy_and_topo, ExpConfig};
+use unilrc::placement::{NodeState, TopologyEvent};
+use unilrc::prng::Prng;
+use unilrc::sim::NetConfig;
+
+fn tiny() -> ExpConfig {
+    ExpConfig { block_size: 4 * 1024, stripes: 2, time_compute: false, ..Default::default() }
+}
+
+/// Fresh per-test scratch directory (removed up front so a previous
+/// aborted run cannot trip the journal's refuse-to-clobber check).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("unilrc-migload-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Pump until every in-flight event completes (bounded: a stuck event
+/// fails the test instead of hanging it).
+fn drain(dss: &mut Dss) {
+    for _ in 0..10_000 {
+        if dss.online_in_flight() == 0 {
+            return;
+        }
+        dss.pump_migrations(f64::INFINITY, 64).unwrap();
+        if dss.online_in_flight() > 0 && !dss.parked_events().is_empty() {
+            dss.retry_parked();
+        }
+    }
+    panic!("online migration failed to drain: parked {:?}", dss.parked_events());
+}
+
+/// The post-migration safety contract: blocks on distinct live nodes,
+/// cluster/node indexes consistent, any one-cluster loss decodes
+/// byte-exactly from the migrated map.
+fn assert_map_sane(dss: &Dss, ctx: &str) {
+    let meta = dss.metadata();
+    for s in 0..meta.stripe_count() {
+        let mut nodes = HashSet::new();
+        for b in 0..dss.code.n() {
+            let n = meta.node_of(s, b);
+            assert!(dss.topo.is_live(n), "{ctx}: stripe {s} block {b} on dead node {n}");
+            assert!(nodes.insert(n), "{ctx}: stripe {s} has two blocks on node {n}");
+            assert_eq!(
+                dss.topo.cluster_of_node(n),
+                meta.cluster_of(s, b),
+                "{ctx}: stripe {s} block {b} cluster/node mismatch"
+            );
+        }
+        for c in 0..dss.topo.clusters() {
+            let erased = meta.blocks_in_cluster(s, c);
+            if erased.is_empty() {
+                continue;
+            }
+            let plan = dss
+                .code
+                .decode_plan(erased)
+                .unwrap_or_else(|| panic!("{ctx}: stripe {s} cluster {c} loss unrecoverable"));
+            let sources: Vec<std::sync::Arc<Vec<u8>>> =
+                plan.sources.iter().map(|&b| meta.block_data(s, b)).collect();
+            let srcs: Vec<&[u8]> = sources.iter().map(|d| d.as_slice()).collect();
+            let rebuilt = plan.execute(&srcs);
+            for (i, &b) in plan.erased.iter().enumerate() {
+                assert_eq!(
+                    rebuilt[i],
+                    meta.block_data(s, b).as_slice(),
+                    "{ctx}: stripe {s} cluster {c} block {b} decode mismatch"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn conflicting_events_serialize_with_typed_errors_all_families() {
+    for fam in CodeFamily::paper_baselines() {
+        let run = || {
+            let mut prng = Prng::new(7);
+            let mut dss = build_dss(fam, &tiny());
+            dss.ingest_random_stripes(2, &mut prng).unwrap();
+            let victim = dss.metadata().node_of(0, 0);
+            dss.submit_topology_event(TopologyEvent::DrainNode { node: victim }).unwrap();
+
+            // a second drain of the same node hits the in-flight claims:
+            // typed, retryable, and the map/topology stay untouched
+            let err = dss
+                .submit_topology_event(TopologyEvent::DrainNode { node: victim })
+                .expect_err(&format!("{fam:?}: duplicate drain must not admit"));
+            assert!(
+                matches!(err, MigrationError::Conflicting { .. }),
+                "{fam:?}: wrong rejection: {err:?}"
+            );
+            assert!(err.retryable(), "{fam:?}: conflicts must be retryable");
+            assert_eq!(dss.migration_stats().conflicts, 1, "{fam:?}");
+            assert_eq!(dss.online_in_flight(), 1, "{fam:?}: rejected event must not enqueue");
+            assert_eq!(
+                dss.metadata().node_of(0, 0),
+                victim,
+                "{fam:?}: failed admission must not move residency"
+            );
+
+            drain(&mut dss);
+            assert_eq!(dss.topo.state(victim), NodeState::Dead, "{fam:?}");
+            assert!(dss.metadata().blocks_on_node(victim).is_empty(), "{fam:?}");
+
+            // serialized retry: once the first event committed, draining
+            // another node admits cleanly
+            let next = dss.metadata().node_of(0, 1);
+            dss.submit_topology_event(TopologyEvent::DrainNode { node: next }).unwrap();
+            drain(&mut dss);
+            let stats = dss.migration_stats();
+            assert_eq!(stats.submitted, 2, "{fam:?}");
+            assert_eq!(stats.completed, 2, "{fam:?}");
+            assert_map_sane(&dss, &format!("{fam:?} after serialized drains"));
+            dss.capture_state().digest()
+        };
+        // the whole conflict/serialize schedule is deterministic
+        assert_eq!(run(), run(), "{fam:?}: serialization must be deterministic");
+    }
+}
+
+#[test]
+fn migrating_block_serves_from_source_until_commit() {
+    let mut prng = Prng::new(13);
+    let mut dss = build_dss(CodeFamily::UniLrc, &tiny());
+    dss.ingest_random_stripes(2, &mut prng).unwrap();
+    let victim = dss.metadata().node_of(0, 0);
+    dss.submit_topology_event(TopologyEvent::DrainNode { node: victim }).unwrap();
+
+    // claimed but uncommitted: state says Migrating, residency (and
+    // therefore reads) still point at the source
+    match dss.metadata().block_state(0, 0) {
+        BlockState::Migrating { from, .. } => assert_eq!(from, victim),
+        other => panic!("drained block must be claimed, got {other:?}"),
+    }
+    assert_eq!(dss.metadata().node_of(0, 0), victim, "reads must keep hitting the source");
+    assert_eq!(
+        dss.availability(),
+        (false, false),
+        "in-flight claims must not register as degraded or unavailable"
+    );
+    assert!(dss.normal_read(0).unwrap().latency > 0.0, "foreground reads keep working");
+
+    drain(&mut dss);
+    assert_eq!(dss.metadata().block_state(0, 0), BlockState::Stable);
+    assert_ne!(dss.metadata().node_of(0, 0), victim, "commit re-points the block");
+    assert_map_sane(&dss, "after commit");
+}
+
+#[test]
+fn source_death_mid_drain_flips_moves_onto_rebuild() {
+    let mut prng = Prng::new(23);
+    let mut dss = build_dss(CodeFamily::UniLrc, &tiny());
+    dss.ingest_random_stripes(2, &mut prng).unwrap();
+    let victim = dss.metadata().node_of(0, 0);
+    let hosted = dss.metadata().blocks_on_node(victim).len();
+    assert!(hosted > 0);
+    dss.submit_topology_event(TopologyEvent::DrainNode { node: victim }).unwrap();
+
+    // the source dies before a single move ran: every planned move must
+    // flip onto the batched repair pipeline instead of copying
+    dss.fail_node(victim);
+    drain(&mut dss);
+    let stats = dss.migration_stats();
+    assert_eq!(stats.source_flips, hosted, "every move rebuilds, none copies");
+    assert_eq!(stats.completed, 1);
+    assert_eq!(dss.topo.state(victim), NodeState::Dead);
+    assert!(!dss.failed_nodes().contains(&victim), "dead nodes leave the failure set");
+    assert!(dss.metadata().blocks_on_node(victim).is_empty());
+    // byte-identical: the decode proof in assert_map_sane reconstructs
+    // every migrated block from the rebuilt placements
+    assert_map_sane(&dss, "after source-death drain");
+    dss.quiesce();
+    assert!(dss.normal_read(0).unwrap().latency > 0.0);
+}
+
+#[test]
+fn destination_death_replans_onto_spare_target() {
+    let mut prng = Prng::new(31);
+    let mut dss = build_dss(CodeFamily::UniLrc, &tiny());
+    dss.ingest_random_stripes(2, &mut prng).unwrap();
+    // one spare node beyond the per-stripe need guarantees a replacement
+    // target exists inside the new cluster after one member dies
+    let nodes = dss.topo.max_cluster_size() + 1;
+    dss.submit_topology_event(TopologyEvent::AddCluster { nodes }).unwrap();
+    let new_cluster = dss.topo.clusters() - 1;
+
+    // discover the planned targets from the claims, then kill one before
+    // any byte lands on it
+    let mut targets: Vec<usize> = Vec::new();
+    for s in 0..dss.metadata().stripe_count() {
+        for b in 0..dss.code.n() {
+            if let BlockState::Migrating { to, .. } = dss.metadata().block_state(s, b) {
+                if dss.topo.cluster_of_node(to) == new_cluster {
+                    targets.push(to);
+                }
+            }
+        }
+    }
+    targets.sort_unstable();
+    targets.dedup();
+    let dest = *targets.first().expect("scale-out must plan moves into the new cluster");
+    dss.fail_node(dest);
+
+    drain(&mut dss);
+    let stats = dss.migration_stats();
+    assert!(stats.dest_replans >= 1, "dead destination must force a re-plan");
+    assert_eq!(stats.completed, 1);
+    assert!(
+        dss.metadata().blocks_on_node(dest).is_empty(),
+        "nothing may land on the dead destination"
+    );
+    dss.heal_node(dest); // nothing landed, nothing to rebuild
+    assert_map_sane(&dss, "after destination-death scale-out");
+}
+
+#[test]
+fn crash_mid_wave_recovers_digest_identical_to_oracle() {
+    let cfg = tiny();
+    // the shared op schedule: ingest, an online scale-out, then a drain
+    // that the crashed run abandons mid-wave
+    let setup = |dir: &PathBuf| -> Dss {
+        let mut dss = build_dss(CodeFamily::UniLrc, &cfg);
+        dss.enable_durability(dir, DurabilityOptions { sync_every: 1, snapshot_every: 64 })
+            .unwrap();
+        let mut prng = Prng::new(cfg.seed);
+        dss.ingest_random_stripes(cfg.stripes, &mut prng).unwrap();
+        dss.submit_topology_event(TopologyEvent::AddNode { cluster: 0 }).unwrap();
+        drain(&mut dss);
+        // drain the most loaded node so the wave spans several moves —
+        // the crash must land strictly inside it
+        let victim = (0..dss.topo.total_nodes())
+            .filter(|&n| dss.topo.is_active(n) && !dss.failed_nodes().contains(&n))
+            .max_by_key(|&n| (dss.metadata().block_map().node_load(n), std::cmp::Reverse(n)))
+            .unwrap();
+        assert!(dss.metadata().blocks_on_node(victim).len() >= 2, "need a multi-move wave");
+        dss.submit_topology_event(TopologyEvent::DrainNode { node: victim }).unwrap();
+        dss
+    };
+
+    // oracle: never crashes, the drain wave runs to completion
+    let oracle_dir = scratch("oracle");
+    let mut oracle = setup(&oracle_dir);
+    drain(&mut oracle);
+    let oracle_digest = oracle.capture_state().digest();
+    let blocks = oracle.export_blocks();
+    let engine = oracle.engine().clone();
+    drop(oracle);
+
+    // crashed run: one move commits, then the coordinator dies
+    let crash_dir = scratch("crash");
+    let mut crashed = setup(&crash_dir);
+    let reports = crashed.pump_migrations(f64::INFINITY, 1).unwrap();
+    assert!(!reports.is_empty() || crashed.online_in_flight() > 0);
+    assert_eq!(crashed.online_in_flight(), 1, "the drain wave must still be open");
+    drop(crashed); // crash: no commit record for the wave
+
+    let rec = recover(&crash_dir).unwrap();
+    assert_eq!(rec.pending_online.len(), 1, "the open wave must surface for resumption");
+    let pend = &rec.pending_online[0];
+    assert!(!pend.remaining.is_empty(), "unfinished moves must be in the recovered plan");
+
+    let code = cfg.scheme.build(CodeFamily::UniLrc);
+    let (strategy, _) = strategy_and_topo(CodeFamily::UniLrc, &code);
+    let mut rdss = Dss::restore(
+        code,
+        strategy,
+        &rec.state,
+        blocks,
+        NetConfig::default(),
+        engine,
+        DssConfig { block_size: cfg.block_size, aggregated: cfg.aggregated, time_compute: false },
+    )
+    .unwrap();
+    rdss.resume_online(&rec.pending_online);
+    assert_eq!(rdss.online_in_flight(), 1);
+    assert_eq!(rdss.migration_stats().resumed, 1);
+    drain(&mut rdss);
+
+    assert_eq!(
+        rdss.capture_state().digest(),
+        oracle_digest,
+        "resumed run must converge on the never-crashed oracle"
+    );
+    assert_map_sane(&rdss, "after crash-resume");
+
+    let _ = std::fs::remove_dir_all(&oracle_dir);
+    let _ = std::fs::remove_dir_all(&crash_dir);
+}
+
+#[test]
+fn torn_wal_tails_never_panic_recovery() {
+    // crash the coordinator mid-wave, then re-truncate its WAL at every
+    // byte of the tail region: recovery must always return a usable
+    // state (typed errors allowed, panics and corrupt maps are not)
+    let cfg = tiny();
+    let base_dir = scratch("fuzz-base");
+    let mut dss = build_dss(CodeFamily::UniLrc, &cfg);
+    dss.enable_durability(&base_dir, DurabilityOptions { sync_every: 1, snapshot_every: 64 })
+        .unwrap();
+    let mut prng = Prng::new(cfg.seed);
+    dss.ingest_random_stripes(cfg.stripes, &mut prng).unwrap();
+    let victim = dss.metadata().node_of(0, 1);
+    dss.submit_topology_event(TopologyEvent::DrainNode { node: victim }).unwrap();
+    dss.pump_migrations(f64::INFINITY, 1).unwrap();
+    drop(dss);
+
+    let segments = list_segments(&base_dir).unwrap();
+    assert_eq!(segments.len(), 1);
+    let wal_path = segments[0].1.clone();
+    let wal_img = std::fs::read(&wal_path).unwrap();
+    let fuzz_dir = scratch("fuzz");
+    // stride keeps the test fast while still cutting inside the admission
+    // group, inside move records, and at torn record boundaries
+    for cut in (0..=wal_img.len()).step_by(7).chain([wal_img.len()]) {
+        let _ = std::fs::remove_dir_all(&fuzz_dir);
+        std::fs::create_dir_all(&fuzz_dir).unwrap();
+        for name in [MANIFEST_CURRENT, MANIFEST_PREV] {
+            let src = base_dir.join(name);
+            if src.exists() {
+                std::fs::copy(&src, fuzz_dir.join(name)).unwrap();
+            }
+        }
+        std::fs::write(fuzz_dir.join(wal_path.file_name().unwrap()), &wal_img[..cut]).unwrap();
+        let rec = recover(&fuzz_dir)
+            .unwrap_or_else(|e| panic!("recovery must not fail at torn tail {cut}: {e}"));
+        assert!(rec.pending_online.len() <= 1, "cut {cut}");
+        for p in &rec.pending_online {
+            // a surfaced drain wave had its full admission group on disk
+            // (a torn one must be dropped, not half-applied): the drained
+            // node's prior lifecycle state rides along for abort paths
+            assert!(!p.prior.is_empty(), "cut {cut}: drain wave without rollback state");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&base_dir);
+    let _ = std::fs::remove_dir_all(&fuzz_dir);
+}

@@ -5,10 +5,13 @@ schema) and fail on throughput regressions.
 Usage:
     bench_compare.py BASELINE.json CURRENT.json [--max-regression 0.20]
 
-A case regresses when its current MiB/s drops more than the threshold
-below the baseline. Cases present in only one file are reported but never
-fatal (benches evolve). Exit code 1 iff at least one regression exceeds
-the threshold.
+A throughput case (`mib_per_s`) regresses when its current MiB/s drops
+more than the threshold below the baseline. A direct-value case
+(`value`/`unit` — latency percentiles, retry counters from the migration
+interference sweep) regresses when its value *rises* more than the
+threshold: those rows are lower-is-better. Cases present in only one
+file are reported but never fatal (benches evolve). Exit code 1 iff at
+least one regression exceeds the threshold.
 """
 
 import argparse
@@ -20,6 +23,13 @@ def load_results(path):
     with open(path) as f:
         doc = json.load(f)
     return {row["name"]: row for row in doc.get("results", [])}
+
+
+def metric(row):
+    """(value, unit, sign) — sign +1 when higher is better, -1 when lower."""
+    if "mib_per_s" in row:
+        return row["mib_per_s"], "MiB/s", 1
+    return row["value"], row.get("unit", ""), -1
 
 
 def main():
@@ -39,20 +49,30 @@ def main():
 
     failures = []
     for name, row in sorted(curr.items()):
+        c, unit, sign = metric(row)
         if name not in base:
-            print(f"  NEW     {name}: {row['mib_per_s']:.1f} MiB/s")
+            print(f"  NEW     {name}: {c:.1f} {unit}")
             continue
-        b, c = base[name]["mib_per_s"], row["mib_per_s"]
+        b, base_unit, base_sign = metric(base[name])
+        if base_sign != sign:
+            # row changed schema between runs — treat as new, nothing comparable
+            print(f"  NEW     {name}: {c:.1f} {unit} (was {b:.1f} {base_unit})")
+            continue
         if b <= 0:
+            # zero baselines (e.g. a retries counter at 0.0) have no ratio;
+            # report any movement but don't gate on an undefined delta
+            if c > 0:
+                print(f"  moved   {name}: {b:.1f} -> {c:.1f} {unit} (zero baseline)")
             continue
         delta = (c - b) / b
         status = "ok"
-        if delta < -args.max_regression:
+        if sign * delta < -args.max_regression:
             status = "REGRESSION"
-            failures.append((name, b, c, delta))
-        print(f"  {status:<10} {name}: {b:.1f} -> {c:.1f} MiB/s ({delta:+.1%})")
+            failures.append((name, b, c, delta, unit))
+        print(f"  {status:<10} {name}: {b:.1f} -> {c:.1f} {unit} ({delta:+.1%})")
     for name in sorted(set(base) - set(curr)):
-        print(f"  GONE    {name} (was {base[name]['mib_per_s']:.1f} MiB/s)")
+        b, unit, _ = metric(base[name])
+        print(f"  GONE    {name} (was {b:.1f} {unit})")
 
     if failures:
         print(
@@ -60,8 +80,8 @@ def main():
             f"{args.max_regression:.0%} vs baseline:",
             file=sys.stderr,
         )
-        for name, b, c, delta in failures:
-            print(f"  {name}: {b:.1f} -> {c:.1f} MiB/s ({delta:+.1%})", file=sys.stderr)
+        for name, b, c, delta, unit in failures:
+            print(f"  {name}: {b:.1f} -> {c:.1f} {unit} ({delta:+.1%})", file=sys.stderr)
         return 1
     print("\nno regressions beyond threshold")
     return 0

@@ -71,8 +71,12 @@ def append_run(entries, bench_files, label, max_runs):
         with open(path) as f:
             doc = json.load(f)
         name = doc.get("bench") or os.path.basename(path)
+        # throughput rows carry mib_per_s; direct-value rows (latency
+        # percentiles, counters) carry value — both index fine as
+        # percent-of-first-run series
         benches[name] = {
-            row["name"]: row["mib_per_s"] for row in doc.get("results", [])
+            row["name"]: row.get("mib_per_s", row.get("value", 0.0))
+            for row in doc.get("results", [])
         }
     entries.append({"label": label or str(len(entries) + 1), "benches": benches})
     return entries[-max_runs:]
@@ -144,7 +148,7 @@ def render_panel(svg, y0, bench, cases, labels, highlight_n):
     )
     svg.append(
         f'<text x="{MARGIN_L}" y="{y0 + 36}" fill="{TEXT_SECONDARY}" '
-        f'font-size="11">throughput, % of first recorded run · '
+        f'font-size="11">% of first recorded run · '
         f"{len(idx)} cases · {nruns} runs</text>"
     )
 
@@ -281,7 +285,7 @@ def print_table(entries):
             pct = indexed(hist[name])
             cur = next((v for v in reversed(pct) if v is not None), None)
             rel = f"{cur:6.1f}% of first" if cur is not None else "      new"
-            print(f"  {name:<48} {cases[name]:>10.1f} MiB/s  {rel}")
+            print(f"  {name:<48} {cases[name]:>10.1f}  {rel}")
 
 
 def main():
