@@ -41,6 +41,8 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         "experiment" => cmd_experiment(args.get(1).map(|s| s.as_str()), &flags),
         "engine" => cmd_engine(&flags),
         "golden" => cmd_golden(&flags),
+        "serve" => cmd_serve(&flags),
+        "loadgen" => cmd_loadgen(&flags),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -65,6 +67,12 @@ USAGE:
   unilrc engine [--check TIER]        show GF engine tiers + pool + plan cache
                                       (--check exits non-zero if TIER cannot
                                       run on this CPU — the CI matrix probe)
+  unilrc serve   [--data-addr H:P] [--http-addr H:P] [--stripes N]
+                 [--block-kb N] [--seed N] [--fail-nodes N] [--per-tenant N]
+                 [--repair-mbps X] [--repair-burst-kb N] [--wal-dir DIR]
+  unilrc loadgen [--data-addr H:P] [--http-addr H:P] [--sessions N]
+                 [--duration-s X] [--pipeline N] [--seed N]
+                 [--topology-at-s X] [--assert-p99-ms X] [--expect-redirect]
   unilrc golden  [--out FILE]
   unilrc help
 
@@ -101,6 +109,14 @@ Multi-stripe repairs run batched on the engine's persistent worker pool;
 --gf-threads sizes it, --gf-chunk-kb / UNILRC_GF_CHUNK_KB pins the batch
 task granularity (default: adaptive from event size vs. workers).
 --plan-ttl-ms / UNILRC_PLAN_TTL_MS expires cached decode plans (PERF.md).
+
+Serving plane (PERF.md §serving): `serve` boots the pipelined proxy
+front end over real sockets (length-prefixed binary data plane +
+HTTP/JSON control plane with epoch-versioned routing); `loadgen` drives
+it closed-loop with the multi-tenant WorkloadSpec mixes, verifies
+in-order pipelining and stale-epoch redirect recovery, and emits
+latency percentiles (UNILRC_BENCH_JSON=BENCH_serve.json for the CI
+serve-smoke gate).
 ";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -811,6 +827,148 @@ fn cmd_experiment(which: Option<&str>, flags: &HashMap<String, String>) -> anyho
     Ok(())
 }
 
+/// `unilrc serve` knobs → [`crate::serve::ServeConfig`].
+fn serve_config(flags: &HashMap<String, String>) -> anyhow::Result<crate::serve::ServeConfig> {
+    let mut sc = crate::serve::ServeConfig::default();
+    // CI binds fixed ports; tests use :0 ephemerals.
+    if let Some(v) = flags.get("data-addr") {
+        sc.data_addr = v.clone();
+    }
+    if let Some(v) = flags.get("http-addr") {
+        sc.http_addr = v.clone();
+    }
+    if let Some(v) = flags.get("stripes") {
+        sc.stripes = v.parse()?;
+    }
+    if let Some(v) = flags.get("block-kb") {
+        sc.block_size = v.parse::<usize>()? * 1024;
+    }
+    if let Some(v) = flags.get("seed") {
+        sc.seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("fail-nodes") {
+        sc.fail_nodes = v.parse()?;
+    }
+    if let Some(v) = flags.get("per-tenant") {
+        sc.admission.per_tenant = v.parse()?;
+    }
+    if let Some(v) = flags.get("repair-mbps") {
+        sc.admission.repair_rate_bps = v.parse::<f64>()? * 1024.0 * 1024.0 / 8.0;
+    }
+    if let Some(v) = flags.get("repair-burst-kb") {
+        sc.admission.repair_burst = v.parse::<f64>()? * 1024.0;
+    }
+    if let Some(dir) = flags.get("wal-dir") {
+        sc.wal_dir = Some(dir.into());
+    }
+    anyhow::ensure!(sc.stripes > 0, "--stripes must be at least 1");
+    anyhow::ensure!(sc.block_size > 0, "--block-kb must be at least 1");
+    anyhow::ensure!(sc.admission.per_tenant > 0, "--per-tenant must be at least 1");
+    anyhow::ensure!(sc.admission.repair_rate_bps > 0.0, "--repair-mbps must be positive");
+    Ok(sc)
+}
+
+/// `unilrc loadgen` knobs: the closed-loop config plus the CI gate
+/// assertions (`--assert-p99-ms`, `--expect-redirect`).
+fn loadgen_config(
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<(crate::serve::LoadgenConfig, Option<f64>, bool)> {
+    let mut lc = crate::serve::LoadgenConfig::default();
+    if let Some(v) = flags.get("data-addr") {
+        lc.data_addr = v.clone();
+    }
+    if let Some(v) = flags.get("http-addr") {
+        lc.http_addr = v.clone();
+    }
+    if let Some(v) = flags.get("sessions") {
+        lc.sessions = v.parse()?;
+    }
+    if let Some(v) = flags.get("duration-s") {
+        lc.duration = std::time::Duration::from_secs_f64(v.parse()?);
+    }
+    if let Some(v) = flags.get("pipeline") {
+        lc.pipeline = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        lc.seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("topology-at-s") {
+        lc.topology_event_at = Some(std::time::Duration::from_secs_f64(v.parse()?));
+    }
+    let assert_p99 = flags.get("assert-p99-ms").map(|v| v.parse::<f64>()).transpose()?;
+    let expect_redirect = flags.contains_key("expect-redirect");
+    anyhow::ensure!(lc.sessions > 0, "--sessions must be at least 1");
+    anyhow::ensure!(lc.pipeline > 0, "--pipeline must be at least 1");
+    anyhow::ensure!(lc.duration.as_secs_f64() > 0.0, "--duration-s must be positive");
+    if let Some(p) = assert_p99 {
+        anyhow::ensure!(p > 0.0, "--assert-p99-ms must be positive");
+    }
+    Ok((lc, assert_p99, expect_redirect))
+}
+
+/// `unilrc serve` — boot the serving plane and run until killed.
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let sc = serve_config(flags)?;
+    let rt = tokio::runtime::Runtime::new()?;
+    rt.block_on(async move {
+        let handle = crate::serve::bind(sc).await?;
+        println!(
+            "serving: data {} · control http://{} (epoch {})",
+            handle.data_addr(),
+            handle.http_addr(),
+            handle.state().epoch.load(std::sync::atomic::Ordering::Acquire)
+        );
+        handle.wait().await;
+        Ok(())
+    })
+}
+
+/// `unilrc loadgen` — drive a serve instance closed-loop and gate on
+/// the protocol invariants (and optionally tail latency).
+fn cmd_loadgen(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let (lc, assert_p99, expect_redirect) = loadgen_config(flags)?;
+    let r = crate::serve::run_loadgen(&lc).map_err(|e| anyhow::anyhow!(e))?;
+    println!("=== loadgen — closed loop, {} sessions × {} deep ===", lc.sessions, lc.pipeline);
+    println!("  requests {}   ok {}   repairs {}", r.requests, r.ok, r.repairs);
+    println!(
+        "  foreground latency p50 {:>8.3} ms   p95 {:>8.3} ms   p99 {:>8.3} ms",
+        r.p50_ms, r.p95_ms, r.p99_ms
+    );
+    println!(
+        "  stale redirects {} (unrecovered {})   protocol errors {}   op errors {}   \
+         order violations {}",
+        r.stale_redirects, r.unrecovered_redirects, r.protocol_errors, r.op_errors,
+        r.in_order_violations
+    );
+    anyhow::ensure!(r.protocol_errors == 0, "{} protocol error(s)", r.protocol_errors);
+    anyhow::ensure!(r.op_errors == 0, "{} op error(s)", r.op_errors);
+    anyhow::ensure!(
+        r.unrecovered_redirects == 0,
+        "{} stale-epoch redirect(s) never recovered",
+        r.unrecovered_redirects
+    );
+    anyhow::ensure!(
+        r.in_order_violations == 0,
+        "{} pipelined response(s) out of order",
+        r.in_order_violations
+    );
+    anyhow::ensure!(r.ok > 0, "loadgen completed zero operations");
+    if expect_redirect {
+        anyhow::ensure!(
+            r.stale_redirects > 0,
+            "--expect-redirect: no StaleEpoch was observed during the run"
+        );
+    }
+    if let Some(bound) = assert_p99 {
+        anyhow::ensure!(
+            r.p99_ms <= bound,
+            "foreground p99 {:.3} ms exceeds the {bound:.3} ms bound",
+            r.p99_ms
+        );
+    }
+    Ok(())
+}
+
 /// Emit golden encode vectors shared with the python test-suite:
 /// `alpha z <comma-separated stripe bytes>` per scheme, for the
 /// deterministic message `data[j] = (j*31 + 7) mod 256`.
@@ -1041,6 +1199,73 @@ mod tests {
         ]);
         assert!(migration_config(&bad).is_err());
         assert!(migration_config(&parse_flags(&["--max-attempts".into(), "0".into()])).is_err());
+    }
+
+    #[test]
+    fn serve_flags_parse_and_override_defaults() {
+        let f = parse_flags(&[
+            "--data-addr".into(),
+            "127.0.0.1:4700".into(),
+            "--stripes".into(),
+            "8".into(),
+            "--block-kb".into(),
+            "32".into(),
+            "--fail-nodes".into(),
+            "2".into(),
+            "--per-tenant".into(),
+            "16".into(),
+            "--repair-mbps".into(),
+            "80".into(),
+        ]);
+        let sc = serve_config(&f).unwrap();
+        assert_eq!(sc.data_addr, "127.0.0.1:4700");
+        assert_eq!(sc.stripes, 8);
+        assert_eq!(sc.block_size, 32 * 1024);
+        assert_eq!(sc.fail_nodes, 2);
+        assert_eq!(sc.admission.per_tenant, 16);
+        assert!((sc.admission.repair_rate_bps - 80.0 * 1024.0 * 1024.0 / 8.0).abs() < 1e-6);
+        // unset knobs keep their defaults
+        let d = crate::serve::ServeConfig::default();
+        assert_eq!(sc.http_addr, d.http_addr);
+        assert_eq!(sc.seed, d.seed);
+        assert!(sc.wal_dir.is_none());
+        // degenerate knobs are rejected up front
+        assert!(serve_config(&parse_flags(&["--stripes".into(), "0".into()])).is_err());
+        assert!(serve_config(&parse_flags(&["--per-tenant".into(), "0".into()])).is_err());
+        assert!(serve_config(&parse_flags(&["--repair-mbps".into(), "0".into()])).is_err());
+    }
+
+    #[test]
+    fn loadgen_flags_parse_and_gate_args() {
+        let f = parse_flags(&[
+            "--sessions".into(),
+            "4".into(),
+            "--duration-s".into(),
+            "2.5".into(),
+            "--pipeline".into(),
+            "8".into(),
+            "--topology-at-s".into(),
+            "1".into(),
+            "--assert-p99-ms".into(),
+            "250".into(),
+            "--expect-redirect".into(),
+        ]);
+        let (lc, p99, redirect) = loadgen_config(&f).unwrap();
+        assert_eq!(lc.sessions, 4);
+        assert_eq!(lc.pipeline, 8);
+        assert!((lc.duration.as_secs_f64() - 2.5).abs() < 1e-9);
+        assert_eq!(lc.topology_event_at, Some(std::time::Duration::from_secs(1)));
+        assert_eq!(p99, Some(250.0));
+        assert!(redirect);
+        // steady-state defaults: no event, no latency gate
+        let (d, p, r) = loadgen_config(&HashMap::new()).unwrap();
+        assert!(d.topology_event_at.is_none());
+        assert!(p.is_none());
+        assert!(!r);
+        // degenerate knobs are rejected up front
+        assert!(loadgen_config(&parse_flags(&["--sessions".into(), "0".into()])).is_err());
+        assert!(loadgen_config(&parse_flags(&["--duration-s".into(), "0".into()])).is_err());
+        assert!(loadgen_config(&parse_flags(&["--assert-p99-ms".into(), "0".into()])).is_err());
     }
 
     #[test]

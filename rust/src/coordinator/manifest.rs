@@ -27,7 +27,8 @@ use std::path::{Path, PathBuf};
 /// File magic: identifies a UniLRC manifest.
 pub const MANIFEST_MAGIC: &[u8; 8] = b"UNILRCMF";
 /// On-disk format version. Bump on any encoding change.
-pub const MANIFEST_VERSION: u32 = 1;
+/// v2: metadata epoch added to the payload header (serving plane).
+pub const MANIFEST_VERSION: u32 = 2;
 /// Current-generation snapshot file name.
 pub const MANIFEST_CURRENT: &str = "MANIFEST.bin";
 /// Previous-generation snapshot file name (fallback).
@@ -427,6 +428,11 @@ pub struct Manifest {
     /// Committed logical operations folded into this snapshot — lets a
     /// deterministic driver resume its op list after recovery.
     pub committed_ops: u64,
+    /// Metadata epoch at snapshot time (version 2). Recovery seeds the
+    /// serving plane's epoch as the max of this and every replayed
+    /// [`super::wal::WalRecord::Epoch`] record, so a crash can never
+    /// resurrect an epoch a client already saw superseded.
+    pub epoch: u64,
 }
 
 impl Manifest {
@@ -435,6 +441,7 @@ impl Manifest {
         let mut payload = Vec::with_capacity(256);
         put_u64(&mut payload, self.last_seq);
         put_u64(&mut payload, self.committed_ops);
+        put_u64(&mut payload, self.epoch);
         self.state.encode_into(&mut payload);
         let mut out = Vec::with_capacity(payload.len() + 20);
         out.extend_from_slice(MANIFEST_MAGIC);
@@ -471,9 +478,10 @@ impl Manifest {
         let mut cur = Cursor::new(payload);
         let last_seq = cur.u64()?;
         let committed_ops = cur.u64()?;
+        let epoch = cur.u64()?;
         let state = CoordinatorState::decode_from(&mut cur)?;
         cur.done()?;
-        Ok(Manifest { state, last_seq, committed_ops })
+        Ok(Manifest { state, last_seq, committed_ops, epoch })
     }
 }
 
@@ -611,7 +619,7 @@ mod tests {
     fn state_round_trips_through_manifest() {
         let state = sample_state();
         assert!(state.prove_invariants().is_ok());
-        let m = Manifest { state, last_seq: 17, committed_ops: 5 };
+        let m = Manifest { state, last_seq: 17, committed_ops: 5, epoch: 12 };
         let decoded = Manifest::decode(&m.encode()).unwrap();
         assert_eq!(decoded, m);
         assert_eq!(decoded.state.digest(), m.state.digest());
@@ -635,7 +643,7 @@ mod tests {
 
     #[test]
     fn every_flipped_byte_is_rejected_or_equal() {
-        let m = Manifest { state: sample_state(), last_seq: 3, committed_ops: 2 };
+        let m = Manifest { state: sample_state(), last_seq: 3, committed_ops: 2, epoch: 4 };
         let good = m.encode();
         for at in 0..good.len() {
             let mut bad = good.clone();
@@ -649,7 +657,7 @@ mod tests {
 
     #[test]
     fn truncations_are_rejected() {
-        let m = Manifest { state: sample_state(), last_seq: 3, committed_ops: 2 };
+        let m = Manifest { state: sample_state(), last_seq: 3, committed_ops: 2, epoch: 4 };
         let good = m.encode();
         for len in 0..good.len() {
             assert!(Manifest::decode(&good[..len]).is_err(), "truncation to {len} accepted");
@@ -680,7 +688,7 @@ mod tests {
         let store = ManifestStore::new(&dir);
         assert!(matches!(store.load(), Err(ManifestLoadError::Missing)));
 
-        let m1 = Manifest { state: sample_state(), last_seq: 1, committed_ops: 1 };
+        let m1 = Manifest { state: sample_state(), last_seq: 1, committed_ops: 1, epoch: 2 };
         let mut m2 = m1.clone();
         m2.last_seq = 9;
         store.write(&m1).unwrap();

@@ -103,6 +103,15 @@ pub struct Dss {
     /// In-flight background (online) migrations — see
     /// [`Dss::submit_topology_event`] / [`Dss::pump_migrations`].
     online: OnlineMigrations,
+    /// Metadata epoch: bumped on every committed routing mutation
+    /// (stripe ingest, failure-set change, migration commit/abort) and
+    /// persisted as `WalRecord::Epoch` / `Manifest::epoch` so the
+    /// serving plane's `StaleEpoch` protocol survives a crash. Starts
+    /// at 1; deliberately **not** part of [`CoordinatorState`] — the
+    /// exp9 oracle compares digests of logical state, and a generation
+    /// counter differing between a crashed run and its never-crashed
+    /// oracle is expected, not a divergence.
+    epoch: u64,
 }
 
 impl Dss {
@@ -131,6 +140,7 @@ impl Dss {
             clock: 0.0,
             journal: None,
             online: OnlineMigrations::default(),
+            epoch: 1,
         }
     }
 
@@ -199,6 +209,7 @@ impl Dss {
             clock: 0.0,
             journal: None,
             online: OnlineMigrations::default(),
+            epoch: 1,
         })
     }
 
@@ -241,8 +252,29 @@ impl Dss {
             self.online.events.len()
         );
         let state = self.capture_state();
-        self.journal = Some(Journal::create(dir, &state, opts)?);
+        self.journal = Some(Journal::create(dir, &state, self.epoch, opts)?);
         Ok(())
+    }
+
+    /// Current metadata epoch (see the `epoch` field).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Override the epoch — the restore path after crash recovery must
+    /// resume *past* [`crate::coordinator::recovery::Recovered::epoch`]
+    /// (callers pass `recovered.epoch + 1`) so no pre-crash routing
+    /// table ever validates as current again.
+    pub fn set_epoch(&mut self, epoch: u64) {
+        self.epoch = epoch;
+    }
+
+    /// Bump the epoch and return the WAL record carrying the new value.
+    /// Callers append the record in the same group as the mutation it
+    /// stamps, keeping bump-and-log atomic under group replay.
+    fn bump_epoch(&mut self) -> WalRecord {
+        self.epoch += 1;
+        WalRecord::Epoch { epoch: self.epoch }
     }
 
     /// The journal, when durability is enabled (report metrics: WAL
@@ -295,10 +327,11 @@ impl Dss {
         }
         if self.journal.as_ref().is_some_and(|j| j.snapshot_due()) {
             let state = self.capture_state();
+            let epoch = self.epoch;
             self.journal
                 .as_mut()
                 .expect("journal checked above")
-                .snapshot(&state)
+                .snapshot(&state, epoch)
                 .expect("manifest snapshot failed — cannot keep durability promise");
         }
     }
@@ -329,10 +362,14 @@ impl Dss {
         // Log-then-apply: the placement is computed (pure), journaled as
         // an `AddStripe` record, and only then committed to the map.
         let placement = self.meta.place_next_stripe(&self.code, &self.topo);
-        self.log_op(&[WalRecord::AddStripe {
-            cluster_of: placement.cluster_of.iter().map(|&c| c as u32).collect(),
-            node_of: placement.node_of.iter().map(|&n| n as u32).collect(),
-        }]);
+        let epoch = self.bump_epoch();
+        self.log_op(&[
+            WalRecord::AddStripe {
+                cluster_of: placement.cluster_of.iter().map(|&c| c as u32).collect(),
+                node_of: placement.node_of.iter().map(|&n| n as u32).collect(),
+            },
+            epoch,
+        ]);
         let id = self.meta.add_stripe_with_placement(blocks, placement, self.topo.clusters());
         self.maybe_snapshot();
         Ok(id)
@@ -345,14 +382,16 @@ impl Dss {
     /// node's blocks are simply unreadable by operations.
     pub fn fail_node(&mut self, node: usize) {
         assert!(node < self.topo.total_nodes());
-        self.log_op(&[WalRecord::SetFailed { node: node as u32, down: true }]);
+        let epoch = self.bump_epoch();
+        self.log_op(&[WalRecord::SetFailed { node: node as u32, down: true }, epoch]);
         self.failed.insert(node);
         self.maybe_snapshot();
     }
 
     pub fn heal_node(&mut self, node: usize) {
         assert!(node < self.topo.total_nodes());
-        self.log_op(&[WalRecord::SetFailed { node: node as u32, down: false }]);
+        let epoch = self.bump_epoch();
+        self.log_op(&[WalRecord::SetFailed { node: node as u32, down: false }, epoch]);
         self.failed.remove(&node);
         self.maybe_snapshot();
     }
@@ -921,6 +960,10 @@ impl Dss {
             to_node: mv.to_node as u32,
         }));
         records.extend(post);
+        // Peek, don't bump: the in-memory epoch advances exactly once in
+        // `commit_migration` (which runs with or without a journal); the
+        // log carries the value it will advance to.
+        records.push(WalRecord::Epoch { epoch: self.epoch + 1 });
         records.push(WalRecord::CommitEvent);
         self.journal
             .as_mut()
@@ -1013,6 +1056,7 @@ impl Dss {
         for mv in &plan.moves {
             self.meta.move_block(mv.stripe, mv.block, mv.to_cluster, mv.to_node);
         }
+        self.epoch += 1; // matches the Epoch record log_event staged
         self.clock = exec.done;
         MigrationReport {
             event,
@@ -1060,8 +1104,13 @@ impl Dss {
             debug_assert!(claimed, "conflict check precedes claims");
             self.online.reserved.insert((mv.stripe, mv.to_node));
         }
+        // Admission mutates routing state (topology joins, Migrating
+        // claims), so it advances the epoch — this is what makes the
+        // serving plane's stale-epoch redirect deterministic right after
+        // a topology submission, before any move commits.
+        let epoch = self.bump_epoch();
         if self.journal.is_some() {
-            let mut records = Vec::with_capacity(plan.len() + 1);
+            let mut records = Vec::with_capacity(plan.len() + 2);
             records.push(WalRecord::BeginOnline {
                 event_id: id,
                 event: wal::WalEvent::from_event(ev),
@@ -1076,6 +1125,7 @@ impl Dss {
                 to_cluster: mv.to_cluster as u32,
                 to_node: mv.to_node as u32,
             }));
+            records.push(epoch);
             self.journal
                 .as_mut()
                 .expect("journal checked above")
@@ -1441,16 +1491,20 @@ impl Dss {
     /// claim in the map, release the reservation, advance the clock.
     fn commit_online_move(&mut self, idx: usize, mv: &BlockMove, done_at: f64, rebuilt: bool) {
         let id = self.online.events[idx].id;
+        let epoch = self.bump_epoch();
         if let Some(j) = self.journal.as_mut() {
-            j.append_op_part(&[WalRecord::OnlineMove {
-                event_id: id,
-                done: true,
-                stripe: mv.stripe as u32,
-                block: mv.block as u32,
-                from_node: mv.from_node as u32,
-                to_cluster: mv.to_cluster as u32,
-                to_node: mv.to_node as u32,
-            }])
+            j.append_op_part(&[
+                WalRecord::OnlineMove {
+                    event_id: id,
+                    done: true,
+                    stripe: mv.stripe as u32,
+                    block: mv.block as u32,
+                    from_node: mv.from_node as u32,
+                    to_cluster: mv.to_cluster as u32,
+                    to_node: mv.to_node as u32,
+                },
+                epoch,
+            ])
             .expect("WAL append failed — cannot keep durability promise");
         }
         self.meta.commit_move(mv.stripe, mv.block);
@@ -1476,8 +1530,9 @@ impl Dss {
     /// apply the completion topology mutation, report.
     fn complete_online(&mut self, idx: usize) -> MigrationReport {
         let ev = self.online.events.remove(idx);
+        let epoch = self.bump_epoch();
         if let Some(j) = self.journal.as_mut() {
-            j.commit_op(&[WalRecord::CommitOnline { event_id: ev.id }])
+            j.commit_op(&[WalRecord::CommitOnline { event_id: ev.id }, epoch])
                 .expect("WAL append failed — cannot keep durability promise");
         }
         match ev.event {
@@ -1595,8 +1650,9 @@ impl Dss {
                 ),
             });
         }
+        let epoch = self.bump_epoch();
         if let Some(j) = self.journal.as_mut() {
-            j.commit_op(&[WalRecord::AbortOnline { event_id }])
+            j.commit_op(&[WalRecord::AbortOnline { event_id }, epoch])
                 .expect("WAL append failed — cannot keep durability promise");
         }
         let ev = self.online.events.remove(idx);

@@ -100,6 +100,11 @@ pub struct Recovered {
     /// is the recorded plan's uncommitted tail, resumable via
     /// [`crate::coordinator::Dss::resume_online`]. Sorted by `event_id`.
     pub pending_online: Vec<PendingOnline>,
+    /// Recovered metadata epoch: the max over the snapshot's epoch and
+    /// every replayed `Epoch` record. A restarted server must resume at
+    /// an epoch **greater** than this so no routing table a client
+    /// cached before the crash can ever validate as current again.
+    pub epoch: u64,
     /// The final segment ended in an incomplete record (crash mid-append).
     pub torn_tail: bool,
     /// The current manifest generation was unreadable and the previous
@@ -277,7 +282,8 @@ impl Replayer {
             | WalRecord::BeginOnline { .. }
             | WalRecord::OnlineMove { .. }
             | WalRecord::CommitOnline { .. }
-            | WalRecord::AbortOnline { .. } => {
+            | WalRecord::AbortOnline { .. }
+            | WalRecord::Epoch { .. } => {
                 Err("group marker cannot be applied as a mutation".into())
             }
         }
@@ -438,6 +444,7 @@ pub fn recover(dir: &Path) -> Result<Recovered, RecoveryError> {
 
     let mut replayer = Replayer::from_state(&manifest.state);
     let mut committed_ops = manifest.committed_ops;
+    let mut max_epoch = manifest.epoch;
     let mut expected_seq = manifest.last_seq + 1;
     let mut replayed = 0usize;
     let mut torn_tail = false;
@@ -463,6 +470,15 @@ pub fn recover(dir: &Path) -> Result<Recovered, RecoveryError> {
             replayed += 1;
             let unreplayable = |detail: String| RecoveryError::Unreplayable { seq, detail };
             match record {
+                // Epoch advances are never operations themselves — they
+                // ride standalone or inside any group and fold into a
+                // running max regardless of whether their group commits
+                // (monotonicity is the only contract; a client that saw
+                // epoch E must never see it current again after a crash,
+                // even if E's mutation itself rolled back).
+                WalRecord::Epoch { epoch } => {
+                    max_epoch = max_epoch.max(epoch);
+                }
                 WalRecord::BeginEvent { event } => {
                     if staged.is_some() {
                         return Err(unreplayable("nested BeginEvent".into()));
@@ -689,6 +705,7 @@ pub fn recover(dir: &Path) -> Result<Recovered, RecoveryError> {
         replayed_records: replayed,
         pending_event,
         pending_online,
+        epoch: max_epoch,
         torn_tail,
         used_fallback: loaded.used_fallback,
     })

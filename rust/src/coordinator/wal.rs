@@ -98,6 +98,13 @@ pub enum WalRecord {
     /// Online event unwound before completion: replay rolls back its
     /// admission mutation and forgets its claims.
     AbortOnline { event_id: u32 },
+    /// Metadata-epoch advance. Appended alongside every committed
+    /// routing mutation (stripe ingest, failure-set change, migration
+    /// commit) so the serving plane's `StaleEpoch` protocol survives a
+    /// crash: recovery takes the max over the manifest epoch and every
+    /// replayed `Epoch` record. Never a committed operation by itself
+    /// and valid both standalone and inside a group.
+    Epoch { epoch: u64 },
 }
 
 /// Encodable mirror of [`TopologyEvent`] for `BeginEvent` records.
@@ -147,6 +154,7 @@ impl WalRecord {
             WalRecord::OnlineMove { .. } => 11,
             WalRecord::CommitOnline { .. } => 12,
             WalRecord::AbortOnline { .. } => 13,
+            WalRecord::Epoch { .. } => 14,
         }
     }
 
@@ -200,6 +208,7 @@ impl WalRecord {
             }
             WalRecord::CommitOnline { event_id } => put_u32(buf, *event_id),
             WalRecord::AbortOnline { event_id } => put_u32(buf, *event_id),
+            WalRecord::Epoch { epoch } => put_u64(buf, *epoch),
         }
     }
 
@@ -249,6 +258,7 @@ impl WalRecord {
             },
             12 => WalRecord::CommitOnline { event_id: cur.u32()? },
             13 => WalRecord::AbortOnline { event_id: cur.u32()? },
+            14 => WalRecord::Epoch { epoch: cur.u64()? },
             k => return Err(format!("unknown record kind {k}")),
         };
         cur.done()?;
@@ -469,6 +479,7 @@ impl Journal {
     pub fn create(
         dir: &Path,
         state: &CoordinatorState,
+        epoch: u64,
         opts: DurabilityOptions,
     ) -> anyhow::Result<Journal> {
         fs::create_dir_all(dir)?;
@@ -478,7 +489,7 @@ impl Journal {
             "journal directory {} already holds a journal — recover or clear it first",
             dir.display()
         );
-        store.write(&Manifest { state: state.clone(), last_seq: 0, committed_ops: 0 })?;
+        store.write(&Manifest { state: state.clone(), last_seq: 0, committed_ops: 0, epoch })?;
         let writer = WalWriter::open(dir, 1, opts.sync_every)?;
         Ok(Journal {
             dir: dir.to_path_buf(),
@@ -550,12 +561,13 @@ impl Journal {
     /// segment, and truncate: delete every segment fully covered by the
     /// *previous* manifest generation (so either surviving snapshot can
     /// still replay to the tip).
-    pub fn snapshot(&mut self, state: &CoordinatorState) -> anyhow::Result<()> {
+    pub fn snapshot(&mut self, state: &CoordinatorState, epoch: u64) -> anyhow::Result<()> {
         self.writer.sync()?;
         self.store.write(&Manifest {
             state: state.clone(),
             last_seq: self.last_seq,
             committed_ops: self.committed_ops,
+            epoch,
         })?;
         // Rotate: next record starts a fresh segment aligned with this
         // snapshot's high-water mark.
@@ -616,6 +628,7 @@ mod tests {
             },
             WalRecord::CommitOnline { event_id: 3 },
             WalRecord::AbortOnline { event_id: 4 },
+            WalRecord::Epoch { epoch: 17 },
         ]
     }
 
@@ -652,7 +665,7 @@ mod tests {
         }
         let (full, end) = scan_segment(&bytes);
         assert_eq!(end, ScanEnd::Clean);
-        assert_eq!(full.len(), 14);
+        assert_eq!(full.len(), 15);
         // every strict prefix is either clean at a boundary or torn
         for cut in 0..bytes.len() {
             let (recs, end) = scan_segment(&bytes[..cut]);
@@ -694,18 +707,18 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let mut w = WalWriter::open(&dir, 1, 2).unwrap();
         let last = w.append_group(&sample_records()).unwrap();
-        assert_eq!(last, 14);
+        assert_eq!(last, 15);
         let last = w
             .append_group(&[WalRecord::SetFailed { node: 1, down: false }])
             .unwrap();
-        assert_eq!(last, 15);
+        assert_eq!(last, 16);
         w.sync().unwrap();
         let segs = list_segments(&dir).unwrap();
         assert_eq!(segs.len(), 1);
         assert_eq!(segs[0].0, 1);
         let (recs, end) = scan_segment(&fs::read(&segs[0].1).unwrap());
         assert_eq!(end, ScanEnd::Clean);
-        assert_eq!(recs.len(), 15);
+        assert_eq!(recs.len(), 16);
         assert!(recs.windows(2).all(|pair| pair[1].seq == pair[0].seq + 1));
         let _ = fs::remove_dir_all(&dir);
     }

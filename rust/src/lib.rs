@@ -29,4 +29,5 @@ pub mod placement;
 pub mod prng;
 pub mod proxy;
 pub mod runtime;
+pub mod serve;
 pub mod sim;

@@ -1,0 +1,122 @@
+//! Epoch-stamped routing tables.
+//!
+//! A [`RoutingTable`] is what the control API hands a proxy/client: a
+//! consistent snapshot of where every block lives, which blocks are
+//! failed, and the metadata epoch the snapshot was taken at. Clients
+//! stamp data-plane requests with that epoch; the server compares it
+//! against the live [`crate::coordinator::Dss::epoch`] and answers
+//! `StaleEpoch` on mismatch, so a client can never act on routing that
+//! a migration commit, failure, or ingest has since invalidated.
+
+use crate::coordinator::Dss;
+
+/// A consistent, epoch-stamped snapshot of the cluster's routing state.
+#[derive(Debug, Clone)]
+pub struct RoutingTable {
+    /// Epoch at capture; any later routing mutation makes it stale.
+    pub epoch: u64,
+    pub stripes: usize,
+    /// Data blocks per stripe (`k`).
+    pub k: usize,
+    /// Total blocks per stripe (`n`).
+    pub n: usize,
+    /// `node_of[stripe][block]` — current home of every block.
+    pub node_of: Vec<Vec<u32>>,
+    /// `(stripe, block)` pairs currently unreadable (failed node) —
+    /// the targets degraded reads and repairs are aimed at.
+    pub failed_blocks: Vec<(u32, u32)>,
+    /// Blocks mid-migration (`BlockState::Migrating`), still served
+    /// from their source until commit.
+    pub migrating: usize,
+}
+
+impl RoutingTable {
+    /// Capture the current table. Callers hold the server's Dss lock,
+    /// so the epoch and the routing rows are mutually consistent.
+    pub fn capture(dss: &Dss) -> RoutingTable {
+        let meta = dss.metadata();
+        let stripes = meta.stripe_count();
+        let n = dss.code.n();
+        let mut node_of = Vec::with_capacity(stripes);
+        let mut failed_blocks = Vec::new();
+        for s in 0..stripes {
+            let mut row = Vec::with_capacity(n);
+            for b in 0..n {
+                row.push(meta.node_of(s, b) as u32);
+            }
+            node_of.push(row);
+            for b in dss.failed_blocks(s) {
+                failed_blocks.push((s as u32, b as u32));
+            }
+        }
+        RoutingTable {
+            epoch: dss.epoch(),
+            stripes,
+            k: dss.code.k(),
+            n,
+            node_of,
+            failed_blocks,
+            migrating: meta.block_map().migrating_count(),
+        }
+    }
+
+    /// Failed *data* blocks only — valid degraded-read targets.
+    pub fn failed_data_blocks(&self) -> Vec<(u32, u32)> {
+        self.failed_blocks.iter().copied().filter(|&(_, b)| (b as usize) < self.k).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::CodeFamily;
+    use crate::experiments::{build_dss, ExpConfig};
+    use crate::prng::Prng;
+
+    fn dss() -> Dss {
+        let cfg = ExpConfig {
+            block_size: 4096,
+            stripes: 2,
+            time_compute: false,
+            ..ExpConfig::default()
+        };
+        let mut dss = build_dss(CodeFamily::UniLrc, &cfg);
+        let mut prng = Prng::new(cfg.seed);
+        dss.ingest_random_stripes(cfg.stripes, &mut prng).unwrap();
+        dss
+    }
+
+    #[test]
+    fn capture_is_consistent_with_the_live_epoch() {
+        let mut dss = dss();
+        let t0 = RoutingTable::capture(&dss);
+        assert_eq!(t0.epoch, dss.epoch());
+        assert_eq!(t0.stripes, 2);
+        assert_eq!(t0.node_of.len(), 2);
+        assert!(t0.failed_blocks.is_empty());
+
+        // A failure bumps the epoch and shows up in the next capture.
+        let victim = dss.metadata().node_of(0, 0);
+        dss.fail_node(victim);
+        let t1 = RoutingTable::capture(&dss);
+        assert!(t1.epoch > t0.epoch);
+        assert!(t1.failed_blocks.contains(&(0, 0)));
+        assert!(t1.failed_data_blocks().iter().all(|&(_, b)| (b as usize) < t1.k));
+    }
+
+    #[test]
+    fn every_routing_mutation_bumps_the_epoch() {
+        let mut dss = dss();
+        let mut last = dss.epoch();
+        let victim = dss.metadata().node_of(1, 1);
+        dss.fail_node(victim);
+        assert!(dss.epoch() > last, "fail_node must bump");
+        last = dss.epoch();
+        dss.heal_node(victim);
+        assert!(dss.epoch() > last, "heal_node must bump");
+        last = dss.epoch();
+        let mut prng = Prng::new(7);
+        dss.ingest_random_stripes(1, &mut prng).unwrap();
+        assert!(dss.epoch() > last, "ingest must bump");
+    }
+}

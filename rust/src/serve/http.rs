@@ -1,0 +1,283 @@
+//! Coordinator control API: hand-rolled HTTP/1.1 + JSON, one request
+//! per connection (`Connection: close`), no external dependencies.
+//!
+//! Routes:
+//!
+//! * `GET /v1/epoch` — `{"epoch":N}`; the cheap poll clients use to
+//!   refresh after a `StaleEpoch` redirect.
+//! * `GET /v1/route` — the full epoch-stamped [`RoutingTable`].
+//! * `GET /v1/cluster` — code/topology/failure summary.
+//! * `GET /v1/stats` — serving counters + admission + migration state.
+//! * `POST /v1/topology?event=add_node&cluster=C` (also `add_cluster`
+//!   `&nodes=N`, `drain&node=N`, `decommission&cluster=C`) — submit a
+//!   topology event; admission bumps the epoch and starts the pump.
+//! * `POST /v1/failures?node=N[&heal=1]` — report a failure (or heal).
+//!
+//! The JSON emitters/parsers here are the deliberately tiny flat-object
+//! subset the loadgen needs — not a general JSON library.
+
+use crate::placement::TopologyEvent;
+use crate::serve::epoch::RoutingTable;
+use crate::serve::server::{submit_topology, ServeState};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use tokio::net::TcpStream;
+
+/// Serve one control-API connection to completion.
+pub async fn run_http(stream: TcpStream, state: Arc<ServeState>) {
+    let (mut reader, mut writer) = stream.into_split();
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    while !header_complete(&buf) && buf.len() < 8192 {
+        match reader.read(&mut chunk).await {
+            Ok(0) | Err(_) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+        }
+    }
+    let text = String::from_utf8_lossy(&buf);
+    let first = text.lines().next().unwrap_or("");
+    let mut parts = first.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let (status, body) = route(&state, method, path, query);
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = writer.write_all(resp.as_bytes()).await;
+    let _ = writer.flush().await;
+    let _ = writer.shutdown_now();
+}
+
+fn header_complete(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n")
+}
+
+fn route(state: &Arc<ServeState>, method: &str, path: &str, query: &str) -> (&'static str, String) {
+    match (method, path) {
+        ("GET", "/v1/epoch") => {
+            let epoch = state.epoch.load(Ordering::Acquire);
+            ("200 OK", format!("{{\"epoch\":{epoch}}}"))
+        }
+        ("GET", "/v1/route") => {
+            let table = RoutingTable::capture(&state.dss());
+            ("200 OK", route_json(&table))
+        }
+        ("GET", "/v1/cluster") => {
+            let dss = state.dss();
+            let mut failed: Vec<usize> = dss.failed_nodes().iter().copied().collect();
+            failed.sort_unstable();
+            let body = format!(
+                "{{\"code\":\"{}\",\"k\":{},\"n\":{},\"clusters\":{},\"nodes\":{},\"stripes\":{},\"failed_nodes\":{},\"migrating\":{},\"epoch\":{}}}",
+                dss.code.name(),
+                dss.code.k(),
+                dss.code.n(),
+                dss.topo.clusters(),
+                dss.topo.total_nodes(),
+                dss.metadata().stripe_count(),
+                json_usize_array(&failed),
+                dss.metadata().block_map().migrating_count(),
+                dss.epoch(),
+            );
+            ("200 OK", body)
+        }
+        ("GET", "/v1/stats") => {
+            let (in_flight, parked, clock) = {
+                let dss = state.dss();
+                (dss.online_in_flight(), dss.parked_events().len(), dss.clock())
+            };
+            let s = &state.stats;
+            let body = format!(
+                "{{\"epoch\":{},\"sessions\":{},\"requests\":{},\"responses_ok\":{},\"stale_redirects\":{},\"protocol_errors\":{},\"op_errors\":{},\"frames_out\":{},\"flushes\":{},\"admitted_fg\":{},\"admitted_bg\":{},\"bg_waits\":{},\"online_in_flight\":{in_flight},\"parked_events\":{parked},\"virtual_clock\":{clock:.6}}}",
+                state.epoch.load(Ordering::Acquire),
+                s.sessions.load(Ordering::Relaxed),
+                s.requests.load(Ordering::Relaxed),
+                s.responses_ok.load(Ordering::Relaxed),
+                s.stale_redirects.load(Ordering::Relaxed),
+                s.protocol_errors.load(Ordering::Relaxed),
+                s.op_errors.load(Ordering::Relaxed),
+                s.frames_out.load(Ordering::Relaxed),
+                s.flushes.load(Ordering::Relaxed),
+                state.admission.admitted_fg.load(Ordering::Relaxed),
+                state.admission.admitted_bg.load(Ordering::Relaxed),
+                state.admission.bg_waits.load(Ordering::Relaxed),
+            );
+            ("200 OK", body)
+        }
+        ("POST", "/v1/topology") => match parse_topology_event(query) {
+            Ok(ev) => match submit_topology(state, ev) {
+                Ok((id, epoch)) => ("200 OK", format!("{{\"event_id\":{id},\"epoch\":{epoch}}}")),
+                Err(e) => {
+                    ("409 Conflict", format!("{{\"error\":\"{}\"}}", json_escape(&e.to_string())))
+                }
+            },
+            Err(msg) => ("400 Bad Request", format!("{{\"error\":\"{msg}\"}}")),
+        },
+        ("POST", "/v1/failures") => {
+            let Some(node) = query_param(query, "node").and_then(|v| v.parse::<usize>().ok())
+            else {
+                return ("400 Bad Request", "{\"error\":\"node=N required\"}".to_string());
+            };
+            let heal = query_param(query, "heal").is_some();
+            let mut dss = state.dss();
+            if node >= dss.topo.total_nodes() {
+                return ("400 Bad Request", format!("{{\"error\":\"no such node {node}\"}}"));
+            }
+            if heal {
+                dss.heal_node(node);
+            } else {
+                dss.fail_node(node);
+            }
+            state.sync_epoch(&dss);
+            ("200 OK", format!("{{\"node\":{node},\"healed\":{heal},\"epoch\":{}}}", dss.epoch()))
+        }
+        _ => ("404 Not Found", "{\"error\":\"not found\"}".to_string()),
+    }
+}
+
+fn parse_topology_event(query: &str) -> Result<TopologyEvent, String> {
+    let kind = query_param(query, "event").ok_or("event=... required")?;
+    let num = |key: &str| {
+        query_param(query, key)
+            .and_then(|v| v.parse::<usize>().ok())
+            .ok_or_else(|| format!("{key}=N required for event={kind}"))
+    };
+    match kind {
+        "add_node" => Ok(TopologyEvent::AddNode { cluster: num("cluster")? }),
+        "add_cluster" => Ok(TopologyEvent::AddCluster { nodes: num("nodes")? }),
+        "drain" => Ok(TopologyEvent::DrainNode { node: num("node")? }),
+        "decommission" => Ok(TopologyEvent::DecommissionCluster { cluster: num("cluster")? }),
+        other => Err(format!("unknown event '{other}'")),
+    }
+}
+
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        (k == key).then_some(v)
+    })
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn json_usize_array(xs: &[usize]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+fn route_json(t: &RoutingTable) -> String {
+    let rows: Vec<String> = t
+        .node_of
+        .iter()
+        .map(|row| {
+            let cells: Vec<String> = row.iter().map(|n| n.to_string()).collect();
+            format!("[{}]", cells.join(","))
+        })
+        .collect();
+    let failed: Vec<String> =
+        t.failed_blocks.iter().map(|(s, b)| format!("[{s},{b}]")).collect();
+    format!(
+        "{{\"epoch\":{},\"stripes\":{},\"k\":{},\"n\":{},\"migrating\":{},\"node_of\":[{}],\"failed_blocks\":[{}]}}",
+        t.epoch,
+        t.stripes,
+        t.k,
+        t.n,
+        t.migrating,
+        rows.join(","),
+        failed.join(","),
+    )
+}
+
+// ------------------------------------------------------------------ JSON
+// Tiny flat-JSON readers shared with the loadgen's HTTP client side.
+
+/// Extract an unsigned integer field (`"key":123`) from a flat JSON
+/// object. Not a general parser — exactly what `/v1/epoch`-style
+/// replies need.
+pub fn json_u64(body: &str, key: &str) -> Option<u64> {
+    let needle = format!("\"{key}\":");
+    let at = body.find(&needle)? + needle.len();
+    let rest = &body[at..];
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+/// Extract an array of `[a,b]` pairs (`"key":[[0,1],[2,3]]`).
+pub fn json_pairs(body: &str, key: &str) -> Vec<(u32, u32)> {
+    let needle = format!("\"{key}\":[");
+    let Some(start) = body.find(&needle).map(|i| i + needle.len()) else {
+        return Vec::new();
+    };
+    // Bound the enclosing array by bracket depth so a following array
+    // field can never leak pairs into this one.
+    let bytes = body.as_bytes();
+    let mut depth = 1usize;
+    let mut end = start;
+    while end < bytes.len() && depth > 0 {
+        match bytes[end] {
+            b'[' => depth += 1,
+            b']' => depth -= 1,
+            _ => {}
+        }
+        end += 1;
+    }
+    let mut out = Vec::new();
+    let mut rest = &body[start..end.saturating_sub(1).max(start)];
+    while let Some(open) = rest.find('[') {
+        let Some(close) = rest[open..].find(']').map(|i| open + i) else { break };
+        let inner = &rest[open + 1..close];
+        let mut nums = inner.split(',').filter_map(|x| x.trim().parse::<u32>().ok());
+        if let (Some(a), Some(b)) = (nums.next(), nums.next()) {
+            out.push((a, b));
+        }
+        rest = &rest[close + 1..];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_params_parse() {
+        assert_eq!(query_param("event=add_node&cluster=2", "cluster"), Some("2"));
+        assert_eq!(query_param("event=add_node&cluster=2", "event"), Some("add_node"));
+        assert_eq!(query_param("heal", "heal"), Some(""));
+        assert_eq!(query_param("a=1", "b"), None);
+    }
+
+    #[test]
+    fn topology_events_parse() {
+        assert_eq!(
+            parse_topology_event("event=add_node&cluster=3").unwrap(),
+            TopologyEvent::AddNode { cluster: 3 }
+        );
+        assert_eq!(
+            parse_topology_event("event=add_cluster&nodes=4").unwrap(),
+            TopologyEvent::AddCluster { nodes: 4 }
+        );
+        assert_eq!(
+            parse_topology_event("event=drain&node=9").unwrap(),
+            TopologyEvent::DrainNode { node: 9 }
+        );
+        assert!(parse_topology_event("event=warp").is_err());
+        assert!(parse_topology_event("event=add_node").is_err());
+    }
+
+    #[test]
+    fn flat_json_readers() {
+        let body = "{\"epoch\":41,\"stripes\":2,\"failed_blocks\":[[0,3],[1,7]],\"node_of\":[[1,2],[3,4]]}";
+        assert_eq!(json_u64(body, "epoch"), Some(41));
+        assert_eq!(json_u64(body, "stripes"), Some(2));
+        assert_eq!(json_u64(body, "missing"), None);
+        assert_eq!(json_pairs(body, "failed_blocks"), vec![(0, 3), (1, 7)]);
+        assert_eq!(json_pairs("{\"failed_blocks\":[]}", "failed_blocks"), Vec::new());
+    }
+}

@@ -1,0 +1,377 @@
+//! Closed-loop load generator for the serving plane.
+//!
+//! One std thread per session, each pinned to a tenant and drawing
+//! object sizes from that tenant's [`WorkloadSpec`] mix. A session
+//! works in pipelined batches: it encodes a whole batch of requests,
+//! ships them in **one** batched socket write, then reads the batch's
+//! responses — verifying they come back strictly in request order.
+//! Repair ops ride at the *end* of a batch so their QoS wait (yield to
+//! foreground, token bucket) never sits in front of a measured read.
+//!
+//! Epoch handling is the client half of the serving plane's metadata
+//! protocol: the session boots by fetching an epoch-stamped routing
+//! table from the control API and stamps every request with it. When a
+//! topology event bumps the epoch mid-run, in-flight requests come back
+//! `StaleEpoch`; the session refreshes its table over HTTP and retries
+//! just the redirected requests (bounded attempts), counting any that
+//! never recover. A clean run reports zero `protocol_errors`, zero
+//! `unrecovered_redirects`, and zero `in_order_violations` — those are
+//! the CI-gated invariants; latency percentiles are the CI-gated
+//! performance surface.
+
+use crate::bench_util::JsonReport;
+use crate::client::WorkloadSpec;
+use crate::prng::Prng;
+use crate::serve::http::{json_pairs, json_u64};
+use crate::serve::protocol::{take_frame, OpKind, Request, Response};
+use std::io::{Read as IoRead, Write as IoWrite};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Data-plane address (`host:port`).
+    pub data_addr: String,
+    /// Control-plane address (`host:port`).
+    pub http_addr: String,
+    pub sessions: usize,
+    pub duration: Duration,
+    /// Requests kept in flight per batch (pipeline depth).
+    pub pipeline: usize,
+    pub seed: u64,
+    /// Submit `add_node` this long into the run (exercises the
+    /// stale-epoch redirect path live); `None` = steady state.
+    pub topology_event_at: Option<Duration>,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            data_addr: "127.0.0.1:4700".to_string(),
+            http_addr: "127.0.0.1:4701".to_string(),
+            sessions: 3,
+            duration: Duration::from_secs(10),
+            pipeline: 16,
+            seed: 42,
+            topology_event_at: None,
+        }
+    }
+}
+
+/// Aggregated closed-loop outcome across all sessions.
+#[derive(Debug, Clone, Default)]
+pub struct LoadgenReport {
+    pub requests: u64,
+    pub ok: u64,
+    pub repairs: u64,
+    pub stale_redirects: u64,
+    pub unrecovered_redirects: u64,
+    pub protocol_errors: u64,
+    pub op_errors: u64,
+    pub in_order_violations: u64,
+    /// Foreground (get / degraded-read) wall-latency percentiles, ms.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+#[derive(Default)]
+struct SessionOutcome {
+    latencies_ms: Vec<f64>,
+    requests: u64,
+    ok: u64,
+    repairs: u64,
+    stale: u64,
+    unrecovered: u64,
+    protocol_errors: u64,
+    op_errors: u64,
+    in_order_violations: u64,
+}
+
+/// One logical operation, re-sendable across stale-epoch retries.
+#[derive(Clone, Copy)]
+struct OpSpec {
+    op: OpKind,
+    stripe: u32,
+    block: u32,
+}
+
+/// Client-side copy of the epoch-stamped routing state.
+struct ClientTable {
+    epoch: u64,
+    stripes: u32,
+    failed_data: Vec<(u32, u32)>,
+}
+
+fn fetch_table(http_addr: &str) -> Result<ClientTable, String> {
+    let body = http_request(http_addr, "GET", "/v1/route")?;
+    let epoch = json_u64(&body, "epoch").ok_or("route reply missing epoch")?;
+    let stripes = json_u64(&body, "stripes").ok_or("route reply missing stripes")? as u32;
+    let k = json_u64(&body, "k").ok_or("route reply missing k")? as u32;
+    let failed_data = json_pairs(&body, "failed_blocks")
+        .into_iter()
+        .filter(|&(_, b)| b < k)
+        .collect();
+    Ok(ClientTable { epoch, stripes, failed_data })
+}
+
+/// Minimal one-shot HTTP client (the control API is `Connection: close`).
+pub fn http_request(addr: &str, method: &str, path_query: &str) -> Result<String, String> {
+    let mut s = std::net::TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    s.set_nodelay(true).ok();
+    s.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    let req = format!("{method} {path_query} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    s.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).map_err(|e| e.to_string())?;
+    match raw.split_once("\r\n\r\n") {
+        Some((_, body)) => Ok(body.to_string()),
+        None => Err(format!("malformed HTTP reply from {addr}")),
+    }
+}
+
+/// Run the closed loop and return the aggregate report. Also emits the
+/// `BENCH_serve.json` artifact when `UNILRC_BENCH_JSON` is set.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
+    let mixes = WorkloadSpec::tenant_mixes();
+    let deadline = Instant::now() + cfg.duration;
+    let mut handles = Vec::new();
+    for i in 0..cfg.sessions {
+        let tenant = (i % mixes.len()) as u8;
+        let spec = mixes[i % mixes.len()];
+        let data_addr = cfg.data_addr.clone();
+        let http_addr = cfg.http_addr.clone();
+        let pipeline = cfg.pipeline.max(1);
+        let seed = cfg.seed.wrapping_add(i as u64 * 7919);
+        handles.push(std::thread::spawn(move || {
+            run_session(&data_addr, &http_addr, tenant, spec, pipeline, seed, deadline)
+        }));
+    }
+
+    // Mid-run topology event: the live migration wave every in-flight
+    // epoch-stamped request must survive via redirect + retry.
+    if let Some(at) = cfg.topology_event_at {
+        std::thread::sleep(at.min(cfg.duration));
+        http_request(&cfg.http_addr, "POST", "/v1/topology?event=add_node&cluster=0")?;
+    }
+
+    let mut report = LoadgenReport::default();
+    let mut latencies: Vec<f64> = Vec::new();
+    for h in handles {
+        let out = h.join().map_err(|_| "loadgen session panicked".to_string())?;
+        report.requests += out.requests;
+        report.ok += out.ok;
+        report.repairs += out.repairs;
+        report.stale_redirects += out.stale;
+        report.unrecovered_redirects += out.unrecovered;
+        report.protocol_errors += out.protocol_errors;
+        report.op_errors += out.op_errors;
+        report.in_order_violations += out.in_order_violations;
+        latencies.extend(out.latencies_ms);
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    report.p50_ms = percentile(&latencies, 0.50);
+    report.p95_ms = percentile(&latencies, 0.95);
+    report.p99_ms = percentile(&latencies, 0.99);
+
+    let mut json = JsonReport::new("serve");
+    json.meta("sessions", &cfg.sessions.to_string());
+    json.meta("pipeline", &cfg.pipeline.to_string());
+    json.meta("duration_s", &cfg.duration.as_secs_f64().to_string());
+    // Value rows are lower-is-better under tools/bench_compare.py, so the
+    // artifact carries latency percentiles and must-be-zero invariant
+    // counters — never throughput.
+    json.add_value("get_p50_ms", report.p50_ms, "ms");
+    json.add_value("get_p95_ms", report.p95_ms, "ms");
+    json.add_value("get_p99_ms", report.p99_ms, "ms");
+    json.add_value("protocol_errors", report.protocol_errors as f64, "count");
+    json.add_value("unrecovered_redirects", report.unrecovered_redirects as f64, "count");
+    json.add_value("in_order_violations", report.in_order_violations as f64, "count");
+    json.write_if_requested();
+
+    Ok(report)
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn run_session(
+    data_addr: &str,
+    http_addr: &str,
+    tenant: u8,
+    spec: WorkloadSpec,
+    pipeline: usize,
+    seed: u64,
+    deadline: Instant,
+) -> SessionOutcome {
+    let mut out = SessionOutcome::default();
+    let Ok(mut table) = fetch_table(http_addr) else {
+        out.protocol_errors += 1;
+        return out;
+    };
+    let stream = match std::net::TcpStream::connect(data_addr) {
+        Ok(s) => s,
+        Err(_) => {
+            out.protocol_errors += 1;
+            return out;
+        }
+    };
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+    let mut stream = stream;
+
+    let mut prng = Prng::new(seed);
+    let mut next_id: u64 = 1;
+    let mut batch_no: u64 = 0;
+    while Instant::now() < deadline {
+        batch_no += 1;
+        // Foreground first; at most one repair, and always last, so its
+        // QoS wait never queues in front of a measured read.
+        let mut specs: Vec<OpSpec> = Vec::with_capacity(pipeline);
+        for slot in 0..pipeline {
+            let stripe = prng.gen_range(table.stripes as usize) as u32;
+            if slot == 0 && batch_no % 3 == 0 && !table.failed_data.is_empty() {
+                let (s, b) = table.failed_data[prng.gen_range(table.failed_data.len())];
+                specs.push(OpSpec { op: OpKind::DegradedRead, stripe: s, block: b });
+            } else {
+                let size = spec.draw(&mut prng) as u32;
+                specs.push(OpSpec { op: OpKind::Get, stripe, block: size });
+            }
+        }
+        if tenant == 0 && batch_no % 4 == 0 && !table.failed_data.is_empty() {
+            let (s, b) = table.failed_data[prng.gen_range(table.failed_data.len())];
+            specs.push(OpSpec { op: OpKind::Repair, stripe: s, block: b });
+        }
+
+        // Send the batch; on StaleEpoch, refresh the table and retry
+        // just the redirected ops (bounded).
+        let mut pending = specs;
+        let mut attempts = 0;
+        while !pending.is_empty() && attempts < 5 {
+            attempts += 1;
+            match exchange_batch(&mut stream, &mut out, tenant, table.epoch, &pending, &mut next_id)
+            {
+                Ok(stale) => {
+                    if stale.is_empty() {
+                        pending.clear();
+                    } else {
+                        out.stale += stale.len() as u64;
+                        match fetch_table(http_addr) {
+                            Ok(t) => table = t,
+                            Err(_) => {
+                                out.protocol_errors += 1;
+                                out.unrecovered += stale.len() as u64;
+                                return out;
+                            }
+                        }
+                        // Re-validate degraded/repair targets against the
+                        // refreshed failure view; downgrade vanished ones.
+                        pending = stale
+                            .into_iter()
+                            .map(|s| {
+                                if s.op != OpKind::Get
+                                    && !table.failed_data.contains(&(s.stripe, s.block))
+                                {
+                                    OpSpec { op: OpKind::Get, stripe: s.stripe, block: 1 }
+                                } else {
+                                    s
+                                }
+                            })
+                            .collect();
+                    }
+                }
+                Err(_) => {
+                    out.protocol_errors += 1;
+                    return out;
+                }
+            }
+        }
+        out.unrecovered += pending.len() as u64;
+    }
+    out
+}
+
+/// Ship one pipelined batch (single coalesced write), then read exactly
+/// one in-order response per request. Returns the specs that were
+/// answered `StaleEpoch` and need a retry under a refreshed table.
+fn exchange_batch(
+    stream: &mut std::net::TcpStream,
+    out: &mut SessionOutcome,
+    tenant: u8,
+    epoch: u64,
+    specs: &[OpSpec],
+    next_id: &mut u64,
+) -> Result<Vec<OpSpec>, String> {
+    let mut wire = Vec::with_capacity(specs.len() * 34);
+    let mut ids = Vec::with_capacity(specs.len());
+    for s in specs {
+        let id = *next_id;
+        *next_id += 1;
+        ids.push(id);
+        wire.extend_from_slice(
+            &Request { id, tenant, op: s.op, epoch, stripe: s.stripe, block: s.block }.encode(),
+        );
+    }
+    let t0 = Instant::now();
+    stream.write_all(&wire).map_err(|e| e.to_string())?;
+    out.requests += specs.len() as u64;
+
+    let mut stale = Vec::new();
+    let mut acc: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let mut got = 0usize;
+    while got < specs.len() {
+        let frame = loop {
+            match take_frame(&acc)? {
+                Some((payload, used)) => {
+                    let resp = Response::decode(payload)?;
+                    acc.drain(..used);
+                    break resp;
+                }
+                None => {
+                    let n = stream.read(&mut chunk).map_err(|e| e.to_string())?;
+                    if n == 0 {
+                        return Err("server closed mid-batch".to_string());
+                    }
+                    acc.extend_from_slice(&chunk[..n]);
+                }
+            }
+        };
+        let spec = specs[got];
+        if frame.id() != ids[got] {
+            out.in_order_violations += 1;
+        }
+        match frame {
+            Response::Ok { .. } => {
+                out.ok += 1;
+                if spec.op == OpKind::Repair {
+                    out.repairs += 1;
+                } else {
+                    out.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            Response::StaleEpoch { .. } => stale.push(spec),
+            Response::Error { .. } => out.op_errors += 1,
+        }
+        got += 1;
+    }
+    Ok(stale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_pick_sensible_ranks() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&xs, 0.50), 51.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&[], 0.99), 0.0);
+        assert_eq!(percentile(&[7.5], 0.5), 7.5);
+    }
+}

@@ -1,0 +1,43 @@
+//! The serving plane: a tokio-based front end that turns the
+//! virtual-clock experiment driver into a system under load over real
+//! sockets.
+//!
+//! Three pieces (ROADMAP item 1):
+//!
+//! * **Pipelined client sessions** ([`session`]) speaking the
+//!   length-prefixed binary protocol of [`protocol`]: a session may keep
+//!   many requests in flight; responses come back strictly in request
+//!   order, coalesced into batched socket writes by a dedicated writer
+//!   task (the undermoon `CircularBufWriter` discipline — one
+//!   `write`+`flush` per wakeup, not per response).
+//! * **Per-tenant admission with QoS** ([`admission`]): a bounded
+//!   in-flight window per tenant, and background repair traffic both
+//!   yields to active foreground reads and pays a token bucket — the
+//!   same discipline PR 7 applies to migration bandwidth.
+//! * **Epoch-versioned metadata** ([`epoch`], [`http`]): every routing
+//!   mutation in the coordinator bumps a metadata epoch (durable via
+//!   `WalRecord::Epoch` + the v2 manifest); clients cache epoch-stamped
+//!   routing tables and stamp every request. A request carrying a stale
+//!   epoch is answered with a typed `StaleEpoch` redirect instead of
+//!   being served against routing the client no longer holds — which is
+//!   what makes reads provably safe across live migration waves.
+//!
+//! [`server`] wires these to a [`crate::coordinator::Dss`] behind a
+//! mutex (operations advance the shared virtual clock; wall-clock tail
+//! latency is measured by the closed-loop [`loadgen`]), plus an
+//! HTTP/JSON control API for cluster metadata, topology events, and
+//! failure reporting.
+
+pub mod admission;
+pub mod epoch;
+pub mod http;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+pub mod session;
+
+pub use admission::{Admission, AdmissionConfig};
+pub use epoch::RoutingTable;
+pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};
+pub use protocol::{OpKind, Request, Response, MAX_FRAME};
+pub use server::{bind, ServeConfig, ServeState, ServerHandle};

@@ -1,0 +1,256 @@
+//! Length-prefixed binary wire protocol for the data plane.
+//!
+//! Framing: `[len: u32 LE][payload]`, `0 < len ≤ MAX_FRAME`. Payloads
+//! reuse the coordinator manifest's little-endian codec helpers, so the
+//! whole repo has exactly one binary-encoding idiom.
+//!
+//! Request payload: `id u64 · tenant u8 · op u8 · epoch u64 ·
+//! stripe u32 · block u32`. For [`OpKind::Get`] the `block` field
+//! carries the *object size in data blocks* (the `WorkloadSpec` draw),
+//! not a block index — a get reads that many data blocks of the stripe,
+//! degraded ones transparently repaired on the read path. For
+//! `DegradedRead`/`Repair` it is the target block index.
+//!
+//! Response payload: tag `u8`, then per tag:
+//! * `0` Ok: `id u64 · epoch u64 · latency_us u64 · bytes u64` —
+//!   `latency_us` is the *virtual-clock* service latency; wall latency
+//!   is the client's to measure.
+//! * `1` StaleEpoch: `id u64 · current u64` — the request's epoch no
+//!   longer matches; refresh the routing table and retry.
+//! * `2` Error: `id u64 · detail str` — typed protocol-level failure.
+
+use crate::coordinator::manifest::{put_u32, put_u64, Cursor};
+
+/// Maximum frame payload accepted by either side. Requests are ~26
+/// bytes and responses ~33; anything near the cap is a corrupt or
+/// hostile length prefix and is rejected before allocation.
+pub const MAX_FRAME: usize = 1 << 16;
+
+/// Data-plane operation kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Read the first `block` data blocks of `stripe` (object read).
+    Get,
+    /// Degraded read of one failed data block.
+    DegradedRead,
+    /// Background repair: reconstruct one failed block onto a spare.
+    Repair,
+}
+
+impl OpKind {
+    pub fn tag(self) -> u8 {
+        match self {
+            OpKind::Get => 1,
+            OpKind::DegradedRead => 2,
+            OpKind::Repair => 3,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<OpKind> {
+        match tag {
+            1 => Some(OpKind::Get),
+            2 => Some(OpKind::DegradedRead),
+            3 => Some(OpKind::Repair),
+            _ => None,
+        }
+    }
+
+    /// Background ops yield to foreground reads in admission.
+    pub fn is_background(self) -> bool {
+        matches!(self, OpKind::Repair)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    /// Session-scoped correlation id; responses echo it and a pipelined
+    /// session answers ids strictly in request order.
+    pub id: u64,
+    pub tenant: u8,
+    pub op: OpKind,
+    /// Routing-table epoch the client holds (see module docs).
+    pub epoch: u64,
+    pub stripe: u32,
+    pub block: u32,
+}
+
+impl Request {
+    /// Encode as one frame (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(30);
+        put_u64(&mut p, self.id);
+        p.push(self.tenant);
+        p.push(self.op.tag());
+        put_u64(&mut p, self.epoch);
+        put_u32(&mut p, self.stripe);
+        put_u32(&mut p, self.block);
+        frame(p)
+    }
+
+    /// Decode one frame payload (length prefix already stripped).
+    pub fn decode(payload: &[u8]) -> Result<Request, String> {
+        let mut cur = Cursor::new(payload);
+        let id = cur.u64()?;
+        let tenant = cur.u8()?;
+        let op = OpKind::from_tag(cur.u8()?).ok_or_else(|| "unknown op tag".to_string())?;
+        let epoch = cur.u64()?;
+        let stripe = cur.u32()?;
+        let block = cur.u32()?;
+        cur.done()?;
+        Ok(Request { id, tenant, op, epoch, stripe, block })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    Ok { id: u64, epoch: u64, latency_us: u64, bytes: u64 },
+    StaleEpoch { id: u64, current: u64 },
+    Error { id: u64, detail: String },
+}
+
+impl Response {
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Ok { id, .. } | Response::StaleEpoch { id, .. } | Response::Error { id, .. } => {
+                *id
+            }
+        }
+    }
+
+    /// Encode as one frame (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(40);
+        match self {
+            Response::Ok { id, epoch, latency_us, bytes } => {
+                p.push(0);
+                put_u64(&mut p, *id);
+                put_u64(&mut p, *epoch);
+                put_u64(&mut p, *latency_us);
+                put_u64(&mut p, *bytes);
+            }
+            Response::StaleEpoch { id, current } => {
+                p.push(1);
+                put_u64(&mut p, *id);
+                put_u64(&mut p, *current);
+            }
+            Response::Error { id, detail } => {
+                p.push(2);
+                put_u64(&mut p, *id);
+                put_u32(&mut p, detail.len() as u32);
+                p.extend_from_slice(detail.as_bytes());
+            }
+        }
+        frame(p)
+    }
+
+    /// Decode one frame payload (length prefix already stripped).
+    pub fn decode(payload: &[u8]) -> Result<Response, String> {
+        let mut cur = Cursor::new(payload);
+        let resp = match cur.u8()? {
+            0 => Response::Ok {
+                id: cur.u64()?,
+                epoch: cur.u64()?,
+                latency_us: cur.u64()?,
+                bytes: cur.u64()?,
+            },
+            1 => Response::StaleEpoch { id: cur.u64()?, current: cur.u64()? },
+            2 => Response::Error { id: cur.u64()?, detail: cur.str(MAX_FRAME)? },
+            t => return Err(format!("unknown response tag {t}")),
+        };
+        cur.done()?;
+        Ok(resp)
+    }
+}
+
+/// Prefix `payload` with its little-endian u32 length.
+fn frame(payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 4);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Split one frame off the front of `buf`: `Ok(Some(payload))` when a
+/// whole frame is buffered, `Ok(None)` when more bytes are needed.
+pub fn take_frame(buf: &[u8]) -> Result<Option<(&[u8], usize)>, String> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(format!("frame length {len} out of range"));
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    Ok(Some((&buf[4..4 + len], 4 + len)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trips() {
+        let req =
+            Request { id: 7, tenant: 2, op: OpKind::DegradedRead, epoch: 9, stripe: 3, block: 1 };
+        let framed = req.encode();
+        let (payload, used) = take_frame(&framed).unwrap().unwrap();
+        assert_eq!(used, framed.len());
+        assert_eq!(Request::decode(payload).unwrap(), req);
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        for resp in [
+            Response::Ok { id: 1, epoch: 4, latency_us: 1500, bytes: 262144 },
+            Response::StaleEpoch { id: 2, current: 5 },
+            Response::Error { id: 3, detail: "no such stripe".into() },
+        ] {
+            let framed = resp.encode();
+            let (payload, _) = take_frame(&framed).unwrap().unwrap();
+            assert_eq!(Response::decode(payload).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn partial_and_hostile_frames() {
+        let framed =
+            Request { id: 1, tenant: 0, op: OpKind::Get, epoch: 1, stripe: 0, block: 4 }.encode();
+        for cut in 0..framed.len() {
+            assert!(take_frame(&framed[..cut]).unwrap().is_none(), "cut {cut} yielded a frame");
+        }
+        // zero / oversized length prefixes are rejected, not chased
+        assert!(take_frame(&[0, 0, 0, 0, 9]).is_err());
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
+        assert!(take_frame(&huge).is_err());
+    }
+
+    #[test]
+    fn pipelined_frames_split_cleanly() {
+        let mut buf = Vec::new();
+        for id in 0..5u64 {
+            buf.extend_from_slice(
+                &Request { id, tenant: 0, op: OpKind::Get, epoch: 1, stripe: 0, block: 1 }
+                    .encode(),
+            );
+        }
+        let mut seen = Vec::new();
+        let mut pos = 0;
+        while let Some((payload, used)) = take_frame(&buf[pos..]).unwrap() {
+            seen.push(Request::decode(payload).unwrap().id);
+            pos += used;
+        }
+        assert_eq!(pos, buf.len());
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn bad_op_tag_is_typed_error() {
+        let mut framed =
+            Request { id: 1, tenant: 0, op: OpKind::Get, epoch: 1, stripe: 0, block: 1 }.encode();
+        framed[4 + 9] = 99; // op tag sits after len(4) + id(8) + tenant(1)
+        let (payload, _) = take_frame(&framed).unwrap().unwrap();
+        assert!(Request::decode(payload).is_err());
+    }
+}

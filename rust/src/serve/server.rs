@@ -1,0 +1,258 @@
+//! Server wiring: shared state, listeners, and the migration pump.
+//!
+//! The server owns one [`Dss`] behind a mutex — operations advance its
+//! shared virtual clock exactly as the experiment driver does — plus a
+//! lock-free **epoch mirror** ([`ServeState::epoch`]) that sessions
+//! consult to answer `StaleEpoch` without taking the coordinator lock.
+//! The mirror is refreshed (under the Dss lock, so it can only lag,
+//! never lead) after every mutation the serving plane itself performs;
+//! the authoritative re-check in [`crate::serve::session::handle`]
+//! happens under the lock.
+
+use crate::codes::CodeFamily;
+use crate::coordinator::{Dss, DurabilityOptions, MigrationError};
+use crate::experiments::{build_dss, ExpConfig};
+use crate::placement::TopologyEvent;
+use crate::prng::Prng;
+use crate::serve::admission::{Admission, AdmissionConfig};
+use crate::serve::{http, session};
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+use tokio::net::TcpListener;
+use tokio::task::JoinHandle;
+
+/// Serving-plane configuration (CLI flags map 1:1 onto this).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Data-plane listen address (`0` port = ephemeral, for tests).
+    pub data_addr: String,
+    /// Control-plane (HTTP/JSON) listen address.
+    pub http_addr: String,
+    pub stripes: usize,
+    pub block_size: usize,
+    pub seed: u64,
+    /// Nodes to fail at boot so degraded reads and repairs have targets.
+    pub fail_nodes: usize,
+    pub admission: AdmissionConfig,
+    /// Enable the durable coordinator under this directory.
+    pub wal_dir: Option<PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            data_addr: "127.0.0.1:0".to_string(),
+            http_addr: "127.0.0.1:0".to_string(),
+            stripes: 4,
+            block_size: 64 * 1024,
+            seed: 42,
+            fail_nodes: 1,
+            admission: AdmissionConfig::default(),
+            wal_dir: None,
+        }
+    }
+}
+
+/// Monotonic serving counters, exported via `GET /v1/stats`.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub sessions: AtomicU64,
+    pub requests: AtomicU64,
+    pub responses_ok: AtomicU64,
+    pub stale_redirects: AtomicU64,
+    pub protocol_errors: AtomicU64,
+    pub op_errors: AtomicU64,
+    /// Response frames written (≥ flushes: the gap is the batching win).
+    pub frames_out: AtomicU64,
+    /// Batched socket flushes issued by session writer tasks.
+    pub flushes: AtomicU64,
+}
+
+/// State shared by every session, the control API, and the pump.
+pub struct ServeState {
+    dss: Mutex<Dss>,
+    /// Lock-free mirror of [`Dss::epoch`] for the fast staleness gate.
+    pub epoch: AtomicU64,
+    pub admission: Admission,
+    pub stats: ServeStats,
+    pub shutdown: AtomicBool,
+    /// True while a migration pump task is running (at most one).
+    pump_active: AtomicBool,
+    /// Cached so sessions can size admission without the Dss lock.
+    pub block_size: usize,
+}
+
+impl ServeState {
+    /// Lock the coordinator (poison-tolerant: a panicked session must
+    /// not wedge the server).
+    pub fn dss(&self) -> MutexGuard<'_, Dss> {
+        self.dss.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Refresh the epoch mirror from the live coordinator. Callers hold
+    /// the Dss lock (enforced by the `&Dss` borrow), so the mirror is
+    /// never published ahead of the state it describes.
+    pub fn sync_epoch(&self, dss: &Dss) {
+        self.epoch.store(dss.epoch(), Ordering::Release);
+    }
+}
+
+/// A bound, running server: listener addresses plus shutdown control.
+pub struct ServerHandle {
+    state: Arc<ServeState>,
+    data_addr: SocketAddr,
+    http_addr: SocketAddr,
+    tasks: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn data_addr(&self) -> SocketAddr {
+        self.data_addr
+    }
+
+    pub fn http_addr(&self) -> SocketAddr {
+        self.http_addr
+    }
+
+    pub fn state(&self) -> &Arc<ServeState> {
+        &self.state
+    }
+
+    /// Request shutdown and poke both accept loops awake.
+    pub fn shutdown(&self) {
+        self.state.shutdown.store(true, Ordering::Release);
+        let _ = std::net::TcpStream::connect(self.data_addr);
+        let _ = std::net::TcpStream::connect(self.http_addr);
+    }
+
+    /// Wait for the accept loops to exit (after [`ServerHandle::shutdown`]).
+    pub async fn wait(self) {
+        for t in self.tasks {
+            let _ = t.await;
+        }
+    }
+}
+
+/// Build the coordinator, bind both planes, and start accepting.
+pub async fn bind(cfg: ServeConfig) -> anyhow::Result<ServerHandle> {
+    let exp = ExpConfig {
+        block_size: cfg.block_size,
+        stripes: cfg.stripes,
+        seed: cfg.seed,
+        time_compute: false,
+        ..ExpConfig::default()
+    };
+    let mut dss = build_dss(CodeFamily::UniLrc, &exp);
+    let mut prng = Prng::new(cfg.seed);
+    dss.ingest_random_stripes(cfg.stripes, &mut prng)?;
+    if let Some(dir) = &cfg.wal_dir {
+        dss.enable_durability(dir, DurabilityOptions::default())?;
+    }
+    for i in 0..cfg.fail_nodes {
+        let node = dss.metadata().node_of(i % cfg.stripes.max(1), 0);
+        if !dss.failed_nodes().contains(&node) {
+            dss.fail_node(node);
+        }
+    }
+    let epoch0 = dss.epoch();
+
+    let data = TcpListener::bind(&cfg.data_addr).await?;
+    let http = TcpListener::bind(&cfg.http_addr).await?;
+    let data_addr = data.local_addr()?;
+    let http_addr = http.local_addr()?;
+
+    let state = Arc::new(ServeState {
+        dss: Mutex::new(dss),
+        epoch: AtomicU64::new(epoch0),
+        admission: Admission::new(cfg.admission),
+        stats: ServeStats::default(),
+        shutdown: AtomicBool::new(false),
+        pump_active: AtomicBool::new(false),
+        block_size: cfg.block_size,
+    });
+
+    let s_data = Arc::clone(&state);
+    let accept_data = tokio::spawn(async move {
+        loop {
+            let Ok((stream, _)) = data.accept().await else { break };
+            if s_data.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            s_data.stats.sessions.fetch_add(1, Ordering::Relaxed);
+            let s = Arc::clone(&s_data);
+            tokio::spawn(async move {
+                session::run_session(stream, s).await;
+            });
+        }
+    });
+    let s_http = Arc::clone(&state);
+    let accept_http = tokio::spawn(async move {
+        loop {
+            let Ok((stream, _)) = http.accept().await else { break };
+            if s_http.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let s = Arc::clone(&s_http);
+            tokio::spawn(async move {
+                http::run_http(stream, s).await;
+            });
+        }
+    });
+
+    Ok(ServerHandle { state, data_addr, http_addr, tasks: vec![accept_data, accept_http] })
+}
+
+/// Submit a topology event (control API / tests): admission bumps the
+/// epoch immediately — in-flight stale requests start redirecting right
+/// away — and a background pump drives the planned moves to completion.
+/// Returns `(event_id, epoch_after_admission)`.
+pub fn submit_topology(
+    state: &Arc<ServeState>,
+    ev: TopologyEvent,
+) -> Result<(u32, u64), MigrationError> {
+    let (id, epoch) = {
+        let mut dss = state.dss();
+        let id = dss.submit_topology_event(ev)?;
+        state.sync_epoch(&dss);
+        (id, dss.epoch())
+    };
+    spawn_pump(state);
+    Ok((id, epoch))
+}
+
+/// Start the migration pump unless one is already running. Each round
+/// drives a few moves on the virtual clock, republishes the epoch
+/// mirror, and yields, so foreground sessions interleave with the wave
+/// instead of stalling behind one long lock hold.
+pub fn spawn_pump(state: &Arc<ServeState>) {
+    if state.pump_active.swap(true, Ordering::AcqRel) {
+        return;
+    }
+    let s = Arc::clone(state);
+    tokio::spawn(async move {
+        loop {
+            if s.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let (in_flight, parked) = {
+                let mut dss = s.dss();
+                if dss.online_in_flight() > 0 {
+                    let until = dss.clock() + 3600.0;
+                    if dss.pump_migrations(until, 4).is_err() {
+                        s.stats.op_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                s.sync_epoch(&dss);
+                (dss.online_in_flight(), dss.parked_events().len())
+            };
+            if in_flight == 0 || parked == in_flight {
+                break;
+            }
+            tokio::time::sleep(Duration::from_millis(2)).await;
+        }
+        s.pump_active.store(false, Ordering::Release);
+    });
+}

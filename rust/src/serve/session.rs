@@ -1,0 +1,136 @@
+//! Pipelined data-plane sessions.
+//!
+//! One session = one TCP connection = two tasks:
+//!
+//! * the **reader/executor** decodes frames as they arrive, checks the
+//!   request's epoch, takes an admission permit, runs the op against
+//!   the shared coordinator, and queues the encoded response — strictly
+//!   in request order, which is the protocol's ordering guarantee;
+//! * the **writer** drains the response queue with the undermoon
+//!   `CircularBufWriter` discipline: on each wakeup it takes everything
+//!   queued (blocking on the first frame, then `try_recv` until empty)
+//!   and issues **one** `write_all` + `flush` for the whole batch, so a
+//!   pipelined burst of N requests costs O(1) syscalls, not O(N).
+//!
+//! Backpressure is structural: the bounded response channel plus the
+//! per-tenant admission window stop the reader from pulling more work
+//! off the socket than the server is willing to hold in flight.
+
+use crate::serve::protocol::{take_frame, OpKind, Request, Response};
+use crate::serve::server::ServeState;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use tokio::net::TcpStream;
+use tokio::sync::mpsc;
+
+/// Run one session to completion (client disconnect or protocol error).
+pub async fn run_session(stream: TcpStream, state: Arc<ServeState>) {
+    let (mut reader, mut writer) = stream.into_split();
+    let (tx, mut rx) = mpsc::channel::<Vec<u8>>(256);
+
+    let wstate = Arc::clone(&state);
+    let writer_task = tokio::spawn(async move {
+        let mut buf: Vec<u8> = Vec::with_capacity(4096);
+        while let Some(first) = rx.recv().await {
+            buf.clear();
+            buf.extend_from_slice(&first);
+            let mut frames = 1u64;
+            while let Ok(more) = rx.try_recv() {
+                buf.extend_from_slice(&more);
+                frames += 1;
+            }
+            if writer.write_all(&buf).await.is_err() || writer.flush().await.is_err() {
+                break;
+            }
+            wstate.stats.frames_out.fetch_add(frames, Ordering::Relaxed);
+            wstate.stats.flushes.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+
+    let mut acc: Vec<u8> = Vec::with_capacity(4096);
+    let mut chunk = [0u8; 4096];
+    'session: loop {
+        let n = match reader.read(&mut chunk).await {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        acc.extend_from_slice(&chunk[..n]);
+        loop {
+            match take_frame(&acc) {
+                Ok(Some((payload, used))) => {
+                    state.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let resp = match Request::decode(payload) {
+                        Ok(req) => handle(&state, &req),
+                        Err(detail) => {
+                            state.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                            Response::Error { id: 0, detail }
+                        }
+                    };
+                    acc.drain(..used);
+                    if tx.send(resp.encode()).await.is_err() {
+                        break 'session;
+                    }
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    // Unframeable input: the stream cannot be resynced.
+                    state.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    break 'session;
+                }
+            }
+        }
+    }
+    drop(tx);
+    let _ = writer_task.await;
+}
+
+/// Execute one request: epoch gate → admission → coordinator op.
+pub(crate) fn handle(state: &ServeState, req: &Request) -> Response {
+    // Cheap staleness gate on the lock-free epoch mirror: a stale
+    // client is redirected without costing an admission slot or the
+    // coordinator lock.
+    let current = state.epoch.load(Ordering::Acquire);
+    if req.epoch != current {
+        state.stats.stale_redirects.fetch_add(1, Ordering::Relaxed);
+        return Response::StaleEpoch { id: req.id, current };
+    }
+    let _permit = state.admission.acquire(req.tenant, req.op.is_background(), state.block_size);
+    let mut dss = state.dss();
+    // Re-check under the lock — an epoch bump may have raced admission,
+    // and the contract is that no op executes against routing the
+    // client does not hold.
+    let current = dss.epoch();
+    if req.epoch != current {
+        state.stats.stale_redirects.fetch_add(1, Ordering::Relaxed);
+        return Response::StaleEpoch { id: req.id, current };
+    }
+    let stripe = req.stripe as usize;
+    if stripe >= dss.metadata().stripe_count() {
+        state.stats.op_errors.fetch_add(1, Ordering::Relaxed);
+        return Response::Error { id: req.id, detail: format!("no such stripe {stripe}") };
+    }
+    let result = match req.op {
+        OpKind::Get => {
+            let count = (req.block as usize).clamp(1, dss.code.k());
+            let targets: Vec<(usize, usize)> = (0..count).map(|b| (stripe, b)).collect();
+            dss.parallel_read(&targets)
+        }
+        OpKind::DegradedRead => dss.degraded_read(stripe, req.block as usize),
+        OpKind::Repair => dss.reconstruct(stripe, req.block as usize),
+    };
+    match result {
+        Ok(op) => {
+            state.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
+            Response::Ok {
+                id: req.id,
+                epoch: current,
+                latency_us: (op.latency * 1e6) as u64,
+                bytes: op.bytes as u64,
+            }
+        }
+        Err(e) => {
+            state.stats.op_errors.fetch_add(1, Ordering::Relaxed);
+            Response::Error { id: req.id, detail: e.to_string() }
+        }
+    }
+}

@@ -1,0 +1,378 @@
+//! Serving-plane conformance: pipelined sessions must answer strictly
+//! in request order over real sockets, stale-epoch requests must be
+//! redirected (and recover after a routing-table refresh) during a live
+//! topology event, and the metadata epoch must survive WAL
+//! crash-recovery without ever resurrecting an older value. Replayed by
+//! the forced-kernel CI matrix alongside `tests/migration.rs` /
+//! `tests/recovery.rs`.
+//!
+//! Every test body runs under a watchdog: a hung socket or a wedged
+//! admission queue fails loudly in seconds instead of hanging the CI
+//! job until its timeout.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+use unilrc::codes::spec::CodeFamily;
+use unilrc::coordinator::{recover, DurabilityOptions};
+use unilrc::experiments::{build_dss, ExpConfig};
+use unilrc::placement::TopologyEvent;
+use unilrc::prng::Prng;
+use unilrc::serve::http::json_u64;
+use unilrc::serve::loadgen::http_request;
+use unilrc::serve::protocol::{take_frame, OpKind, Request, Response};
+use unilrc::serve::{bind, run_loadgen, LoadgenConfig, ServeConfig};
+
+/// Fail loudly if `f` exceeds the deadline; propagate its panics.
+fn with_deadline<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        f();
+        tx.send(()).ok();
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => h.join().unwrap(),
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => h.join().unwrap(),
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("test exceeded its {secs}s watchdog — serving plane hung")
+        }
+    }
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("unilrc-servetest-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn test_serve_config() -> ServeConfig {
+    ServeConfig {
+        stripes: 2,
+        block_size: 4 * 1024,
+        fail_nodes: 1,
+        ..ServeConfig::default()
+    }
+}
+
+/// Boot a server on ephemeral ports; returns (handle, data, http).
+fn boot(cfg: ServeConfig) -> (unilrc::serve::ServerHandle, String, String) {
+    let rt = tokio::runtime::Runtime::new().unwrap();
+    let handle = rt.block_on(bind(cfg)).unwrap();
+    let data = handle.data_addr().to_string();
+    let http = handle.http_addr().to_string();
+    (handle, data, http)
+}
+
+fn current_epoch(http: &str) -> u64 {
+    let body = http_request(http, "GET", "/v1/epoch").unwrap();
+    json_u64(&body, "epoch").unwrap()
+}
+
+/// Read exactly `n` response frames off a blocking client socket.
+fn read_responses(stream: &mut std::net::TcpStream, n: usize) -> Vec<Response> {
+    let mut out = Vec::with_capacity(n);
+    let mut acc: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    while out.len() < n {
+        loop {
+            match take_frame(&acc).unwrap() {
+                Some((payload, used)) => {
+                    out.push(Response::decode(payload).unwrap());
+                    acc.drain(..used);
+                    if out.len() == n {
+                        break;
+                    }
+                }
+                None => {
+                    let got = stream.read(&mut chunk).unwrap();
+                    assert!(got > 0, "server closed mid-batch");
+                    acc.extend_from_slice(&chunk[..got]);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn pipelined_session_answers_in_order_under_concurrent_repair() {
+    with_deadline(60, || {
+        let (handle, data, http) = boot(test_serve_config());
+        let epoch = current_epoch(&http);
+
+        // A second session hammers background repairs on the failed
+        // block throughout, so the ordered foreground batch below is
+        // admitted *around* yielding repair traffic.
+        let route = http_request(&http, "GET", "/v1/route").unwrap();
+        let failed = unilrc::serve::http::json_pairs(&route, "failed_blocks");
+        assert!(!failed.is_empty(), "boot must leave a failed block to repair");
+        let (fs, fb) = failed[0];
+        let data2 = data.clone();
+        let repair_thread = std::thread::spawn(move || {
+            let mut s = std::net::TcpStream::connect(&data2).unwrap();
+            for id in 0..8u64 {
+                let req = Request {
+                    id,
+                    tenant: 1,
+                    op: OpKind::Repair,
+                    epoch,
+                    stripe: fs,
+                    block: fb,
+                };
+                s.write_all(&req.encode()).unwrap();
+            }
+            let resps = read_responses(&mut s, 8);
+            resps.iter().all(|r| matches!(r, Response::Ok { .. }))
+        });
+
+        // One pipelined batch of 32 foreground requests in a single
+        // coalesced write; responses must come back 0..32 in order.
+        let mut s = std::net::TcpStream::connect(&data).unwrap();
+        let mut wire = Vec::new();
+        for id in 0..32u64 {
+            let op = if id % 5 == 4 { OpKind::DegradedRead } else { OpKind::Get };
+            let (stripe, block) = if op == OpKind::DegradedRead {
+                (fs, fb)
+            } else {
+                ((id % 2) as u32, 1 + (id % 3) as u32)
+            };
+            wire.extend_from_slice(
+                &Request { id, tenant: 0, op, epoch, stripe, block }.encode(),
+            );
+        }
+        s.write_all(&wire).unwrap();
+        let resps = read_responses(&mut s, 32);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id(), i as u64, "response {i} out of order: {r:?}");
+            assert!(
+                matches!(r, Response::Ok { .. }),
+                "foreground request {i} failed: {r:?}"
+            );
+        }
+        assert!(repair_thread.join().unwrap(), "background repairs must succeed");
+        handle.shutdown();
+    });
+}
+
+#[test]
+fn stale_epoch_redirects_and_recovers_during_live_migration() {
+    with_deadline(120, || {
+        let (handle, data, http) = boot(test_serve_config());
+        let old_epoch = current_epoch(&http);
+
+        // Admit a topology event: the epoch bumps immediately and a
+        // background pump starts the migration wave.
+        let reply = http_request(&http, "POST", "/v1/topology?event=add_node&cluster=0").unwrap();
+        let bumped = json_u64(&reply, "epoch").unwrap();
+        assert!(bumped > old_epoch, "admission must bump the epoch");
+
+        // A request stamped with the pre-event epoch is redirected, not
+        // served.
+        let mut s = std::net::TcpStream::connect(&data).unwrap();
+        let stale =
+            Request { id: 1, tenant: 0, op: OpKind::Get, epoch: old_epoch, stripe: 0, block: 1 };
+        s.write_all(&stale.encode()).unwrap();
+        let resp = &read_responses(&mut s, 1)[0];
+        let current = match resp {
+            Response::StaleEpoch { id: 1, current } => *current,
+            other => panic!("expected StaleEpoch, got {other:?}"),
+        };
+        assert!(current >= bumped);
+
+        // The client protocol: refresh the table, retry with the fresh
+        // epoch — mid-wave, the retry must succeed.
+        let fresh = current_epoch(&http);
+        let retry =
+            Request { id: 2, tenant: 0, op: OpKind::Get, epoch: fresh, stripe: 0, block: 1 };
+        s.write_all(&retry.encode()).unwrap();
+        match &read_responses(&mut s, 1)[0] {
+            Response::Ok { id: 2, .. } => {}
+            Response::StaleEpoch { .. } => {
+                // The wave committed a move between refresh and retry;
+                // one more refresh must land (bounded, not a loop).
+                let fresh2 = current_epoch(&http);
+                let retry2 = Request {
+                    id: 3,
+                    tenant: 0,
+                    op: OpKind::Get,
+                    epoch: fresh2,
+                    stripe: 0,
+                    block: 1,
+                };
+                s.write_all(&retry2.encode()).unwrap();
+                assert!(
+                    matches!(&read_responses(&mut s, 1)[0], Response::Ok { id: 3, .. }),
+                    "retry with a refreshed epoch must eventually succeed"
+                );
+            }
+            other => panic!("retry failed: {other:?}"),
+        }
+
+        // The wave drains; the server stays serviceable afterwards.
+        for _ in 0..600 {
+            let stats = http_request(&http, "GET", "/v1/stats").unwrap();
+            if json_u64(&stats, "online_in_flight") == Some(0) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let stats = http_request(&http, "GET", "/v1/stats").unwrap();
+        assert_eq!(json_u64(&stats, "online_in_flight"), Some(0), "wave must drain");
+        assert!(json_u64(&stats, "stale_redirects").unwrap() >= 1);
+        handle.shutdown();
+    });
+}
+
+#[test]
+fn closed_loop_loadgen_survives_a_topology_event() {
+    with_deadline(120, || {
+        let (handle, data, http) = boot(test_serve_config());
+        let report = run_loadgen(&LoadgenConfig {
+            data_addr: data,
+            http_addr: http,
+            sessions: 3,
+            duration: Duration::from_secs(3),
+            pipeline: 8,
+            seed: 7,
+            topology_event_at: Some(Duration::from_millis(600)),
+        })
+        .unwrap();
+        assert!(report.ok > 0, "closed loop must complete operations");
+        assert_eq!(report.protocol_errors, 0, "{report:?}");
+        assert_eq!(report.op_errors, 0, "{report:?}");
+        assert_eq!(report.in_order_violations, 0, "{report:?}");
+        assert_eq!(report.unrecovered_redirects, 0, "{report:?}");
+        assert!(
+            report.stale_redirects > 0,
+            "the mid-run topology event must be observed as StaleEpoch redirects: {report:?}"
+        );
+        assert!(report.p99_ms > 0.0);
+        handle.shutdown();
+    });
+}
+
+// ---------------------------------------------------------------- epoch
+// Durability of the metadata epoch across crash-recovery (Dss level).
+
+fn tiny() -> ExpConfig {
+    ExpConfig { block_size: 4 * 1024, stripes: 2, time_compute: false, ..Default::default() }
+}
+
+#[test]
+fn epoch_survives_recovery_and_restart_resumes_greater() {
+    let dir = scratch("epoch-rt");
+    let mut dss = build_dss(CodeFamily::UniLrc, &tiny());
+    dss.enable_durability(&dir, DurabilityOptions::default()).unwrap();
+    let mut prng = Prng::new(42);
+    dss.ingest_random_stripes(2, &mut prng).unwrap();
+    let victim = dss.metadata().node_of(0, 0);
+    dss.fail_node(victim);
+    dss.heal_node(victim);
+    dss.apply_topology_event(TopologyEvent::AddNode { cluster: 0 }).unwrap();
+    let live = dss.epoch();
+    assert!(live > 1, "the scenario must have bumped the epoch");
+    drop(dss);
+
+    let rec = recover(&dir).unwrap();
+    assert_eq!(rec.epoch, live, "recovery must reproduce the live epoch exactly");
+
+    // Restart discipline: a restored coordinator resumes *greater* than
+    // the recovered epoch, so no post-restart table can collide with a
+    // pre-crash one.
+    let mut fresh = build_dss(CodeFamily::UniLrc, &tiny());
+    fresh.set_epoch(rec.epoch + 1);
+    assert_eq!(fresh.epoch(), rec.epoch + 1);
+    let mut prng = Prng::new(43);
+    fresh.ingest_random_stripes(1, &mut prng).unwrap();
+    let v = fresh.metadata().node_of(0, 0);
+    fresh.fail_node(v);
+    assert!(fresh.epoch() > rec.epoch + 1, "mutations keep bumping after restore");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wal_cut_sweep_never_resurrects_an_older_epoch() {
+    use unilrc::coordinator::wal::list_segments;
+
+    let dir = scratch("epoch-cut");
+    let mut dss = build_dss(CodeFamily::UniLrc, &tiny());
+    dss.enable_durability(&dir, DurabilityOptions::default()).unwrap();
+    let mut prng = Prng::new(42);
+    dss.ingest_random_stripes(2, &mut prng).unwrap();
+    let victim = dss.metadata().node_of(0, 0);
+    dss.fail_node(victim);
+    dss.apply_topology_event(TopologyEvent::AddNode { cluster: 0 }).unwrap();
+    dss.heal_node(victim);
+    let live = dss.epoch();
+    let seg_name = {
+        let (_, path) = list_segments(&dir).unwrap().last().unwrap().clone();
+        path.file_name().unwrap().to_string_lossy().into_owned()
+    };
+    let manifest_epoch = {
+        // The manifest floor: even a fully-truncated WAL must recover at
+        // least the snapshot's epoch.
+        let rec_dir = scratch("epoch-cut-floor");
+        copy_dir(&dir, &rec_dir);
+        std::fs::write(rec_dir.join(&seg_name), b"").unwrap();
+        let rec = recover(&rec_dir).unwrap();
+        let _ = std::fs::remove_dir_all(&rec_dir);
+        rec.epoch
+    };
+    drop(dss);
+
+    // Exp9-style cut sweep: truncate the newest WAL segment at every
+    // stride; the recovered epoch must be monotone in the cut position,
+    // bounded by [manifest_epoch, live], and exactly `live` uncut.
+    let full = std::fs::read(dir.join(&seg_name)).unwrap();
+    let mut last_epoch = 0u64;
+    let mut cut = 0usize;
+    while cut <= full.len() {
+        let rec_dir = scratch(&format!("epoch-cut-{cut}"));
+        copy_dir(&dir, &rec_dir);
+        std::fs::write(rec_dir.join(&seg_name), &full[..cut]).unwrap();
+        let rec = recover(&rec_dir).unwrap_or_else(|e| {
+            panic!("cut at {cut}/{} bytes must still recover: {e:?}", full.len())
+        });
+        assert!(
+            rec.epoch >= manifest_epoch && rec.epoch <= live,
+            "cut {cut}: epoch {} outside [{manifest_epoch}, {live}]",
+            rec.epoch
+        );
+        assert!(
+            rec.epoch >= last_epoch,
+            "cut {cut}: epoch regressed {last_epoch} -> {} — an older epoch resurrected",
+            rec.epoch
+        );
+        last_epoch = rec.epoch;
+        let _ = std::fs::remove_dir_all(&rec_dir);
+        cut += 37; // prime stride: lands inside records, headers, and CRCs
+    }
+    let rec = recover(&dir).unwrap();
+    assert_eq!(rec.epoch, live, "the uncut journal must recover the exact live epoch");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn online_migration_lifecycle_keeps_bumping_the_epoch() {
+    let mut dss = build_dss(CodeFamily::UniLrc, &tiny());
+    let mut prng = Prng::new(42);
+    dss.ingest_random_stripes(2, &mut prng).unwrap();
+    let e0 = dss.epoch();
+    dss.submit_topology_event(TopologyEvent::AddNode { cluster: 0 }).unwrap();
+    let e1 = dss.epoch();
+    assert!(e1 > e0, "online admission must bump the epoch");
+    // Drive the wave to completion; each committed move bumps again.
+    while dss.online_in_flight() > 0 {
+        let until = dss.clock() + 3600.0;
+        dss.pump_migrations(until, 8).unwrap();
+        assert!(dss.parked_events().is_empty(), "healthy wave must not park");
+    }
+    assert!(dss.epoch() > e1, "committed moves and completion must bump the epoch");
+}
+
+fn copy_dir(src: &std::path::Path, dst: &std::path::Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+}

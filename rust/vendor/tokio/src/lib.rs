@@ -1,0 +1,414 @@
+//! Offline, thread-backed shim of the `tokio` API surface used by the
+//! UniLRC serving plane (`rust/src/serve/`).
+//!
+//! Module paths and signatures mirror upstream tokio so the serve code
+//! reads (and later swaps) as ordinary tokio code, but the execution
+//! model is deliberately simple: every spawned task owns an OS thread,
+//! and "async" socket methods are blocking `std::net` calls. That makes
+//! blocking inside a task sound — there is no shared reactor to starve.
+//! See README.md for the exact deviations from upstream.
+
+pub mod runtime {
+    //! `Runtime`/`Builder` with upstream shapes; both are thin wrappers
+    //! over the thread-backed executor in [`crate::task`].
+
+    use std::future::Future;
+
+    pub struct Runtime {
+        _priv: (),
+    }
+
+    impl Runtime {
+        pub fn new() -> std::io::Result<Runtime> {
+            Ok(Runtime { _priv: () })
+        }
+
+        /// Drive `fut` to completion on the calling thread with a
+        /// park/unpark waker loop.
+        pub fn block_on<F: Future>(&self, fut: F) -> F::Output {
+            crate::task::block_on(fut)
+        }
+
+        pub fn spawn<F>(&self, fut: F) -> crate::task::JoinHandle<F::Output>
+        where
+            F: Future + Send + 'static,
+            F::Output: Send + 'static,
+        {
+            crate::task::spawn(fut)
+        }
+    }
+
+    pub struct Builder {
+        _priv: (),
+    }
+
+    impl Builder {
+        pub fn new_multi_thread() -> Builder {
+            Builder { _priv: () }
+        }
+
+        pub fn enable_all(&mut self) -> &mut Builder {
+            self
+        }
+
+        pub fn build(&mut self) -> std::io::Result<Runtime> {
+            Runtime::new()
+        }
+    }
+}
+
+pub mod task {
+    //! Thread-per-task executor. `spawn` starts an OS thread that runs
+    //! the future under its own `block_on` loop; the returned
+    //! `JoinHandle` is itself a future (as upstream), resolving to
+    //! `Err(JoinError)` if the task panicked.
+
+    use std::future::Future;
+    use std::pin::Pin;
+    use std::sync::{Arc, Mutex};
+    use std::task::{Context, Poll, Wake, Waker};
+
+    struct ThreadWaker(std::thread::Thread);
+
+    impl Wake for ThreadWaker {
+        fn wake(self: Arc<Self>) {
+            self.0.unpark();
+        }
+
+        fn wake_by_ref(self: &Arc<Self>) {
+            self.0.unpark();
+        }
+    }
+
+    /// Poll `fut` on the current thread, parking between polls. A
+    /// spurious unpark only costs one extra poll; `Poll::Pending` with
+    /// no registered wakeup cannot deadlock because every wake source
+    /// in this shim (JoinHandle completion, channel send) unparks.
+    pub(crate) fn block_on<F: Future>(fut: F) -> F::Output {
+        let waker = Waker::from(Arc::new(ThreadWaker(std::thread::current())));
+        let mut cx = Context::from_waker(&waker);
+        let mut fut = std::pin::pin!(fut);
+        loop {
+            match fut.as_mut().poll(&mut cx) {
+                Poll::Ready(v) => return v,
+                Poll::Pending => std::thread::park(),
+            }
+        }
+    }
+
+    struct JoinState<T> {
+        result: Option<std::thread::Result<T>>,
+        waker: Option<Waker>,
+    }
+
+    pub struct JoinHandle<T> {
+        state: Arc<Mutex<JoinState<T>>>,
+    }
+
+    #[derive(Debug)]
+    pub struct JoinError {
+        panicked: bool,
+    }
+
+    impl JoinError {
+        pub fn is_panic(&self) -> bool {
+            self.panicked
+        }
+    }
+
+    impl std::fmt::Display for JoinError {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            if self.panicked {
+                write!(f, "task panicked")
+            } else {
+                write!(f, "task failed")
+            }
+        }
+    }
+
+    impl std::error::Error for JoinError {}
+
+    impl<T> Future for JoinHandle<T> {
+        type Output = Result<T, JoinError>;
+
+        fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+            let mut g = self.state.lock().unwrap();
+            if let Some(res) = g.result.take() {
+                Poll::Ready(res.map_err(|_| JoinError { panicked: true }))
+            } else {
+                g.waker = Some(cx.waker().clone());
+                Poll::Pending
+            }
+        }
+    }
+
+    pub fn spawn<F>(fut: F) -> JoinHandle<F::Output>
+    where
+        F: Future + Send + 'static,
+        F::Output: Send + 'static,
+    {
+        let state = Arc::new(Mutex::new(JoinState { result: None, waker: None }));
+        let shared = Arc::clone(&state);
+        std::thread::spawn(move || {
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| block_on(fut)));
+            let mut g = shared.lock().unwrap();
+            g.result = Some(out);
+            if let Some(w) = g.waker.take() {
+                w.wake();
+            }
+        });
+        JoinHandle { state }
+    }
+}
+
+pub mod net {
+    //! Blocking `std::net` sockets behind async method signatures.
+    //! Sound under the thread-per-task executor: a blocked read parks
+    //! one OS thread, never a shared poll loop. Methods are *inherent*
+    //! (not `AsyncReadExt`/`AsyncWriteExt` traits) — see README.md.
+
+    use std::io::{Read, Write};
+    use std::net::{Shutdown, SocketAddr, ToSocketAddrs};
+
+    pub struct TcpListener {
+        inner: std::net::TcpListener,
+    }
+
+    impl TcpListener {
+        pub async fn bind<A: ToSocketAddrs>(addr: A) -> std::io::Result<TcpListener> {
+            Ok(TcpListener { inner: std::net::TcpListener::bind(addr)? })
+        }
+
+        pub async fn accept(&self) -> std::io::Result<(TcpStream, SocketAddr)> {
+            let (s, a) = self.inner.accept()?;
+            s.set_nodelay(true).ok();
+            Ok((TcpStream { inner: s }, a))
+        }
+
+        pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+            self.inner.local_addr()
+        }
+    }
+
+    pub struct TcpStream {
+        inner: std::net::TcpStream,
+    }
+
+    impl TcpStream {
+        pub async fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<TcpStream> {
+            let s = std::net::TcpStream::connect(addr)?;
+            s.set_nodelay(true).ok();
+            Ok(TcpStream { inner: s })
+        }
+
+        pub fn set_nodelay(&self, on: bool) -> std::io::Result<()> {
+            self.inner.set_nodelay(on)
+        }
+
+        pub async fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.inner.read(buf)
+        }
+
+        pub async fn read_exact(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.inner.read_exact(buf)?;
+            Ok(buf.len())
+        }
+
+        pub async fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+            self.inner.write_all(buf)
+        }
+
+        pub async fn flush(&mut self) -> std::io::Result<()> {
+            self.inner.flush()
+        }
+
+        /// Split into owned halves via `try_clone` (both halves wrap
+        /// the same kernel socket, as with upstream's split).
+        pub fn into_split(self) -> (OwnedReadHalf, OwnedWriteHalf) {
+            let r = self.inner.try_clone().expect("TcpStream::try_clone");
+            (OwnedReadHalf { inner: r }, OwnedWriteHalf { inner: self.inner })
+        }
+    }
+
+    pub struct OwnedReadHalf {
+        inner: std::net::TcpStream,
+    }
+
+    impl OwnedReadHalf {
+        pub async fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.inner.read(buf)
+        }
+
+        pub async fn read_exact(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.inner.read_exact(buf)?;
+            Ok(buf.len())
+        }
+    }
+
+    pub struct OwnedWriteHalf {
+        inner: std::net::TcpStream,
+    }
+
+    impl OwnedWriteHalf {
+        pub async fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+            self.inner.write_all(buf)
+        }
+
+        pub async fn flush(&mut self) -> std::io::Result<()> {
+            self.inner.flush()
+        }
+
+        pub fn shutdown_now(&self) -> std::io::Result<()> {
+            self.inner.shutdown(Shutdown::Write)
+        }
+    }
+}
+
+pub mod sync {
+    pub mod mpsc {
+        //! Bounded channel over `std::sync::mpsc::sync_channel`.
+        //! `Sender::send` and `Receiver::recv` are async methods (their
+        //! bodies block, which is fine thread-per-task); `try_recv` is
+        //! sync, used by the serve writer to coalesce pending frames.
+
+        pub use std::sync::mpsc::TryRecvError;
+
+        pub struct SendError<T>(pub T);
+
+        impl<T> std::fmt::Debug for SendError<T> {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "SendError(..)")
+            }
+        }
+
+        impl<T> std::fmt::Display for SendError<T> {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "channel closed")
+            }
+        }
+
+        pub fn channel<T>(buffer: usize) -> (Sender<T>, Receiver<T>) {
+            let (tx, rx) = std::sync::mpsc::sync_channel(buffer.max(1));
+            (Sender { tx }, Receiver { rx })
+        }
+
+        pub struct Sender<T> {
+            tx: std::sync::mpsc::SyncSender<T>,
+        }
+
+        impl<T> Clone for Sender<T> {
+            fn clone(&self) -> Sender<T> {
+                Sender { tx: self.tx.clone() }
+            }
+        }
+
+        impl<T> Sender<T> {
+            pub async fn send(&self, value: T) -> Result<(), SendError<T>> {
+                self.tx.send(value).map_err(|e| SendError(e.0))
+            }
+        }
+
+        pub struct Receiver<T> {
+            rx: std::sync::mpsc::Receiver<T>,
+        }
+
+        impl<T> Receiver<T> {
+            /// `None` when every sender has dropped.
+            pub async fn recv(&mut self) -> Option<T> {
+                self.rx.recv().ok()
+            }
+
+            pub fn try_recv(&mut self) -> Result<T, TryRecvError> {
+                self.rx.try_recv()
+            }
+        }
+    }
+}
+
+pub mod time {
+    pub use std::time::{Duration, Instant};
+
+    pub async fn sleep(dur: Duration) {
+        std::thread::sleep(dur);
+    }
+}
+
+pub mod io {
+    pub use std::io::{Error, ErrorKind, Result};
+}
+
+pub use task::spawn;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt() -> runtime::Runtime {
+        runtime::Builder::new_multi_thread().enable_all().build().unwrap()
+    }
+
+    #[test]
+    fn block_on_returns_value() {
+        assert_eq!(rt().block_on(async { 6 * 7 }), 42);
+    }
+
+    #[test]
+    fn spawn_and_join() {
+        let rt = rt();
+        let out = rt.block_on(async {
+            let h = task::spawn(async { 1 + 2 });
+            h.await.unwrap()
+        });
+        assert_eq!(out, 3);
+    }
+
+    #[test]
+    fn join_surfaces_panic() {
+        let rt = rt();
+        let res = rt.block_on(async {
+            let h = task::spawn(async { panic!("boom") });
+            h.await
+        });
+        assert!(res.unwrap_err().is_panic());
+    }
+
+    #[test]
+    fn mpsc_round_trip_and_try_recv() {
+        let rt = rt();
+        rt.block_on(async {
+            let (tx, mut rx) = sync::mpsc::channel(4);
+            let tx2 = tx.clone();
+            tx.send(1u32).await.unwrap();
+            tx2.send(2u32).await.unwrap();
+            assert_eq!(rx.recv().await, Some(1));
+            assert_eq!(rx.try_recv().unwrap(), 2);
+            assert!(rx.try_recv().is_err());
+            drop(tx);
+            drop(tx2);
+            assert_eq!(rx.recv().await, None);
+        });
+    }
+
+    #[test]
+    fn tcp_echo_round_trip() {
+        let rt = rt();
+        rt.block_on(async {
+            let listener = net::TcpListener::bind("127.0.0.1:0").await.unwrap();
+            let addr = listener.local_addr().unwrap();
+            let server = task::spawn(async move {
+                let (stream, _) = listener.accept().await.unwrap();
+                let (mut r, mut w) = stream.into_split();
+                let mut buf = [0u8; 5];
+                r.read_exact(&mut buf).await.unwrap();
+                w.write_all(&buf).await.unwrap();
+                w.flush().await.unwrap();
+            });
+            let mut client = net::TcpStream::connect(addr).await.unwrap();
+            client.write_all(b"hello").await.unwrap();
+            let mut back = [0u8; 5];
+            client.read_exact(&mut back).await.unwrap();
+            assert_eq!(&back, b"hello");
+            server.await.unwrap();
+        });
+    }
+}

@@ -44,7 +44,17 @@ def main():
     )
     args = ap.parse_args()
 
-    base = load_results(args.baseline)
+    # A missing or empty baseline is the first run of a new bench (or a
+    # wiped cache) — say so explicitly and pass, rather than failing on
+    # the open or silently "passing" an empty comparison.
+    try:
+        base = load_results(args.baseline)
+    except (FileNotFoundError, json.JSONDecodeError):
+        print(f"no baseline yet at {args.baseline} — skipping gate")
+        return 0
+    if not base:
+        print(f"baseline {args.baseline} has no result rows — skipping gate")
+        return 0
     curr = load_results(args.current)
 
     failures = []
