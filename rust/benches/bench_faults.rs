@@ -11,7 +11,7 @@ use unilrc::codes::spec::CodeFamily;
 use unilrc::codes::PlanCache;
 use unilrc::experiments::{build_dss, exp7_faults, predicted_patterns, ExpConfig, FaultSimConfig};
 use unilrc::prng::Prng;
-use unilrc::sim::faults::{FaultConfig, FaultTrace};
+use unilrc::sim::faults::{replay_scrub, FaultConfig, FaultTrace, ScrubConfig};
 
 fn scenario_cfgs() -> (ExpConfig, FaultSimConfig) {
     let cfg = ExpConfig {
@@ -27,6 +27,7 @@ fn scenario_cfgs() -> (ExpConfig, FaultSimConfig) {
             node_mttr_hours: 10.0,
             cluster_mttf_hours: 1_500.0,
             cluster_mttr_hours: 5.0,
+            sector_mtte_hours: 0.0,
             horizon_hours: 400.0,
         },
         tenants: 3,
@@ -42,8 +43,8 @@ fn main() {
     let mut report = JsonReport::new("bench_faults");
     report.meta("engine", &unilrc::gf::dispatch::engine().describe());
 
-    // ---------------- end-to-end scenario replay (all four families)
-    section("exp7 fault-injection scenario (4 families, deterministic)");
+    // ---------------- end-to-end scenario replay (all five families)
+    section("exp7 fault-injection scenario (5 families, deterministic)");
     let (cfg, fc) = scenario_cfgs();
     let rows = exp7_faults(&cfg, &fc).expect("scenario runs");
     let scenario_bytes: usize =
@@ -95,6 +96,30 @@ fn main() {
         black_box(cache.prefetch(&dss.code, &patterns));
     });
     report.add(&s, 0);
+
+    // ---------------- budget-throttled scrub replay over a latent-error trace
+    section("latent-error scrub replay (token-bucket budget)");
+    let scrub_fault = FaultConfig { sector_mtte_hours: 60.0, ..fc.fault };
+    let scrub_trace = FaultTrace::generate(&dss.topo, &scrub_fault, cfg.seed);
+    let sc = ScrubConfig::accelerated(dss.topo.total_nodes());
+    let rep = replay_scrub(&dss.topo, &scrub_trace, &sc);
+    println!(
+        "latent errors: {} injected, {} detected, mean dwell {:.2} h",
+        rep.injected, rep.detected, rep.mean_dwell_hours
+    );
+    let s = b.bench_throughput("faults/scrub-replay", rep.scrubbed_bytes as usize, || {
+        black_box(replay_scrub(&dss.topo, &scrub_trace, &sc));
+    });
+    report.add(&s, rep.scrubbed_bytes as usize);
+    // trajectory rows: detection latency and residual exposure are the
+    // model outputs CI watches drift on, next to the replay throughput
+    report.add_value("faults/scrub-mean-dwell", rep.mean_dwell_hours, "h");
+    report.add_value("faults/scrub-detected", rep.detected as f64, "count");
+    report.add_value(
+        "faults/scrub-undetected-occupancy",
+        rep.undetected_block_hours,
+        "block-h",
+    );
 
     report.write_if_requested();
 }

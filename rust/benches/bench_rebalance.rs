@@ -39,8 +39,8 @@ fn main() {
     report.meta("engine", &unilrc::gf::dispatch::engine().describe());
     let (cfg, ec) = cfgs();
 
-    // ------------- end-to-end elastic scenario (all four families)
-    section("exp8 elastic scenario (4 families, deterministic)");
+    // ------------- end-to-end elastic scenario (all five families)
+    section("exp8 elastic scenario (5 families, deterministic)");
     let rows = exp8_elastic(&cfg, &ec).expect("scenario runs");
     let scenario_bytes: usize = rows.iter().map(|r| r.migrated_bytes).sum();
     for r in &rows {

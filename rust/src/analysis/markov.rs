@@ -183,6 +183,97 @@ pub fn migration_exposure(nodes: usize, lambda: f64, hours: f64) -> f64 {
     1.0 - (-(nodes as f64) * lambda * hours).exp()
 }
 
+// ------------------------------------------------------- latent errors
+//
+// The scrub model (`sim::faults::replay_scrub`): latent sector errors
+// arrive Poisson at rate λ_s per node, silent until a periodic scrub pass
+// (period `T`) reads over them. The closed forms below are what the
+// replay is differentially tested against (exp11, like exp7 vs the
+// injected chain above).
+
+/// Mean injection→detection dwell of a latent error under a periodic
+/// scrub of period `T` hours.
+///
+/// Renewal-reward: an error arriving at uniform phase `u ∈ [0, T)` whose
+/// node is verified at fixed offset `o` inside every pass waits
+/// `o − u` (if `u < o`) or `T + o − u` — and the mean over `u` is exactly
+/// `T/2`, independent of `o`. Holds whenever passes complete within the
+/// period; a bandwidth-starved scrubber only dwells *longer*.
+pub fn scrub_mean_dwell_hours(interval_hours: f64) -> f64 {
+    assert!(interval_hours > 0.0);
+    interval_hours / 2.0
+}
+
+/// Steady-state expected number of undetected latent errors per node:
+/// Little's law over the detection queue — arrivals `λ_s`, mean dwell
+/// `T/2` — so `λ_s · T/2`. (The count is Poisson-distributed: Poisson
+/// arrivals with phase-determined service form an M/D/∞-type system.)
+pub fn latent_undetected_mean(sector_rate_per_hour: f64, interval_hours: f64) -> f64 {
+    assert!(sector_rate_per_hour >= 0.0);
+    sector_rate_per_hour * scrub_mean_dwell_hours(interval_hours)
+}
+
+/// Probability some block of a `blocks`-wide stripe carries an undetected
+/// latent error, each block accruing errors at `per_block_rate` per hour:
+/// `1 − e^{−b·λ_b·T/2}` (Poisson field with the Little's-law mean).
+pub fn latent_risk_fraction(blocks: usize, per_block_rate: f64, interval_hours: f64) -> f64 {
+    assert!(per_block_rate >= 0.0);
+    1.0 - (-(blocks as f64) * latent_undetected_mean(per_block_rate, interval_hours)).exp()
+}
+
+/// `P(X > k)` for `X ~ Binomial(m, p)`, by the stable iterative pmf
+/// recurrence (no factorials; every term positive).
+fn binomial_tail_gt(m: usize, p: f64, k: i64) -> f64 {
+    if k < 0 {
+        return 1.0;
+    }
+    if k as usize >= m || p <= 0.0 {
+        return 0.0;
+    }
+    if p >= 1.0 {
+        return 1.0; // X = m > k here
+    }
+    let q = 1.0 - p;
+    let mut pmf = q.powi(m as i32);
+    let mut cdf = pmf;
+    for j in 0..k as usize {
+        pmf *= (m - j) as f64 / (j + 1) as f64 * (p / q);
+        cdf += pmf;
+    }
+    (1.0 - cdf).max(0.0)
+}
+
+/// Long-run fraction of time a stripe of width `n`, tolerance `f`, is
+/// *unreadable counting silent corruption*: whole-node failures follow
+/// the injector's birth–death chain (rates `lambda`/`mu` as in
+/// [`unavailable_fraction`]) and, independently, each surviving block is
+/// silently corrupt with probability `p_block` (from
+/// [`latent_risk_fraction`]'s per-block factor `1 − e^{−λ_b·T/2}`). Loss
+/// when failed + corrupt blocks exceed `f`:
+/// `Σ_i π_i · P(Bin(n−i, p_block) > f−i)`.
+///
+/// This is where scrubbing couples to the code family: wider tolerance
+/// `f` buries the same latent-error field deeper below the loss line.
+pub fn latent_loss_fraction(n: usize, f: usize, lambda: f64, mu: f64, p_block: f64) -> f64 {
+    assert!(f >= 1 && f < n);
+    assert!((0.0..=1.0).contains(&p_block), "p_block is a probability");
+    if lambda <= 0.0 || mu <= 0.0 {
+        // node clocks disabled: corruption alone must exceed the tolerance
+        return binomial_tail_gt(n, p_block, f as i64);
+    }
+    let (lam, rep) = injected_chain(n, lambda, mu);
+    let pi = steady_state(&lam, &rep);
+    let mut total = 0.0;
+    for (i, &w) in pi.iter().enumerate() {
+        if i > f {
+            total += w;
+        } else {
+            total += w * binomial_tail_gt(n - i, p_block, (f - i) as i64);
+        }
+    }
+    total.min(1.0)
+}
+
 /// The paper's closed-form product approximation
 /// `MTTDL ≈ (μ·μ'^{f−1}) / Π_{i=0}^{f} λ_i` — kept for comparison.
 pub fn mttdl_years_approx(n: usize, f: usize, c: f64, p: &MttdlParams) -> f64 {
@@ -313,6 +404,63 @@ mod tests {
         // small-rate limit ≈ n·λ·T
         let tiny = migration_exposure(4, 1e-9, 1.0);
         assert!((tiny - 4e-9).abs() / 4e-9 < 1e-6);
+    }
+
+    #[test]
+    fn latent_field_closed_forms() {
+        // Little's law and the Poisson field
+        assert_eq!(scrub_mean_dwell_hours(24.0), 12.0);
+        assert!((latent_undetected_mean(0.01, 24.0) - 0.12).abs() < 1e-12);
+        // small-rate limit ≈ b·λ_b·T/2
+        let tiny = latent_risk_fraction(42, 1e-9, 24.0);
+        assert!((tiny - 42.0 * 1e-9 * 12.0).abs() / tiny < 1e-5);
+        // monotone in every knob
+        assert!(
+            latent_risk_fraction(42, 1e-4, 48.0) > latent_risk_fraction(42, 1e-4, 24.0)
+        );
+        assert!(
+            latent_risk_fraction(210, 1e-4, 24.0) > latent_risk_fraction(42, 1e-4, 24.0)
+        );
+    }
+
+    #[test]
+    fn binomial_tail_matches_hand_expansion() {
+        // m = 3, p = 0.2: P(X > 1) = 3p²(1−p) + p³
+        let p: f64 = 0.2;
+        let expect = 3.0 * p * p * (1.0 - p) + p * p * p;
+        assert!((binomial_tail_gt(3, p, 1) - expect).abs() < 1e-12);
+        assert_eq!(binomial_tail_gt(3, p, -1), 1.0);
+        assert_eq!(binomial_tail_gt(3, p, 3), 0.0);
+        assert_eq!(binomial_tail_gt(3, 0.0, 1), 0.0);
+        assert_eq!(binomial_tail_gt(3, 1.0, 1), 1.0);
+    }
+
+    #[test]
+    fn latent_loss_reduces_to_unavailability_without_corruption() {
+        let (n, lambda, mu) = (42usize, 1.0 / 1000.0, 1.0 / 10.0);
+        for f in [7usize, 11] {
+            let plain = unavailable_fraction(n, f, lambda, mu);
+            let with0 = latent_loss_fraction(n, f, lambda, mu, 0.0);
+            assert!((plain - with0).abs() < 1e-15, "f={f}: {plain} vs {with0}");
+            // corruption only makes things worse
+            let with = latent_loss_fraction(n, f, lambda, mu, 1e-3);
+            assert!(with > with0);
+        }
+        // family coupling: wider tolerance buries the same field deeper
+        let f7 = latent_loss_fraction(42, 7, lambda, mu, 1e-3);
+        let f11 = latent_loss_fraction(42, 11, lambda, mu, 1e-3);
+        assert!(f7 > f11 * 1e3, "{f7} vs {f11}");
+    }
+
+    #[test]
+    fn latent_loss_hand_check_width_two() {
+        // n = 2, f = 1: loss = π0·p² + π1·p + π2
+        let (lambda, mu, p) = (0.3f64, 1.1f64, 0.05f64);
+        let (lam, rep) = injected_chain(2, lambda, mu);
+        let pi = steady_state(&lam, &rep);
+        let expect = pi[0] * p * p + pi[1] * p + pi[2];
+        let got = latent_loss_fraction(2, 1, lambda, mu, p);
+        assert!((got - expect).abs() < 1e-14, "{got} vs {expect}");
     }
 
     #[test]

@@ -57,7 +57,7 @@ unilrc — Wide LRCs with Unified Locality (paper reproduction)
 USAGE:
   unilrc layout  [--scheme 42|136|210]
   unilrc analyze [--fig3b] [--fig5] [--fig8] [--table2] [--table4] [--all]
-  unilrc experiment <1..10> [--config FILE] [--scheme S] [--block-kb N]
+  unilrc experiment <1..11> [--config FILE] [--scheme S] [--block-kb N]
                     [--stripes N] [--cross-gbps X] [--backend native|pjrt] [--raw]
                     [--topology N,N,...] (asymmetric per-cluster node counts)
                     [--gf-kernel auto|scalar|ssse3|avx2|avx512|gfni|neon]
@@ -101,7 +101,16 @@ crash-at-every-WAL-position sweep over open migration waves; knobs:
 --migrate-rate-mbps --migrate-burst (KiB) --backoff-base-ms
 --backoff-cap-ms --max-attempts --add-nodes --drain-nodes
 --add-clusters --crash-cap --fg-reads, [migration] config section; see
-PERF.md on reading the throttle interference curve).
+PERF.md on reading the throttle interference curve) · 11 latent sector
+errors vs background scrub (seeded silent-corruption streams layered on
+the exp7 node/cluster schedule; a periodic scrub pass drains a token
+bucket shared with background traffic, visits clusters with a down
+member first, and the per-family sweep over scrub interval ×
+sector-error rate is differentially checked against the closed-form
+latent-error chain in analysis/markov; knobs: --scrub-intervals-hours
+--sector-mtte-hours (comma lists) --scrub-node-kb --scrub-rate-mb-h
+--scrub-burst-kb --scrub-tick-hours plus the exp7 clock flags, [scrub]
+config section; see PERF.md on choosing the scrub budget).
 
 The GF engine tier defaults to the best the CPU supports; override with
 --gf-kernel / --gf-threads or UNILRC_GF_KERNEL / UNILRC_GF_THREADS.
@@ -249,6 +258,83 @@ fn fault_sim_config(
         "--cluster-mttr-hours must be positive while cluster events are enabled"
     );
     Ok(fc)
+}
+
+/// Experiment 11 knobs: the base node/cluster clocks ride on the exp7
+/// `[faults]` plumbing (config-file section + `--horizon-hours` etc.);
+/// the scrub grid and budget come from the `[scrub]` section, explicit
+/// flags override.
+fn scrub_sim_config(
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<experiments::ScrubSimConfig> {
+    let mut sc = experiments::ScrubSimConfig::default();
+    if let Some(path) = flags.get("config") {
+        let file = crate::config::Config::load(path)?;
+        // borrow the exp7 [faults] hour keys for the base clocks, on top
+        // of the accelerated default (the paper-scale exp7 defaults would
+        // make the 0.25 h replay ticks pointless)
+        let mut fc = experiments::FaultSimConfig { fault: sc.fault, ..Default::default() };
+        crate::config::apply_fault_keys(&file, &mut fc);
+        sc.fault = fc.fault;
+        crate::config::apply_scrub_keys(&file, &mut sc)?;
+    }
+    // explicit flags override both config-file sections; clock flags
+    // reuse the exp7 names
+    if let Some(v) = flags.get("horizon-hours") {
+        sc.fault.horizon_hours = v.parse()?;
+    }
+    if let Some(v) = flags.get("mttf-hours") {
+        sc.fault.node_mttf_hours = v.parse()?;
+    }
+    if let Some(v) = flags.get("mttr-hours") {
+        sc.fault.node_mttr_hours = v.parse()?;
+    }
+    if let Some(v) = flags.get("cluster-mttf-hours") {
+        sc.fault.cluster_mttf_hours = v.parse()?;
+    }
+    if let Some(v) = flags.get("cluster-mttr-hours") {
+        sc.fault.cluster_mttr_hours = v.parse()?;
+    }
+    anyhow::ensure!(sc.fault.horizon_hours > 0.0, "--horizon-hours must be positive");
+    anyhow::ensure!(
+        sc.fault.node_mttf_hours <= 0.0 || sc.fault.node_mttr_hours > 0.0,
+        "--mttr-hours must be positive while node failures are enabled (--mttf-hours > 0)"
+    );
+    anyhow::ensure!(
+        sc.fault.cluster_mttf_hours <= 0.0 || sc.fault.cluster_mttr_hours > 0.0,
+        "--cluster-mttr-hours must be positive while cluster events are enabled"
+    );
+    if let Some(v) = flags.get("scrub-intervals-hours") {
+        sc.intervals_hours = crate::config::parse_hour_list(v, "--scrub-intervals-hours")?;
+    }
+    if let Some(v) = flags.get("sector-mtte-hours") {
+        sc.sector_mtte_hours = crate::config::parse_hour_list(v, "--sector-mtte-hours")?;
+    }
+    if let Some(v) = flags.get("scrub-node-kb") {
+        sc.node_bytes = v.parse::<u64>()? * 1024;
+    }
+    if let Some(v) = flags.get("scrub-rate-mb-h") {
+        sc.rate_bytes_per_hour = v.parse::<f64>()? * (1 << 20) as f64;
+    }
+    if let Some(v) = flags.get("scrub-burst-kb") {
+        sc.burst_bytes = v.parse::<f64>()? * 1024.0;
+    }
+    if let Some(v) = flags.get("scrub-tick-hours") {
+        sc.tick_hours = v.parse()?;
+    }
+    anyhow::ensure!(
+        sc.intervals_hours.iter().all(|&t| t > 0.0),
+        "--scrub-intervals-hours entries must be positive"
+    );
+    anyhow::ensure!(
+        sc.sector_mtte_hours.iter().all(|&t| t > 0.0),
+        "--sector-mtte-hours entries must be positive"
+    );
+    anyhow::ensure!(sc.node_bytes > 0, "--scrub-node-kb must be at least 1 KiB");
+    anyhow::ensure!(sc.rate_bytes_per_hour > 0.0, "--scrub-rate-mb-h must be positive");
+    anyhow::ensure!(sc.burst_bytes > 0.0, "--scrub-burst-kb must be positive");
+    anyhow::ensure!(sc.tick_hours > 0.0, "--scrub-tick-hours must be positive");
+    Ok(sc)
 }
 
 /// Experiment 8 knobs: config-file `[elastic]` section first, explicit
@@ -555,7 +641,10 @@ fn fig3b() {
 fn table4() {
     println!("=== Table 4 — MTTDL (years, exact absorption time; see EXPERIMENTS.md on scale) ===");
     let params = MttdlParams::default();
-    println!("{:<12} {:>12} {:>12} {:>12} {:>12}", "scheme", "ALRC", "OLRC", "ULRC", "UniLRC");
+    println!(
+        "{:<12} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "scheme", "ALRC", "OLRC", "ULRC", "CLRC", "UniLRC"
+    );
     for scheme in Scheme::paper_schemes() {
         let mut vals = HashMap::new();
         for (fam, m) in metric_rows(scheme) {
@@ -564,11 +653,12 @@ fn table4() {
             vals.insert(fam, mttdl_years(code.n(), f_tol, m.mttdl_c.max(0.05), &params));
         }
         println!(
-            "{:<12} {:>12.2e} {:>12.2e} {:>12.2e} {:>12.2e}",
+            "{:<12} {:>12.2e} {:>12.2e} {:>12.2e} {:>12.2e} {:>12.2e}",
             scheme.label(),
             vals[&CodeFamily::Alrc],
             vals[&CodeFamily::Olrc],
             vals[&CodeFamily::Ulrc],
+            vals[&CodeFamily::Clrc],
             vals[&CodeFamily::UniLrc],
         );
     }
@@ -819,7 +909,50 @@ fn cmd_experiment(which: Option<&str>, flags: &HashMap<String, String>) -> anyho
                 }
             }
         }
-        _ => anyhow::bail!("experiment must be 1..10"),
+        Some("11") => {
+            let sc = scrub_sim_config(flags)?;
+            let res = experiments::exp11_scrub(&cfg, &sc)?;
+            println!(
+                "=== Experiment 11 — latent errors vs background scrub [{}] (seed {}, \
+                 horizon {:.0} h, budget {:.0} MiB/h burst {:.0} KiB, {:.0} KiB/node/pass) ===",
+                cfg.scheme.label(),
+                cfg.seed,
+                sc.fault.horizon_hours,
+                sc.rate_bytes_per_hour / (1 << 20) as f64,
+                sc.burst_bytes / 1024.0,
+                sc.node_bytes as f64 / 1024.0
+            );
+            for r in &res.rows {
+                println!(
+                    "  {:<8} scrub every {:>6.1} h   sector MTTE {:>6.1} h",
+                    r.family.name(),
+                    r.interval_hours,
+                    r.sector_mtte_hours
+                );
+                println!(
+                    "    injected {:>4}   detected {:>4}   scrubbed {:>8.1} MiB of \
+                     {:>8.1} MiB granted",
+                    r.injected,
+                    r.detected,
+                    r.scrubbed_bytes as f64 / (1 << 20) as f64,
+                    r.granted_bytes as f64 / (1 << 20) as f64
+                );
+                println!(
+                    "    dwell {:>7.2} h (markov {:>7.2} h)   undetected/node {:>8.5} \
+                     (markov {:>8.5})",
+                    r.sim_dwell_hours,
+                    r.markov_dwell_hours,
+                    r.sim_undetected_per_node,
+                    r.markov_undetected_per_node
+                );
+                println!(
+                    "    at-risk exposure {:>9.2} block·h   P(loss incl. corruption) {:.3e}",
+                    r.at_risk_block_hours, r.loss_fraction_markov
+                );
+            }
+            println!("  sweep digest {:016x}", res.digest);
+        }
+        _ => anyhow::bail!("experiment must be 1..11"),
     }
     if flags.contains_key("cache-stats") {
         print_plan_cache_stats();

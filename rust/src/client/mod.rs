@@ -5,14 +5,9 @@ pub mod workload;
 
 pub use workload::{ObjectId, Workload, WorkloadSpec};
 
-/// Percentile over a latency sample (`p` in 0..=100).
-pub fn percentile(samples: &[f64], p: f64) -> f64 {
-    assert!(!samples.is_empty());
-    let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-    s[idx.min(s.len() - 1)]
-}
+// Latency percentiles live in [`crate::stats`] — the crate-wide single
+// implementation (`q` in 0.0..=1.0, `Option` on empty). The old
+// `p` in 0..=100 helper that used to live here is gone.
 
 /// Mean of a sample.
 pub fn mean(samples: &[f64]) -> f64 {
@@ -35,14 +30,6 @@ pub fn cdf_points(samples: &[f64], points: usize) -> Vec<(f64, f64)> {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn percentile_basics() {
-        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(percentile(&s, 0.0), 1.0);
-        assert_eq!(percentile(&s, 100.0), 100.0);
-        assert!((percentile(&s, 50.0) - 50.0).abs() <= 1.0);
-    }
 
     #[test]
     fn mean_basics() {

@@ -6,9 +6,10 @@
 //! bundles the generator with its *locality structure* (the local groups of
 //! Definition 2.2), from which everything else — repair plans, recovery
 //! locality r̄, XOR locality, distance checks — is derived uniformly, so the
-//! four families are compared apples-to-apples.
+//! families are compared apples-to-apples.
 
 pub mod alrc;
+pub mod clrc;
 pub mod decoder;
 pub mod layout;
 pub mod olrc;

@@ -1,7 +1,7 @@
 //! Scheme presets — the paper's Table 2 parameter sets, plus constructors
 //! that map a (family, scheme) pair to a concrete [`Code`].
 
-use super::{alrc::Alrc, olrc::Olrc, rs::Rs, ulrc::Ulrc, unilrc::UniLrc, Code};
+use super::{alrc::Alrc, clrc::Clrc, olrc::Olrc, rs::Rs, ulrc::Ulrc, unilrc::UniLrc, Code};
 
 /// The code families compared throughout the paper.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -14,6 +14,8 @@ pub enum CodeFamily {
     Olrc,
     /// Uniform Cauchy LRC (Google, FAST'23).
     Ulrc,
+    /// Cascaded Parity LRC ("Making Wide Stripes Practical", 2025).
+    Clrc,
     /// Reed–Solomon (MDS reference, no locality).
     Rs,
 }
@@ -25,13 +27,21 @@ impl CodeFamily {
             CodeFamily::Alrc => "ALRC",
             CodeFamily::Olrc => "OLRC",
             CodeFamily::Ulrc => "ULRC",
+            CodeFamily::Clrc => "CLRC",
             CodeFamily::Rs => "RS",
         }
     }
 
-    /// The four LRC families of Table 1/2 (excludes RS).
-    pub fn paper_baselines() -> [CodeFamily; 4] {
-        [CodeFamily::UniLrc, CodeFamily::Alrc, CodeFamily::Olrc, CodeFamily::Ulrc]
+    /// The LRC families compared in every experiment (excludes RS): the
+    /// paper's four plus the Cascaded Parity successor construction.
+    pub fn paper_baselines() -> [CodeFamily; 5] {
+        [
+            CodeFamily::UniLrc,
+            CodeFamily::Alrc,
+            CodeFamily::Olrc,
+            CodeFamily::Ulrc,
+            CodeFamily::Clrc,
+        ]
     }
 
     pub fn parse(s: &str) -> Option<CodeFamily> {
@@ -40,6 +50,7 @@ impl CodeFamily {
             "alrc" | "azure" => Some(CodeFamily::Alrc),
             "olrc" | "optimal" => Some(CodeFamily::Olrc),
             "ulrc" | "uniform" => Some(CodeFamily::Ulrc),
+            "clrc" | "cascaded" => Some(CodeFamily::Clrc),
             "rs" | "reed-solomon" => Some(CodeFamily::Rs),
             _ => None,
         }
@@ -103,6 +114,7 @@ impl Scheme {
             }
             CodeFamily::Olrc => Olrc::new(self.n, self.k),
             CodeFamily::Ulrc => Ulrc::new(self.n, self.k, self.f),
+            CodeFamily::Clrc => Clrc::new(self.n, self.k, self.f),
             CodeFamily::Rs => Rs::new(self.n, self.k),
         }
     }
@@ -143,6 +155,7 @@ mod tests {
     fn family_parse() {
         assert_eq!(CodeFamily::parse("UniLRC"), Some(CodeFamily::UniLrc));
         assert_eq!(CodeFamily::parse("azure"), Some(CodeFamily::Alrc));
+        assert_eq!(CodeFamily::parse("cascaded"), Some(CodeFamily::Clrc));
         assert_eq!(CodeFamily::parse("nope"), None);
     }
 

@@ -396,6 +396,54 @@ pub fn apply_fault_keys(cfg: &Config, f: &mut crate::experiments::FaultSimConfig
     }
 }
 
+/// Apply the `[scrub]` section onto an experiment-11 config. Sweep axes
+/// are comma-separated hour lists (`intervals_hours = "12,48"`,
+/// `sector_mtte_hours = "50,200"`); scalar keys `node_kb`,
+/// `rate_mb_per_hour`, `burst_kb`, `tick_hours` size the per-pass work
+/// and the shared background token bucket. The base node/cluster clocks
+/// come from the `[faults]` keys via the exp7 plumbing; explicit CLI
+/// flags override everything here.
+pub fn apply_scrub_keys(
+    cfg: &Config,
+    s: &mut crate::experiments::ScrubSimConfig,
+) -> anyhow::Result<()> {
+    if let Some(v) = cfg.get_str("scrub", "intervals_hours") {
+        s.intervals_hours = parse_hour_list(v, "intervals_hours")?;
+    }
+    if let Some(v) = cfg.get_str("scrub", "sector_mtte_hours") {
+        s.sector_mtte_hours = parse_hour_list(v, "sector_mtte_hours")?;
+    }
+    if let Some(v) = cfg.get_usize("scrub", "node_kb") {
+        s.node_bytes = v as u64 * 1024;
+    }
+    if let Some(v) = cfg.get_f64("scrub", "rate_mb_per_hour") {
+        s.rate_bytes_per_hour = v * (1 << 20) as f64;
+    }
+    if let Some(v) = cfg.get_f64("scrub", "burst_kb") {
+        s.burst_bytes = v * 1024.0;
+    }
+    if let Some(v) = cfg.get_f64("scrub", "tick_hours") {
+        s.tick_hours = v;
+    }
+    Ok(())
+}
+
+/// Parse a comma-separated list of hour values (`"12,48"`) — the sweep
+/// axes of the exp11 grid, shared by the `[scrub]` section and the
+/// `--scrub-intervals-hours` / `--sector-mtte-hours` flags.
+pub fn parse_hour_list(spec: &str, what: &str) -> anyhow::Result<Vec<f64>> {
+    let vals: Vec<f64> = spec
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad {what} entry {t:?} (want hours, e.g. 12,48)"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!vals.is_empty(), "{what} must name at least one sweep point");
+    Ok(vals)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -525,6 +573,31 @@ epsilon = 0.1
         assert_eq!(f.measure_cap, 4);
         assert_eq!(f.fault.node_mttr_hours, defaults.fault.node_mttr_hours);
         assert_eq!(f.reads_per_event, defaults.reads_per_event);
+    }
+
+    #[test]
+    fn scrub_section_applies_over_defaults() {
+        let c = Config::parse(
+            "[scrub]\nintervals_hours = \"6, 24,96\"\nsector_mtte_hours = \"40\"\n\
+             node_kb = 512\nrate_mb_per_hour = 64.0\ntick_hours = 0.5",
+        )
+        .unwrap();
+        let mut s = crate::experiments::ScrubSimConfig::default();
+        let defaults = crate::experiments::ScrubSimConfig::default();
+        apply_scrub_keys(&c, &mut s).unwrap();
+        assert_eq!(s.intervals_hours, vec![6.0, 24.0, 96.0]);
+        assert_eq!(s.sector_mtte_hours, vec![40.0]);
+        assert_eq!(s.node_bytes, 512 * 1024);
+        assert_eq!(s.rate_bytes_per_hour, 64.0 * (1 << 20) as f64);
+        assert_eq!(s.tick_hours, 0.5);
+        assert_eq!(s.burst_bytes, defaults.burst_bytes);
+    }
+
+    #[test]
+    fn hour_list_rejects_garbage() {
+        assert!(parse_hour_list("12,oops", "x").is_err());
+        assert!(parse_hour_list("", "x").is_err());
+        assert_eq!(parse_hour_list(" 7.5 ", "x").unwrap(), vec![7.5]);
     }
 
     #[test]

@@ -21,7 +21,10 @@ use crate::coordinator::{
 use crate::placement::{EcWide, PlacementStrategy, Topology, TopologyEvent, UniLrcPlace};
 use crate::prng::Prng;
 use crate::runtime::{CodingEngine, NativeCoder, PjrtCoder};
-use crate::sim::faults::{digest_mix, DownState, FaultConfig, FaultKind, FaultTrace};
+use crate::sim::faults::{
+    digest_mix, replay_scrub, DownState, FaultConfig, FaultKind, FaultTrace, ScrubConfig,
+    DIGEST_SEED,
+};
 use crate::sim::{Endpoint, NetConfig};
 use anyhow::Result;
 use std::sync::Arc;
@@ -151,7 +154,7 @@ pub fn parse_topology_spec(spec: &str) -> Result<Vec<usize>> {
 }
 
 /// Validate explicit cluster sizes against **every** paper family of
-/// `scheme` — the experiment drivers run all four, so a spec that any
+/// `scheme` — the experiment drivers run every family, so a spec that any
 /// family cannot place is rejected up front (clean error instead of a
 /// panic deep inside `build_dss`).
 pub fn validate_topology(scheme: Scheme, sizes: &[usize]) -> Result<()> {
@@ -1684,6 +1687,7 @@ pub fn exp10_interference(
     burst: f64,
     fg_reads: usize,
 ) -> Result<Vec<(f64, f64, f64)>> {
+    anyhow::ensure!(fg_reads > 0, "exp10 interference needs at least one foreground probe");
     let stripe = 0;
     let block = 0;
     // fail the probe block's node so every foreground read is degraded
@@ -1720,18 +1724,11 @@ pub fn exp10_interference(
             lat.push(done - t_issue);
         }
         lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
-        curve.push((mbps, pctl(&lat, 0.50), pctl(&lat, 0.99)));
+        let p = |q| crate::stats::percentile_sorted(&lat, q).expect("fg_reads > 0 ensured above");
+        curve.push((mbps, p(0.50), p(0.99)));
     }
     dss.heal_node(victim);
     Ok(curve)
-}
-
-/// Nearest-rank percentile of an ascending-sorted slice.
-fn pctl(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
 }
 
 /// Experiment 10 — online migration under load: (A) replay a fault trace
@@ -2094,6 +2091,170 @@ fn exp10_family(
     })
 }
 
+// ----------------------------------------------------------------- exp11
+
+/// Experiment 11 (latent-error scrubbing) configuration: a
+/// scrub-interval × sector-error-rate grid replayed per family.
+#[derive(Debug, Clone)]
+pub struct ScrubSimConfig {
+    /// Scrub-period sweep points (hours between pass starts).
+    pub intervals_hours: Vec<f64>,
+    /// Sector-error-rate sweep points, as mean hours between latent
+    /// errors per node (smaller = dirtier disks).
+    pub sector_mtte_hours: Vec<f64>,
+    /// Node/cluster clocks and horizon shared by every grid cell (its
+    /// `sector_mtte_hours` is overridden per cell).
+    pub fault: FaultConfig,
+    /// Bytes verified per node per pass.
+    pub node_bytes: u64,
+    /// Background budget the scrubber shares with migration traffic:
+    /// token-bucket refill (bytes per virtual hour) and burst capacity.
+    pub rate_bytes_per_hour: f64,
+    pub burst_bytes: f64,
+    /// Replay admission cadence (hours).
+    pub tick_hours: f64,
+}
+
+impl Default for ScrubSimConfig {
+    fn default() -> Self {
+        ScrubSimConfig {
+            intervals_hours: vec![12.0, 48.0],
+            sector_mtte_hours: vec![50.0, 200.0],
+            fault: FaultConfig::accelerated(),
+            node_bytes: 1 << 20,
+            // generous enough that a pass over the widest paper topology
+            // (~200 nodes at S210) finishes well inside the shortest
+            // sweep interval — the starved regime is exercised by tests
+            rate_bytes_per_hour: 256.0 * (1 << 20) as f64,
+            burst_bytes: 8.0 * (1 << 20) as f64,
+            tick_hours: 0.25,
+        }
+    }
+}
+
+/// One grid cell of the exp11 sweep: simulated scrub outcome next to the
+/// closed-form latent-error chain it is differentially tested against.
+#[derive(Debug, Clone)]
+pub struct Exp11Row {
+    pub family: CodeFamily,
+    pub interval_hours: f64,
+    pub sector_mtte_hours: f64,
+    pub injected: usize,
+    pub detected: usize,
+    /// Mean injection→detection delay: simulated vs `T/2` closed form.
+    pub sim_dwell_hours: f64,
+    pub markov_dwell_hours: f64,
+    /// Steady-state undetected errors per node: simulated (Little's-law
+    /// meter) vs `λ̂·T/2` with `λ̂` estimated from the trace, exp7-style.
+    pub sim_undetected_per_node: f64,
+    pub markov_undetected_per_node: f64,
+    /// Family-coupled closed form: fraction of time failures + silent
+    /// corruption exceed the family's tolerance
+    /// ([`markov::latent_loss_fraction`]).
+    pub loss_fraction_markov: f64,
+    /// ∫ undetected errors on nodes whose cluster already has a down
+    /// member — the scheduler's stripes-at-risk signal, integrated.
+    pub at_risk_block_hours: f64,
+    pub scrubbed_bytes: u64,
+    pub granted_bytes: u64,
+}
+
+/// The sweep result plus its determinism witness.
+#[derive(Debug, Clone)]
+pub struct Exp11Result {
+    pub rows: Vec<Exp11Row>,
+    /// Mixes every trace digest and every [`ScrubReport`] digest —
+    /// same seed ⇒ identical, like exp7/exp8.
+    ///
+    /// [`ScrubReport`]: crate::sim::faults::ScrubReport
+    pub digest: u64,
+}
+
+/// Experiment 11 — periodic scrubbing vs latent sector errors: replay a
+/// seeded latent-error + node/cluster fault schedule through the
+/// budget-throttled scrubber ([`replay_scrub`]) on every family's
+/// placement, for every (scrub interval × sector rate) grid cell, and put
+/// the measurements next to the closed-form latent-error chain
+/// ([`markov::latent_undetected_mean`], [`markov::latent_loss_fraction`]).
+/// Deterministic: the result digest is a pure function of
+/// `(scheme, config, seed)`.
+pub fn exp11_scrub(cfg: &ExpConfig, scfg: &ScrubSimConfig) -> Result<Exp11Result> {
+    anyhow::ensure!(!scfg.intervals_hours.is_empty(), "exp11 needs ≥ 1 scrub interval");
+    anyhow::ensure!(!scfg.sector_mtte_hours.is_empty(), "exp11 needs ≥ 1 sector-error rate");
+    anyhow::ensure!(
+        scfg.sector_mtte_hours.iter().all(|&m| m > 0.0),
+        "sector MTTE must be positive (it is the sweep axis, 0 disables injection)"
+    );
+    let mut rows = Vec::new();
+    let mut digest = DIGEST_SEED;
+    for (fi, fam) in CodeFamily::paper_baselines().into_iter().enumerate() {
+        let code = cfg.scheme.build(fam);
+        let (_, topo) = strategy_and_topo(fam, &code);
+        let topo = match &cfg.topology {
+            Some(sizes) => custom_topology(fam, &code, sizes)?,
+            None => topo,
+        };
+        let live = (0..topo.total_nodes()).filter(|&n| topo.is_live(n)).count();
+        let f_tol = family_tolerance(cfg.scheme, fam);
+        // average blocks a node hosts — converts the node-level error
+        // rate into the per-block corruption field of the closed form
+        let blocks_per_node = (cfg.stripes.max(1) * code.n()) as f64 / live as f64;
+        for (ii, &interval) in scfg.intervals_hours.iter().enumerate() {
+            for (ri, &mtte) in scfg.sector_mtte_hours.iter().enumerate() {
+                let fault = FaultConfig { sector_mtte_hours: mtte, ..scfg.fault };
+                let seed = cfg.seed
+                    ^ (0x1100_0000_u64 + ((fi as u64) << 16) + ((ii as u64) << 8) + ri as u64);
+                let trace = FaultTrace::generate(&topo, &fault, seed);
+                let sc = ScrubConfig {
+                    interval_hours: interval,
+                    node_bytes: scfg.node_bytes,
+                    rate_bytes_per_hour: scfg.rate_bytes_per_hour,
+                    burst_bytes: scfg.burst_bytes,
+                    tick_hours: scfg.tick_hours,
+                };
+                let rep = replay_scrub(&topo, &trace, &sc);
+                let horizon = fault.horizon_hours;
+                // trace-estimated arrival rate (per node-hour), exp7-style
+                let lambda_hat = rep.injected as f64 / (live as f64 * horizon);
+                let sim_undet = rep.undetected_block_hours / horizon / live as f64;
+                let node_lambda =
+                    if fault.node_mttf_hours > 0.0 { 1.0 / fault.node_mttf_hours } else { 0.0 };
+                let node_mu =
+                    if fault.node_mttr_hours > 0.0 { 1.0 / fault.node_mttr_hours } else { 0.0 };
+                let p_block = 1.0
+                    - (-(lambda_hat / blocks_per_node) * interval / 2.0).exp();
+                let loss = markov::latent_loss_fraction(
+                    code.n(),
+                    f_tol,
+                    node_lambda,
+                    node_mu,
+                    p_block,
+                );
+                digest = digest_mix(digest, trace.digest());
+                digest = digest_mix(digest, rep.digest());
+                rows.push(Exp11Row {
+                    family: fam,
+                    interval_hours: interval,
+                    sector_mtte_hours: mtte,
+                    injected: rep.injected,
+                    detected: rep.detected,
+                    sim_dwell_hours: rep.mean_dwell_hours,
+                    markov_dwell_hours: markov::scrub_mean_dwell_hours(interval),
+                    sim_undetected_per_node: sim_undet,
+                    markov_undetected_per_node: markov::latent_undetected_mean(
+                        lambda_hat, interval,
+                    ),
+                    loss_fraction_markov: loss,
+                    at_risk_block_hours: rep.at_risk_block_hours,
+                    scrubbed_bytes: rep.scrubbed_bytes,
+                    granted_bytes: rep.granted_bytes,
+                });
+            }
+        }
+    }
+    Ok(Exp11Result { rows, digest })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2108,7 +2269,7 @@ mod tests {
     #[test]
     fn exp1_shape() {
         let rows = exp1_normal_read(&tiny()).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         let uni = rows.iter().find(|r| r.family == CodeFamily::UniLrc).unwrap().value;
         let olrc = rows.iter().find(|r| r.family == CodeFamily::Olrc).unwrap().value;
         assert!(uni >= olrc * 0.99, "UniLRC {uni} vs OLRC {olrc}");
@@ -2117,7 +2278,7 @@ mod tests {
     #[test]
     fn exp2_burst_runs() {
         let rows = exp2_degraded_burst(&tiny()).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         for r in &rows {
             assert!(r.value > 0.0, "{:?}", r.family);
         }
@@ -2164,6 +2325,7 @@ mod tests {
                 node_mttr_hours: 10.0,
                 cluster_mttf_hours: 1_500.0,
                 cluster_mttr_hours: 5.0,
+                sector_mtte_hours: 0.0,
                 horizon_hours: 600.0,
             },
             tenants: 2,
@@ -2172,7 +2334,7 @@ mod tests {
             measure_cap: 8,
         };
         let rows = exp7_faults(&cfg, &fcfg).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         for r in &rows {
             assert!(r.events > 0, "{:?}", r.family);
             assert!(r.node_failures > 0, "{:?}", r.family);
@@ -2227,7 +2389,7 @@ mod tests {
             fault_horizon_hours: 150.0,
         };
         let rows = exp8_elastic(&cfg, &ecfg).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         for r in &rows {
             assert_eq!(r.events, 4, "{:?}: add + drain + add-cluster + post-scale drain", r.family);
             assert!(r.moves > 0, "{:?}: events must move blocks", r.family);
@@ -2261,7 +2423,7 @@ mod tests {
             crash_cap: 7,
         };
         let rows = exp9_durability(&cfg, &dcfg).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         for r in &rows {
             // 2 ingests + add-node + fail + drain + heal + add-cluster
             assert_eq!(r.ops, 7, "{:?}", r.family);
@@ -2286,7 +2448,7 @@ mod tests {
         let cfg = ExpConfig { block_size: 4 * 1024, stripes: 2, ..tiny() };
         let mcfg = MigrationSimConfig { crash_cap: 12, fg_reads: 8, ..Default::default() };
         let rows = exp10_migration(&cfg, &mcfg).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         for r in &rows {
             let fam = r.family;
             // every admitted event completed, including the ones that
@@ -2326,7 +2488,7 @@ mod tests {
             ..tiny()
         };
         let rows = exp1_normal_read(&cfg).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         assert!(rows.iter().all(|r| r.value > 0.0));
     }
 
@@ -2360,7 +2522,7 @@ mod tests {
         let mut cfg = tiny();
         cfg.stripes = 3;
         let res = exp6_production(&cfg, 10, 8).unwrap();
-        assert_eq!(res.len(), 4);
+        assert_eq!(res.len(), 5);
         for r in &res {
             assert!(r.normal_mean_ms > 0.0);
             assert!(r.degraded_mean_ms > 0.0);

@@ -31,3 +31,4 @@ pub mod proxy;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod stats;

@@ -168,10 +168,22 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         report.in_order_violations += out.in_order_violations;
         latencies.extend(out.latencies_ms);
     }
+    // A dead or unreachable server yields zero completed operations; the old
+    // behavior reported p99 = 0.0 ms, which sailed under any `--assert-p99-ms`
+    // gate. Fail loudly instead — and before emitting bench rows, so CI never
+    // records a vacuous all-zero latency artifact.
+    if report.ok == 0 || latencies.is_empty() {
+        return Err(format!(
+            "loadgen completed zero successful operations \
+             ({} requests, {} protocol errors, {} op errors) — server dead or unreachable",
+            report.requests, report.protocol_errors, report.op_errors
+        ));
+    }
     latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
-    report.p50_ms = percentile(&latencies, 0.50);
-    report.p95_ms = percentile(&latencies, 0.95);
-    report.p99_ms = percentile(&latencies, 0.99);
+    let pct = |q| crate::stats::percentile_sorted(&latencies, q).expect("non-empty checked above");
+    report.p50_ms = pct(0.50);
+    report.p95_ms = pct(0.95);
+    report.p99_ms = pct(0.99);
 
     let mut json = JsonReport::new("serve");
     json.meta("sessions", &cfg.sessions.to_string());
@@ -189,14 +201,6 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
     json.write_if_requested();
 
     Ok(report)
-}
-
-fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
 }
 
 fn run_session(
@@ -364,14 +368,16 @@ fn exchange_batch(
 
 #[cfg(test)]
 mod tests {
-    use super::*;
+    use crate::stats::percentile_sorted;
 
     #[test]
     fn percentiles_pick_sensible_ranks() {
+        // pins the nearest-rank semantics the report fields rely on, now
+        // served by the shared crate::stats implementation
         let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
-        assert_eq!(percentile(&xs, 0.50), 51.0);
-        assert_eq!(percentile(&xs, 0.99), 99.0);
-        assert_eq!(percentile(&[], 0.99), 0.0);
-        assert_eq!(percentile(&[7.5], 0.5), 7.5);
+        assert_eq!(percentile_sorted(&xs, 0.50), Some(51.0));
+        assert_eq!(percentile_sorted(&xs, 0.99), Some(99.0));
+        assert_eq!(percentile_sorted(&[], 0.99), None);
+        assert_eq!(percentile_sorted(&[7.5], 0.5), Some(7.5));
     }
 }

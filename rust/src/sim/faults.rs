@@ -23,6 +23,8 @@
 
 use crate::placement::Topology;
 use crate::prng::Prng;
+use crate::sim::TokenBucket;
+use std::collections::VecDeque;
 
 /// Fault-model parameters (hours on the virtual clock). A rate of `0.0`
 /// disables that event class entirely.
@@ -36,6 +38,13 @@ pub struct FaultConfig {
     pub cluster_mttf_hours: f64,
     /// Mean duration of a whole-cluster outage.
     pub cluster_mttr_hours: f64,
+    /// Mean time between latent sector errors per node (0 = off). Unlike
+    /// node failures these are *silent*: the event corrupts one block's
+    /// worth of data in place and nothing notices until a background
+    /// scrub pass ([`replay_scrub`]) reads over it — so errors accumulate
+    /// (a node can carry several at once) and the trace carries no paired
+    /// repair event.
+    pub sector_mtte_hours: f64,
     /// Trace length (hours).
     pub horizon_hours: f64,
 }
@@ -49,6 +58,7 @@ impl Default for FaultConfig {
             node_mttr_hours: 24.0,
             cluster_mttf_hours: 10.0 * 24.0 * 365.0,
             cluster_mttr_hours: 12.0,
+            sector_mtte_hours: 0.0,
             horizon_hours: 10.0 * 24.0 * 365.0,
         }
     }
@@ -64,6 +74,7 @@ impl FaultConfig {
             node_mttr_hours: 8.0,
             cluster_mttf_hours: 2_000.0,
             cluster_mttr_hours: 4.0,
+            sector_mtte_hours: 0.0,
             horizon_hours: 2_000.0,
         }
     }
@@ -80,6 +91,10 @@ pub enum FaultKind {
     ClusterFail(usize),
     /// The cluster outage ends.
     ClusterRepair(usize),
+    /// A latent sector error silently corrupts one block's worth of data
+    /// on the node. No availability transition — the node stays up and
+    /// keeps serving; detection is the scrubber's job ([`replay_scrub`]).
+    LatentError(usize),
 }
 
 impl FaultKind {
@@ -90,6 +105,7 @@ impl FaultKind {
             FaultKind::NodeRepair(_) => 1,
             FaultKind::ClusterFail(_) => 2,
             FaultKind::ClusterRepair(_) => 3,
+            FaultKind::LatentError(_) => 4,
         }
     }
 
@@ -99,7 +115,8 @@ impl FaultKind {
             FaultKind::NodeFail(i)
             | FaultKind::NodeRepair(i)
             | FaultKind::ClusterFail(i)
-            | FaultKind::ClusterRepair(i) => *i,
+            | FaultKind::ClusterRepair(i)
+            | FaultKind::LatentError(i) => *i,
         }
     }
 
@@ -109,6 +126,7 @@ impl FaultKind {
             FaultKind::NodeRepair(_) => "node-repair",
             FaultKind::ClusterFail(_) => "cluster-fail",
             FaultKind::ClusterRepair(_) => "cluster-repair",
+            FaultKind::LatentError(_) => "latent-error",
         }
     }
 }
@@ -210,6 +228,22 @@ impl FaultTrace {
                     true,
                     &mut events,
                 );
+            }
+        }
+        if cfg.sector_mtte_hours > 0.0 {
+            for node in topo.live_nodes() {
+                // fresh seed namespace — latent clocks never perturb the
+                // node/cluster streams, so enabling scrubbing leaves every
+                // pre-existing trace's fail/repair schedule byte-identical
+                let mut prng = Prng::new(seed.wrapping_add(2_000_003 + node as u64));
+                let mut t = 0.0f64;
+                loop {
+                    t += exp_sample(&mut prng, cfg.sector_mtte_hours);
+                    if t >= cfg.horizon_hours {
+                        break;
+                    }
+                    events.push(FaultEvent { at_hours: t, kind: FaultKind::LatentError(node) });
+                }
             }
         }
         if cfg.cluster_mttf_hours > 0.0 && cfg.cluster_mttr_hours > 0.0 {
@@ -350,6 +384,7 @@ impl FaultTrace {
                 "node-repair" => FaultKind::NodeRepair(idx),
                 "cluster-fail" => FaultKind::ClusterFail(idx),
                 "cluster-repair" => FaultKind::ClusterRepair(idx),
+                "latent-error" => FaultKind::LatentError(idx),
                 other => anyhow::bail!("unknown event kind {other:?}"),
             };
             events.push(FaultEvent { at_hours, kind });
@@ -423,9 +458,303 @@ impl DownState {
                     }
                 }
             }
+            // silent by definition: the node keeps serving, nothing flips
+            FaultKind::LatentError(_) => {}
         }
         changed
     }
+}
+
+// ------------------------------------------------------------------ scrub
+//
+// Background scrubbing turns the latent-error stream into a repair
+// schedule: a pass starts every `interval_hours`, reads `node_bytes` off
+// every live node, and every byte it reads is admitted through a
+// [`TokenBucket`] — the same fixed-cadence `drain` discipline the
+// migration throttle uses, so scrub I/O competes for the background
+// budget instead of bursting past foreground traffic. When a node's scan
+// completes, every latent error injected on it so far is detected and
+// repaired on the spot (the repair is a local-group XOR; detection
+// latency, not rebuild time, dominates the dwell).
+
+/// Scrub-pass policy. Time unit is the trace's virtual hour.
+#[derive(Debug, Clone, Copy)]
+pub struct ScrubConfig {
+    /// Cadence of pass starts; the first pass starts at `interval_hours`.
+    /// A pass that overruns its slot skips the missed starts (no backlog).
+    pub interval_hours: f64,
+    /// Bytes verified per node per pass.
+    pub node_bytes: u64,
+    /// Background-budget refill rate (bytes per virtual hour).
+    pub rate_bytes_per_hour: f64,
+    /// Token-bucket capacity (bytes).
+    pub burst_bytes: f64,
+    /// Admission cadence of the replay: budget is drained and spent at
+    /// this granularity, and detections land on tick boundaries.
+    pub tick_hours: f64,
+}
+
+impl ScrubConfig {
+    /// Companion preset to [`FaultConfig::accelerated`]: hourly ticks,
+    /// a pass every day, budget sized to finish a pass in a few ticks.
+    pub fn accelerated(nodes: usize) -> ScrubConfig {
+        let node_bytes = 1 << 20;
+        ScrubConfig {
+            interval_hours: 24.0,
+            node_bytes,
+            rate_bytes_per_hour: (nodes as u64 * node_bytes) as f64 / 4.0,
+            burst_bytes: node_bytes as f64,
+            tick_hours: 0.25,
+        }
+    }
+}
+
+/// One completed scrub pass (the replay's audit trail: summing `bytes`
+/// across passes must reproduce [`ScrubReport::scrubbed_bytes`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScrubPass {
+    pub started_hours: f64,
+    pub finished_hours: f64,
+    /// Bytes read by this pass.
+    pub bytes: u64,
+    /// Latent errors this pass detected (and repaired).
+    pub detected: usize,
+    /// Node visit order chosen at pass start — stripes-at-risk first:
+    /// nodes whose cluster currently has a down member lead the queue
+    /// (under one-group-one-cluster placement a down co-cluster node
+    /// means this node's local groups are already one failure deep).
+    pub order: Vec<usize>,
+}
+
+/// Aggregate outcome of [`replay_scrub`] — a pure function of
+/// `(topo, trace, config)`, so every field is digest-stable.
+#[derive(Debug, Clone, Default)]
+pub struct ScrubReport {
+    /// Latent errors injected by the trace.
+    pub injected: usize,
+    /// Errors found (and repaired) by a scrub scan.
+    pub detected: usize,
+    /// Errors wiped by a node *replacement* (the node-level repair
+    /// rebuilds content from peers, clearing its latent errors; a
+    /// cluster repair is a power event and clears nothing).
+    pub cleared_by_rebuild: usize,
+    /// Errors still undetected when the horizon ends.
+    pub undetected_at_horizon: usize,
+    /// Mean injection→detection delay over scrub-detected errors.
+    pub mean_dwell_hours: f64,
+    /// Bytes granted by the budget (Σ of per-tick drains).
+    pub granted_bytes: u64,
+    /// Bytes actually read by scans — never exceeds `granted_bytes`.
+    pub scrubbed_bytes: u64,
+    /// ∫ (undetected errors) dt — the Little's-law meter the closed-form
+    /// chain ([`crate::analysis::markov::latent_undetected_mean`])
+    /// predicts as `λ̂ · T/2` per node.
+    pub undetected_block_hours: f64,
+    /// Like `undetected_block_hours`, restricted to errors on nodes whose
+    /// cluster has another member down — undetected corruption in a local
+    /// group that is already degraded (the scrub scheduler's priority
+    /// signal, integrated).
+    pub at_risk_block_hours: f64,
+    pub passes: Vec<ScrubPass>,
+}
+
+impl ScrubReport {
+    /// Stable FNV-1a fingerprint over every counter, meter, and pass
+    /// record (times bit-exact) — the exp11 determinism witness.
+    pub fn digest(&self) -> u64 {
+        let mut h = DIGEST_SEED;
+        for v in [
+            self.injected as u64,
+            self.detected as u64,
+            self.cleared_by_rebuild as u64,
+            self.undetected_at_horizon as u64,
+            self.granted_bytes,
+            self.scrubbed_bytes,
+            self.mean_dwell_hours.to_bits(),
+            self.undetected_block_hours.to_bits(),
+            self.at_risk_block_hours.to_bits(),
+        ] {
+            h = digest_mix(h, v);
+        }
+        for p in &self.passes {
+            h = digest_mix(h, p.started_hours.to_bits());
+            h = digest_mix(h, p.finished_hours.to_bits());
+            h = digest_mix(h, p.bytes);
+            h = digest_mix(h, p.detected as u64);
+            for &n in &p.order {
+                h = digest_mix(h, n as u64);
+            }
+        }
+        h
+    }
+}
+
+/// In-flight pass state: nodes still to scan (front = current), with the
+/// byte position inside the front node.
+struct PassState {
+    started: f64,
+    queue: VecDeque<usize>,
+    /// Bytes left on the front node.
+    remaining: u64,
+    bytes: u64,
+    detected: usize,
+    order: Vec<usize>,
+}
+
+/// Replay `trace` through the periodic scrubber. Deterministic — no
+/// randomness beyond the trace itself. Semantics:
+///
+/// * budget is drained every `tick_hours` while a pass is in flight and
+///   spent front-to-back along the pass's priority order; a grant that
+///   cannot be spent (every remaining node is down) is forfeited —
+///   use-it-or-lose-it, exactly like the migration throttle's
+///   fixed-cadence admission;
+/// * a down node cannot be scanned; it rotates to the back of the queue
+///   and the pass completes only once every queued node has been read;
+/// * a node-level repair (replacement) clears the node's latent errors
+///   (`cleared_by_rebuild`); cluster repairs clear nothing;
+/// * detections land on the tick boundary where the node's scan finishes.
+pub fn replay_scrub(topo: &Topology, trace: &FaultTrace, cfg: &ScrubConfig) -> ScrubReport {
+    assert!(cfg.interval_hours > 0.0, "scrub interval must be positive");
+    assert!(cfg.tick_hours > 0.0, "scrub tick must be positive");
+    assert!(cfg.node_bytes > 0, "scrub must read something per node");
+    let live: Vec<usize> = (0..topo.total_nodes()).filter(|&n| topo.is_live(n)).collect();
+    let members: Vec<Vec<usize>> = (0..topo.clusters())
+        .map(|c| topo.nodes_of(c).iter().copied().filter(|&n| topo.is_live(n)).collect())
+        .collect();
+    let cluster_of: Vec<usize> =
+        (0..topo.total_nodes()).map(|n| topo.cluster_of_node(n)).collect();
+
+    let mut down = DownState::new(topo);
+    let mut pending: Vec<Vec<f64>> = vec![Vec::new(); topo.total_nodes()];
+    let mut bucket = TokenBucket::new(cfg.rate_bytes_per_hour, cfg.burst_bytes);
+    let mut report = ScrubReport::default();
+    let mut dwell_sum = 0.0f64;
+    let mut pass: Option<PassState> = None;
+    let mut next_start = cfg.interval_hours;
+    let mut ei = 0usize;
+
+    let ticks = (trace.horizon_hours / cfg.tick_hours).ceil() as u64;
+    for k in 1..=ticks {
+        let now = (k as f64 * cfg.tick_hours).min(trace.horizon_hours);
+
+        // apply every trace event up to this tick, in schedule order
+        while ei < trace.events.len() && trace.events[ei].at_hours <= now {
+            let ev = trace.events[ei];
+            ei += 1;
+            match ev.kind {
+                FaultKind::LatentError(n) => {
+                    report.injected += 1;
+                    pending[n].push(ev.at_hours);
+                }
+                FaultKind::NodeRepair(n) => {
+                    report.cleared_by_rebuild += pending[n].len();
+                    pending[n].clear();
+                    down.apply(ev.kind);
+                }
+                _ => {
+                    down.apply(ev.kind);
+                }
+            }
+        }
+
+        // per-cluster down counts drive both the risk meter and (at pass
+        // start) the scan priority
+        let down_in: Vec<usize> =
+            members.iter().map(|m| m.iter().filter(|&&n| down.is_down(n)).count()).collect();
+
+        if pass.is_none() && now >= next_start {
+            let mut order = live.clone();
+            // stripes-at-risk first: most down co-cluster members, then
+            // stable node id so equal-risk ties are deterministic
+            order.sort_by_key(|&n| {
+                let c = cluster_of[n];
+                let peers_down = down_in[c] - usize::from(down.is_down(n));
+                (usize::MAX - peers_down, n)
+            });
+            pass = Some(PassState {
+                started: now,
+                queue: order.iter().copied().collect(),
+                remaining: cfg.node_bytes,
+                bytes: 0,
+                detected: 0,
+                order,
+            });
+        }
+
+        if let Some(p) = pass.as_mut() {
+            let mut grant = bucket.drain(now) as u64;
+            report.granted_bytes += grant;
+            let mut skips = 0usize;
+            while grant > 0 {
+                let Some(&n) = p.queue.front() else { break };
+                if down.is_down(n) {
+                    // defer: rotate to the back and restart its scan from
+                    // scratch when it comes around (an interrupted verify
+                    // can't be trusted); stall the tick once every
+                    // remaining node has been tried
+                    p.queue.rotate_left(1);
+                    p.remaining = cfg.node_bytes;
+                    skips += 1;
+                    if skips >= p.queue.len() {
+                        break;
+                    }
+                    continue;
+                }
+                skips = 0;
+                let take = grant.min(p.remaining);
+                grant -= take;
+                p.remaining -= take;
+                p.bytes += take;
+                report.scrubbed_bytes += take;
+                if p.remaining == 0 {
+                    // node fully verified: every error injected so far on
+                    // it is detected and repaired now
+                    report.detected += pending[n].len();
+                    p.detected += pending[n].len();
+                    for &born in &pending[n] {
+                        dwell_sum += now - born;
+                    }
+                    pending[n].clear();
+                    p.queue.pop_front();
+                    p.remaining = cfg.node_bytes;
+                }
+            }
+            if p.queue.is_empty() {
+                report.passes.push(ScrubPass {
+                    started_hours: p.started,
+                    finished_hours: now,
+                    bytes: p.bytes,
+                    detected: p.detected,
+                    order: std::mem::take(&mut p.order),
+                });
+                pass = None;
+                // next slot strictly in the future: overruns skip starts
+                while next_start <= now {
+                    next_start += cfg.interval_hours;
+                }
+            }
+        }
+
+        // occupancy integrals over this tick (state as of the tick)
+        let dt = cfg.tick_hours.min(trace.horizon_hours - (k - 1) as f64 * cfg.tick_hours);
+        for &n in &live {
+            let cnt = pending[n].len();
+            if cnt == 0 {
+                continue;
+            }
+            report.undetected_block_hours += cnt as f64 * dt;
+            let peers_down = down_in[cluster_of[n]] - usize::from(down.is_down(n));
+            if peers_down > 0 {
+                report.at_risk_block_hours += cnt as f64 * dt;
+            }
+        }
+    }
+
+    report.undetected_at_horizon = pending.iter().map(|p| p.len()).sum();
+    report.mean_dwell_hours =
+        if report.detected > 0 { dwell_sum / report.detected as f64 } else { 0.0 };
+    report
 }
 
 #[cfg(test)]
@@ -465,6 +794,7 @@ mod tests {
             node_mttr_hours: 10.0,
             cluster_mttf_hours: 0.0,
             cluster_mttr_hours: 0.0,
+            sector_mtte_hours: 0.0,
             horizon_hours: 10_000.0,
         };
         let t = FaultTrace::generate(&topo(), &cfg, 1);
@@ -483,6 +813,7 @@ mod tests {
             node_mttr_hours: 0.0,
             cluster_mttf_hours: 50.0,
             cluster_mttr_hours: 5.0,
+            sector_mtte_hours: 0.0,
             horizon_hours: 1_000.0,
         };
         let t = FaultTrace::generate(&topo(), &cfg, 9);
@@ -531,6 +862,7 @@ mod tests {
             node_mttr_hours: 0.0,
             cluster_mttf_hours: 100.0,
             cluster_mttr_hours: 10.0,
+            sector_mtte_hours: 0.0,
             horizon_hours: 1_000.0,
         };
         let topo = Topology::new(2, 3);
@@ -553,6 +885,7 @@ mod tests {
             node_mttr_hours: 5.0,
             cluster_mttf_hours: 0.0,
             cluster_mttr_hours: 0.0,
+            sector_mtte_hours: 0.0,
             horizon_hours: 2_000.0,
         };
         let mut topo = Topology::new(2, 3);
@@ -588,5 +921,185 @@ mod tests {
         let a = digest_mix(digest_mix(DIGEST_SEED, 1), 2);
         let b = digest_mix(digest_mix(DIGEST_SEED, 2), 1);
         assert_ne!(a, b);
+    }
+
+    fn latent_only(mtte: f64, horizon: f64) -> FaultConfig {
+        FaultConfig {
+            node_mttf_hours: 0.0,
+            node_mttr_hours: 0.0,
+            cluster_mttf_hours: 0.0,
+            cluster_mttr_hours: 0.0,
+            sector_mtte_hours: mtte,
+            horizon_hours: horizon,
+        }
+    }
+
+    #[test]
+    fn latent_stream_is_seeded_and_additive() {
+        // enabling latent errors must not perturb the fail/repair schedule
+        let base = FaultConfig::accelerated();
+        let with = FaultConfig { sector_mtte_hours: 100.0, ..base };
+        let a = FaultTrace::generate(&topo(), &base, 42);
+        let b = FaultTrace::generate(&topo(), &with, 42);
+        let b_sans_latent: Vec<FaultEvent> = b
+            .events
+            .iter()
+            .copied()
+            .filter(|e| !matches!(e.kind, FaultKind::LatentError(_)))
+            .collect();
+        assert_eq!(a.events, b_sans_latent);
+        assert!(b.events.iter().any(|e| matches!(e.kind, FaultKind::LatentError(_))));
+        // and the count tracks the rate: 20 nodes × 2000 h / 100 h ≈ 400
+        let latents =
+            b.events.iter().filter(|e| matches!(e.kind, FaultKind::LatentError(_))).count() as f64;
+        let expect = 20.0 * 2_000.0 / 100.0;
+        assert!((latents - expect).abs() / expect < 0.15, "{latents} vs {expect}");
+    }
+
+    #[test]
+    fn latent_events_roundtrip_and_never_flip_state() {
+        let t = FaultTrace::generate(&topo(), &latent_only(50.0, 500.0), 3);
+        assert!(!t.events.is_empty());
+        let parsed = FaultTrace::parse(&t.to_text()).unwrap();
+        assert_eq!(t, parsed);
+        let mut s = DownState::new(&topo());
+        for e in &t.events {
+            assert_eq!(s.apply(e.kind), vec![], "latent errors are silent");
+        }
+        assert_eq!(s.down_count(), 0);
+    }
+
+    #[test]
+    fn scrub_detects_everything_with_ample_budget() {
+        let topo = topo();
+        let trace = FaultTrace::generate(&topo, &latent_only(40.0, 1_000.0), 11);
+        let mut cfg = ScrubConfig::accelerated(20);
+        cfg.rate_bytes_per_hour = 1e12; // budget never binds
+        cfg.burst_bytes = 1e12;
+        let r = replay_scrub(&topo, &trace, &cfg);
+        assert!(r.injected > 100, "need a busy trace, got {}", r.injected);
+        assert_eq!(r.detected + r.undetected_at_horizon, r.injected);
+        assert_eq!(r.cleared_by_rebuild, 0);
+        // only errors born after the last pass can be outstanding
+        assert!(r.undetected_at_horizon < r.injected / 10);
+        // unthrottled passes finish the tick they start
+        for p in &r.passes {
+            assert_eq!(p.started_hours, p.finished_hours);
+            assert_eq!(p.bytes, 20 * cfg.node_bytes);
+        }
+        // dwell ≈ interval/2 (uniform arrival within the scrub period)
+        let expect = cfg.interval_hours / 2.0;
+        assert!(
+            (r.mean_dwell_hours - expect).abs() / expect < 0.25,
+            "dwell {} vs {expect}",
+            r.mean_dwell_hours
+        );
+    }
+
+    #[test]
+    fn scrub_replay_is_deterministic() {
+        let topo = topo();
+        let cfg = FaultConfig { sector_mtte_hours: 60.0, ..FaultConfig::accelerated() };
+        let trace = FaultTrace::generate(&topo, &cfg, 9);
+        let scfg = ScrubConfig::accelerated(20);
+        let a = replay_scrub(&topo, &trace, &scfg);
+        let b = replay_scrub(&topo, &trace, &scfg);
+        assert_eq!(a.digest(), b.digest());
+        let c = replay_scrub(&topo, &FaultTrace::generate(&topo, &cfg, 10), &scfg);
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn scrub_never_reads_past_its_grants_and_passes_sum() {
+        let topo = topo();
+        let cfg = FaultConfig { sector_mtte_hours: 30.0, ..FaultConfig::accelerated() };
+        let trace = FaultTrace::generate(&topo, &cfg, 5);
+        // starved budget: a pass takes many ticks, so grants bind
+        let scfg = ScrubConfig {
+            rate_bytes_per_hour: 2.0 * (1 << 20) as f64,
+            burst_bytes: (1 << 20) as f64,
+            ..ScrubConfig::accelerated(20)
+        };
+        let r = replay_scrub(&topo, &trace, &scfg);
+        assert!(r.scrubbed_bytes <= r.granted_bytes, "{r:?}");
+        let from_trace: u64 = r.passes.iter().map(|p| p.bytes).sum();
+        assert_eq!(from_trace, r.scrubbed_bytes, "pass audit trail must match the meter");
+        assert!(r.detected > 0);
+    }
+
+    #[test]
+    fn node_replacement_clears_latent_errors() {
+        // node 0 accrues errors, fails, and is replaced before any scrub
+        // pass: the rebuild wipes them, the scrubber never sees them
+        let topo = Topology::new(1, 2);
+        let trace = FaultTrace {
+            events: vec![
+                FaultEvent { at_hours: 1.0, kind: FaultKind::LatentError(0) },
+                FaultEvent { at_hours: 2.0, kind: FaultKind::LatentError(0) },
+                FaultEvent { at_hours: 3.0, kind: FaultKind::NodeFail(0) },
+                FaultEvent { at_hours: 5.0, kind: FaultKind::NodeRepair(0) },
+            ],
+            horizon_hours: 40.0,
+            nodes: 2,
+            clusters: 1,
+        };
+        let mut scfg = ScrubConfig::accelerated(2);
+        scfg.rate_bytes_per_hour = 1e12;
+        scfg.burst_bytes = 1e12;
+        let r = replay_scrub(&topo, &trace, &scfg);
+        assert_eq!(r.cleared_by_rebuild, 2);
+        assert_eq!(r.detected, 0);
+        assert_eq!(r.undetected_at_horizon, 0);
+    }
+
+    #[test]
+    fn scrub_prioritizes_clusters_with_a_down_member() {
+        // cluster 1 (nodes 3..6) has a down node when the first pass
+        // starts: its healthy members must lead the scan order
+        let topo = Topology::new(3, 3);
+        let trace = FaultTrace {
+            events: vec![
+                FaultEvent { at_hours: 1.0, kind: FaultKind::NodeFail(4) },
+                // repaired after the pass starts: the scan defers node 4
+                // and completes once the replacement lands
+                FaultEvent { at_hours: 26.0, kind: FaultKind::NodeRepair(4) },
+            ],
+            horizon_hours: 40.0,
+            nodes: 9,
+            clusters: 3,
+        };
+        let scfg = ScrubConfig::accelerated(9);
+        let r = replay_scrub(&topo, &trace, &scfg);
+        assert!(!r.passes.is_empty());
+        let order = &r.passes[0].order;
+        // at-risk peers of the down node 4 come first (then node 4 itself
+        // sorts by id among the zero-risk rest — it has no *other* down
+        // peer in its cluster)
+        assert_eq!(&order[..2], &[3, 5], "at-risk peers must lead: {order:?}");
+    }
+
+    #[test]
+    fn at_risk_meter_requires_both_corruption_and_a_down_peer() {
+        // latent error on node 1; its co-cluster node 0 is down for 10 h
+        let topo = Topology::new(1, 3);
+        let trace = FaultTrace {
+            events: vec![
+                FaultEvent { at_hours: 1.0, kind: FaultKind::LatentError(1) },
+                FaultEvent { at_hours: 2.0, kind: FaultKind::NodeFail(0) },
+                FaultEvent { at_hours: 12.0, kind: FaultKind::NodeRepair(0) },
+            ],
+            horizon_hours: 20.0,
+            nodes: 3,
+            clusters: 1,
+        };
+        // no pass ever fires inside the horizon: pure exposure metering
+        let scfg = ScrubConfig { interval_hours: 1_000.0, ..ScrubConfig::accelerated(3) };
+        let r = replay_scrub(&topo, &trace, &scfg);
+        assert_eq!(r.detected, 0);
+        assert_eq!(r.undetected_at_horizon, 1);
+        // undetected for 19 h, at risk only while node 0 was down (~10 h)
+        assert!((r.undetected_block_hours - 19.0).abs() < 0.6, "{}", r.undetected_block_hours);
+        assert!((r.at_risk_block_hours - 10.0).abs() < 0.6, "{}", r.at_risk_block_hours);
+        assert!(r.at_risk_block_hours < r.undetected_block_hours);
     }
 }

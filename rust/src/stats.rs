@@ -1,0 +1,83 @@
+//! Shared sample statistics — the one percentile implementation in the
+//! crate.
+//!
+//! History: the client driver, the serving-plane load generator and the
+//! experiment harness each grew a private percentile helper with a
+//! different convention (`p` in 0..=100 vs `q` in 0..=1) and a different
+//! empty-input behavior (panic vs a silent `0.0` — the latter let a dead
+//! server pass a p99 gate vacuously). This module fixes one convention —
+//! nearest-rank, `q` in `0.0..=1.0` — and makes the empty case typed:
+//! callers must decide what an absent percentile means for them.
+
+/// Nearest-rank percentile of a sample, `q` in `0.0..=1.0` (`q = 0.0` is
+/// the minimum, `q = 1.0` the maximum). Sorts a copy of the input.
+///
+/// Returns `None` on an empty sample. Panics on NaN samples or an
+/// out-of-range `q` — both are caller bugs, never data.
+pub fn percentile(samples: &[f64], q: f64) -> Option<f64> {
+    let mut s = samples.to_vec();
+    assert!(s.iter().all(|v| !v.is_nan()), "percentile over NaN samples");
+    s.sort_by(|a, b| a.partial_cmp(b).expect("NaN excluded above"));
+    percentile_sorted(&s, q)
+}
+
+/// [`percentile`] over an already ascending-sorted, NaN-free slice (the
+/// hot-path variant: no copy, no re-sort).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> Option<f64> {
+    assert!((0.0..=1.0).contains(&q), "percentile rank {q} outside 0.0..=1.0");
+    if sorted.is_empty() {
+        return None;
+    }
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input must be sorted");
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    Some(sorted[idx.min(sorted.len() - 1)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_none_not_zero() {
+        assert_eq!(percentile(&[], 0.99), None);
+        assert_eq!(percentile_sorted(&[], 0.5), None);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&[7.5], q), Some(7.5));
+        }
+    }
+
+    #[test]
+    fn boundaries_are_min_and_max() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&s, 0.0), Some(1.0));
+        assert_eq!(percentile(&s, 1.0), Some(100.0));
+        // nearest-rank interior points on 100 samples
+        assert_eq!(percentile(&s, 0.50), Some(51.0));
+        assert_eq!(percentile(&s, 0.99), Some(99.0));
+    }
+
+    #[test]
+    fn unsorted_input_is_sorted_internally() {
+        assert_eq!(percentile(&[9.0, 1.0, 5.0], 0.0), Some(1.0));
+        assert_eq!(percentile(&[9.0, 1.0, 5.0], 1.0), Some(9.0));
+        assert_eq!(percentile(&[9.0, 1.0, 5.0], 0.5), Some(5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn nan_samples_are_rejected() {
+        let _ = percentile(&[1.0, f64::NAN], 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 0.0..=1.0")]
+    fn percent_style_rank_is_rejected() {
+        // the old client-side convention (p in 0..=100) must fail loudly,
+        // not silently read the max
+        let _ = percentile(&[1.0, 2.0], 99.0);
+    }
+}

@@ -7,7 +7,7 @@
 //!   warm-up never changes a single measured value (warm ≡ cold);
 //! * differential reliability — occupancy and MTTDL estimates from short
 //!   injected traces agree with the `analysis::markov` closed forms
-//!   within stated tolerances, for all four code families;
+//!   within stated tolerances, for all five code families;
 //! * correlated cluster bursts run end to end (batched recovery, data-loss
 //!   accounting) without corrupting any served byte (every repair verifies
 //!   against ground truth internally).
@@ -29,6 +29,7 @@ fn short_faults() -> FaultSimConfig {
             node_mttr_hours: 10.0,
             cluster_mttf_hours: 1_500.0,
             cluster_mttr_hours: 5.0,
+            sector_mtte_hours: 0.0,
             horizon_hours: 600.0,
         },
         tenants: 2,
@@ -58,7 +59,7 @@ fn exp7_digest_reproduces_across_runs() {
     let fc = short_faults();
     let a = exp7_faults(&cfg, &fc).unwrap();
     let b = exp7_faults(&cfg, &fc).unwrap();
-    assert_eq!(a.len(), 4);
+    assert_eq!(a.len(), 5);
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.family, y.family);
         assert_eq!(x.digest, y.digest, "{:?}: digest must reproduce", x.family);
@@ -135,6 +136,7 @@ fn learned_warmup_is_output_invisible_and_prefetches() {
             node_mttr_hours: 10.0,
             cluster_mttf_hours: 250.0,
             cluster_mttr_hours: 5.0,
+            sector_mtte_hours: 0.0,
             horizon_hours: 250.0,
         },
         tenants: 1,
@@ -215,6 +217,7 @@ fn simulated_reliability_matches_markov_closed_form() {
             node_mttr_hours: mttr,
             cluster_mttf_hours: 0.0,
             cluster_mttr_hours: 0.0,
+            sector_mtte_hours: 0.0,
             horizon_hours: 30_000.0,
         },
         tenants: 1,
@@ -223,7 +226,7 @@ fn simulated_reliability_matches_markov_closed_form() {
         measure_cap: 0,
     };
     let rows = exp7_faults(&cfg, &fc).unwrap();
-    assert_eq!(rows.len(), 4);
+    assert_eq!(rows.len(), 5);
     for r in &rows {
         // degraded-time fraction of stripe 0 vs the birth–death steady
         // state: stated tolerance 25% relative (the estimator sees ~1500
@@ -267,6 +270,7 @@ fn correlated_cluster_bursts_run_batched_and_account_loss() {
             node_mttr_hours: 20.0,
             cluster_mttf_hours: 300.0,
             cluster_mttr_hours: 10.0,
+            sector_mtte_hours: 0.0,
             horizon_hours: 1_200.0,
         },
         tenants: 3,

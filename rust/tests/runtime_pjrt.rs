@@ -228,7 +228,7 @@ fn experiments_run_on_pjrt_backend() {
         .with_pjrt()
         .unwrap();
     let rows = exp1_normal_read(&cfg).unwrap();
-    assert_eq!(rows.len(), 4);
+    assert_eq!(rows.len(), 5);
     assert!(rows.iter().all(|r| r.value > 0.0));
     let rows = exp2_degraded_read(&cfg).unwrap();
     assert!(rows.iter().all(|r| r.value > 0.0));

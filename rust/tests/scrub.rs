@@ -1,0 +1,167 @@
+//! Latent-error / scrubbing conformance (experiment 11):
+//!
+//! * sweep determinism — same seed ⇒ bit-identical rows and digest, a
+//!   different seed moves the digest (the exp7 replayability contract);
+//! * differential reliability — the simulated scrub replay agrees with
+//!   the `analysis::markov` latent-error chain within stated tolerances:
+//!   mean injection→detection dwell vs the `T/2` renewal closed form,
+//!   and the Little's-law undetected-errors-per-node meter vs `λ̂·T/2`
+//!   with `λ̂` estimated from the trace;
+//! * budget accounting — no grid cell ever scrubs more bytes than the
+//!   shared token bucket granted, detection never exceeds injection, and
+//!   the grid covers every paper family (CLRC included) at every
+//!   (interval × sector-rate) point.
+
+use unilrc::codes::spec::CodeFamily;
+use unilrc::experiments::{exp11_scrub, ExpConfig, ScrubSimConfig};
+use unilrc::sim::faults::FaultConfig;
+
+/// Exp11 never touches block data, so the base config only needs the
+/// scheme and seed; `stripes` feeds the blocks-per-node conversion.
+fn tiny_exp() -> ExpConfig {
+    ExpConfig { block_size: 4 * 1024, stripes: 2, seed: 7, ..Default::default() }
+}
+
+/// Small grid on a short horizon — determinism and accounting, fast.
+fn short_scrub() -> ScrubSimConfig {
+    ScrubSimConfig {
+        intervals_hours: vec![12.0, 48.0],
+        sector_mtte_hours: vec![50.0, 200.0],
+        fault: FaultConfig { horizon_hours: 500.0, ..FaultConfig::accelerated() },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn exp11_digest_reproduces_across_runs() {
+    let cfg = tiny_exp();
+    let sc = short_scrub();
+    let a = exp11_scrub(&cfg, &sc).unwrap();
+    let b = exp11_scrub(&cfg, &sc).unwrap();
+    assert_eq!(a.digest, b.digest, "same seed ⇒ identical sweep digest");
+    assert_eq!(a.rows.len(), b.rows.len());
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(x.family, y.family);
+        assert_eq!(x.injected, y.injected);
+        assert_eq!(x.detected, y.detected);
+        assert_eq!(x.scrubbed_bytes, y.scrubbed_bytes);
+        assert_eq!(x.granted_bytes, y.granted_bytes);
+        assert_eq!(x.sim_dwell_hours.to_bits(), y.sim_dwell_hours.to_bits());
+        assert_eq!(
+            x.sim_undetected_per_node.to_bits(),
+            y.sim_undetected_per_node.to_bits()
+        );
+    }
+    let mut other = tiny_exp();
+    other.seed = 8;
+    let c = exp11_scrub(&other, &sc).unwrap();
+    assert_ne!(a.digest, c.digest, "a different seed must move the digest");
+}
+
+#[test]
+fn exp11_grid_covers_every_family_and_cell() {
+    let cfg = tiny_exp();
+    let sc = short_scrub();
+    let res = exp11_scrub(&cfg, &sc).unwrap();
+    let fams = CodeFamily::paper_baselines();
+    assert_eq!(
+        res.rows.len(),
+        fams.len() * sc.intervals_hours.len() * sc.sector_mtte_hours.len(),
+        "one row per family × interval × sector rate"
+    );
+    for fam in fams {
+        for &t in &sc.intervals_hours {
+            for &m in &sc.sector_mtte_hours {
+                assert!(
+                    res.rows.iter().any(|r| r.family == fam
+                        && r.interval_hours == t
+                        && r.sector_mtte_hours == m),
+                    "missing grid cell {fam:?} × {t} h × {m} h"
+                );
+            }
+        }
+    }
+    assert!(
+        res.rows.iter().any(|r| r.family == CodeFamily::Clrc),
+        "the cascaded-parity family must compete in the sweep"
+    );
+}
+
+#[test]
+fn exp11_accounting_invariants_hold_everywhere() {
+    let cfg = tiny_exp();
+    let res = exp11_scrub(&cfg, &short_scrub()).unwrap();
+    for r in &res.rows {
+        assert!(
+            r.scrubbed_bytes <= r.granted_bytes,
+            "{:?}: scrubbed {} bytes but the bucket only granted {}",
+            r.family,
+            r.scrubbed_bytes,
+            r.granted_bytes
+        );
+        assert!(r.detected <= r.injected, "{:?}: detected > injected", r.family);
+        assert!(r.injected > 0, "{:?}: the latent stream must fire on this grid", r.family);
+        assert!(r.at_risk_block_hours >= 0.0);
+        assert!(
+            (0.0..=1.0).contains(&r.loss_fraction_markov),
+            "{:?}: loss fraction {} outside [0, 1]",
+            r.family,
+            r.loss_fraction_markov
+        );
+    }
+    // dirtier disks (smaller MTTE) strictly raise injections per family
+    for fam in CodeFamily::paper_baselines() {
+        let inj = |mtte: f64| -> usize {
+            res.rows
+                .iter()
+                .filter(|r| r.family == fam && r.sector_mtte_hours == mtte)
+                .map(|r| r.injected)
+                .sum()
+        };
+        assert!(inj(50.0) > inj(200.0), "{fam:?}: 4× the error rate must inject more");
+    }
+}
+
+#[test]
+fn exp11_sim_matches_markov_within_bounds() {
+    // Single cell with an ample budget (passes complete within a tick of
+    // starting) and a long horizon so the dwell statistics converge: the
+    // renewal closed form says mean dwell is exactly T/2 regardless of
+    // scan offset, and Little's law pins the standing undetected count at
+    // λT/2 per node. 0.25 relative tolerance, exp7-style (tick
+    // quantization, down-node deferrals, and horizon truncation are the
+    // real, small, biases).
+    let cfg = tiny_exp();
+    let sc = ScrubSimConfig {
+        intervals_hours: vec![24.0],
+        sector_mtte_hours: vec![50.0],
+        fault: FaultConfig { horizon_hours: 2_000.0, ..FaultConfig::accelerated() },
+        rate_bytes_per_hour: 1e12,
+        burst_bytes: 1e12,
+        ..Default::default()
+    };
+    let res = exp11_scrub(&cfg, &sc).unwrap();
+    assert_eq!(res.rows.len(), CodeFamily::paper_baselines().len());
+    for r in &res.rows {
+        assert!(r.detected > 100, "{:?}: need statistics, got {}", r.family, r.detected);
+        let dwell_rel = (r.sim_dwell_hours - r.markov_dwell_hours).abs() / r.markov_dwell_hours;
+        assert!(
+            dwell_rel < 0.25,
+            "{:?}: dwell sim {:.3} h vs markov {:.3} h (rel {:.3})",
+            r.family,
+            r.sim_dwell_hours,
+            r.markov_dwell_hours,
+            dwell_rel
+        );
+        let undet_rel = (r.sim_undetected_per_node - r.markov_undetected_per_node).abs()
+            / r.markov_undetected_per_node;
+        assert!(
+            undet_rel < 0.25,
+            "{:?}: undetected/node sim {:.4} vs markov {:.4} (rel {:.3})",
+            r.family,
+            r.sim_undetected_per_node,
+            r.markov_undetected_per_node,
+            undet_rel
+        );
+    }
+}

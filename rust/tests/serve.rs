@@ -250,6 +250,30 @@ fn closed_loop_loadgen_survives_a_topology_event() {
     });
 }
 
+#[test]
+fn loadgen_against_dead_server_fails_loudly() {
+    // Reserve an ephemeral port, then drop the listener so nothing serves
+    // it. The old behavior reported p99 = 0.0 ms for the zero completed
+    // operations, letting `--assert-p99-ms` CI gates pass against a dead
+    // server; the report must now be an error instead.
+    with_deadline(60, || {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        let err = run_loadgen(&LoadgenConfig {
+            data_addr: addr.clone(),
+            http_addr: addr,
+            sessions: 2,
+            duration: Duration::from_millis(200),
+            pipeline: 4,
+            seed: 1,
+            topology_event_at: None,
+        })
+        .expect_err("zero completed operations must not produce a report");
+        assert!(err.contains("zero successful operations"), "unexpected error: {err}");
+    });
+}
+
 // ---------------------------------------------------------------- epoch
 // Durability of the metadata epoch across crash-recovery (Dss level).
 

@@ -9,9 +9,12 @@ A throughput case (`mib_per_s`) regresses when its current MiB/s drops
 more than the threshold below the baseline. A direct-value case
 (`value`/`unit` — latency percentiles, retry counters from the migration
 interference sweep) regresses when its value *rises* more than the
-threshold: those rows are lower-is-better. Cases present in only one
-file are reported but never fatal (benches evolve). Exit code 1 iff at
-least one regression exceeds the threshold.
+threshold: those rows are lower-is-better. A lower-is-better case whose
+baseline is zero has no ratio, so it gates on the *absolute* rise
+instead (`--zero-baseline-slack`, default 1.0) — a retries counter
+going 0 -> 40 is a regression even though 0 admits no percentage.
+Cases present in only one file are reported but never fatal (benches
+evolve). Exit code 1 iff at least one regression exceeds a threshold.
 """
 
 import argparse
@@ -32,7 +35,7 @@ def metric(row):
     return row["value"], row.get("unit", ""), -1
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
     ap.add_argument("current")
@@ -42,7 +45,14 @@ def main():
         default=0.20,
         help="fractional throughput drop that fails the check (default 0.20)",
     )
-    args = ap.parse_args()
+    ap.add_argument(
+        "--zero-baseline-slack",
+        type=float,
+        default=1.0,
+        help="absolute rise that fails a lower-is-better case whose "
+        "baseline is zero (default 1.0)",
+    )
+    args = ap.parse_args(argv)
 
     # A missing or empty baseline is the first run of a new bench (or a
     # wiped cache) — say so explicitly and pass, rather than failing on
@@ -69,16 +79,22 @@ def main():
             print(f"  NEW     {name}: {c:.1f} {unit} (was {b:.1f} {base_unit})")
             continue
         if b <= 0:
-            # zero baselines (e.g. a retries counter at 0.0) have no ratio;
-            # report any movement but don't gate on an undefined delta
-            if c > 0:
+            # a zero baseline (e.g. a retries counter at 0.0) has no ratio.
+            # A higher-is-better row can only have improved; a
+            # lower-is-better row rising from a clean baseline is exactly
+            # the regression the ratio test is blind to, so it gates on
+            # the absolute increase instead.
+            if sign < 0 and c - b > args.zero_baseline_slack:
+                failures.append((name, b, c, f"+{c - b:.1f} abs", unit))
+                print(f"  REGRESSION {name}: {b:.1f} -> {c:.1f} {unit} (zero baseline)")
+            elif c > 0:
                 print(f"  moved   {name}: {b:.1f} -> {c:.1f} {unit} (zero baseline)")
             continue
         delta = (c - b) / b
         status = "ok"
         if sign * delta < -args.max_regression:
             status = "REGRESSION"
-            failures.append((name, b, c, delta, unit))
+            failures.append((name, b, c, f"{delta:+.1%}", unit))
         print(f"  {status:<10} {name}: {b:.1f} -> {c:.1f} {unit} ({delta:+.1%})")
     for name in sorted(set(base) - set(curr)):
         b, unit, _ = metric(base[name])
@@ -86,12 +102,13 @@ def main():
 
     if failures:
         print(
-            f"\n{len(failures)} case(s) regressed more than "
-            f"{args.max_regression:.0%} vs baseline:",
+            f"\n{len(failures)} case(s) regressed beyond threshold "
+            f"({args.max_regression:.0%} relative, "
+            f"{args.zero_baseline_slack:g} absolute on zero baselines):",
             file=sys.stderr,
         )
         for name, b, c, delta, unit in failures:
-            print(f"  {name}: {b:.1f} -> {c:.1f} {unit} ({delta:+.1%})", file=sys.stderr)
+            print(f"  {name}: {b:.1f} -> {c:.1f} {unit} ({delta})", file=sys.stderr)
         return 1
     print("\nno regressions beyond threshold")
     return 0

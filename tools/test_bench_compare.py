@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Unit tests for bench_compare.py gating semantics.
+
+Run directly (`python3 tools/test_bench_compare.py`) or via
+`python3 -m unittest discover tools` — no third-party deps.
+
+The load-bearing case is the zero-baseline rule: a lower-is-better row
+(retry counter, latency) whose baseline is 0.0 used to be exempt from
+gating because a percentage of zero is undefined, which let a counter
+going 0 -> 40 sail through CI. It now gates on the absolute rise.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from bench_compare import main  # noqa: E402
+
+
+def write_doc(dirname, filename, rows):
+    path = os.path.join(dirname, filename)
+    with open(path, "w") as f:
+        json.dump({"bench": "test", "results": rows}, f)
+    return path
+
+
+def thr(name, mib):
+    return {"name": name, "mib_per_s": mib}
+
+
+def val(name, v, unit="count"):
+    return {"name": name, "value": v, "unit": unit}
+
+
+class BenchCompareGate(unittest.TestCase):
+    def run_gate(self, base_rows, curr_rows, *extra):
+        with tempfile.TemporaryDirectory() as d:
+            base = write_doc(d, "base.json", base_rows)
+            curr = write_doc(d, "curr.json", curr_rows)
+            return main([base, curr, *extra])
+
+    def test_clean_run_passes(self):
+        rc = self.run_gate(
+            [thr("gf/mul", 1000.0), val("mig/retries", 2.0)],
+            [thr("gf/mul", 990.0), val("mig/retries", 2.0)],
+        )
+        self.assertEqual(rc, 0)
+
+    def test_throughput_drop_fails(self):
+        rc = self.run_gate([thr("gf/mul", 1000.0)], [thr("gf/mul", 700.0)])
+        self.assertEqual(rc, 1)
+
+    def test_lower_is_better_rise_fails(self):
+        rc = self.run_gate([val("serve/p99", 10.0, "ms")], [val("serve/p99", 15.0, "ms")])
+        self.assertEqual(rc, 1)
+
+    def test_zero_baseline_rise_now_gates(self):
+        # the original bug: 0.0 baseline -> any current value passed
+        rc = self.run_gate([val("mig/retries", 0.0)], [val("mig/retries", 40.0)])
+        self.assertEqual(rc, 1)
+
+    def test_zero_baseline_small_jitter_passes(self):
+        # rises within the absolute slack stay informational
+        rc = self.run_gate([val("mig/retries", 0.0)], [val("mig/retries", 1.0)])
+        self.assertEqual(rc, 0)
+
+    def test_zero_baseline_slack_is_tunable(self):
+        rows = ([val("mig/retries", 0.0)], [val("mig/retries", 3.0)])
+        self.assertEqual(self.run_gate(*rows, "--zero-baseline-slack", "5"), 0)
+        self.assertEqual(self.run_gate(*rows, "--zero-baseline-slack", "2"), 1)
+
+    def test_zero_baseline_throughput_never_gates(self):
+        # higher-is-better from zero can only have improved
+        rc = self.run_gate([thr("gf/mul", 0.0)], [thr("gf/mul", 500.0)])
+        self.assertEqual(rc, 0)
+
+    def test_new_and_gone_rows_are_not_fatal(self):
+        rc = self.run_gate([thr("old/case", 100.0)], [thr("new/case", 100.0)])
+        self.assertEqual(rc, 0)
+
+    def test_missing_baseline_skips_gate(self):
+        with tempfile.TemporaryDirectory() as d:
+            curr = write_doc(d, "curr.json", [thr("gf/mul", 1.0)])
+            rc = main([os.path.join(d, "absent.json"), curr])
+        self.assertEqual(rc, 0)
+
+
+if __name__ == "__main__":
+    unittest.main()
