@@ -105,6 +105,58 @@ fn main() {
         report.add(&s, code.k() * MB);
     }
 
+    // --------------------------------------- streaming stores past the LLC
+    // When the output span exceeds the LLC, regular stores thrash the cache
+    // and pay a read-for-ownership per line; non-temporal stores bypass
+    // both. The pair of rows (same shape, nt off vs on) is the acceptance
+    // metric for the streaming path.
+    section("Streaming stores — output span beyond the LLC (nt off vs on)");
+    let llc = unilrc::gf::topo::llc_bytes();
+    let nt_rows = 4usize;
+    let nt_block = (llc / 2).max(8 * MB);
+    let span_mb = nt_rows * nt_block / MB;
+    println!("LLC {:.1} MiB, output span {span_mb} MiB", llc as f64 / MB as f64);
+    let nt_srcs: Vec<Vec<u8>> = (0..6).map(|_| p.bytes(nt_block)).collect();
+    let nt_refs: Vec<&[u8]> = nt_srcs.iter().map(|v| v.as_slice()).collect();
+    let nt_coeff: Vec<Vec<u8>> = (0..nt_rows).map(|_| p.bytes(6)).collect();
+    let nt_crefs: Vec<&[u8]> = nt_coeff.iter().map(|v| v.as_slice()).collect();
+    let mut nt_outs = vec![vec![0u8; nt_block]; nt_rows];
+    let nt_work = 6 * nt_block;
+    let mut nt_mibs = [0.0f64; 2];
+    for (i, (label, e)) in [
+        ("nt=off", GfEngine::new(best).with_threads(threads).with_nt(usize::MAX)),
+        ("nt=on", GfEngine::new(best).with_threads(threads).with_nt(0)),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let name = format!("matmul 4x6 {span_mb}MiB-out [{label}]");
+        let s = b.bench_throughput(&name, nt_work, || {
+            e.matmul_blocks(black_box(&nt_crefs), black_box(&nt_refs), black_box(&mut nt_outs));
+        });
+        report.add(&s, nt_work);
+        nt_mibs[i] = s.mib_per_s(nt_work);
+    }
+    println!("  -> nt-on: {:.2}x over nt-off", nt_mibs[1] / nt_mibs[0]);
+    let mut nt_out = vec![0u8; nt_rows * nt_block];
+    for (label, e) in [
+        ("nt=off", GfEngine::new(best).with_threads(threads).with_nt(usize::MAX)),
+        ("nt=on", GfEngine::new(best).with_threads(threads).with_nt(0)),
+    ] {
+        let name = format!("fold r=6 {span_mb}MiB-out [{label}]");
+        let s = b.bench_throughput(&name, 6 * nt_rows * nt_block, || {
+            for out in nt_out.chunks_mut(nt_block) {
+                e.fold_blocks(black_box(out), black_box(&nt_refs));
+            }
+        });
+        report.add(&s, 6 * nt_rows * nt_block);
+    }
+    // free the >LLC fixtures before the remaining sections run
+    drop(nt_out);
+    drop(nt_outs);
+    drop(nt_refs);
+    drop(nt_srcs);
+
     // ---------------------------------------- default-engine slice kernels
     section("GF slice kernels on the default engine (1 MiB blocks)");
     let srcs: Vec<Vec<u8>> = (0..6).map(|_| p.bytes(MB)).collect();

@@ -149,6 +149,96 @@ fn main() {
         report.add(&s, bytes);
     }
 
+    // Buffer-pool contention: 8 threads hammering take/recycle pairs on
+    // the sharded size-classed pool vs the single-Mutex LIFO it replaced
+    // (reproduced inline). Reported as ns per take+recycle pair — lower is
+    // better; this is the acceptance row for the sharded pool.
+    section("Buffer pool — contended take/recycle, 8 threads × 64 KiB");
+    {
+        use unilrc::gf::pool::BufferPool;
+        const POOL_THREADS: usize = 8;
+        const OPS: usize = 2000;
+        let len = 64 * 1024;
+        let sharded = Arc::new(BufferPool::new(64 << 20));
+        let s = b.bench_latency("pool 8t take/recycle (sharded classes)", || {
+            let mut hs = Vec::new();
+            for _ in 0..POOL_THREADS {
+                let pl = Arc::clone(&sharded);
+                hs.push(std::thread::spawn(move || {
+                    for _ in 0..OPS {
+                        let buf = pl.take_for_overwrite(len);
+                        pl.recycle(black_box(buf));
+                    }
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+        });
+        let sharded_ns = s.median.as_secs_f64() * 1e9 / (POOL_THREADS * OPS) as f64;
+        report.add_value_directed("pool/take-recycle-8t/sharded", sharded_ns, "ns", "lower");
+        let single: Arc<std::sync::Mutex<Vec<Vec<u8>>>> = Arc::default();
+        let s = b.bench_latency("pool 8t take/recycle (single mutex)", || {
+            let mut hs = Vec::new();
+            for _ in 0..POOL_THREADS {
+                let pl = Arc::clone(&single);
+                hs.push(std::thread::spawn(move || {
+                    for _ in 0..OPS {
+                        let buf =
+                            pl.lock().unwrap().pop().unwrap_or_else(|| vec![0u8; len]);
+                        pl.lock().unwrap().push(black_box(buf));
+                    }
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+        });
+        let single_ns = s.median.as_secs_f64() * 1e9 / (POOL_THREADS * OPS) as f64;
+        report.add_value_directed("pool/take-recycle-8t/single-mutex", single_ns, "ns", "lower");
+        println!(
+            "  -> sharded {sharded_ns:.0} ns/op vs single-mutex {single_ns:.0} ns/op \
+             ({:.2}x)",
+            single_ns / sharded_ns
+        );
+    }
+
+    // Cross-op task merging: a burst of tiny stripes far above the worker
+    // count. Unmerged, every fold submits its own sub-chunk task; merged,
+    // small ops fuse into chunk-sized tasks so the queue sees ~tasks-per-
+    // worker instead of one per stripe.
+    section(&format!("Cross-op merging — 200-stripe burst of 4 KiB folds, x{threads}"));
+    {
+        const BURST: usize = 200;
+        let small = 4 * 1024;
+        let stripes: Vec<Vec<Vec<u8>>> =
+            (0..BURST).map(|_| (0..SOURCES).map(|_| p.bytes(small)).collect()).collect();
+        let srefs: Vec<Vec<&[u8]>> =
+            stripes.iter().map(|s| s.iter().map(|v| v.as_slice()).collect()).collect();
+        let mut outs: Vec<Vec<u8>> = (0..BURST).map(|_| vec![0u8; small]).collect();
+        let bytes = BURST * SOURCES * small;
+        let mut mibs = [0.0f64; 2];
+        for (i, (label, merge)) in
+            [("merge=off", false), ("merge=on", true)].into_iter().enumerate()
+        {
+            let e = GfEngine::new(best)
+                .with_threads(threads)
+                .with_lane(LANE)
+                .with_par_work(0)
+                .with_merge(merge);
+            let s = b.bench_throughput(&format!("fold burst [{label}]"), bytes, || {
+                e.batch(bytes, |bt| {
+                    for (out, srcs) in outs.iter_mut().zip(&srefs) {
+                        bt.fold(black_box(out), black_box(srcs.clone()));
+                    }
+                });
+            });
+            report.add(&s, bytes);
+            mibs[i] = s.mib_per_s(bytes);
+        }
+        println!("  -> merged: {:.2}x over unmerged", mibs[1] / mibs[0]);
+    }
+
     // Decode-plan shape: multi-erasure matmul batched across stripes.
     section("Cached-plan decode — 2 erasures, 16 stripes, 64 KiB blocks");
     let code = Scheme::S42.build(CodeFamily::UniLrc);

@@ -185,6 +185,20 @@ impl JsonReport {
         ));
     }
 
+    /// [`Self::add_value`] with an explicit gate direction (`"higher"` or
+    /// `"lower"`) for tools/bench_compare.py — bare `add_value` rows are
+    /// assumed lower-is-better there, so rows whose unit does not make the
+    /// direction obvious (ns/op, ratios) should declare it.
+    pub fn add_value_directed(&mut self, name: &str, value: f64, unit: &str, better: &str) {
+        self.rows.push(format!(
+            r#"{{"name":{},"value":{:.6},"unit":{},"better":{}}}"#,
+            json_str(name),
+            value,
+            json_str(unit),
+            json_str(better)
+        ));
+    }
+
     /// Write to `$UNILRC_BENCH_JSON` if set; returns the path written.
     pub fn write_if_requested(&self) -> Option<String> {
         let path = std::env::var("UNILRC_BENCH_JSON").ok()?;
@@ -265,6 +279,16 @@ mod tests {
         );
         // no env var → no write, no panic
         assert!(r.write_if_requested().is_none() || std::env::var("UNILRC_BENCH_JSON").is_ok());
+    }
+
+    #[test]
+    fn value_rows_carry_direction() {
+        let mut r = JsonReport::new("unit");
+        r.add_value("a", 1.0, "ms");
+        r.add_value_directed("b", 2.0, "ns", "lower");
+        assert!(r.rows[0].contains(r#""unit":"ms""#));
+        assert!(!r.rows[0].contains("better"));
+        assert!(r.rows[1].contains(r#""better":"lower""#));
     }
 
     #[test]

@@ -62,6 +62,7 @@ USAGE:
                     [--topology N,N,...] (asymmetric per-cluster node counts)
                     [--gf-kernel auto|scalar|ssse3|avx2|avx512|gfni|neon]
                     [--gf-threads N] [--gf-chunk-kb N]
+                    [--gf-nt-kb N|auto|off] [--gf-pin [on|off]]
                     [--plan-ttl-ms N] [--plan-warmup [trace|learned|off]]
                     [--cache-stats]
   unilrc engine [--check TIER]        show GF engine tiers + pool + plan cache
@@ -117,6 +118,10 @@ The GF engine tier defaults to the best the CPU supports; override with
 Multi-stripe repairs run batched on the engine's persistent worker pool;
 --gf-threads sizes it, --gf-chunk-kb / UNILRC_GF_CHUNK_KB pins the batch
 task granularity (default: adaptive from event size vs. workers).
+Outputs wider than the streaming-store threshold (--gf-nt-kb /
+UNILRC_GF_NT_KB; default auto = the detected LLC, 0 = always, off =
+never) are written with non-temporal stores; --gf-pin / UNILRC_GF_PIN
+pins pool workers to distinct CPUs (package-major; see PERF.md §memory).
 --plan-ttl-ms / UNILRC_PLAN_TTL_MS expires cached decode plans (PERF.md).
 
 Serving plane (PERF.md §serving): `serve` boots the pipelined proxy
@@ -143,6 +148,16 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     m
 }
 
+/// Boolean flag values: a bare `--flag` parses as true (`parse_flags`
+/// maps it to "true"); an explicit operand accepts on/off spellings.
+fn parse_bool_flag(name: &str, v: &str) -> anyhow::Result<bool> {
+    match v {
+        "true" | "1" | "on" | "yes" => Ok(true),
+        "false" | "0" | "off" | "no" => Ok(false),
+        other => anyhow::bail!("bad {name} value {other:?} (want on|off)"),
+    }
+}
+
 fn scheme_of(flags: &HashMap<String, String>) -> anyhow::Result<Scheme> {
     match flags.get("scheme") {
         None => Ok(Scheme::S42),
@@ -157,7 +172,9 @@ fn exp_config(flags: &HashMap<String, String>) -> anyhow::Result<ExpConfig> {
         flags.get("gf-kernel").map(|s| s.as_str()),
         flags.get("gf-threads").map(|t| t.parse()).transpose()?,
         flags.get("gf-chunk-kb").map(|t| t.parse()).transpose()?,
-        "--gf-kernel/--gf-threads/--gf-chunk-kb",
+        flags.get("gf-nt-kb").map(|s| s.as_str()),
+        flags.get("gf-pin").map(|v| parse_bool_flag("--gf-pin", v)).transpose()?,
+        "--gf-kernel/--gf-threads/--gf-chunk-kb/--gf-nt-kb/--gf-pin",
     )?;
     // --config FILE loads a TOML-subset base; explicit flags override it.
     let mut cfg = match flags.get("config") {
@@ -481,11 +498,38 @@ fn cmd_engine(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     for k in Kernel::all() {
         println!("  {:<8} {}", k.name(), if k.available() { "available" } else { "-" });
     }
-    println!("active engine      : {}", dispatch::engine().describe());
-    println!("override via --gf-kernel/--gf-threads/--gf-chunk-kb or UNILRC_GF_* env");
+    let e = dispatch::engine();
+    println!("active engine      : {}", e.describe());
+    println!("memory system      : {}", crate::gf::topo::describe());
+    println!(
+        "nt store threshold : {}",
+        match e.nt_threshold() {
+            0 => "0 (every output streamed)".to_string(),
+            usize::MAX => "off (regular stores only)".to_string(),
+            n => format!("{} KiB (outputs past this stream around the cache)", n / 1024),
+        }
+    );
+    println!("override via --gf-* flags or UNILRC_GF_* env (see `unilrc help`)");
 
+    print_pool_stats();
     print_plan_cache_stats();
     Ok(())
+}
+
+/// Process-wide buffer-pool counters: the 64-byte-aligned size-classed
+/// pool the decode, proxy, and batch scratch paths allocate from.
+fn print_pool_stats() {
+    let s = crate::gf::pool::global().stats();
+    println!("\n=== buffer pool ===");
+    println!(
+        "hits {} / misses {} / drops {}   recycled {}   retained {:.1} MiB in {} buffers",
+        s.hits,
+        s.misses,
+        s.drops,
+        s.recycled,
+        s.retained_bytes as f64 / (1 << 20) as f64,
+        s.buffers
+    );
 }
 
 /// Decode-plan cache statistics for the *current process* (also printed
@@ -495,10 +539,11 @@ fn print_plan_cache_stats() {
     let stats = crate::codes::plan_cache::global().stats(8);
     println!("\n=== decode-plan cache ===");
     println!(
-        "hits {} / misses {} / expired {}   entries {}/{}   ttl {}",
+        "hits {} / misses {} / expired {} / refreshed {}   entries {}/{}   ttl {}",
         stats.hits,
         stats.misses,
         stats.expirations,
+        stats.refreshed,
         stats.entries,
         stats.cap,
         match stats.ttl {
@@ -1404,6 +1449,18 @@ mod tests {
     #[test]
     fn bad_gf_kernel_errors() {
         assert!(exp_config(&parse_flags(&["--gf-kernel".into(), "mmx".into()])).is_err());
+    }
+
+    #[test]
+    fn gf_nt_and_pin_flags_parse() {
+        // bad nt grammar is rejected before any engine install
+        assert!(exp_config(&parse_flags(&["--gf-nt-kb".into(), "banana".into()])).is_err());
+        // boolean flag spellings: bare flag → "true", explicit on/off forms
+        assert!(parse_bool_flag("--gf-pin", "true").unwrap());
+        assert!(parse_bool_flag("--gf-pin", "1").unwrap());
+        assert!(!parse_bool_flag("--gf-pin", "off").unwrap());
+        assert!(!parse_bool_flag("--gf-pin", "0").unwrap());
+        assert!(parse_bool_flag("--gf-pin", "maybe").is_err());
     }
 
     #[test]

@@ -43,14 +43,14 @@ impl DecodePlan {
     }
 
     /// Execute on real blocks: `sources[i]` is the block `self.sources[i]`.
-    /// Returns the reconstructed blocks in `self.erased` order. Output
-    /// buffers come from the block pool; callers on the repair path may
+    /// Returns the reconstructed blocks in `self.erased` order as
+    /// 64-byte-aligned pooled buffers; callers on the repair path should
     /// return them via [`crate::gf::pool::recycle`].
-    pub fn execute(&self, sources: &[&[u8]]) -> Vec<Vec<u8>> {
+    pub fn execute(&self, sources: &[&[u8]]) -> Vec<pool::PooledBuf> {
         assert_eq!(sources.len(), self.sources.len());
         let len = sources.first().map_or(0, |s| s.len());
         let rows: Vec<&[u8]> = (0..self.coeffs.rows()).map(|i| self.coeffs.row(i)).collect();
-        let mut outs: Vec<Vec<u8>> =
+        let mut outs: Vec<pool::PooledBuf> =
             (0..self.erased.len()).map(|_| pool::take_for_overwrite(len)).collect();
         gf_matmul_blocks(&rows, sources, &mut outs);
         outs
@@ -63,12 +63,16 @@ impl DecodePlan {
     /// [`Self::execute`], but the coefficient tables are built once and the
     /// pool schedules lane-tasks across stripes (the full-node recovery
     /// shape). Buffers come from the block pool.
-    pub fn execute_batch(&self, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+    pub fn execute_batch(&self, stripes: &[Vec<&[u8]>]) -> Vec<Vec<pool::PooledBuf>> {
         self.execute_batch_on(dispatch::engine(), stripes)
     }
 
     /// [`Self::execute_batch`] on a specific engine.
-    pub fn execute_batch_on(&self, e: &GfEngine, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+    pub fn execute_batch_on(
+        &self,
+        e: &GfEngine,
+        stripes: &[Vec<&[u8]>],
+    ) -> Vec<Vec<pool::PooledBuf>> {
         for sources in stripes {
             assert_eq!(sources.len(), self.sources.len());
         }

@@ -81,10 +81,10 @@ impl RepairPlan {
         self.sources.len().saturating_sub(1)
     }
 
-    /// Execute on real blocks (sources given in plan order). The output
-    /// buffer comes from the block pool; repair-path callers may return it
-    /// via [`crate::gf::pool::recycle`].
-    pub fn execute(&self, sources: &[&[u8]]) -> Vec<u8> {
+    /// Execute on real blocks (sources given in plan order). The output is
+    /// a 64-byte-aligned pooled buffer; repair-path callers should return
+    /// it via [`crate::gf::pool::recycle`].
+    pub fn execute(&self, sources: &[&[u8]]) -> pool::PooledBuf {
         assert_eq!(sources.len(), self.sources.len());
         let len = sources[0].len();
         // Both paths overwrite every output byte (fold copies, matmul
@@ -258,13 +258,17 @@ impl Code {
     /// pool schedules lane-tasks *across* stripes — so bulk ingest of small
     /// blocks parallelizes even though each block is below the intra-block
     /// striping threshold.
-    pub fn encode_stripes(&self, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+    pub fn encode_stripes(&self, stripes: &[Vec<&[u8]>]) -> Vec<Vec<pool::PooledBuf>> {
         self.encode_stripes_on(dispatch::engine(), stripes)
     }
 
     /// [`Self::encode_stripes`] on a specific engine (tests sweep thread
     /// counts through this).
-    pub fn encode_stripes_on(&self, e: &GfEngine, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+    pub fn encode_stripes_on(
+        &self,
+        e: &GfEngine,
+        stripes: &[Vec<&[u8]>],
+    ) -> Vec<Vec<pool::PooledBuf>> {
         for data in stripes {
             assert_eq!(data.len(), self.k, "need exactly k data blocks per stripe");
         }

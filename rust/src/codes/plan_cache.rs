@@ -15,7 +15,10 @@
 //! surfaces them (shown by `unilrc engine`). A TTL ([`PlanCache::set_ttl`],
 //! env `UNILRC_PLAN_TTL_MS`, config `[experiment] plan_ttl_ms`) expires
 //! stale entries on lookup — long-running deployments whose failure
-//! patterns drift don't pin dead plans in the LRU working set.
+//! patterns drift don't pin dead plans in the LRU working set. Near-expiry
+//! entries are proactively rebuilt on GF-worker idle time
+//! ([`PlanCache::refresh_expiring`], wired into the pool's idle tick by
+//! [`global`]), so TTL turnover rarely lands as a demand-path re-inversion.
 //!
 //! [`PlanCache::prefetch`] warms the cache with *predicted* erasure
 //! patterns (the distinct per-stripe patterns a fault trace will produce —
@@ -55,12 +58,13 @@ impl CachedPlan {
 
     /// Execute on real blocks (`sources[i]` is block `plan.sources[i]`),
     /// using the prebuilt tables and pooled output buffers. Returns the
-    /// reconstructed blocks in `plan.erased` order; callers may hand the
-    /// buffers back via [`crate::gf::pool::recycle`].
-    pub fn execute(&self, sources: &[&[u8]]) -> Vec<Vec<u8>> {
+    /// reconstructed blocks in `plan.erased` order as 64-byte-aligned
+    /// pooled buffers; callers should hand them back via
+    /// [`crate::gf::pool::recycle`].
+    pub fn execute(&self, sources: &[&[u8]]) -> Vec<pool::PooledBuf> {
         assert_eq!(sources.len(), self.plan.sources.len());
         let len = sources.first().map_or(0, |s| s.len());
-        let mut outs: Vec<Vec<u8>> =
+        let mut outs: Vec<pool::PooledBuf> =
             (0..self.plan.erased.len()).map(|_| pool::take_for_overwrite(len)).collect();
         dispatch::engine().matmul_blocks_t(&self.tables, sources, &mut outs);
         outs
@@ -72,12 +76,16 @@ impl CachedPlan {
     /// per-stripe [`Self::execute`]; the prebuilt tables are shared and the
     /// pool schedules lane-tasks across stripes, so full-node recovery of
     /// small blocks parallelizes end to end.
-    pub fn execute_batch(&self, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+    pub fn execute_batch(&self, stripes: &[Vec<&[u8]>]) -> Vec<Vec<pool::PooledBuf>> {
         self.execute_batch_on(dispatch::engine(), stripes)
     }
 
     /// [`Self::execute_batch`] on a specific engine.
-    pub fn execute_batch_on(&self, e: &GfEngine, stripes: &[Vec<&[u8]>]) -> Vec<Vec<Vec<u8>>> {
+    pub fn execute_batch_on(
+        &self,
+        e: &GfEngine,
+        stripes: &[Vec<&[u8]>],
+    ) -> Vec<Vec<pool::PooledBuf>> {
         for sources in stripes {
             assert_eq!(sources.len(), self.plan.sources.len());
         }
@@ -94,6 +102,9 @@ struct Entry {
     created: Instant,
     /// Inserted by [`PlanCache::prefetch`] rather than a demand miss.
     prefetched: bool,
+    /// The code this plan was built for — kept so idle-time refresh
+    /// ([`PlanCache::refresh_expiring`]) can rebuild the plan in place.
+    code: Code,
     /// `None` caches "pattern is unrecoverable".
     val: Option<Arc<CachedPlan>>,
 }
@@ -128,6 +139,9 @@ pub struct CacheStats {
     pub prefetched: u64,
     /// Demand lookups served by a prefetched entry (subset of `hits`).
     pub prefetch_hits: u64,
+    /// Plans proactively rebuilt on idle worker time before their TTL
+    /// expired ([`PlanCache::refresh_expiring`]).
+    pub refreshed: u64,
     pub entries: usize,
     pub cap: usize,
     pub ttl: Option<Duration>,
@@ -145,6 +159,7 @@ pub struct PlanCache {
     expirations: AtomicU64,
     prefetched: AtomicU64,
     prefetch_hits: AtomicU64,
+    refreshed: AtomicU64,
 }
 
 impl PlanCache {
@@ -157,6 +172,7 @@ impl PlanCache {
             expirations: AtomicU64::new(0),
             prefetched: AtomicU64::new(0),
             prefetch_hits: AtomicU64::new(0),
+            refreshed: AtomicU64::new(0),
         }
     }
 
@@ -210,7 +226,14 @@ impl PlanCache {
         inner.tick += 1;
         let tick = inner.tick;
         // A racing compute may have inserted meanwhile; keep the first.
-        let fresh = Entry { stamp: tick, hits: 0, created: Instant::now(), prefetched: false, val };
+        let fresh = Entry {
+            stamp: tick,
+            hits: 0,
+            created: Instant::now(),
+            prefetched: false,
+            code: code.clone(),
+            val,
+        };
         let entry = inner.map.entry(key).or_insert(fresh);
         entry.stamp = tick;
         let out = entry.val.clone();
@@ -252,8 +275,14 @@ impl PlanCache {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
             let tick = inner.tick;
-            let fresh =
-                Entry { stamp: tick, hits: 0, created: Instant::now(), prefetched: true, val };
+            let fresh = Entry {
+                stamp: tick,
+                hits: 0,
+                created: Instant::now(),
+                prefetched: true,
+                code: code.clone(),
+                val,
+            };
             if let std::collections::btree_map::Entry::Vacant(slot) = inner.map.entry(key) {
                 slot.insert(fresh);
                 inserted += 1;
@@ -262,6 +291,47 @@ impl PlanCache {
             Self::evict_to_cap(&mut inner, self.cap);
         }
         inserted
+    }
+
+    /// Proactively rebuild recoverable entries that will hit the TTL within
+    /// `margin`, resetting their age so the next demand lookup stays a hit
+    /// instead of paying an expiration + re-inversion. Runs plan
+    /// construction outside the lock (like the demand path); per-entry hit
+    /// counts, prefetch tags, and LRU stamps are preserved. Returns the
+    /// number of entries refreshed. A cache without a TTL never expires, so
+    /// this is a no-op there.
+    ///
+    /// The process-wide cache wires this into the worker pool's idle tick
+    /// ([`crate::gf::workpool::add_idle_hook`]) — refresh happens on
+    /// otherwise wasted worker time, not on the repair path.
+    pub fn refresh_expiring(&self, margin: Duration) -> usize {
+        let Some(ttl) = self.ttl() else { return 0 };
+        let deadline = ttl.saturating_sub(margin);
+        // Snapshot the expiring keys + codes under the lock; invert outside.
+        let stale: Vec<(Key, Code)> = {
+            let inner = self.inner.lock().unwrap();
+            inner
+                .map
+                .iter()
+                .filter(|(_, e)| e.val.is_some() && e.created.elapsed() >= deadline)
+                .map(|(k, e)| (k.clone(), e.code.clone()))
+                .collect()
+        };
+        let mut refreshed = 0usize;
+        for (key, code) in stale {
+            let val = decoder::plan(&code, &key.1).map(|p| Arc::new(CachedPlan::new(p)));
+            let mut inner = self.inner.lock().unwrap();
+            // Re-arm only if still resident (eviction or expiry may race).
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.val = val;
+                e.created = Instant::now();
+                refreshed += 1;
+            }
+        }
+        if refreshed > 0 {
+            self.refreshed.fetch_add(refreshed as u64, Ordering::Relaxed);
+        }
+        refreshed
     }
 
     fn evict_to_cap(inner: &mut Inner, cap: usize) {
@@ -296,6 +366,11 @@ impl PlanCache {
         self.prefetch_hits.load(Ordering::Relaxed)
     }
 
+    /// Plans proactively rebuilt by [`Self::refresh_expiring`].
+    pub fn refreshed(&self) -> u64 {
+        self.refreshed.load(Ordering::Relaxed)
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().map.len()
     }
@@ -328,6 +403,7 @@ impl PlanCache {
             expirations: self.expirations(),
             prefetched: self.prefetched(),
             prefetch_hits: self.prefetch_hits(),
+            refreshed: self.refreshed(),
             entries: inner.map.len(),
             cap: self.cap,
             ttl: inner.ttl,
@@ -347,9 +423,22 @@ const GLOBAL_CAP: usize = 1024;
 
 static GLOBAL: PlanCache = PlanCache::new(GLOBAL_CAP);
 
+/// How far before TTL expiry an entry becomes eligible for idle-time
+/// refresh. Generous relative to plan-inversion cost, small relative to
+/// any production TTL.
+const REFRESH_MARGIN: Duration = Duration::from_millis(500);
+
 /// The process-wide plan cache used by [`Code::decode_plan_cached`] and the
-/// proxy repair path.
+/// proxy repair path. First use registers its proactive TTL refresh on the
+/// GF worker pool's idle tick, so near-expiry plans are rebuilt on idle
+/// worker time instead of as demand-path misses.
 pub fn global() -> &'static PlanCache {
+    static REGISTER: std::sync::Once = std::sync::Once::new();
+    REGISTER.call_once(|| {
+        crate::gf::workpool::add_idle_hook(|| {
+            GLOBAL.refresh_expiring(REFRESH_MARGIN);
+        });
+    });
     &GLOBAL
 }
 
@@ -505,6 +594,29 @@ mod tests {
         assert_eq!(cache.prefetched(), 2);
         cache.set_ttl(None);
         assert_eq!(cache.prefetch(&code, &[vec![0, 1]]), 0, "live residents are skipped");
+    }
+
+    #[test]
+    fn refresh_expiring_rebuilds_before_ttl() {
+        let cache = PlanCache::new(16);
+        let code = Rs::new(10, 6);
+        cache.set_ttl(Some(Duration::from_secs(3600)));
+        let a = cache.get_or_compute(&code, &[0, 1]).unwrap();
+        // far from expiry with a zero margin: nothing to do
+        assert_eq!(cache.refresh_expiring(Duration::ZERO), 0);
+        // a margin spanning the whole TTL treats every entry as expiring
+        assert_eq!(cache.refresh_expiring(Duration::from_secs(3600)), 1);
+        assert_eq!(cache.refreshed(), 1);
+        // the next demand lookup is a *hit* on the rebuilt (identical) plan
+        let b = cache.get_or_compute(&code, &[0, 1]).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "refresh rebuilt the plan in place");
+        assert_eq!(b.plan, a.plan);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.expirations(), 0, "refresh pre-empted the expiration");
+        assert_eq!(cache.stats(4).refreshed, 1);
+        // without a TTL nothing ever expires, so refresh is a no-op
+        cache.set_ttl(None);
+        assert_eq!(cache.refresh_expiring(Duration::from_secs(3600)), 0);
     }
 
     #[test]

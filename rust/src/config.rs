@@ -160,17 +160,27 @@ fn parse_value(s: &str) -> Result<Value> {
 }
 
 /// Build and install the process-wide GF engine from optional kernel /
-/// thread / batch-chunk overrides (shared by the CLI flags and config-file
-/// keys; the engine freezes at first install, so late overrides warn via
-/// `origin`). `chunk_kb = 0` explicitly selects the adaptive chunk policy.
+/// thread / batch-chunk / streaming-store / pinning overrides (shared by
+/// the CLI flags and config-file keys; the engine freezes at first
+/// install, so late overrides warn via `origin`). `chunk_kb = 0`
+/// explicitly selects the adaptive chunk policy; `nt_kb` takes the
+/// [`crate::gf::dispatch::parse_nt_kb`] grammar (a KiB threshold, `0` =
+/// always stream, `auto`, `off`).
 pub fn install_gf_engine(
     kernel: Option<&str>,
     threads: Option<usize>,
     chunk_kb: Option<usize>,
+    nt_kb: Option<&str>,
+    pin: Option<bool>,
     origin: &str,
 ) -> Result<()> {
     use crate::gf::dispatch::{self, GfEngine, Kernel};
-    if kernel.is_none() && threads.is_none() && chunk_kb.is_none() {
+    if kernel.is_none()
+        && threads.is_none()
+        && chunk_kb.is_none()
+        && nt_kb.is_none()
+        && pin.is_none()
+    {
         return Ok(());
     }
     let mut engine = GfEngine::from_env();
@@ -184,6 +194,14 @@ pub fn install_gf_engine(
     }
     if let Some(kb) = chunk_kb {
         engine = engine.with_chunk(kb * 1024);
+    }
+    if let Some(v) = nt_kb {
+        let t = dispatch::parse_nt_kb(v)
+            .with_context(|| format!("bad gf nt threshold {v:?} (want KiB, `auto`, or `off`)"))?;
+        engine = engine.with_nt(t);
+    }
+    if let Some(p) = pin {
+        engine = engine.with_pin(p);
     }
     if !dispatch::install(engine) {
         eprintln!("note: GF engine already initialized — {origin} overrides ignored");
@@ -204,16 +222,27 @@ pub fn apply_plan_ttl(ms: u64) {
 /// `cross_gbps`, `aggregated`, `backend`, `seed`, the GF engine knobs
 /// `gf_kernel` (auto|scalar|ssse3|avx2|avx512|gfni|neon) / `gf_threads`
 /// (worker-pool size) / `gf_chunk_kb` (batch task granularity; 0 =
-/// adaptive), `plan_ttl_ms` (decode-plan cache TTL; 0 disables expiry),
+/// adaptive) / `gf_nt_kb` (streaming-store threshold in KiB, or
+/// `"auto"`/`"off"`) / `gf_pin` (pin pool workers to CPUs),
+/// `plan_ttl_ms` (decode-plan cache TTL; 0 disables expiry),
 /// and `plan_warmup` (prefetch decode plans for the fault trace's
 /// predicted failure patterns — experiment 7).
 pub fn experiment_config(cfg: &Config) -> Result<crate::experiments::ExpConfig> {
     use crate::codes::spec::Scheme;
     let mut e = crate::experiments::ExpConfig::default();
+    // gf_nt_kb accepts both a bare KiB integer and the "auto"/"off" strings
+    let nt_kb = match cfg.get("experiment", "gf_nt_kb") {
+        Some(Value::Str(s)) => Some(s.clone()),
+        Some(Value::Int(i)) => Some(i.to_string()),
+        Some(v) => bail!("bad gf_nt_kb {v:?} (want KiB, \"auto\", or \"off\")"),
+        None => None,
+    };
     install_gf_engine(
         cfg.get_str("experiment", "gf_kernel"),
         cfg.get_usize("experiment", "gf_threads"),
         cfg.get_usize("experiment", "gf_chunk_kb"),
+        nt_kb.as_deref(),
+        cfg.get_bool("experiment", "gf_pin"),
         "config",
     )?;
     if let Some(ms) = cfg.get_usize("experiment", "plan_ttl_ms") {
@@ -502,6 +531,26 @@ epsilon = 0.1
         assert!(experiment_config(&c).is_ok());
         let adaptive = Config::parse("[experiment]\ngf_chunk_kb = 0").unwrap();
         assert!(experiment_config(&adaptive).is_ok());
+    }
+
+    #[test]
+    fn gf_nt_and_pin_keys_accepted() {
+        // integer KiB, the "auto"/"off" strings, and the pin boolean all
+        // parse; garbage is rejected with a pointed error
+        for text in [
+            "[experiment]\ngf_nt_kb = 8192",
+            "[experiment]\ngf_nt_kb = 0",
+            "[experiment]\ngf_nt_kb = \"auto\"",
+            "[experiment]\ngf_nt_kb = \"off\"",
+            "[experiment]\ngf_pin = false",
+        ] {
+            let c = Config::parse(text).unwrap();
+            assert!(experiment_config(&c).is_ok(), "{text}");
+        }
+        let bad = Config::parse("[experiment]\ngf_nt_kb = \"sometimes\"").unwrap();
+        assert!(experiment_config(&bad).is_err());
+        let bad = Config::parse("[experiment]\ngf_nt_kb = true").unwrap();
+        assert!(experiment_config(&bad).is_err());
     }
 
     #[test]

@@ -371,6 +371,7 @@ pub fn exp5_decode(cfg: &ExpConfig) -> Result<Vec<Row>> {
             };
             let dt = t.elapsed().as_secs_f64();
             anyhow::ensure!(out.as_slice() == stripe[target], "decode mismatch");
+            crate::gf::pool::recycle(out);
             tputs.push(mib(cfg.block_size, dt));
         }
         rows.push(Row { family: fam, value: mean(&tputs), unit: "MiB/s" });

@@ -23,6 +23,19 @@
 //! floods the queue with lane-sized tasks; `--gf-chunk-kb` /
 //! `UNILRC_GF_CHUNK_KB` pins it explicitly (`tests/chunking.rs`).
 //!
+//! The engine also owns the *memory-system* policy on top of the kernels:
+//! outputs whose span exceeds a configurable LLC-sized threshold
+//! (`--gf-nt-kb` / `UNILRC_GF_NT_KB`, auto-detected from `/sys`) are
+//! written with **streaming (non-temporal) stores** — accumulation happens
+//! in a cache-resident pooled scratch and the final pass fuses the last
+//! source into one pure-store sweep, so a >LLC output is written to DRAM
+//! exactly once with no read-for-ownership and no cache pollution. Workers
+//! can optionally be **pinned** to distinct CPUs (`--gf-pin` /
+//! `UNILRC_GF_PIN`) so a stripe's lanes stay on one socket, and batches
+//! **merge** small same-batch ops into shared pool tasks
+//! (`UNILRC_GF_MERGE`) so a burst of stripes ≫ workers fuses below one
+//! task per stripe.
+//!
 //! The process-wide engine ([`engine`]) backs the hot-path entry points in
 //! [`super::slice`], so every encode / repair / decode in the repo runs at
 //! the selected tier without call sites knowing about dispatch.
@@ -176,8 +189,10 @@ const DEFAULT_PAR_WORK: usize = 256 * 1024;
 const BATCH_TASKS_PER_WORKER: usize = 3;
 
 /// A GF(2^8) execution engine: one kernel tier + striping parameters +
-/// (for `threads > 1`) a persistent worker pool, created lazily on first
-/// parallel call and frozen with the engine. Clones share the pool.
+/// memory-system policy (streaming-store threshold, worker pinning, task
+/// merging) + (for `threads > 1`) a persistent worker pool, created lazily
+/// on first parallel call and frozen with the engine. Clones share the
+/// pool.
 #[derive(Clone)]
 pub struct GfEngine {
     kernel: Kernel,
@@ -187,6 +202,14 @@ pub struct GfEngine {
     /// Explicit batch task granularity (input bytes per pool task);
     /// `None` = adaptive (derived per batch from work vs. worker count).
     chunk: Option<usize>,
+    /// Output-span threshold in bytes above which ops use streaming
+    /// (non-temporal) stores: `0` forces them on, `usize::MAX` off, and
+    /// the default is the detected LLC size.
+    nt: usize,
+    /// Pin workers to distinct CPUs, package-major (see `gf/topo.rs`).
+    pin: bool,
+    /// Fuse small same-batch ops into shared pool tasks.
+    merge: bool,
     pool: Arc<OnceLock<Arc<WorkPool>>>,
 }
 
@@ -198,9 +221,27 @@ impl std::fmt::Debug for GfEngine {
             .field("lane", &self.lane)
             .field("par_work", &self.par_work)
             .field("chunk", &self.chunk)
+            .field("nt", &self.nt)
+            .field("pin", &self.pin)
+            .field("merge", &self.merge)
             .field("pool_started", &self.pool.get().is_some())
             .finish()
     }
+}
+
+/// Parse a streaming-store threshold spec in KiB (`--gf-nt-kb` /
+/// `UNILRC_GF_NT_KB` / config `gf_nt_kb`): a number (`0` = stream every
+/// output), `off`/`inf` to disable streaming entirely, `auto` for the
+/// detected LLC size. Returns threshold **bytes**.
+pub fn parse_nt_kb(s: &str) -> Option<usize> {
+    let s = s.trim();
+    if s.eq_ignore_ascii_case("off") || s.eq_ignore_ascii_case("inf") {
+        return Some(usize::MAX);
+    }
+    if s.eq_ignore_ascii_case("auto") {
+        return Some(super::topo::llc_bytes());
+    }
+    s.parse::<usize>().ok().map(|kb| kb.saturating_mul(1024))
 }
 
 impl Default for GfEngine {
@@ -232,6 +273,9 @@ impl GfEngine {
             lane: DEFAULT_LANE,
             par_work: DEFAULT_PAR_WORK,
             chunk: None,
+            nt: super::topo::llc_bytes(),
+            pin: false,
+            merge: true,
             pool: Arc::new(OnceLock::new()),
         }
     }
@@ -240,7 +284,10 @@ impl GfEngine {
     /// `UNILRC_GF_KERNEL` (scalar|ssse3|avx2|avx512|gfni|neon|auto),
     /// `UNILRC_GF_THREADS`, `UNILRC_GF_LANE_KB`, `UNILRC_GF_PAR_KB`
     /// (striping work threshold), `UNILRC_GF_CHUNK_KB` (explicit batch
-    /// task granularity; 0 = adaptive).
+    /// task granularity; 0 = adaptive), `UNILRC_GF_NT_KB`
+    /// (streaming-store threshold; 0 = always, off/inf = never,
+    /// auto = detected LLC), `UNILRC_GF_PIN` (pin workers to CPUs), and
+    /// `UNILRC_GF_MERGE` (0 disables cross-op batch task merging).
     pub fn from_env() -> GfEngine {
         let mut e = GfEngine::auto();
         if let Ok(k) = std::env::var("UNILRC_GF_KERNEL") {
@@ -267,6 +314,17 @@ impl GfEngine {
             if let Ok(kb) = kb.parse::<usize>() {
                 e = e.with_chunk(kb * 1024);
             }
+        }
+        if let Ok(v) = std::env::var("UNILRC_GF_NT_KB") {
+            if let Some(bytes) = parse_nt_kb(&v) {
+                e = e.with_nt(bytes);
+            }
+        }
+        if let Ok(v) = std::env::var("UNILRC_GF_PIN") {
+            e = e.with_pin(matches!(v.trim(), "1" | "true" | "on" | "yes"));
+        }
+        if let Ok(v) = std::env::var("UNILRC_GF_MERGE") {
+            e = e.with_merge(!matches!(v.trim(), "0" | "false" | "off" | "no"));
         }
         e
     }
@@ -307,8 +365,41 @@ impl GfEngine {
         self
     }
 
+    /// Set the streaming-store threshold in **bytes** of output span:
+    /// `0` streams every output, `usize::MAX` disables streaming (see
+    /// [`parse_nt_kb`] for the KiB-spec grammar the CLI/env use).
+    pub fn with_nt(mut self, threshold_bytes: usize) -> GfEngine {
+        self.nt = threshold_bytes;
+        self
+    }
+
+    /// Pin pool workers to distinct CPUs (package-major, so a stripe's
+    /// lanes share a socket). Replaces any existing pool handle so the
+    /// next parallel call creates a pinned pool.
+    pub fn with_pin(mut self, pin: bool) -> GfEngine {
+        self.pin = pin;
+        self.pool = Arc::new(OnceLock::new());
+        self
+    }
+
+    /// Enable/disable cross-op task merging in batches.
+    pub fn with_merge(mut self, merge: bool) -> GfEngine {
+        self.merge = merge;
+        self
+    }
+
     pub fn kernel(&self) -> Kernel {
         self.kernel
+    }
+
+    /// Streaming-store threshold in bytes (`usize::MAX` = disabled).
+    pub fn nt_threshold(&self) -> usize {
+        self.nt
+    }
+
+    /// Are pool workers pinned to CPUs?
+    pub fn pinned(&self) -> bool {
+        self.pin
     }
 
     pub fn threads(&self) -> usize {
@@ -328,7 +419,8 @@ impl GfEngine {
     /// One-line description for logs and `unilrc engine`.
     pub fn describe(&self) -> String {
         format!(
-            "kernel={} threads={} lane={}KiB par_work={}KiB chunk={} pool={}",
+            "kernel={} threads={} lane={}KiB par_work={}KiB chunk={} nt={} pin={} merge={} \
+             pool={}",
             self.kernel,
             self.threads,
             self.lane / 1024,
@@ -337,6 +429,13 @@ impl GfEngine {
                 Some(c) => format!("{}KiB", c.div_ceil(1024)),
                 None => "adaptive".to_string(),
             },
+            if self.nt == usize::MAX {
+                "off".to_string()
+            } else {
+                format!("{}KiB", self.nt / 1024)
+            },
+            if self.pin { "on" } else { "off" },
+            if self.merge { "on" } else { "off" },
             if self.threads <= 1 {
                 "off"
             } else if self.pool_started() {
@@ -377,7 +476,28 @@ impl GfEngine {
         if self.threads <= 1 {
             return None;
         }
-        Some(self.pool.get_or_init(|| Arc::new(WorkPool::new(self.threads))).as_ref())
+        Some(
+            self.pool
+                .get_or_init(|| Arc::new(WorkPool::with_pinning(self.threads, self.pin)))
+                .as_ref(),
+        )
+    }
+
+    /// Whether an op writing `span` total output bytes should use the
+    /// streaming (non-temporal) store kernels: only on x86_64 vector tiers
+    /// that have NT variants, and only past the threshold — outputs that
+    /// fit in cache are re-read cheaply, and streaming them out would
+    /// force the next reader to DRAM.
+    fn nt_for(&self, span: usize) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            matches!(self.kernel, Kernel::Avx2 | Kernel::Avx512 | Kernel::Gfni) && span >= self.nt
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = span;
+            false
+        }
     }
 
     // ------------------------------------------------------------ slice ops
@@ -489,6 +609,69 @@ impl GfEngine {
         }
     }
 
+    // --------------------------------------------- streaming-store kernels
+
+    /// `dst = src` with streaming stores (callers checked [`Self::nt_for`];
+    /// tiers without NT variants fall back to a plain copy).
+    fn copy_nt(&self, dst: &mut [u8], src: &[u8]) {
+        // SAFETY: kernel availability established at construction.
+        match self.kernel {
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => unsafe { super::simd::x86_64::copy_nt_avx2(dst, src) },
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx512 | Kernel::Gfni => unsafe {
+                super::simd::x86_64::copy_nt_avx512(dst, src)
+            },
+            _ => dst.copy_from_slice(src),
+        }
+    }
+
+    /// `dst = a ^ b` with streaming stores — `dst` is never read.
+    fn xor_nt(&self, dst: &mut [u8], a: &[u8], b: &[u8]) {
+        // SAFETY: kernel availability established at construction.
+        match self.kernel {
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => unsafe { super::simd::x86_64::xor_nt_avx2(dst, a, b) },
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx512 | Kernel::Gfni => unsafe {
+                super::simd::x86_64::xor_nt_avx512(dst, a, b)
+            },
+            _ => {
+                dst.copy_from_slice(a);
+                self.xor(dst, b);
+            }
+        }
+    }
+
+    /// `dst = acc ^ c·src` with streaming stores — the fused final pass of
+    /// an NT accumulation: `acc` is the cache-resident scratch, `dst` the
+    /// big output written straight to memory exactly once.
+    fn mul_into_nt(&self, t: &NibbleTables, src: &[u8], acc: &[u8], dst: &mut [u8]) {
+        match t.c {
+            0 => self.copy_nt(dst, acc),
+            1 => self.xor_nt(dst, acc, src),
+            // SAFETY: kernel availability established at construction.
+            _ => match self.kernel {
+                #[cfg(target_arch = "x86_64")]
+                Kernel::Avx2 => unsafe {
+                    super::simd::x86_64::mul_into_nt_avx2(t, src, acc, dst)
+                },
+                #[cfg(target_arch = "x86_64")]
+                Kernel::Avx512 => unsafe {
+                    super::simd::x86_64::mul_into_nt_avx512(t, src, acc, dst)
+                },
+                #[cfg(target_arch = "x86_64")]
+                Kernel::Gfni => unsafe {
+                    super::simd::x86_64::mul_into_nt_gfni(t, src, acc, dst)
+                },
+                _ => {
+                    dst.copy_from_slice(acc);
+                    self.mul_acc_t(t, src, dst);
+                }
+            },
+        }
+    }
+
     // -------------------------------------------------------- striped ops
 
     /// Worker count for a call touching `block`-byte rows and `work` total
@@ -501,27 +684,67 @@ impl GfEngine {
         }
     }
 
+    /// One lane of a fold: `c = srcs[0][o..] ^ srcs[1][o..] ^ …`. The NT
+    /// variant never reads `c`: one- and two-source folds stream directly;
+    /// longer folds accumulate all but the last source in a cache-resident
+    /// pooled scratch, then fuse the last source into a single pure-store
+    /// sweep of `c`.
+    fn fold_lane(&self, c: &mut [u8], srcs: &[&[u8]], o: usize, nt: bool) {
+        let w = c.len();
+        if !nt {
+            c.copy_from_slice(&srcs[0][o..o + w]);
+            for s in &srcs[1..] {
+                self.xor(c, &s[o..o + w]);
+            }
+            return;
+        }
+        let n = srcs.len();
+        match n {
+            1 => self.copy_nt(c, &srcs[0][o..o + w]),
+            2 => self.xor_nt(c, &srcs[0][o..o + w], &srcs[1][o..o + w]),
+            _ => {
+                let mut scratch = super::pool::take_for_overwrite(w);
+                scratch.copy_from_slice(&srcs[0][o..o + w]);
+                for s in &srcs[1..n - 1] {
+                    self.xor(&mut scratch, &s[o..o + w]);
+                }
+                self.xor_nt(c, &scratch, &srcs[n - 1][o..o + w]);
+                super::pool::recycle(scratch);
+            }
+        }
+    }
+
+    /// Whole-block fold, one lane at a time so src+dst (or the NT scratch)
+    /// stay cache-resident.
+    fn fold_whole(&self, dst: &mut [u8], srcs: &[&[u8]], nt: bool) {
+        let lane = self.lane;
+        let mut off = 0usize;
+        for c in dst.chunks_mut(lane) {
+            let o = off;
+            off += c.len();
+            self.fold_lane(c, srcs, o, nt);
+        }
+    }
+
     /// `dst = srcs[0] ^ srcs[1] ^ …`, striped across the worker pool for
-    /// large blocks (the UniLRC repair path).
+    /// large blocks (the UniLRC repair path). Outputs past the streaming
+    /// threshold ([`Self::nt_for`]) are written with non-temporal stores.
     pub fn fold_blocks(&self, dst: &mut [u8], srcs: &[&[u8]]) {
         assert!(!srcs.is_empty(), "fold needs at least one source");
         for s in srcs {
             assert_eq!(s.len(), dst.len(), "fold length mismatch");
         }
         let block = dst.len();
+        let nt = self.nt_for(block);
         let workers = self.workers_for(block, block * srcs.len());
         let pool = if workers > 1 { self.pool() } else { None };
         let Some(pool) = pool else {
-            dst.copy_from_slice(srcs[0]);
-            for s in &srcs[1..] {
-                self.xor(dst, s);
-            }
+            self.fold_whole(dst, srcs, nt);
             return;
         };
         let lane = self.lane;
         // Group whole lanes into one task per worker; within a task, each
-        // lane is copied and folded before the next so src+dst stay
-        // cache-resident.
+        // lane is folded before the next so src+dst stay cache-resident.
         let per = block.div_ceil(lane).div_ceil(workers).max(1) * lane;
         pool.scope(|scope| {
             let mut off = 0usize;
@@ -530,12 +753,7 @@ impl GfEngine {
                 off += chunk.len();
                 scope.submit(move || {
                     for (l, c) in chunk.chunks_mut(lane).enumerate() {
-                        let o = base + l * lane;
-                        let w = c.len();
-                        c.copy_from_slice(&srcs[0][o..o + w]);
-                        for s in &srcs[1..] {
-                            self.xor(c, &s[o..o + w]);
-                        }
+                        self.fold_lane(c, srcs, base + l * lane, nt);
                     }
                 });
             }
@@ -546,37 +764,44 @@ impl GfEngine {
     /// striped across the worker pool. Each task owns a disjoint byte range
     /// of every output row and walks it source-major, so one cache-resident
     /// lane of each source is scattered into all rows before moving on.
-    pub fn matmul_blocks(&self, coeff: &[&[u8]], srcs: &[&[u8]], outs: &mut [Vec<u8>]) {
+    /// Outputs may be `Vec<u8>` or pooled buffers ([`super::pool::PooledBuf`]).
+    pub fn matmul_blocks<B: AsMut<[u8]> + Send>(
+        &self,
+        coeff: &[&[u8]],
+        srcs: &[&[u8]],
+        outs: &mut [B],
+    ) {
         let tables = NibbleTables::for_rows(coeff.iter().copied());
         self.matmul_blocks_t(&tables, srcs, outs);
     }
 
     /// [`Self::matmul_blocks`] with per-coefficient tables prebuilt — the
     /// entry point for cached decode plans.
-    pub fn matmul_blocks_t(
+    pub fn matmul_blocks_t<B: AsMut<[u8]> + Send>(
         &self,
         tables: &[Vec<NibbleTables>],
         srcs: &[&[u8]],
-        outs: &mut [Vec<u8>],
+        outs: &mut [B],
     ) {
         assert_eq!(tables.len(), outs.len(), "row count mismatch");
         let block = srcs.first().map_or(0, |s| s.len());
         for (row, out) in tables.iter().zip(outs.iter_mut()) {
             assert_eq!(row.len(), srcs.len(), "column count mismatch");
-            assert_eq!(out.len(), block, "output block size mismatch");
+            assert_eq!(out.as_mut().len(), block, "output block size mismatch");
         }
+        let nt = self.nt_for(block * outs.len());
         let workers = self.workers_for(block, block * srcs.len() * outs.len().max(1));
         let pool = if workers > 1 && !outs.is_empty() { self.pool() } else { None };
         let Some(pool) = pool else {
-            let mut full: Vec<&mut [u8]> = outs.iter_mut().map(|o| o.as_mut_slice()).collect();
-            self.matmul_lane(tables, srcs, 0, &mut full);
+            self.matmul_whole(tables, srcs, outs, nt);
             return;
         };
         let lane = self.lane;
         let nlanes = block.div_ceil(lane);
         // Transpose row-major chunking into lane-major work items: lane l
         // holds the l-th chunk of every output row (disjoint &mut borrows).
-        let mut row_chunks: Vec<_> = outs.iter_mut().map(|o| o.chunks_mut(lane)).collect();
+        let mut row_chunks: Vec<_> =
+            outs.iter_mut().map(|o| o.as_mut().chunks_mut(lane)).collect();
         let mut lanes: Vec<(usize, Vec<&mut [u8]>)> = Vec::with_capacity(nlanes);
         for l in 0..nlanes {
             let chunk: Vec<&mut [u8]> =
@@ -589,11 +814,33 @@ impl GfEngine {
                 let mut group: Vec<_> = lanes.drain(..per.min(lanes.len())).collect();
                 scope.submit(move || {
                     for (off, louts) in group.iter_mut() {
-                        self.matmul_lane(tables, srcs, *off, louts);
+                        self.matmul_lane(tables, srcs, *off, louts, nt);
                     }
                 });
             }
         });
+    }
+
+    /// Whole-block matmul run inline, one lane at a time so each output
+    /// window (or its NT scratch) stays cache-resident across the fused
+    /// source pairs.
+    fn matmul_whole<B: AsMut<[u8]>>(
+        &self,
+        tables: &[Vec<NibbleTables>],
+        srcs: &[&[u8]],
+        outs: &mut [B],
+        nt: bool,
+    ) {
+        let lane = self.lane;
+        let mut rows: Vec<&mut [u8]> = outs.iter_mut().map(|o| o.as_mut()).collect();
+        let block = rows.first().map_or(0, |o| o.len());
+        let nsub = block.div_ceil(lane);
+        let mut subs: Vec<_> = rows.iter_mut().map(|o| o.chunks_mut(lane)).collect();
+        for s in 0..nsub {
+            let mut lane_outs: Vec<&mut [u8]> =
+                subs.iter_mut().map(|it| it.next().expect("lane chunk")).collect();
+            self.matmul_lane(tables, srcs, s * lane, &mut lane_outs, nt);
+        }
     }
 
     /// One lane of the matmul: outputs are the `[off..off+w)` sub-slices of
@@ -606,7 +853,11 @@ impl GfEngine {
         srcs: &[&[u8]],
         off: usize,
         louts: &mut [&mut [u8]],
+        nt: bool,
     ) {
+        if nt {
+            return self.matmul_lane_nt(tables, srcs, off, louts);
+        }
         for out in louts.iter_mut() {
             out.fill(0);
         }
@@ -632,20 +883,65 @@ impl GfEngine {
         }
     }
 
+    /// [`Self::matmul_lane`] with streaming stores: each output lane is
+    /// accumulated in one cache-resident pooled scratch (all sources but
+    /// the last), then the last source is fused into a single pure-store
+    /// sweep of the output ([`Self::mul_into_nt`]) — the big output is
+    /// written to DRAM exactly once and never read.
+    fn matmul_lane_nt(
+        &self,
+        tables: &[Vec<NibbleTables>],
+        srcs: &[&[u8]],
+        off: usize,
+        louts: &mut [&mut [u8]],
+    ) {
+        let w = louts.first().map_or(0, |o| o.len());
+        if srcs.is_empty() {
+            // No sources: every output row is all-zero; stream zeros out.
+            let scratch = super::pool::take_zeroed(w);
+            for out in louts.iter_mut() {
+                self.copy_nt(out, &scratch);
+            }
+            super::pool::recycle(scratch);
+            return;
+        }
+        let last = srcs.len() - 1;
+        let mut scratch = super::pool::take_for_overwrite(w);
+        for (row, out) in tables.iter().zip(louts.iter_mut()) {
+            scratch.fill(0);
+            let mut j = 0;
+            while j + 1 < last {
+                self.mul_acc2_t(
+                    &row[j],
+                    &srcs[j][off..off + w],
+                    &row[j + 1],
+                    &srcs[j + 1][off..off + w],
+                    &mut scratch,
+                );
+                j += 2;
+            }
+            if j < last {
+                self.mul_acc_t(&row[j], &srcs[j][off..off + w], &mut scratch);
+            }
+            self.mul_into_nt(&row[last], &srcs[last][off..off + w], &scratch, out);
+        }
+        super::pool::recycle(scratch);
+    }
+
     // -------------------------------------------------------- batched ops
 
     /// Apply one coefficient-table matrix to many stripes in a single
     /// batched wave: `result[s][i] = ⊕_j tables[i][j] · stripes[s][j]`.
     /// This is the shared engine for `Code::encode_stripes`,
     /// `DecodePlan::execute_batch`, and `CachedPlan::execute_batch`.
-    /// Output buffers come from the block pool (callers may
+    /// Output buffers are 64-byte-aligned pooled blocks (callers should
     /// [`recycle`](super::pool::recycle) them); every byte is overwritten.
     pub fn matmul_stripes_t(
         &self,
         tables: &[Vec<NibbleTables>],
         stripes: &[Vec<&[u8]>],
-    ) -> Vec<Vec<Vec<u8>>> {
-        let mut all: Vec<Vec<Vec<u8>>> = stripes
+    ) -> Vec<Vec<super::pool::PooledBuf>> {
+        let mut all: Vec<Vec<super::pool::PooledBuf>> = stripes
             .iter()
             .map(|sources| {
                 let len = sources.first().map_or(0, |s| s.len());
@@ -678,15 +974,36 @@ impl GfEngine {
         F: for<'scope> FnOnce(&mut CodingBatch<'scope, 'env>) -> R,
     {
         let chunk = self.batch_chunk(work);
+        // Streaming is decided batch-wide: the batch's aggregate output is
+        // what blows the cache, even when each op's own span is small.
+        let nt = self.nt_for(work);
         let pool = if self.threads > 1 && work >= self.par_work { self.pool() } else { None };
         match pool {
             Some(pool) => pool.scope(|scope| {
-                let mut b = CodingBatch { engine: self, scope: Some(scope), chunk };
-                f(&mut b)
+                let mut b = CodingBatch {
+                    engine: self,
+                    scope: Some(scope),
+                    chunk,
+                    nt,
+                    pending: Vec::new(),
+                    pending_work: 0,
+                };
+                let r = f(&mut b);
+                b.flush();
+                r
             }),
             None => {
-                let mut b = CodingBatch { engine: self, scope: None, chunk };
-                f(&mut b)
+                let mut b = CodingBatch {
+                    engine: self,
+                    scope: None,
+                    chunk,
+                    nt,
+                    pending: Vec::new(),
+                    pending_work: 0,
+                };
+                let r = f(&mut b);
+                b.flush();
+                r
             }
         }
     }
@@ -694,8 +1011,12 @@ impl GfEngine {
 
 /// A batch of coding operations submitted to the engine's worker pool in
 /// one wave (see [`GfEngine::batch`]). Ops enqueued here do **not** run
-/// eagerly — they complete by the time `batch` returns. Each op is split
-/// into lane-sized tasks so the pool load-balances across stripes.
+/// eagerly — they complete by the time `batch` returns. Large ops are split
+/// into lane-sized tasks so the pool load-balances across stripes; ops
+/// *smaller* than one task's granularity are **merged** — queued up and run
+/// as one shared pool task — so a burst of thousands of tiny stripes costs
+/// far fewer queue round-trips than one task per stripe (disable with
+/// `UNILRC_GF_MERGE=0`).
 pub struct CodingBatch<'scope, 'env: 'scope> {
     engine: &'env GfEngine,
     /// `None` ⇒ run ops inline (single-threaded engine or tiny batch).
@@ -703,6 +1024,12 @@ pub struct CodingBatch<'scope, 'env: 'scope> {
     /// Input-work granularity per pool task for this batch, fixed when the
     /// batch opened (adaptive or the `--gf-chunk-kb` override).
     chunk: usize,
+    /// Batch-wide streaming-store decision (total output ≫ threshold).
+    nt: bool,
+    /// Small ops awaiting fusion into one shared pool task.
+    pending: Vec<Box<dyn FnOnce(&GfEngine) + Send + 'env>>,
+    /// Input bytes accumulated in `pending`.
+    pending_work: usize,
 }
 
 impl<'scope, 'env> CodingBatch<'scope, 'env> {
@@ -725,6 +1052,43 @@ impl<'scope, 'env> CodingBatch<'scope, 'env> {
         }
     }
 
+    /// Queue a sub-chunk op for merging; ships the group once it has
+    /// accumulated one task's worth of input work.
+    fn push_merged<F>(&mut self, work: usize, f: F)
+    where
+        F: FnOnce(&GfEngine) + Send + 'env,
+    {
+        self.pending.push(Box::new(f));
+        self.pending_work += work;
+        if self.pending_work >= self.chunk {
+            self.flush();
+        }
+    }
+
+    /// Submit any merged small ops as one pool task (no-op when empty).
+    /// [`GfEngine::batch`] calls this after the enqueue closure returns, so
+    /// callers never need to.
+    pub fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let group = std::mem::take(&mut self.pending);
+        self.pending_work = 0;
+        let engine = self.engine;
+        match self.scope {
+            None => {
+                for f in group {
+                    f(engine);
+                }
+            }
+            Some(scope) => scope.submit(move || {
+                for f in group {
+                    f(engine);
+                }
+            }),
+        }
+    }
+
     /// Enqueue `dst = srcs[0] ^ srcs[1] ^ …` (XOR-local repair of one
     /// stripe within a batched event).
     pub fn fold(&mut self, dst: &'env mut [u8], srcs: Vec<&'env [u8]>) {
@@ -733,13 +1097,19 @@ impl<'scope, 'env> CodingBatch<'scope, 'env> {
             assert_eq!(s.len(), dst.len(), "fold length mismatch");
         }
         let engine = self.engine;
-        let Some(scope) = self.scope else {
-            dst.copy_from_slice(srcs[0]);
-            for s in &srcs[1..] {
-                engine.xor(dst, s);
-            }
+        let nt = self.nt;
+        if self.scope.is_none() {
+            engine.fold_whole(dst, &srcs, nt);
             return;
-        };
+        }
+        // An op below one task's granularity would occupy a whole queue
+        // round-trip by itself — merge it with its neighbours instead.
+        let work = dst.len() * srcs.len();
+        if engine.merge && work < self.chunk {
+            self.push_merged(work, move |e| e.fold_whole(dst, &srcs, nt));
+            return;
+        }
+        let scope = self.scope.expect("checked above");
         let step = self.step(srcs.len());
         let lane = engine.lane;
         // One shared allocation for the source list; tasks clone the Arc.
@@ -749,16 +1119,11 @@ impl<'scope, 'env> CodingBatch<'scope, 'env> {
             let base = off;
             off += c.len();
             let srcs = Arc::clone(&srcs);
-            // Within a task, copy + fold one lane at a time so src+dst
-            // stay cache-resident however large the task's span is.
+            // Within a task, fold one lane at a time so src+dst stay
+            // cache-resident however large the task's span is.
             scope.submit(move || {
                 for (l, sub) in c.chunks_mut(lane).enumerate() {
-                    let o = base + l * lane;
-                    let w = sub.len();
-                    sub.copy_from_slice(&srcs[0][o..o + w]);
-                    for s in &srcs[1..] {
-                        engine.xor(sub, &s[o..o + w]);
-                    }
+                    engine.fold_lane(sub, &srcs, base + l * lane, nt);
                 }
             });
         }
@@ -767,33 +1132,42 @@ impl<'scope, 'env> CodingBatch<'scope, 'env> {
     /// Enqueue `outs[i] = ⊕_j tables[i][j] · srcs[j]` (one stripe's encode
     /// or decode within a batched event). `tables` must outlive the batch —
     /// build them once and share them across every stripe of the event.
-    pub fn matmul_t(
+    /// Outputs may be `Vec<u8>` or pooled buffers.
+    pub fn matmul_t<B: AsMut<[u8]> + Send>(
         &mut self,
         tables: &'env [Vec<NibbleTables>],
         srcs: Vec<&'env [u8]>,
-        outs: &'env mut [Vec<u8>],
+        outs: &'env mut [B],
     ) {
         assert_eq!(tables.len(), outs.len(), "row count mismatch");
         let block = srcs.first().map_or(0, |s| s.len());
         for (row, out) in tables.iter().zip(outs.iter_mut()) {
             assert_eq!(row.len(), srcs.len(), "column count mismatch");
-            assert_eq!(out.len(), block, "output block size mismatch");
+            assert_eq!(out.as_mut().len(), block, "output block size mismatch");
         }
         let engine = self.engine;
-        let Some(scope) = self.scope else {
-            let mut full: Vec<&mut [u8]> = outs.iter_mut().map(|o| o.as_mut_slice()).collect();
-            engine.matmul_lane(tables, &srcs, 0, &mut full);
+        let nt = self.nt;
+        if self.scope.is_none() {
+            engine.matmul_whole(tables, &srcs, outs, nt);
             return;
-        };
+        }
         if outs.is_empty() {
             return;
         }
+        // Merge sub-chunk stripes into shared tasks (see `fold`).
+        let work = block * srcs.len();
+        if engine.merge && work < self.chunk {
+            self.push_merged(work, move |e| e.matmul_whole(tables, &srcs, outs, nt));
+            return;
+        }
+        let scope = self.scope.expect("checked above");
         let step = self.step(srcs.len());
         let lane = engine.lane;
         let ntasks = block.div_ceil(step);
         // One shared allocation for the source list; tasks clone the Arc.
         let srcs = Arc::new(srcs);
-        let mut row_chunks: Vec<_> = outs.iter_mut().map(|o| o.chunks_mut(step)).collect();
+        let mut row_chunks: Vec<_> =
+            outs.iter_mut().map(|o| o.as_mut().chunks_mut(step)).collect();
         for t in 0..ntasks {
             let mut louts: Vec<&mut [u8]> =
                 row_chunks.iter_mut().map(|it| it.next().expect("task chunk")).collect();
@@ -808,7 +1182,7 @@ impl<'scope, 'env> CodingBatch<'scope, 'env> {
                 for s in 0..nsub {
                     let mut lane_outs: Vec<&mut [u8]> =
                         subs.iter_mut().map(|it| it.next().expect("lane chunk")).collect();
-                    engine.matmul_lane(tables, &srcs, off + s * lane, &mut lane_outs);
+                    engine.matmul_lane(tables, &srcs, off + s * lane, &mut lane_outs, nt);
                 }
             });
         }
@@ -1028,6 +1402,65 @@ mod tests {
             });
             assert_eq!(got, expect, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn nt_on_and_off_produce_identical_results() {
+        let mut p = Prng::new(31);
+        let block = 50_000; // not a lane multiple: exercises the short tail lane
+        let srcs: Vec<Vec<u8>> = (0..5).map(|_| p.bytes(block)).collect();
+        let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+        let rows: Vec<Vec<u8>> = (0..3).map(|_| p.bytes(5)).collect();
+        let rrefs: Vec<&[u8]> = rows.iter().map(|v| v.as_slice()).collect();
+        for k in available_kernels() {
+            for threads in [1usize, 4] {
+                let base =
+                    GfEngine::new(k).with_threads(threads).with_lane(1024).with_par_work(0);
+                let off = base.clone().with_nt(usize::MAX);
+                let on = base.with_nt(0);
+                let mut a = vec![vec![0u8; block]; 3];
+                let mut b = vec![vec![1u8; block]; 3];
+                off.matmul_blocks(&rrefs, &refs, &mut a);
+                on.matmul_blocks(&rrefs, &refs, &mut b);
+                assert_eq!(a, b, "matmul kernel={k} threads={threads}");
+                for n in [1usize, 2, 3, 5] {
+                    let mut fa = vec![0u8; block];
+                    let mut fb = vec![9u8; block];
+                    off.fold_blocks(&mut fa, &refs[..n]);
+                    on.fold_blocks(&mut fb, &refs[..n]);
+                    assert_eq!(fa, fb, "fold kernel={k} threads={threads} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merged_batch_matches_unmerged() {
+        let mut p = Prng::new(32);
+        let block = 1500; // far below the chunk: every stripe takes the merge path
+        let stripes = 12;
+        let all_srcs: Vec<Vec<Vec<u8>>> =
+            (0..stripes).map(|_| (0..4).map(|_| p.bytes(block)).collect()).collect();
+        let coeff: Vec<Vec<u8>> = (0..2).map(|_| p.bytes(4)).collect();
+        let tables: Vec<Vec<NibbleTables>> = coeff
+            .iter()
+            .map(|row| row.iter().map(|&c| NibbleTables::new(c)).collect())
+            .collect();
+        let run = |e: GfEngine| -> Vec<Vec<Vec<u8>>> {
+            let mut got: Vec<Vec<Vec<u8>>> = vec![vec![vec![7u8; block]; 2]; stripes];
+            e.batch(stripes * 4 * block, |b| {
+                for (srcs, outs) in all_srcs.iter().zip(got.iter_mut()) {
+                    let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+                    b.matmul_t(&tables, refs, outs);
+                }
+            });
+            got
+        };
+        let base =
+            GfEngine::new(Kernel::detect()).with_threads(4).with_lane(512).with_par_work(0);
+        let merged = run(base.clone().with_merge(true));
+        let unmerged = run(base.with_merge(false));
+        assert_eq!(merged, unmerged);
     }
 
     #[test]

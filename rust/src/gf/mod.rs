@@ -13,7 +13,10 @@
 //!   multi-stripe mode ([`dispatch::CodingBatch`]).
 //! * [`workpool`] — the persistent worker pool behind every striped and
 //!   batched operation (long-lived threads, per-batch completion latch).
-//! * [`pool`] — recycled block buffers for the repair path.
+//! * [`pool`] — the aligned, size-classed recycled-buffer pool behind the
+//!   repair and batch output paths.
+//! * [`topo`] — best-effort CPU/cache/package topology detection sizing
+//!   the non-temporal-store threshold and the worker-pinning plan.
 //! * [`matrix`] — dense matrices over GF(2^8): product, rank, inversion,
 //!   and structured constructors (Vandermonde, Cauchy) used by the code
 //!   constructions.
@@ -24,6 +27,7 @@ pub mod pool;
 pub mod simd;
 pub mod slice;
 pub mod tables;
+pub mod topo;
 pub mod workpool;
 
 pub use dispatch::{CodingBatch, GfEngine, Kernel};

@@ -1,115 +1,489 @@
-//! Reusable block-buffer pool.
+//! Aligned, size-classed, sharded block-buffer pool.
 //!
 //! Every repair used to allocate fresh `vec![0u8; block_size]` outputs —
 //! at 1 MB blocks that is a page-faulting allocation per rebuilt block, on
-//! the hottest path in the system. The pool recycles those buffers:
-//! [`take_zeroed`] reuses a warm allocation when one is available (the
-//! `resize` re-zeroes it, which touches already-mapped pages), and
-//! [`recycle`] returns a buffer once its contents are consumed.
+//! the hottest path in the system. The pool recycles those buffers, and
+//! unlike the original single-`Mutex` LIFO it is built for the memory
+//! system the SIMD kernels now saturate:
 //!
-//! The pool is a bounded LIFO — deliberately simple: buffers of any size
-//! mix freely (capacity is checked on reuse), and at most [`MAX_POOLED`]
-//! buffers are retained so a burst of large repairs cannot pin memory.
+//! * **Alignment.** Every buffer is allocated at [`ALIGN`] (cacheline)
+//!   alignment via [`std::alloc::Layout`], so non-temporal stores land on
+//!   aligned vectors from byte 0 and lanes never split a cacheline. A
+//!   `Vec<u8>` cannot promise this, so buffers are carried by the owning
+//!   [`PooledBuf`] type (deref's to `[u8]`, so call sites read the same).
+//! * **Size classes.** Capacities are power-of-two classes (min
+//!   [`MIN_CLASS`]), so a request only ever reuses a buffer from its own
+//!   class: a burst of 1 MiB repairs can no longer starve 64 KiB lane
+//!   buffers out of the pool, and worst-case internal slack is bounded at
+//!   2×.
+//! * **Sharding.** Buffers live in [`SHARDS`] independently locked shards,
+//!   indexed per thread, so eight workers recycling lane outputs stop
+//!   serializing on one global lock. A take that misses its home shard
+//!   probes the others before allocating (misses pay a fault anyway).
+//! * **Bytes cap.** Retention is capped by total retained *bytes* (the old
+//!   pool capped only buffer count, so one burst of huge blocks could pin
+//!   ~unbounded memory forever). Overflow drops the buffer back to the
+//!   allocator and counts it.
+//!
+//! The process-wide free functions ([`take_zeroed`], [`take_for_overwrite`],
+//! [`recycle`]) additionally keep a tiny per-thread cache of small buffers
+//! in front of the shards, so the per-lane take/recycle pairs inside one
+//! worker never touch a lock at all. The thread cache holds at most
+//! [`TLS_MAX_ENTRIES`] buffers of at most [`TLS_MAX_CLASS_BYTES`] each and
+//! is *not* counted against the shared bytes cap — a documented, bounded
+//! slack of `threads × 4 × 256 KiB`.
+//!
+//! Hit/miss/drop counters are surfaced by `unilrc engine` (see
+//! [`PoolStats`]) so bench runs are self-describing.
 
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Retention bound: enough for a full-node recovery fan-out, small enough
-/// that the pool holds at most ~64 MB of 1 MB blocks.
-const MAX_POOLED: usize = 64;
+/// Buffer alignment: one cacheline, which is also the widest vector the
+/// kernels store (64 B = one AVX-512 lane), so aligned non-temporal stores
+/// work from byte 0 of every pooled buffer.
+pub const ALIGN: usize = 64;
 
-/// A bounded pool of byte buffers.
+/// Smallest size class. Requests below this round up to it.
+const MIN_CLASS: usize = 1 << 10;
+
+/// Number of power-of-two classes: 1 KiB … 2 GiB.
+const NUM_CLASSES: usize = 22;
+
+/// Number of independently locked shards.
+const SHARDS: usize = 8;
+
+/// Default total-retained-bytes cap for the process-wide pool: enough for
+/// a full-node recovery fan-out of 1 MiB blocks with headroom.
+const DEFAULT_BYTES_CAP: usize = 128 << 20;
+
+/// Largest class the per-thread cache will hold.
+const TLS_MAX_CLASS_BYTES: usize = 256 << 10;
+
+/// Per-thread cache entries.
+const TLS_MAX_ENTRIES: usize = 4;
+
+/// An owned, [`ALIGN`]-aligned byte buffer whose capacity is a pool size
+/// class. Deref's to `[u8]`, so it reads like a `Vec<u8>` at call sites;
+/// the distinct type exists because a `Vec` built over an over-aligned
+/// allocation would deallocate with the wrong layout (UB).
+///
+/// Every byte in `[0, cap)` is zero-initialized at allocation, which is
+/// what lets the pool hand back reused buffers at any `len ≤ cap` without
+/// ever exposing uninitialized memory.
+pub struct PooledBuf {
+    ptr: NonNull<u8>,
+    len: usize,
+    cap: usize,
+}
+
+// SAFETY: PooledBuf owns its allocation exclusively (no aliasing), so it
+// is Send/Sync exactly like Vec<u8>.
+unsafe impl Send for PooledBuf {}
+unsafe impl Sync for PooledBuf {}
+
+/// Class capacity for a requested length.
+fn class_bytes(len: usize) -> usize {
+    len.next_power_of_two().max(MIN_CLASS)
+}
+
+/// Class index for an exact class capacity; `None` when the capacity is
+/// not poolable (zero, not a class size, or beyond the largest class).
+fn class_index(cap: usize) -> Option<usize> {
+    if cap < MIN_CLASS || !cap.is_power_of_two() {
+        return None;
+    }
+    let idx = (cap / MIN_CLASS).trailing_zeros() as usize;
+    (idx < NUM_CLASSES).then_some(idx)
+}
+
+impl PooledBuf {
+    /// An empty buffer with no backing allocation.
+    pub const fn empty() -> PooledBuf {
+        PooledBuf { ptr: NonNull::dangling(), len: 0, cap: 0 }
+    }
+
+    /// Allocate a fresh zeroed buffer of `len` bytes at class capacity.
+    fn alloc_class(len: usize) -> PooledBuf {
+        if len == 0 {
+            return PooledBuf::empty();
+        }
+        let cap = class_bytes(len);
+        let layout = Layout::from_size_align(cap, ALIGN).expect("pool buffer layout");
+        // SAFETY: layout has non-zero size (cap >= MIN_CLASS).
+        let raw = unsafe { alloc_zeroed(layout) };
+        let Some(ptr) = NonNull::new(raw) else { handle_alloc_error(layout) };
+        PooledBuf { ptr, len, cap }
+    }
+
+    /// An aligned copy of `data`.
+    pub fn from_slice(data: &[u8]) -> PooledBuf {
+        let mut b = PooledBuf::alloc_class(data.len());
+        b.as_mut_slice().copy_from_slice(data);
+        b
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Class capacity of the backing allocation.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        self
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        self
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+
+    /// Shrink or grow within the already-initialized class capacity
+    /// (contents beyond the old `len` are whatever a previous user wrote —
+    /// initialized, but stale).
+    fn set_len_within_cap(&mut self, len: usize) {
+        debug_assert!(len <= self.cap);
+        self.len = len;
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if self.cap != 0 {
+            let layout = Layout::from_size_align(self.cap, ALIGN).expect("pool buffer layout");
+            // SAFETY: ptr was allocated with exactly this layout.
+            unsafe { dealloc(self.ptr.as_ptr(), layout) }
+        }
+    }
+}
+
+impl Deref for PooledBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        // SAFETY: [0, len) is allocated, initialized, and exclusively owned.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut [u8] {
+        // SAFETY: as above, with &mut self guaranteeing unique access.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl AsRef<[u8]> for PooledBuf {
+    fn as_ref(&self) -> &[u8] {
+        self
+    }
+}
+
+impl AsMut<[u8]> for PooledBuf {
+    fn as_mut(&mut self) -> &mut [u8] {
+        self
+    }
+}
+
+impl Clone for PooledBuf {
+    fn clone(&self) -> PooledBuf {
+        PooledBuf::from_slice(self)
+    }
+}
+
+impl Default for PooledBuf {
+    fn default() -> PooledBuf {
+        PooledBuf::empty()
+    }
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
+
+impl PartialEq for PooledBuf {
+    fn eq(&self, other: &PooledBuf) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for PooledBuf {}
+
+impl PartialEq<Vec<u8>> for PooledBuf {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<PooledBuf> for Vec<u8> {
+    fn eq(&self, other: &PooledBuf) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[u8]> for PooledBuf {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for PooledBuf {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl From<&[u8]> for PooledBuf {
+    fn from(data: &[u8]) -> PooledBuf {
+        PooledBuf::from_slice(data)
+    }
+}
+
+impl From<PooledBuf> for Vec<u8> {
+    fn from(b: PooledBuf) -> Vec<u8> {
+        b.to_vec()
+    }
+}
+
+/// Pool counters, surfaced by `unilrc engine`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    /// Takes served from a pooled buffer (shard or thread cache).
+    pub hits: u64,
+    /// Takes that fell through to a fresh allocation.
+    pub misses: u64,
+    /// Recycles dropped because the bytes cap (or class range) was hit.
+    pub drops: u64,
+    /// Recycles accepted back into the pool.
+    pub recycled: u64,
+    /// Bytes currently retained in the shards (thread caches excluded).
+    pub retained_bytes: usize,
+    /// Buffers currently retained in the shards.
+    pub buffers: usize,
+}
+
+/// The sharded size-classed pool. Shards are indexed by a per-thread
+/// round-robin id, so each worker thread has a stable home shard.
 pub struct BufferPool {
-    bufs: Mutex<Vec<Vec<u8>>>,
-    max: usize,
+    shards: [Mutex<Vec<Vec<PooledBuf>>>; SHARDS],
+    bytes_cap: usize,
+    retained: AtomicUsize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    drops: AtomicU64,
+    recycled: AtomicU64,
+}
+
+/// Home shard for the calling thread: stable per thread, round-robin
+/// across threads so workers spread evenly over the locks.
+fn shard_index() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static IDX: usize = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+    }
+    IDX.with(|&i| i)
 }
 
 impl BufferPool {
-    pub const fn new(max: usize) -> BufferPool {
-        BufferPool { bufs: Mutex::new(Vec::new()), max }
+    pub const fn new(bytes_cap: usize) -> BufferPool {
+        BufferPool {
+            shards: [const { Mutex::new(Vec::new()) }; SHARDS],
+            bytes_cap,
+            retained: AtomicUsize::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            drops: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        }
+    }
+
+    /// Pop a buffer of the request's class: home shard first, then the
+    /// other shards (a miss pays a fresh allocation anyway, so the extra
+    /// probes are cheap by comparison). Returns the buffer resized to
+    /// `len` plus whether it was reused (stale contents) or fresh (zeroed).
+    fn take_raw(&self, len: usize) -> (PooledBuf, bool) {
+        if len == 0 {
+            return (PooledBuf::empty(), false);
+        }
+        let cap = class_bytes(len);
+        if let Some(idx) = class_index(cap) {
+            let home = shard_index();
+            for probe in 0..SHARDS {
+                let popped = {
+                    let mut shard = self.shards[(home + probe) % SHARDS].lock().unwrap();
+                    shard.get_mut(idx).and_then(Vec::pop)
+                };
+                if let Some(mut b) = popped {
+                    self.retained.fetch_sub(cap, Ordering::Relaxed);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    b.set_len_within_cap(len);
+                    return (b, true);
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        (PooledBuf::alloc_class(len), false)
     }
 
     /// A zeroed buffer of exactly `len` bytes, reusing a pooled allocation
-    /// with sufficient capacity when possible. Undersized pooled buffers
-    /// are left in place — consuming one would reallocate anyway while
-    /// starving future smaller requests.
-    pub fn take_zeroed(&self, len: usize) -> Vec<u8> {
-        let reused = {
-            let mut bufs = self.bufs.lock().unwrap();
-            bufs.iter().rposition(|b| b.capacity() >= len).map(|i| bufs.swap_remove(i))
-        };
-        match reused {
-            Some(mut b) => {
-                b.clear();
-                b.resize(len, 0);
-                b
-            }
-            None => vec![0u8; len],
+    /// of the matching size class when one is available.
+    pub fn take_zeroed(&self, len: usize) -> PooledBuf {
+        let (mut b, reused) = self.take_raw(len);
+        if reused {
+            b.as_mut_slice().fill(0);
         }
+        b
     }
 
     /// A buffer of exactly `len` bytes whose contents are **unspecified**
     /// (stale data from a previous use) — for consumers that overwrite
     /// every byte before reading (fold's `copy_from_slice`, matmul's
     /// `fill(0)` + accumulate). Skips the re-zeroing pass of
-    /// [`Self::take_zeroed`], which is pure overhead on those paths. Only
-    /// already-initialized pooled bytes are reused (`b.len() >= len`), so
-    /// no uninitialized memory is ever exposed.
-    pub fn take_for_overwrite(&self, len: usize) -> Vec<u8> {
-        let reused = {
-            let mut bufs = self.bufs.lock().unwrap();
-            bufs.iter().rposition(|b| b.len() >= len).map(|i| bufs.swap_remove(i))
-        };
-        match reused {
-            Some(mut b) => {
-                b.truncate(len);
-                b
-            }
-            None => vec![0u8; len],
-        }
+    /// [`Self::take_zeroed`], which is pure overhead on those paths. The
+    /// whole class capacity is zero-initialized at allocation, so no
+    /// uninitialized memory is ever exposed.
+    pub fn take_for_overwrite(&self, len: usize) -> PooledBuf {
+        self.take_raw(len).0
     }
 
-    /// Return a buffer to the pool (dropped if the pool is full or the
-    /// buffer has no backing allocation).
-    pub fn recycle(&self, buf: Vec<u8>) {
-        if buf.capacity() == 0 {
+    /// Return a buffer to the pool. Dropped (and counted) when it has no
+    /// backing allocation, is outside the class range, or would push total
+    /// retained bytes past the cap.
+    pub fn recycle(&self, buf: PooledBuf) {
+        let cap = buf.capacity();
+        if cap == 0 {
             return;
         }
-        let mut bufs = self.bufs.lock().unwrap();
-        if bufs.len() < self.max {
-            bufs.push(buf);
+        let Some(idx) = class_index(cap) else {
+            self.drops.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let prev = self.retained.fetch_add(cap, Ordering::Relaxed);
+        if prev + cap > self.bytes_cap {
+            self.retained.fetch_sub(cap, Ordering::Relaxed);
+            self.drops.fetch_add(1, Ordering::Relaxed);
+            return;
         }
+        self.recycled.fetch_add(1, Ordering::Relaxed);
+        let mut shard = self.shards[shard_index()].lock().unwrap();
+        while shard.len() <= idx {
+            shard.push(Vec::new());
+        }
+        shard[idx].push(buf);
     }
 
-    /// Buffers currently pooled (for tests / introspection).
+    /// Buffers currently pooled across all shards (tests / introspection).
     pub fn len(&self) -> usize {
-        self.bufs.lock().unwrap().len()
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().iter().map(Vec::len).sum::<usize>())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Current counters (retained bytes from the shards only; per-thread
+    /// caches are bounded slack outside the cap).
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            drops: self.drops.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            retained_bytes: self.retained.load(Ordering::Relaxed),
+            buffers: self.len(),
+        }
+    }
 }
 
-static GLOBAL: BufferPool = BufferPool::new(MAX_POOLED);
+static GLOBAL: BufferPool = BufferPool::new(DEFAULT_BYTES_CAP);
+
+thread_local! {
+    /// Tiny per-thread front cache for the process-wide pool: lane-sized
+    /// take/recycle pairs inside one worker skip the shard lock entirely.
+    static TLS_CACHE: RefCell<Vec<PooledBuf>> = const { RefCell::new(Vec::new()) };
+}
+
+fn tls_take(len: usize) -> Option<PooledBuf> {
+    if len == 0 || len > TLS_MAX_CLASS_BYTES {
+        return None;
+    }
+    TLS_CACHE.with(|c| {
+        let mut c = c.borrow_mut();
+        let i = c.iter().position(|b| b.capacity() >= len)?;
+        Some(c.swap_remove(i))
+    })
+}
+
+/// Try to cache `buf` on this thread; hands it back when it doesn't fit.
+fn tls_put(buf: PooledBuf) -> Option<PooledBuf> {
+    if buf.capacity() == 0 || buf.capacity() > TLS_MAX_CLASS_BYTES {
+        return Some(buf);
+    }
+    TLS_CACHE.with(move |c| {
+        let mut c = c.borrow_mut();
+        if c.len() < TLS_MAX_ENTRIES {
+            c.push(buf);
+            None
+        } else {
+            Some(buf)
+        }
+    })
+}
 
 /// The process-wide pool used by the decode and proxy paths.
 pub fn global() -> &'static BufferPool {
     &GLOBAL
 }
 
-/// [`BufferPool::take_zeroed`] on the process-wide pool.
-pub fn take_zeroed(len: usize) -> Vec<u8> {
+/// [`BufferPool::take_zeroed`] on the process-wide pool, fronted by the
+/// per-thread cache.
+pub fn take_zeroed(len: usize) -> PooledBuf {
+    if let Some(mut b) = tls_take(len) {
+        GLOBAL.hits.fetch_add(1, Ordering::Relaxed);
+        b.set_len_within_cap(len);
+        b.as_mut_slice().fill(0);
+        return b;
+    }
     GLOBAL.take_zeroed(len)
 }
 
-/// [`BufferPool::take_for_overwrite`] on the process-wide pool.
-pub fn take_for_overwrite(len: usize) -> Vec<u8> {
+/// [`BufferPool::take_for_overwrite`] on the process-wide pool, fronted by
+/// the per-thread cache.
+pub fn take_for_overwrite(len: usize) -> PooledBuf {
+    if let Some(mut b) = tls_take(len) {
+        GLOBAL.hits.fetch_add(1, Ordering::Relaxed);
+        b.set_len_within_cap(len);
+        return b;
+    }
     GLOBAL.take_for_overwrite(len)
 }
 
-/// [`BufferPool::recycle`] on the process-wide pool.
-pub fn recycle(buf: Vec<u8>) {
-    GLOBAL.recycle(buf)
+/// [`BufferPool::recycle`] on the process-wide pool, fronted by the
+/// per-thread cache.
+pub fn recycle(buf: PooledBuf) {
+    if let Some(b) = tls_put(buf) {
+        GLOBAL.recycle(b);
+    } else {
+        GLOBAL.recycled.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]
@@ -117,8 +491,22 @@ mod tests {
     use super::*;
 
     #[test]
+    fn alignment_invariant() {
+        let pool = BufferPool::new(16 << 20);
+        for len in [1usize, 63, 64, 65, 1000, 4096, 100_000, 1 << 20] {
+            let b = pool.take_zeroed(len);
+            assert_eq!(b.as_ptr() as usize % ALIGN, 0, "take_zeroed({len}) misaligned");
+            assert_eq!(b.len(), len);
+            pool.recycle(b);
+            let b2 = pool.take_for_overwrite(len);
+            assert_eq!(b2.as_ptr() as usize % ALIGN, 0, "take_for_overwrite({len}) misaligned");
+            assert_eq!(b2.len(), len);
+        }
+    }
+
+    #[test]
     fn take_is_zeroed_after_recycle() {
-        let pool = BufferPool::new(4);
+        let pool = BufferPool::new(1 << 20);
         let mut b = pool.take_zeroed(100);
         b.iter_mut().for_each(|x| *x = 0xAB);
         pool.recycle(b);
@@ -128,36 +516,54 @@ mod tests {
     }
 
     #[test]
-    fn reuses_allocation() {
-        let pool = BufferPool::new(4);
+    fn reuses_allocation_within_class() {
+        let pool = BufferPool::new(1 << 20);
         let b = pool.take_zeroed(1024);
         let ptr = b.as_ptr();
         pool.recycle(b);
+        // 512 rounds up to the same 1 KiB class, so the allocation returns
         let b2 = pool.take_zeroed(512);
         assert_eq!(b2.as_ptr(), ptr, "should reuse the pooled allocation");
+        assert_eq!(pool.stats().hits, 1);
     }
 
     #[test]
-    fn bounded_retention() {
-        let pool = BufferPool::new(2);
-        for _ in 0..5 {
-            pool.recycle(vec![0u8; 16]);
+    fn classes_do_not_mix() {
+        let pool = BufferPool::new(16 << 20);
+        let big = pool.take_zeroed(1 << 20);
+        pool.recycle(big);
+        // a small request must not consume (and waste) the 1 MiB buffer
+        let small = pool.take_zeroed(1024);
+        assert!(small.capacity() <= 2048);
+        assert_eq!(pool.len(), 1, "the large buffer must stay pooled");
+        // and the large request gets it back
+        let big2 = pool.take_for_overwrite(1 << 20);
+        assert_eq!(big2.capacity(), 1 << 20);
+        assert_eq!(pool.len(), 0);
+    }
+
+    #[test]
+    fn bytes_cap_enforced_mixed_sizes() {
+        let pool = BufferPool::new(64 << 10);
+        for i in 0..64 {
+            let len = if i % 3 == 0 { 32 << 10 } else { 4 << 10 };
+            pool.recycle(PooledBuf::alloc_class(len));
+            assert!(
+                pool.stats().retained_bytes <= 64 << 10,
+                "retained bytes exceeded the cap at iteration {i}"
+            );
         }
-        assert_eq!(pool.len(), 2);
-    }
-
-    #[test]
-    fn large_request_does_not_consume_small_buffers() {
-        let pool = BufferPool::new(4);
-        pool.recycle(vec![0u8; 64]);
-        let b = pool.take_zeroed(1024); // no pooled buffer fits → fresh alloc
-        assert_eq!(b.len(), 1024);
-        assert_eq!(pool.len(), 1, "undersized buffer must stay pooled");
+        let s = pool.stats();
+        assert!(s.drops > 0, "overflow recycles must be dropped");
+        assert!(s.recycled > 0);
+        // one huge outlier cannot pin memory either
+        pool.recycle(PooledBuf::alloc_class(1 << 20));
+        assert!(pool.stats().retained_bytes <= 64 << 10);
     }
 
     #[test]
     fn take_for_overwrite_reuses_without_zeroing() {
-        let pool = BufferPool::new(4);
+        let pool = BufferPool::new(1 << 20);
         let mut b = pool.take_zeroed(128);
         b.iter_mut().for_each(|x| *x = 0xCD);
         let ptr = b.as_ptr();
@@ -166,7 +572,7 @@ mod tests {
         assert_eq!(b2.len(), 100);
         assert_eq!(b2.as_ptr(), ptr, "must reuse the pooled allocation");
         assert!(b2.iter().all(|&x| x == 0xCD), "contents intentionally stale");
-        // an oversized request can't reuse the (shorter) pooled contents
+        // a different-class request gets a fresh (zeroed) allocation
         pool.recycle(b2);
         let b3 = pool.take_for_overwrite(4096);
         assert_eq!(b3.len(), 4096);
@@ -175,10 +581,76 @@ mod tests {
 
     #[test]
     fn zero_len_take_ok() {
-        let pool = BufferPool::new(2);
+        let pool = BufferPool::new(1 << 20);
         let b = pool.take_zeroed(0);
         assert!(b.is_empty());
-        pool.recycle(b); // capacity 0 — silently dropped
+        pool.recycle(b); // no backing allocation — silently dropped
         assert_eq!(pool.len(), 0);
+    }
+
+    #[test]
+    fn stats_add_up_under_concurrency() {
+        // 8 threads × 10k take/recycle: no panic, counters consistent,
+        // cap respected throughout.
+        let pool = std::sync::Arc::new(BufferPool::new(8 << 20));
+        let mut handles = Vec::new();
+        for t in 0u8..8 {
+            let p = std::sync::Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10_000usize {
+                    let len = 1 + (i * 37 + t as usize * 101) % 8000;
+                    let mut b = p.take_zeroed(len);
+                    assert_eq!(b.len(), len);
+                    assert!(b.iter().all(|&x| x == 0));
+                    b[0] = t;
+                    p.recycle(b);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = pool.stats();
+        assert_eq!(s.hits + s.misses, 80_000, "every take is a hit or a miss");
+        assert_eq!(s.recycled + s.drops, 80_000, "every recycle is kept or dropped");
+        assert!(s.retained_bytes <= 8 << 20);
+        assert_eq!(
+            s.retained_bytes,
+            pool.shards
+                .iter()
+                .map(|sh| {
+                    sh.lock().unwrap().iter().flatten().map(PooledBuf::capacity).sum::<usize>()
+                })
+                .sum::<usize>(),
+            "retained counter must match the buffers actually held"
+        );
+    }
+
+    #[test]
+    fn pooled_buf_semantics() {
+        let b = PooledBuf::from_slice(&[1, 2, 3]);
+        assert_eq!(b, vec![1u8, 2, 3]);
+        assert_eq!(vec![1u8, 2, 3], b);
+        assert_eq!(b.clone(), b);
+        assert_eq!(b.to_vec(), vec![1, 2, 3]);
+        let empty = PooledBuf::empty();
+        assert!(empty.is_empty());
+        assert_eq!(empty.capacity(), 0);
+        // nested comparisons (test suites compare Vec<PooledBuf> against
+        // Vec<Vec<u8>> rebuilt-stripe fixtures)
+        let outs = vec![PooledBuf::from_slice(&[9, 9])];
+        assert_eq!(outs, vec![vec![9u8, 9]]);
+    }
+
+    #[test]
+    fn global_thread_cache_roundtrip() {
+        // lane-sized buffers round-trip through the TLS front cache
+        let b = take_for_overwrite(16 << 10);
+        let ptr = b.as_ptr();
+        recycle(b);
+        let b2 = take_for_overwrite(16 << 10);
+        assert_eq!(b2.as_ptr(), ptr, "TLS cache must serve the same-thread retake");
+        assert_eq!(b2.as_ptr() as usize % ALIGN, 0);
+        recycle(b2);
     }
 }

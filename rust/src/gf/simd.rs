@@ -347,6 +347,237 @@ pub mod x86_64 {
             *d ^= *s;
         }
     }
+
+    // ------------------------------------------------------------------
+    // Non-temporal (streaming) store kernels.
+    //
+    // When an output span exceeds the LLC, regular stores cost a
+    // read-for-ownership (the line is fetched from DRAM just to be fully
+    // overwritten) and evict useful lines on the way out. `MOVNTDQ`-class
+    // streaming stores write through combining buffers straight to DRAM:
+    // no RFO, no pollution — the classic last ~1.5–2× in ISA-L-style
+    // libraries once the multiplies are already table/affine-cheap.
+    //
+    // Streaming stores never *read* `dst`, so every NT kernel here is a
+    // pure producer: `copy_nt` (dst = src), `xor_nt` (dst = a ^ b) and
+    // `mul_into_nt` (dst = acc ^ c·src). The dispatch layer computes
+    // accumulations in a cache-resident pooled scratch with the regular
+    // kernels and fuses only the *final* pass into one of these, so the
+    // big output is written exactly once, straight to memory. XOR is
+    // associative and every tier shares the scalar tails, so results stay
+    // byte-identical to the regular path (fuzzed in tests/gf_simd.rs).
+    //
+    // Streaming stores require aligned addresses: pooled buffers are
+    // 64-byte aligned by construction, but arbitrary dst offsets are still
+    // handled — a scalar head runs up to the first aligned byte, a scalar
+    // tail after the last full vector, and an `sfence` orders the weakly
+    // ordered stores before the batch latch publishes the buffer.
+    // ------------------------------------------------------------------
+
+    /// Scalar `dst = a ^ b` for NT head/tail spans.
+    #[inline]
+    fn xor2_scalar(dst: &mut [u8], a: &[u8], b: &[u8]) {
+        for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+            *d = x ^ y;
+        }
+    }
+
+    /// Scalar `dst = acc ^ c·src` for NT head/tail spans.
+    #[inline]
+    fn mul_into_scalar(t: &NibbleTables, src: &[u8], acc: &[u8], dst: &mut [u8]) {
+        for ((d, &s), &a) in dst.iter_mut().zip(src).zip(acc) {
+            *d = a ^ t.mul(s);
+        }
+    }
+
+    /// `dst = src` with 32-byte streaming stores.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn copy_nt_avx2(dst: &mut [u8], src: &[u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let len = dst.len();
+        let head = dst.as_ptr().align_offset(32).min(len);
+        dst[..head].copy_from_slice(&src[..head]);
+        let n = head + ((len - head) & !31);
+        let mut i = head;
+        while i < n {
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            _mm256_stream_si256(dst.as_mut_ptr().add(i) as *mut __m256i, s);
+            i += 32;
+        }
+        dst[n..].copy_from_slice(&src[n..]);
+        _mm_sfence();
+    }
+
+    /// `dst = a ^ b` with 32-byte streaming stores (dst is never read).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_nt_avx2(dst: &mut [u8], a: &[u8], b: &[u8]) {
+        debug_assert_eq!(a.len(), dst.len());
+        debug_assert_eq!(b.len(), dst.len());
+        let len = dst.len();
+        let head = dst.as_ptr().align_offset(32).min(len);
+        xor2_scalar(&mut dst[..head], &a[..head], &b[..head]);
+        let n = head + ((len - head) & !31);
+        let mut i = head;
+        while i < n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            _mm256_stream_si256(dst.as_mut_ptr().add(i) as *mut __m256i, _mm256_xor_si256(va, vb));
+            i += 32;
+        }
+        xor2_scalar(&mut dst[n..], &a[n..], &b[n..]);
+        _mm_sfence();
+    }
+
+    /// `dst = acc ^ c·src` with AVX2 `VPSHUFB` products and 32-byte
+    /// streaming stores: the accumulator is loaded normally (it is the
+    /// cache-resident scratch), the output is written straight to memory.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_into_nt_avx2(t: &NibbleTables, src: &[u8], acc: &[u8], dst: &mut [u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        debug_assert_eq!(acc.len(), dst.len());
+        let lo = _mm256_broadcastsi128_si256(_mm_loadu_si128(t.lo.as_ptr() as *const __m128i));
+        let hi = _mm256_broadcastsi128_si256(_mm_loadu_si128(t.hi.as_ptr() as *const __m128i));
+        let mask = _mm256_set1_epi8(0x0F);
+        let len = dst.len();
+        let head = dst.as_ptr().align_offset(32).min(len);
+        mul_into_scalar(t, &src[..head], &acc[..head], &mut dst[..head]);
+        let n = head + ((len - head) & !31);
+        let mut i = head;
+        while i < n {
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let d = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let pl = _mm256_shuffle_epi8(lo, _mm256_and_si256(s, mask));
+            let ph = _mm256_shuffle_epi8(hi, _mm256_and_si256(_mm256_srli_epi64(s, 4), mask));
+            let out = _mm256_xor_si256(d, _mm256_xor_si256(pl, ph));
+            _mm256_stream_si256(dst.as_mut_ptr().add(i) as *mut __m256i, out);
+            i += 32;
+        }
+        mul_into_scalar(t, &src[n..], &acc[n..], &mut dst[n..]);
+        _mm_sfence();
+    }
+
+    /// Stream a 512-bit value as two 32-byte `MOVNTDQ` halves (adjacent
+    /// streams to one cacheline merge in the write-combining buffer, so
+    /// this fills whole lines like a 512-bit stream would).
+    ///
+    /// # Safety
+    /// The CPU must support AVX-512F; `p` must be 32-byte aligned with 64
+    /// writable bytes.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn stream512(p: *mut u8, v: __m512i) {
+        _mm256_stream_si256(p as *mut __m256i, _mm512_castsi512_si256(v));
+        _mm256_stream_si256(p.add(32) as *mut __m256i, _mm512_extracti64x4_epi64::<1>(v));
+    }
+
+    /// `dst = src` with 64-byte loads and streaming stores (shared by the
+    /// `avx512` and `gfni` tiers).
+    ///
+    /// # Safety
+    /// The CPU must support AVX-512F and AVX-512BW.
+    #[target_feature(enable = "avx512f,avx512bw")]
+    pub unsafe fn copy_nt_avx512(dst: &mut [u8], src: &[u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        let len = dst.len();
+        let head = dst.as_ptr().align_offset(64).min(len);
+        dst[..head].copy_from_slice(&src[..head]);
+        let n = head + ((len - head) & !63);
+        let mut i = head;
+        while i < n {
+            let s = _mm512_loadu_epi8(src.as_ptr().add(i) as *const i8);
+            stream512(dst.as_mut_ptr().add(i), s);
+            i += 64;
+        }
+        dst[n..].copy_from_slice(&src[n..]);
+        _mm_sfence();
+    }
+
+    /// `dst = a ^ b` with 64-byte loads and streaming stores (shared by
+    /// the `avx512` and `gfni` tiers; dst is never read).
+    ///
+    /// # Safety
+    /// The CPU must support AVX-512F and AVX-512BW.
+    #[target_feature(enable = "avx512f,avx512bw")]
+    pub unsafe fn xor_nt_avx512(dst: &mut [u8], a: &[u8], b: &[u8]) {
+        debug_assert_eq!(a.len(), dst.len());
+        debug_assert_eq!(b.len(), dst.len());
+        let len = dst.len();
+        let head = dst.as_ptr().align_offset(64).min(len);
+        xor2_scalar(&mut dst[..head], &a[..head], &b[..head]);
+        let n = head + ((len - head) & !63);
+        let mut i = head;
+        while i < n {
+            let va = _mm512_loadu_epi8(a.as_ptr().add(i) as *const i8);
+            let vb = _mm512_loadu_epi8(b.as_ptr().add(i) as *const i8);
+            stream512(dst.as_mut_ptr().add(i), _mm512_xor_si512(va, vb));
+            i += 64;
+        }
+        xor2_scalar(&mut dst[n..], &a[n..], &b[n..]);
+        _mm_sfence();
+    }
+
+    /// `dst = acc ^ c·src` with AVX-512BW `VPSHUFB` products and streaming
+    /// stores.
+    ///
+    /// # Safety
+    /// The CPU must support AVX-512F and AVX-512BW.
+    #[target_feature(enable = "avx512f,avx512bw")]
+    pub unsafe fn mul_into_nt_avx512(t: &NibbleTables, src: &[u8], acc: &[u8], dst: &mut [u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        debug_assert_eq!(acc.len(), dst.len());
+        let lo = _mm512_broadcast_i32x4(_mm_loadu_si128(t.lo.as_ptr() as *const __m128i));
+        let hi = _mm512_broadcast_i32x4(_mm_loadu_si128(t.hi.as_ptr() as *const __m128i));
+        let mask = _mm512_set1_epi8(0x0F);
+        let len = dst.len();
+        let head = dst.as_ptr().align_offset(64).min(len);
+        mul_into_scalar(t, &src[..head], &acc[..head], &mut dst[..head]);
+        let n = head + ((len - head) & !63);
+        let mut i = head;
+        while i < n {
+            let s = _mm512_loadu_epi8(src.as_ptr().add(i) as *const i8);
+            let d = _mm512_loadu_epi8(acc.as_ptr().add(i) as *const i8);
+            let pl = _mm512_shuffle_epi8(lo, _mm512_and_si512(s, mask));
+            let ph = _mm512_shuffle_epi8(hi, _mm512_and_si512(_mm512_srli_epi64::<4>(s), mask));
+            stream512(dst.as_mut_ptr().add(i), _mm512_ternarylogic_epi32::<0x96>(d, pl, ph));
+            i += 64;
+        }
+        mul_into_scalar(t, &src[n..], &acc[n..], &mut dst[n..]);
+        _mm_sfence();
+    }
+
+    /// `dst = acc ^ c·src` with one `GF2P8AFFINEQB` per 64 bytes and
+    /// streaming stores.
+    ///
+    /// # Safety
+    /// The CPU must support GFNI, AVX-512F and AVX-512BW.
+    #[target_feature(enable = "gfni,avx512f,avx512bw")]
+    pub unsafe fn mul_into_nt_gfni(t: &NibbleTables, src: &[u8], acc: &[u8], dst: &mut [u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        debug_assert_eq!(acc.len(), dst.len());
+        let a = _mm512_set1_epi64(t.mx as i64);
+        let len = dst.len();
+        let head = dst.as_ptr().align_offset(64).min(len);
+        mul_into_scalar(t, &src[..head], &acc[..head], &mut dst[..head]);
+        let n = head + ((len - head) & !63);
+        let mut i = head;
+        while i < n {
+            let s = _mm512_loadu_epi8(src.as_ptr().add(i) as *const i8);
+            let d = _mm512_loadu_epi8(acc.as_ptr().add(i) as *const i8);
+            let prod = _mm512_gf2p8affine_epi64_epi8::<0>(s, a);
+            stream512(dst.as_mut_ptr().add(i), _mm512_xor_si512(d, prod));
+            i += 64;
+        }
+        mul_into_scalar(t, &src[n..], &acc[n..], &mut dst[n..]);
+        _mm_sfence();
+    }
 }
 
 #[cfg(target_arch = "aarch64")]

@@ -181,7 +181,10 @@ fn mul_acc_swar(c: u8, src: &[u8], dst: &mut [u8]) {
 /// the process-wide engine: SIMD kernels plus lane-striped workers for
 /// large blocks (source-major within each lane, so a cache-hot source lane
 /// is scattered into all output rows before the next is streamed in).
-pub fn gf_matmul_blocks(coeff: &[&[u8]], srcs: &[&[u8]], outs: &mut [Vec<u8>]) {
+/// Outputs may be `Vec<u8>` or pooled aligned buffers
+/// ([`PooledBuf`](super::pool::PooledBuf)) — anything that derefs to a
+/// pre-sized mutable byte slice.
+pub fn gf_matmul_blocks<B: AsMut<[u8]> + Send>(coeff: &[&[u8]], srcs: &[&[u8]], outs: &mut [B]) {
     dispatch::engine().matmul_blocks(coeff, srcs, outs);
 }
 

@@ -1,0 +1,230 @@
+//! CPU / cache / package topology detection for the memory-system layer.
+//!
+//! Everything here is best-effort: values come from `/sys` on Linux and
+//! fall back to safe defaults (64-byte lines, a 32 MiB LLC, one package
+//! holding every CPU) on other platforms, inside containers that mask
+//! `/sys`, or on exotic kernels. Callers must treat the answers as hints —
+//! they size the non-temporal-store threshold and the worker-pinning plan,
+//! both of which are correct (just less tuned) under the fallback.
+
+use std::sync::OnceLock;
+
+/// Cacheline size in bytes (the alignment unit for pooled buffers and
+/// streaming stores). Falls back to 64, which is right on every x86_64
+/// and aarch64 part this crate targets.
+pub fn cacheline_bytes() -> usize {
+    static V: OnceLock<usize> = OnceLock::new();
+    *V.get_or_init(|| {
+        read_trimmed("/sys/devices/system/cpu/cpu0/cache/index0/coherency_line_size")
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n.is_power_of_two() && (16..=1024).contains(&n))
+            .unwrap_or(64)
+    })
+}
+
+/// Last-level cache size in bytes: the largest cache reported under
+/// `cpu0/cache/index*`. Streaming stores only pay off once an output span
+/// no longer fits here. Fallback: 32 MiB (a typical server LLC — err large
+/// so the auto threshold never streams cache-resident outputs).
+pub fn llc_bytes() -> usize {
+    static V: OnceLock<usize> = OnceLock::new();
+    *V.get_or_init(|| detect_llc().unwrap_or(32 << 20))
+}
+
+fn detect_llc() -> Option<usize> {
+    let mut best = None;
+    for idx in 0..8 {
+        let base = format!("/sys/devices/system/cpu/cpu0/cache/index{idx}");
+        let Some(size) = read_trimmed(&format!("{base}/size")) else {
+            continue;
+        };
+        let Some(bytes) = parse_size(&size) else {
+            continue;
+        };
+        if best.is_none_or(|b| bytes > b) {
+            best = Some(bytes);
+        }
+    }
+    best
+}
+
+/// Parse a `/sys` cache-size string (`"32768K"`, `"1M"`, plain bytes).
+pub(crate) fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (num, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1usize << 10),
+        b'M' | b'm' => (&s[..s.len() - 1], 1usize << 20),
+        b'G' | b'g' => (&s[..s.len() - 1], 1usize << 30),
+        _ => (s, 1),
+    };
+    num.trim().parse::<usize>().ok().map(|n| n.checked_mul(mult).unwrap_or(usize::MAX))
+}
+
+/// Parse a `/sys` CPU-list string (`"0-3,8,10-11"`) into CPU ids.
+pub(crate) fn parse_cpu_list(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                if a <= b && b - a < 4096 {
+                    out.extend(a..=b);
+                }
+            }
+        } else if let Ok(n) = part.parse::<usize>() {
+            out.push(n);
+        }
+    }
+    out
+}
+
+/// Online CPUs grouped by physical package (socket), packages sorted by id
+/// and CPUs sorted within each. Fallback: one package holding
+/// `0..available_parallelism()`.
+pub fn packages() -> &'static [Vec<usize>] {
+    static V: OnceLock<Vec<Vec<usize>>> = OnceLock::new();
+    V.get_or_init(|| {
+        detect_packages().unwrap_or_else(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            vec![(0..n).collect()]
+        })
+    })
+}
+
+fn detect_packages() -> Option<Vec<Vec<usize>>> {
+    let online = read_trimmed("/sys/devices/system/cpu/online")?;
+    let cpus = parse_cpu_list(&online);
+    if cpus.is_empty() {
+        return None;
+    }
+    let mut by_pkg: Vec<(usize, Vec<usize>)> = Vec::new();
+    for &cpu in &cpus {
+        let pkg = read_trimmed(&format!(
+            "/sys/devices/system/cpu/cpu{cpu}/topology/physical_package_id"
+        ))
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(0);
+        match by_pkg.iter_mut().find(|(id, _)| *id == pkg) {
+            Some((_, v)) => v.push(cpu),
+            None => by_pkg.push((pkg, vec![cpu])),
+        }
+    }
+    by_pkg.sort_by_key(|(id, _)| *id);
+    let mut pkgs: Vec<Vec<usize>> = by_pkg.into_iter().map(|(_, v)| v).collect();
+    for p in &mut pkgs {
+        p.sort_unstable();
+    }
+    Some(pkgs)
+}
+
+/// Assign `workers` worker indices to CPUs, filling one package before
+/// spilling into the next so a stripe's lanes (which the engine hands to
+/// consecutive workers) share a socket/LLC domain. More workers than CPUs
+/// wrap around. An empty topology yields no pins.
+pub fn plan_pinning(workers: usize) -> Vec<Option<usize>> {
+    let pkgs = packages();
+    let flat: Vec<usize> = pkgs.iter().flat_map(|p| p.iter().copied()).collect();
+    if flat.is_empty() {
+        return vec![None; workers];
+    }
+    (0..workers).map(|i| Some(flat[i % flat.len()])).collect()
+}
+
+/// Pin the calling thread to a single CPU. Returns `false` (and leaves the
+/// affinity mask alone) when the platform has no affinity syscall or the
+/// kernel rejects the mask (cgroup cpuset exclusions, offline CPU).
+pub fn pin_current_thread(cpu: usize) -> bool {
+    pin_impl(cpu)
+}
+
+#[cfg(target_os = "linux")]
+fn pin_impl(cpu: usize) -> bool {
+    // Raw syscall binding: the crate is dependency-free, so declare the
+    // glibc affinity entry point directly instead of pulling in `libc`.
+    // cpu_set_t is a 1024-bit mask (128 bytes) on Linux.
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; 16],
+    }
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+    if cpu >= 1024 {
+        return false;
+    }
+    let mut set = CpuSet { bits: [0; 16] };
+    set.bits[cpu / 64] = 1u64 << (cpu % 64);
+    // pid 0 = calling thread.
+    unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_impl(_cpu: usize) -> bool {
+    false
+}
+
+fn read_trimmed(path: &str) -> Option<String> {
+    std::fs::read_to_string(path).ok().map(|s| s.trim().to_string())
+}
+
+/// One-line human summary for `unilrc engine`.
+pub fn describe() -> String {
+    let pkgs = packages();
+    let ncpus: usize = pkgs.iter().map(|p| p.len()).sum();
+    format!(
+        "cacheline {} B, LLC {:.1} MiB, {} package(s) / {} cpu(s)",
+        cacheline_bytes(),
+        llc_bytes() as f64 / (1 << 20) as f64,
+        pkgs.len(),
+        ncpus
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_parsing() {
+        assert_eq!(parse_size("32768K"), Some(32768 << 10));
+        assert_eq!(parse_size("1M"), Some(1 << 20));
+        assert_eq!(parse_size(" 2G "), Some(2 << 30));
+        assert_eq!(parse_size("512"), Some(512));
+        assert_eq!(parse_size("abc"), None);
+    }
+
+    #[test]
+    fn cpu_list_parsing() {
+        assert_eq!(parse_cpu_list("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpu_list("0-1,8,10-11"), vec![0, 1, 8, 10, 11]);
+        assert_eq!(parse_cpu_list(""), Vec::<usize>::new());
+        assert_eq!(parse_cpu_list("7"), vec![7]);
+    }
+
+    #[test]
+    fn fallbacks_are_sane() {
+        assert!(cacheline_bytes().is_power_of_two());
+        assert!(llc_bytes() >= 1 << 20);
+        let pkgs = packages();
+        assert!(!pkgs.is_empty());
+        assert!(pkgs.iter().map(|p| p.len()).sum::<usize>() >= 1);
+    }
+
+    #[test]
+    fn pinning_plan_covers_workers() {
+        let plan = plan_pinning(8);
+        assert_eq!(plan.len(), 8);
+        // with any non-empty topology every slot gets a CPU
+        assert!(plan.iter().all(|p| p.is_some()));
+    }
+
+    #[test]
+    fn pin_current_thread_smoke() {
+        // Pin to CPU 0 (always online when /sys exists); on non-Linux this
+        // is a no-op returning false — either way it must not panic.
+        let _ = pin_current_thread(0);
+    }
+}

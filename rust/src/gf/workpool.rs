@@ -24,16 +24,65 @@
 //!
 //! Task panics are caught on the worker, recorded on the latch, and
 //! re-raised on the scoping thread once the batch has fully settled.
+//!
+//! Two memory-system extensions ride on the pool:
+//!
+//! * **pinning** ([`WorkPool::with_pinning`]): each worker optionally pins
+//!   itself to a distinct CPU (package-major plan from `gf/topo.rs`) so a
+//!   stripe's lanes stay within one socket's LLC domain;
+//! * **idle ticks**: worker 0 wakes on a short timeout when the queue is
+//!   empty and runs the process-wide [idle hooks](add_idle_hook) —
+//!   housekeeping like proactive decode-plan refresh happens on otherwise
+//!   wasted worker time, throttled so an idle pool costs ~nothing.
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// A queued unit of work (lifetime-erased; see [`BatchScope::submit`]).
 type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// How often an idle worker 0 wakes to consider running the idle hooks.
+const IDLE_TICK_MS: u64 = 50;
+
+/// Minimum spacing between idle-hook runs, shared across every pool in the
+/// process — hooks do cheap scans, but not 20 of them a second.
+const IDLE_HOOK_PERIOD_MS: u64 = 200;
+
+/// Process-wide idle hooks, run (in registration order) by an idle worker.
+static IDLE_HOOKS: Mutex<Vec<Box<dyn Fn() + Send + Sync>>> = Mutex::new(Vec::new());
+
+/// Milliseconds-since-first-check timestamp of the last idle-hook run.
+static LAST_IDLE_RUN: AtomicU64 = AtomicU64::new(0);
+
+/// Register a housekeeping hook to run on idle worker time (e.g. the plan
+/// cache's proactive TTL refresh). Hooks must be cheap when there is
+/// nothing to do — they run every [`IDLE_HOOK_PERIOD_MS`] while any pool
+/// sits idle — and must never block on pool work (they run *on* a worker).
+pub fn add_idle_hook<F: Fn() + Send + Sync + 'static>(f: F) {
+    IDLE_HOOKS.lock().unwrap().push(Box::new(f));
+}
+
+fn maybe_run_idle_hooks() {
+    static START: OnceLock<std::time::Instant> = OnceLock::new();
+    let now = START.get_or_init(std::time::Instant::now).elapsed().as_millis() as u64;
+    let last = LAST_IDLE_RUN.load(Ordering::Relaxed);
+    if now.saturating_sub(last) < IDLE_HOOK_PERIOD_MS {
+        return;
+    }
+    // One winner per period across all idle workers/pools.
+    if LAST_IDLE_RUN.compare_exchange(last, now, Ordering::Relaxed, Ordering::Relaxed).is_err() {
+        return;
+    }
+    let hooks = IDLE_HOOKS.lock().unwrap();
+    for h in hooks.iter() {
+        h();
+    }
+}
 
 struct Queue {
     tasks: VecDeque<Task>,
@@ -92,7 +141,17 @@ pub struct WorkPool {
 impl WorkPool {
     /// Spawn `workers` (≥ 1) long-lived worker threads.
     pub fn new(workers: usize) -> WorkPool {
+        WorkPool::with_pinning(workers, false)
+    }
+
+    /// [`WorkPool::new`] with optional CPU affinity: when `pin` is set,
+    /// each worker pins itself to a distinct CPU following the
+    /// package-major plan from [`super::topo::plan_pinning`] (best-effort —
+    /// a rejected mask leaves the worker floating).
+    pub fn with_pinning(workers: usize, pin: bool) -> WorkPool {
         let workers = workers.max(1);
+        let plan: Vec<Option<usize>> =
+            if pin { super::topo::plan_pinning(workers) } else { vec![None; workers] };
         let shared = Arc::new(Shared {
             queue: Mutex::new(Queue { tasks: VecDeque::new(), shutdown: false }),
             available: Condvar::new(),
@@ -100,9 +159,10 @@ impl WorkPool {
         let handles = (0..workers)
             .map(|i| {
                 let shared = Arc::clone(&shared);
+                let cpu = plan.get(i).copied().flatten();
                 std::thread::Builder::new()
                     .name(format!("gf-worker-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, cpu, i == 0))
                     .expect("spawn gf worker")
             })
             .collect();
@@ -182,7 +242,10 @@ impl std::fmt::Debug for WorkPool {
     }
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, pin_to: Option<usize>, idler: bool) {
+    if let Some(cpu) = pin_to {
+        let _ = super::topo::pin_current_thread(cpu);
+    }
     loop {
         let task = {
             let mut q = shared.queue.lock().unwrap();
@@ -193,7 +256,22 @@ fn worker_loop(shared: &Shared) {
                 if q.shutdown {
                     break None;
                 }
-                q = shared.available.wait(q).unwrap();
+                if idler {
+                    // Worker 0 doubles as the housekeeping thread: wake on
+                    // a short tick and offer idle time to the hooks.
+                    let (guard, timeout) = shared
+                        .available
+                        .wait_timeout(q, Duration::from_millis(IDLE_TICK_MS))
+                        .unwrap();
+                    q = guard;
+                    if timeout.timed_out() && q.tasks.is_empty() && !q.shutdown {
+                        drop(q);
+                        maybe_run_idle_hooks();
+                        q = shared.queue.lock().unwrap();
+                    }
+                } else {
+                    q = shared.available.wait(q).unwrap();
+                }
             }
         };
         match task {
@@ -341,5 +419,35 @@ mod tests {
             }
         });
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn pinned_pool_executes_tasks() {
+        // Pinning is best-effort; whatever the affinity calls did, the pool
+        // must still run every task and join cleanly.
+        let pool = WorkPool::with_pinning(4, true);
+        let hits = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..32 {
+                s.submit(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn idle_hook_runs_on_worker_idle_time() {
+        static FIRED: AtomicUsize = AtomicUsize::new(0);
+        add_idle_hook(|| {
+            FIRED.fetch_add(1, Ordering::Relaxed);
+        });
+        let _pool = WorkPool::new(1); // idle from birth
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while FIRED.load(Ordering::Relaxed) == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(FIRED.load(Ordering::Relaxed) > 0, "idle hook never ran");
     }
 }

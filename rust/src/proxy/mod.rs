@@ -20,6 +20,7 @@
 
 use crate::codes::Code;
 use crate::coordinator::metadata::{Metadata, StripeId};
+use crate::gf::pool;
 use crate::runtime::{CodingEngine, CombineJob};
 use crate::sim::{Endpoint, NetSim};
 use anyhow::Result;
@@ -31,8 +32,9 @@ use std::time::Instant;
 pub struct OpOutcome {
     /// Virtual time at which the rebuilt block is ready on the home proxy.
     pub ready_at: f64,
-    /// The rebuilt block bytes.
-    pub rebuilt: Vec<u8>,
+    /// The rebuilt block bytes (64-byte-aligned pooled buffer; hand it
+    /// back via [`crate::gf::pool::recycle`] once consumed).
+    pub rebuilt: pool::PooledBuf,
     /// Home cluster id (where the repair ran).
     pub home: usize,
 }
@@ -69,11 +71,28 @@ struct AggJob {
     req: usize,
 }
 
+/// A final-combine input buffer: stored blocks stay shared with the
+/// metadata store; phase-1 aggregation partials are solely-owned pooled
+/// buffers that go back to the block pool after the combine consumes them.
+enum SourceBuf {
+    Stored(Arc<Vec<u8>>),
+    Pooled(pool::PooledBuf),
+}
+
+impl SourceBuf {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            SourceBuf::Stored(d) => d.as_slice(),
+            SourceBuf::Pooled(b) => b.as_slice(),
+        }
+    }
+}
+
 /// Per-request state between the gather and final-combine phases.
 struct PendingRepair {
     home: usize,
     /// Final-combine inputs: (arrival, coefficient, bytes).
-    inputs: Vec<(f64, u8, Arc<Vec<u8>>)>,
+    inputs: Vec<(f64, u8, SourceBuf)>,
 }
 
 impl ProxyCtx<'_> {
@@ -108,7 +127,7 @@ impl ProxyCtx<'_> {
             let (source_ids, coeffs) = self.plan_for(req.block, &req.erased)?;
 
             // Partition sources by cluster.
-            let mut inputs: Vec<(f64, u8, Arc<Vec<u8>>)> = Vec::new();
+            let mut inputs: Vec<(f64, u8, SourceBuf)> = Vec::new();
             let mut remote: BTreeMap<usize, Vec<(u8, usize, Arc<Vec<u8>>)>> = BTreeMap::new();
             for (&b, &c) in source_ids.iter().zip(&coeffs) {
                 let node = self.meta.node_of(req.stripe, b);
@@ -121,7 +140,7 @@ impl ProxyCtx<'_> {
                         Endpoint::Proxy(home),
                         self.block_size,
                     );
-                    inputs.push((t, c, data));
+                    inputs.push((t, c, SourceBuf::Stored(data)));
                 } else {
                     remote.entry(cluster).or_default().push((c, node, data));
                 }
@@ -157,7 +176,7 @@ impl ProxyCtx<'_> {
                             Endpoint::Proxy(home),
                             self.block_size,
                         );
-                        inputs.push((t, c, data));
+                        inputs.push((t, c, SourceBuf::Stored(data)));
                     }
                 }
             }
@@ -178,7 +197,7 @@ impl ProxyCtx<'_> {
                 Endpoint::Proxy(home),
                 self.block_size,
             );
-            pend[agg.req].inputs.push((t, 1, Arc::new(partial)));
+            pend[agg.req].inputs.push((t, 1, SourceBuf::Pooled(partial)));
         }
 
         // ----------------------------- phase 2: all final combines, batched
@@ -195,11 +214,11 @@ impl ProxyCtx<'_> {
         for ((p, rb), secs) in pend.into_iter().zip(rebuilt).zip(fin_secs) {
             let arrived = p.inputs.iter().fold(t0, |a, (t, _, _)| a.max(*t));
             // Aggregation partials are solely owned by `inputs` (stored
-            // blocks keep a metadata reference, so try_unwrap skips them);
-            // hand the consumed buffers back to the block pool.
+            // blocks stay shared with the metadata store); hand the
+            // consumed pooled buffers back to the block pool.
             for (_, _, d) in p.inputs {
-                if let Ok(buf) = Arc::try_unwrap(d) {
-                    crate::gf::pool::recycle(buf);
+                if let SourceBuf::Pooled(buf) = d {
+                    pool::recycle(buf);
                 }
             }
             out.push(OpOutcome { ready_at: arrived + secs, rebuilt: rb, home: p.home });
@@ -253,7 +272,7 @@ impl ProxyCtx<'_> {
         &self,
         coeffs: &[Vec<u8>],
         sources: &[Vec<&[u8]>],
-    ) -> Result<(Vec<Vec<u8>>, Vec<f64>)> {
+    ) -> Result<(Vec<pool::PooledBuf>, Vec<f64>)> {
         debug_assert_eq!(coeffs.len(), sources.len());
         if coeffs.is_empty() {
             return Ok((Vec::new(), Vec::new()));
@@ -272,7 +291,7 @@ impl ProxyCtx<'_> {
             .iter()
             .map(|&b| if total > 0 { elapsed * b as f64 / total as f64 } else { 0.0 })
             .collect();
-        let blocks: Vec<Vec<u8>> = outs
+        let blocks: Vec<pool::PooledBuf> = outs
             .into_iter()
             .map(|mut rows| rows.pop().expect("one output row per combine"))
             .collect();

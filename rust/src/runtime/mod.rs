@@ -57,16 +57,19 @@ pub trait CodingEngine: Send + Sync {
     /// Encode: `k` data blocks → `n−k` parity blocks.
     fn encode(&self, code: &Code, data: &[&[u8]]) -> Result<Vec<Vec<u8>>>;
 
-    /// XOR-fold the sources into one block (XOR-local repair).
-    fn fold(&self, sources: &[&[u8]]) -> Result<Vec<u8>>;
+    /// XOR-fold the sources into one block (XOR-local repair). The output
+    /// is a 64-byte-aligned pooled buffer; repair-path callers should hand
+    /// it back via [`crate::gf::pool::recycle`] once consumed.
+    fn fold(&self, sources: &[&[u8]]) -> Result<pool::PooledBuf>;
 
     /// General linear combination: `coeffs` is `outs × sources.len()`.
-    fn matmul(&self, coeffs: &[Vec<u8>], sources: &[&[u8]]) -> Result<Vec<Vec<u8>>>;
+    /// Outputs are pooled buffers (see [`Self::fold`]).
+    fn matmul(&self, coeffs: &[Vec<u8>], sources: &[&[u8]]) -> Result<Vec<pool::PooledBuf>>;
 
     /// Execute many combine jobs (one per stripe of a multi-stripe event).
     /// The default runs them sequentially; backends with a worker pool
     /// override this to schedule all jobs as one submission wave.
-    fn combine_batch(&self, jobs: &[CombineJob]) -> Result<Vec<Vec<Vec<u8>>>> {
+    fn combine_batch(&self, jobs: &[CombineJob]) -> Result<Vec<Vec<pool::PooledBuf>>> {
         jobs.iter()
             .map(|j| {
                 if j.xor_only() {
@@ -94,17 +97,17 @@ impl CodingEngine for NativeCoder {
         Ok(code.encode_blocks(data))
     }
 
-    fn fold(&self, sources: &[&[u8]]) -> Result<Vec<u8>> {
+    fn fold(&self, sources: &[&[u8]]) -> Result<pool::PooledBuf> {
         anyhow::ensure!(!sources.is_empty(), "fold needs sources");
         let mut out = pool::take_for_overwrite(sources[0].len());
         dispatch::engine().fold_blocks(&mut out, sources);
         Ok(out)
     }
 
-    fn matmul(&self, coeffs: &[Vec<u8>], sources: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+    fn matmul(&self, coeffs: &[Vec<u8>], sources: &[&[u8]]) -> Result<Vec<pool::PooledBuf>> {
         let len = sources.first().map_or(0, |s| s.len());
         let rows: Vec<&[u8]> = coeffs.iter().map(|r| r.as_slice()).collect();
-        let mut outs: Vec<Vec<u8>> =
+        let mut outs: Vec<pool::PooledBuf> =
             (0..coeffs.len()).map(|_| pool::take_for_overwrite(len)).collect();
         dispatch::engine().matmul_blocks(&rows, sources, &mut outs);
         Ok(outs)
@@ -116,7 +119,7 @@ impl CodingEngine for NativeCoder {
     /// repair of small blocks parallelizes even though each individual
     /// combine is below the intra-block striping threshold. Byte-identical
     /// to the sequential default (`tests/batch.rs` fuzzes this).
-    fn combine_batch(&self, jobs: &[CombineJob]) -> Result<Vec<Vec<Vec<u8>>>> {
+    fn combine_batch(&self, jobs: &[CombineJob]) -> Result<Vec<Vec<pool::PooledBuf>>> {
         let engine = dispatch::engine();
         // xor-only jobs (the common local-repair case) go through the fold
         // path and never read coefficient tables — don't build them.
@@ -124,7 +127,7 @@ impl CodingEngine for NativeCoder {
             .iter()
             .map(|j| (!j.xor_only()).then(|| NibbleTables::for_rows(j.coeffs.iter())))
             .collect();
-        let mut outs: Vec<Vec<Vec<u8>>> = jobs
+        let mut outs: Vec<Vec<pool::PooledBuf>> = jobs
             .iter()
             .map(|j| {
                 let len = j.sources.first().map_or(0, |s| s.len());

@@ -9,6 +9,7 @@
 use super::artifacts::{Artifact, Manifest};
 use super::{CodingEngine, CombineJob};
 use crate::codes::{Code, CodeFamily};
+use crate::gf::pool;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -118,13 +119,13 @@ impl PjrtCoder {
     /// Run one artifact over a whole block length, sub-block by sub-block.
     /// `make_inputs(offset, width)` builds the literals for one sub-block;
     /// the single tuple output `[rows_out, b]` is scattered into `outs`.
-    fn run_chunked(
+    fn run_chunked<B: AsMut<[u8]>>(
         &self,
         art: &Artifact,
         len: usize,
         rows_out: usize,
         mut make_inputs: impl FnMut(usize, usize) -> Vec<xla::Literal>,
-        outs: &mut [Vec<u8>],
+        outs: &mut [B],
     ) -> Result<()> {
         let exe = self.executable(art)?;
         let b = art.param("b")?;
@@ -134,7 +135,7 @@ impl PjrtCoder {
             let inputs = make_inputs(offset, width);
             let flat = Self::execute_flat(&exe, &inputs, rows_out * b)?;
             for (i, o) in outs.iter_mut().enumerate() {
-                o[offset..offset + width].copy_from_slice(&flat[i * b..i * b + width]);
+                o.as_mut()[offset..offset + width].copy_from_slice(&flat[i * b..i * b + width]);
             }
             offset += width;
         }
@@ -201,7 +202,7 @@ impl PjrtCoder {
         idxs: &[usize],
         offset: usize,
         width: usize,
-        outs: &mut [Vec<Vec<u8>>],
+        outs: &mut [Vec<pool::PooledBuf>],
     ) {
         for i in 0..rows_out {
             let src = i * b;
@@ -224,7 +225,7 @@ impl PjrtCoder {
         jobs: &[CombineJob],
         idxs: &[usize],
         len: usize,
-        outs: &mut [Vec<Vec<u8>>],
+        outs: &mut [Vec<pool::PooledBuf>],
     ) -> Result<()> {
         let nsrc = jobs[idxs[0]].sources.len();
         let (art, s_padded) = self.manifest.fold_for(nsrc)?;
@@ -251,7 +252,7 @@ impl PjrtCoder {
         idxs: &[usize],
         coeffs: &[Vec<u8>],
         len: usize,
-        outs: &mut [Vec<Vec<u8>>],
+        outs: &mut [Vec<pool::PooledBuf>],
     ) -> Result<()> {
         let nsrc = jobs[idxs[0]].sources.len();
         anyhow::ensure!(
@@ -314,19 +315,20 @@ impl CodingEngine for PjrtCoder {
             _ => {
                 let coeffs: Vec<Vec<u8>> =
                     (0..code.m()).map(|i| code.parity_matrix().row(i).to_vec()).collect();
-                self.matmul(&coeffs, data)
+                let outs = self.matmul(&coeffs, data)?;
+                Ok(outs.into_iter().map(Vec::from).collect())
             }
         }
     }
 
-    fn fold(&self, sources: &[&[u8]]) -> Result<Vec<u8>> {
+    fn fold(&self, sources: &[&[u8]]) -> Result<pool::PooledBuf> {
         anyhow::ensure!(!sources.is_empty(), "fold needs sources");
         let len = sources[0].len();
         let (art, s_padded) = self.manifest.fold_for(sources.len())?;
         let art = art.clone();
         let b = art.param("b")?;
         let pad = s_padded - sources.len();
-        let mut outs = vec![vec![0u8; len]];
+        let mut outs = vec![pool::take_zeroed(len)];
         self.run_chunked(
             &art,
             len,
@@ -337,7 +339,7 @@ impl CodingEngine for PjrtCoder {
         Ok(outs.pop().unwrap())
     }
 
-    fn matmul(&self, coeffs: &[Vec<u8>], sources: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+    fn matmul(&self, coeffs: &[Vec<u8>], sources: &[&[u8]]) -> Result<Vec<pool::PooledBuf>> {
         anyhow::ensure!(!coeffs.is_empty(), "matmul needs coefficient rows");
         anyhow::ensure!(
             coeffs.iter().all(|r| r.len() == sources.len()),
@@ -359,7 +361,7 @@ impl CodingEngine for PjrtCoder {
         )
         .expect("coeff literal");
         let pad_rows = k_pad - sources.len();
-        let mut outs = vec![vec![0u8; len]; m_pad];
+        let mut outs: Vec<pool::PooledBuf> = (0..m_pad).map(|_| pool::take_zeroed(len)).collect();
         self.run_chunked(
             &art,
             len,
@@ -391,12 +393,12 @@ impl CodingEngine for PjrtCoder {
     /// what the sequential trait default — previously the silent fallback
     /// — costs). Byte-identical to per-job [`Self::fold`] /
     /// [`Self::matmul`]; `tests/runtime_pjrt.rs` asserts it.
-    fn combine_batch(&self, jobs: &[CombineJob]) -> Result<Vec<Vec<Vec<u8>>>> {
-        let mut outs: Vec<Vec<Vec<u8>>> = jobs
+    fn combine_batch(&self, jobs: &[CombineJob]) -> Result<Vec<Vec<pool::PooledBuf>>> {
+        let mut outs: Vec<Vec<pool::PooledBuf>> = jobs
             .iter()
             .map(|j| {
                 let len = j.sources.first().map_or(0, |s| s.len());
-                vec![vec![0u8; len]; j.coeffs.len()]
+                (0..j.coeffs.len()).map(|_| pool::take_zeroed(len)).collect()
             })
             .collect();
         // Group job indices by shape, preserving first-seen order so the

@@ -8,6 +8,7 @@
 
 use super::{CodingEngine, CombineJob};
 use crate::codes::Code;
+use crate::gf::pool;
 use anyhow::{bail, Result};
 
 /// Placeholder with the same name and API as the real PJRT coder.
@@ -31,11 +32,11 @@ impl CodingEngine for PjrtCoder {
         bail!("PJRT backend unavailable (built without the `pjrt` feature)")
     }
 
-    fn fold(&self, _sources: &[&[u8]]) -> Result<Vec<u8>> {
+    fn fold(&self, _sources: &[&[u8]]) -> Result<pool::PooledBuf> {
         bail!("PJRT backend unavailable (built without the `pjrt` feature)")
     }
 
-    fn matmul(&self, _coeffs: &[Vec<u8>], _sources: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+    fn matmul(&self, _coeffs: &[Vec<u8>], _sources: &[&[u8]]) -> Result<Vec<pool::PooledBuf>> {
         bail!("PJRT backend unavailable (built without the `pjrt` feature)")
     }
 
@@ -43,7 +44,7 @@ impl CodingEngine for PjrtCoder {
     /// expose the identical surface (the real one groups same-shape jobs
     /// into shared artifact invocations; `tests/runtime_pjrt.rs` keeps the
     /// stub honest).
-    fn combine_batch(&self, _jobs: &[CombineJob]) -> Result<Vec<Vec<Vec<u8>>>> {
+    fn combine_batch(&self, _jobs: &[CombineJob]) -> Result<Vec<Vec<pool::PooledBuf>>> {
         bail!("PJRT backend unavailable (built without the `pjrt` feature)")
     }
 }

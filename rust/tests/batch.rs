@@ -23,12 +23,25 @@ fn kernel_under_test() -> Kernel {
 }
 
 /// Engines under test: every thread count, lane shrunk and the work
-/// threshold zeroed so even tiny blocks exercise the pooled path.
+/// threshold zeroed so even tiny blocks exercise the pooled path. A
+/// `UNILRC_GF_NT_KB` override (the CI streaming-store legs) applies to
+/// every engine, so the whole equivalence suite also runs with
+/// non-temporal stores forced on/off.
 fn engines() -> Vec<GfEngine> {
+    let nt = std::env::var("UNILRC_GF_NT_KB")
+        .ok()
+        .and_then(|v| unilrc::gf::dispatch::parse_nt_kb(&v));
     THREADS
         .iter()
         .map(|&t| {
-            GfEngine::new(kernel_under_test()).with_threads(t).with_lane(1024).with_par_work(0)
+            let e = GfEngine::new(kernel_under_test())
+                .with_threads(t)
+                .with_lane(1024)
+                .with_par_work(0);
+            match nt {
+                Some(n) => e.with_nt(n),
+                None => e,
+            }
         })
         .collect()
 }
@@ -77,7 +90,7 @@ fn decode_plan_execute_batch_matches_sequential() {
             .iter()
             .map(|stripe| plan.sources.iter().map(|&s| stripe[s].as_slice()).collect())
             .collect();
-        let expect: Vec<Vec<Vec<u8>>> = srcs.iter().map(|s| plan.execute(s)).collect();
+        let expect: Vec<_> = srcs.iter().map(|s| plan.execute(s)).collect();
         for e in engines() {
             let got = plan.execute_batch_on(&e, &srcs);
             assert_eq!(got, expect, "threads={} erased={erased:?}", e.threads());
@@ -110,7 +123,7 @@ fn cached_plan_execute_batch_matches_sequential() {
         .iter()
         .map(|stripe| cached.plan.sources.iter().map(|&s| stripe[s].as_slice()).collect())
         .collect();
-    let expect: Vec<Vec<Vec<u8>>> = srcs.iter().map(|s| cached.execute(s)).collect();
+    let expect: Vec<_> = srcs.iter().map(|s| cached.execute(s)).collect();
     for e in engines() {
         let got = cached.execute_batch_on(&e, &srcs);
         assert_eq!(got, expect, "threads={}", e.threads());
@@ -138,7 +151,7 @@ fn native_combine_batch_matches_sequential_jobs() {
             CombineJob { coeffs: vec![coeffs], sources: refs(srcs) }
         })
         .collect();
-    let expect: Vec<Vec<Vec<u8>>> = jobs
+    let expect: Vec<_> = jobs
         .iter()
         .map(|j| {
             if j.xor_only() {

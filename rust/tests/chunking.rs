@@ -16,6 +16,19 @@ fn kernel_under_test() -> Kernel {
     Kernel::forced_from_env().unwrap_or_else(Kernel::detect)
 }
 
+/// Apply a `UNILRC_GF_NT_KB` override (the CI streaming-store legs) so the
+/// chunking equivalence suite also runs with non-temporal stores forced
+/// on/off; without the env the engine is returned unchanged.
+fn with_env_nt(e: GfEngine) -> GfEngine {
+    let nt = std::env::var("UNILRC_GF_NT_KB")
+        .ok()
+        .and_then(|v| unilrc::gf::dispatch::parse_nt_kb(&v));
+    match nt {
+        Some(n) => e.with_nt(n),
+        None => e,
+    }
+}
+
 /// Encode `stripes` random stripes batched on a configured engine and
 /// compare against per-stripe scalar sequential encodes.
 fn check_encode_equivalence(stripes: usize, block: usize, threads: usize, chunk: usize) {
@@ -26,11 +39,13 @@ fn check_encode_equivalence(stripes: usize, block: usize, threads: usize, chunk:
     let srefs: Vec<Vec<&[u8]>> =
         data.iter().map(|d| d.iter().map(|v| v.as_slice()).collect()).collect();
     let expect: Vec<Vec<Vec<u8>>> = srefs.iter().map(|d| code.encode_blocks(d)).collect();
-    let e = GfEngine::new(kernel_under_test())
-        .with_threads(threads)
-        .with_lane(1024)
-        .with_par_work(0)
-        .with_chunk(chunk);
+    let e = with_env_nt(
+        GfEngine::new(kernel_under_test())
+            .with_threads(threads)
+            .with_lane(1024)
+            .with_par_work(0)
+            .with_chunk(chunk),
+    );
     let got = code.encode_stripes_on(&e, &srefs);
     assert_eq!(got, expect, "stripes={stripes} block={block} threads={threads} chunk={chunk}");
 }
@@ -51,7 +66,7 @@ fn single_threaded_engine_runs_batches_inline() {
     let data: Vec<Vec<u8>> = (0..code.k()).map(|_| p.bytes(2048)).collect();
     let stripe: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
     let srefs: Vec<Vec<&[u8]>> = vec![stripe.clone(); 4];
-    let e = GfEngine::new(kernel_under_test()).with_threads(1).with_par_work(0);
+    let e = with_env_nt(GfEngine::new(kernel_under_test()).with_threads(1).with_par_work(0));
     let got = code.encode_stripes_on(&e, &srefs);
     assert!(!e.pool_started(), "--gf-threads 1 must run batches inline, no pool");
     let expect = code.encode_blocks(&stripe);
@@ -90,11 +105,13 @@ fn fold_batches_respect_chunk_overrides() {
         expect.push(out);
     }
     for chunk in [0usize, 64, 2048, 1 << 21] {
-        let e = GfEngine::new(kernel_under_test())
-            .with_threads(3)
-            .with_lane(512)
-            .with_par_work(0)
-            .with_chunk(chunk);
+        let e = with_env_nt(
+            GfEngine::new(kernel_under_test())
+                .with_threads(3)
+                .with_lane(512)
+                .with_par_work(0)
+                .with_chunk(chunk),
+        );
         let mut got: Vec<Vec<u8>> = vec![vec![9u8; block]; 10];
         e.batch(10 * 5 * block, |b| {
             for (srcs, out) in stripes.iter().zip(got.iter_mut()) {

@@ -159,6 +159,68 @@ fn parallel_striped_matches_serial_scalar_matmul() {
     }
 }
 
+/// Engine with the streaming-store (non-temporal) path forced **on**
+/// (`with_nt(0)`) unless `UNILRC_GF_NT_KB` pins a threshold — the CI
+/// kernel matrix runs these tests once per forced value, so the nt
+/// selection knob itself is part of the differential contract.
+fn nt_engine(k: Kernel) -> GfEngine {
+    let e = GfEngine::new(k);
+    let nt = std::env::var("UNILRC_GF_NT_KB")
+        .ok()
+        .and_then(|v| unilrc::gf::dispatch::parse_nt_kb(&v));
+    e.with_nt(nt.unwrap_or(0))
+}
+
+#[test]
+fn nt_fold_matches_scalar_reference() {
+    // Streaming stores must be byte-identical to the regular path for
+    // every source count (1 = pure copy, 2 = fused xor, 3+ = scratch
+    // last-pass fusion), length remainder, and unaligned head/tail.
+    let mut p = Prng::new(107);
+    for len in [1usize, 31, 64, 65, 1000, 4097, 50_000] {
+        let srcs: Vec<Vec<u8>> = (0..5).map(|_| p.bytes(len)).collect();
+        for n in 1..=srcs.len() {
+            let refs: Vec<&[u8]> = srcs[..n].iter().map(|v| v.as_slice()).collect();
+            let mut expect = vec![0u8; len];
+            GfEngine::scalar().fold_blocks(&mut expect, &refs);
+            for k in available() {
+                let e = nt_engine(k).with_threads(1);
+                let mut got = vec![0xEEu8; len];
+                e.fold_blocks(&mut got, &refs);
+                assert_eq!(got, expect, "kernel={k} len={len} n={n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn nt_matmul_matches_scalar_reference() {
+    // Coefficient rows deliberately include 0s and 1s so the streaming
+    // last-pass fusion hits its copy / xor special cases, plus general
+    // multiplies — across serial and striped execution.
+    let mut p = Prng::new(108);
+    let block = 50_000;
+    let srcs: Vec<Vec<u8>> = (0..6).map(|_| p.bytes(block)).collect();
+    let refs: Vec<&[u8]> = srcs.iter().map(|v| v.as_slice()).collect();
+    let coeff: Vec<Vec<u8>> = vec![
+        p.bytes(6),
+        vec![0, 1, 0, 1, 0, 1],
+        vec![0, 0, 0, 0, 0, 0x1D],
+        vec![1, 0, 0, 0, 0, 0],
+    ];
+    let crefs: Vec<&[u8]> = coeff.iter().map(|v| v.as_slice()).collect();
+    let mut expect = vec![vec![0u8; block]; coeff.len()];
+    GfEngine::scalar().matmul_blocks(&crefs, &refs, &mut expect);
+    for k in available() {
+        for threads in [1usize, 4] {
+            let e = nt_engine(k).with_threads(threads).with_lane(4096).with_par_work(0);
+            let mut got = vec![vec![0xEEu8; block]; coeff.len()];
+            e.matmul_blocks(&crefs, &refs, &mut got);
+            assert_eq!(got, expect, "kernel={k} threads={threads}");
+        }
+    }
+}
+
 #[test]
 fn parallel_striped_matches_serial_fold() {
     let mut p = Prng::new(105);

@@ -9,7 +9,9 @@ A throughput case (`mib_per_s`) regresses when its current MiB/s drops
 more than the threshold below the baseline. A direct-value case
 (`value`/`unit` — latency percentiles, retry counters from the migration
 interference sweep) regresses when its value *rises* more than the
-threshold: those rows are lower-is-better. A lower-is-better case whose
+threshold: those rows are lower-is-better. Either inference can be
+overridden per row with `"better": "higher"|"lower"` (the buffer-pool
+contention rows declare `lower` explicitly). A lower-is-better case whose
 baseline is zero has no ratio, so it gates on the *absolute* rise
 instead (`--zero-baseline-slack`, default 1.0) — a retries counter
 going 0 -> 40 is a regression even though 0 admits no percentage.
@@ -29,10 +31,24 @@ def load_results(path):
 
 
 def metric(row):
-    """(value, unit, sign) — sign +1 when higher is better, -1 when lower."""
+    """(value, unit, sign) — sign +1 when higher is better, -1 when lower.
+
+    The direction is inferred from the row shape (`mib_per_s` rows are
+    higher-is-better, `value` rows lower-is-better) unless the row carries
+    an explicit `"better": "higher"|"lower"` — the memory-system rows
+    (pool take/recycle ns/op) declare it so the inference never has to
+    guess what a bare unit like "ns" means.
+    """
     if "mib_per_s" in row:
-        return row["mib_per_s"], "MiB/s", 1
-    return row["value"], row.get("unit", ""), -1
+        value, unit, sign = row["mib_per_s"], "MiB/s", 1
+    else:
+        value, unit, sign = row["value"], row.get("unit", ""), -1
+    better = row.get("better")
+    if better == "higher":
+        sign = 1
+    elif better == "lower":
+        sign = -1
+    return value, unit, sign
 
 
 def main(argv=None):

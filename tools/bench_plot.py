@@ -72,8 +72,8 @@ def append_run(entries, bench_files, label, max_runs):
             doc = json.load(f)
         name = doc.get("bench") or os.path.basename(path)
         # throughput rows carry mib_per_s; direct-value rows (latency
-        # percentiles, counters) carry value — both index fine as
-        # percent-of-first-run series
+        # percentiles, counters, the pool take/recycle ns/op pair) carry
+        # value — both index fine as percent-of-first-run series
         benches[name] = {
             row["name"]: row.get("mib_per_s", row.get("value", 0.0))
             for row in doc.get("results", [])

@@ -31,8 +31,11 @@ def thr(name, mib):
     return {"name": name, "mib_per_s": mib}
 
 
-def val(name, v, unit="count"):
-    return {"name": name, "value": v, "unit": unit}
+def val(name, v, unit="count", better=None):
+    row = {"name": name, "value": v, "unit": unit}
+    if better is not None:
+        row["better"] = better
+    return row
 
 
 class BenchCompareGate(unittest.TestCase):
@@ -76,6 +79,36 @@ class BenchCompareGate(unittest.TestCase):
         # higher-is-better from zero can only have improved
         rc = self.run_gate([thr("gf/mul", 0.0)], [thr("gf/mul", 500.0)])
         self.assertEqual(rc, 0)
+
+    def test_pool_latency_row_rise_fails(self):
+        # the memory-system rows: ns/op latency with an explicit
+        # lower-is-better marker gates exactly like an inferred value row
+        rows = (
+            [val("pool/take-recycle-8t/sharded", 100.0, "ns", better="lower")],
+            [val("pool/take-recycle-8t/sharded", 150.0, "ns", better="lower")],
+        )
+        self.assertEqual(self.run_gate(*rows), 1)
+
+    def test_pool_latency_row_drop_passes(self):
+        rows = (
+            [val("pool/take-recycle-8t/sharded", 150.0, "ns", better="lower")],
+            [val("pool/take-recycle-8t/sharded", 80.0, "ns", better="lower")],
+        )
+        self.assertEqual(self.run_gate(*rows), 0)
+
+    def test_better_higher_overrides_value_inference(self):
+        # a value row marked higher-is-better must not gate on a rise...
+        rows = (
+            [val("pool/hit-rate", 0.5, "ratio", better="higher")],
+            [val("pool/hit-rate", 0.9, "ratio", better="higher")],
+        )
+        self.assertEqual(self.run_gate(*rows), 0)
+        # ...and must gate on a drop
+        rows = (
+            [val("pool/hit-rate", 0.9, "ratio", better="higher")],
+            [val("pool/hit-rate", 0.5, "ratio", better="higher")],
+        )
+        self.assertEqual(self.run_gate(*rows), 1)
 
     def test_new_and_gone_rows_are_not_fatal(self):
         rc = self.run_gate([thr("old/case", 100.0)], [thr("new/case", 100.0)])
